@@ -1,0 +1,49 @@
+//! Bench + regeneration of **Fig. 3**: access-transistor I-V transfer for
+//! V_bulk in {0, 0.2, 0.4, 0.6} V — body biasing shifts turn-on left by
+//! ~125 mV at 0.6 V.
+//!
+//! Run: `cargo bench --offline --bench fig3_body_bias`
+
+use smart_insram::bench::{eng, Runner};
+use smart_insram::device::{iv_sweep, Mosfet};
+use smart_insram::params::Params;
+
+fn main() {
+    let params = Params::default();
+    let card = params.device;
+    let bulks = [0.0, 0.2, 0.4, 0.6];
+
+    println!("=== Fig. 3 — I_D(V_WL) per body bias ===");
+    let dev = Mosfet::nominal(card);
+    println!("{:>8} {:>12} {:>12} {:>12} {:>12}", "V_WL", "Vb=0.0", "Vb=0.2", "Vb=0.4", "Vb=0.6");
+    for k in (0..=20).map(|k| k as f64 * 0.05) {
+        let row: Vec<String> = bulks
+            .iter()
+            .map(|&vb| format!("{:>12}", eng(dev.drain_current(k, card.vdd, vb))))
+            .collect();
+        println!("{k:>8.2} {}", row.join(" "));
+    }
+
+    println!("\nturn-on voltage (I_D > 10 uA) per body bias:");
+    let turn_on = |vb: f64| {
+        (0..=4000)
+            .map(|k| k as f64 * 0.00025)
+            .find(|&v| dev.drain_current(v, card.vdd, vb) > 10e-6)
+            .unwrap()
+    };
+    for &vb in &bulks {
+        println!(
+            "  V_bulk = {vb:.1} V: turn-on {:.0} mV  (Eq. 6 dVTH = {:+.1} mV)",
+            turn_on(vb) * 1e3,
+            card.delta_vth_body(vb) * 1e3
+        );
+    }
+    let delta = turn_on(0.0) - turn_on(0.6);
+    println!("shift at 0.6 V = {:.1} mV (paper: ~125 mV)", delta * 1e3);
+    assert!((0.110..0.140).contains(&delta), "Fig. 3 shape violated");
+
+    println!("\n=== timing ===");
+    let r = Runner::default();
+    let s = r.bench("fig3/iv_sweep 4x2001 points", || iv_sweep(card, &bulks, 2001));
+    println!("  {:.1} Mpoints/s", s.per_second(4 * 2001) / 1e6);
+}

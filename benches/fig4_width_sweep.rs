@@ -1,0 +1,40 @@
+//! Bench + regeneration of **Fig. 4**: drain current vs transistor width,
+//! V_bulk = 0 (solid) against V_bulk = 0.6 V (dashed) — the biased curve
+//! wins at every width.
+//!
+//! Run: `cargo bench --offline --bench fig4_width_sweep`
+
+use smart_insram::bench::{eng, Runner};
+use smart_insram::device::width_sweep;
+use smart_insram::params::Params;
+
+fn main() {
+    let params = Params::default();
+    let card = params.device;
+    let ws: Vec<f64> = (1..=20).map(|k| k as f64 * 0.25).collect();
+    let v_wl = 0.55;
+
+    println!("=== Fig. 4 — I_D vs width scale (V_WL = {v_wl} V) ===");
+    let pts = width_sweep(card, v_wl, &[0.0, 0.6], &ws);
+    let (solid, dashed) = pts.split_at(ws.len());
+    println!("{:>8} {:>14} {:>14} {:>8}", "W-scale", "Vb=0 (solid)", "Vb=0.6 (dash)", "gain");
+    for (s, d) in solid.iter().zip(dashed) {
+        println!(
+            "{:>8.2} {:>14} {:>14} {:>7.2}x",
+            s.w_scale,
+            eng(s.i_d),
+            eng(d.i_d),
+            d.i_d / s.i_d
+        );
+        assert!(d.i_d > s.i_d, "Fig. 4 shape violated at W = {}", s.w_scale);
+    }
+    let gain = dashed[0].i_d / solid[0].i_d;
+    println!("\nbody-bias gain is width-independent: {gain:.2}x (square-law overdrive ratio)");
+
+    println!("\n=== timing ===");
+    let r = Runner::default();
+    let s = r.bench("fig4/width_sweep 2x20 widths", || {
+        width_sweep(card, v_wl, &[0.0, 0.6], &ws)
+    });
+    println!("  {:.1} Mpoints/s", s.per_second(2 * ws.len() as u64) / 1e6);
+}

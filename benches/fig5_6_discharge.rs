@@ -1,0 +1,83 @@
+//! Bench + regeneration of **Fig. 5 / Fig. 6**: V_BLB(t) discharge for
+//! IMAC [9] (Fig. 5) and AID [10] (Fig. 6), V_bulk = 0 vs 0.6 V — body
+//! bias accelerates the discharge in both architectures.
+//!
+//! Exercises BOTH transient paths: the native Rust integrator and the
+//! AOT trace artifact through PJRT, and checks they agree.
+//!
+//! Run: `cargo bench --offline --bench fig5_6_discharge`
+
+use smart_insram::bench::Runner;
+use smart_insram::circuit::{discharge_trace, BitlineInputs};
+use smart_insram::dac::WordlineDac;
+use smart_insram::device::Mosfet;
+use smart_insram::mac::Variant;
+use smart_insram::params::Params;
+use smart_insram::runtime::{default_artifact_dir, MacBatch, XlaRuntime};
+
+fn main() {
+    let params = Params::default();
+    let card = params.device;
+    let t_total = 1.0e-9;
+
+    for (fig, variant) in [("Fig. 5", Variant::Imac), ("Fig. 6", Variant::Aid)] {
+        let cfg = variant.config(&params);
+        let dac = WordlineDac::new(cfg.dac_mode, &card, &params.circuit, 0.0);
+        let v_wl = dac.v_wl(15);
+        println!("=== {fig} — {} V_BLB(t), V_WL = {:.0} mV ===", variant.name(), v_wl * 1e3);
+        println!("{:>10} {:>14} {:>14}", "t (ps)", "Vb=0 (V)", "Vb=0.6 (V)");
+        let trace = |vb: f64| {
+            let inp = BitlineInputs { v_wl, bit: true, v_bulk: vb };
+            discharge_trace(&params, &Mosfet::nominal(card), &inp, t_total, 512, 32)
+        };
+        let (w0, w6) = (trace(0.0), trace(0.6));
+        for ((t, v0), (_, v6)) in w0.iter().zip(w6.iter()) {
+            println!("{:>10.0} {v0:>14.4} {v6:>14.4}", t * 1e12);
+            assert!(v6 <= v0 + 1e-12, "{fig} shape violated (bias must discharge faster)");
+        }
+        let c0 = w0.crossing_time(0.75);
+        let c6 = w6.crossing_time(0.75);
+        if let (Some(c0), Some(c6)) = (c0, c6) {
+            println!("time to 0.25 V discharge: {:.0} ps -> {:.0} ps ({:.2}x faster)\n", c0 * 1e12, c6 * 1e12, c0 / c6);
+        } else {
+            println!();
+        }
+    }
+
+    // cross-check the AOT trace artifact against the native integrator
+    let dir = default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let mut rt = XlaRuntime::open(&dir).expect("runtime");
+        let cfg = Variant::Aid.config(&params);
+        let mut batch = MacBatch::nominal(8, 0.0, cfg.dac_mode.flag(), cfg.t_sample as f32);
+        for i in 0..8 {
+            batch.set_row(i, 15, 15, [0.0; 4], [0.0; 4]);
+        }
+        let n_points = rt.manifest().trace_points;
+        let trace = rt.run_trace(&batch, t_total as f32).expect("trace");
+        // native twin of row 0 / cell 0 at the artifact's sample stride
+        let dac = WordlineDac::new(cfg.dac_mode, &card, &params.circuit, 0.0);
+        let inp = BitlineInputs { v_wl: dac.v_wl(15), bit: true, v_bulk: 0.0 };
+        let stride = params.circuit.n_steps / n_points as u32;
+        let wf = discharge_trace(&params, &Mosfet::nominal(card), &inp, t_total, params.circuit.n_steps, stride);
+        let mut worst = 0.0f64;
+        for t in 0..n_points {
+            let hlo = f64::from(trace[t * 32]); // (t, row 0, cell 0)
+            let nat = wf.values()[t + 1]; // wf includes t=0
+            worst = worst.max((hlo - nat).abs());
+        }
+        println!("HLO trace vs native integrator, worst |delta| = {worst:.2e} V");
+        assert!(worst < 1e-3, "trace paths disagree");
+
+        println!("\n=== timing ===");
+        let r = Runner::default();
+        r.bench("fig5_6/native trace 512 steps", || {
+            discharge_trace(&params, &Mosfet::nominal(card), &inp, t_total, 512, 32)
+        });
+        r.bench("fig5_6/hlo trace artifact (8 rows)", || {
+            rt.run_trace(&batch, t_total as f32).unwrap()
+        });
+    } else {
+        println!("artifacts not built; skipping HLO trace cross-check");
+    }
+}

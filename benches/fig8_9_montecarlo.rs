@@ -1,0 +1,91 @@
+//! Bench + regeneration of **Fig. 8 / Fig. 9**: 1000-point Monte-Carlo
+//! (process + mismatch) of the 1111 x 1111 MAC.
+//!
+//! * Fig. 8: SMART applied to AID [10] — sigma shrinks, histogram tightens.
+//! * Fig. 9: SMART applied to IMAC [9] — same effect on the linear-DAC design.
+//!
+//! Benchmarks the end-to-end campaign on both backends (XLA worker pool
+//! vs native) and at several worker counts.
+//!
+//! Run: `cargo bench --offline --bench fig8_9_montecarlo`
+
+use smart_insram::bench::Runner;
+use smart_insram::coordinator::{run_campaign, Backend, CampaignSpec};
+use smart_insram::mac::Variant;
+use smart_insram::params::Params;
+use smart_insram::report;
+use smart_insram::runtime::default_artifact_dir;
+
+fn main() {
+    let params = Params::default();
+    let dir = default_artifact_dir();
+    let have_artifacts = dir.join("manifest.json").exists();
+    let backend = if have_artifacts { Backend::Xla } else { Backend::Native };
+    if !have_artifacts {
+        println!("artifacts not built; falling back to the native backend\n");
+    }
+
+    let run = |variant: Variant, n_mc: u32| {
+        let mut spec = CampaignSpec::paper_fig8(variant);
+        spec.n_mc = n_mc;
+        run_campaign(&params, &spec, backend, Some(dir.clone())).expect("campaign")
+    };
+
+    println!("=== Fig. 8 — AID [10] vs SMART-on-[10], 1000-pt MC ===");
+    let aid = run(Variant::Aid, 1000);
+    let smart = run(Variant::Smart, 1000);
+    print!("{}", report::mc_panel("AID [10]", &aid));
+    print!("{}", report::mc_panel("SMART", &smart));
+    let s_aid = aid.raw_vmult.std_dev() / aid.full_scale;
+    let s_smart = smart.raw_vmult.std_dev() / smart.full_scale;
+    println!(
+        "normalized sigma: AID {s_aid:.4} -> SMART {s_smart:.4} ({:.2}x better; paper: 0.086 -> 0.009)\n",
+        s_aid / s_smart
+    );
+    assert!(s_smart < s_aid, "Fig. 8 shape violated");
+
+    println!("=== Fig. 9 — IMAC [9] vs SMART-on-[9], 1000-pt MC ===");
+    let imac = run(Variant::Imac, 1000);
+    let soi = run(Variant::SmartOnImac, 1000);
+    print!("{}", report::mc_panel("IMAC [9]", &imac));
+    print!("{}", report::mc_panel("SMART-on-IMAC", &soi));
+    let s_imac = imac.raw_vmult.std_dev() / imac.full_scale;
+    let s_soi = soi.raw_vmult.std_dev() / soi.full_scale;
+    println!(
+        "normalized sigma: IMAC {s_imac:.4} -> SMART-on-IMAC {s_soi:.4} ({:.2}x better)\n",
+        s_imac / s_soi
+    );
+    assert!(s_soi < s_imac, "Fig. 9 shape violated");
+
+    println!("=== timing — end-to-end 1000-pt campaign ===");
+    let r = Runner::quick();
+    let s = r.bench("fig8_9/xla cold (compile + run)", || run(Variant::Smart, 1000));
+    println!("  {:.0} MAC evals/s", s.per_second(1000));
+    if have_artifacts {
+        // §Perf: persistent CampaignEngine amortizes the PJRT compile —
+        // the dominant per-campaign cost on this host.
+        use smart_insram::coordinator::CampaignEngine;
+        let mut engine = CampaignEngine::new(dir.clone(), 256, 1).expect("engine");
+        let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+        spec.n_mc = 1000;
+        let s = r.bench("fig8_9/xla warm (persistent engine)", || {
+            engine.run(&params, &spec).unwrap()
+        });
+        println!("  {:.0} MAC evals/s", s.per_second(1000));
+        for workers in [2usize, 4] {
+            let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+            spec.n_mc = 1000;
+            spec.workers = workers;
+            let s = r.bench(&format!("fig8_9/xla cold ({workers} workers)"), || {
+                run_campaign(&params, &spec, Backend::Xla, Some(dir.clone())).unwrap()
+            });
+            println!("  {:.0} MAC evals/s", s.per_second(1000));
+        }
+        let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+        spec.n_mc = 1000;
+        let s = r.bench("fig8_9/native backend", || {
+            run_campaign(&params, &spec, Backend::Native, None).unwrap()
+        });
+        println!("  {:.0} MAC evals/s", s.per_second(1000));
+    }
+}

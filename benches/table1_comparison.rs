@@ -1,0 +1,99 @@
+//! Bench + regeneration of **Table 1**: the head-to-head comparison of
+//! SMART vs AID [10] vs IMAC [9] (+ quoted [14]/[21] rows) on MAC energy,
+//! accuracy (normalized sigma over the full operand space), and frequency.
+//!
+//! Run: `cargo bench --offline --bench table1_comparison`
+
+use smart_insram::bench::Runner;
+use smart_insram::coordinator::{run_campaign, Backend, CampaignSpec, Workload};
+use smart_insram::energy::{nominal_cost, EnergyModel};
+use smart_insram::mac::Variant;
+use smart_insram::params::Params;
+use smart_insram::report;
+use smart_insram::runtime::default_artifact_dir;
+
+fn main() {
+    let params = Params::default();
+    let dir = default_artifact_dir();
+    let backend = if dir.join("manifest.json").exists() {
+        Backend::Xla
+    } else {
+        Backend::Native
+    };
+    let model = EnergyModel::default();
+    let n_mc = 100; // per operand pair x 256 pairs = 25.6k MACs per variant
+
+    let accuracy = |variant: Variant| {
+        let spec = CampaignSpec {
+            variant,
+            workload: Workload::FullSweep,
+            n_mc,
+            seed: 2022,
+            corner: smart_insram::montecarlo::Corner::Tt,
+            workers: 0,
+            batch: 0,
+        };
+        run_campaign(&params, &spec, backend, Some(dir.clone())).expect("campaign")
+    };
+
+    println!("=== Table 1 — comprehensive comparison ===\n");
+    let mut sigmas = Vec::new();
+    for v in [Variant::Smart, Variant::Aid, Variant::Imac] {
+        let r = accuracy(v);
+        println!(
+            "{:<14} accuracy sweep: rms/FS {:.4}, BER {:.4}, {} evals in {:.2?}",
+            v.name(),
+            r.accuracy.rms_norm,
+            r.accuracy.ber,
+            r.rows,
+            r.wall
+        );
+        sigmas.push((v, r.accuracy.rms_norm));
+    }
+    println!();
+    println!("{}", report::build_table1(&params, &sigmas, &model));
+
+    // shape assertions against the paper's Table 1
+    let sig = |v: Variant| sigmas.iter().find(|(x, _)| *x == v).unwrap().1;
+    let cost = |v: Variant| nominal_cost(&params, v, &model);
+    assert!(sig(Variant::Smart) < sig(Variant::Aid), "accuracy column shape");
+    assert!(sig(Variant::Aid) < sig(Variant::Imac), "accuracy column shape");
+    assert!(
+        cost(Variant::Aid).energy < cost(Variant::Smart).energy
+            && cost(Variant::Smart).energy < cost(Variant::Imac).energy,
+        "energy column shape (paper: 0.523 < 0.783 < 0.9 pJ)"
+    );
+    assert!(
+        cost(Variant::Smart).frequency > cost(Variant::Aid).frequency
+            && cost(Variant::Aid).frequency > cost(Variant::Imac).frequency,
+        "frequency column shape (paper: 250 > 200 > 100 MHz)"
+    );
+    println!("all Table 1 orderings hold (energy, accuracy, frequency)");
+
+    println!("\n=== timing — full-sweep campaign per variant ===");
+    let r = Runner::quick();
+    for v in [Variant::Smart, Variant::Aid, Variant::Imac] {
+        let s = r.bench(&format!("table1/{} (cold)", v.name()), || accuracy(v));
+        println!("  {:.0} MAC evals/s", s.per_second(256 * u64::from(n_mc)));
+    }
+    if backend == Backend::Xla {
+        // §Perf: persistent engine amortizes the PJRT compile
+        use smart_insram::coordinator::CampaignEngine;
+        let mut engine = CampaignEngine::new(dir.clone(), 256, 1).expect("engine");
+        for v in [Variant::Smart, Variant::Aid, Variant::Imac] {
+            let spec = CampaignSpec {
+                variant: v,
+                workload: Workload::FullSweep,
+                n_mc,
+                seed: 2022,
+                corner: smart_insram::montecarlo::Corner::Tt,
+                workers: 1,
+                batch: 256,
+            };
+            let s = r.bench(&format!("table1/{} (warm engine)", v.name()), || {
+                engine.run(&params, &spec).unwrap()
+            });
+            println!("  {:.0} MAC evals/s", s.per_second(256 * u64::from(n_mc)));
+        }
+    }
+}

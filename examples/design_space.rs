@@ -1,0 +1,145 @@
+//! Design-space exploration: the device/circuit-level figures (Fig. 3,
+//! Fig. 4, Fig. 5/6) plus two design ablations the paper calls out —
+//! WL-margin widening and sampling-time sensitivity.
+//!
+//! ```bash
+//! cargo run --offline --release --example design_space [out_dir]
+//! ```
+//!
+//! Emits CSV series (one file per figure) and prints the headline
+//! observables: the ~125 mV turn-on shift, the per-width current gain,
+//! and the discharge speed-up.
+
+use anyhow::Result;
+use smart_insram::circuit::{discharge_trace, BitlineInputs};
+use smart_insram::dac::{DacMode, WordlineDac};
+use smart_insram::device::{iv_sweep, width_sweep, Mosfet};
+use smart_insram::mac::{NativeMacEngine, Variant};
+use smart_insram::montecarlo::McSample;
+use smart_insram::params::Params;
+use smart_insram::report::csv;
+
+fn main() -> Result<()> {
+    let params = Params::default();
+    let card = params.device;
+    let out_dir = std::env::args().nth(1).unwrap_or_else(|| "target/figures".into());
+    std::fs::create_dir_all(&out_dir)?;
+    let write = |name: &str, text: String| -> Result<()> {
+        let path = format!("{out_dir}/{name}");
+        std::fs::write(&path, text)?;
+        println!("wrote {path}");
+        Ok(())
+    };
+
+    // ---- Fig. 3: I_D(V_WL) for V_bulk in {0, 0.2, 0.4, 0.6} V -------------
+    let bulks = [0.0, 0.2, 0.4, 0.6];
+    let pts = iv_sweep(card, &bulks, 201);
+    let rows: Vec<Vec<f64>> = pts.iter().map(|p| vec![p.v_wl, p.v_bulk, p.i_d]).collect();
+    write("fig3_iv.csv", csv(&["v_wl", "v_bulk", "i_d"], &rows))?;
+    let dev = Mosfet::nominal(card);
+    let v_at = |vb: f64| {
+        (0..=2000)
+            .map(|k| k as f64 * 0.0005)
+            .find(|&v| dev.drain_current(v, card.vdd, vb) > 10e-6)
+            .unwrap()
+    };
+    let shift = v_at(0.0) - v_at(0.6);
+    println!("Fig.3: turn-on shift at 0.6 V body bias = {:.1} mV (paper: ~125 mV)", shift * 1e3);
+
+    // ---- Fig. 4: width sweep, V_bulk = 0 solid vs 0.6 dashed --------------
+    let ws: Vec<f64> = (1..=20).map(|k| k as f64 * 0.25).collect();
+    let pts = width_sweep(card, 0.55, &[0.0, 0.6], &ws);
+    let rows: Vec<Vec<f64>> = pts.iter().map(|p| vec![p.w_scale, p.v_bulk, p.i_d]).collect();
+    write("fig4_width.csv", csv(&["w_scale", "v_bulk", "i_d"], &rows))?;
+    let gain = pts[ws.len()].i_d / pts[0].i_d;
+    println!("Fig.4: body-bias current gain at W-scale 0.25 = {gain:.2}x (uniform across widths)");
+
+    // ---- Fig. 5/6: V_BLB(t) discharge, biased vs unbiased ------------------
+    for (fig, variant) in [("fig6", Variant::Aid), ("fig5", Variant::Imac)] {
+        let cfg = variant.config(&params);
+        let dac = WordlineDac::new(cfg.dac_mode, &card, &params.circuit, 0.0);
+        let v_wl = dac.v_wl(15);
+        let mut rows = Vec::new();
+        for vb in [0.0, 0.6] {
+            let inp = BitlineInputs { v_wl, bit: true, v_bulk: vb };
+            let wf = discharge_trace(&params, &Mosfet::nominal(card), &inp, 1.0e-9, 512, 8);
+            for (t, v) in wf.iter() {
+                rows.push(vec![t, vb, v]);
+            }
+        }
+        write(
+            &format!("{fig}_discharge_{}.csv", variant.name().split_whitespace().next().unwrap()),
+            csv(&["t", "v_bulk", "v_blb"], &rows),
+        )?;
+    }
+    // discharge speed-up headline
+    let inp0 = BitlineInputs { v_wl: 0.55, bit: true, v_bulk: 0.0 };
+    let inp6 = BitlineInputs { v_wl: 0.55, bit: true, v_bulk: 0.6 };
+    let wf0 = discharge_trace(&params, &Mosfet::nominal(card), &inp0, 2.0e-9, 1024, 8);
+    let wf6 = discharge_trace(&params, &Mosfet::nominal(card), &inp6, 2.0e-9, 1024, 8);
+    let t0 = wf0.crossing_time(0.7).unwrap_or(f64::NAN);
+    let t6 = wf6.crossing_time(0.7).unwrap_or(f64::NAN);
+    println!(
+        "Fig.5/6: time to 0.3 V discharge — unbiased {:.0} ps vs biased {:.0} ps ({:.2}x faster)",
+        t0 * 1e12,
+        t6 * 1e12,
+        t0 / t6
+    );
+
+    // ---- Ablation A: WL margin / DAC levels (paper §III) ------------------
+    let mut rows = Vec::new();
+    for (label, vb) in [(0.0f64, 0.0f64), (1.0, 0.6)] {
+        for mode in [DacMode::Linear, DacMode::Sqrt] {
+            let dac = WordlineDac::new(mode, &card, &params.circuit, vb);
+            for c in 0..=15u8 {
+                rows.push(vec![
+                    label,
+                    if mode == DacMode::Linear { 0.0 } else { 1.0 },
+                    f64::from(c),
+                    dac.v_wl(c),
+                ]);
+            }
+        }
+    }
+    write("ablation_wl_margin.csv", csv(&["biased", "sqrt_mode", "code", "v_wl"], &rows))?;
+    let base = WordlineDac::new(DacMode::Sqrt, &card, &params.circuit, 0.0);
+    let smart = WordlineDac::new(DacMode::Sqrt, &card, &params.circuit, 0.6);
+    println!(
+        "Ablation A: WL margin [{:.0}, 700] -> [{:.0}, 700] mV; code step {:.1} -> {:.1} mV",
+        base.vth_design * 1e3,
+        smart.vth_design * 1e3,
+        base.code_step() * 1e3,
+        smart.code_step() * 1e3
+    );
+
+    // ---- Ablation B: accuracy vs sampling time (Eq. 4 validity) -----------
+    let mut rows = Vec::new();
+    println!("Ablation B: fault onset vs WL pulse width (Eq. 4):");
+    for variant in [Variant::Smart, Variant::Aid] {
+        let mut first_fault = None;
+        for k in 1..=40 {
+            let t_s = k as f64 * 2.5e-11; // 25 ps steps up to 1 ns
+            let mut cfg = variant.config(&params);
+            cfg.t_sample = t_s;
+            let engine = NativeMacEngine::new(params, cfg);
+            let r = engine.mac(15, 15, &McSample::nominal());
+            rows.push(vec![
+                if variant == Variant::Smart { 1.0 } else { 0.0 },
+                t_s,
+                r.v_mult,
+                f64::from(u8::from(r.fault)),
+            ]);
+            if r.fault && first_fault.is_none() {
+                first_fault = Some(t_s);
+            }
+        }
+        println!(
+            "  {:<14} first saturation-exit fault at t_s = {:.0} ps",
+            variant.name(),
+            first_fault.unwrap_or(f64::NAN) * 1e12
+        );
+    }
+    write("ablation_t_sample.csv", csv(&["smart", "t_s", "v_mult", "fault"], &rows))?;
+
+    Ok(())
+}

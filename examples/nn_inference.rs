@@ -1,0 +1,344 @@
+//! Motivating workload (paper §I): neural-network inference on the
+//! analog in-SRAM MAC — a 2-layer 4-bit MLP classifying synthetic
+//! 16-pixel digit patterns, with every multiply executed by the analog
+//! accelerator through the AOT/PJRT path.
+//!
+//! ```bash
+//! make artifacts && cargo run --offline --release --example nn_inference
+//! ```
+//!
+//! Reports classification agreement vs exact integer math per variant
+//! (SMART's lower sigma -> higher agreement), plus throughput and the
+//! energy-per-inference estimate from the Table 1 model.
+
+use anyhow::Result;
+use smart_insram::energy::{nominal_cost, EnergyModel};
+use smart_insram::mac::{IdealTransfer, NativeMacEngine, Variant};
+use smart_insram::montecarlo::{MismatchSampler, SplitMix64};
+use smart_insram::params::Params;
+use smart_insram::runtime::{default_artifact_dir, MacBatch, XlaRuntime};
+
+const N_IN: usize = 16; // 4x4 binary pixel pattern
+const N_HID: usize = 8;
+const N_OUT: usize = 4; // four synthetic classes
+const N_SAMPLES: usize = 128;
+const BATCH: usize = 256;
+
+/// Tiny fixed-point MLP with 4-bit unsigned weights/activations.
+struct Mlp {
+    w1: [[u8; N_IN]; N_HID],
+    w2: [[u8; N_HID]; N_OUT],
+}
+
+impl Mlp {
+    /// Deterministic "trained" weights: each hidden unit prefers one
+    /// quadrant + stripe pattern, each output sums matching hidden units.
+    fn new(seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut w1 = [[0u8; N_IN]; N_HID];
+        for (h, row) in w1.iter_mut().enumerate() {
+            for (i, w) in row.iter_mut().enumerate() {
+                let quadrant = (i % 4 >= 2) as usize + 2 * (i / 8);
+                let on = quadrant == h % 4 || (i + h) % 5 == 0;
+                *w = if on { 8 + (rng.next_u64() % 8) as u8 } else { (rng.next_u64() % 3) as u8 };
+            }
+        }
+        let mut w2 = [[0u8; N_HID]; N_OUT];
+        for (o, row) in w2.iter_mut().enumerate() {
+            for (h, w) in row.iter_mut().enumerate() {
+                *w = if h % N_OUT == o { 10 + (rng.next_u64() % 6) as u8 } else { (rng.next_u64() % 4) as u8 };
+            }
+        }
+        Self { w1, w2 }
+    }
+}
+
+/// 4-bit requantization of an integer accumulator.
+fn quant4(acc: u32, scale: u32) -> u8 {
+    ((acc / scale).min(15)) as u8
+}
+
+fn exact_forward(mlp: &Mlp, x: &[u8; N_IN]) -> usize {
+    let mut hid = [0u8; N_HID];
+    for h in 0..N_HID {
+        let acc: u32 = (0..N_IN).map(|i| u32::from(mlp.w1[h][i]) * u32::from(x[i])).sum();
+        hid[h] = quant4(acc, 60);
+    }
+    let mut best = (0usize, 0u32);
+    for o in 0..N_OUT {
+        let acc: u32 = (0..N_HID).map(|h| u32::from(mlp.w2[o][h]) * u32::from(hid[h])).sum();
+        if acc > best.1 {
+            best = (o, acc);
+        }
+    }
+    best.0
+}
+
+/// Analog forward pass: every multiply runs as one in-SRAM MAC through the
+/// AOT executable; accumulation happens digitally in the coordinator
+/// (bit-serial column architecture, paper Fig. 7).
+struct AnalogRunner<'a> {
+    exe: &'a smart_insram::runtime::MacExecutable,
+    ideal: IdealTransfer,
+    cfg: smart_insram::mac::VariantConfig,
+    sampler: MismatchSampler,
+    macs: u64,
+}
+
+impl<'a> AnalogRunner<'a> {
+    /// Execute a list of (a, b) products; returns reconstructed products.
+    fn products(&mut self, pairs: &[(u8, u8)]) -> Result<Vec<u16>> {
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(BATCH) {
+            let mut batch = MacBatch::nominal(
+                BATCH,
+                self.cfg.v_bulk as f32,
+                self.cfg.dac_mode.flag(),
+                self.cfg.t_sample as f32,
+            );
+            for (i, &(a, b)) in chunk.iter().enumerate() {
+                let mc = self.sampler.sample();
+                batch.set_row(i, a, b, mc.dvth.map(|x| x as f32), mc.dbeta.map(|x| x as f32));
+            }
+            let res = self.exe.run(&batch)?;
+            for i in 0..chunk.len() {
+                out.push(smart_insram::mac::reconstruct(
+                    &self.ideal,
+                    f64::from(res.v_mult[i]),
+                ));
+            }
+            self.macs += chunk.len() as u64;
+        }
+        Ok(out)
+    }
+
+    fn forward(&mut self, mlp: &Mlp, x: &[u8; N_IN]) -> Result<usize> {
+        // layer 1: N_HID x N_IN products
+        let pairs: Vec<(u8, u8)> = (0..N_HID)
+            .flat_map(|h| (0..N_IN).map(move |i| (h, i)))
+            .map(|(h, i)| (mlp.w1[h][i], x[i]))
+            .collect();
+        let prods = self.products(&pairs)?;
+        let mut hid = [0u8; N_HID];
+        for h in 0..N_HID {
+            let acc: u32 = (0..N_IN).map(|i| u32::from(prods[h * N_IN + i])).sum();
+            hid[h] = quant4(acc, 60);
+        }
+        // layer 2
+        let pairs: Vec<(u8, u8)> = (0..N_OUT)
+            .flat_map(|o| (0..N_HID).map(move |h| (o, h)))
+            .map(|(o, h)| (mlp.w2[o][h], hid[h]))
+            .collect();
+        let prods = self.products(&pairs)?;
+        let mut best = (0usize, 0u32);
+        for o in 0..N_OUT {
+            let acc: u32 = (0..N_HID).map(|h| u32::from(prods[o * N_HID + h])).sum();
+            if acc > best.1 {
+                best = (o, acc);
+            }
+        }
+        Ok(best.0)
+    }
+}
+
+fn synth_input(rng: &mut SplitMix64, class: usize) -> [u8; N_IN] {
+    let mut x = [0u8; N_IN];
+    for (i, px) in x.iter_mut().enumerate() {
+        let quadrant = (i % 4 >= 2) as usize + 2 * (i / 8);
+        let base = if quadrant == class { 11 } else { 2 };
+        let noise = (rng.next_u64() % 5) as i32 - 2;
+        *px = (base + noise).clamp(0, 15) as u8;
+    }
+    x
+}
+
+/// VMM execution: whole dot products on the multi-row array artifact
+/// (Fig. 7 used as IMAC-class accelerators intend). Layer 1 is 8 dots of
+/// 16 rows per sample; layer 2 is 4 dots of 8 rows (zero-padded to 16).
+struct VmmRunner<'a> {
+    exe: &'a smart_insram::runtime::DotExecutable,
+    ideal_fs: f64, // full-scale v_dot == R x 225 product units
+    cfg: smart_insram::mac::VariantConfig,
+    sampler: MismatchSampler,
+    dots: u64,
+    calls: u64,
+}
+
+impl<'a> VmmRunner<'a> {
+    /// Run a list of dot products, each (weights[R'], codes[R']) with
+    /// R' <= 16; returns integer dot-product estimates.
+    fn dots(&mut self, jobs: &[(Vec<u8>, Vec<u8>)]) -> Result<Vec<u32>> {
+        let rows = self.exe.rows();
+        let batch = self.exe.batch();
+        let mut out = Vec::with_capacity(jobs.len());
+        for chunk in jobs.chunks(batch) {
+            let mut db = smart_insram::runtime::DotBatch::nominal(
+                batch,
+                rows,
+                self.cfg.v_bulk as f32,
+                self.cfg.dac_mode.flag(),
+                (self.cfg.t_sample / 4.0) as f32,
+            );
+            for (i, (ws, cs)) in chunk.iter().enumerate() {
+                for r in 0..rows {
+                    let (w, c) = if r < ws.len() { (ws[r], cs[r]) } else { (0, 0) };
+                    let mc = self.sampler.sample();
+                    db.set_row(i, r, w, c, mc.dvth.map(|x| x as f32), mc.dbeta.map(|x| x as f32));
+                }
+            }
+            let res = self.exe.run(&db)?;
+            self.calls += 1;
+            for i in 0..chunk.len() {
+                let units = f64::from(res.v_dot[i]) / self.ideal_fs * (rows as f64 * 225.0);
+                out.push(units.round().max(0.0) as u32);
+            }
+            self.dots += chunk.len() as u64;
+        }
+        Ok(out)
+    }
+
+    fn classify_all(&mut self, mlp: &Mlp, data: &[(usize, [u8; N_IN])]) -> Result<Vec<usize>> {
+        // pass 1: all layer-1 dots for all samples
+        let jobs: Vec<(Vec<u8>, Vec<u8>)> = data
+            .iter()
+            .flat_map(|(_, x)| {
+                (0..N_HID).map(move |h| {
+                    ((0..N_IN).map(|i| mlp.w1[h][i]).collect(), x.to_vec())
+                })
+            })
+            .collect();
+        let acc1 = self.dots(&jobs)?;
+        let hidden: Vec<[u8; N_HID]> = data
+            .iter()
+            .enumerate()
+            .map(|(s, _)| {
+                let mut hid = [0u8; N_HID];
+                for h in 0..N_HID {
+                    hid[h] = quant4(acc1[s * N_HID + h], 60);
+                }
+                hid
+            })
+            .collect();
+        // pass 2: all layer-2 dots
+        let jobs: Vec<(Vec<u8>, Vec<u8>)> = hidden
+            .iter()
+            .flat_map(|hid| {
+                (0..N_OUT).map(move |o| {
+                    ((0..N_HID).map(|h| mlp.w2[o][h]).collect(), hid.to_vec())
+                })
+            })
+            .collect();
+        let acc2 = self.dots(&jobs)?;
+        Ok((0..data.len())
+            .map(|s| {
+                (0..N_OUT)
+                    .max_by_key(|&o| acc2[s * N_OUT + o])
+                    .unwrap()
+            })
+            .collect())
+    }
+}
+
+fn main() -> Result<()> {
+    let params = Params::default();
+    let dir = default_artifact_dir();
+    let mut rt = XlaRuntime::open(&dir)?;
+    let exe = rt.mac_executable(BATCH)?;
+    let mlp = Mlp::new(4);
+
+    // dataset
+    let mut rng = SplitMix64::new(11);
+    let data: Vec<(usize, [u8; N_IN])> = (0..N_SAMPLES)
+        .map(|k| {
+            let class = k % N_OUT;
+            (class, synth_input(&mut rng, class))
+        })
+        .collect();
+    let exact_acc = data
+        .iter()
+        .filter(|(c, x)| exact_forward(&mlp, x) == *c)
+        .count() as f64
+        / data.len() as f64;
+    println!("exact 4-bit integer MLP accuracy: {:.1}% ({} samples)\n", exact_acc * 100.0, data.len());
+
+    let model = EnergyModel::default();
+    println!(
+        "{:<14} {:>9} {:>10} {:>12} {:>14} {:>12}",
+        "variant", "accuracy", "vs-exact", "MACs", "MAC evals/s", "pJ/inference"
+    );
+    for variant in [Variant::Smart, Variant::Aid, Variant::Imac] {
+        let cfg = variant.config(&params);
+        let native = NativeMacEngine::new(params, cfg);
+        let mut runner = AnalogRunner {
+            exe: &exe,
+            ideal: IdealTransfer::calibrate(&native),
+            cfg,
+            sampler: MismatchSampler::new(7, params.circuit.sigma_vth, params.circuit.sigma_beta),
+            macs: 0,
+        };
+        let t0 = std::time::Instant::now();
+        let mut correct = 0usize;
+        let mut agree = 0usize;
+        for (class, x) in &data {
+            let pred = runner.forward(&mlp, x)?;
+            correct += usize::from(pred == *class);
+            agree += usize::from(pred == exact_forward(&mlp, x));
+        }
+        let wall = t0.elapsed();
+        let cost = nominal_cost(&params, variant, &model);
+        let macs_per_inf = (N_HID * N_IN + N_OUT * N_HID) as f64;
+        println!(
+            "{:<14} {:>8.1}% {:>9.1}% {:>12} {:>14.0} {:>12.2}",
+            variant.name(),
+            correct as f64 / data.len() as f64 * 100.0,
+            agree as f64 / data.len() as f64 * 100.0,
+            runner.macs,
+            runner.macs as f64 / wall.as_secs_f64(),
+            cost.energy * macs_per_inf * 1e12,
+        );
+    }
+    println!("\n(accuracy = class labels; vs-exact = agreement with integer math)");
+
+    // ---- VMM mode: whole dot products on the 16-row array artifact -----
+    let dot_exe = rt.dot_executable(16)?;
+    println!("\n=== VMM mode (multi-row dot-product array, R = {}) ===", dot_exe.rows());
+    println!(
+        "{:<14} {:>9} {:>10} {:>8} {:>14}",
+        "variant", "accuracy", "vs-exact", "calls", "dots/s"
+    );
+    for variant in [Variant::Smart, Variant::Aid] {
+        let cfg = variant.config(&params);
+        let native = smart_insram::mac::NativeDotEngine::new(params, cfg, dot_exe.rows());
+        let mut runner = VmmRunner {
+            exe: &dot_exe,
+            ideal_fs: native.full_scale(),
+            cfg,
+            sampler: MismatchSampler::new(7, params.circuit.sigma_vth, params.circuit.sigma_beta),
+            dots: 0,
+            calls: 0,
+        };
+        let t0 = std::time::Instant::now();
+        let preds = runner.classify_all(&mlp, &data)?;
+        let wall = t0.elapsed();
+        let correct = preds
+            .iter()
+            .zip(&data)
+            .filter(|(p, (c, _))| *p == c)
+            .count();
+        let agree = preds
+            .iter()
+            .zip(&data)
+            .filter(|(p, (_, x))| **p == exact_forward(&mlp, x))
+            .count();
+        println!(
+            "{:<14} {:>8.1}% {:>9.1}% {:>8} {:>14.0}",
+            variant.name(),
+            correct as f64 / data.len() as f64 * 100.0,
+            agree as f64 / data.len() as f64 * 100.0,
+            runner.calls,
+            runner.dots as f64 / wall.as_secs_f64(),
+        );
+    }
+    println!("(one VMM dot replaces 16 scalar MACs: ~12x fewer executor calls)");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Perf tool: micro-profiles the native-oracle hot path and decomposes a
+//! campaign into batcher vs execution cost. Used for the EXPERIMENTS.md
+//! §Perf iteration log.
+use smart_insram::mac::{NativeMacEngine, Variant};
+use smart_insram::montecarlo::{McSample, MismatchSampler};
+use smart_insram::params::Params;
+use std::time::Instant;
+
+fn main() {
+    let p = Params::default();
+    let e = NativeMacEngine::new(p, Variant::Smart.config(&p));
+    let mc = McSample::nominal();
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    for _ in 0..10_000 {
+        acc += e.mac(15, 15, &mc).v_mult;
+    }
+    println!("mac(15,15): {:.2} us/eval (sum {acc:.1})", t0.elapsed().as_secs_f64() / 10_000.0 * 1e6);
+
+    let mut s = MismatchSampler::new(1, 8e-3, 0.02);
+    let t0 = Instant::now();
+    let mut n = 0.0;
+    for _ in 0..100_000 {
+        n += s.sample().dvth[0];
+    }
+    println!("sampler: {:.3} us/sample (sum {n:.3})", t0.elapsed().as_secs_f64() / 100_000.0 * 1e6);
+
+    // campaign decomposition
+    use smart_insram::coordinator::{Batcher, CampaignSpec};
+    let spec = CampaignSpec::paper_fig8(Variant::Smart);
+    let cfg = Variant::Smart.config(&p);
+    let mk_batcher = || Batcher::new(
+        vec![(15u8, 15u8)], 1000, 256, (&cfg).into(),
+        MismatchSampler::new(2022, p.circuit.sigma_vth, p.circuit.sigma_beta),
+    );
+    let t0 = Instant::now();
+    let batches: Vec<_> = mk_batcher().collect();
+    println!("batcher: {:.2} ms for {} batches", t0.elapsed().as_secs_f64()*1e3, batches.len());
+    let t0 = Instant::now();
+    let mut outs = Vec::new();
+    for b in &batches {
+        outs.push(smart_insram::coordinator::run_native_batch(&e, b));
+    }
+    println!("native exec: {:.2} ms", t0.elapsed().as_secs_f64()*1e3);
+    let _ = (outs, spec);
+}

@@ -1,0 +1,53 @@
+//! Quickstart: one 4x4-bit analog MAC through the full three-layer stack.
+//!
+//! ```bash
+//! make artifacts && cargo run --offline --release --example quickstart
+//! ```
+//!
+//! Loads the AOT-compiled HLO artifact (L2 jax model wrapping the L1
+//! Pallas discharge kernel), executes it on the PJRT CPU client from
+//! Rust (L3), and cross-checks the result against the native Rust
+//! simulator — the library's core correctness contract.
+
+use anyhow::Result;
+use smart_insram::mac::{NativeMacEngine, Variant};
+use smart_insram::montecarlo::McSample;
+use smart_insram::params::Params;
+use smart_insram::runtime::{default_artifact_dir, MacBatch, XlaRuntime};
+
+fn main() -> Result<()> {
+    let params = Params::default();
+    let dir = default_artifact_dir();
+    println!("artifacts: {}", dir.display());
+    let mut rt = XlaRuntime::open(&dir)?;
+    println!("PJRT platform: {}\n", rt.platform());
+
+    let exe = rt.mac_executable(1)?;
+    println!("{:<14} {:>5} {:>12} {:>12} {:>10}", "variant", "a*b", "HLO (mV)", "native (mV)", "|delta|");
+    for variant in [Variant::Smart, Variant::Aid, Variant::Imac] {
+        let cfg = variant.config(&params);
+        let native = NativeMacEngine::new(params, cfg);
+        for (a, b) in [(15u8, 15u8), (13, 7), (5, 11)] {
+            let mut batch = MacBatch::nominal(
+                1,
+                cfg.v_bulk as f32,
+                cfg.dac_mode.flag(),
+                cfg.t_sample as f32,
+            );
+            batch.set_row(0, a, b, [0.0; 4], [0.0; 4]);
+            let out = exe.run(&batch)?;
+            let want = native.mac(a, b, &McSample::nominal());
+            let hlo_mv = f64::from(out.v_mult[0]) * 1e3;
+            let nat_mv = want.v_mult * 1e3;
+            println!(
+                "{:<14} {a:>2}x{b:<2} {hlo_mv:>11.3} {nat_mv:>11.3} {:>9.4}",
+                variant.name(),
+                (hlo_mv - nat_mv).abs()
+            );
+            assert!((hlo_mv - nat_mv).abs() < 0.5, "layers disagree!");
+        }
+    }
+
+    println!("\nall HLO outputs match the native oracle — stack is healthy");
+    Ok(())
+}

@@ -1,0 +1,115 @@
+"""AOT lowering: jax (L2 + L1) -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compiler_ir('hlo').as_serialized_hlo_module_proto()``)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids that the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Emits into ``artifacts/``:
+    mac_b{B}.hlo.txt     — mac_forward for each batch size B
+    trace_b{B}.hlo.txt   — mac_trace waveform variant
+    params.json          — the model card mirrored to the Rust side
+    manifest.json        — artifact -> (entry, batch, inputs) index
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .params import DEFAULT
+
+MAC_BATCHES = (1, 256, 1024)
+TRACE_BATCHES = (8,)
+TRACE_POINTS = 64
+DOT_ROWS = 16
+DOT_BATCHES = (16, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_mac(batch: int) -> str:
+    lowered = jax.jit(model.mac_forward_tuple).lower(*model.example_args(batch))
+    return to_hlo_text(lowered)
+
+
+def lower_trace(batch: int) -> str:
+    fn = lambda *a: model.mac_trace(*a, n_points=TRACE_POINTS)
+    lowered = jax.jit(fn).lower(*model.example_args(batch))
+    return to_hlo_text(lowered)
+
+
+def lower_dot(batch: int, rows: int) -> str:
+    lowered = jax.jit(model.dot_forward_tuple).lower(*model.dot_example_args(batch, rows))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the primary artifact; siblings land next to it")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = {"artifacts": [], "mac_batches": list(MAC_BATCHES),
+                "trace_batches": list(TRACE_BATCHES), "trace_points": TRACE_POINTS,
+                "dot_batches": list(DOT_BATCHES), "dot_rows": DOT_ROWS,
+                "n_steps": DEFAULT.circuit.n_steps}
+
+    for b in MAC_BATCHES:
+        path = os.path.join(outdir, f"mac_b{b}.hlo.txt")
+        text = lower_mac(b)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"name": f"mac_b{b}", "path": os.path.basename(path),
+             "kind": "mac", "batch": b})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for b in DOT_BATCHES:
+        path = os.path.join(outdir, f"dot_r{DOT_ROWS}_b{b}.hlo.txt")
+        text = lower_dot(b, DOT_ROWS)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"name": f"dot_r{DOT_ROWS}_b{b}", "path": os.path.basename(path),
+             "kind": "dot", "batch": b, "rows": DOT_ROWS})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for b in TRACE_BATCHES:
+        path = os.path.join(outdir, f"trace_b{b}.hlo.txt")
+        text = lower_trace(b)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"name": f"trace_b{b}", "path": os.path.basename(path),
+             "kind": "trace", "batch": b, "n_points": TRACE_POINTS})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(outdir, "params.json"), "w") as f:
+        f.write(DEFAULT.to_json())
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # Primary artifact expected by the Makefile stamp rule.
+    primary = lower_mac(MAC_BATCHES[1])
+    with open(args.out, "w") as f:
+        f.write(primary)
+    print(f"wrote {args.out} (primary, batch={MAC_BATCHES[1]})")
+
+
+if __name__ == "__main__":
+    main()

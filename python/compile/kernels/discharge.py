@@ -1,0 +1,106 @@
+"""L1 — Pallas kernel: batched BLB-discharge transient integrator.
+
+The compute hot-spot of the reproduction: for every (MC sample x bit-cell),
+integrate the access-transistor discharge ODE (paper Eq. 1-3) over
+``n_steps`` fixed timesteps and emit the sampled V_BLB.
+
+TPU mapping (DESIGN.md §3 — Hardware-Adaptation): the grid tiles the MC
+batch axis; each program instance pulls one (TILE, CELLS) parameter block
+HBM->VMEM once, runs the whole time loop on-chip (no per-step HBM traffic),
+and writes the sampled voltages back once. ``interpret=True`` is mandatory
+on this CPU-PJRT image; on a real TPU the same BlockSpec schedule holds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..params import DEFAULT
+
+_D = DEFAULT.device
+
+# Batch tile: small enough that (TILE, CELLS) f32 blocks for 4 operands plus
+# the state fit comfortably in VMEM (~16 KiB at TILE=128, CELLS=4 per ref),
+# large enough to amortize the grid overhead.
+TILE = 128
+
+
+def _discharge_body(
+    vwl_ref, vth_ref, beta_ref, bits_ref, scal_ref, o_ref,
+    *, n_steps: int, lam: float, n_sub: float, vt: float, k_leak: float,
+):
+    """Kernel body. ``scal_ref`` holds [dt/c_blb, vdd] (runtime scalars)."""
+    vwl = vwl_ref[...]
+    vth = vth_ref[...]
+    beta = beta_ref[...]
+    bits = bits_ref[...]
+    dt_over_c = scal_ref[0]
+    vdd = scal_ref[1]
+
+    # Time-invariant quantities hoisted out of the loop.
+    vov = vwl - vth
+    gate = jnp.where(bits > 0.5, 1.0, k_leak)
+    on = vov > 0.0
+    half_bv2 = 0.5 * beta * vov * vov          # saturation prefactor
+    i_sub0 = beta * vt * vt * jnp.exp(jnp.minimum(vov, 0.0) / (n_sub * vt))
+
+    def step(_, v):
+        clm = 1.0 + lam * v
+        i_sat = half_bv2 * clm
+        i_tri = beta * (vov - 0.5 * v) * v * clm
+        i_on = jnp.where(v >= vov, i_sat, i_tri)
+        i_off = i_sub0 * (1.0 - jnp.exp(-jnp.maximum(v, 0.0) / vt))
+        # above threshold: square-law floored at the subthreshold current
+        # (continuous moderate-inversion handoff; matches ref.py and the
+        # Rust device model)
+        i = jnp.where(on, jnp.maximum(jnp.maximum(i_on, 0.0), i_off), i_off) * gate
+        return jnp.maximum(v - i * dt_over_c, 0.0)
+
+    v0 = jnp.full_like(vwl, vdd)
+    o_ref[...] = jax.lax.fori_loop(0, n_steps, step, v0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def discharge(
+    vwl: jnp.ndarray,       # (B, CELLS) f32
+    vth_eff: jnp.ndarray,   # (B, CELLS) f32
+    beta: jnp.ndarray,      # (B, CELLS) f32
+    bits: jnp.ndarray,      # (B, CELLS) f32 in {0,1}
+    dt_over_c: jnp.ndarray,  # () f32 — dt / C_BLB, traced so t_sample sweeps
+    vdd: jnp.ndarray,        # () f32 — precharge voltage
+    *,
+    n_steps: int = DEFAULT.circuit.n_steps,
+) -> jnp.ndarray:
+    """Sampled V_BLB, shape (B, CELLS). Pads B up to a TILE multiple."""
+    b, cells = vwl.shape
+    tile = min(TILE, b) if b % TILE else TILE
+    if b % tile:
+        pad = tile - b % tile
+        padder = lambda a: jnp.pad(a, ((0, pad), (0, 0)))
+        vwl, vth_eff, beta, bits = map(padder, (vwl, vth_eff, beta, bits))
+    bp = vwl.shape[0]
+    scal = jnp.stack([dt_over_c.astype(jnp.float32), vdd.astype(jnp.float32)])
+
+    kernel = functools.partial(
+        _discharge_body,
+        n_steps=n_steps,
+        lam=_D.lam,
+        n_sub=_D.n_sub,
+        vt=_D.vt_thermal,
+        k_leak=_D.k_leak,
+    )
+    block = pl.BlockSpec((tile, cells), lambda i: (i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(bp // tile,),
+        in_specs=[block, block, block, block,
+                  pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct((bp, cells), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(vwl, vth_eff, beta, bits, scal)
+    return out[:b]

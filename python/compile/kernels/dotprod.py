@@ -1,0 +1,125 @@
+"""L1 — Pallas kernel: multi-row dot-product discharge (the A in MAC).
+
+The paper's Fig. 7 array generalized to its intended workload: R rows are
+activated simultaneously, every row storing a 4-bit weight; the rows'
+access currents SUM onto the shared bitlines, so the sampled discharge is
+the analog dot product sum_r(a_r * f(b_r)) — one vector-matrix-multiply
+column per call. This is how IMAC-class accelerators batch NN layers.
+
+ODE per (batch, cell-column):  C_bl * dV/dt = -sum_r I_r(V)
+
+Grid tiles the MC/batch axis; each program instance holds its
+(TILE, R, CELLS) parameter block in VMEM and runs the shared-bitline time
+loop on-chip. interpret=True (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..params import DEFAULT
+
+_D = DEFAULT.device
+
+# Smaller batch tile than the single-row kernel: the block is R times
+# bigger per batch element ((TILE, R, 4) x 4 operands in VMEM).
+TILE = 16
+
+
+def _dot_body(
+    vwl_ref, vth_ref, beta_ref, bits_ref, scal_ref, o_ref,
+    *, n_steps: int, lam: float, n_sub: float, vt: float, k_leak: float,
+):
+    """Kernel body. Refs: (TILE, R, CELLS); scal_ref holds [dt/c_bl, vdd]."""
+    vwl = vwl_ref[...]
+    vth = vth_ref[...]
+    beta = beta_ref[...]
+    bits = bits_ref[...]
+    dt_over_c = scal_ref[0]
+    vdd = scal_ref[1]
+
+    vov = vwl - vth
+    gate = jnp.where(bits > 0.5, 1.0, k_leak)
+    on = vov > 0.0
+    half_bv2 = 0.5 * beta * vov * vov
+    i_sub0 = beta * vt * vt * jnp.exp(jnp.minimum(vov, 0.0) / (n_sub * vt))
+
+    def row_current(v):
+        # v: (TILE, 1, CELLS) broadcast against per-row params
+        clm = 1.0 + lam * v
+        i_sat = half_bv2 * clm
+        i_tri = beta * (vov - 0.5 * v) * v * clm
+        i_on = jnp.where(v >= vov, i_sat, i_tri)
+        i_off = i_sub0 * (1.0 - jnp.exp(-jnp.maximum(v, 0.0) / vt))
+        return jnp.where(on, jnp.maximum(jnp.maximum(i_on, 0.0), i_off), i_off) * gate
+
+    def step(_, v):
+        # shared bitline: sum currents over the row axis
+        i_total = jnp.sum(row_current(v[:, None, :]), axis=1)
+        return jnp.maximum(v - i_total * dt_over_c, 0.0)
+
+    v0 = jnp.full(vwl.shape[:1] + vwl.shape[2:], vdd, vwl.dtype)  # (TILE, CELLS)
+    o_ref[...] = jax.lax.fori_loop(0, n_steps, step, v0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def dot_discharge(
+    vwl: jnp.ndarray,       # (B, R, CELLS) f32 — per-row word-line voltage
+    vth_eff: jnp.ndarray,   # (B, R, CELLS) f32
+    beta: jnp.ndarray,      # (B, R, CELLS) f32
+    bits: jnp.ndarray,      # (B, R, CELLS) f32 in {0,1}
+    dt_over_c: jnp.ndarray,  # () f32 — dt / C_BL (traced)
+    vdd: jnp.ndarray,        # () f32
+    *,
+    n_steps: int = DEFAULT.circuit.n_steps,
+) -> jnp.ndarray:
+    """Shared-bitline V_BL at the sampling instant, shape (B, CELLS)."""
+    b, r, cells = vwl.shape
+    tile = min(TILE, b) if b % TILE else TILE
+    if b % tile:
+        pad = tile - b % tile
+        padder = lambda a: jnp.pad(a, ((0, pad), (0, 0), (0, 0)))
+        vwl, vth_eff, beta, bits = map(padder, (vwl, vth_eff, beta, bits))
+    bp = vwl.shape[0]
+    scal = jnp.stack([dt_over_c.astype(jnp.float32), vdd.astype(jnp.float32)])
+
+    kernel = functools.partial(
+        _dot_body,
+        n_steps=n_steps,
+        lam=_D.lam,
+        n_sub=_D.n_sub,
+        vt=_D.vt_thermal,
+        k_leak=_D.k_leak,
+    )
+    block3 = pl.BlockSpec((tile, r, cells), lambda i: (i, 0, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(bp // tile,),
+        in_specs=[block3, block3, block3, block3,
+                  pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((tile, cells), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, cells), jnp.float32),
+        interpret=True,
+    )(vwl, vth_eff, beta, bits, scal)
+    return out[:b]
+
+
+def dot_discharge_ref(vwl, vth_eff, beta, bits, *, dt, n_steps,
+                      c_bl=DEFAULT.circuit.c_blb, vdd=_D.vdd, k_leak=_D.k_leak):
+    """Pure-jnp oracle of the shared-bitline dot-product discharge."""
+    from . import ref
+
+    vov = vwl - vth_eff
+    gate = jnp.where(bits > 0.5, 1.0, k_leak)
+
+    def body(_, v):
+        i_rows = ref.device_current(v[..., None, :], vov, beta) * gate
+        i_total = jnp.sum(i_rows, axis=-2)
+        return jnp.maximum(v - i_total * (dt / c_bl), 0.0)
+
+    v0 = jnp.full(vwl.shape[:-2] + vwl.shape[-1:], vdd, vwl.dtype)
+    return jax.lax.fori_loop(0, n_steps, body, v0)

@@ -1,0 +1,103 @@
+"""Pure-jnp oracle for the discharge kernel and the MAC model.
+
+This module is the CORE correctness signal: the Pallas kernel in
+``discharge.py`` and the Rust native simulator must both agree with these
+functions (pytest on the Python side, integration tests on the Rust side).
+
+Physics (paper Eq. 1-6, square-law NMOS with body effect):
+
+    I_sat = 1/2 * beta * Vov^2 * (1 + lam*V)          V >= Vov  (saturation)
+    I_tri = beta * (Vov - V/2) * V * (1 + lam*V)      V <  Vov  (triode)
+    I_sub = beta * Vt^2 * exp(Vov/(n*Vt)) * (1-e^{-V/Vt})   Vov <= 0
+    C_blb * dV/dt = -I(V)                              (Eq. 1)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..params import DEFAULT
+
+_D = DEFAULT.device
+
+
+def device_current(
+    v_blb: jnp.ndarray,
+    vov: jnp.ndarray,
+    beta: jnp.ndarray,
+    *,
+    lam: float = _D.lam,
+    n_sub: float = _D.n_sub,
+    vt: float = _D.vt_thermal,
+) -> jnp.ndarray:
+    """Region-aware drain current of the access transistor (drain = BLB).
+
+    Above threshold the square-law is floored at the Vov = 0 subthreshold
+    current so the weak->strong inversion handoff is continuous and
+    monotone in V_GS (EKV-style moderate inversion). Mirrored in
+    `rust/src/device/model.rs::drain_current_vov`.
+    """
+    clm = 1.0 + lam * v_blb
+    i_sat = 0.5 * beta * vov * vov * clm
+    i_tri = beta * (vov - 0.5 * v_blb) * v_blb * clm
+    i_on = jnp.where(v_blb >= vov, i_sat, i_tri)
+    # subthreshold: exp saturates at Vov = 0 so the on/off branches meet there
+    i_sub = (
+        beta
+        * vt
+        * vt
+        * jnp.exp(jnp.minimum(vov, 0.0) / (n_sub * vt))
+        * (1.0 - jnp.exp(-jnp.maximum(v_blb, 0.0) / vt))
+    )
+    return jnp.where(vov > 0.0, jnp.maximum(jnp.maximum(i_on, 0.0), i_sub), i_sub)
+
+
+def discharge_ref(
+    vwl: jnp.ndarray,      # (..., cells) word-line voltage per cell
+    vth_eff: jnp.ndarray,  # (..., cells) effective threshold (mismatch + body)
+    beta: jnp.ndarray,     # (..., cells) transconductance factor
+    bits: jnp.ndarray,     # (..., cells) stored bit in {0,1}: gates the path
+    *,
+    dt: float,
+    n_steps: int,
+    c_blb: float = DEFAULT.circuit.c_blb,
+    vdd: float = _D.vdd,
+    k_leak: float = _D.k_leak,
+) -> jnp.ndarray:
+    """Integrate the BLB discharge for ``n_steps`` of ``dt``; returns V_BLB(t_s).
+
+    A stored 1 (Q=VDD, Qbar=0) opens the M2acc->M3 path; a stored 0 leaves
+    only a ``k_leak``-scaled leakage path (VGS - VTH << 0).
+    """
+    vov = vwl - vth_eff
+    gate = jnp.where(bits > 0.5, 1.0, k_leak)
+
+    def body(_, v):
+        i = device_current(v, vov, beta) * gate
+        return jnp.maximum(v - i * (dt / c_blb), 0.0)
+
+    v0 = jnp.full_like(vwl, vdd)
+    return jax.lax.fori_loop(0, n_steps, body, v0)
+
+
+def discharge_trace_ref(
+    vwl, vth_eff, beta, bits, *, dt, n_steps, stride,
+    c_blb=DEFAULT.circuit.c_blb, vdd=_D.vdd, k_leak=_D.k_leak,
+):
+    """Like :func:`discharge_ref` but returns V_BLB at every ``stride`` steps:
+    shape (n_steps // stride, ..., cells). Used for the Fig. 5/6 waveforms."""
+    vov = vwl - vth_eff
+    gate = jnp.where(bits > 0.5, 1.0, k_leak)
+
+    def step(v, _):
+        def inner(_, vv):
+            i = device_current(vv, vov, beta) * gate
+            return jnp.maximum(vv - i * (dt / c_blb), 0.0)
+
+        v = jax.lax.fori_loop(0, stride, inner, v)
+        return v, v
+
+    v0 = jnp.full_like(vwl, vdd)
+    _, trace = jax.lax.scan(step, v0, None, length=n_steps // stride)
+    return trace

@@ -1,0 +1,199 @@
+"""L2 — JAX model of the 4x4-bit in-SRAM analog MAC column (paper §II-III).
+
+The full compute graph the Rust coordinator executes at campaign time:
+
+    operand A (4 stored bits) , operand B (DAC code)
+      -> body-effect VTH shift (Eq. 6) from the V_bulk input
+      -> DAC word-line coding (Eq. 7 linear / Eq. 8 sqrt, traced mode flag)
+      -> per-cell BLB discharge transient   [L1 Pallas kernel]
+      -> binary-weighted charge-share combine -> V_multiplication
+      -> dynamic-energy accounting (sum C*VDD*dV)
+
+Everything is a single jitted function, AOT-lowered by ``aot.py`` to HLO
+text. Python never runs at campaign time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import discharge as dk
+from .kernels import dotprod as dot
+from .kernels import ref
+from .params import DEFAULT
+
+_D = DEFAULT.device
+_C = DEFAULT.circuit
+
+# Binary weights for the MSB-first 4-cell word (paper Fig. 7: MSB leftmost).
+_WEIGHTS = jnp.array([8.0, 4.0, 2.0, 1.0]) / 15.0
+
+
+def vth_effective(v_bulk: jnp.ndarray, dvth: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 6: VTH0 + gamma*(sqrt(2phiF + V_SB) - sqrt(2phiF)) + mismatch.
+
+    V_SB = -v_bulk (forward body bias via the dual-VDD rail), clamped so the
+    sqrt argument stays non-negative (junction would forward-bias earlier).
+    """
+    inner = jnp.maximum(_D.phi2f - v_bulk, 0.0)
+    return _D.vth0 + _D.gamma * (jnp.sqrt(inner) - jnp.sqrt(_D.phi2f)) + dvth
+
+
+def dac_vwl(b_code: jnp.ndarray, vth_design: jnp.ndarray, dac_mode: jnp.ndarray) -> jnp.ndarray:
+    """Word-line voltage for DAC code ``b_code`` in [0, 2^N - 1].
+
+    Eq. 7 (mode 0, IMAC [9]):  VWL = VTH + code/(2^N-1) * (WL_MAX - VTH)
+    Eq. 8 (mode 1, AID [10]):  VWL = VTH + sqrt(code/(2^N-1)) * (WL_MAX - VTH)
+    The sqrt coding linearizes I ~ (VWL - VTH)^2 in the code.
+    A zero code keeps the WL at 0 V (no pulse at all).
+    """
+    full = 2.0**_C.n_bits - 1.0
+    frac = b_code / full
+    margin = _C.wl_max - vth_design
+    lin = vth_design + frac * margin
+    sqr = vth_design + jnp.sqrt(frac) * margin
+    vwl = jnp.where(dac_mode > 0.5, sqr, lin)
+    return jnp.where(b_code > 0.0, vwl, 0.0)
+
+
+def mac_forward(
+    a_bits: jnp.ndarray,    # (B, 4) f32 in {0,1}, MSB first
+    b_code: jnp.ndarray,    # (B,)   f32 in [0, 15]
+    v_bulk: jnp.ndarray,    # ()     f32 — 0.0 baseline, 0.6 SMART
+    dac_mode: jnp.ndarray,  # ()     f32 — 0 linear [9], 1 sqrt [10]
+    t_sample: jnp.ndarray,  # ()     f32 — WL pulse width (s)
+    dvth: jnp.ndarray,      # (B, 4) f32 — MC threshold mismatch (V)
+    dbeta: jnp.ndarray,     # (B, 4) f32 — MC relative beta mismatch
+):
+    """Returns (v_mult (B,), v_blb (B,4), energy (B,), fault (B,)).
+
+    ``v_mult`` is the binary-weighted discharge voltage — the paper's
+    "V_multiplication" axis in Fig. 8/9. ``energy`` is the raw dynamic
+    bitline energy sum(C * VDD * dV); fixed per-op overheads (DAC, WL
+    driver, body-bias rail) are added by the Rust energy model. ``fault``
+    is 1.0 when any conducting cell left saturation before the sampling
+    instant (V_BLB < Vov) — the paper's "systematic fault" / worst-case
+    incorrect output condition (§II-A).
+    """
+    b = a_bits.shape[0]
+    vth_eff = vth_effective(v_bulk, dvth)
+    # The DAC is calibrated to the *nominal* (mismatch-free) threshold: the
+    # designer knows v_bulk but not the per-device mismatch.
+    vth_nom = vth_effective(v_bulk, jnp.zeros(()))
+    vwl = jnp.broadcast_to(dac_vwl(b_code, vth_nom, dac_mode)[:, None], (b, 4))
+    beta = _D.mu_cox * _D.w_over_l * (1.0 + dbeta)
+    dt_over_c = t_sample / (_C.n_steps * _C.c_blb)
+    v_blb = dk.discharge(
+        vwl, vth_eff, beta, a_bits,
+        dt_over_c.astype(jnp.float32), jnp.float32(_D.vdd),
+        n_steps=_C.n_steps,
+    )
+    dv = _D.vdd - v_blb
+    v_mult = dv @ _WEIGHTS
+    energy = _C.c_blb * _D.vdd * jnp.sum(dv, axis=-1)
+    # Saturation-exit check (Eq. 4's validity condition): a conducting cell
+    # whose V_BLB dropped below its overdrive has entered triode -> invalid.
+    vov = vwl - vth_eff
+    in_triode = (v_blb < vov) & (a_bits > 0.5) & (vov > 0.0)
+    fault = jnp.max(in_triode.astype(jnp.float32), axis=-1)
+    return v_mult, v_blb, energy, fault
+
+
+def mac_trace(
+    a_bits, b_code, v_bulk, dac_mode, t_total, dvth, dbeta,
+    *, n_points: int = 64,
+):
+    """Waveform variant for Fig. 5/6: V_BLB(t) at ``n_points`` instants,
+    shape (n_points, B, 4). Pure-jnp scan (figure path, not the hot path)."""
+    b = a_bits.shape[0]
+    vth_eff = vth_effective(v_bulk, dvth)
+    vth_nom = vth_effective(v_bulk, jnp.zeros(()))
+    vwl = jnp.broadcast_to(dac_vwl(b_code, vth_nom, dac_mode)[:, None], (b, 4))
+    beta = _D.mu_cox * _D.w_over_l * (1.0 + dbeta)
+    stride = _C.n_steps // n_points
+    dt = t_total / _C.n_steps
+    trace = ref.discharge_trace_ref(
+        vwl, vth_eff, beta, a_bits,
+        dt=dt, n_steps=_C.n_steps, stride=stride,
+    )
+    return (trace,)
+
+
+def mac_forward_tuple(*args):
+    """Tuple-returning wrapper for AOT lowering (return_tuple=True)."""
+    return tuple(mac_forward(*args))
+
+
+def dot_forward(
+    a_bits: jnp.ndarray,    # (B, R, 4) f32 — R stored 4-bit weights
+    b_code: jnp.ndarray,    # (B, R)    f32 — per-row DAC codes (activations)
+    v_bulk: jnp.ndarray,    # ()        f32
+    dac_mode: jnp.ndarray,  # ()        f32
+    t_sample: jnp.ndarray,  # ()        f32 — WL pulse width (s)
+    dvth: jnp.ndarray,      # (B, R, 4) f32
+    dbeta: jnp.ndarray,     # (B, R, 4) f32
+):
+    """Multi-row analog dot product on the shared bitlines (Fig. 7 array
+    as a VMM column): returns (v_dot (B,), v_bl (B,4), energy (B,), fault (B,)).
+
+    The bitline capacitance scales with the number of attached rows
+    (C_bl = C_BLB * R/4), so per-row discharge rates match the single-row
+    column and the linear-summation regime is preserved. ``fault`` flags
+    any conducting row whose saturation condition V_BL >= Vov broke before
+    sampling.
+    """
+    b, r, _ = a_bits.shape
+    c_bl = _C.c_blb * (r / 4.0)
+    vth_eff = vth_effective(v_bulk, dvth)
+    vth_nom = vth_effective(v_bulk, jnp.zeros(()))
+    vwl = jnp.broadcast_to(dac_vwl(b_code, vth_nom, dac_mode)[..., None], (b, r, 4))
+    beta = _D.mu_cox * _D.w_over_l * (1.0 + dbeta)
+    dt_over_c = t_sample / (_C.n_steps * c_bl)
+    v_bl = dot.dot_discharge(
+        vwl, vth_eff, beta, a_bits,
+        dt_over_c.astype(jnp.float32), jnp.float32(_D.vdd),
+        n_steps=_C.n_steps,
+    )
+    dv = _D.vdd - v_bl
+    v_dot = dv @ _WEIGHTS
+    energy = c_bl * _D.vdd * jnp.sum(dv, axis=-1)
+    vov = vwl - vth_eff
+    conducting = (a_bits > 0.5) & (vov > 0.0)
+    in_triode = (v_bl[:, None, :] < vov) & conducting
+    fault = jnp.max(in_triode.astype(jnp.float32), axis=(-2, -1))
+    return v_dot, v_bl, energy, fault
+
+
+def dot_forward_tuple(*args):
+    return tuple(dot_forward(*args))
+
+
+def dot_example_args(batch: int, rows: int):
+    """ShapeDtypeStructs matching ``dot_forward`` for (batch, rows)."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return (
+        s((batch, rows, 4), f32),
+        s((batch, rows), f32),
+        s((), f32),
+        s((), f32),
+        s((), f32),
+        s((batch, rows, 4), f32),
+        s((batch, rows, 4), f32),
+    )
+
+
+def example_args(batch: int):
+    """ShapeDtypeStructs matching ``mac_forward``'s signature for ``batch``."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return (
+        s((batch, 4), f32),   # a_bits
+        s((batch,), f32),     # b_code
+        s((), f32),           # v_bulk
+        s((), f32),           # dac_mode
+        s((), f32),           # t_sample
+        s((batch, 4), f32),   # dvth
+        s((batch, 4), f32),   # dbeta
+    )

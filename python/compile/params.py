@@ -1,0 +1,88 @@
+"""Shared 65 nm stand-in model card + circuit constants (single source of truth).
+
+These constants parameterize the square-law + body-effect device model used
+by the Pallas kernel (L1), the jnp oracle, and — mirrored via
+``artifacts/params.json`` — the Rust native simulator. Calibration targets
+(see DESIGN.md §6):
+
+* dVTH(V_bulk = 0.6 V) ~= -125 mV  (paper Fig. 3)
+* WL margin [VTH_eff, WL_MAX]: [0.30, 0.70] V baseline -> [0.175, 0.70] V
+  with body bias (paper §III); we use VTH0 = 0.425 V with a -0.425..-0.30 V
+  *design* margin interpretation: the DAC's usable range starts at the
+  effective threshold.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+
+
+@dataclass(frozen=True)
+class DeviceCard:
+    """65 nm NMOS access-transistor card (M2acc in the paper's Fig. 1)."""
+
+    vdd: float = 1.0            # V   — cell supply (paper Table 1: SMART/AID)
+    vth0: float = 0.30          # V   — zero-bias threshold (low-VT access
+                                #       device; paper §III: WL margin starts
+                                #       at 300 mV baseline, 175 mV biased)
+    gamma: float = 0.306        # sqrt(V) — body-effect coefficient (Eq. 6);
+                                #       gives dVTH(0.6 V) = -125 mV (Fig. 3)
+    phi2f: float = 0.88         # V   — 2*phi_F surface potential (Eq. 6)
+    mu_cox: float = 180e-6      # A/V^2 — process transconductance mu_n*Cox
+    w_over_l: float = 3.0       # —   — W/L = 195 nm / 65 nm
+    lam: float = 0.08           # 1/V — channel-length modulation
+    n_sub: float = 1.5          # —   — subthreshold slope factor
+    vt_thermal: float = 0.026   # V   — kT/q at 300 K
+    k_leak: float = 1e-4        # —   — relative off-path (bit = 0) leakage
+
+
+@dataclass(frozen=True)
+class CircuitCard:
+    """Bitline / timing / DAC constants for the 4x4-bit MAC column."""
+
+    c_blb: float = 30e-15       # F  — BLB sampling capacitance
+    wl_max: float = 0.70        # V  — top of the usable WL range (paper §III)
+    t_sample: float = 0.12e-9   # s  — WL pulse width at the sampling instant:
+                                #      ~0.6x the SMART max-code WL_PW_MAX of
+                                #      Eq. 4, leaving a >3-sigma mismatch guard
+                                #      band before triode entry; identical for
+                                #      all variants per the paper's "same WL
+                                #      timing" setup
+    n_steps: int = 256          # —  — transient integration steps
+    n_bits: int = 4             # —  — operand bit width (4x4-bit MAC)
+    v_bulk_smart: float = 0.6   # V  — SMART forward body bias (dual-VDD rail)
+    sigma_vth: float = 8e-3     # V  — Pelgrom sigma(VTH) for the MC stand-in
+    sigma_beta: float = 0.02    # —  — relative sigma(beta)
+
+
+@dataclass(frozen=True)
+class Params:
+    device: DeviceCard = field(default_factory=DeviceCard)
+    circuit: CircuitCard = field(default_factory=CircuitCard)
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=2, sort_keys=True)
+
+
+DEFAULT = Params()
+
+# DAC mode selectors (traced scalar in the L2 model; mirrored in rust/src/dac)
+DAC_LINEAR = 0.0   # Eq. 7 — IMAC [9]:  V_WL = VTH + code/(2^N-1) * (WL_MAX - VTH)
+DAC_SQRT = 1.0     # Eq. 8 — AID  [10]: V_WL = VTH + sqrt(code/(2^N-1)) * (WL_MAX - VTH)
+
+
+def delta_vth_body(gamma: float, phi2f: float, v_bulk: float) -> float:
+    """Eq. 6 threshold shift for a forward body bias of ``v_bulk`` volts.
+
+    V_SB = -v_bulk (source at ~0 V, bulk raised), so
+    dVTH = gamma * (sqrt(2phi_F - v_bulk) - sqrt(2phi_F)) < 0.
+    """
+    inner = max(phi2f - v_bulk, 0.0)
+    return gamma * (inner**0.5 - phi2f**0.5)
+
+
+if __name__ == "__main__":  # quick calibration readout
+    d = DEFAULT.device
+    for vb in (0.0, 0.2, 0.4, 0.6):
+        print(f"v_bulk={vb:.1f}  dVTH={delta_vth_body(d.gamma, d.phi2f, vb)*1e3:+.1f} mV")

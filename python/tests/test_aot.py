@@ -1,0 +1,73 @@
+"""AOT lowering sanity: HLO text parses structurally, manifest is coherent."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.params import DEFAULT
+
+
+@pytest.fixture(scope="module")
+def hlo_b1():
+    return aot.lower_mac(1)
+
+
+def test_hlo_text_has_entry(hlo_b1):
+    assert "ENTRY" in hlo_b1
+    assert "HloModule" in hlo_b1
+
+
+def test_hlo_text_shapes(hlo_b1):
+    # 7 ENTRY parameters: a_bits, b_code, v_bulk, dac_mode, t_sample, dvth,
+    # dbeta (nested fusion computations have their own parameters, so count
+    # only within the ENTRY block — it is the last computation in the text).
+    entry = hlo_b1[hlo_b1.rindex("ENTRY") :]
+    assert entry.count("parameter(") == 7
+    # tuple of 4 results: v_mult, v_blb, energy, fault
+    assert "f32[1,4]" in hlo_b1  # a_bits / v_blb shape
+
+
+def test_hlo_no_custom_calls(hlo_b1):
+    """interpret=True must lower the Pallas kernel to plain HLO — a Mosaic
+    custom-call would be unloadable by the CPU PJRT client."""
+    assert "custom-call" not in hlo_b1.lower() or "mosaic" not in hlo_b1.lower()
+
+
+def test_trace_lowering():
+    text = aot.lower_trace(8)
+    assert "ENTRY" in text
+    assert f"f32[{aot.TRACE_POINTS},8,4]" in text
+
+
+def test_example_args_signature():
+    args = model.example_args(16)
+    assert len(args) == 7
+    assert args[0].shape == (16, 4)
+    assert args[1].shape == (16,)
+    assert args[2].shape == ()
+
+
+def test_params_json_roundtrip():
+    d = json.loads(DEFAULT.to_json())
+    assert d["device"]["vth0"] == pytest.approx(0.30)
+    assert d["circuit"]["n_bits"] == 4
+    assert d["circuit"]["c_blb"] == pytest.approx(30e-15)
+
+
+def test_artifacts_if_built():
+    """When `make artifacts` has run, check the manifest indexes real files."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man = os.path.join(art, "manifest.json")
+    if not os.path.exists(man):
+        pytest.skip("artifacts not built")
+    with open(man) as f:
+        m = json.load(f)
+    assert m["n_steps"] == DEFAULT.circuit.n_steps
+    for a in m["artifacts"]:
+        p = os.path.join(art, a["path"])
+        assert os.path.exists(p), p
+        with open(p) as f:
+            head = f.read(4096)
+        assert "HloModule" in head

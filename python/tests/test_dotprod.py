@@ -1,0 +1,107 @@
+"""Dot-product (multi-row, shared-bitline) kernel vs oracle + semantics."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels import dotprod as dp
+from compile.params import DEFAULT
+
+_C = DEFAULT.circuit
+_D = DEFAULT.device
+F32 = jnp.float32
+R = 4  # small row count keeps hypothesis cases fast; AOT uses 16
+
+
+def run_pair(vwl, vth, beta, bits, t_s, n_steps, c_bl):
+    dt = t_s / n_steps
+    out_k = dp.dot_discharge(
+        vwl, vth, beta, bits,
+        jnp.float32(dt / c_bl), jnp.float32(_D.vdd), n_steps=n_steps,
+    )
+    out_r = dp.dot_discharge_ref(vwl, vth, beta, bits, dt=dt, n_steps=n_steps, c_bl=c_bl)
+    return np.asarray(out_k), np.asarray(out_r)
+
+
+@given(
+    batch=st.sampled_from([1, 3, 16, 20]),
+    rows=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(deadline=None, max_examples=15, derandomize=True)
+def test_dot_kernel_matches_ref(batch, rows, seed):
+    rng = np.random.default_rng(seed)
+    shape = (batch, rows, 4)
+    vwl = jnp.asarray(rng.uniform(0.0, 0.7, shape), F32)
+    vth = jnp.asarray(rng.uniform(0.15, 0.4, shape), F32)
+    beta = jnp.asarray(rng.uniform(2e-4, 8e-4, shape), F32)
+    bits = jnp.asarray(rng.integers(0, 2, shape), F32)
+    c_bl = _C.c_blb * rows / 4.0
+    k, r = run_pair(vwl, vth, beta, bits, 0.05e-9, 64, c_bl)
+    np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-6)
+
+
+def dot_run(weights, codes, v_bulk=0.0, t_scale=1.0):
+    """Helper: run model.dot_forward for one batch element."""
+    r = len(weights)
+    a = np.zeros((1, r, 4), np.float32)
+    for i, w in enumerate(weights):
+        a[0, i] = [(w >> 3) & 1, (w >> 2) & 1, (w >> 1) & 1, w & 1]
+    b = np.asarray([codes], np.float32)
+    z = jnp.zeros((1, r, 4), F32)
+    # Fixed full-scale across row counts: C_bl scales with R, so the
+    # all-rows-max discharge equals the single-row MAC full-scale when
+    # t = t_sample / 4 (independent of R).
+    t_s = _C.t_sample / 4.0 * t_scale
+    return model.dot_forward(
+        jnp.asarray(a), jnp.asarray(b), F32(v_bulk), F32(1.0), F32(t_s), z, z
+    )
+
+
+def test_single_row_dot_equals_mac():
+    """R=1 dot product must reduce to the single-row MAC (same C scaling)."""
+    vd, _, _, fault = dot_run([15], [15.0])
+    bits = jnp.ones((1, 4), F32)
+    code = jnp.full((1,), 15.0, F32)
+    z = jnp.zeros((1, 4), F32)
+    # R=1: C_bl = c_blb/4 and t = t_sample/4 -> identical dt/C to the MAC
+    vm, _, _, _ = model.mac_forward(
+        bits, code, F32(0.0), F32(1.0), F32(_C.t_sample), z, z
+    )
+    assert abs(float(vd[0]) - float(vm[0])) < 1e-3
+    assert float(fault[0]) == 0.0
+
+
+def test_dot_is_additive_across_rows():
+    """In the linear (saturation) regime the discharge sums over rows."""
+    v1, _, _, _ = dot_run([9, 0, 0, 0], [12.0, 0, 0, 0])
+    v2, _, _, _ = dot_run([0, 0, 5, 0], [0, 0, 7.0, 0])
+    v12, _, _, _ = dot_run([9, 0, 5, 0], [12.0, 0, 7.0, 0])
+    assert abs(float(v12[0]) - float(v1[0]) - float(v2[0])) < 3e-3
+
+
+def test_dot_tracks_integer_dot_product():
+    """With sqrt DAC, v_dot is proportional to sum_r(a_r * b_r)."""
+    rng = np.random.default_rng(5)
+    full, _, _, _ = dot_run([15] * R, [15.0] * R)
+    fs = float(full[0]) / (R * 225.0)
+    for _ in range(6):
+        w = rng.integers(0, 16, R).tolist()
+        c = rng.integers(0, 16, R).astype(float).tolist()
+        vd, _, _, fault = dot_run(w, c)
+        ideal = sum(a * b for a, b in zip(w, c)) * fs
+        assert float(fault[0]) == 0.0
+        assert abs(float(vd[0]) - ideal) < 0.04 * float(full[0]) + 1e-3, (w, c)
+
+
+def test_dot_fault_on_deep_discharge():
+    _, _, _, fault = dot_run([15] * R, [15.0] * R, t_scale=12.0)
+    assert float(fault[0]) == 1.0
+
+
+def test_dot_body_bias_enlarges_signal():
+    base, _, _, _ = dot_run([15] * R, [15.0] * R, v_bulk=0.0)
+    smart, _, _, _ = dot_run([15] * R, [15.0] * R, v_bulk=0.6)
+    assert float(smart[0]) > float(base[0]) * 1.3

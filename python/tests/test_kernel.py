@@ -1,0 +1,184 @@
+"""Pallas discharge kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes and physical parameter ranges; every case asserts
+allclose between the interpret-mode Pallas kernel and ``kernels.ref``.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import discharge as dk
+from compile.kernels import ref
+from compile.params import DEFAULT
+
+_C = DEFAULT.circuit
+_D = DEFAULT.device
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def run_pair(vwl, vth, beta, bits, t_s, n_steps, c_blb=_C.c_blb, vdd=_D.vdd):
+    dt = t_s / n_steps
+    out_k = dk.discharge(
+        vwl, vth, beta, bits,
+        jnp.float32(dt / c_blb), jnp.float32(vdd), n_steps=n_steps,
+    )
+    out_r = ref.discharge_ref(
+        vwl, vth, beta, bits, dt=dt, n_steps=n_steps, c_blb=c_blb, vdd=vdd,
+    )
+    return np.asarray(out_k), np.asarray(out_r)
+
+
+@given(
+    batch=st.sampled_from([1, 2, 5, 16, 128, 130, 256]),
+    cells=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+    t_ns=st.floats(0.01, 1.0),
+)
+def test_kernel_matches_ref_random(batch, cells, seed, t_ns):
+    rng = np.random.default_rng(seed)
+    vwl = jnp.asarray(rng.uniform(0.0, 0.75, (batch, cells)), jnp.float32)
+    vth = jnp.asarray(rng.uniform(0.1, 0.5, (batch, cells)), jnp.float32)
+    beta = jnp.asarray(rng.uniform(1e-4, 1e-3, (batch, cells)), jnp.float32)
+    bits = jnp.asarray(rng.integers(0, 2, (batch, cells)), jnp.float32)
+    k, r = run_pair(vwl, vth, beta, bits, t_ns * 1e-9, 64)
+    np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-6)
+
+
+@given(
+    vwl=st.floats(0.0, 0.75),
+    vth=st.floats(0.1, 0.5),
+    bit=st.sampled_from([0.0, 1.0]),
+)
+def test_kernel_matches_ref_scalar_corners(vwl, vth, bit):
+    shape = (1, 4)
+    k, r = run_pair(
+        jnp.full(shape, vwl, jnp.float32),
+        jnp.full(shape, vth, jnp.float32),
+        jnp.full(shape, _D.mu_cox * _D.w_over_l, jnp.float32),
+        jnp.full(shape, bit, jnp.float32),
+        _C.t_sample, _C.n_steps,
+    )
+    np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-6)
+
+
+def test_zero_wl_no_discharge():
+    """WL at 0 V (code 0): VGS = 0 << VTH -> only femtoscale subthreshold."""
+    shape = (4, 4)
+    k, _ = run_pair(
+        jnp.zeros(shape, jnp.float32),
+        jnp.full(shape, 0.3, jnp.float32),
+        jnp.full(shape, 540e-6, jnp.float32),
+        jnp.ones(shape, jnp.float32),
+        _C.t_sample, _C.n_steps,
+    )
+    assert np.all(k > _D.vdd - 1e-3)
+
+
+def test_stored_zero_blocks_path():
+    """bit = 0 leaves only k_leak-scaled leakage: ~1e4x less discharge."""
+    shape = (2, 4)
+    args = (
+        jnp.full(shape, 0.7, jnp.float32),
+        jnp.full(shape, 0.3, jnp.float32),
+        jnp.full(shape, 540e-6, jnp.float32),
+    )
+    on, _ = run_pair(*args, jnp.ones(shape, jnp.float32), _C.t_sample, _C.n_steps)
+    off, _ = run_pair(*args, jnp.zeros(shape, jnp.float32), _C.t_sample, _C.n_steps)
+    dv_on = _D.vdd - on
+    dv_off = _D.vdd - off
+    assert np.all(dv_off < dv_on * 1e-2)
+    assert np.all(dv_off >= 0.0)
+
+
+def test_discharge_monotonic_in_vwl():
+    """Higher WL voltage -> strictly more discharge (saturation region)."""
+    vwls = np.linspace(0.35, 0.7, 12)
+    shape = (1, 4)
+    dvs = []
+    for v in vwls:
+        k, _ = run_pair(
+            jnp.full(shape, v, jnp.float32),
+            jnp.full(shape, 0.3, jnp.float32),
+            jnp.full(shape, 540e-6, jnp.float32),
+            jnp.ones(shape, jnp.float32),
+            _C.t_sample, _C.n_steps,
+        )
+        dvs.append(_D.vdd - float(k[0, 0]))
+    assert np.all(np.diff(dvs) > 0)
+
+
+def test_body_bias_accelerates_discharge():
+    """Fig. 5/6: suppressed VTH (body bias) -> faster BLB discharge."""
+    shape = (1, 4)
+    common = (
+        jnp.full(shape, 0.55, jnp.float32),
+        jnp.full(shape, 540e-6, jnp.float32),
+        jnp.ones(shape, jnp.float32),
+    )
+    base, _ = run_pair(common[0] * 0 + 0.55, jnp.full(shape, 0.300, jnp.float32),
+                       common[1], common[2], _C.t_sample, _C.n_steps)
+    smart, _ = run_pair(common[0] * 0 + 0.55, jnp.full(shape, 0.175, jnp.float32),
+                        common[1], common[2], _C.t_sample, _C.n_steps)
+    assert np.all(smart < base - 0.02)
+
+
+def test_voltage_never_negative():
+    """Even absurdly long pulses clamp at 0 V, never undershoot."""
+    shape = (3, 4)
+    k, r = run_pair(
+        jnp.full(shape, 0.7, jnp.float32),
+        jnp.full(shape, 0.15, jnp.float32),
+        jnp.full(shape, 5e-3, jnp.float32),
+        jnp.ones(shape, jnp.float32),
+        50e-9, 128,
+    )
+    assert np.all(k >= 0.0) and np.all(r >= 0.0)
+    np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-6)
+
+
+def test_tile_padding_roundtrip():
+    """Batch sizes straddling the TILE boundary agree with an unpadded run."""
+    rng = np.random.default_rng(7)
+    big = 130  # 128 + 2 -> exercises the pad/unpad path
+    vwl = jnp.asarray(rng.uniform(0.3, 0.7, (big, 4)), jnp.float32)
+    vth = jnp.asarray(rng.uniform(0.15, 0.35, (big, 4)), jnp.float32)
+    beta = jnp.full((big, 4), 540e-6, jnp.float32)
+    bits = jnp.ones((big, 4), jnp.float32)
+    full, _ = run_pair(vwl, vth, beta, bits, _C.t_sample, 64)
+    head, _ = run_pair(vwl[:64], vth[:64], beta[:64], bits[:64], _C.t_sample, 64)
+    np.testing.assert_allclose(full[:64], head, rtol=1e-6, atol=1e-7)
+
+
+def test_dtype_is_f32():
+    out = dk.discharge(
+        jnp.ones((2, 4)), jnp.full((2, 4), 0.3), jnp.full((2, 4), 5e-4),
+        jnp.ones((2, 4)), jnp.float32(1e-12 / 30e-15), jnp.float32(1.0),
+        n_steps=8,
+    )
+    assert out.dtype == jnp.float32
+
+
+def test_trace_ref_endpoint_matches_discharge_ref():
+    """The last trace sample equals the single-shot integration."""
+    rng = np.random.default_rng(3)
+    shape = (5, 4)
+    vwl = jnp.asarray(rng.uniform(0.3, 0.7, shape), jnp.float32)
+    vth = jnp.asarray(rng.uniform(0.15, 0.35, shape), jnp.float32)
+    beta = jnp.full(shape, 540e-6, jnp.float32)
+    bits = jnp.asarray(rng.integers(0, 2, shape), jnp.float32)
+    dt = _C.t_sample / 64
+    tr = ref.discharge_trace_ref(vwl, vth, beta, bits, dt=dt, n_steps=64, stride=8)
+    end = ref.discharge_ref(vwl, vth, beta, bits, dt=dt, n_steps=64)
+    np.testing.assert_allclose(np.asarray(tr)[-1], np.asarray(end), rtol=1e-6)
+    assert tr.shape == (8, 5, 4)
+    # traces are monotonically non-increasing in time
+    assert np.all(np.diff(np.asarray(tr), axis=0) <= 1e-7)

@@ -1,0 +1,198 @@
+"""L2 model invariants: DAC coding, body effect, MAC semantics, energy."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.params import DEFAULT, delta_vth_body
+
+_D = DEFAULT.device
+_C = DEFAULT.circuit
+F32 = jnp.float32
+
+
+def run(a: int, b: int, v_bulk=0.0, dac_mode=1.0, batch=1, dvth=None, dbeta=None,
+        t_sample=_C.t_sample):
+    bits = jnp.asarray(
+        np.tile([(a >> 3) & 1, (a >> 2) & 1, (a >> 1) & 1, a & 1], (batch, 1)),
+        F32,
+    )
+    code = jnp.full((batch,), float(b), F32)
+    z = jnp.zeros((batch, 4), F32)
+    return model.mac_forward(
+        bits, code, F32(v_bulk), F32(dac_mode), F32(t_sample),
+        z if dvth is None else dvth, z if dbeta is None else dbeta,
+    )
+
+
+# ---------------------------------------------------------------- DAC / Eq. 6-8
+
+
+def test_vth_effective_matches_eq6():
+    for vb in (0.0, 0.2, 0.4, 0.6):
+        got = float(model.vth_effective(F32(vb), jnp.zeros(())))
+        want = _D.vth0 + delta_vth_body(_D.gamma, _D.phi2f, vb)
+        assert abs(got - want) < 1e-6
+
+
+def test_body_bias_shift_is_125mv():
+    """Fig. 3 calibration: dVTH(V_bulk = 0.6 V) ~= -125 mV."""
+    shift = float(model.vth_effective(F32(0.6), jnp.zeros(()))) - _D.vth0
+    assert -0.130 < shift < -0.120
+
+
+def test_dac_linear_levels_equispaced():
+    vth = jnp.zeros(()) + 0.3
+    lv = [float(model.dac_vwl(F32(c), vth, F32(0.0))) for c in range(1, 16)]
+    steps = np.diff(lv)
+    np.testing.assert_allclose(steps, steps[0], rtol=1e-5)
+    assert abs(lv[-1] - _C.wl_max) < 1e-6
+
+
+def test_dac_sqrt_linearizes_current():
+    """Eq. 8: with sqrt coding, (VWL - VTH)^2 is proportional to the code."""
+    vth = jnp.zeros(()) + 0.3
+    for c in range(1, 16):
+        vwl = float(model.dac_vwl(F32(c), vth, F32(1.0)))
+        lhs = (vwl - 0.3) ** 2
+        rhs = (c / 15.0) * (_C.wl_max - 0.3) ** 2
+        assert abs(lhs - rhs) < 1e-6
+
+
+def test_dac_zero_code_grounds_wl():
+    vth = jnp.zeros(()) + 0.3
+    for mode in (0.0, 1.0):
+        assert float(model.dac_vwl(F32(0.0), vth, F32(mode))) == 0.0
+
+
+def test_dac_range_widens_with_body_bias():
+    """Paper §III: margin [300, 700] mV -> [175, 700] mV under 0.6 V bias."""
+    lo_base = float(model.vth_effective(F32(0.0), jnp.zeros(())))
+    lo_smart = float(model.vth_effective(F32(0.6), jnp.zeros(())))
+    assert abs(lo_base - 0.300) < 1e-3
+    assert abs(lo_smart - 0.175) < 2e-3
+    assert (_C.wl_max - lo_smart) > (_C.wl_max - lo_base)
+
+
+# ---------------------------------------------------------------- MAC semantics
+
+
+def test_zero_operand_zero_output():
+    for a, b in [(0, 9), (11, 0), (0, 0)]:
+        vm, _, _, fault = run(a, b)
+        assert abs(float(vm[0])) < 2e-3
+        assert float(fault[0]) == 0.0
+
+
+def test_output_monotone_in_both_operands():
+    vm_grid = np.array(
+        [[float(run(a, b)[0][0]) for b in range(16)] for a in range(16)]
+    )
+    # monotone (non-strict at 0) along both axes
+    assert np.all(np.diff(vm_grid, axis=0) >= -1e-6)
+    assert np.all(np.diff(vm_grid, axis=1) >= -1e-6)
+    # strictly increasing along the max row/col
+    assert np.all(np.diff(vm_grid[15, 1:]) > 0)
+    assert np.all(np.diff(vm_grid[1:, 15]) > 0)
+
+
+def test_binary_weighting_of_stored_bits():
+    """With sqrt coding (current linear in code), the stored-operand weighting
+    is exactly binary: v_mult(A) proportional to A at fixed B."""
+    vms = np.array([float(run(a, 15)[0][0]) for a in range(16)])
+    ratio = vms[1:] / vms[15]
+    np.testing.assert_allclose(ratio, np.arange(1, 16) / 15.0, rtol=5e-3)
+
+
+def test_sqrt_coding_linear_in_b_code():
+    vms = np.array([float(run(15, b, dac_mode=1.0)[0][0]) for b in range(16)])
+    ideal = vms[15] * np.arange(16) / 15.0
+    np.testing.assert_allclose(vms, ideal, atol=0.015 * vms[15])
+
+
+def test_linear_coding_quadratic_in_b_code():
+    """IMAC's Eq. 7 coding makes the discharge ~quadratic in the code — the
+    systematic nonlinearity that dominates its error (Table 1: sigma 0.6)."""
+    vms = np.array([float(run(15, b, dac_mode=0.0)[0][0]) for b in range(16)])
+    lin_err = np.abs(vms - vms[15] * np.arange(16) / 15.0).max()
+    quad = vms[15] * (np.arange(16) / 15.0) ** 2
+    quad_err = np.abs(vms - quad).max()
+    assert quad_err < lin_err * 0.35
+
+
+def test_smart_enlarges_signal_at_same_timing():
+    """Same WL timing, body bias on -> faster discharge -> larger full-scale."""
+    base = float(run(15, 15, v_bulk=0.0)[0][0])
+    smart = float(run(15, 15, v_bulk=0.6)[0][0])
+    assert smart > base * 1.3
+
+
+def test_no_fault_at_design_timing():
+    """At the calibrated t_sample every nominal code stays in saturation."""
+    for vb in (0.0, 0.6):
+        for b in range(16):
+            _, _, _, fault = run(15, b, v_bulk=vb)
+            assert float(fault[0]) == 0.0, (vb, b)
+
+
+def test_fault_flag_raises_on_overlong_pulse():
+    _, _, _, fault = run(15, 15, v_bulk=0.6, t_sample=2e-9)
+    assert float(fault[0]) == 1.0
+
+
+def test_energy_scales_with_discharge():
+    _, _, e_small, _ = run(1, 3)
+    _, _, e_big, _ = run(15, 15)
+    assert float(e_big[0]) > float(e_small[0]) * 5
+
+
+def test_energy_matches_cv_dv():
+    _, vblb, energy, _ = run(15, 15)
+    dv = _D.vdd - np.asarray(vblb)
+    want = _C.c_blb * _D.vdd * dv.sum()
+    assert abs(float(energy[0]) - want) < 1e-18
+
+
+# ---------------------------------------------------------------- MC behaviour
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=10, derandomize=True)
+def test_mismatch_spreads_output(seed):
+    rng = np.random.default_rng(seed)
+    batch = 64
+    dvth = jnp.asarray(rng.normal(0, _C.sigma_vth, (batch, 4)), F32)
+    dbeta = jnp.asarray(rng.normal(0, _C.sigma_beta, (batch, 4)), F32)
+    vm, _, _, _ = run(15, 15, batch=batch, dvth=dvth, dbeta=dbeta)
+    vm = np.asarray(vm)
+    assert vm.std() > 1e-4          # mismatch spreads
+    assert vm.std() < 0.15 * vm.mean()  # but stays a perturbation
+
+
+def test_smart_reduces_relative_spread():
+    """The headline claim: body bias -> lower normalized MC sigma (Fig. 8)."""
+    rng = np.random.default_rng(42)
+    batch = 256
+    dvth = jnp.asarray(rng.normal(0, _C.sigma_vth, (batch, 4)), F32)
+    dbeta = jnp.asarray(rng.normal(0, _C.sigma_beta, (batch, 4)), F32)
+    spreads = {}
+    for name, vb in [("base", 0.0), ("smart", 0.6)]:
+        vm, _, _, _ = run(15, 15, v_bulk=vb, batch=batch, dvth=dvth, dbeta=dbeta)
+        vm = np.asarray(vm)
+        spreads[name] = vm.std() / vm.mean()
+    assert spreads["smart"] < spreads["base"] * 0.85
+
+
+def test_trace_shape_and_monotonicity():
+    bits = jnp.ones((2, 4), F32)
+    code = jnp.full((2,), 15.0, F32)
+    z = jnp.zeros((2, 4), F32)
+    (tr,) = model.mac_trace(
+        bits, code, F32(0.0), F32(1.0), F32(1e-9), z, z, n_points=32
+    )
+    tr = np.asarray(tr)
+    assert tr.shape == (32, 2, 4)
+    assert np.all(np.diff(tr, axis=0) <= 1e-7)

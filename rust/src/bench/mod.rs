@@ -1,0 +1,148 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! `harness = false` benches link this: warmup + timed samples, robust
+//! summary (median, mean, sigma, min), and a `Runner` that prints rows in
+//! a criterion-like format. Wall-clock timing via `Instant`.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary over the measured samples.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub samples: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Summary {
+    fn from_samples(mut xs: Vec<Duration>) -> Self {
+        assert!(!xs.is_empty());
+        xs.sort();
+        let n = xs.len();
+        let sum: Duration = xs.iter().sum();
+        let mean = sum / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = xs
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        Self {
+            samples: n,
+            mean,
+            median: xs[n / 2],
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+            min: xs[0],
+            max: xs[n - 1],
+        }
+    }
+
+    /// Throughput given the number of items processed per iteration.
+    pub fn per_second(&self, items: u64) -> f64 {
+        items as f64 / self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark runner: fixed warmup iterations then timed samples.
+pub struct Runner {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self { warmup: 2, samples: 10 }
+    }
+}
+
+impl Runner {
+    pub fn quick() -> Self {
+        Self { warmup: 1, samples: 5 }
+    }
+
+    /// Time `f` and print a criterion-style row. The closure's return
+    /// value is passed through a black box so work is not optimized away.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Summary {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut xs = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            xs.push(t0.elapsed());
+        }
+        let s = Summary::from_samples(xs);
+        println!(
+            "{name:<44} time: [{:>10.3?} {:>10.3?} {:>10.3?}]  sigma {:.3?}",
+            s.min, s.median, s.max, s.std_dev
+        );
+        s
+    }
+}
+
+/// Format a number with engineering suffixes for report tables.
+pub fn eng(x: f64) -> String {
+    let ax = x.abs();
+    let (scale, suffix) = if ax >= 1e9 {
+        (1e-9, "G")
+    } else if ax >= 1e6 {
+        (1e-6, "M")
+    } else if ax >= 1e3 {
+        (1e-3, "k")
+    } else if ax >= 1.0 || x == 0.0 {
+        (1.0, "")
+    } else if ax >= 1e-3 {
+        (1e3, "m")
+    } else if ax >= 1e-6 {
+        (1e6, "u")
+    } else if ax >= 1e-9 {
+        (1e9, "n")
+    } else if ax >= 1e-12 {
+        (1e12, "p")
+    } else {
+        (1e15, "f")
+    };
+    format!("{:.3}{suffix}", x * scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_orders_and_averages() {
+        let s = Summary::from_samples(vec![
+            Duration::from_millis(1),
+            Duration::from_millis(3),
+            Duration::from_millis(2),
+        ]);
+        assert_eq!(s.samples, 3);
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.max, Duration::from_millis(3));
+        assert_eq!(s.median, Duration::from_millis(2));
+        assert_eq!(s.mean, Duration::from_millis(2));
+    }
+
+    #[test]
+    fn runner_executes_expected_iterations() {
+        let mut count = 0;
+        let r = Runner { warmup: 3, samples: 7 };
+        let s = r.bench("test", || count += 1);
+        assert_eq!(count, 10);
+        assert_eq!(s.samples, 7);
+        assert!(s.per_second(100) > 0.0);
+    }
+
+    #[test]
+    fn eng_suffixes() {
+        assert_eq!(eng(0.783e-12), "783.000f");
+        assert_eq!(eng(1.5e-12), "1.500p");
+        assert_eq!(eng(250e6), "250.000M");
+        assert_eq!(eng(1.5), "1.500");
+        assert_eq!(eng(30e-15), "30.000f");
+    }
+}

@@ -1,0 +1,208 @@
+//! BLB discharge driver: the native-Rust twin of the Pallas kernel.
+
+use super::integrator::{integrate_fixed, Method};
+use super::waveform::Waveform;
+use crate::device::Mosfet;
+use crate::params::Params;
+
+/// Bias/state inputs for one cell's discharge transient.
+#[derive(Debug, Clone, Copy)]
+pub struct BitlineInputs {
+    /// Word-line (gate) voltage from the DAC (V).
+    pub v_wl: f64,
+    /// Stored bit: `true` opens the M2acc->M3 path (Q = VDD, Qbar = 0).
+    pub bit: bool,
+    /// Forward body bias on the access transistor (V).
+    pub v_bulk: f64,
+}
+
+/// Integrate one cell's BLB discharge for `t_total` seconds in `n_steps`
+/// forward-Euler steps (the AOT kernel's scheme) and return V_BLB(t_total).
+///
+/// Hot path of the native oracle: all time-invariant device quantities
+/// (overdrive, effective beta, leak gate) are hoisted out of the loop and
+/// the strong-inversion branch is inlined — bit-identical to
+/// [`Mosfet::drain_current_vov`], ~6x faster than the closure-per-step
+/// form (§Perf).
+pub fn discharge(p: &Params, dev: &Mosfet, inp: &BitlineInputs, t_total: f64, n_steps: u32) -> f64 {
+    let dt = t_total / n_steps as f64;
+    let vov = inp.v_wl - dev.vth(inp.v_bulk);
+    let gate = if inp.bit { 1.0 } else { dev.card.k_leak };
+    let c = p.circuit.c_blb;
+    let card = &dev.card;
+    let beta = dev.beta();
+    let vt = card.vt_thermal;
+    let lam = card.lam;
+    let dt_c = dt / c;
+    let mut v = card.vdd;
+    if vov >= 3.0 * vt {
+        // strong inversion: square law only (see drain_current_vov proof)
+        let half_bv2 = 0.5 * beta * vov * vov;
+        for _ in 0..n_steps {
+            let clm = 1.0 + lam * v;
+            let i = if v >= vov { half_bv2 * clm } else { beta * (vov - 0.5 * v) * v * clm };
+            v = (v - i.max(0.0) * gate * dt_c).max(0.0);
+        }
+    } else {
+        for _ in 0..n_steps {
+            v = (v - dev.drain_current_vov(vov, v) * gate * dt_c).max(0.0);
+        }
+    }
+    v
+}
+
+/// Integrate a whole 4-cell word in one interleaved loop.
+///
+/// The per-cell recurrences are independent, so stepping all four lanes
+/// per iteration hides the serial FP latency chain that bounds
+/// [`discharge`] (~2x on this host, §Perf). Falls back to the scalar path
+/// unless every lane is in strong inversion (vov >= 3*vt), where the
+/// square-law-only loop applies; per-lane arithmetic order matches
+/// [`discharge`] exactly, so results are bit-identical.
+pub fn discharge_word(
+    p: &Params,
+    devs: &[Mosfet; 4],
+    inps: &[BitlineInputs; 4],
+    t_total: f64,
+    n_steps: u32,
+) -> [f64; 4] {
+    let vt = devs[0].card.vt_thermal;
+    let mut vov = [0.0f64; 4];
+    let mut beta = [0.0f64; 4];
+    let mut gate = [0.0f64; 4];
+    for k in 0..4 {
+        vov[k] = inps[k].v_wl - devs[k].vth(inps[k].v_bulk);
+        beta[k] = devs[k].beta();
+        gate[k] = if inps[k].bit { 1.0 } else { devs[k].card.k_leak };
+    }
+    if vov.iter().any(|&x| x < 3.0 * vt) {
+        // mixed-region word: scalar per-cell path (exp-bearing lanes)
+        let mut out = [0.0f64; 4];
+        for k in 0..4 {
+            out[k] = discharge(p, &devs[k], &inps[k], t_total, n_steps);
+        }
+        return out;
+    }
+    let dt_c = (t_total / n_steps as f64) / p.circuit.c_blb;
+    let lam = devs[0].card.lam;
+    let mut half_bv2 = [0.0f64; 4];
+    for k in 0..4 {
+        half_bv2[k] = 0.5 * beta[k] * vov[k] * vov[k];
+    }
+    let mut v = [devs[0].card.vdd; 4];
+    for _ in 0..n_steps {
+        for k in 0..4 {
+            let clm = 1.0 + lam * v[k];
+            let i = if v[k] >= vov[k] {
+                half_bv2[k] * clm
+            } else {
+                beta[k] * (vov[k] - 0.5 * v[k]) * v[k] * clm
+            };
+            v[k] = (v[k] - i.max(0.0) * gate[k] * dt_c).max(0.0);
+        }
+    }
+    v
+}
+
+/// Same transient, but record the waveform at every `stride` steps
+/// (Fig. 5/6). The final sample equals [`discharge`]'s return value.
+pub fn discharge_trace(
+    p: &Params,
+    dev: &Mosfet,
+    inp: &BitlineInputs,
+    t_total: f64,
+    n_steps: u32,
+    stride: u32,
+) -> Waveform {
+    assert!(stride > 0 && n_steps % stride == 0, "stride must divide n_steps");
+    let dt = t_total / n_steps as f64;
+    let vov = inp.v_wl - dev.vth(inp.v_bulk);
+    let gate = if inp.bit { 1.0 } else { dev.card.k_leak };
+    // same term grouping as `discharge` so the endpoint is bit-identical
+    let dt_c = dt / p.circuit.c_blb;
+
+    let mut wf = Waveform::with_capacity((n_steps / stride) as usize + 1);
+    let mut v = dev.card.vdd;
+    wf.push(0.0, v);
+    for k in 1..=n_steps {
+        v = (v - dev.drain_current_vov(vov, v) * gate * dt_c).max(0.0);
+        if k % stride == 0 {
+            wf.push(k as f64 * dt, v);
+        }
+    }
+    wf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::Params;
+
+    fn setup() -> (Params, Mosfet) {
+        let p = Params::default();
+        (p, Mosfet::nominal(p.device))
+    }
+
+    fn inputs(v_wl: f64, bit: bool, v_bulk: f64) -> BitlineInputs {
+        BitlineInputs { v_wl, bit, v_bulk }
+    }
+
+    #[test]
+    fn stored_zero_barely_discharges() {
+        let (p, dev) = setup();
+        let v = discharge(&p, &dev, &inputs(0.7, false, 0.0), p.circuit.t_sample, 256);
+        assert!(v > p.device.vdd - 1e-3);
+    }
+
+    #[test]
+    fn stored_one_discharges() {
+        let (p, dev) = setup();
+        let v = discharge(&p, &dev, &inputs(0.7, true, 0.0), p.circuit.t_sample, 256);
+        assert!(v < p.device.vdd - 0.1);
+    }
+
+    #[test]
+    fn body_bias_accelerates_discharge() {
+        let (p, dev) = setup();
+        let base = discharge(&p, &dev, &inputs(0.55, true, 0.0), p.circuit.t_sample, 256);
+        let smart = discharge(&p, &dev, &inputs(0.55, true, 0.6), p.circuit.t_sample, 256);
+        assert!(smart < base - 0.02, "base={base} smart={smart}");
+    }
+
+    #[test]
+    fn trace_endpoint_matches_single_shot() {
+        let (p, dev) = setup();
+        let inp = inputs(0.6, true, 0.3);
+        let wf = discharge_trace(&p, &dev, &inp, p.circuit.t_sample, 256, 8);
+        let end = discharge(&p, &dev, &inp, p.circuit.t_sample, 256);
+        assert!((wf.values().last().unwrap() - end).abs() < 1e-12);
+        assert_eq!(wf.len(), 33); // t=0 plus 256/8 samples
+    }
+
+    #[test]
+    fn trace_monotone_nonincreasing() {
+        let (p, dev) = setup();
+        let wf = discharge_trace(&p, &dev, &inputs(0.65, true, 0.0), 1e-9, 512, 4);
+        for w in wf.values().windows(2) {
+            assert!(w[1] <= w[0] + 1e-15);
+        }
+    }
+
+    #[test]
+    fn euler_discretization_error_is_bounded() {
+        // The fixed-step Euler at n_steps=256 must sit within 2 mV of a
+        // tight adaptive-RK4 run — validates the AOT kernel's step count.
+        use crate::circuit::integrator::integrate_adaptive;
+        let (p, dev) = setup();
+        let inp = inputs(0.7, true, 0.6); // fastest discharge = worst case
+        let vov = inp.v_wl - dev.vth(inp.v_bulk);
+        let c = p.circuit.c_blb;
+        let f = |v: f64| -dev.drain_current_vov(vov, v) / c;
+        let euler = discharge(&p, &dev, &inp, p.circuit.t_sample, p.circuit.n_steps);
+        let (exact, _) = integrate_adaptive(p.device.vdd, p.circuit.t_sample, 1e-7, f);
+        assert!(
+            (euler - exact).abs() < 2e-3,
+            "euler={euler} adaptive={exact}"
+        );
+    }
+}

@@ -1,0 +1,113 @@
+//! ODE integrators for the single-node discharge equation dV/dt = f(V).
+
+/// Integration scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Forward Euler with state clamped at 0 V — EXACTLY the scheme the
+    /// AOT-compiled Pallas kernel uses, so native and HLO paths agree to
+    /// f32 rounding.
+    Euler,
+    /// Classic RK4 (used to bound the Euler discretization error).
+    Rk4,
+}
+
+/// Integrate `dv/dt = f(v)` from `v0` over `n_steps` of `dt`, clamping the
+/// state at 0 (the bitline cannot undershoot ground).
+pub fn integrate_fixed(v0: f64, dt: f64, n_steps: u32, method: Method, f: impl Fn(f64) -> f64) -> f64 {
+    let mut v = v0;
+    for _ in 0..n_steps {
+        v = step(v, dt, method, &f);
+    }
+    v
+}
+
+#[inline]
+fn step(v: f64, dt: f64, method: Method, f: &impl Fn(f64) -> f64) -> f64 {
+    let next = match method {
+        Method::Euler => v + dt * f(v),
+        Method::Rk4 => {
+            let k1 = f(v);
+            let k2 = f((v + 0.5 * dt * k1).max(0.0));
+            let k3 = f((v + 0.5 * dt * k2).max(0.0));
+            let k4 = f((v + dt * k3).max(0.0));
+            v + dt / 6.0 * (k1 + 2.0 * k2 + 2.0 * k3 + k4)
+        }
+    };
+    next.max(0.0)
+}
+
+/// Step-doubling adaptive RK4: integrate to `t_end` keeping the local
+/// error per step under `tol` volts. Returns `(v_end, steps_taken)`.
+pub fn integrate_adaptive(
+    v0: f64,
+    t_end: f64,
+    tol: f64,
+    f: impl Fn(f64) -> f64,
+) -> (f64, u32) {
+    let mut v = v0;
+    let mut t = 0.0;
+    let mut dt = t_end / 64.0;
+    let mut steps = 0u32;
+    while t < t_end {
+        if t + dt > t_end {
+            dt = t_end - t;
+        }
+        let full = step(v, dt, Method::Rk4, &f);
+        let half = step(step(v, dt * 0.5, Method::Rk4, &f), dt * 0.5, Method::Rk4, &f);
+        let err = (full - half).abs();
+        if err <= tol || dt <= t_end * 1e-6 {
+            v = half;
+            t += dt;
+            steps += 1;
+            if err < tol * 0.25 {
+                dt *= 1.5;
+            }
+        } else {
+            dt *= 0.5;
+        }
+    }
+    (v, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Linear RC discharge: dv/dt = -v/tau has the closed form v0*exp(-t/tau).
+    fn rc(v: f64) -> f64 {
+        -v / 1e-9
+    }
+
+    #[test]
+    fn euler_converges_to_exponential() {
+        let v = integrate_fixed(1.0, 1e-9 / 4096.0, 4096, Method::Euler, rc);
+        assert!((v - (-1.0f64).exp()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rk4_much_tighter_than_euler() {
+        let exact = (-1.0f64).exp();
+        let e = integrate_fixed(1.0, 1e-9 / 64.0, 64, Method::Euler, rc);
+        let r = integrate_fixed(1.0, 1e-9 / 64.0, 64, Method::Rk4, rc);
+        assert!((r - exact).abs() < (e - exact).abs() / 100.0);
+    }
+
+    #[test]
+    fn state_clamps_at_zero() {
+        let v = integrate_fixed(0.1, 1e-9, 100, Method::Euler, |_| -1e12);
+        assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn adaptive_matches_fixed_rk4() {
+        let (va, steps) = integrate_adaptive(1.0, 1e-9, 1e-9, rc);
+        let vf = integrate_fixed(1.0, 1e-9 / 1024.0, 1024, Method::Rk4, rc);
+        assert!((va - vf).abs() < 1e-6, "adaptive={va} fixed={vf}");
+        assert!(steps < 1024, "adaptive should need far fewer steps");
+    }
+
+    #[test]
+    fn zero_steps_is_identity() {
+        assert_eq!(integrate_fixed(0.7, 1e-12, 0, Method::Euler, rc), 0.7);
+    }
+}

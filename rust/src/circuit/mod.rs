@@ -1,0 +1,16 @@
+//! Transient circuit simulation substrate.
+//!
+//! The paper's evaluation rides on one ODE — the bitline discharge of
+//! Eq. 1/3: `C_blb * dV/dt = -I_D(V)`. This module provides the
+//! integrators (forward Euler matching the AOT kernel step-for-step, plus
+//! RK4 and an adaptive-step integrator for convergence checks), the
+//! bitline discharge driver, and a waveform container for the Fig. 5/6
+//! traces.
+
+mod bitline;
+mod integrator;
+mod waveform;
+
+pub use bitline::{discharge, discharge_trace, discharge_word, BitlineInputs};
+pub use integrator::{integrate_adaptive, integrate_fixed, Method};
+pub use waveform::Waveform;

@@ -1,0 +1,105 @@
+//! Time-series container for transient traces (Fig. 5/6).
+
+/// A sampled waveform: strictly increasing time points with values.
+#[derive(Debug, Clone, Default)]
+pub struct Waveform {
+    t: Vec<f64>,
+    v: Vec<f64>,
+}
+
+impl Waveform {
+    pub fn with_capacity(n: usize) -> Self {
+        Self { t: Vec::with_capacity(n), v: Vec::with_capacity(n) }
+    }
+
+    /// Append a sample; `t` must be strictly after the previous sample.
+    pub fn push(&mut self, t: f64, v: f64) {
+        debug_assert!(self.t.last().is_none_or(|&last| t > last));
+        self.t.push(t);
+        self.v.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    pub fn times(&self) -> &[f64] {
+        &self.t
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.v
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (f64, f64)> + '_ {
+        self.t.iter().copied().zip(self.v.iter().copied())
+    }
+
+    /// Linear interpolation at time `t` (clamped to the waveform's span).
+    pub fn sample(&self, t: f64) -> f64 {
+        assert!(!self.is_empty());
+        if t <= self.t[0] {
+            return self.v[0];
+        }
+        if t >= *self.t.last().unwrap() {
+            return *self.v.last().unwrap();
+        }
+        let idx = self.t.partition_point(|&x| x < t);
+        let (t0, t1) = (self.t[idx - 1], self.t[idx]);
+        let (v0, v1) = (self.v[idx - 1], self.v[idx]);
+        v0 + (v1 - v0) * (t - t0) / (t1 - t0)
+    }
+
+    /// First time the waveform crosses below `level`, by linear
+    /// interpolation; `None` if it never does.
+    pub fn crossing_time(&self, level: f64) -> Option<f64> {
+        for i in 1..self.len() {
+            if self.v[i - 1] >= level && self.v[i] < level {
+                let frac = (self.v[i - 1] - level) / (self.v[i - 1] - self.v[i]);
+                return Some(self.t[i - 1] + frac * (self.t[i] - self.t[i - 1]));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp() -> Waveform {
+        let mut w = Waveform::default();
+        for k in 0..=10 {
+            w.push(k as f64, 1.0 - 0.1 * k as f64);
+        }
+        w
+    }
+
+    #[test]
+    fn sample_interpolates() {
+        let w = ramp();
+        assert!((w.sample(2.5) - 0.75).abs() < 1e-12);
+        assert_eq!(w.sample(-1.0), 1.0);
+        assert!((w.sample(99.0) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crossing_time_interpolates() {
+        let w = ramp();
+        let t = w.crossing_time(0.55).unwrap();
+        assert!((t - 4.5).abs() < 1e-12);
+        assert_eq!(w.crossing_time(-0.5), None);
+    }
+
+    #[test]
+    fn iter_matches_push_order() {
+        let w = ramp();
+        assert_eq!(w.len(), 11);
+        let first = w.iter().next().unwrap();
+        assert_eq!(first, (0.0, 1.0));
+    }
+}

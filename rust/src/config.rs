@@ -1,0 +1,123 @@
+//! TOML-lite experiment configuration: a campaign file a user can check in.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::CampaignSpec;
+use crate::params::Params;
+use crate::util::{json::Value, toml_lite};
+
+/// A checked-in experiment: model-card overrides plus one or more campaigns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Optional human label for reports.
+    pub name: String,
+    /// Model card (defaults + any `[params.*]` overrides).
+    pub params: Params,
+    /// Campaigns to run, in order.
+    pub campaigns: Vec<CampaignSpec>,
+}
+
+impl ExperimentConfig {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = toml_lite::parse(text).map_err(|e| anyhow::anyhow!("experiment TOML: {e}"))?;
+        let name = doc
+            .get("name")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string();
+        let mut params = Params::default();
+        if let Some(p) = doc.get("params") {
+            params.apply_overrides(p).context("[params] overrides")?;
+        }
+        let mut campaigns = Vec::new();
+        let arr = doc
+            .get("campaigns")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("no [[campaigns]] in config"))?;
+        for (i, c) in arr.iter().enumerate() {
+            campaigns.push(
+                CampaignSpec::from_value(c).with_context(|| format!("campaign #{i}"))?,
+            );
+        }
+        Ok(Self { name, params, campaigns })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Workload;
+    use crate::mac::Variant;
+
+    const EXAMPLE: &str = r#"
+        name = "fig8"
+        [[campaigns]]
+        variant = "smart"
+        n_mc = 1000
+        seed = 2022
+        [campaigns.workload]
+        kind = "fixed"
+        a = 15
+        b = 15
+    "#;
+
+    #[test]
+    fn parses_minimal_campaign() {
+        let cfg = ExperimentConfig::parse(EXAMPLE).unwrap();
+        assert_eq!(cfg.name, "fig8");
+        assert_eq!(cfg.campaigns.len(), 1);
+        let c = &cfg.campaigns[0];
+        assert_eq!(c.variant, Variant::Smart);
+        assert_eq!(c.workload, Workload::Fixed { a: 15, b: 15 });
+        assert_eq!(c.n_mc, 1000);
+        assert_eq!(c.workers, 0);
+        assert_eq!(c.batch, 0);
+        assert_eq!(cfg.params, Params::default());
+    }
+
+    #[test]
+    fn rejects_invalid_campaign() {
+        let bad = EXAMPLE.replace("a = 15", "a = 99");
+        assert!(ExperimentConfig::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_config() {
+        assert!(ExperimentConfig::parse("name = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn params_override() {
+        let text = format!("{EXAMPLE}\n[params.circuit]\nc_blb = 45e-15\n");
+        let cfg = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(cfg.params.circuit.c_blb, 45e-15);
+        assert_eq!(cfg.params.circuit.wl_max, 0.70); // untouched default
+    }
+
+    #[test]
+    fn multi_campaign_order_preserved() {
+        let text = r#"
+            [[campaigns]]
+            variant = "aid"
+            [campaigns.workload]
+            kind = "full_sweep"
+            [[campaigns]]
+            variant = "imac"
+            [campaigns.workload]
+            kind = "random"
+            n_ops = 10
+        "#;
+        let cfg = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(cfg.campaigns[0].variant, Variant::Aid);
+        assert_eq!(cfg.campaigns[1].variant, Variant::Imac);
+        assert_eq!(cfg.campaigns[1].workload, Workload::Random { n_ops: 10 });
+    }
+}

@@ -1,0 +1,187 @@
+//! Aggregator: folds batch outputs into the paper's metrics.
+
+use std::collections::BTreeMap;
+
+use crate::mac::IdealTransfer;
+use crate::metrics::{AccuracyReport, ErrorAccumulator, Histogram, OnlineStats, SampleSet};
+
+use super::batcher::{PackedBatch, RowTag};
+use crate::runtime::MacBatchOut;
+
+/// Operand-pair key for per-point statistics.
+pub type OpKey = (u8, u8);
+
+/// Streaming aggregator. Padding rows are skipped; valid rows update the
+/// global accumulator, the per-operand accumulators, the V_multiplication
+/// histogram (Fig. 8/9) and the raw-energy stats.
+pub struct Aggregator {
+    ideal: IdealTransfer,
+    global: ErrorAccumulator,
+    per_op: BTreeMap<OpKey, ErrorAccumulator>,
+    vmult_hist: Histogram,
+    vmult_samples: SampleSet,
+    energy: OnlineStats,
+    rows_seen: u64,
+    batches_seen: u64,
+}
+
+impl Aggregator {
+    /// `full_scale` calibrates the ideal transfer; the histogram spans
+    /// [0, 1.25 * full_scale) so MC tails stay on-scale.
+    pub fn new(full_scale: f64, hist_bins: usize) -> Self {
+        Self {
+            ideal: IdealTransfer { full_scale },
+            global: ErrorAccumulator::new(),
+            per_op: BTreeMap::new(),
+            vmult_hist: Histogram::new(0.0, full_scale * 1.25, hist_bins),
+            vmult_samples: SampleSet::new(),
+            energy: OnlineStats::new(),
+            rows_seen: 0,
+            batches_seen: 0,
+        }
+    }
+
+    /// Fold one executed batch.
+    pub fn push_batch(&mut self, batch: &PackedBatch, out: &MacBatchOut) {
+        assert_eq!(batch.tags.len(), out.v_mult.len(), "batch/output shape mismatch");
+        self.batches_seen += 1;
+        for (row, tag) in batch.tags.iter().enumerate() {
+            let &RowTag::Item { a, b, .. } = tag else { continue };
+            let v_mult = f64::from(out.v_mult[row]);
+            let v_ideal = self.ideal.v_ideal(a, b);
+            let fault = out.fault[row] > 0.5;
+            // BER at the architecture's 4-bit output resolution (§III: the
+            // widened margin buys BER reduction at this grid).
+            let code_err = crate::mac::reconstruct4(&self.ideal, v_mult)
+                != crate::mac::exact_code4(a, b);
+            self.global.push(v_mult, v_ideal, self.ideal.full_scale, code_err, fault);
+            self.per_op
+                .entry((a, b))
+                .or_insert_with(ErrorAccumulator::new)
+                .push(v_mult, v_ideal, self.ideal.full_scale, code_err, fault);
+            self.vmult_hist.push(v_mult);
+            self.vmult_samples.push(v_mult);
+            self.energy.push(f64::from(out.energy[row]));
+            self.rows_seen += 1;
+        }
+    }
+
+    pub fn finish(self, wall: std::time::Duration) -> CampaignReport {
+        let per_op = self
+            .per_op
+            .iter()
+            .map(|(k, acc)| (*k, acc.report()))
+            .collect();
+        // 95% bootstrap CI on the raw output sigma (seeded, reproducible)
+        let sigma_ci = if self.vmult_samples.len() >= 8 {
+            Some(self.vmult_samples.bootstrap_std_ci(200, 0.95, 0xC1))
+        } else {
+            None
+        };
+        CampaignReport {
+            accuracy: self.global.report(),
+            raw_vmult: *self.global.raw_stats(),
+            sigma_ci,
+            per_op,
+            hist: self.vmult_hist,
+            energy: self.energy,
+            full_scale: self.ideal.full_scale,
+            rows: self.rows_seen,
+            batches: self.batches_seen,
+            wall,
+        }
+    }
+}
+
+/// Final campaign output.
+pub struct CampaignReport {
+    /// Global accuracy over all operands and MC samples.
+    pub accuracy: AccuracyReport,
+    /// Raw V_multiplication stats (mean/sigma in volts — Fig. 8/9 axes).
+    pub raw_vmult: OnlineStats,
+    /// 95% bootstrap CI on the raw sigma (None below 8 samples).
+    pub sigma_ci: Option<(f64, f64)>,
+    /// Per-operand-pair accuracy.
+    pub per_op: Vec<(OpKey, AccuracyReport)>,
+    /// V_multiplication histogram (Fig. 8/9).
+    pub hist: Histogram,
+    /// Raw bitline energy stats (J).
+    pub energy: OnlineStats,
+    pub full_scale: f64,
+    pub rows: u64,
+    pub batches: u64,
+    pub wall: std::time::Duration,
+}
+
+impl CampaignReport {
+    /// Throughput in MAC evaluations per second (wall-clock).
+    pub fn throughput(&self) -> f64 {
+        self.rows as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::{BatchCfg, Batcher};
+    use crate::montecarlo::MismatchSampler;
+    use crate::runtime::MacBatchOut;
+
+    fn fake_out(batch: &PackedBatch, v: f32) -> MacBatchOut {
+        let n = batch.tags.len();
+        MacBatchOut {
+            v_mult: vec![v; n],
+            v_blb: vec![0.8; n * 4],
+            energy: vec![1e-14; n],
+            fault: vec![0.0; n],
+        }
+    }
+
+    fn mk_batches(n_mc: u32, batch: usize) -> Vec<PackedBatch> {
+        let cfg = BatchCfg { v_bulk: 0.0, dac_mode: 1.0, t_sample: 1.7e-10 };
+        Batcher::new(vec![(15, 15)], n_mc, batch, cfg, MismatchSampler::new(0, 0.0, 0.0))
+            .collect()
+    }
+
+    #[test]
+    fn pads_excluded_from_stats() {
+        let batches = mk_batches(10, 8); // 2 batches, 6 pads
+        let mut agg = Aggregator::new(0.5, 32);
+        for b in &batches {
+            let out = fake_out(b, 0.5);
+            agg.push_batch(b, &out);
+        }
+        let r = agg.finish(std::time::Duration::from_secs(1));
+        assert_eq!(r.rows, 10);
+        assert_eq!(r.batches, 2);
+        assert_eq!(r.hist.total(), 10);
+        assert_eq!(r.accuracy.n, 10);
+    }
+
+    #[test]
+    fn exact_outputs_zero_error() {
+        let batches = mk_batches(16, 16);
+        let mut agg = Aggregator::new(0.5, 32);
+        for b in &batches {
+            let out = fake_out(b, 0.5); // exactly ideal for (15,15)
+            agg.push_batch(b, &out);
+        }
+        let r = agg.finish(std::time::Duration::from_millis(10));
+        assert!(r.accuracy.sigma_norm < 1e-9);
+        assert_eq!(r.accuracy.ber, 0.0);
+        assert_eq!(r.per_op.len(), 1);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn reconstruction_error_counts_in_ber() {
+        let batches = mk_batches(4, 4);
+        let mut agg = Aggregator::new(0.5, 32);
+        for b in &batches {
+            let out = fake_out(b, 0.45); // 202.5/225 units -> wrong product
+            agg.push_batch(b, &out);
+        }
+        let r = agg.finish(std::time::Duration::from_millis(1));
+        assert_eq!(r.accuracy.ber, 1.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Batcher: packs the (operand, MC-sample) work stream into the fixed
+//! batch shapes the AOT artifacts were compiled for.
+//!
+//! Invariants (property-tested in `tests/proptest_coordinator.rs`):
+//! * every work item appears in exactly one batch row (no drops, no dups);
+//! * padding rows are tagged invalid and never reach the aggregator;
+//! * packing is deterministic given (spec, seed).
+
+use crate::mac::VariantConfig;
+use crate::montecarlo::MismatchSampler;
+use crate::runtime::MacBatch;
+
+/// Identity of one batch row: which operand pair and which MC draw it
+/// carries, or padding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowTag {
+    Item { op_idx: u32, mc_idx: u32, a: u8, b: u8 },
+    Pad,
+}
+
+/// A fixed-size batch plus per-row identity tags.
+#[derive(Debug, Clone)]
+pub struct PackedBatch {
+    pub seq: u64,
+    pub inputs: MacBatch,
+    pub tags: Vec<RowTag>,
+}
+
+impl PackedBatch {
+    pub fn n_valid(&self) -> usize {
+        self.tags.iter().filter(|t| !matches!(t, RowTag::Pad)).count()
+    }
+}
+
+/// Streaming packer: iterates operands x MC samples in row-major order
+/// (all MC draws of operand 0, then operand 1, ...) drawing mismatch
+/// deviates from a seeded sampler so the stream is reproducible.
+pub struct Batcher {
+    operands: Vec<(u8, u8)>,
+    n_mc: u32,
+    batch_size: usize,
+    cfg: BatchCfg,
+    sampler: MismatchSampler,
+    // cursor
+    op_idx: u32,
+    mc_idx: u32,
+    seq: u64,
+}
+
+/// Scalar inputs shared by every batch of a campaign.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchCfg {
+    pub v_bulk: f32,
+    pub dac_mode: f32,
+    pub t_sample: f32,
+}
+
+impl From<&VariantConfig> for BatchCfg {
+    fn from(c: &VariantConfig) -> Self {
+        Self {
+            v_bulk: c.v_bulk as f32,
+            dac_mode: c.dac_mode.flag(),
+            t_sample: c.t_sample as f32,
+        }
+    }
+}
+
+impl Batcher {
+    pub fn new(
+        operands: Vec<(u8, u8)>,
+        n_mc: u32,
+        batch_size: usize,
+        cfg: BatchCfg,
+        sampler: MismatchSampler,
+    ) -> Self {
+        assert!(batch_size > 0, "batch_size must be positive");
+        assert!(!operands.is_empty(), "need at least one operand pair");
+        Self { operands, n_mc, batch_size, cfg, sampler, op_idx: 0, mc_idx: 0, seq: 0 }
+    }
+
+    /// Total number of batches this stream will yield.
+    pub fn n_batches(&self) -> u64 {
+        let items = self.operands.len() as u64 * u64::from(self.n_mc);
+        items.div_ceil(self.batch_size as u64)
+    }
+
+    fn next_item(&mut self) -> Option<(u32, u32, u8, u8)> {
+        if self.op_idx as usize >= self.operands.len() {
+            return None;
+        }
+        let (a, b) = self.operands[self.op_idx as usize];
+        let item = (self.op_idx, self.mc_idx, a, b);
+        self.mc_idx += 1;
+        if self.mc_idx >= self.n_mc {
+            self.mc_idx = 0;
+            self.op_idx += 1;
+        }
+        Some(item)
+    }
+}
+
+impl Iterator for Batcher {
+    type Item = PackedBatch;
+
+    fn next(&mut self) -> Option<PackedBatch> {
+        let mut inputs = MacBatch::nominal(
+            self.batch_size,
+            self.cfg.v_bulk,
+            self.cfg.dac_mode,
+            self.cfg.t_sample,
+        );
+        let mut tags = Vec::with_capacity(self.batch_size);
+        for row in 0..self.batch_size {
+            match self.next_item() {
+                Some((op_idx, mc_idx, a, b)) => {
+                    let mc = self.sampler.sample();
+                    let dvth = mc.dvth.map(|x| x as f32);
+                    let dbeta = mc.dbeta.map(|x| x as f32);
+                    inputs.set_row(row, a, b, dvth, dbeta);
+                    tags.push(RowTag::Item { op_idx, mc_idx, a, b });
+                }
+                None => {
+                    if row == 0 {
+                        return None; // stream exhausted on a batch boundary
+                    }
+                    tags.push(RowTag::Pad); // row stays nominal (0,0)
+                }
+            }
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        Some(PackedBatch { seq, inputs, tags })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::Variant;
+    use crate::montecarlo::MismatchSampler;
+    use crate::params::Params;
+
+    fn mk(operands: Vec<(u8, u8)>, n_mc: u32, batch: usize) -> Batcher {
+        let p = Params::default();
+        let cfg = Variant::Smart.config(&p);
+        Batcher::new(
+            operands,
+            n_mc,
+            batch,
+            BatchCfg::from(&cfg),
+            MismatchSampler::new(1, 8e-3, 0.02),
+        )
+    }
+
+    #[test]
+    fn covers_every_item_exactly_once() {
+        let b = mk(vec![(15, 15), (3, 7)], 10, 8);
+        let mut seen = std::collections::HashSet::new();
+        let mut pads = 0;
+        for pb in b {
+            for t in &pb.tags {
+                match *t {
+                    RowTag::Item { op_idx, mc_idx, .. } => {
+                        assert!(seen.insert((op_idx, mc_idx)), "dup {op_idx}/{mc_idx}");
+                    }
+                    RowTag::Pad => pads += 1,
+                }
+            }
+        }
+        assert_eq!(seen.len(), 20);
+        assert_eq!(pads, 4); // 20 items in batches of 8 -> 24 rows
+    }
+
+    #[test]
+    fn n_batches_matches_iteration() {
+        let b = mk(vec![(1, 1)], 1000, 256);
+        assert_eq!(b.n_batches(), 4);
+        assert_eq!(mk(vec![(1, 1)], 1000, 256).count(), 4);
+        assert_eq!(mk(vec![(1, 1)], 1024, 256).n_batches(), 4);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a: Vec<_> = mk(vec![(15, 15)], 30, 16).collect();
+        let b: Vec<_> = mk(vec![(15, 15)], 30, 16).collect();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tags, y.tags);
+            assert_eq!(x.inputs.dvth, y.inputs.dvth);
+        }
+    }
+
+    #[test]
+    fn batch_rows_carry_operands() {
+        let pb = mk(vec![(0b1010, 5)], 4, 4).next().unwrap();
+        assert_eq!(&pb.inputs.a_bits[0..4], &[1.0, 0.0, 1.0, 0.0]);
+        assert!(pb.inputs.b_code.iter().all(|&c| c == 5.0));
+        assert_eq!(pb.n_valid(), 4);
+    }
+
+    #[test]
+    fn exhausts_cleanly_on_boundary() {
+        let mut b = mk(vec![(1, 2)], 8, 8);
+        assert!(b.next().is_some());
+        assert!(b.next().is_none());
+        assert!(b.next().is_none());
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 — the Monte-Carlo campaign coordinator (the paper's evaluation
+//! harness as a production service).
+//!
+//! A campaign = (variant, operand workload, MC sample count). The
+//! coordinator expands it into (operand, sample) work items, packs them
+//! into the fixed batch shapes the AOT artifacts were compiled for
+//! ([`Batcher`]), fans the batches out over a pool of PJRT worker threads
+//! with bounded-queue backpressure ([`WorkerPool`]), and folds the results
+//! into the paper's metrics ([`Aggregator`]). Every campaign is
+//! bit-reproducible from (spec, seed).
+//!
+//! PJRT handles are `!Send`, so workers are OS threads each owning a
+//! private [`crate::runtime::XlaRuntime`]; [`spawn_campaign`] wraps the
+//! blocking run in a thread handle for embedding in services.
+
+mod aggregate;
+mod batcher;
+mod campaign;
+mod pool;
+mod spec;
+
+pub use aggregate::{Aggregator, CampaignReport, OpKey};
+pub use batcher::{Batcher, PackedBatch, RowTag};
+pub use campaign::{run_campaign, run_native_batch, spawn_campaign, Backend, CampaignEngine};
+pub use pool::WorkerPool;
+pub use spec::{CampaignSpec, Workload};

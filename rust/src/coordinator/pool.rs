@@ -1,0 +1,111 @@
+//! Worker pool: OS threads each owning a private PJRT runtime, fed from a
+//! bounded job queue (backpressure), results funneled to the aggregator.
+//!
+//! PJRT handles are `!Send`, so the executable can never cross a thread
+//! boundary — each worker compiles its own from the artifact text. The
+//! job queue is a `sync_channel` whose bound keeps at most
+//! `2 * workers` batches in flight: the batcher (producer) blocks when
+//! the pool falls behind, bounding memory for arbitrarily long campaigns.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::batcher::PackedBatch;
+use crate::runtime::{MacBatchOut, XlaRuntime};
+
+/// A pool of PJRT worker threads executing fixed-size MAC batches.
+pub struct WorkerPool {
+    job_tx: Option<SyncSender<PackedBatch>>,
+    result_rx: Receiver<Result<(PackedBatch, MacBatchOut)>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads, each compiling the `mac_b{batch}`
+    /// artifact from `artifact_dir`. Fails fast if a worker cannot
+    /// initialize (bad artifact dir, missing batch size).
+    pub fn spawn(artifact_dir: PathBuf, batch: usize, workers: usize) -> Result<Self> {
+        assert!(workers > 0);
+        let (job_tx, job_rx) = sync_channel::<PackedBatch>(workers * 2);
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (result_tx, result_rx) = sync_channel::<Result<(PackedBatch, MacBatchOut)>>(workers * 2);
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(workers);
+
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let dir = artifact_dir.clone();
+            let job_rx = Arc::clone(&job_rx);
+            let result_tx = result_tx.clone();
+            let ready_tx = ready_tx.clone();
+            handles.push(std::thread::Builder::new()
+                .name(format!("smart-worker-{wid}"))
+                .spawn(move || {
+                    // Initialize a private runtime; report readiness.
+                    let exe = (|| {
+                        let mut rt = XlaRuntime::open(&dir)?;
+                        rt.mac_executable(batch)
+                    })();
+                    match exe {
+                        Ok(exe) => {
+                            let _ = ready_tx.send(Ok(()));
+                            loop {
+                                // hold the lock only while dequeuing
+                                let job = { job_rx.lock().unwrap().recv() };
+                                let Ok(job) = job else { break };
+                                let out = exe.run(&job.inputs).map(|o| (job, o));
+                                if result_tx.send(out).is_err() {
+                                    break;
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                        }
+                    }
+                })
+                .expect("spawn worker"));
+        }
+        drop(ready_tx);
+        for _ in 0..workers {
+            ready_rx.recv().expect("worker readiness")?;
+        }
+        Ok(Self { job_tx: Some(job_tx), result_rx, handles })
+    }
+
+    /// Submit a batch (blocks when the queue is full — backpressure).
+    pub fn submit(&self, batch: PackedBatch) -> Result<()> {
+        self.job_tx
+            .as_ref()
+            .expect("pool already closed")
+            .send(batch)
+            .map_err(|_| anyhow::anyhow!("all workers exited"))
+    }
+
+    /// Signal no more jobs; workers drain and exit.
+    pub fn close(&mut self) {
+        self.job_tx.take();
+    }
+
+    /// Receive the next completed batch; `None` after close + drain.
+    pub fn recv(&self) -> Option<Result<(PackedBatch, MacBatchOut)>> {
+        self.result_rx.recv().ok()
+    }
+
+    /// Non-blocking receive for interleaved submit/drain loops.
+    pub fn try_recv(&self) -> Option<Result<(PackedBatch, MacBatchOut)>> {
+        self.result_rx.try_recv().ok()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Campaign specification: what to run, reproducibly.
+
+use crate::mac::Variant;
+use crate::montecarlo::Corner;
+use crate::util::json::Value;
+
+/// Operand workload of a campaign.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Workload {
+    /// A single operand pair — e.g. the paper's 1111 x 1111 (Fig. 8/9).
+    Fixed { a: u8, b: u8 },
+    /// The full 16x16 operand space (the accuracy/RMS metric of Table 1).
+    FullSweep,
+    /// Random operand pairs (workload-shaped accuracy, NN-style traffic).
+    Random { n_ops: u32 },
+}
+
+impl Workload {
+    /// Expand into the operand list the campaign iterates.
+    pub fn operands(&self, seed: u64) -> Vec<(u8, u8)> {
+        match self {
+            Self::Fixed { a, b } => vec![(*a, *b)],
+            Self::FullSweep => {
+                let mut v = Vec::with_capacity(256);
+                for a in 0..16u8 {
+                    for b in 0..16u8 {
+                        v.push((a, b));
+                    }
+                }
+                v
+            }
+            Self::Random { n_ops } => {
+                let mut rng = crate::montecarlo::SplitMix64::new(seed ^ 0xA5A5_5A5A);
+                (0..*n_ops)
+                    .map(|_| ((rng.next_u64() % 16) as u8, (rng.next_u64() % 16) as u8))
+                    .collect()
+            }
+        }
+    }
+
+    /// Parse from a config tree: `{kind = "fixed", a = 15, b = 15}` etc.
+    pub fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let kind = v
+            .get("kind")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("workload.kind missing"))?;
+        match kind {
+            "fixed" => {
+                let g = |k: &str| {
+                    v.get(k)
+                        .and_then(Value::as_u64)
+                        .ok_or_else(|| anyhow::anyhow!("workload.{k} missing"))
+                };
+                Ok(Self::Fixed { a: g("a")? as u8, b: g("b")? as u8 })
+            }
+            "full_sweep" => Ok(Self::FullSweep),
+            "random" => Ok(Self::Random {
+                n_ops: v
+                    .get("n_ops")
+                    .and_then(Value::as_u64)
+                    .ok_or_else(|| anyhow::anyhow!("workload.n_ops missing"))?
+                    as u32,
+            }),
+            other => anyhow::bail!("unknown workload kind '{other}'"),
+        }
+    }
+}
+
+/// Everything needed to reproduce a campaign bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignSpec {
+    pub variant: Variant,
+    pub workload: Workload,
+    /// Monte-Carlo samples per operand pair (paper: 1000).
+    pub n_mc: u32,
+    pub seed: u64,
+    pub corner: Corner,
+    /// Worker threads (each owns a PJRT client). 0 = auto.
+    pub workers: usize,
+    /// Preferred batch size; 0 = pick the largest compiled batch that fits.
+    pub batch: usize,
+}
+
+impl CampaignSpec {
+    /// The paper's headline experiment: 1000-point MC on 1111 x 1111.
+    pub fn paper_fig8(variant: Variant) -> Self {
+        Self {
+            variant,
+            workload: Workload::Fixed { a: 15, b: 15 },
+            n_mc: 1000,
+            seed: 2022,
+            corner: Corner::Tt,
+            workers: 0,
+            batch: 0,
+        }
+    }
+
+    /// Parse one `[[campaigns]]` table from a config tree.
+    pub fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let variant: Variant = v
+            .get("variant")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("campaign.variant missing"))?
+            .parse()
+            .map_err(|e: String| anyhow::anyhow!(e))?;
+        let workload = Workload::from_value(
+            v.get("workload")
+                .ok_or_else(|| anyhow::anyhow!("campaign.workload missing"))?,
+        )?;
+        let u = |k: &str, default: u64| v.get(k).and_then(Value::as_u64).unwrap_or(default);
+        let corner = match v.get("corner").and_then(Value::as_str) {
+            None => Corner::Tt,
+            Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+        };
+        let spec = Self {
+            variant,
+            workload,
+            n_mc: u("n_mc", 1000) as u32,
+            seed: u("seed", 2022),
+            corner,
+            workers: u("workers", 0) as usize,
+            batch: u("batch", 0) as usize,
+        };
+        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        Ok(spec)
+    }
+
+    /// Serialize as a TOML-lite `[[campaigns]]` block (round-trips through
+    /// [`Self::from_value`]).
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        s.push_str("[[campaigns]]\n");
+        s.push_str(&format!(
+            "variant = \"{}\"\n",
+            match self.variant {
+                Variant::Smart => "smart",
+                Variant::Aid => "aid",
+                Variant::Imac => "imac",
+                Variant::SmartOnImac => "smart-on-imac",
+            }
+        ));
+        s.push_str(&format!("n_mc = {}\n", self.n_mc));
+        s.push_str(&format!("seed = {}\n", self.seed));
+        s.push_str(&format!("corner = \"{}\"\n", self.corner.name()));
+        s.push_str(&format!("workers = {}\n", self.workers));
+        s.push_str(&format!("batch = {}\n", self.batch));
+        s.push_str("[campaigns.workload]\n");
+        match &self.workload {
+            Workload::Fixed { a, b } => {
+                s.push_str("kind = \"fixed\"\n");
+                s.push_str(&format!("a = {a}\nb = {b}\n"));
+            }
+            Workload::FullSweep => s.push_str("kind = \"full_sweep\"\n"),
+            Workload::Random { n_ops } => {
+                s.push_str("kind = \"random\"\n");
+                s.push_str(&format!("n_ops = {n_ops}\n"));
+            }
+        }
+        s
+    }
+
+    /// Total work items = operands x MC samples.
+    pub fn total_items(&self, n_operands: usize) -> u64 {
+        n_operands as u64 * u64::from(self.n_mc)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_mc == 0 {
+            return Err("n_mc must be >= 1".into());
+        }
+        // Config values travel through an f64 number tree; keep seeds
+        // exactly representable so campaigns stay bit-reproducible.
+        if self.seed >= (1u64 << 53) {
+            return Err("seed must be < 2^53 (config numbers are f64)".into());
+        }
+        if let Workload::Fixed { a, b } = self.workload {
+            if a > 15 || b > 15 {
+                return Err(format!("operands must be 4-bit: ({a}, {b})"));
+            }
+        }
+        if let Workload::Random { n_ops } = self.workload {
+            if n_ops == 0 {
+                return Err("random workload needs n_ops >= 1".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::toml_lite;
+
+    #[test]
+    fn fixed_workload_single_operand() {
+        let ops = Workload::Fixed { a: 15, b: 15 }.operands(0);
+        assert_eq!(ops, vec![(15, 15)]);
+    }
+
+    #[test]
+    fn full_sweep_covers_space() {
+        let ops = Workload::FullSweep.operands(0);
+        assert_eq!(ops.len(), 256);
+        let mut seen = [[false; 16]; 16];
+        for (a, b) in ops {
+            seen[a as usize][b as usize] = true;
+        }
+        assert!(seen.iter().flatten().all(|&s| s));
+    }
+
+    #[test]
+    fn random_workload_is_seeded() {
+        let a = Workload::Random { n_ops: 50 }.operands(7);
+        let b = Workload::Random { n_ops: 50 }.operands(7);
+        let c = Workload::Random { n_ops: 50 }.operands(8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|&(x, y)| x < 16 && y < 16));
+    }
+
+    #[test]
+    fn validation_catches_bad_specs() {
+        let mut s = CampaignSpec::paper_fig8(Variant::Smart);
+        assert!(s.validate().is_ok());
+        s.n_mc = 0;
+        assert!(s.validate().is_err());
+        s.n_mc = 10;
+        s.workload = Workload::Fixed { a: 16, b: 0 };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        for variant in Variant::ALL {
+            let mut spec = CampaignSpec::paper_fig8(variant);
+            spec.workers = 3;
+            let doc = toml_lite::parse(&spec.to_toml()).unwrap();
+            let arr = doc.get("campaigns").unwrap().as_arr().unwrap();
+            let back = CampaignSpec::from_value(&arr[0]).unwrap();
+            assert_eq!(spec, back);
+        }
+    }
+
+    #[test]
+    fn from_value_applies_defaults() {
+        let doc = toml_lite::parse(
+            "[[campaigns]]\nvariant = \"aid\"\n[campaigns.workload]\nkind = \"full_sweep\"\n",
+        )
+        .unwrap();
+        let spec =
+            CampaignSpec::from_value(&doc.get("campaigns").unwrap().as_arr().unwrap()[0]).unwrap();
+        assert_eq!(spec.n_mc, 1000);
+        assert_eq!(spec.seed, 2022);
+        assert_eq!(spec.corner, Corner::Tt);
+        assert_eq!(spec.workload, Workload::FullSweep);
+    }
+
+    #[test]
+    fn from_value_rejects_bad_variant() {
+        let doc = toml_lite::parse(
+            "[[campaigns]]\nvariant = \"bogus\"\n[campaigns.workload]\nkind = \"full_sweep\"\n",
+        )
+        .unwrap();
+        assert!(CampaignSpec::from_value(&doc.get("campaigns").unwrap().as_arr().unwrap()[0]).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Word-line DACs: Eq. 7 (IMAC [9], linear) and Eq. 8 (AID [10], sqrt),
+//! with optional INL and thermal-noise injection for BER studies.
+
+use crate::params::{CircuitCard, DeviceCard};
+
+/// DAC transfer curve selecting how the digital operand B maps onto V_WL.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DacMode {
+    /// Eq. 7 — IMAC [9]: V_WL = VTH + code/(2^N-1) * (WL_MAX - VTH).
+    /// Current (and thus discharge) is *quadratic* in the code.
+    Linear,
+    /// Eq. 8 — AID [10]: V_WL = VTH + sqrt(code/(2^N-1)) * (WL_MAX - VTH).
+    /// Linearizes I ~ (V_WL - VTH)^2 in the code.
+    Sqrt,
+}
+
+impl DacMode {
+    /// Numeric flag matching the L2 model's traced `dac_mode` input.
+    pub fn flag(self) -> f32 {
+        match self {
+            Self::Linear => 0.0,
+            Self::Sqrt => 1.0,
+        }
+    }
+}
+
+/// A word-line DAC calibrated to a *design* threshold (the nominal
+/// effective VTH — the designer knows the body bias, not the mismatch).
+#[derive(Debug, Clone, Copy)]
+pub struct WordlineDac {
+    pub mode: DacMode,
+    /// Design threshold the code range is anchored to (V).
+    pub vth_design: f64,
+    /// Top of the WL range (V).
+    pub wl_max: f64,
+    /// Levels: 2^N - 1.
+    pub full_code: f64,
+    /// Peak INL as a fraction of one code step (0 = ideal).
+    pub inl: f64,
+    /// RMS output noise (V); sampled externally, exposed as a sigma.
+    pub sigma_noise: f64,
+}
+
+impl WordlineDac {
+    /// DAC for a variant: anchored to the body-biased nominal threshold.
+    pub fn new(mode: DacMode, device: &DeviceCard, circuit: &CircuitCard, v_bulk: f64) -> Self {
+        Self {
+            mode,
+            vth_design: device.vth_effective(v_bulk, 0.0),
+            wl_max: circuit.wl_max,
+            full_code: circuit.full_code(),
+            inl: 0.0,
+            sigma_noise: 0.0,
+        }
+    }
+
+    /// Ideal output voltage for `code` (0 grounds the WL — no pulse).
+    pub fn v_wl(&self, code: u8) -> f64 {
+        assert!((code as f64) <= self.full_code, "code {code} out of range");
+        if code == 0 {
+            return 0.0;
+        }
+        let frac = code as f64 / self.full_code;
+        let margin = self.wl_max - self.vth_design;
+        let shaped = match self.mode {
+            DacMode::Linear => frac,
+            DacMode::Sqrt => frac.sqrt(),
+        };
+        let ideal = self.vth_design + shaped * margin;
+        // Parabolic INL profile: zero at the range ends, peak mid-scale.
+        let step = margin / self.full_code;
+        ideal + self.inl * step * 4.0 * frac * (1.0 - frac)
+    }
+
+    /// Per-code voltage step margin of the *shaped* range (V) — the
+    /// quantity the paper's accuracy argument is about (§I: the margin
+    /// improves by VTH/(VDD-VTH) when VTH is suppressed).
+    pub fn code_step(&self) -> f64 {
+        (self.wl_max - self.vth_design) / self.full_code
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{CircuitCard, DeviceCard};
+
+    fn dac(mode: DacMode, v_bulk: f64) -> WordlineDac {
+        WordlineDac::new(mode, &DeviceCard::default(), &CircuitCard::default(), v_bulk)
+    }
+
+    #[test]
+    fn linear_levels_equispaced() {
+        let d = dac(DacMode::Linear, 0.0);
+        let levels: Vec<f64> = (1..=15).map(|c| d.v_wl(c)).collect();
+        let step = levels[1] - levels[0];
+        for w in levels.windows(2) {
+            assert!((w[1] - w[0] - step).abs() < 1e-12);
+        }
+        assert!((levels[14] - 0.70).abs() < 1e-12);
+        assert!((levels[0] - (0.30 + step)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sqrt_levels_linearize_squared_overdrive() {
+        let d = dac(DacMode::Sqrt, 0.0);
+        for c in 1..=15u8 {
+            let vov = d.v_wl(c) - d.vth_design;
+            let want = (c as f64 / 15.0) * (d.wl_max - d.vth_design).powi(2);
+            assert!((vov * vov - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_code_grounds_wordline() {
+        assert_eq!(dac(DacMode::Linear, 0.0).v_wl(0), 0.0);
+        assert_eq!(dac(DacMode::Sqrt, 0.6).v_wl(0), 0.0);
+    }
+
+    #[test]
+    fn body_bias_widens_code_step() {
+        // Paper §III: [300,700] -> [175,700] mV gives 26.7 -> 35 mV steps.
+        let base = dac(DacMode::Linear, 0.0).code_step();
+        let smart = dac(DacMode::Linear, 0.6).code_step();
+        assert!((base - 0.0267).abs() < 5e-4, "base step {base}");
+        assert!((smart - 0.0350).abs() < 5e-4, "smart step {smart}");
+    }
+
+    #[test]
+    fn inl_vanishes_at_range_ends() {
+        let mut d = dac(DacMode::Linear, 0.0);
+        let ideal_top = d.v_wl(15);
+        d.inl = 0.5;
+        assert!((d.v_wl(15) - ideal_top).abs() < 1e-12);
+        // mid-scale deviates
+        let mut ideal_mid = dac(DacMode::Linear, 0.0);
+        ideal_mid.inl = 0.0;
+        assert!((d.v_wl(8) - ideal_mid.v_wl(8)).abs() > 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn code_out_of_range_panics() {
+        dac(DacMode::Linear, 0.0).v_wl(16);
+    }
+}

@@ -1,0 +1,13 @@
+//! MOSFET device models — the lowest substrate layer.
+//!
+//! Implements the paper's Eq. 2/6 physics: square-law NMOS with channel
+//! length modulation, region-aware triode/saturation/subthreshold current,
+//! and the body effect used by SMART to suppress V_TH. This is the model
+//! the native simulator integrates and the oracle the HLO path is checked
+//! against (both sides share `params.json`).
+
+mod model;
+mod sweep;
+
+pub use model::{Mosfet, Region};
+pub use sweep::{iv_sweep, width_sweep, IvPoint, WidthPoint};

@@ -1,0 +1,208 @@
+//! Region-aware square-law NMOS model (paper Eq. 2 + Eq. 6).
+
+use crate::params::DeviceCard;
+
+/// Operating region of the access transistor at a given bias point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    /// V_GS <= V_TH: only subthreshold conduction.
+    Cutoff,
+    /// V_DS >= V_OV: the analog-MAC operating region (Eq. 2 valid).
+    Saturation,
+    /// V_DS < V_OV: the paper's "systematic fault" region (§II-A).
+    Triode,
+}
+
+/// An NMOS instance: a model card plus per-device mismatch offsets.
+///
+/// `dvth` and `dbeta` are the Pelgrom mismatch deviates drawn by
+/// [`crate::montecarlo::MismatchSampler`]; nominal devices use 0.
+#[derive(Debug, Clone, Copy)]
+pub struct Mosfet {
+    pub card: DeviceCard,
+    /// Threshold mismatch offset (V).
+    pub dvth: f64,
+    /// Relative transconductance mismatch.
+    pub dbeta: f64,
+    /// Width scale relative to the card's W/L (Fig. 4 sweeps this).
+    pub w_scale: f64,
+}
+
+impl Mosfet {
+    /// Nominal (mismatch-free) device from a card.
+    pub fn nominal(card: DeviceCard) -> Self {
+        Self { card, dvth: 0.0, dbeta: 0.0, w_scale: 1.0 }
+    }
+
+    /// Device with mismatch deviates applied.
+    pub fn with_mismatch(card: DeviceCard, dvth: f64, dbeta: f64) -> Self {
+        Self { card, dvth, dbeta, w_scale: 1.0 }
+    }
+
+    /// Effective beta = mu*Cox*(W/L) including mismatch and width scaling (A/V^2).
+    pub fn beta(&self) -> f64 {
+        self.card.beta() * self.w_scale * (1.0 + self.dbeta)
+    }
+
+    /// Effective threshold under `v_bulk` forward body bias (Eq. 6).
+    pub fn vth(&self, v_bulk: f64) -> f64 {
+        self.card.vth_effective(v_bulk, self.dvth)
+    }
+
+    /// Operating region for gate overdrive `vov` and drain voltage `v_ds`.
+    pub fn region(&self, vov: f64, v_ds: f64) -> Region {
+        if vov <= 0.0 {
+            Region::Cutoff
+        } else if v_ds >= vov {
+            Region::Saturation
+        } else {
+            Region::Triode
+        }
+    }
+
+    /// Drain current (A) at gate voltage `v_gs`, drain voltage `v_ds`,
+    /// bulk voltage `v_bulk` (source grounded — the M2acc/M3 stack of
+    /// Fig. 1-b with M3 in deep triode).
+    ///
+    /// Matches `python/compile/kernels/ref.py::device_current` bit-for-bit
+    /// in structure:
+    ///   saturation: 1/2 * beta * Vov^2 * (1 + lam*Vds)
+    ///   triode:     beta * (Vov - Vds/2) * Vds * (1 + lam*Vds)
+    ///   cutoff:     beta * Vt^2 * exp(Vov/(n*Vt)) * (1 - exp(-Vds/Vt))
+    /// Above threshold the square-law is floored at the Vov = 0
+    /// subthreshold current so the weak->strong inversion handoff is
+    /// continuous and monotone in V_GS (EKV-style moderate inversion).
+    pub fn drain_current(&self, v_gs: f64, v_ds: f64, v_bulk: f64) -> f64 {
+        let vov = v_gs - self.vth(v_bulk);
+        self.drain_current_vov(vov, v_ds)
+    }
+
+    /// Drain current with a precomputed overdrive (hot-path form: the
+    /// overdrive is time-invariant during a discharge transient).
+    #[inline]
+    pub fn drain_current_vov(&self, vov: f64, v_ds: f64) -> f64 {
+        let c = &self.card;
+        let beta = self.beta();
+        let vt = c.vt_thermal;
+        // Strong-inversion fast path (hot loop: two exp() calls saved).
+        // For vov >= 3*vt the square-law branch provably dominates the
+        // subthreshold floor at every v_ds >= 0:
+        //   saturation: 1/2*vov^2 >= 4.5*vt^2 > vt^2 >= floor
+        //   triode:     (vov - v/2)*v >= vov*v/2 > vt*v >= vt^2*(1-e^{-v/vt})
+        // so max(i_on, i_sub) == i_on exactly and i_sub need not be built.
+        if vov >= 3.0 * vt {
+            let clm = 1.0 + c.lam * v_ds;
+            let i = if v_ds >= vov {
+                0.5 * beta * vov * vov * clm
+            } else {
+                beta * (vov - 0.5 * v_ds) * v_ds * clm
+            };
+            return i.max(0.0);
+        }
+        let i_sub = beta * vt * vt * (vov.min(0.0) / (c.n_sub * vt)).exp()
+            * (1.0 - (-v_ds.max(0.0) / vt).exp());
+        if vov > 0.0 {
+            let clm = 1.0 + c.lam * v_ds;
+            let i = if v_ds >= vov {
+                0.5 * beta * vov * vov * clm
+            } else {
+                beta * (vov - 0.5 * v_ds) * v_ds * clm
+            };
+            i.max(0.0).max(i_sub)
+        } else {
+            i_sub
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::DeviceCard;
+
+    fn dev() -> Mosfet {
+        Mosfet::nominal(DeviceCard::default())
+    }
+
+    #[test]
+    fn saturation_current_matches_eq2() {
+        let d = dev();
+        let vov: f64 = 0.4;
+        let vds = 1.0;
+        let want = 0.5 * d.beta() * vov * vov * (1.0 + d.card.lam * vds);
+        assert!((d.drain_current_vov(vov, vds) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regions_partition_bias_space() {
+        let d = dev();
+        assert_eq!(d.region(-0.1, 0.5), Region::Cutoff);
+        assert_eq!(d.region(0.3, 0.5), Region::Saturation);
+        assert_eq!(d.region(0.3, 0.2), Region::Triode);
+    }
+
+    #[test]
+    fn current_continuous_at_sat_triode_boundary() {
+        let d = dev();
+        let vov = 0.35;
+        let below = d.drain_current_vov(vov, vov - 1e-9);
+        let above = d.drain_current_vov(vov, vov + 1e-9);
+        assert!((below - above).abs() < 1e-9 * d.beta());
+    }
+
+    #[test]
+    fn subthreshold_continuous_at_vov_zero() {
+        // the moderate-inversion floor makes the branches meet at Vov = 0
+        let d = dev();
+        let on = d.drain_current_vov(1e-9, 0.8);
+        let off = d.drain_current_vov(-1e-9, 0.8);
+        assert!((on - off).abs() / off < 1e-6, "on={on} off={off}");
+    }
+
+    #[test]
+    fn body_bias_increases_current() {
+        let d = dev();
+        let base = d.drain_current(0.55, 0.9, 0.0);
+        let smart = d.drain_current(0.55, 0.9, 0.6);
+        assert!(smart > base * 1.5, "base={base}, smart={smart}");
+    }
+
+    #[test]
+    fn current_monotone_in_vgs() {
+        let d = dev();
+        let mut last = -1.0;
+        for i in 0..50 {
+            let vgs = i as f64 * 0.02;
+            let i_d = d.drain_current(vgs, 0.9, 0.0);
+            assert!(i_d >= last);
+            last = i_d;
+        }
+    }
+
+    #[test]
+    fn zero_vds_zero_current() {
+        let d = dev();
+        assert_eq!(d.drain_current(0.7, 0.0, 0.0), 0.0);
+        assert!(d.drain_current(0.1, 0.0, 0.0).abs() < 1e-18);
+    }
+
+    #[test]
+    fn mismatch_shifts_current() {
+        let card = DeviceCard::default();
+        let slow = Mosfet::with_mismatch(card, 0.02, -0.05);
+        let fast = Mosfet::with_mismatch(card, -0.02, 0.05);
+        let nom = Mosfet::nominal(card);
+        let (vgs, vds) = (0.6, 0.9);
+        assert!(slow.drain_current(vgs, vds, 0.0) < nom.drain_current(vgs, vds, 0.0));
+        assert!(fast.drain_current(vgs, vds, 0.0) > nom.drain_current(vgs, vds, 0.0));
+    }
+
+    #[test]
+    fn width_scaling_is_linear_in_current() {
+        let mut d = dev();
+        let i1 = d.drain_current(0.6, 0.9, 0.0);
+        d.w_scale = 2.0;
+        let i2 = d.drain_current(0.6, 0.9, 0.0);
+        assert!((i2 / i1 - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,45 @@
+//! # smart-insram
+//!
+//! Full-system reproduction of **SMART: Investigating the Impact of
+//! Threshold Voltage Suppression in an In-SRAM Multiplication/Accumulation
+//! Accelerator for Accuracy Improvement in 65 nm CMOS Technology**
+//! (Seyedfaraji, Mesgari, Rehman — DSD 2022,
+//! DOI 10.1109/DSD57027.2022.00115).
+//!
+//! The paper's Cadence/Spectre testbed is replaced by a from-scratch
+//! analog transient simulator (see DESIGN.md §2 for the substitution
+//! table). The stack has three layers:
+//!
+//! * **L1** — a Pallas kernel integrating the bitline discharge ODE
+//!   (`python/compile/kernels/discharge.py`), AOT-lowered to HLO text;
+//! * **L2** — the JAX MAC-array model around it
+//!   (`python/compile/model.py`);
+//! * **L3** — this crate: the Monte-Carlo campaign coordinator that loads
+//!   the artifacts via PJRT ([`runtime`]), generates mismatch batches
+//!   ([`montecarlo`]), schedules them across workers ([`coordinator`]),
+//!   and aggregates the paper's metrics ([`metrics`], [`energy`],
+//!   [`report`]). Python never runs at campaign time.
+//!
+//! The native simulator ([`device`], [`circuit`], [`sram`], [`dac`],
+//! [`mac`]) is a complete Rust twin of the AOT path, used as its
+//! cross-check oracle and for shapes the fixed-batch artifacts don't
+//! cover.
+
+pub mod bench;
+pub mod circuit;
+pub mod config;
+pub mod coordinator;
+pub mod dac;
+pub mod device;
+pub mod energy;
+pub mod mac;
+pub mod metrics;
+pub mod montecarlo;
+pub mod params;
+pub mod report;
+pub mod runtime;
+pub mod sram;
+pub mod util;
+
+pub use mac::{MacResult, NativeMacEngine, Variant};
+pub use params::Params;

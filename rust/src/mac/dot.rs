@@ -1,0 +1,171 @@
+//! Native twin of the multi-row dot-product (VMM) path: R rows of one
+//! array column discharging the shared bitlines simultaneously
+//! (Fig. 7 array used as IMAC-class accelerators intend — NN layers).
+
+use super::variant::VariantConfig;
+use crate::dac::WordlineDac;
+use crate::device::Mosfet;
+use crate::montecarlo::McSample;
+use crate::params::Params;
+use crate::sram::WEIGHTS;
+
+/// Result of one analog dot product sum_r(a_r * b_r).
+#[derive(Debug, Clone)]
+pub struct DotResult {
+    /// Binary-weighted shared-bitline discharge voltage.
+    pub v_dot: f64,
+    /// Sampled shared-bitline voltages, MSB first.
+    pub v_bl: [f64; 4],
+    /// Raw dynamic bitline energy (J), C_bl = C_BLB * R/4.
+    pub energy: f64,
+    /// True if any conducting row left saturation before sampling.
+    pub fault: bool,
+}
+
+/// Native shared-bitline dot-product engine.
+#[derive(Debug, Clone)]
+pub struct NativeDotEngine {
+    params: Params,
+    cfg: VariantConfig,
+    dac: WordlineDac,
+    rows: usize,
+}
+
+impl NativeDotEngine {
+    pub fn new(params: Params, cfg: VariantConfig, rows: usize) -> Self {
+        let dac = WordlineDac::new(cfg.dac_mode, &params.device, &params.circuit, cfg.v_bulk);
+        Self { params, cfg, dac, rows }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// WL pulse width convention: `t_sample / 4` keeps the all-rows-max
+    /// full scale equal to the single-row MAC's (C_bl grows with R).
+    pub fn t_sample(&self) -> f64 {
+        self.cfg.t_sample / 4.0
+    }
+
+    /// One dot product: `weights[r]` stored in row r, `codes[r]` on its WL,
+    /// with per-row mismatch samples.
+    pub fn dot(&self, weights: &[u8], codes: &[u8], mc: &[McSample]) -> DotResult {
+        assert_eq!(weights.len(), self.rows);
+        assert_eq!(codes.len(), self.rows);
+        assert_eq!(mc.len(), self.rows);
+        let p = &self.params;
+        let c_bl = p.circuit.c_blb * self.rows as f64 / 4.0;
+        let n_steps = p.circuit.n_steps;
+        let dt = self.t_sample() / f64::from(n_steps);
+        let vdd = p.device.vdd;
+
+        // Pre-resolve per-(row, cell) overdrive, beta, gate.
+        let mut vov = vec![[0.0f64; 4]; self.rows];
+        let mut dev = vec![[Mosfet::nominal(p.device); 4]; self.rows];
+        let mut gate = vec![[0.0f64; 4]; self.rows];
+        for r in 0..self.rows {
+            let v_wl = self.dac.v_wl(codes[r]);
+            for c in 0..4 {
+                let m = Mosfet::with_mismatch(p.device, mc[r].dvth[c], mc[r].dbeta[c]);
+                vov[r][c] = v_wl - m.vth(self.cfg.v_bulk);
+                gate[r][c] = if weights[r] >> (3 - c) & 1 == 1 { 1.0 } else { p.device.k_leak };
+                dev[r][c] = m;
+            }
+        }
+
+        // Shared-bitline forward-Euler transient, one state per cell column.
+        let mut v = [vdd; 4];
+        for _ in 0..n_steps {
+            for (c, vc) in v.iter_mut().enumerate() {
+                let mut i_total = 0.0;
+                for r in 0..self.rows {
+                    i_total += dev[r][c].drain_current_vov(vov[r][c], *vc) * gate[r][c];
+                }
+                *vc = (*vc - i_total * dt / c_bl).max(0.0);
+            }
+        }
+
+        let mut fault = false;
+        for r in 0..self.rows {
+            for c in 0..4 {
+                if weights[r] >> (3 - c) & 1 == 1 && vov[r][c] > 0.0 && v[c] < vov[r][c] {
+                    fault = true;
+                }
+            }
+        }
+        let v_dot: f64 = v.iter().zip(WEIGHTS).map(|(&vc, w)| (vdd - vc) * w).sum();
+        let energy: f64 = v.iter().map(|&vc| c_bl * vdd * (vdd - vc)).sum();
+        DotResult { v_dot, v_bl: v, energy, fault }
+    }
+
+    /// Nominal full scale: all rows storing 15, all codes 15, no mismatch.
+    pub fn full_scale(&self) -> f64 {
+        let w = vec![15u8; self.rows];
+        let c = vec![15u8; self.rows];
+        let mc = vec![McSample::nominal(); self.rows];
+        self.dot(&w, &c, &mc).v_dot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::Variant;
+
+    fn engine(rows: usize) -> NativeDotEngine {
+        let p = Params::default();
+        NativeDotEngine::new(p, Variant::Smart.config(&p), rows)
+    }
+
+    #[test]
+    fn single_row_matches_mac_engine() {
+        let p = Params::default();
+        let cfg = Variant::Aid.config(&p);
+        let dot = NativeDotEngine::new(p, cfg, 1);
+        let mac = crate::mac::NativeMacEngine::new(p, cfg);
+        let d = dot.dot(&[15], &[15], &[McSample::nominal()]);
+        let m = mac.mac(15, 15, &McSample::nominal());
+        // R=1: C/4 with t/4 -> identical dt/C
+        assert!((d.v_dot - m.v_mult).abs() < 1e-9, "{} vs {}", d.v_dot, m.v_mult);
+    }
+
+    #[test]
+    fn additive_in_saturation() {
+        let e = engine(4);
+        let nom = vec![McSample::nominal(); 4];
+        let a = e.dot(&[9, 0, 0, 0], &[12, 0, 0, 0], &nom).v_dot;
+        let b = e.dot(&[0, 0, 5, 0], &[0, 0, 7, 0], &nom).v_dot;
+        let ab = e.dot(&[9, 0, 5, 0], &[12, 0, 7, 0], &nom).v_dot;
+        assert!((ab - a - b).abs() < 3e-3, "{ab} vs {a}+{b}");
+    }
+
+    #[test]
+    fn tracks_integer_dot_product() {
+        let e = engine(8);
+        let nom = vec![McSample::nominal(); 8];
+        let fs = e.full_scale();
+        let w = [3u8, 15, 7, 0, 9, 12, 1, 5];
+        let c = [14u8, 2, 8, 15, 4, 11, 6, 0];
+        let got = e.dot(&w, &c, &nom).v_dot;
+        let exact: u32 = w.iter().zip(c).map(|(&a, b)| u32::from(a) * u32::from(b)).sum();
+        let ideal = fs * f64::from(exact) / (8.0 * 225.0);
+        assert!((got - ideal).abs() < 0.05 * fs, "{got} vs {ideal}");
+    }
+
+    #[test]
+    fn no_fault_at_design_point_full_activation() {
+        let e = engine(16);
+        let nom = vec![McSample::nominal(); 16];
+        let r = e.dot(&[15; 16], &[15; 16], &nom);
+        assert!(!r.fault);
+        assert!(r.v_dot > 0.1);
+    }
+
+    #[test]
+    fn full_scale_invariant_in_rows() {
+        // C_bl ∝ R with t = t0/4 keeps full scale constant
+        let f4 = engine(4).full_scale();
+        let f16 = engine(16).full_scale();
+        assert!((f4 - f16).abs() < 2e-3, "{f4} vs {f16}");
+    }
+}

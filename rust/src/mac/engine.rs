@@ -1,0 +1,211 @@
+//! Native analog MAC engine: the Rust twin of the AOT-compiled L2 model.
+//!
+//! Used as the cross-check oracle for the HLO path (integration tests
+//! assert agreement), for single-shot/interactive runs, and for sweeps
+//! whose shapes the fixed-batch artifacts do not cover.
+
+use super::variant::VariantConfig;
+use crate::circuit::BitlineInputs;
+use crate::dac::WordlineDac;
+use crate::montecarlo::McSample;
+use crate::params::Params;
+use crate::sram::{MacWord, WEIGHTS};
+
+/// Outputs of one 4x4-bit analog MAC operation — mirrors the tuple the
+/// AOT artifact returns: (v_mult, v_blb[4], energy, fault).
+#[derive(Debug, Clone, Copy)]
+pub struct MacResult {
+    /// Binary-weighted discharge voltage — the paper's V_multiplication.
+    pub v_mult: f64,
+    /// Sampled per-cell BLB voltages, MSB first.
+    pub v_blb: [f64; 4],
+    /// Raw dynamic bitline energy sum(C * VDD * dV) in J (overheads are
+    /// applied by [`crate::energy::EnergyModel`]).
+    pub energy: f64,
+    /// True when any conducting cell left saturation before sampling —
+    /// the paper's "systematic fault" condition (§II-A).
+    pub fault: bool,
+}
+
+/// The native engine: owns the model card and a variant configuration.
+#[derive(Debug, Clone)]
+pub struct NativeMacEngine {
+    params: Params,
+    cfg: VariantConfig,
+    dac: WordlineDac,
+}
+
+impl NativeMacEngine {
+    pub fn new(params: Params, cfg: VariantConfig) -> Self {
+        let dac = WordlineDac::new(cfg.dac_mode, &params.device, &params.circuit, cfg.v_bulk);
+        Self { params, cfg, dac }
+    }
+
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    pub fn config(&self) -> &VariantConfig {
+        &self.cfg
+    }
+
+    pub fn dac(&self) -> &WordlineDac {
+        &self.dac
+    }
+
+    /// One MAC: `a` stored in the word, `b` DAC-coded on the WL, with the
+    /// word's access transistors perturbed by `mc`.
+    pub fn mac(&self, a: u8, b: u8, mc: &McSample) -> MacResult {
+        let word = {
+            let mut w = MacWord::with_mismatch(self.params.device, mc.dvth, mc.dbeta);
+            w.store(a);
+            w
+        };
+        self.mac_word(&word, b)
+    }
+
+    /// MAC against an already-instantiated word (array-resident operand).
+    pub fn mac_word(&self, word: &MacWord, b: u8) -> MacResult {
+        let p = &self.params;
+        let v_wl = self.dac.v_wl(b);
+        let bits = word.bits();
+        let cells = word.cells();
+        let devs = [cells[0].m2_acc, cells[1].m2_acc, cells[2].m2_acc, cells[3].m2_acc];
+        let mk = |i: usize| BitlineInputs { v_wl, bit: bits[i], v_bulk: self.cfg.v_bulk };
+        let inps = [mk(0), mk(1), mk(2), mk(3)];
+        // 4-lane interleaved transient (hot path; bit-identical to the
+        // per-cell scalar integration)
+        let v_blb = crate::circuit::discharge_word(p, &devs, &inps, self.cfg.t_sample, p.circuit.n_steps);
+        let mut fault = false;
+        for i in 0..4 {
+            // Saturation-exit check (Eq. 4 validity): conducting cell whose
+            // BLB fell below its overdrive has entered triode.
+            let vov = v_wl - devs[i].vth(self.cfg.v_bulk);
+            if bits[i] && vov > 0.0 && v_blb[i] < vov {
+                fault = true;
+            }
+        }
+
+        let vdd = p.device.vdd;
+        let v_mult: f64 = v_blb
+            .iter()
+            .zip(WEIGHTS)
+            .map(|(&v, w)| (vdd - v) * w)
+            .sum();
+        let energy: f64 = v_blb.iter().map(|&v| p.circuit.c_blb * vdd * (vdd - v)).sum();
+        MacResult { v_mult, v_blb, energy, fault }
+    }
+
+    /// Nominal full-scale output (a = b = 15, no mismatch) — the
+    /// normalization for the accuracy metrics and Fig. 8/9 axes.
+    pub fn full_scale(&self) -> f64 {
+        self.mac(15, 15, &McSample::nominal()).v_mult
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::Variant;
+    use crate::montecarlo::McSample;
+    use crate::params::Params;
+
+    fn engine(v: Variant) -> NativeMacEngine {
+        let p = Params::default();
+        NativeMacEngine::new(p, v.config(&p))
+    }
+
+    #[test]
+    fn zero_operands_give_zero() {
+        let e = engine(Variant::Smart);
+        let nom = McSample::nominal();
+        assert!(e.mac(0, 9, &nom).v_mult < 2e-3);
+        assert!(e.mac(11, 0, &nom).v_mult < 2e-3);
+        assert!(!e.mac(0, 0, &nom).fault);
+    }
+
+    #[test]
+    fn output_monotone_in_operands() {
+        let e = engine(Variant::Aid);
+        let nom = McSample::nominal();
+        let mut grid = [[0.0f64; 16]; 16];
+        for a in 0..16u8 {
+            for b in 0..16u8 {
+                grid[a as usize][b as usize] = e.mac(a, b, &nom).v_mult;
+            }
+        }
+        for a in 0..16 {
+            for b in 1..16 {
+                assert!(grid[a][b] >= grid[a][b - 1] - 1e-9);
+            }
+        }
+        for b in 0..16 {
+            for a in 1..16 {
+                assert!(grid[a][b] >= grid[a - 1][b] - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn stored_weighting_is_binary_under_sqrt_dac() {
+        let e = engine(Variant::Aid);
+        let nom = McSample::nominal();
+        let fs = e.mac(15, 15, &nom).v_mult;
+        for a in 1..16u8 {
+            let v = e.mac(a, 15, &nom).v_mult;
+            let want = fs * a as f64 / 15.0;
+            assert!((v - want).abs() < 0.01 * fs, "a={a}: {v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn smart_fullscale_exceeds_aid() {
+        let fs_smart = engine(Variant::Smart).full_scale();
+        let fs_aid = engine(Variant::Aid).full_scale();
+        assert!(fs_smart > fs_aid * 1.3, "{fs_smart} vs {fs_aid}");
+    }
+
+    #[test]
+    fn no_fault_at_design_timing() {
+        for v in Variant::ALL {
+            let e = engine(v);
+            let nom = McSample::nominal();
+            for b in 0..16u8 {
+                assert!(!e.mac(15, b, &nom).fault, "{v:?} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlong_pulse_faults() {
+        let p = Params::default();
+        let mut cfg = Variant::Smart.config(&p);
+        cfg.t_sample = 2e-9;
+        let e = NativeMacEngine::new(p, cfg);
+        assert!(e.mac(15, 15, &McSample::nominal()).fault);
+    }
+
+    #[test]
+    fn energy_is_cv_dv_sum() {
+        let e = engine(Variant::Smart);
+        let r = e.mac(15, 15, &McSample::nominal());
+        let p = e.params();
+        let want: f64 = r
+            .v_blb
+            .iter()
+            .map(|&v| p.circuit.c_blb * p.device.vdd * (p.device.vdd - v))
+            .sum();
+        assert!((r.energy - want).abs() < 1e-20);
+    }
+
+    #[test]
+    fn mac_word_agrees_with_mac() {
+        let e = engine(Variant::Smart);
+        let mc = McSample { dvth: [2e-3, -1e-3, 0.5e-3, -3e-3], dbeta: [0.01, -0.02, 0.0, 0.005] };
+        let direct = e.mac(0b1011, 7, &mc);
+        let mut w = MacWord::with_mismatch(e.params().device, mc.dvth, mc.dbeta);
+        w.store(0b1011);
+        let via_word = e.mac_word(&w, 7);
+        assert_eq!(direct.v_mult, via_word.v_mult);
+    }
+}

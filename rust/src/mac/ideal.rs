@@ -1,0 +1,116 @@
+//! Ideal transfer, sense amplifier, and digital reconstruction: how the
+//! analog V_multiplication is interpreted back into a product code.
+
+use super::engine::NativeMacEngine;
+
+/// The ideal (mismatch-free) transfer the accuracy metrics compare against:
+/// V_ideal(a, b) = (a/15) * (b/15) * full_scale.
+#[derive(Debug, Clone, Copy)]
+pub struct IdealTransfer {
+    pub full_scale: f64,
+}
+
+impl IdealTransfer {
+    /// Calibrate from a variant's nominal full-scale output.
+    pub fn calibrate(engine: &NativeMacEngine) -> Self {
+        Self { full_scale: engine.full_scale() }
+    }
+
+    /// Ideal analog output for operands `a`, `b`.
+    pub fn v_ideal(&self, a: u8, b: u8) -> f64 {
+        self.full_scale * (a as f64 / 15.0) * (b as f64 / 15.0)
+    }
+
+    /// Normalize a measured voltage into product units (0..=225).
+    pub fn to_product_units(&self, v: f64) -> f64 {
+        v / self.full_scale * 225.0
+    }
+}
+
+/// Sense-amplifier model: input-referred offset + quantizing comparator.
+#[derive(Debug, Clone, Copy)]
+pub struct SenseAmp {
+    /// Input-referred RMS offset (V). ~2 mV for a 65 nm StrongARM latch.
+    pub sigma_offset: f64,
+}
+
+impl Default for SenseAmp {
+    fn default() -> Self {
+        Self { sigma_offset: 2e-3 }
+    }
+}
+
+/// Reconstruct the digital product code from the analog output: quantize
+/// V_mult against the ideal transfer's 8-bit (0..225) product grid.
+/// Returns the nearest product value.
+pub fn reconstruct(ideal: &IdealTransfer, v_mult: f64) -> u16 {
+    let units = ideal.to_product_units(v_mult);
+    units.round().clamp(0.0, 225.0) as u16
+}
+
+/// 4-bit readout: quantize to the 16-level output grid the architecture's
+/// sense stage resolves (the paper's BER is about confusing *these*
+/// levels; the full 8-bit product is below the analog noise floor).
+pub fn reconstruct4(ideal: &IdealTransfer, v_mult: f64) -> u8 {
+    let code = v_mult / ideal.full_scale * 15.0;
+    code.round().clamp(0.0, 15.0) as u8
+}
+
+/// The 4-bit output code an exact multiplier would produce for (a, b).
+pub fn exact_code4(a: u8, b: u8) -> u8 {
+    ((u16::from(a) * u16::from(b)) as f64 / 225.0 * 15.0).round() as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::{NativeMacEngine, Variant};
+    use crate::montecarlo::McSample;
+    use crate::params::Params;
+
+    fn engine() -> NativeMacEngine {
+        let p = Params::default();
+        NativeMacEngine::new(p, Variant::Smart.config(&p))
+    }
+
+    #[test]
+    fn ideal_corners() {
+        let e = engine();
+        let t = IdealTransfer::calibrate(&e);
+        assert_eq!(t.v_ideal(0, 15), 0.0);
+        assert!((t.v_ideal(15, 15) - t.full_scale).abs() < 1e-15);
+        assert!((t.to_product_units(t.full_scale) - 225.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reconstruct_nominal_max_code_exact() {
+        let e = engine();
+        let t = IdealTransfer::calibrate(&e);
+        let r = e.mac(15, 15, &McSample::nominal());
+        assert_eq!(reconstruct(&t, r.v_mult), 225);
+    }
+
+    #[test]
+    fn reconstruct_scales_with_stored_operand() {
+        // sqrt DAC makes the B axis linear and the A axis is binary
+        // weighting, so nominal a*15 reconstructs near a*15 exactly.
+        let e = engine();
+        let t = IdealTransfer::calibrate(&e);
+        for a in 0..16u8 {
+            let r = e.mac(a, 15, &McSample::nominal());
+            let got = reconstruct(&t, r.v_mult);
+            let want = a as u16 * 15;
+            assert!(
+                (got as i32 - want as i32).abs() <= 3,
+                "a={a}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn reconstruct_clamps() {
+        let t = IdealTransfer { full_scale: 0.4 };
+        assert_eq!(reconstruct(&t, -0.1), 0);
+        assert_eq!(reconstruct(&t, 0.9), 225);
+    }
+}

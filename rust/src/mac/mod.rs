@@ -1,0 +1,13 @@
+//! The analog in-SRAM MAC engine built on the native simulator, plus the
+//! design-variant table (SMART vs the state-of-the-art baselines) and the
+//! sense/reconstruction model.
+
+mod dot;
+mod engine;
+mod ideal;
+mod variant;
+
+pub use dot::{DotResult, NativeDotEngine};
+pub use engine::{MacResult, NativeMacEngine};
+pub use ideal::{exact_code4, reconstruct, reconstruct4, IdealTransfer, SenseAmp};
+pub use variant::{Variant, VariantConfig};

@@ -1,0 +1,127 @@
+//! Design variants compared in the paper (Table 1).
+
+use crate::dac::DacMode;
+use crate::params::Params;
+
+/// The designs the paper evaluates head-to-head.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// This paper: AID's sqrt DAC + 0.6 V forward body bias (dual-VDD).
+    Smart,
+    /// AID [10]: sqrt DAC, no body bias, 1.0 V supply.
+    Aid,
+    /// IMAC [9]: linear DAC, no body bias, 1.2 V supply.
+    Imac,
+    /// Ablation: SMART's body bias applied to IMAC's linear DAC (Fig. 9).
+    SmartOnImac,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 4] = [Variant::Smart, Variant::Aid, Variant::Imac, Variant::SmartOnImac];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Smart => "SMART",
+            Self::Aid => "AID [10]",
+            Self::Imac => "IMAC [9]",
+            Self::SmartOnImac => "SMART-on-IMAC",
+        }
+    }
+
+    /// Circuit configuration for this variant.
+    pub fn config(self, p: &Params) -> VariantConfig {
+        let c = &p.circuit;
+        match self {
+            Self::Smart => VariantConfig {
+                variant: self,
+                dac_mode: DacMode::Sqrt,
+                v_bulk: c.v_bulk_smart,
+                supply: 1.0,
+                t_sample: c.t_sample,
+            },
+            Self::Aid => VariantConfig {
+                variant: self,
+                dac_mode: DacMode::Sqrt,
+                v_bulk: 0.0,
+                supply: 1.0,
+                t_sample: c.t_sample,
+            },
+            Self::Imac => VariantConfig {
+                variant: self,
+                dac_mode: DacMode::Linear,
+                v_bulk: 0.0,
+                supply: 1.2,
+                t_sample: c.t_sample,
+            },
+            Self::SmartOnImac => VariantConfig {
+                variant: self,
+                dac_mode: DacMode::Linear,
+                v_bulk: c.v_bulk_smart,
+                supply: 1.0,
+                t_sample: c.t_sample,
+            },
+        }
+    }
+}
+
+impl std::str::FromStr for Variant {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "smart" => Ok(Self::Smart),
+            "aid" => Ok(Self::Aid),
+            "imac" => Ok(Self::Imac),
+            "smart-on-imac" | "smartonimac" => Ok(Self::SmartOnImac),
+            other => Err(format!("unknown variant '{other}' (smart|aid|imac|smart-on-imac)")),
+        }
+    }
+}
+
+/// Resolved per-variant circuit knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct VariantConfig {
+    pub variant: Variant,
+    pub dac_mode: DacMode,
+    /// Forward body bias on the access transistors (V).
+    pub v_bulk: f64,
+    /// Peripheral supply (V) — enters the energy model only; the cell
+    /// array itself runs at the card's VDD in all variants.
+    pub supply: f64,
+    /// WL pulse width at the sampling instant (s).
+    pub t_sample: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::Params;
+
+    #[test]
+    fn smart_is_aid_plus_body_bias() {
+        let p = Params::default();
+        let s = Variant::Smart.config(&p);
+        let a = Variant::Aid.config(&p);
+        assert_eq!(s.dac_mode, a.dac_mode);
+        assert_eq!(s.v_bulk, 0.6);
+        assert_eq!(a.v_bulk, 0.0);
+    }
+
+    #[test]
+    fn imac_uses_linear_dac_at_1v2() {
+        let p = Params::default();
+        let i = Variant::Imac.config(&p);
+        assert_eq!(i.dac_mode, DacMode::Linear);
+        assert_eq!(i.supply, 1.2);
+    }
+
+    #[test]
+    fn from_str_roundtrip() {
+        for v in Variant::ALL {
+            let s = v.name().split_whitespace().next().unwrap().to_lowercase();
+            let parsed: Variant = s.parse().unwrap();
+            assert_eq!(parsed, v);
+        }
+        assert!("bogus".parse::<Variant>().is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! `smart` — CLI for the SMART in-SRAM MAC reproduction.
+//!
+//! Subcommands map 1:1 onto the paper's experiments; see DESIGN.md §5.
+//!
+//! ```text
+//! smart info
+//! smart mac 13 7 --variant smart [--native]
+//! smart mc --variant aid --n-mc 1000 [--a 15 --b 15 | --full-sweep]
+//! smart table1 [--n-mc 300]
+//! smart run configs/fig8.toml
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::Result;
+
+use smart_insram::coordinator::{run_campaign, Backend, CampaignSpec, Workload};
+use smart_insram::energy::{nominal_cost, EnergyModel};
+use smart_insram::mac::Variant;
+use smart_insram::montecarlo::Corner;
+use smart_insram::params::Params;
+use smart_insram::report;
+use smart_insram::runtime::default_artifact_dir;
+use smart_insram::util::cli::Args;
+
+const USAGE: &str = "\
+smart — SMART in-SRAM MAC accelerator campaign coordinator
+
+USAGE:
+  smart [--artifacts DIR] [--native] <command> [args]
+
+COMMANDS:
+  info                         platform + artifact manifest + PJRT smoke test
+  mac <a> <b> [--variant V]    one 4x4-bit MAC through the full stack
+  mc [--variant V] [--n-mc N] [--a A --b B | --full-sweep]
+     [--seed S] [--workers W] [--corner tt|ff|ss]
+                               Monte-Carlo campaign (paper Fig. 8/9)
+  table1 [--n-mc N]            regenerate Table 1 (all variants + lit rows)
+  run <config.toml>            run campaigns from an experiment file
+
+OPTIONS:
+  --artifacts DIR   artifact directory (default: $SMART_ARTIFACTS or ./artifacts)
+  --native          use the native Rust simulator instead of the AOT/PJRT path
+  --variant V       smart | aid | imac | smart-on-imac (default: smart)
+";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["native", "full-sweep", "help"])
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if args.flag("help") || args.positional(0).is_none() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let params = Params::default();
+    let backend = if args.flag("native") { Backend::Native } else { Backend::Xla };
+    let art: PathBuf = args
+        .opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    let variant: Variant = args
+        .opt_parse("variant", Variant::Smart)
+        .map_err(|e| anyhow::anyhow!(e))?;
+
+    match args.positional(0).unwrap() {
+        "info" => cmd_info(&params, &art),
+        "mac" => {
+            let a: u8 = args
+                .positional(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: smart mac <a> <b>"))?
+                .parse()?;
+            let b: u8 = args
+                .positional(2)
+                .ok_or_else(|| anyhow::anyhow!("usage: smart mac <a> <b>"))?
+                .parse()?;
+            cmd_mac(&params, &art, backend, variant, a, b)
+        }
+        "mc" => {
+            let spec = CampaignSpec {
+                variant,
+                workload: if args.flag("full-sweep") {
+                    Workload::FullSweep
+                } else {
+                    Workload::Fixed {
+                        a: args.opt_parse("a", 15u8).map_err(|e| anyhow::anyhow!(e))?,
+                        b: args.opt_parse("b", 15u8).map_err(|e| anyhow::anyhow!(e))?,
+                    }
+                },
+                n_mc: args.opt_parse("n-mc", 1000u32).map_err(|e| anyhow::anyhow!(e))?,
+                seed: args.opt_parse("seed", 2022u64).map_err(|e| anyhow::anyhow!(e))?,
+                corner: args
+                    .opt_parse("corner", Corner::Tt)
+                    .map_err(|e| anyhow::anyhow!(e))?,
+                workers: args.opt_parse("workers", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+                batch: args.opt_parse("batch", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+            };
+            let r = run_campaign(&params, &spec, backend, Some(art))?;
+            print!(
+                "{}",
+                report::mc_panel(&format!("{} MC n={}", spec.variant.name(), spec.n_mc), &r)
+            );
+            println!(
+                "throughput: {:.0} MAC evals/s over {} batches ({:.2?})",
+                r.throughput(),
+                r.batches,
+                r.wall
+            );
+            Ok(())
+        }
+        "table1" => {
+            let n_mc: u32 = args.opt_parse("n-mc", 300u32).map_err(|e| anyhow::anyhow!(e))?;
+            cmd_table1(&params, &art, backend, n_mc)
+        }
+        "run" => {
+            let path = args
+                .positional(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: smart run <config.toml>"))?;
+            let cfg = smart_insram::config::ExperimentConfig::load(path)?;
+            println!("experiment: {}", cfg.name);
+            for (i, spec) in cfg.campaigns.iter().enumerate() {
+                let r = run_campaign(&cfg.params, spec, backend, Some(art.clone()))?;
+                print!(
+                    "{}",
+                    report::mc_panel(&format!("campaign #{i} — {}", spec.variant.name()), &r)
+                );
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_info(params: &Params, art: &PathBuf) -> Result<()> {
+    let mut rt = smart_insram::runtime::XlaRuntime::open(art)?;
+    println!("platform: {}", rt.platform());
+    println!("artifact dir: {}", art.display());
+    let m = rt.manifest().clone();
+    println!("mac batches: {:?}", m.mac_batches);
+    println!("trace batches: {:?} ({} points)", m.trace_batches, m.trace_points);
+    println!("n_steps: {}", m.n_steps);
+    if let Some(p) = &m.params {
+        println!(
+            "card: VTH0={} V, gamma={} sqrt(V), C_BLB={:e} F",
+            p.device.vth0, p.device.gamma, p.circuit.c_blb
+        );
+        anyhow::ensure!(
+            *p == *params,
+            "artifacts/params.json drifted from the built-in card — re-run `make artifacts`"
+        );
+    }
+    let exe = rt.mac_executable(1)?;
+    let mut b = smart_insram::runtime::MacBatch::nominal(
+        1,
+        params.circuit.v_bulk_smart as f32,
+        1.0,
+        params.circuit.t_sample as f32,
+    );
+    b.set_row(0, 15, 15, [0.0; 4], [0.0; 4]);
+    let out = exe.run(&b)?;
+    println!("PJRT smoke 15x15 (SMART): v_mult = {:.1} mV", out.v_mult[0] * 1e3);
+    Ok(())
+}
+
+fn cmd_mac(
+    params: &Params,
+    art: &PathBuf,
+    backend: Backend,
+    variant: Variant,
+    a: u8,
+    b: u8,
+) -> Result<()> {
+    let spec = CampaignSpec {
+        variant,
+        workload: Workload::Fixed { a, b },
+        n_mc: 1,
+        seed: 0,
+        corner: Corner::Tt,
+        workers: 1,
+        batch: 1,
+    };
+    let r = run_campaign(params, &spec, backend, Some(art.clone()))?;
+    println!(
+        "{a} x {b} on {}: v_mult = {:.2} mV (ideal {:.2} mV, full-scale {:.1} mV)",
+        variant.name(),
+        r.raw_vmult.mean() * 1e3,
+        r.full_scale * (f64::from(a) / 15.0) * (f64::from(b) / 15.0) * 1e3,
+        r.full_scale * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_table1(params: &Params, art: &PathBuf, backend: Backend, n_mc: u32) -> Result<()> {
+    let model = EnergyModel::default();
+    let mut sigmas = Vec::new();
+    for v in [Variant::Smart, Variant::Aid, Variant::Imac] {
+        let spec = CampaignSpec {
+            variant: v,
+            workload: Workload::FullSweep,
+            n_mc,
+            seed: 2022,
+            corner: Corner::Tt,
+            workers: 0,
+            batch: 0,
+        };
+        let r = run_campaign(params, &spec, backend, Some(art.clone()))?;
+        sigmas.push((v, r.accuracy.rms_norm));
+    }
+    println!("{}", report::build_table1(params, &sigmas, &model));
+    for (v, _) in &sigmas {
+        let c = nominal_cost(params, *v, &model);
+        println!(
+            "{}: {:.3} pJ, {:.0} MHz, cycle {:.2} ns",
+            v.name(),
+            c.energy * 1e12,
+            c.frequency / 1e6,
+            c.t_cycle * 1e9
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! Accuracy metrics: normalized sigma (Table 1's "Accuracy (STD.V)"),
+//! SNR per [10], and bit-error rate of the reconstructed product.
+
+use super::welford::OnlineStats;
+
+/// Accumulates error samples of (measured - ideal) voltages, normalized by
+/// the variant's full-scale output.
+#[derive(Debug, Clone, Default)]
+pub struct ErrorAccumulator {
+    /// Stats of the normalized error e = (v_mult - v_ideal) / full_scale.
+    err: OnlineStats,
+    /// Stats of the normalized signal s = v_ideal / full_scale.
+    sig: OnlineStats,
+    /// Stats of the raw output voltage (for Fig. 8/9 axes).
+    raw: OnlineStats,
+    /// Count of reconstruction errors (product code mismatches).
+    bit_errors: u64,
+    /// Count of saturation-exit faults (the paper's systematic faults).
+    faults: u64,
+    n: u64,
+}
+
+impl ErrorAccumulator {
+    pub fn new() -> Self {
+        Self {
+            err: OnlineStats::new(),
+            sig: OnlineStats::new(),
+            raw: OnlineStats::new(),
+            ..Default::default()
+        }
+    }
+
+    /// Record one MAC outcome.
+    ///
+    /// * `v_mult` — measured analog output (V)
+    /// * `v_ideal` — ideal transfer output (V)
+    /// * `full_scale` — variant full-scale (V)
+    /// * `code_err` — reconstructed product != exact product
+    /// * `fault` — saturation-exit flag from the engine/artifact
+    pub fn push(&mut self, v_mult: f64, v_ideal: f64, full_scale: f64, code_err: bool, fault: bool) {
+        self.err.push((v_mult - v_ideal) / full_scale);
+        self.sig.push(v_ideal / full_scale);
+        self.raw.push(v_mult);
+        self.bit_errors += u64::from(code_err);
+        self.faults += u64::from(fault);
+        self.n += 1;
+    }
+
+    pub fn merge(&mut self, other: &ErrorAccumulator) {
+        self.err.merge(&other.err);
+        self.sig.merge(&other.sig);
+        self.raw.merge(&other.raw);
+        self.bit_errors += other.bit_errors;
+        self.faults += other.faults;
+        self.n += other.n;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn raw_stats(&self) -> &OnlineStats {
+        &self.raw
+    }
+
+    pub fn report(&self) -> AccuracyReport {
+        let rms = (self.err.variance() + self.err.mean().powi(2)).sqrt();
+        let sig_pow = self.sig.variance() + self.sig.mean().powi(2);
+        let err_pow = rms * rms;
+        AccuracyReport {
+            sigma_norm: self.err.std_dev(),
+            rms_norm: rms,
+            snr_db: if err_pow > 0.0 { 10.0 * (sig_pow / err_pow).log10() } else { f64::INFINITY },
+            ber: self.bit_errors as f64 / self.n.max(1) as f64,
+            fault_rate: self.faults as f64 / self.n.max(1) as f64,
+            n: self.n,
+        }
+    }
+}
+
+/// Summary accuracy figures for one variant/workload.
+#[derive(Debug, Clone, Copy)]
+pub struct AccuracyReport {
+    /// Std-dev of the normalized error — Table 1's "Accuracy (STD.V)".
+    pub sigma_norm: f64,
+    /// RMS of the normalized error (includes systematic offset).
+    pub rms_norm: f64,
+    /// Signal-to-error power ratio in dB — the SNR metric of [10].
+    pub snr_db: f64,
+    /// Fraction of operations whose reconstructed product was wrong.
+    pub ber: f64,
+    /// Fraction flagged with a saturation-exit (systematic) fault.
+    pub fault_rate: f64,
+    pub n: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_outputs_report_zero_error() {
+        let mut acc = ErrorAccumulator::new();
+        for i in 0..100 {
+            let v = i as f64 / 100.0;
+            acc.push(v, v, 1.0, false, false);
+        }
+        let r = acc.report();
+        assert_eq!(r.sigma_norm, 0.0);
+        assert_eq!(r.rms_norm, 0.0);
+        assert_eq!(r.ber, 0.0);
+        assert!(r.snr_db.is_infinite());
+    }
+
+    #[test]
+    fn sigma_matches_injected_noise() {
+        let mut acc = ErrorAccumulator::new();
+        // deterministic +/-0.01 alternation: sigma = 0.01, mean = 0
+        for i in 0..10_000 {
+            let e = if i % 2 == 0 { 0.01 } else { -0.01 };
+            acc.push(0.5 + e, 0.5, 1.0, false, false);
+        }
+        let r = acc.report();
+        assert!((r.sigma_norm - 0.01).abs() < 1e-6);
+        assert!((r.rms_norm - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn systematic_offset_hits_rms_not_sigma() {
+        let mut acc = ErrorAccumulator::new();
+        for _ in 0..100 {
+            acc.push(0.6, 0.5, 1.0, false, false);
+        }
+        let r = acc.report();
+        assert!(r.sigma_norm < 1e-12);
+        assert!((r.rms_norm - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ber_and_faults_count() {
+        let mut acc = ErrorAccumulator::new();
+        acc.push(0.5, 0.5, 1.0, true, false);
+        acc.push(0.5, 0.5, 1.0, false, true);
+        acc.push(0.5, 0.5, 1.0, false, false);
+        acc.push(0.5, 0.5, 1.0, true, true);
+        let r = acc.report();
+        assert!((r.ber - 0.5).abs() < 1e-12);
+        assert!((r.fault_rate - 0.5).abs() < 1e-12);
+        assert_eq!(r.n, 4);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut a = ErrorAccumulator::new();
+        let mut b = ErrorAccumulator::new();
+        let mut whole = ErrorAccumulator::new();
+        for i in 0..200 {
+            let v = (i as f64).sin() * 0.01 + 0.5;
+            if i < 77 {
+                a.push(v, 0.5, 1.0, i % 3 == 0, false);
+            } else {
+                b.push(v, 0.5, 1.0, i % 3 == 0, false);
+            }
+            whole.push(v, 0.5, 1.0, i % 3 == 0, false);
+        }
+        a.merge(&b);
+        let (ra, rw) = (a.report(), whole.report());
+        assert!((ra.sigma_norm - rw.sigma_norm).abs() < 1e-12);
+        assert!((ra.ber - rw.ber).abs() < 1e-12);
+        assert_eq!(ra.n, rw.n);
+    }
+
+    #[test]
+    fn snr_db_sanity() {
+        let mut acc = ErrorAccumulator::new();
+        // signal 0.5 constant, error 0.05 constant -> SNR = 20 dB
+        for _ in 0..10 {
+            acc.push(0.55, 0.5, 1.0, false, false);
+        }
+        assert!((acc.report().snr_db - 20.0).abs() < 1e-9);
+    }
+}

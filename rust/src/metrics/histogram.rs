@@ -1,0 +1,95 @@
+//! Fixed-bin histogram for the Fig. 8/9 Monte-Carlo distributions.
+
+/// Equal-width histogram over [lo, hi); out-of-range samples clamp to the
+/// edge bins so nothing is silently dropped.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    n: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Self { lo, hi, bins: vec![0; n_bins], n: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let nb = self.bins.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * nb as f64).floor();
+        let idx = (idx.max(0.0) as usize).min(nb - 1);
+        self.bins[idx] += 1;
+        self.n += 1;
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn total(&self) -> u64 {
+        self.n
+    }
+
+    /// Center of bin `i`.
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Mode bin's center — the histogram peak (Fig. 8/9's visual anchor).
+    pub fn mode(&self) -> f64 {
+        let (i, _) = self
+            .bins
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .expect("non-empty bins");
+        self.bin_center(i)
+    }
+
+    /// Render an ASCII sparkline of the distribution (for reports).
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.bins.iter().copied().max().unwrap_or(0).max(1);
+        self.bins
+            .iter()
+            .map(|&c| GLYPHS[(c * 7 / max) as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_and_clamping() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.push(0.05);
+        h.push(0.95);
+        h.push(-5.0); // clamps into bin 0
+        h.push(5.0); // clamps into bin 9
+        assert_eq!(h.counts()[0], 2);
+        assert_eq!(h.counts()[9], 2);
+        assert_eq!(h.total(), 4);
+    }
+
+    #[test]
+    fn mode_finds_peak() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        for _ in 0..5 {
+            h.push(0.55);
+        }
+        h.push(0.15);
+        assert!((h.mode() - 0.55).abs() < 0.05);
+    }
+
+    #[test]
+    fn sparkline_length_matches_bins() {
+        let mut h = Histogram::new(0.0, 1.0, 25);
+        h.push(0.5);
+        assert_eq!(h.sparkline().chars().count(), 25);
+    }
+}

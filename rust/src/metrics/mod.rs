@@ -1,0 +1,12 @@
+//! Statistics + accuracy metrics: Welford online stats, histograms, BER,
+//! and the SNR-based accuracy figure of [10] used in Table 1.
+
+mod error;
+mod histogram;
+mod quantile;
+mod welford;
+
+pub use error::{AccuracyReport, ErrorAccumulator};
+pub use histogram::Histogram;
+pub use quantile::SampleSet;
+pub use welford::OnlineStats;

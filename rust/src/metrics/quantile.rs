@@ -1,0 +1,121 @@
+//! Quantiles + bootstrap confidence intervals for MC campaign reports:
+//! a 1000-point sigma estimate deserves an error bar (Fig. 8/9).
+
+use crate::montecarlo::SplitMix64;
+
+/// Reservoir of raw samples with quantile and bootstrap queries.
+/// Campaigns are at most ~10^6 rows here, so keeping the samples is fine;
+/// for larger runs the Welford path remains the primary aggregate.
+#[derive(Debug, Clone, Default)]
+pub struct SampleSet {
+    xs: Vec<f64>,
+}
+
+impl SampleSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Linear-interpolated quantile, q in [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!(!self.xs.is_empty() && (0.0..=1.0).contains(&q));
+        let mut s = self.xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q * (s.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (s[hi] - s[lo]) * (pos - lo as f64)
+        }
+    }
+
+    fn std_of(xs: &[f64]) -> f64 {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        (xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n).sqrt()
+    }
+
+    /// Bootstrap percentile CI of the standard deviation: resample with
+    /// replacement `n_boot` times, return (lo, hi) at the given level
+    /// (e.g. 0.95). Seeded — reports are reproducible.
+    pub fn bootstrap_std_ci(&self, n_boot: u32, level: f64, seed: u64) -> (f64, f64) {
+        assert!(self.xs.len() >= 2 && (0.0..1.0).contains(&(1.0 - level)));
+        let mut rng = SplitMix64::new(seed);
+        let n = self.xs.len();
+        let mut stds: Vec<f64> = (0..n_boot)
+            .map(|_| {
+                let resample: Vec<f64> =
+                    (0..n).map(|_| self.xs[(rng.next_u64() % n as u64) as usize]).collect();
+                Self::std_of(&resample)
+            })
+            .collect();
+        stds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let alpha = (1.0 - level) / 2.0;
+        let idx = |q: f64| ((q * (n_boot - 1) as f64).round() as usize).min(n_boot as usize - 1);
+        (stds[idx(alpha)], stds[idx(1.0 - alpha)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform() -> SampleSet {
+        let mut s = SampleSet::new();
+        for i in 0..=100 {
+            s.push(i as f64 / 100.0);
+        }
+        s
+    }
+
+    #[test]
+    fn quantiles_of_uniform_grid() {
+        let s = uniform();
+        assert_eq!(s.quantile(0.0), 0.0);
+        assert!((s.quantile(0.5) - 0.5).abs() < 1e-12);
+        assert_eq!(s.quantile(1.0), 1.0);
+        assert!((s.quantile(0.25) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bootstrap_ci_brackets_true_sigma() {
+        // N(0, 2) samples via the library RNG
+        let mut rng = SplitMix64::new(9);
+        let mut s = SampleSet::new();
+        for _ in 0..2000 {
+            s.push(2.0 * rng.next_normal());
+        }
+        let (lo, hi) = s.bootstrap_std_ci(300, 0.95, 1);
+        assert!(lo < 2.0 && 2.0 < hi, "CI [{lo}, {hi}] misses sigma=2");
+        assert!(hi - lo < 0.4, "CI too wide: [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn bootstrap_is_seeded() {
+        let s = uniform();
+        assert_eq!(
+            s.bootstrap_std_ci(100, 0.9, 7),
+            s.bootstrap_std_ci(100, 0.9, 7)
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantile_rejects_empty() {
+        SampleSet::new().quantile(0.5);
+    }
+}

@@ -1,0 +1,9 @@
+//! Monte-Carlo process/mismatch substrate: seeded RNG, Pelgrom-style
+//! mismatch sampling, and process-corner generation — the stand-in for the
+//! foundry statistical models behind the paper's 1000-point MC (§IV).
+
+mod rng;
+mod sampler;
+
+pub use rng::SplitMix64;
+pub use sampler::{Corner, McSample, MismatchSampler};

@@ -1,0 +1,112 @@
+//! SplitMix64 PRNG + Box-Muller normals. Self-contained and seeded so every
+//! campaign is bit-reproducible from its config (no external RNG crate).
+
+/// SplitMix64: tiny, fast, passes BigCrush when used as a stream.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+    /// Cached second Box-Muller deviate.
+    spare: Option<f64>,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed, spare: None }
+    }
+
+    /// Derive an independent stream (for per-worker RNGs).
+    pub fn split(&mut self, stream: u64) -> Self {
+        Self::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box-Muller (polar-free form; caches the pair).
+    pub fn next_normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        // Guard u1 > 0 so ln() is finite.
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (std::f64::consts::TAU * u2).sin_cos();
+        self.spare = Some(r * s);
+        r * c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = SplitMix64::new(7);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(123);
+        let n = 100_000;
+        let (mut m, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.next_normal();
+            m += z;
+            m2 += z * z;
+        }
+        let mean = m / n as f64;
+        let var = m2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn split_streams_are_independent_of_parent_order() {
+        let mut base = SplitMix64::new(9);
+        let mut s1 = base.split(1);
+        let x = s1.next_u64();
+        let mut base2 = SplitMix64::new(9);
+        let mut s1b = base2.split(1);
+        assert_eq!(x, s1b.next_u64());
+    }
+}

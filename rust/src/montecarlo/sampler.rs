@@ -1,0 +1,147 @@
+//! Pelgrom mismatch + process-corner sampling for the MC campaigns.
+
+use super::rng::SplitMix64;
+
+/// Per-word mismatch deviates: one (dVTH, dbeta/beta) pair per cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct McSample {
+    pub dvth: [f64; 4],
+    pub dbeta: [f64; 4],
+}
+
+impl McSample {
+    /// The mismatch-free nominal device set.
+    pub fn nominal() -> Self {
+        Self { dvth: [0.0; 4], dbeta: [0.0; 4] }
+    }
+}
+
+/// Global process corner: a correlated shift applied on top of the local
+/// (Pelgrom) mismatch. TT is centered; FS/SF skew VTH one way and beta the
+/// other, as slow/fast corners do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Corner {
+    Tt,
+    Ff,
+    Ss,
+}
+
+impl std::str::FromStr for Corner {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "tt" => Ok(Self::Tt),
+            "ff" => Ok(Self::Ff),
+            "ss" => Ok(Self::Ss),
+            other => Err(format!("unknown corner '{other}' (tt|ff|ss)")),
+        }
+    }
+}
+
+impl Corner {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Tt => "tt",
+            Self::Ff => "ff",
+            Self::Ss => "ss",
+        }
+    }
+
+    /// (dVTH, dbeta) global shifts for the corner.
+    pub fn shifts(self) -> (f64, f64) {
+        match self {
+            Self::Tt => (0.0, 0.0),
+            Self::Ff => (-15e-3, 0.05),
+            Self::Ss => (15e-3, -0.05),
+        }
+    }
+}
+
+/// Draws per-cell mismatch deviates: local Pelgrom N(0, sigma) plus the
+/// corner's correlated shift.
+#[derive(Debug, Clone)]
+pub struct MismatchSampler {
+    rng: SplitMix64,
+    pub sigma_vth: f64,
+    pub sigma_beta: f64,
+    pub corner: Corner,
+}
+
+impl MismatchSampler {
+    pub fn new(seed: u64, sigma_vth: f64, sigma_beta: f64) -> Self {
+        Self { rng: SplitMix64::new(seed), sigma_vth, sigma_beta, corner: Corner::Tt }
+    }
+
+    pub fn with_corner(mut self, corner: Corner) -> Self {
+        self.corner = corner;
+        self
+    }
+
+    /// Draw one word's deviates.
+    pub fn sample(&mut self) -> McSample {
+        let (cv, cb) = self.corner.shifts();
+        let mut s = McSample::nominal();
+        for i in 0..4 {
+            s.dvth[i] = cv + self.sigma_vth * self.rng.next_normal();
+            s.dbeta[i] = cb + self.sigma_beta * self.rng.next_normal();
+        }
+        s
+    }
+
+    /// Draw a batch of `n` words.
+    pub fn sample_batch(&mut self, n: usize) -> Vec<McSample> {
+        (0..n).map(|_| self.sample()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproducible_from_seed() {
+        let a = MismatchSampler::new(5, 8e-3, 0.02).sample_batch(16);
+        let b = MismatchSampler::new(5, 8e-3, 0.02).sample_batch(16);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn moments_match_sigmas() {
+        let mut s = MismatchSampler::new(11, 8e-3, 0.02);
+        let batch = s.sample_batch(20_000);
+        let vals: Vec<f64> = batch.iter().flat_map(|m| m.dvth).collect();
+        let n = vals.len() as f64;
+        let mean = vals.iter().sum::<f64>() / n;
+        let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 3e-4, "mean {mean}");
+        assert!((var.sqrt() - 8e-3).abs() < 3e-4, "sigma {}", var.sqrt());
+    }
+
+    #[test]
+    fn corners_shift_the_mean() {
+        let ss = MismatchSampler::new(3, 1e-6, 1e-6).with_corner(Corner::Ss).sample();
+        let ff = MismatchSampler::new(3, 1e-6, 1e-6).with_corner(Corner::Ff).sample();
+        assert!(ss.dvth[0] > 10e-3);
+        assert!(ff.dvth[0] < -10e-3);
+        assert!(ss.dbeta[0] < 0.0 && ff.dbeta[0] > 0.0);
+    }
+
+    #[test]
+    fn zero_sigma_collapses_to_corner() {
+        let s = MismatchSampler::new(1, 0.0, 0.0).sample();
+        assert_eq!(s, McSample::nominal());
+    }
+
+    #[test]
+    fn cells_are_uncorrelated() {
+        let mut s = MismatchSampler::new(77, 8e-3, 0.02);
+        let batch = s.sample_batch(5_000);
+        // covariance between cell 0 and cell 1 dvth should be ~0
+        let n = batch.len() as f64;
+        let m0 = batch.iter().map(|b| b.dvth[0]).sum::<f64>() / n;
+        let m1 = batch.iter().map(|b| b.dvth[1]).sum::<f64>() / n;
+        let cov = batch.iter().map(|b| (b.dvth[0] - m0) * (b.dvth[1] - m1)).sum::<f64>() / n;
+        assert!(cov.abs() < 5e-6, "cov {cov}");
+    }
+}

@@ -1,0 +1,325 @@
+//! 65 nm stand-in model card + circuit constants.
+//!
+//! Single source of truth on the Rust side, kept in lock-step with
+//! `python/compile/params.py`. `make artifacts` mirrors the Python values
+//! into `artifacts/params.json`; [`Params::load_artifact_json`] plus the
+//! `params_json_matches_builtin` integration test guarantee the two sides
+//! never drift.
+
+use crate::util::json::{self, Value};
+
+/// 65 nm NMOS access-transistor card (`M2acc` in the paper's Fig. 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceCard {
+    /// Cell supply voltage (V). Paper Table 1: 1.0 V for SMART/AID, 1.2 V for IMAC [9].
+    pub vdd: f64,
+    /// Zero-bias threshold voltage (V). Low-VT access device: the paper's WL
+    /// margin starts at 300 mV unbiased, 175 mV under 0.6 V body bias.
+    pub vth0: f64,
+    /// Body-effect coefficient gamma (sqrt(V)) — Eq. 6. Calibrated so
+    /// dVTH(V_bulk = 0.6 V) = -125 mV (paper Fig. 3).
+    pub gamma: f64,
+    /// 2*phi_F surface potential (V) — Eq. 6.
+    pub phi2f: f64,
+    /// Process transconductance mu_n * C_ox (A/V^2).
+    pub mu_cox: f64,
+    /// Gate aspect ratio W/L (195 nm / 65 nm).
+    pub w_over_l: f64,
+    /// Channel-length modulation lambda (1/V).
+    pub lam: f64,
+    /// Subthreshold slope factor n.
+    pub n_sub: f64,
+    /// Thermal voltage kT/q at 300 K (V).
+    pub vt_thermal: f64,
+    /// Relative conductance of the off (stored-0) leakage path.
+    pub k_leak: f64,
+}
+
+impl Default for DeviceCard {
+    fn default() -> Self {
+        Self {
+            vdd: 1.0,
+            vth0: 0.30,
+            gamma: 0.306,
+            phi2f: 0.88,
+            mu_cox: 180e-6,
+            w_over_l: 3.0,
+            lam: 0.08,
+            n_sub: 1.5,
+            vt_thermal: 0.026,
+            k_leak: 1e-4,
+        }
+    }
+}
+
+impl DeviceCard {
+    /// Transconductance factor beta = mu_n * C_ox * W/L (A/V^2).
+    pub fn beta(&self) -> f64 {
+        self.mu_cox * self.w_over_l
+    }
+
+    /// Eq. 6 threshold shift for a forward body bias of `v_bulk` volts
+    /// (V_SB = -v_bulk; the sqrt argument is clamped at 0 — beyond that the
+    /// bulk-source junction would forward-bias).
+    pub fn delta_vth_body(&self, v_bulk: f64) -> f64 {
+        let inner = (self.phi2f - v_bulk).max(0.0);
+        self.gamma * (inner.sqrt() - self.phi2f.sqrt())
+    }
+
+    /// Effective threshold under body bias plus a mismatch offset.
+    pub fn vth_effective(&self, v_bulk: f64, dvth: f64) -> f64 {
+        self.vth0 + self.delta_vth_body(v_bulk) + dvth
+    }
+
+    fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let mut d = Self::default();
+        let f = |key: &str, dst: &mut f64| -> anyhow::Result<()> {
+            *dst = v
+                .get(key)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("device.{key} missing"))?;
+            Ok(())
+        };
+        f("vdd", &mut d.vdd)?;
+        f("vth0", &mut d.vth0)?;
+        f("gamma", &mut d.gamma)?;
+        f("phi2f", &mut d.phi2f)?;
+        f("mu_cox", &mut d.mu_cox)?;
+        f("w_over_l", &mut d.w_over_l)?;
+        f("lam", &mut d.lam)?;
+        f("n_sub", &mut d.n_sub)?;
+        f("vt_thermal", &mut d.vt_thermal)?;
+        f("k_leak", &mut d.k_leak)?;
+        Ok(d)
+    }
+}
+
+/// Bitline / timing / DAC constants for the 4x4-bit MAC column.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CircuitCard {
+    /// BLB sampling capacitance (F).
+    pub c_blb: f64,
+    /// Top of the usable WL range (V) — paper §III: 700 mV.
+    pub wl_max: f64,
+    /// WL pulse width at the sampling instant (s); identical across variants
+    /// per the paper's "same WL timing" comparison setup.
+    pub t_sample: f64,
+    /// Transient integration steps (must match the AOT-compiled kernel).
+    pub n_steps: u32,
+    /// Operand bit width N (4x4-bit MAC).
+    pub n_bits: u32,
+    /// SMART forward body bias (V) from the dual-VDD rail.
+    pub v_bulk_smart: f64,
+    /// Pelgrom-model sigma(VTH) for the MC stand-in (V).
+    pub sigma_vth: f64,
+    /// Relative sigma(beta).
+    pub sigma_beta: f64,
+}
+
+impl Default for CircuitCard {
+    fn default() -> Self {
+        Self {
+            c_blb: 30e-15,
+            wl_max: 0.70,
+            t_sample: 0.12e-9,
+            n_steps: 256,
+            n_bits: 4,
+            v_bulk_smart: 0.6,
+            sigma_vth: 8e-3,
+            sigma_beta: 0.02,
+        }
+    }
+}
+
+impl CircuitCard {
+    /// Number of DAC levels minus one: 2^N - 1 (15 for the 4-bit operand).
+    pub fn full_code(&self) -> f64 {
+        (1u32 << self.n_bits) as f64 - 1.0
+    }
+
+    fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let mut c = Self::default();
+        let get = |key: &str| -> anyhow::Result<f64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("circuit.{key} missing"))
+        };
+        c.c_blb = get("c_blb")?;
+        c.wl_max = get("wl_max")?;
+        c.t_sample = get("t_sample")?;
+        c.n_steps = get("n_steps")? as u32;
+        c.n_bits = get("n_bits")? as u32;
+        c.v_bulk_smart = get("v_bulk_smart")?;
+        c.sigma_vth = get("sigma_vth")?;
+        c.sigma_beta = get("sigma_beta")?;
+        Ok(c)
+    }
+}
+
+/// Complete model card (device + circuit).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Params {
+    pub device: DeviceCard,
+    pub circuit: CircuitCard,
+}
+
+impl Params {
+    /// Parse the card mirrored by `make artifacts` into `artifacts/params.json`.
+    pub fn load_artifact_json(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Self {
+            device: DeviceCard::from_value(
+                v.get("device").ok_or_else(|| anyhow::anyhow!("'device' missing"))?,
+            )?,
+            circuit: CircuitCard::from_value(
+                v.get("circuit").ok_or_else(|| anyhow::anyhow!("'circuit' missing"))?,
+            )?,
+        })
+    }
+
+    /// Override card fields from a parsed config `Value` (TOML-lite tree);
+    /// unknown keys error, missing keys keep their defaults.
+    pub fn apply_overrides(&mut self, v: &Value) -> anyhow::Result<()> {
+        let apply = |obj: &Value, setters: &mut [(&str, &mut f64)]| -> anyhow::Result<()> {
+            if let Value::Obj(m) = obj {
+                'keys: for (k, val) in m {
+                    for (name, dst) in setters.iter_mut() {
+                        if k == name {
+                            **dst = val
+                                .as_f64()
+                                .ok_or_else(|| anyhow::anyhow!("{k} must be a number"))?;
+                            continue 'keys;
+                        }
+                    }
+                    anyhow::bail!("unknown param key '{k}'");
+                }
+            }
+            Ok(())
+        };
+        if let Some(dev) = v.get("device") {
+            let d = &mut self.device;
+            apply(
+                dev,
+                &mut [
+                    ("vdd", &mut d.vdd),
+                    ("vth0", &mut d.vth0),
+                    ("gamma", &mut d.gamma),
+                    ("phi2f", &mut d.phi2f),
+                    ("mu_cox", &mut d.mu_cox),
+                    ("w_over_l", &mut d.w_over_l),
+                    ("lam", &mut d.lam),
+                    ("n_sub", &mut d.n_sub),
+                    ("vt_thermal", &mut d.vt_thermal),
+                    ("k_leak", &mut d.k_leak),
+                ],
+            )?;
+        }
+        if let Some(cir) = v.get("circuit") {
+            let mut n_steps = self.circuit.n_steps as f64;
+            let mut n_bits = self.circuit.n_bits as f64;
+            let c = &mut self.circuit;
+            apply(
+                cir,
+                &mut [
+                    ("c_blb", &mut c.c_blb),
+                    ("wl_max", &mut c.wl_max),
+                    ("t_sample", &mut c.t_sample),
+                    ("n_steps", &mut n_steps),
+                    ("n_bits", &mut n_bits),
+                    ("v_bulk_smart", &mut c.v_bulk_smart),
+                    ("sigma_vth", &mut c.sigma_vth),
+                    ("sigma_beta", &mut c.sigma_beta),
+                ],
+            )?;
+            c.n_steps = n_steps as u32;
+            c.n_bits = n_bits as u32;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn body_bias_shift_is_minus_125mv() {
+        let d = DeviceCard::default();
+        let shift = d.delta_vth_body(0.6);
+        assert!(
+            (-0.130..-0.120).contains(&shift),
+            "dVTH(0.6 V) = {shift} V, expected ~-125 mV (Fig. 3)"
+        );
+    }
+
+    #[test]
+    fn body_bias_zero_is_noop() {
+        let d = DeviceCard::default();
+        assert_eq!(d.delta_vth_body(0.0), 0.0);
+        assert_eq!(d.vth_effective(0.0, 0.0), d.vth0);
+    }
+
+    #[test]
+    fn body_bias_monotone_decreasing() {
+        let d = DeviceCard::default();
+        let mut last = f64::INFINITY;
+        for i in 0..=12 {
+            let vth = d.vth_effective(i as f64 * 0.05, 0.0);
+            assert!(vth < last, "VTH must decrease with forward body bias");
+            last = vth;
+        }
+    }
+
+    #[test]
+    fn wl_margins_match_paper() {
+        // [300, 700] mV unbiased -> [175, 700] mV at 0.6 V (paper §III).
+        let d = DeviceCard::default();
+        let c = CircuitCard::default();
+        assert!((d.vth_effective(0.0, 0.0) - 0.300).abs() < 1e-3);
+        assert!((d.vth_effective(c.v_bulk_smart, 0.0) - 0.175).abs() < 2e-3);
+    }
+
+    #[test]
+    fn junction_clamp_beyond_phi2f() {
+        let d = DeviceCard::default();
+        let at_limit = d.delta_vth_body(d.phi2f);
+        let beyond = d.delta_vth_body(d.phi2f + 0.3);
+        assert_eq!(at_limit, beyond);
+    }
+
+    #[test]
+    fn full_code_is_15() {
+        assert_eq!(CircuitCard::default().full_code(), 15.0);
+    }
+
+    #[test]
+    fn parses_python_style_json() {
+        let text = r#"{
+            "circuit": {"c_blb": 3e-14, "n_bits": 4, "n_steps": 256,
+                        "sigma_beta": 0.02, "sigma_vth": 0.008,
+                        "t_sample": 1.2e-10, "v_bulk_smart": 0.6, "wl_max": 0.7},
+            "device": {"gamma": 0.306, "k_leak": 0.0001, "lam": 0.08,
+                       "mu_cox": 0.00018, "n_sub": 1.5, "phi2f": 0.88,
+                       "vdd": 1.0, "vt_thermal": 0.026, "vth0": 0.3,
+                       "w_over_l": 3.0}
+        }"#;
+        let p = Params::load_artifact_json(text).unwrap();
+        assert_eq!(p, Params::default());
+    }
+
+    #[test]
+    fn load_rejects_missing_fields() {
+        assert!(Params::load_artifact_json(r#"{"device": {}, "circuit": {}}"#).is_err());
+        assert!(Params::load_artifact_json("{}").is_err());
+    }
+
+    #[test]
+    fn overrides_apply_and_reject_unknown() {
+        let mut p = Params::default();
+        let v = crate::util::toml_lite::parse("[circuit]\nc_blb = 4.5e-14\n").unwrap();
+        p.apply_overrides(&v).unwrap();
+        assert_eq!(p.circuit.c_blb, 4.5e-14);
+        let bad = crate::util::toml_lite::parse("[device]\nbogus = 1\n").unwrap();
+        assert!(p.apply_overrides(&bad).is_err());
+    }
+}

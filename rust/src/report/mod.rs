@@ -1,0 +1,140 @@
+//! Report emission: the paper's tables/figures as markdown and CSV.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::CampaignReport;
+use crate::energy::{EnergyModel, LiteratureRow, OpCost, LITERATURE_ROWS};
+use crate::mac::Variant;
+
+/// One simulated row of Table 1.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub label: String,
+    pub tech_nm: u32,
+    pub supply: f64,
+    pub energy_pj: f64,
+    pub sigma: f64,
+    pub freq_mhz: f64,
+}
+
+impl Table1Row {
+    pub fn new(variant: Variant, cost: &OpCost, sigma: f64, supply: f64) -> Self {
+        Self {
+            label: variant.name().to_string(),
+            tech_nm: 65,
+            supply,
+            energy_pj: cost.energy * 1e12,
+            sigma,
+            freq_mhz: cost.frequency / 1e6,
+        }
+    }
+}
+
+/// Render Table 1 (simulated rows + quoted literature rows) as markdown.
+pub fn table1_markdown(rows: &[Table1Row], lit: &[LiteratureRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "| design | tech (nm) | supply (V) | MAC energy (pJ) | accuracy (STD.V) | frequency (MHz) |");
+    let _ = writeln!(s, "|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {:.1} | {:.3} | {:.4} | {:.0} |",
+            r.label, r.tech_nm, r.supply, r.energy_pj, r.sigma, r.freq_mhz
+        );
+    }
+    for l in lit {
+        let acc = l.accuracy_std.map_or("/".to_string(), |a| format!("{a:.3}"));
+        let _ = writeln!(
+            s,
+            "| {} | {} | {:.1} | {:.3} | {} | {} |",
+            l.label, l.tech_nm, l.supply, l.mac_energy_pj, acc, l.freq_mhz
+        );
+    }
+    s
+}
+
+/// Standard Table 1 pipeline: simulate the three head-to-head variants.
+pub fn build_table1(
+    params: &crate::params::Params,
+    sigmas: &[(Variant, f64)],
+    model: &EnergyModel,
+) -> String {
+    let rows: Vec<Table1Row> = sigmas
+        .iter()
+        .map(|&(v, sigma)| {
+            let cost = crate::energy::nominal_cost(params, v, model);
+            Table1Row::new(v, &cost, sigma, v.config(params).supply)
+        })
+        .collect();
+    table1_markdown(&rows, &LITERATURE_ROWS)
+}
+
+/// Render a campaign's MC histogram + stats (Fig. 8/9 panel) as text.
+pub fn mc_panel(title: &str, r: &CampaignReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "## {title}");
+    let ci = r
+        .sigma_ci
+        .map(|(lo, hi)| format!(" (95% CI [{:.2}, {:.2}])", lo * 1e3, hi * 1e3))
+        .unwrap_or_default();
+    let _ = writeln!(
+        s,
+        "n={} mean={:.1} mV sigma={:.2} mV{ci} sigma/FS={:.4} BER={:.4} faults={:.4}",
+        r.rows,
+        r.raw_vmult.mean() * 1e3,
+        r.raw_vmult.std_dev() * 1e3,
+        r.accuracy.sigma_norm,
+        r.accuracy.ber,
+        r.accuracy.fault_rate,
+    );
+    let _ = writeln!(s, "V_mult histogram [0, {:.0} mV):", r.full_scale * 1.25 * 1e3);
+    let _ = writeln!(s, "{}", r.hist.sparkline());
+    s
+}
+
+/// CSV emitter for figure series: header + rows of (x, series..., value).
+pub fn csv<H: AsRef<str>>(header: &[H], rows: &[Vec<f64>]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{}",
+        header.iter().map(|h| h.as_ref()).collect::<Vec<_>>().join(",")
+    );
+    for row in rows {
+        let _ = writeln!(
+            s,
+            "{}",
+            row.iter().map(|v| format!("{v:.6e}")).collect::<Vec<_>>().join(",")
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::EnergyModel;
+    use crate::params::Params;
+
+    #[test]
+    fn table1_contains_all_designs() {
+        let p = Params::default();
+        let t = build_table1(
+            &p,
+            &[(Variant::Smart, 0.01), (Variant::Aid, 0.03), (Variant::Imac, 0.1)],
+            &EnergyModel::default(),
+        );
+        for needle in ["SMART", "AID [10]", "IMAC [9]", "[14] (lit.)", "[21] (lit.)", "1.300", "3.500"] {
+            assert!(t.contains(needle), "missing {needle} in:\n{t}");
+        }
+        assert_eq!(t.lines().count(), 2 + 3 + 2);
+    }
+
+    #[test]
+    fn csv_formats_rows() {
+        let out = csv(&["x", "y"], &[vec![1.0, 2.0], vec![3.0, 4.5]]);
+        let mut lines = out.lines();
+        assert_eq!(lines.next().unwrap(), "x,y");
+        assert!(lines.next().unwrap().starts_with("1.0"));
+    }
+}

@@ -1,0 +1,142 @@
+//! Artifact manifest: the index `python/compile/aot.py` writes next to the
+//! HLO text files, plus the mirrored model card.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::params::Params;
+use crate::util::json::{self, Value};
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub path: String,
+    pub kind: String,
+    pub batch: usize,
+    pub n_points: Option<usize>,
+}
+
+/// `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+    pub mac_batches: Vec<usize>,
+    pub trace_batches: Vec<usize>,
+    pub trace_points: usize,
+    /// Batch sizes of the multi-row dot-product artifacts (may be empty
+    /// for manifests generated before the VMM extension).
+    pub dot_batches: Vec<usize>,
+    /// Row count R of the dot artifacts.
+    pub dot_rows: usize,
+    pub n_steps: u32,
+    pub params: Option<Params>,
+}
+
+impl Manifest {
+    /// Load manifest + the mirrored params from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .context("manifest.json missing — run `make artifacts`")?;
+        let mut m = Self::parse(&text)?;
+        if let Ok(ptext) = std::fs::read_to_string(dir.join("params.json")) {
+            m.params = Some(Params::load_artifact_json(&ptext)?);
+        }
+        Ok(m)
+    }
+
+    /// Parse the manifest JSON body.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let usizes = |key: &str| -> Result<Vec<usize>> {
+            v.get(key)
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("manifest '{key}' missing"))?
+                .iter()
+                .map(|x| {
+                    x.as_u64()
+                        .map(|n| n as usize)
+                        .ok_or_else(|| anyhow::anyhow!("bad entry in '{key}'"))
+                })
+                .collect()
+        };
+        let mut artifacts = Vec::new();
+        for a in v
+            .get("artifacts")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest 'artifacts' missing"))?
+        {
+            let s = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("artifact '{k}' missing"))?
+                    .to_string())
+            };
+            artifacts.push(Artifact {
+                name: s("name")?,
+                path: s("path")?,
+                kind: s("kind")?,
+                batch: a
+                    .get("batch")
+                    .and_then(Value::as_u64)
+                    .ok_or_else(|| anyhow::anyhow!("artifact 'batch' missing"))?
+                    as usize,
+                n_points: a.get("n_points").and_then(Value::as_u64).map(|n| n as usize),
+            });
+        }
+        let dot_batches = if v.get("dot_batches").is_some() {
+            usizes("dot_batches")?
+        } else {
+            Vec::new()
+        };
+        Ok(Self {
+            artifacts,
+            mac_batches: usizes("mac_batches")?,
+            trace_batches: usizes("trace_batches")?,
+            dot_batches,
+            dot_rows: v.get("dot_rows").and_then(Value::as_u64).unwrap_or(0) as usize,
+            trace_points: v
+                .get("trace_points")
+                .and_then(Value::as_u64)
+                .unwrap_or(0) as usize,
+            n_steps: v.get("n_steps").and_then(Value::as_u64).unwrap_or(0) as u32,
+            params: None,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generated_manifest_shape() {
+        let json = r#"{
+            "artifacts": [
+                {"name": "mac_b1", "path": "mac_b1.hlo.txt", "kind": "mac", "batch": 1},
+                {"name": "trace_b8", "path": "trace_b8.hlo.txt", "kind": "trace", "batch": 8, "n_points": 64}
+            ],
+            "mac_batches": [1, 256, 1024],
+            "trace_batches": [8],
+            "trace_points": 64,
+            "n_steps": 256
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.mac_batches, vec![1, 256, 1024]);
+        assert_eq!(m.find("mac_b1").unwrap().batch, 1);
+        assert_eq!(m.find("trace_b8").unwrap().n_points, Some(64));
+        assert!(m.find("nope").is_none());
+        assert_eq!(m.n_steps, 256);
+    }
+
+    #[test]
+    fn rejects_malformed_manifest() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": 3}], "mac_batches": [], "trace_batches": []}"#).is_err());
+    }
+}

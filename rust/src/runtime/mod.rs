@@ -1,0 +1,407 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute them
+//! from the Rust hot path.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py`): jax >= 0.5
+//! emits serialized protos with 64-bit instruction ids that this image's
+//! xla_extension 0.5.1 rejects; `HloModuleProto::from_text_file` reassigns
+//! ids and round-trips cleanly.
+//!
+//! PJRT handles are raw C pointers (`!Send`/`!Sync`), so a runtime is
+//! thread-local by construction: the coordinator's worker pool builds one
+//! [`XlaRuntime`] per worker thread.
+
+mod artifact;
+
+pub use artifact::{Artifact, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Inputs of one AOT `mac_forward` execution (one fixed-size batch).
+#[derive(Debug, Clone)]
+pub struct MacBatch {
+    /// Stored operand bits, row-major (batch, 4), MSB first, values {0,1}.
+    pub a_bits: Vec<f32>,
+    /// DAC codes (batch,), values 0..=15.
+    pub b_code: Vec<f32>,
+    /// Forward body bias (V).
+    pub v_bulk: f32,
+    /// DAC mode flag: 0 = linear Eq. 7, 1 = sqrt Eq. 8.
+    pub dac_mode: f32,
+    /// WL pulse width at the sampling instant (s).
+    pub t_sample: f32,
+    /// Mismatch deviates, row-major (batch, 4).
+    pub dvth: Vec<f32>,
+    pub dbeta: Vec<f32>,
+}
+
+impl MacBatch {
+    /// Batch with nominal devices, ready to be filled.
+    pub fn nominal(batch: usize, v_bulk: f32, dac_mode: f32, t_sample: f32) -> Self {
+        Self {
+            a_bits: vec![0.0; batch * 4],
+            b_code: vec![0.0; batch],
+            v_bulk,
+            dac_mode,
+            t_sample,
+            dvth: vec![0.0; batch * 4],
+            dbeta: vec![0.0; batch * 4],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.b_code.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.b_code.is_empty()
+    }
+
+    /// Set row `i` to operands (a, b) with mismatch deviates.
+    pub fn set_row(&mut self, i: usize, a: u8, b: u8, dvth: [f32; 4], dbeta: [f32; 4]) {
+        assert!(a < 16 && b < 16);
+        for k in 0..4 {
+            self.a_bits[i * 4 + k] = f32::from(a >> (3 - k) & 1);
+            self.dvth[i * 4 + k] = dvth[k];
+            self.dbeta[i * 4 + k] = dbeta[k];
+        }
+        self.b_code[i] = f32::from(b);
+    }
+}
+
+/// Outputs of one AOT `mac_forward` execution.
+#[derive(Debug, Clone)]
+pub struct MacBatchOut {
+    /// Weighted discharge voltage per row — the paper's V_multiplication.
+    pub v_mult: Vec<f32>,
+    /// Sampled BLB voltages, row-major (batch, 4).
+    pub v_blb: Vec<f32>,
+    /// Raw dynamic bitline energy per row (J).
+    pub energy: Vec<f32>,
+    /// Saturation-exit fault flags per row (0/1).
+    pub fault: Vec<f32>,
+}
+
+/// A compiled MAC executable for one fixed batch size.
+pub struct MacExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+}
+
+impl MacExecutable {
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Execute one batch. `inputs.len()` must equal the compiled batch.
+    pub fn run(&self, inputs: &MacBatch) -> Result<MacBatchOut> {
+        let b = self.batch;
+        anyhow::ensure!(
+            inputs.len() == b,
+            "batch mismatch: executable compiled for {b}, got {}",
+            inputs.len()
+        );
+        let lit = |v: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(v).reshape(dims)?)
+        };
+        let args = [
+            lit(&inputs.a_bits, &[b as i64, 4])?,
+            lit(&inputs.b_code, &[b as i64])?,
+            xla::Literal::scalar(inputs.v_bulk),
+            xla::Literal::scalar(inputs.dac_mode),
+            xla::Literal::scalar(inputs.t_sample),
+            lit(&inputs.dvth, &[b as i64, 4])?,
+            lit(&inputs.dbeta, &[b as i64, 4])?,
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?;
+        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+        anyhow::ensure!(tuple.len() == 4, "expected 4 outputs, got {}", tuple.len());
+        let mut it = tuple.into_iter();
+        let out = MacBatchOut {
+            v_mult: it.next().unwrap().to_vec::<f32>()?,
+            v_blb: it.next().unwrap().to_vec::<f32>()?,
+            energy: it.next().unwrap().to_vec::<f32>()?,
+            fault: it.next().unwrap().to_vec::<f32>()?,
+        };
+        anyhow::ensure!(out.v_mult.len() == b && out.v_blb.len() == b * 4);
+        Ok(out)
+    }
+}
+
+/// Inputs of one AOT `dot_forward` execution: a (batch, R)-row analog
+/// vector-matrix-multiply column (Fig. 7 array as a VMM engine).
+#[derive(Debug, Clone)]
+pub struct DotBatch {
+    /// Stored weight bits, row-major (batch, R, 4), MSB first.
+    pub a_bits: Vec<f32>,
+    /// Per-row DAC codes (batch, R).
+    pub b_code: Vec<f32>,
+    pub v_bulk: f32,
+    pub dac_mode: f32,
+    /// WL pulse width (s). Convention: `t_sample / 4` keeps the all-rows
+    /// full scale equal to the single-row MAC's (C_bl scales with R).
+    pub t_sample: f32,
+    pub dvth: Vec<f32>,
+    pub dbeta: Vec<f32>,
+    rows: usize,
+}
+
+impl DotBatch {
+    pub fn nominal(batch: usize, rows: usize, v_bulk: f32, dac_mode: f32, t_sample: f32) -> Self {
+        Self {
+            a_bits: vec![0.0; batch * rows * 4],
+            b_code: vec![0.0; batch * rows],
+            v_bulk,
+            dac_mode,
+            t_sample,
+            dvth: vec![0.0; batch * rows * 4],
+            dbeta: vec![0.0; batch * rows * 4],
+            rows,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.b_code.len() / self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.b_code.is_empty()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Set row `r` of batch element `i` to weight `a`, code `b`, deviates.
+    pub fn set_row(&mut self, i: usize, r: usize, a: u8, b: u8, dvth: [f32; 4], dbeta: [f32; 4]) {
+        assert!(a < 16 && b < 16 && r < self.rows);
+        let base = (i * self.rows + r) * 4;
+        for k in 0..4 {
+            self.a_bits[base + k] = f32::from(a >> (3 - k) & 1);
+            self.dvth[base + k] = dvth[k];
+            self.dbeta[base + k] = dbeta[k];
+        }
+        self.b_code[i * self.rows + r] = f32::from(b);
+    }
+}
+
+/// Outputs of one `dot_forward` execution.
+#[derive(Debug, Clone)]
+pub struct DotBatchOut {
+    /// Weighted shared-bitline discharge — analog sum_r(a_r * b_r).
+    pub v_dot: Vec<f32>,
+    /// Sampled shared-bitline voltages (batch, 4).
+    pub v_bl: Vec<f32>,
+    pub energy: Vec<f32>,
+    pub fault: Vec<f32>,
+}
+
+/// A compiled dot-product executable for one fixed (batch, rows).
+pub struct DotExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    rows: usize,
+}
+
+impl DotExecutable {
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn run(&self, inputs: &DotBatch) -> Result<DotBatchOut> {
+        let (b, r) = (self.batch, self.rows);
+        anyhow::ensure!(
+            inputs.len() == b && inputs.rows() == r,
+            "dot batch mismatch: compiled ({b}, {r}), got ({}, {})",
+            inputs.len(),
+            inputs.rows()
+        );
+        let (bi, ri) = (b as i64, r as i64);
+        let args = [
+            xla::Literal::vec1(&inputs.a_bits).reshape(&[bi, ri, 4])?,
+            xla::Literal::vec1(&inputs.b_code).reshape(&[bi, ri])?,
+            xla::Literal::scalar(inputs.v_bulk),
+            xla::Literal::scalar(inputs.dac_mode),
+            xla::Literal::scalar(inputs.t_sample),
+            xla::Literal::vec1(&inputs.dvth).reshape(&[bi, ri, 4])?,
+            xla::Literal::vec1(&inputs.dbeta).reshape(&[bi, ri, 4])?,
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?;
+        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+        anyhow::ensure!(tuple.len() == 4, "expected 4 outputs, got {}", tuple.len());
+        let mut it = tuple.into_iter();
+        let out = DotBatchOut {
+            v_dot: it.next().unwrap().to_vec::<f32>()?,
+            v_bl: it.next().unwrap().to_vec::<f32>()?,
+            energy: it.next().unwrap().to_vec::<f32>()?,
+            fault: it.next().unwrap().to_vec::<f32>()?,
+        };
+        anyhow::ensure!(out.v_dot.len() == b && out.v_bl.len() == b * 4);
+        Ok(out)
+    }
+}
+
+/// A thread-local PJRT CPU client with a compiled-executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory produced by `make artifacts`.
+    pub fn open(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, artifact_dir: dir, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the artifact named `name`.
+    fn compile(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let art = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let path = self.artifact_dir.join(&art.path);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Load the MAC executable for `batch` (must be one of the compiled
+    /// batch sizes in the manifest).
+    pub fn mac_executable(&mut self, batch: usize) -> Result<MacExecutable> {
+        let name = format!("mac_b{batch}");
+        anyhow::ensure!(
+            self.manifest.mac_batches.contains(&batch),
+            "no mac artifact for batch {batch}; available: {:?}",
+            self.manifest.mac_batches
+        );
+        // Executables are cheap handles around refcounted C++ objects, but
+        // the crate exposes no clone; compile again into a standalone handle.
+        let art = self.manifest.find(&name).unwrap();
+        let path = self.artifact_dir.join(&art.path);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(MacExecutable { exe, batch })
+    }
+
+    /// Load the dot-product executable for `batch` (x `manifest.dot_rows`).
+    pub fn dot_executable(&mut self, batch: usize) -> Result<DotExecutable> {
+        let rows = self.manifest.dot_rows;
+        let name = format!("dot_r{rows}_b{batch}");
+        anyhow::ensure!(
+            self.manifest.dot_batches.contains(&batch),
+            "no dot artifact for batch {batch}; available: {:?}",
+            self.manifest.dot_batches
+        );
+        let art = self.manifest.find(&name).unwrap();
+        let path = self.artifact_dir.join(&art.path);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(DotExecutable { exe, batch, rows })
+    }
+
+    /// Largest compiled batch size <= `n`, falling back to the smallest.
+    pub fn best_batch(&self, n: usize) -> usize {
+        self.manifest
+            .mac_batches
+            .iter()
+            .copied()
+            .filter(|&b| b <= n)
+            .max()
+            .or_else(|| self.manifest.mac_batches.iter().copied().min())
+            .expect("manifest has at least one mac batch")
+    }
+
+    /// Run the waveform-trace artifact (Fig. 5/6): returns
+    /// (n_points, batch, 4) row-major samples of V_BLB(t).
+    pub fn run_trace(&mut self, inputs: &MacBatch, t_total: f32) -> Result<Vec<f32>> {
+        let batch = inputs.len();
+        let name = format!("trace_b{batch}");
+        anyhow::ensure!(
+            self.manifest.trace_batches.contains(&batch),
+            "no trace artifact for batch {batch}; available: {:?}",
+            self.manifest.trace_batches
+        );
+        let b = batch as i64;
+        let args = [
+            xla::Literal::vec1(&inputs.a_bits).reshape(&[b, 4])?,
+            xla::Literal::vec1(&inputs.b_code).reshape(&[b])?,
+            xla::Literal::scalar(inputs.v_bulk),
+            xla::Literal::scalar(inputs.dac_mode),
+            xla::Literal::scalar(t_total),
+            xla::Literal::vec1(&inputs.dvth).reshape(&[b, 4])?,
+            xla::Literal::vec1(&inputs.dbeta).reshape(&[b, 4])?,
+        ];
+        let exe = self.compile(&name)?;
+        let result = exe.execute::<xla::Literal>(&args)?;
+        let lit = result[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+}
+
+/// Locate the artifact directory: `$SMART_ARTIFACTS`, else `./artifacts`,
+/// else walking up from the executable (so tests/benches work from any cwd).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SMART_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_batch_set_row_layout() {
+        let mut b = MacBatch::nominal(2, 0.6, 1.0, 0.17e-9);
+        b.set_row(0, 0b1010, 7, [1e-3; 4], [0.0; 4]);
+        b.set_row(1, 0b0001, 15, [0.0; 4], [0.01; 4]);
+        assert_eq!(&b.a_bits[0..4], &[1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(&b.a_bits[4..8], &[0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(b.b_code, vec![7.0, 15.0]);
+        assert_eq!(b.dvth[0], 1e-3);
+        assert_eq!(b.dbeta[7], 0.01);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn set_row_rejects_wide_operands() {
+        MacBatch::nominal(1, 0.0, 1.0, 1e-10).set_row(0, 16, 0, [0.0; 4], [0.0; 4]);
+    }
+}

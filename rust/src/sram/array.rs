@@ -1,0 +1,129 @@
+//! Dual-mode SRAM array: digital memory + analog MAC columns (Fig. 7).
+
+use super::word::MacWord;
+use crate::params::DeviceCard;
+
+/// Operating mode (paper §III: "memory mode" vs "mathematical mode").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrayMode {
+    Memory,
+    Mathematical,
+}
+
+/// An array of MAC words. Each row holds one 4-bit stored operand; in
+/// mathematical mode the row's word-lines carry the DAC-coded second
+/// operand and the BLB charge-share produces the analog product.
+#[derive(Debug, Clone)]
+pub struct SramArray {
+    rows: Vec<MacWord>,
+    mode: ArrayMode,
+    card: DeviceCard,
+}
+
+impl SramArray {
+    pub fn new(card: DeviceCard, n_rows: usize) -> Self {
+        Self { rows: vec![MacWord::new(card); n_rows], mode: ArrayMode::Memory, card }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn mode(&self) -> ArrayMode {
+        self.mode
+    }
+
+    /// Switch mode. Entering mathematical mode requires the operands to be
+    /// written first (memory-mode writes), exactly like the paper's flow.
+    pub fn set_mode(&mut self, mode: ArrayMode) {
+        self.mode = mode;
+    }
+
+    /// Digital write of a 4-bit word (memory mode only).
+    pub fn write(&mut self, row: usize, value: u8) -> Result<(), ModeError> {
+        if self.mode != ArrayMode::Memory {
+            return Err(ModeError::WriteInMathMode);
+        }
+        self.rows[row].store(value);
+        Ok(())
+    }
+
+    /// Digital read of a 4-bit word (memory mode only).
+    pub fn read(&self, row: usize) -> Result<u8, ModeError> {
+        if self.mode != ArrayMode::Memory {
+            return Err(ModeError::ReadInMathMode);
+        }
+        Ok(self.rows[row].load())
+    }
+
+    /// Access a row's word for the compute path (mathematical mode only).
+    pub fn word(&self, row: usize) -> Result<&MacWord, ModeError> {
+        if self.mode != ArrayMode::Mathematical {
+            return Err(ModeError::ComputeInMemoryMode);
+        }
+        Ok(&self.rows[row])
+    }
+
+    /// Replace a row with a mismatch-bearing word (MC instantiation).
+    pub fn instantiate_mismatch(&mut self, row: usize, dvth: [f64; 4], dbeta: [f64; 4]) {
+        let stored = self.rows[row].load();
+        let mut w = MacWord::with_mismatch(self.card, dvth, dbeta);
+        w.store(stored);
+        self.rows[row] = w;
+    }
+}
+
+/// Mode-discipline violations — the paper's architecture forbids mixing
+/// memory and mathematical operations in the same phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModeError {
+    WriteInMathMode,
+    ReadInMathMode,
+    ComputeInMemoryMode,
+}
+
+impl std::fmt::Display for ModeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Self::WriteInMathMode => "digital write while in mathematical mode",
+            Self::ReadInMathMode => "digital read while in mathematical mode",
+            Self::ComputeInMemoryMode => "compute access while in memory mode",
+        };
+        f.write_str(s)
+    }
+}
+
+impl std::error::Error for ModeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::DeviceCard;
+
+    #[test]
+    fn memory_mode_read_write() {
+        let mut a = SramArray::new(DeviceCard::default(), 8);
+        a.write(3, 0b1010).unwrap();
+        assert_eq!(a.read(3).unwrap(), 0b1010);
+    }
+
+    #[test]
+    fn mode_discipline_enforced() {
+        let mut a = SramArray::new(DeviceCard::default(), 2);
+        a.write(0, 7).unwrap();
+        a.set_mode(ArrayMode::Mathematical);
+        assert_eq!(a.write(0, 1), Err(ModeError::WriteInMathMode));
+        assert_eq!(a.read(0), Err(ModeError::ReadInMathMode));
+        assert_eq!(a.word(0).unwrap().load(), 7);
+        a.set_mode(ArrayMode::Memory);
+        assert_eq!(a.word(0).unwrap_err(), ModeError::ComputeInMemoryMode);
+    }
+
+    #[test]
+    fn mismatch_instantiation_preserves_stored_value() {
+        let mut a = SramArray::new(DeviceCard::default(), 1);
+        a.write(0, 0b1101).unwrap();
+        a.instantiate_mismatch(0, [1e-3; 4], [0.01; 4]);
+        assert_eq!(a.read(0).unwrap(), 0b1101);
+    }
+}

@@ -1,0 +1,77 @@
+//! Single 6T-SRAM cell (paper Fig. 2).
+
+use crate::device::Mosfet;
+use crate::params::DeviceCard;
+
+/// A 6T cell: two cross-coupled inverters plus two access transistors.
+/// We track the stored state digitally and model the two access devices
+/// (M1acc on BL, M2acc on BLB) as [`Mosfet`] instances whose mismatch
+/// deviates come from the Monte-Carlo sampler.
+#[derive(Debug, Clone, Copy)]
+pub struct SramCell {
+    /// Stored value at node Q (`true` = VDD). The paper's compute-mode
+    /// initial condition is Q = VDD, Qbar = 0 (§II).
+    q: bool,
+    /// BLB-side access transistor M2acc — the compute-path device.
+    pub m2_acc: Mosfet,
+}
+
+impl SramCell {
+    /// A cell holding 0 with a nominal access device.
+    pub fn new(card: DeviceCard) -> Self {
+        Self { q: false, m2_acc: Mosfet::nominal(card) }
+    }
+
+    /// A cell whose access transistor carries mismatch deviates.
+    pub fn with_mismatch(card: DeviceCard, dvth: f64, dbeta: f64) -> Self {
+        Self { q: false, m2_acc: Mosfet::with_mismatch(card, dvth, dbeta) }
+    }
+
+    /// Digital write: drive BL/BLB full-rail and pulse the WL (§II).
+    pub fn write(&mut self, value: bool) {
+        self.q = value;
+    }
+
+    /// Digital read: returns the stored value (BL side discharges when
+    /// Q = 0, BLB side when Q = 1 — we return the decoded bit).
+    pub fn read(&self) -> bool {
+        self.q
+    }
+
+    /// Whether the BLB discharge path (M2acc -> M3) conducts in compute
+    /// mode: requires Qbar = 0, i.e. a stored 1.
+    pub fn conducts_blb(&self) -> bool {
+        self.q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::DeviceCard;
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let mut c = SramCell::new(DeviceCard::default());
+        assert!(!c.read());
+        c.write(true);
+        assert!(c.read());
+        c.write(false);
+        assert!(!c.read());
+    }
+
+    #[test]
+    fn compute_path_follows_stored_bit() {
+        let mut c = SramCell::new(DeviceCard::default());
+        assert!(!c.conducts_blb());
+        c.write(true);
+        assert!(c.conducts_blb());
+    }
+
+    #[test]
+    fn mismatch_is_carried_by_access_device() {
+        let c = SramCell::with_mismatch(DeviceCard::default(), 5e-3, -0.01);
+        assert_eq!(c.m2_acc.dvth, 5e-3);
+        assert_eq!(c.m2_acc.dbeta, -0.01);
+    }
+}

@@ -1,0 +1,16 @@
+//! 6T-SRAM substrate: cells, the 4-cell MAC word, the array, and the
+//! precharge circuit (paper §II, Fig. 2 and Fig. 7).
+//!
+//! The array is a real dual-mode memory: in *memory mode* it performs
+//! digital read/write; in *mathematical mode* a row stores one MAC operand
+//! and the word-lines carry the DAC-coded second operand (paper §III).
+
+mod array;
+mod cell;
+mod precharge;
+mod word;
+
+pub use array::{ArrayMode, SramArray};
+pub use cell::SramCell;
+pub use precharge::Precharge;
+pub use word::{MacWord, WEIGHTS};

@@ -1,0 +1,71 @@
+//! Precharge circuit model (paper §III: "[10]'s circuitry; no static
+//! current, so no additional power overhead").
+
+use crate::params::CircuitCard;
+
+/// PMOS precharge network: restores BL/BLB to VDD between operations.
+#[derive(Debug, Clone, Copy)]
+pub struct Precharge {
+    /// Effective pull-up current of the precharge PMOS pair (A).
+    pub i_pullup: f64,
+}
+
+impl Default for Precharge {
+    fn default() -> Self {
+        // ~60 uA pull-up: restores a 30 fF bitline through ~0.5 V in <0.5 ns.
+        Self { i_pullup: 60e-6 }
+    }
+}
+
+impl Precharge {
+    /// Time to restore the bitline from `v_from` to within `margin` of
+    /// `vdd` (s) — a CV/I estimate with a settling guard band.
+    pub fn restore_time(&self, c: &CircuitCard, vdd: f64, v_from: f64, margin: f64) -> f64 {
+        let dv = (vdd - margin - v_from).max(0.0);
+        // CV/I charge phase + 3 RC-equivalent settling constants.
+        let t_slew = c.c_blb * dv / self.i_pullup;
+        let r_eq = vdd / self.i_pullup;
+        t_slew + 3.0 * r_eq * c.c_blb
+    }
+
+    /// Dynamic energy to restore the discharged charge (J): the charge
+    /// C*dV is replaced from the supply at VDD.
+    pub fn restore_energy(&self, c: &CircuitCard, vdd: f64, v_from: f64) -> f64 {
+        c.c_blb * vdd * (vdd - v_from).max(0.0)
+    }
+
+    /// Static power is zero by construction (clocked PMOS, paper §III).
+    pub fn static_power(&self) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::CircuitCard;
+
+    #[test]
+    fn restore_time_scales_with_depth() {
+        let p = Precharge::default();
+        let c = CircuitCard::default();
+        let shallow = p.restore_time(&c, 1.0, 0.9, 0.01);
+        let deep = p.restore_time(&c, 1.0, 0.4, 0.01);
+        assert!(deep > shallow);
+        assert!(deep < 5e-9, "precharge should finish in a few ns: {deep}");
+    }
+
+    #[test]
+    fn restore_energy_is_c_vdd_dv() {
+        let p = Precharge::default();
+        let c = CircuitCard::default();
+        let e = p.restore_energy(&c, 1.0, 0.6);
+        assert!((e - c.c_blb * 0.4).abs() < 1e-20);
+        assert_eq!(p.restore_energy(&c, 1.0, 1.2), 0.0);
+    }
+
+    #[test]
+    fn no_static_power() {
+        assert_eq!(Precharge::default().static_power(), 0.0);
+    }
+}

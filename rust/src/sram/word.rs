@@ -1,0 +1,92 @@
+//! The 4-cell MAC word: one stored operand, MSB leftmost (paper Fig. 7).
+
+use super::cell::SramCell;
+use crate::params::DeviceCard;
+
+/// Binary weights of the MSB-first cells, normalized to sum to 1
+/// (8/15, 4/15, 2/15, 1/15) — the charge-share combine ratio.
+pub const WEIGHTS: [f64; 4] = [8.0 / 15.0, 4.0 / 15.0, 2.0 / 15.0, 1.0 / 15.0];
+
+/// A word of `N_BITS` cells storing one MAC operand.
+#[derive(Debug, Clone)]
+pub struct MacWord {
+    cells: [SramCell; 4],
+}
+
+impl MacWord {
+    /// Nominal word (no mismatch).
+    pub fn new(card: DeviceCard) -> Self {
+        Self { cells: [SramCell::new(card); 4] }
+    }
+
+    /// Word whose four access transistors carry per-cell mismatch.
+    pub fn with_mismatch(card: DeviceCard, dvth: [f64; 4], dbeta: [f64; 4]) -> Self {
+        let mk = |i: usize| SramCell::with_mismatch(card, dvth[i], dbeta[i]);
+        Self { cells: [mk(0), mk(1), mk(2), mk(3)] }
+    }
+
+    /// Store a 4-bit operand, MSB into cell 0 (the leftmost cell).
+    pub fn store(&mut self, value: u8) {
+        assert!(value < 16, "operand must be 4-bit, got {value}");
+        for (i, cell) in self.cells.iter_mut().enumerate() {
+            cell.write(value >> (3 - i) & 1 == 1);
+        }
+    }
+
+    /// Read the stored operand back digitally.
+    pub fn load(&self) -> u8 {
+        self.cells
+            .iter()
+            .enumerate()
+            .fold(0u8, |acc, (i, c)| acc | (u8::from(c.read()) << (3 - i)))
+    }
+
+    /// MSB-first bit view, as the compute path sees it.
+    pub fn bits(&self) -> [bool; 4] {
+        [
+            self.cells[0].conducts_blb(),
+            self.cells[1].conducts_blb(),
+            self.cells[2].conducts_blb(),
+            self.cells[3].conducts_blb(),
+        ]
+    }
+
+    pub fn cells(&self) -> &[SramCell; 4] {
+        &self.cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::DeviceCard;
+
+    #[test]
+    fn store_load_roundtrip_all_codes() {
+        let mut w = MacWord::new(DeviceCard::default());
+        for v in 0..16u8 {
+            w.store(v);
+            assert_eq!(w.load(), v);
+        }
+    }
+
+    #[test]
+    fn msb_is_leftmost() {
+        let mut w = MacWord::new(DeviceCard::default());
+        w.store(0b1000);
+        assert_eq!(w.bits(), [true, false, false, false]);
+        w.store(0b0001);
+        assert_eq!(w.bits(), [false, false, false, true]);
+    }
+
+    #[test]
+    #[should_panic(expected = "4-bit")]
+    fn store_rejects_wide_operands() {
+        MacWord::new(DeviceCard::default()).store(16);
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        assert!((WEIGHTS.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,113 @@
+//! Tiny CLI argument helper (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positionals, with
+//! typed accessors that produce readable errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options + positionals, consumed by typed accessors.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, Vec<String>>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator (usually `std::env::args().skip(1)`).
+    /// `flags` lists option names that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, flags: &[&str]) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest are positionals
+                    out.pos.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.entry(k.to_string()).or_default().push(v.to_string());
+                } else if flags.contains(&body) {
+                    out.opts.entry(body.to_string()).or_default().push(String::new());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{body} expects a value"))?;
+                    out.opts.entry(body.to_string()).or_default().push(v);
+                }
+            } else {
+                out.pos.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.opts.contains_key(name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| format!("--{name} '{s}': {e}")),
+        }
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.pos.get(idx).map(String::as_str)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["mc", "--variant", "aid", "--n-mc=500", "--native", "15"], &["native"]);
+        assert_eq!(a.positional(0), Some("mc"));
+        assert_eq!(a.opt("variant"), Some("aid"));
+        assert_eq!(a.opt("n-mc"), Some("500"));
+        assert!(a.flag("native"));
+        assert_eq!(a.positional(1), Some("15"));
+    }
+
+    #[test]
+    fn typed_accessor_and_default() {
+        let a = parse(&["--n", "42"], &[]);
+        assert_eq!(a.opt_parse("n", 0u32).unwrap(), 42);
+        assert_eq!(a.opt_parse("missing", 7u32).unwrap(), 7);
+        assert!(a.opt_parse::<u32>("n", 0).is_ok());
+        let b = parse(&["--n", "nope"], &[]);
+        assert!(b.opt_parse::<u32>("n", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = Args::parse(["--variant".to_string()], &[]).unwrap_err();
+        assert!(e.contains("expects a value"));
+    }
+
+    #[test]
+    fn double_dash_terminates() {
+        let a = parse(&["--x", "1", "--", "--not-an-opt"], &[]);
+        assert_eq!(a.positional(0), Some("--not-an-opt"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Deterministic property-test driver (proptest is not available offline).
+//!
+//! [`check`] runs a property over `n` generated cases from a seeded
+//! [`Gen`]; failures report the case index and seed so they replay
+//! exactly. No shrinking — cases are small by construction.
+
+use crate::montecarlo::SplitMix64;
+
+/// Random case generator with convenience samplers.
+pub struct Gen {
+    rng: SplitMix64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed) }
+    }
+
+    pub fn u64(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        self.rng.next_u64() % bound
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.u64((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn u8_in(&mut self, lo: u8, hi: u8) -> u8 {
+        lo + self.u64(u64::from(hi - lo + 1)) as u8
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn normal(&mut self, sigma: f64) -> f64 {
+        self.rng.next_normal() * sigma
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.u64(items.len() as u64) as usize]
+    }
+}
+
+/// Run `prop` over `n` cases. Panics with the failing case index + seed.
+pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(seed: u64, n: u32, mut prop: F) {
+    for case in 0..n {
+        let mut g = Gen::new(seed.wrapping_add(u64::from(case)).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        if let Err(msg) = prop(&mut g) {
+            panic!("property failed on case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(1, 100, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failures() {
+        check(2, 50, |g| {
+            let x = g.u8_in(0, 10);
+            prop_assert!(x < 10, "hit the boundary {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_ranges_are_inclusive() {
+        let mut g = Gen::new(3);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..1000 {
+            match g.u8_in(4, 6) {
+                4 => seen_lo = true,
+                6 => seen_hi = true,
+                5 => {}
+                other => panic!("out of range {other}"),
+            }
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut log_a = Vec::new();
+        check(7, 5, |g| {
+            log_a.push(g.u64(1000));
+            Ok(())
+        });
+        let mut log_b = Vec::new();
+        check(7, 5, |g| {
+            log_b.push(g.u64(1000));
+            Ok(())
+        });
+        assert_eq!(log_a, log_b);
+    }
+}

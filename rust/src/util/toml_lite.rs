@@ -1,0 +1,270 @@
+//! TOML-subset parser for experiment configs.
+//!
+//! Supported: `[table]` headers, `[[array-of-tables]]` headers, dotted-free
+//! `key = value` pairs with strings, integers, floats, booleans and flat
+//! arrays, plus `#` comments. That covers every config in `configs/` while
+//! staying a few hundred lines.
+
+use std::collections::BTreeMap;
+
+use super::json::Value;
+
+/// Parse a TOML-subset document into the same [`Value`] tree JSON uses,
+/// so config consumers share one access API.
+pub fn parse(text: &str) -> Result<Value, String> {
+    let mut root = BTreeMap::new();
+    // Path of the table currently being filled.
+    let mut current: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |m: &str| format!("line {}: {m}", lineno + 1);
+
+        if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let path = parse_key_path(inner).map_err(|m| err(&m))?;
+            push_array_table(&mut root, &path).map_err(|m| err(&m))?;
+            current = path;
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let path = parse_key_path(inner).map_err(|m| err(&m))?;
+            ensure_table(&mut root, &path).map_err(|m| err(&m))?;
+            current = path;
+        } else if let Some(eq) = find_top_level_eq(line) {
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            insert(&mut root, &current, key, val).map_err(|m| err(&m))?;
+        } else {
+            return Err(err("expected `key = value` or a [table] header"));
+        }
+    }
+    Ok(Value::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_key_path(s: &str) -> Result<Vec<String>, String> {
+    let parts: Vec<String> = s.split('.').map(|p| p.trim().to_string()).collect();
+    if parts.iter().any(|p| p.is_empty()) {
+        return Err(format!("bad table name '{s}'"));
+    }
+    Ok(parts)
+}
+
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        let mut out = String::new();
+        let mut esc = false;
+        for c in body.chars() {
+            if esc {
+                out.push(match c {
+                    'n' => '\n',
+                    't' => '\t',
+                    '\\' => '\\',
+                    '"' => '"',
+                    other => return Err(format!("unknown escape \\{other}")),
+                });
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if body.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for item in split_top_level(body) {
+            items.push(parse_value(item.trim())?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Value>, String> {
+    let mut cur = root;
+    for key in path {
+        let entry = cur
+            .entry(key.clone())
+            .or_insert_with(|| Value::Obj(BTreeMap::new()));
+        cur = match entry {
+            Value::Obj(m) => m,
+            Value::Arr(a) => match a.last_mut() {
+                Some(Value::Obj(m)) => m,
+                _ => return Err(format!("'{key}' is not a table")),
+            },
+            _ => return Err(format!("'{key}' is not a table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn push_array_table(root: &mut BTreeMap<String, Value>, path: &[String]) -> Result<(), String> {
+    let (last, parents) = path.split_last().ok_or("empty table path")?;
+    let parent = ensure_table(root, parents)?;
+    match parent
+        .entry(last.clone())
+        .or_insert_with(|| Value::Arr(Vec::new()))
+    {
+        Value::Arr(a) => {
+            a.push(Value::Obj(BTreeMap::new()));
+            Ok(())
+        }
+        _ => Err(format!("'{last}' is not an array of tables")),
+    }
+}
+
+fn insert(
+    root: &mut BTreeMap<String, Value>,
+    table: &[String],
+    key: &str,
+    val: Value,
+) -> Result<(), String> {
+    let t = ensure_table(root, table)?;
+    if t.insert(key.to_string(), val).is_some() {
+        return Err(format!("duplicate key '{key}'"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+        # experiment
+        name = "fig8"
+        n = 42
+        ratio = 0.5
+        flag = true
+        list = [1, 2, 3]
+
+        [params.circuit]
+        c_blb = 3e-14
+
+        [[campaigns]]
+        variant = "smart"
+        n_mc = 1000
+
+        [[campaigns]]
+        variant = "aid"   # inline comment
+        n_mc = 1_000
+    "#;
+
+    #[test]
+    fn parses_document() {
+        let v = parse(DOC).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("fig8"));
+        assert_eq!(v.get("n").unwrap().as_u64(), Some(42));
+        assert_eq!(v.get("flag").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("list").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.path(&["params", "circuit", "c_blb"]).unwrap().as_f64(), Some(3e-14));
+        let camps = v.get("campaigns").unwrap().as_arr().unwrap();
+        assert_eq!(camps.len(), 2);
+        assert_eq!(camps[0].get("variant").unwrap().as_str(), Some("smart"));
+        assert_eq!(camps[1].get("n_mc").unwrap().as_u64(), Some(1000));
+    }
+
+    #[test]
+    fn keys_after_array_table_attach_to_last_element() {
+        let v = parse("[[c]]\nx = 1\n[[c]]\nx = 2\n").unwrap();
+        let c = v.get("c").unwrap().as_arr().unwrap();
+        assert_eq!(c[0].get("x").unwrap().as_u64(), Some(1));
+        assert_eq!(c[1].get("x").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn nested_table_under_array_element() {
+        let v = parse("[[c]]\n[c.w]\nkind = \"fixed\"\n").unwrap();
+        let c = v.get("c").unwrap().as_arr().unwrap();
+        assert_eq!(c[0].path(&["w", "kind"]).unwrap().as_str(), Some("fixed"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("x = ").unwrap_err();
+        assert!(e.starts_with("line 1"), "{e}");
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert!(e.starts_with("line 2"), "{e}");
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn strings_with_hashes_and_escapes() {
+        let v = parse(r#"s = "a # not comment \n b""#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a # not comment \n b"));
+    }
+}

@@ -1,0 +1,114 @@
+//! CLI integration: spawn the `smart` binary end-to-end (native backend so
+//! the tests stay fast; the XLA path is covered by runtime_roundtrip).
+
+use std::process::Command;
+
+fn smart() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_smart"))
+}
+
+fn have_artifacts() -> bool {
+    smart_insram::runtime::default_artifact_dir()
+        .join("manifest.json")
+        .exists()
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = smart().arg("--help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("table1"));
+}
+
+#[test]
+fn no_args_prints_usage_ok() {
+    let out = smart().output().unwrap();
+    assert!(out.status.success());
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = smart().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn mac_native_runs() {
+    let out = smart()
+        .args(["mac", "13", "7", "--variant", "smart", "--native"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("13 x 7 on SMART"), "{text}");
+}
+
+#[test]
+fn mc_native_reports_sigma() {
+    let out = smart()
+        .args(["mc", "--variant", "aid", "--n-mc", "64", "--native"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("sigma/FS"), "{text}");
+    assert!(text.contains("throughput"), "{text}");
+}
+
+#[test]
+fn run_config_native() {
+    let cfg = concat!(
+        "name = \"smoke\"\n",
+        "[[campaigns]]\nvariant = \"smart\"\nn_mc = 16\n",
+        "[campaigns.workload]\nkind = \"fixed\"\na = 15\nb = 15\n"
+    );
+    let path = std::env::temp_dir().join("smart_cli_smoke.toml");
+    std::fs::write(&path, cfg).unwrap();
+    let out = smart()
+        .args(["run", path.to_str().unwrap(), "--native"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("smoke"));
+}
+
+#[test]
+fn bad_config_fails_with_context() {
+    let path = std::env::temp_dir().join("smart_cli_bad.toml");
+    std::fs::write(&path, "name = \"x\"\n[[campaigns]]\nvariant = \"nope\"\n[campaigns.workload]\nkind = \"full_sweep\"\n").unwrap();
+    let out = smart().args(["run", path.to_str().unwrap(), "--native"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown variant"));
+}
+
+#[test]
+fn info_smokes_pjrt() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let out = smart().arg("info").output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("platform: cpu"));
+    assert!(text.contains("PJRT smoke 15x15"));
+}
+
+#[test]
+fn checked_in_configs_parse() {
+    // keep the shipped configs/ directory loadable at all times
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut n = 0;
+    for entry in std::fs::read_dir(root).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().is_some_and(|e| e == "toml") {
+            smart_insram::config::ExperimentConfig::load(&path)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            n += 1;
+        }
+    }
+    assert!(n >= 3, "expected the shipped configs, found {n}");
+}

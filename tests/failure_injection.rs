@@ -1,0 +1,142 @@
+//! Failure injection: the coordinator and runtime must fail fast and
+//! loudly on broken inputs — no hangs, no silent zeros.
+
+use smart_insram::coordinator::{run_campaign, Backend, CampaignSpec, WorkerPool, Workload};
+use smart_insram::mac::Variant;
+use smart_insram::montecarlo::Corner;
+use smart_insram::params::Params;
+use smart_insram::runtime::{default_artifact_dir, MacBatch, XlaRuntime};
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("smart_fail_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn runtime_rejects_missing_artifact_dir() {
+    let err = match XlaRuntime::open("/nonexistent/artifacts") {
+        Err(e) => e,
+        Ok(_) => panic!("open must fail"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest.json"), "{msg}");
+}
+
+#[test]
+fn runtime_rejects_corrupt_manifest() {
+    let dir = tmpdir("corrupt_manifest");
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(XlaRuntime::open(&dir).is_err());
+}
+
+#[test]
+fn runtime_rejects_corrupt_hlo_text() {
+    let dir = tmpdir("corrupt_hlo");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"artifacts": [{"name": "mac_b1", "path": "mac_b1.hlo.txt", "kind": "mac", "batch": 1}],
+            "mac_batches": [1], "trace_batches": [], "trace_points": 0, "n_steps": 256}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("mac_b1.hlo.txt"), "HloModule garbage\nnot a module").unwrap();
+    let mut rt = XlaRuntime::open(&dir).unwrap();
+    assert!(rt.mac_executable(1).is_err());
+}
+
+#[test]
+fn runtime_rejects_unknown_batch_size() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let mut rt = XlaRuntime::open(&dir).unwrap();
+    let err = match rt.mac_executable(333) {
+        Err(e) => e,
+        Ok(_) => panic!("batch 333 must not exist"),
+    };
+    assert!(format!("{err:#}").contains("no mac artifact for batch 333"));
+}
+
+#[test]
+fn executable_rejects_wrong_batch_len() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let mut rt = XlaRuntime::open(&dir).unwrap();
+    let exe = rt.mac_executable(1).unwrap();
+    let batch = MacBatch::nominal(2, 0.0, 1.0, 1e-10);
+    let err = exe.run(&batch).unwrap_err();
+    assert!(format!("{err:#}").contains("batch mismatch"));
+}
+
+#[test]
+fn worker_pool_init_failure_is_reported_not_hung() {
+    let dir = tmpdir("pool_bad");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"artifacts": [], "mac_batches": [], "trace_batches": [], "trace_points": 0, "n_steps": 256}"#,
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let err = WorkerPool::spawn(dir, 256, 2);
+    assert!(err.is_err());
+    assert!(t0.elapsed() < std::time::Duration::from_secs(30), "did not fail fast");
+}
+
+#[test]
+fn campaign_rejects_invalid_spec() {
+    let p = Params::default();
+    let spec = CampaignSpec {
+        variant: Variant::Smart,
+        workload: Workload::Fixed { a: 99, b: 0 },
+        n_mc: 10,
+        seed: 1,
+        corner: Corner::Tt,
+        workers: 1,
+        batch: 1,
+    };
+    assert!(run_campaign(&p, &spec, Backend::Native, None).is_err());
+}
+
+#[test]
+fn corner_campaigns_shift_the_output_as_expected() {
+    // FF (fast): lower VTH -> more discharge -> larger mean V_mult; SS inverse.
+    let p = Params::default();
+    let mk = |corner| CampaignSpec {
+        variant: Variant::Smart,
+        workload: Workload::Fixed { a: 15, b: 15 },
+        n_mc: 128,
+        seed: 5,
+        corner,
+        workers: 1,
+        batch: 64,
+    };
+    let tt = run_campaign(&p, &mk(Corner::Tt), Backend::Native, None).unwrap();
+    let ff = run_campaign(&p, &mk(Corner::Ff), Backend::Native, None).unwrap();
+    let ss = run_campaign(&p, &mk(Corner::Ss), Backend::Native, None).unwrap();
+    assert!(
+        ff.raw_vmult.mean() > tt.raw_vmult.mean() && tt.raw_vmult.mean() > ss.raw_vmult.mean(),
+        "ff {} tt {} ss {}",
+        ff.raw_vmult.mean(),
+        tt.raw_vmult.mean(),
+        ss.raw_vmult.mean()
+    );
+    // corners shift the mean but the DAC still tracks the nominal design:
+    // accuracy degrades relative to TT
+    assert!(tt.accuracy.rms_norm < ff.accuracy.rms_norm);
+    assert!(tt.accuracy.rms_norm < ss.accuracy.rms_norm);
+}
+
+#[test]
+fn params_override_cannot_smuggle_bad_types() {
+    let mut p = Params::default();
+    let v = smart_insram::util::toml_lite::parse("[device]\nvth0 = \"high\"\n").unwrap();
+    assert!(p.apply_overrides(&v).is_err());
+    // untouched on failure path for the earlier keys
+    assert_eq!(p.device.vth0, Params::default().device.vth0);
+}

@@ -1,0 +1,278 @@
+//! Property tests over the coordinator invariants (in-tree prop driver —
+//! see `rust/src/util/prop.rs`).
+
+use std::collections::HashSet;
+
+use smart_insram::coordinator::{Batcher, RowTag};
+use smart_insram::mac::{reconstruct, IdealTransfer, Variant};
+use smart_insram::metrics::OnlineStats;
+use smart_insram::montecarlo::MismatchSampler;
+use smart_insram::params::Params;
+use smart_insram::prop_assert;
+use smart_insram::util::prop::{check, Gen};
+
+fn mk_batcher(g: &mut Gen) -> (Batcher, usize, u32, usize) {
+    let p = Params::default();
+    let variant = *g.pick(&Variant::ALL);
+    let cfg = variant.config(&p);
+    let n_ops = g.usize_in(1, 6);
+    let operands: Vec<(u8, u8)> = (0..n_ops)
+        .map(|_| (g.u8_in(0, 15), g.u8_in(0, 15)))
+        .collect();
+    let n_mc = g.usize_in(1, 300) as u32;
+    let batch = g.usize_in(1, 64);
+    let seed = g.u64(1 << 40);
+    let b = Batcher::new(
+        operands,
+        n_mc,
+        batch,
+        (&cfg).into(),
+        MismatchSampler::new(seed, p.circuit.sigma_vth, p.circuit.sigma_beta),
+    );
+    (b, n_ops, n_mc, batch)
+}
+
+/// Every (operand, mc) item appears exactly once; pads only in the last
+/// batch; all batches have exactly `batch` rows.
+#[test]
+fn batcher_covers_items_exactly_once() {
+    check(0xBA7C4, 60, |g| {
+        let (batcher, n_ops, n_mc, batch) = mk_batcher(g);
+        let expect_batches = batcher.n_batches();
+        let mut seen = HashSet::new();
+        let mut n_batches = 0u64;
+        let mut pads = 0usize;
+        for pb in batcher {
+            n_batches += 1;
+            prop_assert!(pb.tags.len() == batch, "short batch {}", pb.tags.len());
+            prop_assert!(pb.inputs.len() == batch, "inputs len mismatch");
+            let is_last = n_batches == expect_batches;
+            for t in &pb.tags {
+                match *t {
+                    RowTag::Item { op_idx, mc_idx, a, b } => {
+                        prop_assert!(a < 16 && b < 16, "bad operands {a},{b}");
+                        prop_assert!(
+                            seen.insert((op_idx, mc_idx)),
+                            "duplicate item {op_idx}/{mc_idx}"
+                        );
+                    }
+                    RowTag::Pad => {
+                        pads += 1;
+                        prop_assert!(is_last, "pad before the last batch");
+                    }
+                }
+            }
+        }
+        let total = n_ops as u64 * u64::from(n_mc);
+        prop_assert!(seen.len() as u64 == total, "covered {} of {total}", seen.len());
+        prop_assert!(n_batches == expect_batches, "{n_batches} != {expect_batches}");
+        prop_assert!(
+            n_batches * batch as u64 == total + pads as u64,
+            "row accounting broken"
+        );
+        Ok(())
+    });
+}
+
+/// The batcher's mismatch stream is identical across re-instantiations
+/// (bit-reproducible campaigns).
+#[test]
+fn batcher_is_deterministic() {
+    check(0xDE7E2, 25, |g| {
+        let p = Params::default();
+        let cfg = Variant::Aid.config(&p);
+        let seed = g.u64(1 << 40);
+        let n_mc = g.usize_in(1, 100) as u32;
+        let batch = g.usize_in(1, 32);
+        let mk = || {
+            Batcher::new(
+                vec![(15, 15)],
+                n_mc,
+                batch,
+                (&cfg).into(),
+                MismatchSampler::new(seed, p.circuit.sigma_vth, p.circuit.sigma_beta),
+            )
+        };
+        for (x, y) in mk().zip(mk()) {
+            prop_assert!(x.tags == y.tags, "tags diverged");
+            prop_assert!(x.inputs.dvth == y.inputs.dvth, "dvth diverged");
+            prop_assert!(x.inputs.dbeta == y.inputs.dbeta, "dbeta diverged");
+        }
+        Ok(())
+    });
+}
+
+/// Welford merge == sequential accumulation for arbitrary splits.
+#[test]
+fn welford_merge_associative() {
+    check(0x3EF0 , 50, |g| {
+        let n = g.usize_in(2, 400);
+        let xs: Vec<f64> = (0..n).map(|_| g.normal(1.0) + g.f64_in(-2.0, 2.0)).collect();
+        let cut = g.usize_in(1, n - 1);
+        let mut whole = OnlineStats::new();
+        xs.iter().for_each(|&x| whole.push(x));
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        xs[..cut].iter().for_each(|&x| a.push(x));
+        xs[cut..].iter().for_each(|&x| b.push(x));
+        a.merge(&b);
+        prop_assert!((a.mean() - whole.mean()).abs() < 1e-10, "mean mismatch");
+        prop_assert!(
+            (a.variance() - whole.variance()).abs() < 1e-10,
+            "variance mismatch"
+        );
+        prop_assert!(a.count() == whole.count(), "count mismatch");
+        Ok(())
+    });
+}
+
+/// Reconstruction is the left inverse of the ideal transfer on the exact
+/// product grid, and clamps to [0, 225] everywhere.
+#[test]
+fn reconstruct_inverts_ideal_transfer() {
+    check(0x1DEA1, 40, |g| {
+        let fs = g.f64_in(0.05, 0.8);
+        let t = IdealTransfer { full_scale: fs };
+        let a = g.u8_in(0, 15);
+        let b = g.u8_in(0, 15);
+        let v = t.v_ideal(a, b);
+        let got = reconstruct(&t, v);
+        prop_assert!(
+            got == u16::from(a) * u16::from(b),
+            "{a}x{b}: reconstructed {got}"
+        );
+        let noisy = reconstruct(&t, v + g.normal(fs * 10.0));
+        prop_assert!(noisy <= 225, "clamp broken: {noisy}");
+        Ok(())
+    });
+}
+
+/// Campaign spec TOML round-trips for arbitrary valid specs.
+#[test]
+fn spec_toml_roundtrip_random() {
+    use smart_insram::coordinator::{CampaignSpec, Workload};
+    use smart_insram::montecarlo::Corner;
+    check(0x70771, 60, |g| {
+        let spec = CampaignSpec {
+            variant: *g.pick(&Variant::ALL),
+            workload: match g.u64(3) {
+                0 => Workload::Fixed { a: g.u8_in(0, 15), b: g.u8_in(0, 15) },
+                1 => Workload::FullSweep,
+                _ => Workload::Random { n_ops: g.usize_in(1, 5000) as u32 },
+            },
+            n_mc: g.usize_in(1, 100_000) as u32,
+            seed: g.u64(1 << 53),
+            corner: *g.pick(&[Corner::Tt, Corner::Ff, Corner::Ss]),
+            workers: g.usize_in(0, 16),
+            batch: g.usize_in(0, 2048),
+        };
+        let doc = smart_insram::util::toml_lite::parse(&spec.to_toml())
+            .map_err(|e| format!("parse: {e}"))?;
+        let arr = doc.get("campaigns").unwrap().as_arr().unwrap();
+        let back = CampaignSpec::from_value(&arr[0]).map_err(|e| format!("from_value: {e}"))?;
+        prop_assert!(back == spec, "roundtrip mismatch: {spec:?} -> {back:?}");
+        Ok(())
+    });
+}
+
+/// JSON parser round-trips arbitrary value trees built from the generator.
+#[test]
+fn json_roundtrip_random_trees() {
+    use smart_insram::util::json::{parse, to_string_pretty, Value};
+    fn gen_value(g: &mut Gen, depth: usize) -> Value {
+        match if depth == 0 { g.u64(4) } else { g.u64(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool()),
+            2 => Value::Num((g.f64_in(-1e6, 1e6) * 1e3).round() / 1e3),
+            3 => Value::Str(format!("s{}-\"q\"-\n", g.u64(1000))),
+            4 => Value::Arr((0..g.usize_in(0, 4)).map(|_| gen_value(g, depth - 1)).collect()),
+            _ => Value::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), gen_value(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(0x150_u64, 80, |g| {
+        let v = gen_value(g, 3);
+        let text = to_string_pretty(&v);
+        let back = parse(&text).map_err(|e| format!("{e}"))?;
+        prop_assert!(back == v, "roundtrip mismatch");
+        Ok(())
+    });
+}
+
+/// Dot-product additivity: in the saturation regime the shared-bitline
+/// discharge of disjoint row sets sums (linear charge-domain accumulation).
+#[test]
+fn dot_engine_additive_over_disjoint_rows() {
+    use smart_insram::mac::NativeDotEngine;
+    use smart_insram::montecarlo::McSample;
+    check(0xD07, 30, |g| {
+        let p = Params::default();
+        let variant = *g.pick(&[Variant::Smart, Variant::Aid]);
+        let e = NativeDotEngine::new(p, variant.config(&p), 8);
+        let nom = vec![McSample::nominal(); 8];
+        let mut w1 = vec![0u8; 8];
+        let mut c1 = vec![0u8; 8];
+        let mut w2 = vec![0u8; 8];
+        let mut c2 = vec![0u8; 8];
+        let mut wj = vec![0u8; 8];
+        let mut cj = vec![0u8; 8];
+        for r in 0..8 {
+            let (w, c) = (g.u8_in(0, 15), g.u8_in(0, 15));
+            if g.bool() {
+                w1[r] = w;
+                c1[r] = c;
+            } else {
+                w2[r] = w;
+                c2[r] = c;
+            }
+            wj[r] = w1[r].max(w2[r]);
+            cj[r] = c1[r].max(c2[r]);
+        }
+        let a = e.dot(&w1, &c1, &nom).v_dot;
+        let b = e.dot(&w2, &c2, &nom).v_dot;
+        let joint = e.dot(&wj, &cj, &nom);
+        prop_assert!(!joint.fault, "design point must stay in saturation");
+        prop_assert!(
+            (joint.v_dot - a - b).abs() < 8e-3,
+            "additivity broke: {} vs {a} + {b}",
+            joint.v_dot
+        );
+        Ok(())
+    });
+}
+
+/// Histogram conservation: every push lands in exactly one bin.
+#[test]
+fn histogram_conserves_counts() {
+    use smart_insram::metrics::Histogram;
+    check(0x415706, 40, |g| {
+        let lo = g.f64_in(-2.0, 0.0);
+        let hi = lo + g.f64_in(0.1, 3.0);
+        let mut h = Histogram::new(lo, hi, g.usize_in(1, 50));
+        let n = g.usize_in(1, 500);
+        for _ in 0..n {
+            h.push(g.f64_in(lo - 1.0, hi + 1.0)); // includes out-of-range
+        }
+        let total: u64 = h.counts().iter().sum();
+        prop_assert!(total == n as u64, "lost samples: {total} != {n}");
+        prop_assert!(h.total() == n as u64, "total() disagrees");
+        Ok(())
+    });
+}
+
+/// toml_lite never panics on arbitrary printable input (fuzz-light).
+#[test]
+fn toml_lite_total_on_garbage() {
+    use smart_insram::util::toml_lite::parse;
+    check(0x70F2, 200, |g| {
+        let len = g.usize_in(0, 120);
+        let charset: Vec<char> =
+            "abz=[]{}#\".\n\t 0123456789-_,eE+".chars().collect();
+        let s: String = (0..len).map(|_| *g.pick(&charset)).collect();
+        let _ = parse(&s); // Ok or Err both fine; must not panic
+        Ok(())
+    });
+}

@@ -1,0 +1,299 @@
+//! Integration: the AOT/PJRT path against the native Rust oracle.
+//!
+//! These tests require `make artifacts` (they skip, loudly, if the
+//! artifact directory is absent — the Makefile's `test` target builds it
+//! first).
+
+use smart_insram::coordinator::{run_campaign, Backend, CampaignSpec, Workload};
+use smart_insram::mac::{NativeMacEngine, Variant};
+use smart_insram::montecarlo::{McSample, MismatchSampler};
+use smart_insram::params::Params;
+use smart_insram::runtime::{default_artifact_dir, MacBatch, XlaRuntime};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// |native_f64 - hlo_f32| tolerance: f32 rounding through 256 Euler steps.
+const TOL: f64 = 5e-4;
+
+#[test]
+fn params_json_matches_builtin() {
+    let Some(dir) = artifacts() else { return };
+    let text = std::fs::read_to_string(dir.join("params.json")).unwrap();
+    let from_py = Params::load_artifact_json(&text).unwrap();
+    assert_eq!(
+        from_py,
+        Params::default(),
+        "python/compile/params.py drifted from rust/src/params.rs"
+    );
+}
+
+#[test]
+fn nominal_mac_matches_native_all_variants() {
+    let Some(dir) = artifacts() else { return };
+    let params = Params::default();
+    let mut rt = XlaRuntime::open(&dir).unwrap();
+    let exe = rt.mac_executable(1).unwrap();
+
+    for variant in Variant::ALL {
+        let cfg = variant.config(&params);
+        let native = NativeMacEngine::new(params, cfg);
+        for (a, b) in [(15u8, 15u8), (15, 1), (1, 15), (9, 6), (0, 15), (15, 0)] {
+            let mut batch = MacBatch::nominal(
+                1,
+                cfg.v_bulk as f32,
+                cfg.dac_mode.flag(),
+                cfg.t_sample as f32,
+            );
+            batch.set_row(0, a, b, [0.0; 4], [0.0; 4]);
+            let out = exe.run(&batch).unwrap();
+            let want = native.mac(a, b, &McSample::nominal());
+            assert!(
+                (f64::from(out.v_mult[0]) - want.v_mult).abs() < TOL,
+                "{variant:?} {a}x{b}: hlo {} vs native {}",
+                out.v_mult[0],
+                want.v_mult
+            );
+            for k in 0..4 {
+                assert!(
+                    (f64::from(out.v_blb[k]) - want.v_blb[k]).abs() < TOL,
+                    "{variant:?} {a}x{b} cell {k}"
+                );
+            }
+            assert_eq!(out.fault[0] > 0.5, want.fault, "{variant:?} {a}x{b} fault");
+        }
+    }
+}
+
+#[test]
+fn mismatch_batch_matches_native() {
+    let Some(dir) = artifacts() else { return };
+    let params = Params::default();
+    let mut rt = XlaRuntime::open(&dir).unwrap();
+    let exe = rt.mac_executable(256).unwrap();
+    let cfg = Variant::Smart.config(&params);
+    let native = NativeMacEngine::new(params, cfg);
+
+    let mut sampler = MismatchSampler::new(99, params.circuit.sigma_vth, params.circuit.sigma_beta);
+    let mut batch = MacBatch::nominal(
+        256,
+        cfg.v_bulk as f32,
+        cfg.dac_mode.flag(),
+        cfg.t_sample as f32,
+    );
+    let mut rows = Vec::new();
+    for i in 0..256usize {
+        let a = (i % 16) as u8;
+        let b = ((i / 16) % 16) as u8;
+        let mc = sampler.sample();
+        batch.set_row(
+            i,
+            a,
+            b,
+            mc.dvth.map(|x| x as f32),
+            mc.dbeta.map(|x| x as f32),
+        );
+        rows.push((a, b, mc));
+    }
+    let out = exe.run(&batch).unwrap();
+    let mut worst: f64 = 0.0;
+    for (i, (a, b, mc)) in rows.iter().enumerate() {
+        // native engine sees the f32-rounded deviates the artifact saw
+        let mc32 = McSample {
+            dvth: mc.dvth.map(|x| f64::from(x as f32)),
+            dbeta: mc.dbeta.map(|x| f64::from(x as f32)),
+        };
+        let want = native.mac(*a, *b, &mc32);
+        let got = f64::from(out.v_mult[i]);
+        worst = worst.max((got - want.v_mult).abs());
+        assert!(
+            (got - want.v_mult).abs() < TOL,
+            "row {i} ({a}x{b}): hlo {got} vs native {}",
+            want.v_mult
+        );
+    }
+    eprintln!("mismatch_batch_matches_native: worst |delta| = {worst:.2e} V");
+}
+
+#[test]
+fn energy_output_matches_native() {
+    let Some(dir) = artifacts() else { return };
+    let params = Params::default();
+    let mut rt = XlaRuntime::open(&dir).unwrap();
+    let exe = rt.mac_executable(1).unwrap();
+    let cfg = Variant::Aid.config(&params);
+    let native = NativeMacEngine::new(params, cfg);
+    let mut batch = MacBatch::nominal(1, 0.0, cfg.dac_mode.flag(), cfg.t_sample as f32);
+    batch.set_row(0, 15, 15, [0.0; 4], [0.0; 4]);
+    let out = exe.run(&batch).unwrap();
+    let want = native.mac(15, 15, &McSample::nominal()).energy;
+    assert!(
+        (f64::from(out.energy[0]) - want).abs() < want * 1e-3,
+        "hlo {} vs native {want}",
+        out.energy[0]
+    );
+}
+
+#[test]
+fn trace_artifact_is_monotone_and_ends_at_discharge() {
+    let Some(dir) = artifacts() else { return };
+    let params = Params::default();
+    let mut rt = XlaRuntime::open(&dir).unwrap();
+    let n_points = rt.manifest().trace_points;
+    let cfg = Variant::Smart.config(&params);
+    let mut batch = MacBatch::nominal(8, cfg.v_bulk as f32, 1.0, cfg.t_sample as f32);
+    for i in 0..8 {
+        batch.set_row(i, 15, (i * 2) as u8, [0.0; 4], [0.0; 4]);
+    }
+    let trace = rt.run_trace(&batch, cfg.t_sample as f32).unwrap();
+    assert_eq!(trace.len(), n_points * 8 * 4);
+    // monotone non-increasing along time for every (row, cell)
+    for row in 0..8 {
+        for cell in 0..4 {
+            for t in 1..n_points {
+                let prev = trace[(t - 1) * 32 + row * 4 + cell];
+                let cur = trace[t * 32 + row * 4 + cell];
+                assert!(cur <= prev + 1e-6, "row {row} cell {cell} t {t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_campaign_matches_native_campaign() {
+    let Some(dir) = artifacts() else { return };
+    let params = Params::default();
+    let spec = CampaignSpec {
+        variant: Variant::Smart,
+        workload: Workload::Fixed { a: 15, b: 15 },
+        n_mc: 256,
+        seed: 7,
+        corner: smart_insram::montecarlo::Corner::Tt,
+        workers: 2,
+        batch: 256,
+    };
+    let x = run_campaign(&params, &spec, Backend::Xla, Some(dir)).unwrap();
+    let n = run_campaign(&params, &spec, Backend::Native, None).unwrap();
+    assert_eq!(x.rows, n.rows);
+    // same MC stream, different arithmetic precision: stats agree tightly
+    assert!(
+        (x.raw_vmult.mean() - n.raw_vmult.mean()).abs() < 1e-4,
+        "means: xla {} native {}",
+        x.raw_vmult.mean(),
+        n.raw_vmult.mean()
+    );
+    assert!((x.raw_vmult.std_dev() - n.raw_vmult.std_dev()).abs() < 1e-4);
+    assert_eq!(x.accuracy.ber, n.accuracy.ber);
+}
+
+#[test]
+fn worker_pool_scales_and_preserves_results() {
+    let Some(dir) = artifacts() else { return };
+    let params = Params::default();
+    let mk = |workers| CampaignSpec {
+        variant: Variant::Aid,
+        workload: Workload::Fixed { a: 15, b: 15 },
+        n_mc: 512,
+        seed: 3,
+        corner: smart_insram::montecarlo::Corner::Tt,
+        workers,
+        batch: 256,
+    };
+    let one = run_campaign(&params, &mk(1), Backend::Xla, Some(dir.clone())).unwrap();
+    let four = run_campaign(&params, &mk(4), Backend::Xla, Some(dir)).unwrap();
+    assert_eq!(one.rows, four.rows);
+    // identical inputs -> identical aggregate stats regardless of workers
+    assert!((one.raw_vmult.mean() - four.raw_vmult.mean()).abs() < 1e-9);
+    assert!((one.raw_vmult.std_dev() - four.raw_vmult.std_dev()).abs() < 1e-9);
+}
+
+#[test]
+fn dot_artifact_matches_native_dot_engine() {
+    let Some(dir) = artifacts() else { return };
+    let params = Params::default();
+    let mut rt = XlaRuntime::open(&dir).unwrap();
+    let rows = rt.manifest().dot_rows;
+    assert_eq!(rows, 16, "manifest dot_rows");
+    let exe = rt.dot_executable(16).unwrap();
+    let cfg = Variant::Smart.config(&params);
+    let native = smart_insram::mac::NativeDotEngine::new(params, cfg, rows);
+
+    let mut sampler = MismatchSampler::new(41, params.circuit.sigma_vth, params.circuit.sigma_beta);
+    let mut batch = smart_insram::runtime::DotBatch::nominal(
+        16,
+        rows,
+        cfg.v_bulk as f32,
+        cfg.dac_mode.flag(),
+        native.t_sample() as f32,
+    );
+    let mut rng = smart_insram::montecarlo::SplitMix64::new(5);
+    let mut rows_data = Vec::new();
+    for i in 0..16usize {
+        let mut ws = Vec::new();
+        let mut cs = Vec::new();
+        let mut mcs = Vec::new();
+        for r in 0..rows {
+            let w = (rng.next_u64() % 16) as u8;
+            let c = (rng.next_u64() % 16) as u8;
+            let mc = sampler.sample();
+            batch.set_row(i, r, w, c, mc.dvth.map(|x| x as f32), mc.dbeta.map(|x| x as f32));
+            // native engine sees the f32-rounded deviates the artifact saw
+            mcs.push(McSample {
+                dvth: mc.dvth.map(|x| f64::from(x as f32)),
+                dbeta: mc.dbeta.map(|x| f64::from(x as f32)),
+            });
+            ws.push(w);
+            cs.push(c);
+        }
+        rows_data.push((ws, cs, mcs));
+    }
+    let out = exe.run(&batch).unwrap();
+    let mut worst: f64 = 0.0;
+    for (i, (ws, cs, mcs)) in rows_data.iter().enumerate() {
+        let want = native.dot(ws, cs, mcs);
+        let got = f64::from(out.v_dot[i]);
+        worst = worst.max((got - want.v_dot).abs());
+        assert!(
+            (got - want.v_dot).abs() < TOL,
+            "dot row {i}: hlo {got} vs native {}",
+            want.v_dot
+        );
+        assert_eq!(out.fault[i] > 0.5, want.fault, "dot row {i} fault");
+    }
+    eprintln!("dot_artifact_matches_native: worst |delta| = {worst:.2e} V");
+}
+
+#[test]
+fn dot_full_scale_matches_mac_full_scale() {
+    let Some(dir) = artifacts() else { return };
+    let params = Params::default();
+    let mut rt = XlaRuntime::open(&dir).unwrap();
+    let rows = rt.manifest().dot_rows;
+    let exe = rt.dot_executable(16).unwrap();
+    let cfg = Variant::Aid.config(&params);
+    let native_mac = NativeMacEngine::new(params, cfg);
+    let mut batch = smart_insram::runtime::DotBatch::nominal(
+        16,
+        rows,
+        cfg.v_bulk as f32,
+        cfg.dac_mode.flag(),
+        (cfg.t_sample / 4.0) as f32,
+    );
+    for r in 0..rows {
+        batch.set_row(0, r, 15, 15, [0.0; 4], [0.0; 4]);
+    }
+    let out = exe.run(&batch).unwrap();
+    let fs_mac = native_mac.full_scale();
+    assert!(
+        (f64::from(out.v_dot[0]) - fs_mac).abs() < 3e-3,
+        "dot FS {} vs mac FS {fs_mac}",
+        out.v_dot[0]
+    );
+}
