@@ -38,7 +38,12 @@ fn main() {
         let c0 = w0.crossing_time(0.75);
         let c6 = w6.crossing_time(0.75);
         if let (Some(c0), Some(c6)) = (c0, c6) {
-            println!("time to 0.25 V discharge: {:.0} ps -> {:.0} ps ({:.2}x faster)\n", c0 * 1e12, c6 * 1e12, c0 / c6);
+            println!(
+                "time to 0.25 V discharge: {:.0} ps -> {:.0} ps ({:.2}x faster)\n",
+                c0 * 1e12,
+                c6 * 1e12,
+                c0 / c6
+            );
         } else {
             println!();
         }
@@ -59,7 +64,8 @@ fn main() {
         let dac = WordlineDac::new(cfg.dac_mode, &card, &params.circuit, 0.0);
         let inp = BitlineInputs { v_wl: dac.v_wl(15), bit: true, v_bulk: 0.0 };
         let stride = params.circuit.n_steps / n_points as u32;
-        let wf = discharge_trace(&params, &Mosfet::nominal(card), &inp, t_total, params.circuit.n_steps, stride);
+        let steps = params.circuit.n_steps;
+        let wf = discharge_trace(&params, &Mosfet::nominal(card), &inp, t_total, steps, stride);
         let mut worst = 0.0f64;
         for t in 0..n_points {
             let hlo = f64::from(trace[t * 32]); // (t, row 0, cell 0)

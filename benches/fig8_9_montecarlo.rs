@@ -39,7 +39,8 @@ fn main() {
     let s_aid = aid.raw_vmult.std_dev() / aid.full_scale;
     let s_smart = smart.raw_vmult.std_dev() / smart.full_scale;
     println!(
-        "normalized sigma: AID {s_aid:.4} -> SMART {s_smart:.4} ({:.2}x better; paper: 0.086 -> 0.009)\n",
+        "normalized sigma: AID {s_aid:.4} -> SMART {s_smart:.4} \
+         ({:.2}x better; paper: 0.086 -> 0.009)\n",
         s_aid / s_smart
     );
     assert!(s_smart < s_aid, "Fig. 8 shape violated");

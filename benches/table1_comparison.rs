@@ -32,6 +32,7 @@ fn main() {
             corner: smart_insram::montecarlo::Corner::Tt,
             workers: 0,
             batch: 0,
+            shards: 0,
         };
         run_campaign(&params, &spec, backend, Some(dir.clone())).expect("campaign")
     };
@@ -89,6 +90,7 @@ fn main() {
                 corner: smart_insram::montecarlo::Corner::Tt,
                 workers: 1,
                 batch: 256,
+                shards: 0,
             };
             let s = r.bench(&format!("table1/{} (warm engine)", v.name()), || {
                 engine.run(&params, &spec).unwrap()

@@ -75,6 +75,7 @@ fn main() -> Result<()> {
             corner: smart_insram::montecarlo::Corner::Tt,
             workers: 1,
             batch: 256,
+            shards: 0,
         };
         let r = engine.run(&params, &spec)?;
         println!(

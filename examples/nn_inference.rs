@@ -46,7 +46,11 @@ impl Mlp {
         let mut w2 = [[0u8; N_HID]; N_OUT];
         for (o, row) in w2.iter_mut().enumerate() {
             for (h, w) in row.iter_mut().enumerate() {
-                *w = if h % N_OUT == o { 10 + (rng.next_u64() % 6) as u8 } else { (rng.next_u64() % 4) as u8 };
+                *w = if h % N_OUT == o {
+                    10 + (rng.next_u64() % 6) as u8
+                } else {
+                    (rng.next_u64() % 4) as u8
+                };
             }
         }
         Self { w1, w2 }
@@ -259,7 +263,11 @@ fn main() -> Result<()> {
         .filter(|(c, x)| exact_forward(&mlp, x) == *c)
         .count() as f64
         / data.len() as f64;
-    println!("exact 4-bit integer MLP accuracy: {:.1}% ({} samples)\n", exact_acc * 100.0, data.len());
+    println!(
+        "exact 4-bit integer MLP accuracy: {:.1}% ({} samples)\n",
+        exact_acc * 100.0,
+        data.len()
+    );
 
     let model = EnergyModel::default();
     println!(

@@ -15,7 +15,8 @@ fn main() {
     for _ in 0..10_000 {
         acc += e.mac(15, 15, &mc).v_mult;
     }
-    println!("mac(15,15): {:.2} us/eval (sum {acc:.1})", t0.elapsed().as_secs_f64() / 10_000.0 * 1e6);
+    let us_per_eval = t0.elapsed().as_secs_f64() / 10_000.0 * 1e6;
+    println!("mac(15,15): {us_per_eval:.2} us/eval (sum {acc:.1})");
 
     let mut s = MismatchSampler::new(1, 8e-3, 0.02);
     let t0 = Instant::now();

@@ -23,7 +23,10 @@ fn main() -> Result<()> {
     println!("PJRT platform: {}\n", rt.platform());
 
     let exe = rt.mac_executable(1)?;
-    println!("{:<14} {:>5} {:>12} {:>12} {:>10}", "variant", "a*b", "HLO (mV)", "native (mV)", "|delta|");
+    println!(
+        "{:<14} {:>5} {:>12} {:>12} {:>10}",
+        "variant", "a*b", "HLO (mV)", "native (mV)", "|delta|"
+    );
     for variant in [Variant::Smart, Variant::Aid, Variant::Imac] {
         let cfg = variant.config(&params);
         let native = NativeMacEngine::new(params, cfg);

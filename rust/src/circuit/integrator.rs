@@ -13,7 +13,13 @@ pub enum Method {
 
 /// Integrate `dv/dt = f(v)` from `v0` over `n_steps` of `dt`, clamping the
 /// state at 0 (the bitline cannot undershoot ground).
-pub fn integrate_fixed(v0: f64, dt: f64, n_steps: u32, method: Method, f: impl Fn(f64) -> f64) -> f64 {
+pub fn integrate_fixed(
+    v0: f64,
+    dt: f64,
+    n_steps: u32,
+    method: Method,
+    f: impl Fn(f64) -> f64,
+) -> f64 {
     let mut v = v0;
     for _ in 0..n_steps {
         v = step(v, dt, method, &f);

@@ -43,9 +43,15 @@ impl Aggregator {
 
     /// Fold one executed batch.
     pub fn push_batch(&mut self, batch: &PackedBatch, out: &MacBatchOut) {
-        assert_eq!(batch.tags.len(), out.v_mult.len(), "batch/output shape mismatch");
+        self.push_rows(&batch.tags, out);
+    }
+
+    /// Fold executed rows by tag — the batch inputs themselves are never
+    /// needed here, so sharded runners can drop them before buffering.
+    pub fn push_rows(&mut self, tags: &[RowTag], out: &MacBatchOut) {
+        assert_eq!(tags.len(), out.v_mult.len(), "batch/output shape mismatch");
         self.batches_seen += 1;
-        for (row, tag) in batch.tags.iter().enumerate() {
+        for (row, tag) in tags.iter().enumerate() {
             let &RowTag::Item { a, b, .. } = tag else { continue };
             let v_mult = f64::from(out.v_mult[row]);
             let v_ideal = self.ideal.v_ideal(a, b);

@@ -1,10 +1,17 @@
 //! Batcher: packs the (operand, MC-sample) work stream into the fixed
 //! batch shapes the AOT artifacts were compiled for.
 //!
+//! Work items are indexed globally: item `k` is MC draw `k % n_mc` of
+//! operand `k / n_mc`, and its mismatch deviates come from a per-item
+//! counter-derived stream ([`MismatchSampler::sample_item`]). A batcher
+//! covers a half-open item range, so a sharded campaign is just one
+//! batcher per shard — and because deviates are a pure function of the
+//! item index, any shard partition reproduces the exact same rows.
+//!
 //! Invariants (property-tested in `tests/proptest_coordinator.rs`):
 //! * every work item appears in exactly one batch row (no drops, no dups);
 //! * padding rows are tagged invalid and never reach the aggregator;
-//! * packing is deterministic given (spec, seed).
+//! * packing is deterministic given (spec, seed) and shard-invariant.
 
 use crate::mac::VariantConfig;
 use crate::montecarlo::MismatchSampler;
@@ -32,21 +39,6 @@ impl PackedBatch {
     }
 }
 
-/// Streaming packer: iterates operands x MC samples in row-major order
-/// (all MC draws of operand 0, then operand 1, ...) drawing mismatch
-/// deviates from a seeded sampler so the stream is reproducible.
-pub struct Batcher {
-    operands: Vec<(u8, u8)>,
-    n_mc: u32,
-    batch_size: usize,
-    cfg: BatchCfg,
-    sampler: MismatchSampler,
-    // cursor
-    op_idx: u32,
-    mc_idx: u32,
-    seq: u64,
-}
-
 /// Scalar inputs shared by every batch of a campaign.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchCfg {
@@ -65,7 +57,24 @@ impl From<&VariantConfig> for BatchCfg {
     }
 }
 
+/// Streaming packer over an item range, in global item order (all MC draws
+/// of operand 0, then operand 1, ...), drawing per-item mismatch deviates
+/// so the stream is reproducible and partition-invariant.
+pub struct Batcher {
+    operands: Vec<(u8, u8)>,
+    n_mc: u32,
+    batch_size: usize,
+    cfg: BatchCfg,
+    sampler: MismatchSampler,
+    // half-open global item range [start, end); cursor advances start..end
+    start: u64,
+    cursor: u64,
+    end: u64,
+    seq: u64,
+}
+
 impl Batcher {
+    /// Batcher over the whole campaign (items `0..operands.len() * n_mc`).
     pub fn new(
         operands: Vec<(u8, u8)>,
         n_mc: u32,
@@ -73,29 +82,31 @@ impl Batcher {
         cfg: BatchCfg,
         sampler: MismatchSampler,
     ) -> Self {
+        let end = operands.len() as u64 * u64::from(n_mc);
+        Self::for_range(operands, n_mc, batch_size, cfg, sampler, 0, end)
+    }
+
+    /// Batcher over the shard item range `[start, end)`.
+    pub fn for_range(
+        operands: Vec<(u8, u8)>,
+        n_mc: u32,
+        batch_size: usize,
+        cfg: BatchCfg,
+        sampler: MismatchSampler,
+        start: u64,
+        end: u64,
+    ) -> Self {
         assert!(batch_size > 0, "batch_size must be positive");
         assert!(!operands.is_empty(), "need at least one operand pair");
-        Self { operands, n_mc, batch_size, cfg, sampler, op_idx: 0, mc_idx: 0, seq: 0 }
+        let total = operands.len() as u64 * u64::from(n_mc);
+        assert!(start <= end && end <= total, "bad item range [{start}, {end}) of {total}");
+        Self { operands, n_mc, batch_size, cfg, sampler, start, cursor: start, end, seq: 0 }
     }
 
-    /// Total number of batches this stream will yield.
+    /// Total number of batches this stream will yield — constant over the
+    /// batcher's lifetime, regardless of how far iteration has advanced.
     pub fn n_batches(&self) -> u64 {
-        let items = self.operands.len() as u64 * u64::from(self.n_mc);
-        items.div_ceil(self.batch_size as u64)
-    }
-
-    fn next_item(&mut self) -> Option<(u32, u32, u8, u8)> {
-        if self.op_idx as usize >= self.operands.len() {
-            return None;
-        }
-        let (a, b) = self.operands[self.op_idx as usize];
-        let item = (self.op_idx, self.mc_idx, a, b);
-        self.mc_idx += 1;
-        if self.mc_idx >= self.n_mc {
-            self.mc_idx = 0;
-            self.op_idx += 1;
-        }
-        Some(item)
+        (self.end - self.start).div_ceil(self.batch_size as u64)
     }
 }
 
@@ -103,6 +114,9 @@ impl Iterator for Batcher {
     type Item = PackedBatch;
 
     fn next(&mut self) -> Option<PackedBatch> {
+        if self.cursor >= self.end {
+            return None; // range exhausted on a batch boundary
+        }
         let mut inputs = MacBatch::nominal(
             self.batch_size,
             self.cfg.v_bulk,
@@ -111,20 +125,17 @@ impl Iterator for Batcher {
         );
         let mut tags = Vec::with_capacity(self.batch_size);
         for row in 0..self.batch_size {
-            match self.next_item() {
-                Some((op_idx, mc_idx, a, b)) => {
-                    let mc = self.sampler.sample();
-                    let dvth = mc.dvth.map(|x| x as f32);
-                    let dbeta = mc.dbeta.map(|x| x as f32);
-                    inputs.set_row(row, a, b, dvth, dbeta);
-                    tags.push(RowTag::Item { op_idx, mc_idx, a, b });
-                }
-                None => {
-                    if row == 0 {
-                        return None; // stream exhausted on a batch boundary
-                    }
-                    tags.push(RowTag::Pad); // row stays nominal (0,0)
-                }
+            if self.cursor < self.end {
+                let k = self.cursor;
+                self.cursor += 1;
+                let op_idx = (k / u64::from(self.n_mc)) as u32;
+                let mc_idx = (k % u64::from(self.n_mc)) as u32;
+                let (a, b) = self.operands[op_idx as usize];
+                let mc = self.sampler.sample_item(k);
+                inputs.set_row(row, a, b, mc.dvth.map(|x| x as f32), mc.dbeta.map(|x| x as f32));
+                tags.push(RowTag::Item { op_idx, mc_idx, a, b });
+            } else {
+                tags.push(RowTag::Pad); // row stays nominal (0,0)
             }
         }
         let seq = self.seq;
@@ -202,6 +213,57 @@ mod tests {
         let mut b = mk(vec![(1, 2)], 8, 8);
         assert!(b.next().is_some());
         assert!(b.next().is_none());
+        assert!(b.next().is_none());
+    }
+
+    #[test]
+    fn shard_ranges_reproduce_the_full_stream() {
+        // rows from [0, 13) + [13, 20) == rows from [0, 20), bit for bit
+        let p = Params::default();
+        let cfg = Variant::Aid.config(&p);
+        let mk_range = |start: u64, end: u64| {
+            Batcher::for_range(
+                vec![(15, 15), (3, 7)],
+                10,
+                4,
+                BatchCfg::from(&cfg),
+                MismatchSampler::new(7, 8e-3, 0.02),
+                start,
+                end,
+            )
+        };
+        let collect_rows = |b: Batcher| {
+            let mut rows = Vec::new();
+            for pb in b {
+                for (i, t) in pb.tags.iter().enumerate() {
+                    if let RowTag::Item { op_idx, mc_idx, .. } = *t {
+                        let dvth: Vec<f32> = pb.inputs.dvth[i * 4..i * 4 + 4].to_vec();
+                        rows.push((op_idx, mc_idx, dvth));
+                    }
+                }
+            }
+            rows
+        };
+        let whole = collect_rows(mk_range(0, 20));
+        let mut split = collect_rows(mk_range(0, 13));
+        split.extend(collect_rows(mk_range(13, 20)));
+        assert_eq!(whole, split);
+    }
+
+    #[test]
+    fn empty_range_yields_nothing() {
+        let p = Params::default();
+        let cfg = Variant::Smart.config(&p);
+        let mut b = Batcher::for_range(
+            vec![(1, 1)],
+            8,
+            4,
+            BatchCfg::from(&cfg),
+            MismatchSampler::new(0, 0.0, 0.0),
+            5,
+            5,
+        );
+        assert_eq!(b.n_batches(), 0);
         assert!(b.next().is_none());
     }
 }

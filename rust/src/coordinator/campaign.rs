@@ -1,4 +1,14 @@
-//! Campaign orchestration: spec -> batches -> pool -> report.
+//! Campaign orchestration: spec -> shards -> batches -> pool -> report.
+//!
+//! The native backend runs as a sharded parallel campaign: the item space
+//! is split into contiguous shards ([`super::pool::shard_range`]), worker
+//! threads claim shards dynamically ([`super::pool::execute_sharded`]),
+//! and results are folded strictly in global item order. Because mismatch
+//! deviates are a pure function of the item index
+//! ([`crate::montecarlo::MismatchSampler::sample_item`]) and padding rows
+//! never reach the aggregator, the aggregate statistics are bit-identical
+//! for ANY shard count and ANY thread count — `--shards`/`--threads` are
+//! pure performance knobs.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -6,8 +16,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::aggregate::{Aggregator, CampaignReport};
-use super::batcher::{BatchCfg, Batcher};
-use super::pool::WorkerPool;
+use super::batcher::{BatchCfg, Batcher, RowTag};
+use super::pool::{execute_sharded, shard_range, WorkerPool};
 use super::spec::CampaignSpec;
 use crate::mac::NativeMacEngine;
 use crate::montecarlo::MismatchSampler;
@@ -19,15 +29,15 @@ use crate::runtime::{MacBatchOut, XlaRuntime};
 pub enum Backend {
     /// AOT artifacts via the PJRT worker pool (the production path).
     Xla,
-    /// The native Rust simulator (oracle / no-artifact path).
+    /// The native Rust simulator, sharded across OS threads.
     Native,
 }
 
 /// Run a campaign to completion and return its report.
 ///
-/// The XLA path interleaves submission and draining so the bounded job
-/// queue applies backpressure to the batcher; the native path executes
-/// rows inline (it is the per-row oracle, not a batch engine).
+/// The native path fans shards out over a dynamic thread pool; the XLA
+/// path interleaves submission and draining so the bounded job queue
+/// applies backpressure to the batcher.
 pub fn run_campaign(
     params: &Params,
     spec: &CampaignSpec,
@@ -35,25 +45,8 @@ pub fn run_campaign(
     artifact_dir: Option<PathBuf>,
 ) -> Result<CampaignReport> {
     spec.validate().map_err(|e| anyhow::anyhow!(e))?;
-    let cfg = spec.variant.config(params);
-    let engine = NativeMacEngine::new(*params, cfg);
-    let full_scale = engine.full_scale();
-    let operands = spec.workload.operands(spec.seed);
-    let sampler = MismatchSampler::new(spec.seed, params.circuit.sigma_vth, params.circuit.sigma_beta)
-        .with_corner(spec.corner);
-
-    let t0 = Instant::now();
-    let mut agg = Aggregator::new(full_scale, 64);
-
     match backend {
-        Backend::Native => {
-            let batch = if spec.batch > 0 { spec.batch } else { 256 };
-            let batcher = Batcher::new(operands, spec.n_mc, batch, BatchCfg::from(&cfg), sampler);
-            for pb in batcher {
-                let out = run_native_batch(&engine, &pb);
-                agg.push_batch(&pb, &out);
-            }
-        }
+        Backend::Native => run_native_campaign(params, spec),
         Backend::Xla => {
             let dir = artifact_dir.unwrap_or_else(crate::runtime::default_artifact_dir);
             // Pick a compiled batch size: honour the spec, else the largest
@@ -66,13 +59,72 @@ pub fn run_campaign(
                 spec.workers
             } else {
                 // PJRT's CPU client is internally threaded; extra clients on
-                // this host only add compile + contention cost (§Perf).
+                // this host only add compile + contention cost (DESIGN.md §7).
                 1
             };
             let mut engine = CampaignEngine::new(dir, batch, workers)?;
-            return engine.run(params, spec);
+            engine.run(params, spec)
         }
     }
+}
+
+/// Sharded native campaign: split the item space, execute shards on a
+/// dynamic thread pool, fold results in canonical item order.
+fn run_native_campaign(params: &Params, spec: &CampaignSpec) -> Result<CampaignReport> {
+    let cfg = spec.variant.config(params);
+    let engine = NativeMacEngine::new(*params, cfg);
+    let full_scale = engine.full_scale();
+    let operands = spec.workload.operands(spec.seed);
+    let sampler =
+        MismatchSampler::new(spec.seed, params.circuit.sigma_vth, params.circuit.sigma_beta)
+            .with_corner(spec.corner);
+
+    let total = spec.total_items(operands.len());
+    let batch = if spec.batch > 0 { spec.batch } else { 256 };
+    let threads = if spec.workers > 0 {
+        spec.workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    // Auto-sharding: a few shards per thread for load balance, never more
+    // than one shard per batch of work. Any choice yields identical
+    // aggregates; this only tunes scheduling granularity.
+    let n_batches = total.div_ceil(batch as u64).max(1) as usize;
+    let n_shards = if spec.shards > 0 { spec.shards } else { n_batches.min(threads * 4) };
+
+    let t0 = Instant::now();
+    let mut agg = Aggregator::new(full_scale, 64);
+    let batch_cfg = BatchCfg::from(&cfg);
+    // Shard results buffer only (tags, outputs) — the batch inputs are
+    // dropped after simulation since the aggregator never reads them.
+    // Worst-case memory is still one campaign's outputs if the first
+    // shard is the last to finish; with auto-sharding (a few shards per
+    // thread) the typical in-flight window is a handful of shards.
+    let run_shard = |shard: usize| {
+        let (start, end) = shard_range(total, n_shards, shard);
+        // no point packing (and simulating) a 256-row batch for a
+        // 32-item shard — clamp to the shard's own length
+        let shard_batch = batch.min((end - start).max(1) as usize);
+        Batcher::for_range(
+            operands.clone(),
+            spec.n_mc,
+            shard_batch,
+            batch_cfg,
+            sampler.clone(),
+            start,
+            end,
+        )
+        .map(|pb| {
+            let out = run_native_batch(&engine, &pb);
+            (pb.tags, out)
+        })
+        .collect::<Vec<_>>()
+    };
+    execute_sharded(n_shards, threads, run_shard, |_, outs| {
+        for (tags, out) in &outs {
+            agg.push_rows(tags, out);
+        }
+    });
     Ok(agg.finish(t0.elapsed()))
 }
 
@@ -80,7 +132,7 @@ pub fn run_campaign(
 /// executables) persist across campaigns of the same batch size. For
 /// drivers that run many campaigns (mc_sweep, the benches, services) this
 /// removes the per-campaign compile cost — the dominant term on this host
-/// (§Perf: ~120 ms compile vs ~25 ms per 256-row execute).
+/// (DESIGN.md §7: ~120 ms compile vs ~25 ms per 256-row execute).
 pub struct CampaignEngine {
     pool: WorkerPool,
     batch: usize,
@@ -97,7 +149,9 @@ impl CampaignEngine {
     }
 
     /// Run one campaign on the persistent pool. `spec.batch` must be 0 or
-    /// equal to the engine's compiled batch size.
+    /// equal to the engine's compiled batch size. Completed batches are
+    /// re-sequenced by their submission order before aggregation, so the
+    /// report is deterministic for any worker count.
     pub fn run(&mut self, params: &Params, spec: &CampaignSpec) -> Result<CampaignReport> {
         spec.validate().map_err(|e| anyhow::anyhow!(e))?;
         anyhow::ensure!(
@@ -118,20 +172,31 @@ impl CampaignEngine {
         let mut agg = Aggregator::new(full_scale, 64);
         let batcher = Batcher::new(operands, spec.n_mc, self.batch, BatchCfg::from(&cfg), sampler);
         let mut in_flight: u64 = 0;
+        // re-order buffer: batches fold in `seq` order, not arrival order
+        let mut pending = std::collections::BTreeMap::new();
+        let mut next_seq = 0u64;
         for pb in batcher {
             self.pool.submit(pb)?;
             in_flight += 1;
             // opportunistic drain keeps memory flat under backpressure
             while let Some(done) = self.pool.try_recv() {
                 let (b, out) = done?;
-                agg.push_batch(&b, &out);
+                pending.insert(b.seq, (b, out));
                 in_flight -= 1;
+            }
+            while let Some((b, out)) = pending.remove(&next_seq) {
+                agg.push_batch(&b, &out);
+                next_seq += 1;
             }
         }
         while in_flight > 0 {
             let (b, out) = self.pool.recv().expect("pool drained early")?;
-            agg.push_batch(&b, &out);
+            pending.insert(b.seq, (b, out));
             in_flight -= 1;
+        }
+        while let Some((b, out)) = pending.remove(&next_seq) {
+            agg.push_batch(&b, &out);
+            next_seq += 1;
         }
         Ok(agg.finish(t0.elapsed()))
     }
@@ -150,6 +215,9 @@ pub fn spawn_campaign(
 }
 
 /// Execute one packed batch on the native engine (row-by-row oracle).
+/// Padding rows are left at zero — the aggregator never reads them, and
+/// simulating them would multiply work across pad-heavy shards (the AOT
+/// path has no such freedom: its executables are fixed-shape).
 pub fn run_native_batch(
     engine: &NativeMacEngine,
     pb: &super::batcher::PackedBatch,
@@ -162,6 +230,9 @@ pub fn run_native_batch(
         fault: vec![0.0; n],
     };
     for row in 0..n {
+        if matches!(pb.tags[row], RowTag::Pad) {
+            continue;
+        }
         let a = (0..4).fold(0u8, |acc, k| {
             acc | ((pb.inputs.a_bits[row * 4 + k] > 0.5) as u8) << (3 - k)
         });
@@ -221,9 +292,33 @@ mod tests {
             corner: crate::montecarlo::Corner::Tt,
             workers: 0,
             batch: 64,
+            shards: 0,
         };
         let r = run_campaign(&p, &spec, Backend::Native, None).unwrap();
         assert_eq!(r.rows, 512);
         assert_eq!(r.per_op.len(), 256);
+    }
+
+    #[test]
+    fn shard_and_thread_counts_do_not_change_aggregates() {
+        let p = Params::default();
+        let mk = |shards: usize, workers: usize| {
+            let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+            spec.n_mc = 96;
+            spec.shards = shards;
+            spec.workers = workers;
+            run_campaign(&p, &spec, Backend::Native, None).unwrap()
+        };
+        let base = mk(1, 1);
+        for (shards, workers) in [(4, 1), (4, 4), (7, 3)] {
+            let r = mk(shards, workers);
+            assert_eq!(r.rows, base.rows);
+            assert_eq!(r.raw_vmult.mean().to_bits(), base.raw_vmult.mean().to_bits());
+            assert_eq!(
+                r.raw_vmult.std_dev().to_bits(),
+                base.raw_vmult.std_dev().to_bits()
+            );
+            assert_eq!(r.hist.counts(), base.hist.counts());
+        }
     }
 }

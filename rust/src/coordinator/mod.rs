@@ -2,14 +2,16 @@
 //! harness as a production service).
 //!
 //! A campaign = (variant, operand workload, MC sample count). The
-//! coordinator expands it into (operand, sample) work items, packs them
-//! into the fixed batch shapes the AOT artifacts were compiled for
-//! ([`Batcher`]), fans the batches out over a pool of PJRT worker threads
-//! with bounded-queue backpressure ([`WorkerPool`]), and folds the results
-//! into the paper's metrics ([`Aggregator`]). Every campaign is
-//! bit-reproducible from (spec, seed).
+//! coordinator splits it into contiguous item shards with deterministic
+//! per-shard RNG streams, packs each shard into the fixed batch shapes the
+//! AOT artifacts were compiled for ([`Batcher`]), executes shards on a
+//! dynamic (work-stealing) thread pool ([`execute_sharded`]) or a pool of
+//! PJRT worker threads with bounded-queue backpressure ([`WorkerPool`]),
+//! and folds the results into the paper's metrics ([`Aggregator`]) in
+//! canonical item order. Every campaign is bit-reproducible from
+//! (spec, seed) — for ANY `--shards`/`--threads` (DESIGN.md §4).
 //!
-//! PJRT handles are `!Send`, so workers are OS threads each owning a
+//! PJRT handles are `!Send`, so XLA workers are OS threads each owning a
 //! private [`crate::runtime::XlaRuntime`]; [`spawn_campaign`] wraps the
 //! blocking run in a thread handle for embedding in services.
 
@@ -20,7 +22,7 @@ mod pool;
 mod spec;
 
 pub use aggregate::{Aggregator, CampaignReport, OpKey};
-pub use batcher::{Batcher, PackedBatch, RowTag};
+pub use batcher::{BatchCfg, Batcher, PackedBatch, RowTag};
 pub use campaign::{run_campaign, run_native_batch, spawn_campaign, Backend, CampaignEngine};
-pub use pool::WorkerPool;
+pub use pool::{execute_sharded, shard_range, WorkerPool};
 pub use spec::{CampaignSpec, Workload};

@@ -1,5 +1,6 @@
-//! Worker pool: OS threads each owning a private PJRT runtime, fed from a
-//! bounded job queue (backpressure), results funneled to the aggregator.
+//! Worker pools: the dynamic shard executor behind native campaigns
+//! ([`execute_sharded`]) and the PJRT thread pool behind the AOT path
+//! ([`WorkerPool`]).
 //!
 //! PJRT handles are `!Send`, so the executable can never cross a thread
 //! boundary — each worker compiles its own from the artifact text. The
@@ -7,8 +8,10 @@
 //! `2 * workers` batches in flight: the batcher (producer) blocks when
 //! the pool falls behind, bounding memory for arbitrarily long campaigns.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -16,6 +19,67 @@ use anyhow::Result;
 
 use super::batcher::PackedBatch;
 use crate::runtime::{MacBatchOut, XlaRuntime};
+
+/// Dynamic (work-stealing style) shard executor: worker threads claim
+/// shard indices from a shared counter, so fast threads absorb slow
+/// shards; results are re-sequenced and handed to `sink` strictly in
+/// shard order. With shard-invariant inputs (per-item RNG streams) this
+/// makes the downstream fold bit-identical for ANY `threads` value — the
+/// schedule affects wall-clock only, never the aggregate.
+pub fn execute_sharded<R, F, S>(n_shards: usize, threads: usize, run_shard: F, mut sink: S)
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+    S: FnMut(usize, R),
+{
+    assert!(threads >= 1, "need at least one worker thread");
+    if n_shards == 0 {
+        return;
+    }
+    let next_shard = AtomicUsize::new(0);
+    let (tx, rx) = channel::<(usize, R)>();
+    let mut next_emit = 0usize;
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n_shards) {
+            let tx = tx.clone();
+            let next_shard = &next_shard;
+            let run_shard = &run_shard;
+            scope.spawn(move || loop {
+                let shard = next_shard.fetch_add(1, Ordering::Relaxed);
+                if shard >= n_shards || tx.send((shard, run_shard(shard))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        // ordered merge: buffer out-of-order shards, emit contiguously
+        let mut pending: BTreeMap<usize, R> = BTreeMap::new();
+        for (shard, out) in rx {
+            pending.insert(shard, out);
+            while let Some(ready) = pending.remove(&next_emit) {
+                sink(next_emit, ready);
+                next_emit += 1;
+            }
+        }
+        // no assert here: if a worker panicked, scope's join must
+        // propagate the ORIGINAL panic, not a shadowing assertion
+    });
+    assert_eq!(next_emit, n_shards, "shard worker exited early");
+}
+
+/// Contiguous item range of shard `shard` when `total` items are split
+/// across `n_shards` shards as evenly as possible (first `total % n_shards`
+/// shards get one extra item).
+pub fn shard_range(total: u64, n_shards: usize, shard: usize) -> (u64, u64) {
+    assert!(n_shards > 0 && shard < n_shards);
+    let n = n_shards as u64;
+    let s = shard as u64;
+    let base = total / n;
+    let rem = total % n;
+    let start = s * base + s.min(rem);
+    let len = base + u64::from(s < rem);
+    (start, start + len)
+}
 
 /// A pool of PJRT worker threads executing fixed-size MAC batches.
 pub struct WorkerPool {
@@ -32,7 +96,8 @@ impl WorkerPool {
         assert!(workers > 0);
         let (job_tx, job_rx) = sync_channel::<PackedBatch>(workers * 2);
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let (result_tx, result_rx) = sync_channel::<Result<(PackedBatch, MacBatchOut)>>(workers * 2);
+        let (result_tx, result_rx) =
+            sync_channel::<Result<(PackedBatch, MacBatchOut)>>(workers * 2);
         let (ready_tx, ready_rx) = sync_channel::<Result<()>>(workers);
 
         let mut handles = Vec::with_capacity(workers);
@@ -107,5 +172,48 @@ impl Drop for WorkerPool {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_partition_exactly() {
+        for (total, shards) in [(0u64, 1usize), (1, 8), (20, 3), (1000, 7), (256, 256)] {
+            let mut cursor = 0u64;
+            for s in 0..shards {
+                let (start, end) = shard_range(total, shards, s);
+                assert_eq!(start, cursor, "total={total} shards={shards} s={s}");
+                assert!(end >= start);
+                cursor = end;
+            }
+            assert_eq!(cursor, total);
+            // even split: sizes differ by at most one item
+            let sizes: Vec<u64> = (0..shards)
+                .map(|s| {
+                    let (a, b) = shard_range(total, shards, s);
+                    b - a
+                })
+                .collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    fn execute_sharded_emits_in_order_any_thread_count() {
+        for threads in [1usize, 2, 5, 16] {
+            let mut seen = Vec::new();
+            execute_sharded(11, threads, |s| s * s, |shard, out| seen.push((shard, out)));
+            let want: Vec<(usize, usize)> = (0..11).map(|s| (s, s * s)).collect();
+            assert_eq!(seen, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn execute_sharded_zero_shards_is_noop() {
+        execute_sharded(0, 4, |s| s, |_, _| panic!("no shards to emit"));
     }
 }

@@ -75,10 +75,14 @@ pub struct CampaignSpec {
     pub n_mc: u32,
     pub seed: u64,
     pub corner: Corner,
-    /// Worker threads (each owns a PJRT client). 0 = auto.
+    /// Worker threads (native: shard executors; XLA: PJRT clients). 0 = auto.
     pub workers: usize,
     /// Preferred batch size; 0 = pick the largest compiled batch that fits.
     pub batch: usize,
+    /// Shards the item space splits into (native backend). 0 = auto. Any
+    /// value produces bit-identical aggregates; this only tunes scheduling
+    /// granularity.
+    pub shards: usize,
 }
 
 impl CampaignSpec {
@@ -92,6 +96,7 @@ impl CampaignSpec {
             corner: Corner::Tt,
             workers: 0,
             batch: 0,
+            shards: 0,
         }
     }
 
@@ -120,6 +125,7 @@ impl CampaignSpec {
             corner,
             workers: u("workers", 0) as usize,
             batch: u("batch", 0) as usize,
+            shards: u("shards", 0) as usize,
         };
         spec.validate().map_err(|e| anyhow::anyhow!(e))?;
         Ok(spec)
@@ -144,6 +150,7 @@ impl CampaignSpec {
         s.push_str(&format!("corner = \"{}\"\n", self.corner.name()));
         s.push_str(&format!("workers = {}\n", self.workers));
         s.push_str(&format!("batch = {}\n", self.batch));
+        s.push_str(&format!("shards = {}\n", self.shards));
         s.push_str("[campaigns.workload]\n");
         match &self.workload {
             Workload::Fixed { a, b } => {
@@ -235,6 +242,7 @@ mod tests {
         for variant in Variant::ALL {
             let mut spec = CampaignSpec::paper_fig8(variant);
             spec.workers = 3;
+            spec.shards = 8;
             let doc = toml_lite::parse(&spec.to_toml()).unwrap();
             let arr = doc.get("campaigns").unwrap().as_arr().unwrap();
             let back = CampaignSpec::from_value(&arr[0]).unwrap();
@@ -254,6 +262,7 @@ mod tests {
         assert_eq!(spec.seed, 2022);
         assert_eq!(spec.corner, Corner::Tt);
         assert_eq!(spec.workload, Workload::FullSweep);
+        assert_eq!(spec.shards, 0);
     }
 
     #[test]
@@ -262,6 +271,7 @@ mod tests {
             "[[campaigns]]\nvariant = \"bogus\"\n[campaigns.workload]\nkind = \"full_sweep\"\n",
         )
         .unwrap();
-        assert!(CampaignSpec::from_value(&doc.get("campaigns").unwrap().as_arr().unwrap()[0]).is_err());
+        let c = &doc.get("campaigns").unwrap().as_arr().unwrap()[0];
+        assert!(CampaignSpec::from_value(c).is_err());
     }
 }

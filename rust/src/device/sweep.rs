@@ -46,7 +46,8 @@ pub fn width_sweep(
         for &w in w_scales {
             let mut dev = Mosfet::nominal(card);
             dev.w_scale = w;
-            out.push(WidthPoint { w_scale: w, v_bulk: vb, i_d: dev.drain_current(v_wl, card.vdd, vb) });
+            let i_d = dev.drain_current(v_wl, card.vdd, vb);
+            out.push(WidthPoint { w_scale: w, v_bulk: vb, i_d });
         }
     }
     out

@@ -97,7 +97,13 @@ impl EnergyModel {
 
     /// Full per-op cost for a variant, given its simulated raw bitline
     /// energy and full-scale discharge swing.
-    pub fn cost(&self, cfg: &VariantConfig, raw_bitline: f64, dv_full_scale: f64, v_wl_max: f64) -> OpCost {
+    pub fn cost(
+        &self,
+        cfg: &VariantConfig,
+        raw_bitline: f64,
+        dv_full_scale: f64,
+        v_wl_max: f64,
+    ) -> OpCost {
         let t_cycle = self.op_time(cfg, dv_full_scale);
         OpCost {
             energy: self.op_energy(cfg, raw_bitline, v_wl_max),

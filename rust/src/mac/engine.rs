@@ -75,7 +75,8 @@ impl NativeMacEngine {
         let inps = [mk(0), mk(1), mk(2), mk(3)];
         // 4-lane interleaved transient (hot path; bit-identical to the
         // per-cell scalar integration)
-        let v_blb = crate::circuit::discharge_word(p, &devs, &inps, self.cfg.t_sample, p.circuit.n_steps);
+        let v_blb =
+            crate::circuit::discharge_word(p, &devs, &inps, self.cfg.t_sample, p.circuit.n_steps);
         let mut fault = false;
         for i in 0..4 {
             // Saturation-exit check (Eq. 4 validity): conducting cell whose

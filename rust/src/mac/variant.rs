@@ -17,7 +17,8 @@ pub enum Variant {
 }
 
 impl Variant {
-    pub const ALL: [Variant; 4] = [Variant::Smart, Variant::Aid, Variant::Imac, Variant::SmartOnImac];
+    pub const ALL: [Variant; 4] =
+        [Variant::Smart, Variant::Aid, Variant::Imac, Variant::SmartOnImac];
 
     pub fn name(self) -> &'static str {
         match self {

@@ -34,8 +34,10 @@ COMMANDS:
   info                         platform + artifact manifest + PJRT smoke test
   mac <a> <b> [--variant V]    one 4x4-bit MAC through the full stack
   mc [--variant V] [--n-mc N] [--a A --b B | --full-sweep]
-     [--seed S] [--workers W] [--corner tt|ff|ss]
-                               Monte-Carlo campaign (paper Fig. 8/9)
+     [--seed S] [--shards K] [--threads T] [--corner tt|ff|ss]
+                               Monte-Carlo campaign (paper Fig. 8/9);
+                               aggregates are bit-identical for any
+                               --shards/--threads choice
   table1 [--n-mc N]            regenerate Table 1 (all variants + lit rows)
   run <config.toml>            run campaigns from an experiment file
 
@@ -101,8 +103,14 @@ fn run() -> Result<()> {
                 corner: args
                     .opt_parse("corner", Corner::Tt)
                     .map_err(|e| anyhow::anyhow!(e))?,
-                workers: args.opt_parse("workers", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+                workers: {
+                    // --threads is the documented knob; --workers remains
+                    // as an alias for existing scripts
+                    let w = args.opt_parse("workers", 0usize).map_err(|e| anyhow::anyhow!(e))?;
+                    args.opt_parse("threads", w).map_err(|e| anyhow::anyhow!(e))?
+                },
                 batch: args.opt_parse("batch", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+                shards: args.opt_parse("shards", 0usize).map_err(|e| anyhow::anyhow!(e))?,
             };
             let r = run_campaign(&params, &spec, backend, Some(art))?;
             print!(
@@ -187,6 +195,7 @@ fn cmd_mac(
         corner: Corner::Tt,
         workers: 1,
         batch: 1,
+        shards: 1,
     };
     let r = run_campaign(params, &spec, backend, Some(art.clone()))?;
     println!(
@@ -211,6 +220,7 @@ fn cmd_table1(params: &Params, art: &PathBuf, backend: Backend, n_mc: u32) -> Re
             corner: Corner::Tt,
             workers: 0,
             batch: 0,
+            shards: 0,
         };
         let r = run_campaign(params, &spec, backend, Some(art.clone()))?;
         sigmas.push((v, r.accuracy.rms_norm));

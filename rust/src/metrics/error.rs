@@ -37,7 +37,14 @@ impl ErrorAccumulator {
     /// * `full_scale` — variant full-scale (V)
     /// * `code_err` — reconstructed product != exact product
     /// * `fault` — saturation-exit flag from the engine/artifact
-    pub fn push(&mut self, v_mult: f64, v_ideal: f64, full_scale: f64, code_err: bool, fault: bool) {
+    pub fn push(
+        &mut self,
+        v_mult: f64,
+        v_ideal: f64,
+        full_scale: f64,
+        code_err: bool,
+        fault: bool,
+    ) {
         self.err.push((v_mult - v_ideal) / full_scale);
         self.sig.push(v_ideal / full_scale);
         self.raw.push(v_mult);

@@ -63,6 +63,7 @@ impl Corner {
 #[derive(Debug, Clone)]
 pub struct MismatchSampler {
     rng: SplitMix64,
+    seed: u64,
     pub sigma_vth: f64,
     pub sigma_beta: f64,
     pub corner: Corner,
@@ -70,7 +71,7 @@ pub struct MismatchSampler {
 
 impl MismatchSampler {
     pub fn new(seed: u64, sigma_vth: f64, sigma_beta: f64) -> Self {
-        Self { rng: SplitMix64::new(seed), sigma_vth, sigma_beta, corner: Corner::Tt }
+        Self { rng: SplitMix64::new(seed), seed, sigma_vth, sigma_beta, corner: Corner::Tt }
     }
 
     pub fn with_corner(mut self, corner: Corner) -> Self {
@@ -92,6 +93,22 @@ impl MismatchSampler {
     /// Draw a batch of `n` words.
     pub fn sample_batch(&mut self, n: usize) -> Vec<McSample> {
         (0..n).map(|_| self.sample()).collect()
+    }
+
+    /// Deviates for global work item `item`, independent of draw order:
+    /// each item gets its own counter-derived stream
+    /// ([`SplitMix64::for_stream`]), so the deviates are a pure function
+    /// of `(seed, corner, item)`. This is what makes sharded campaigns
+    /// bit-identical under any shard count or thread schedule.
+    pub fn sample_item(&self, item: u64) -> McSample {
+        let mut rng = SplitMix64::for_stream(self.seed, item);
+        let (cv, cb) = self.corner.shifts();
+        let mut s = McSample::nominal();
+        for i in 0..4 {
+            s.dvth[i] = cv + self.sigma_vth * rng.next_normal();
+            s.dbeta[i] = cb + self.sigma_beta * rng.next_normal();
+        }
+        s
     }
 }
 
@@ -131,6 +148,32 @@ mod tests {
     fn zero_sigma_collapses_to_corner() {
         let s = MismatchSampler::new(1, 0.0, 0.0).sample();
         assert_eq!(s, McSample::nominal());
+    }
+
+    #[test]
+    fn item_draws_are_order_free() {
+        let s = MismatchSampler::new(2022, 8e-3, 0.02);
+        // any access order yields the same per-item deviates
+        let forward: Vec<McSample> = (0..32).map(|k| s.sample_item(k)).collect();
+        let backward: Vec<McSample> = (0..32).rev().map(|k| s.sample_item(k)).collect();
+        for (k, m) in forward.iter().enumerate() {
+            assert_eq!(*m, backward[31 - k], "item {k}");
+        }
+        assert_ne!(forward[0], forward[1]);
+        // corner shift applies to item draws too
+        let ss = MismatchSampler::new(1, 1e-9, 1e-9).with_corner(Corner::Ss);
+        assert!(ss.sample_item(0).dvth[0] > 10e-3);
+    }
+
+    #[test]
+    fn item_draw_moments_match_sigmas() {
+        let s = MismatchSampler::new(11, 8e-3, 0.02);
+        let vals: Vec<f64> = (0..20_000u64).flat_map(|k| s.sample_item(k).dvth).collect();
+        let n = vals.len() as f64;
+        let mean = vals.iter().sum::<f64>() / n;
+        let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 3e-4, "mean {mean}");
+        assert!((var.sqrt() - 8e-3).abs() < 3e-4, "sigma {}", var.sqrt());
     }
 
     #[test]

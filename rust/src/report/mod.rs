@@ -33,7 +33,10 @@ impl Table1Row {
 /// Render Table 1 (simulated rows + quoted literature rows) as markdown.
 pub fn table1_markdown(rows: &[Table1Row], lit: &[LiteratureRow]) -> String {
     let mut s = String::new();
-    let _ = writeln!(s, "| design | tech (nm) | supply (V) | MAC energy (pJ) | accuracy (STD.V) | frequency (MHz) |");
+    let _ = writeln!(
+        s,
+        "| design | tech (nm) | supply (V) | MAC energy (pJ) | accuracy (STD.V) | frequency (MHz) |"
+    );
     let _ = writeln!(s, "|---|---|---|---|---|---|");
     for r in rows {
         let _ = writeln!(
@@ -124,7 +127,9 @@ mod tests {
             &[(Variant::Smart, 0.01), (Variant::Aid, 0.03), (Variant::Imac, 0.1)],
             &EnergyModel::default(),
         );
-        for needle in ["SMART", "AID [10]", "IMAC [9]", "[14] (lit.)", "[21] (lit.)", "1.300", "3.500"] {
+        let needles =
+            ["SMART", "AID [10]", "IMAC [9]", "[14] (lit.)", "[21] (lit.)", "1.300", "3.500"];
+        for needle in needles {
             assert!(t.contains(needle), "missing {needle} in:\n{t}");
         }
         assert_eq!(t.lines().count(), 2 + 3 + 2);

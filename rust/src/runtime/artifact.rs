@@ -137,6 +137,7 @@ mod tests {
     #[test]
     fn rejects_malformed_manifest() {
         assert!(Manifest::parse("{}").is_err());
-        assert!(Manifest::parse(r#"{"artifacts": [{"name": 3}], "mac_batches": [], "trace_batches": []}"#).is_err());
+        let bad = r#"{"artifacts": [{"name": 3}], "mac_batches": [], "trace_batches": []}"#;
+        assert!(Manifest::parse(bad).is_err());
     }
 }

@@ -271,7 +271,11 @@ fn write_value(v: &Value, indent: usize, out: &mut String) {
         Value::Null => out.push_str("null"),
         Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Value::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 1e15 {
+            if !n.is_finite() {
+                // JSON has no NaN/Infinity literal; emitting one would
+                // produce a document parse() itself rejects
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 1e15 {
                 out.push_str(&format!("{}", *n as i64));
             } else {
                 out.push_str(&format!("{n}"));
@@ -392,6 +396,14 @@ mod tests {
         let i_a = text.find("\"a\"").unwrap();
         let i_b = text.find("\"b\"").unwrap();
         assert!(i_a < i_b);
+    }
+
+    #[test]
+    fn writer_never_emits_unparseable_numbers() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let text = to_string_pretty(&Value::Num(bad));
+            assert_eq!(parse(&text).unwrap(), Value::Null);
+        }
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! In-tree infrastructure substrates.
 //!
-//! This build environment resolves crates offline from a cache carrying
-//! only the `xla` closure, so the pieces a crates.io project would pull in
-//! are implemented here instead: a JSON parser/writer ([`json`]) for the
-//! artifact manifest and model card, a TOML-subset parser ([`toml_lite`])
-//! for experiment configs, a deterministic property-test driver
-//! ([`prop`]), and a CLI argument helper ([`cli`]).
+//! This build environment resolves crates fully offline (the only
+//! dependency is the vendored `anyhow` subset in `vendor/anyhow`), so the
+//! pieces a crates.io project would pull in are implemented here instead:
+//! a JSON parser/writer ([`json`]) for the artifact manifest and model
+//! card, a TOML-subset parser ([`toml_lite`]) for experiment configs, a
+//! deterministic property-test driver ([`prop`]), and a CLI argument
+//! helper ([`cli`]).
 
 pub mod cli;
 pub mod json;

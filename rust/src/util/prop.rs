@@ -49,7 +49,8 @@ impl Gen {
 /// Run `prop` over `n` cases. Panics with the failing case index + seed.
 pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(seed: u64, n: u32, mut prop: F) {
     for case in 0..n {
-        let mut g = Gen::new(seed.wrapping_add(u64::from(case)).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let case_seed = seed.wrapping_add(u64::from(case)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(case_seed);
         if let Err(msg) = prop(&mut g) {
             panic!("property failed on case {case} (seed {seed}): {msg}");
         }

@@ -101,6 +101,9 @@ fn parse_value(s: &str) -> Result<Value, String> {
                 out.push(c);
             }
         }
+        if esc {
+            return Err("dangling escape at end of string".into());
+        }
         return Ok(Value::Str(out));
     }
     if s == "true" {
@@ -266,5 +269,17 @@ mod tests {
     fn strings_with_hashes_and_escapes() {
         let v = parse(r#"s = "a # not comment \n b""#).unwrap();
         assert_eq!(v.get("s").unwrap().as_str(), Some("a # not comment \n b"));
+    }
+
+    #[test]
+    fn rejects_dangling_escape() {
+        // a lone trailing backslash used to be dropped silently
+        assert!(parse("s = \"oops\\\"").is_err());
+    }
+
+    #[test]
+    fn scalar_where_table_expected_errors() {
+        assert!(parse("a = 1\n[a.b]\nx = 2\n").is_err());
+        assert!(parse("a = 1\n[[a]]\n").is_err());
     }
 }

@@ -78,7 +78,11 @@ fn run_config_native() {
 #[test]
 fn bad_config_fails_with_context() {
     let path = std::env::temp_dir().join("smart_cli_bad.toml");
-    std::fs::write(&path, "name = \"x\"\n[[campaigns]]\nvariant = \"nope\"\n[campaigns.workload]\nkind = \"full_sweep\"\n").unwrap();
+    let cfg = concat!(
+        "name = \"x\"\n[[campaigns]]\nvariant = \"nope\"\n",
+        "[campaigns.workload]\nkind = \"full_sweep\"\n"
+    );
+    std::fs::write(&path, cfg).unwrap();
     let out = smart().args(["run", path.to_str().unwrap(), "--native"]).output().unwrap();
     assert!(!out.status.success());
     assert!(String::from_utf8_lossy(&out.stderr).contains("unknown variant"));

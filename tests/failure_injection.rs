@@ -99,6 +99,7 @@ fn campaign_rejects_invalid_spec() {
         corner: Corner::Tt,
         workers: 1,
         batch: 1,
+        shards: 1,
     };
     assert!(run_campaign(&p, &spec, Backend::Native, None).is_err());
 }
@@ -115,6 +116,7 @@ fn corner_campaigns_shift_the_output_as_expected() {
         corner,
         workers: 1,
         batch: 64,
+        shards: 1,
     };
     let tt = run_campaign(&p, &mk(Corner::Tt), Backend::Native, None).unwrap();
     let ff = run_campaign(&p, &mk(Corner::Ff), Backend::Native, None).unwrap();

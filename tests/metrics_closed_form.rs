@@ -1,0 +1,69 @@
+//! Metrics against closed-form values: Welford stats on samples whose
+//! mean/sigma are known exactly, exact quantiles of small fixed vectors,
+//! and histogram bin arithmetic.
+
+use smart_insram::metrics::{Histogram, OnlineStats, SampleSet};
+use smart_insram::montecarlo::SplitMix64;
+
+#[test]
+fn welford_matches_textbook_sample() {
+    // Classic example: mean 5, population variance 4, sigma 2 — exactly.
+    let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+    let mut s = OnlineStats::new();
+    xs.iter().for_each(|&x| s.push(x));
+    assert_eq!(s.count(), 8);
+    assert!((s.mean() - 5.0).abs() < 1e-12);
+    assert!((s.variance() - 4.0).abs() < 1e-12);
+    assert!((s.std_dev() - 2.0).abs() < 1e-12);
+    assert_eq!(s.min(), 2.0);
+    assert_eq!(s.max(), 9.0);
+}
+
+#[test]
+fn welford_recovers_known_normal_moments() {
+    // N(mu = 1, sigma = 2) drawn from the library RNG: the estimates must
+    // land within standard-error-scale tolerances of the true moments.
+    let mut rng = SplitMix64::new(42);
+    let mut s = OnlineStats::new();
+    let n = 50_000;
+    for _ in 0..n {
+        s.push(1.0 + 2.0 * rng.next_normal());
+    }
+    // se(mean) = sigma/sqrt(n) ~ 0.009; se(sigma) ~ sigma/sqrt(2n) ~ 0.006
+    assert!((s.mean() - 1.0).abs() < 0.05, "mean {}", s.mean());
+    assert!((s.std_dev() - 2.0).abs() < 0.05, "sigma {}", s.std_dev());
+}
+
+#[test]
+fn quantiles_of_fixed_vectors_are_exact() {
+    let mut odd = SampleSet::new();
+    for x in [5.0, 1.0, 3.0, 2.0, 4.0] {
+        odd.push(x); // insertion order must not matter
+    }
+    assert_eq!(odd.quantile(0.0), 1.0);
+    assert_eq!(odd.quantile(0.25), 2.0);
+    assert_eq!(odd.quantile(0.5), 3.0);
+    assert_eq!(odd.quantile(1.0), 5.0);
+
+    let mut even = SampleSet::new();
+    for x in [1.0, 2.0, 3.0, 4.0] {
+        even.push(x);
+    }
+    // linear interpolation between the two middle order statistics
+    assert!((even.quantile(0.5) - 2.5).abs() < 1e-12);
+    assert!((even.quantile(1.0 / 3.0) - 2.0).abs() < 1e-12);
+}
+
+#[test]
+fn histogram_bins_against_hand_count() {
+    let mut h = Histogram::new(0.0, 1.0, 4);
+    // bin edges at 0.25/0.5/0.75: hand-placed samples
+    for x in [0.1, 0.2, 0.3, 0.6, 0.6, 0.9, -1.0, 2.0] {
+        h.push(x);
+    }
+    assert_eq!(h.counts(), &[3, 1, 2, 2]); // clamped ends included
+    assert_eq!(h.total(), 8);
+    assert!((h.bin_center(0) - 0.125).abs() < 1e-12);
+    assert!((h.bin_center(3) - 0.875).abs() < 1e-12);
+    assert!((h.mode() - 0.125).abs() < 1e-12);
+}

@@ -1,0 +1,156 @@
+//! Regression: a sharded MC campaign produces aggregates bit-identical to
+//! a single-shard run — for any shard count and any thread count. This is
+//! the contract that makes `--shards`/`--threads` pure performance knobs
+//! (acceptance: `smart mc --variant smart --n-mc 256 --native --shards 8`
+//! must match the single-shard aggregates bit for bit).
+
+use smart_insram::coordinator::{run_campaign, Backend, CampaignSpec, Workload};
+use smart_insram::mac::Variant;
+use smart_insram::montecarlo::Corner;
+use smart_insram::params::Params;
+
+fn mc_spec(variant: Variant, workload: Workload, shards: usize, workers: usize) -> CampaignSpec {
+    CampaignSpec {
+        variant,
+        workload,
+        n_mc: 256,
+        seed: 2022,
+        corner: Corner::Tt,
+        workers,
+        batch: 0,
+        shards,
+    }
+}
+
+/// Bitwise comparison of every aggregate statistic in two reports.
+fn assert_bit_identical(
+    a: &smart_insram::coordinator::CampaignReport,
+    b: &smart_insram::coordinator::CampaignReport,
+    label: &str,
+) {
+    assert_eq!(a.rows, b.rows, "{label}: rows");
+    assert_eq!(
+        a.raw_vmult.mean().to_bits(),
+        b.raw_vmult.mean().to_bits(),
+        "{label}: raw mean"
+    );
+    assert_eq!(
+        a.raw_vmult.std_dev().to_bits(),
+        b.raw_vmult.std_dev().to_bits(),
+        "{label}: raw sigma"
+    );
+    assert_eq!(a.raw_vmult.min().to_bits(), b.raw_vmult.min().to_bits(), "{label}: min");
+    assert_eq!(a.raw_vmult.max().to_bits(), b.raw_vmult.max().to_bits(), "{label}: max");
+    assert_eq!(
+        a.accuracy.sigma_norm.to_bits(),
+        b.accuracy.sigma_norm.to_bits(),
+        "{label}: sigma_norm"
+    );
+    assert_eq!(
+        a.accuracy.rms_norm.to_bits(),
+        b.accuracy.rms_norm.to_bits(),
+        "{label}: rms_norm"
+    );
+    assert_eq!(a.accuracy.ber.to_bits(), b.accuracy.ber.to_bits(), "{label}: ber");
+    assert_eq!(
+        a.accuracy.fault_rate.to_bits(),
+        b.accuracy.fault_rate.to_bits(),
+        "{label}: fault_rate"
+    );
+    assert_eq!(a.hist.counts(), b.hist.counts(), "{label}: histogram");
+    assert_eq!(a.energy.mean().to_bits(), b.energy.mean().to_bits(), "{label}: energy mean");
+    assert_eq!(a.sigma_ci.is_some(), b.sigma_ci.is_some(), "{label}: CI presence");
+    if let (Some((alo, ahi)), Some((blo, bhi))) = (a.sigma_ci, b.sigma_ci) {
+        assert_eq!(alo.to_bits(), blo.to_bits(), "{label}: CI lo");
+        assert_eq!(ahi.to_bits(), bhi.to_bits(), "{label}: CI hi");
+    }
+    assert_eq!(a.per_op.len(), b.per_op.len(), "{label}: per_op len");
+    for ((ka, ra), (kb, rb)) in a.per_op.iter().zip(&b.per_op) {
+        assert_eq!(ka, kb, "{label}: per_op key");
+        assert_eq!(
+            ra.sigma_norm.to_bits(),
+            rb.sigma_norm.to_bits(),
+            "{label}: per_op {ka:?} sigma"
+        );
+    }
+}
+
+#[test]
+fn acceptance_shards8_matches_single_shard() {
+    // the acceptance-criteria campaign: smart, n_mc 256, native, 8 shards
+    let p = Params::default();
+    let one = run_campaign(
+        &p,
+        &mc_spec(Variant::Smart, Workload::Fixed { a: 15, b: 15 }, 1, 1),
+        Backend::Native,
+        None,
+    )
+    .unwrap();
+    let eight = run_campaign(
+        &p,
+        &mc_spec(Variant::Smart, Workload::Fixed { a: 15, b: 15 }, 8, 1),
+        Backend::Native,
+        None,
+    )
+    .unwrap();
+    assert_bit_identical(&one, &eight, "shards 1 vs 8");
+}
+
+#[test]
+fn thread_count_never_changes_aggregates() {
+    let p = Params::default();
+    let base = run_campaign(
+        &p,
+        &mc_spec(Variant::Aid, Workload::Fixed { a: 15, b: 15 }, 8, 1),
+        Backend::Native,
+        None,
+    )
+    .unwrap();
+    for workers in [2usize, 4, 7] {
+        let r = run_campaign(
+            &p,
+            &mc_spec(Variant::Aid, Workload::Fixed { a: 15, b: 15 }, 8, workers),
+            Backend::Native,
+            None,
+        )
+        .unwrap();
+        assert_bit_identical(&base, &r, &format!("workers {workers}"));
+    }
+}
+
+#[test]
+fn full_sweep_shard_invariance() {
+    // multi-operand workload: shard boundaries cut across operand groups
+    let p = Params::default();
+    let mut spec = mc_spec(Variant::Smart, Workload::FullSweep, 1, 1);
+    spec.n_mc = 8; // 256 ops x 8 = 2048 items
+    let one = run_campaign(&p, &spec, Backend::Native, None).unwrap();
+    for shards in [5usize, 16] {
+        spec.shards = shards;
+        spec.workers = 4;
+        let r = run_campaign(&p, &spec, Backend::Native, None).unwrap();
+        assert_bit_identical(&one, &r, &format!("full sweep, {shards} shards"));
+    }
+}
+
+#[test]
+fn auto_sharding_matches_explicit() {
+    // shards = 0 (auto) must land on the same aggregates as any explicit
+    // count — auto-sharding only picks scheduling granularity
+    let p = Params::default();
+    let auto = run_campaign(
+        &p,
+        &mc_spec(Variant::Smart, Workload::Fixed { a: 13, b: 7 }, 0, 0),
+        Backend::Native,
+        None,
+    )
+    .unwrap();
+    let explicit = run_campaign(
+        &p,
+        &mc_spec(Variant::Smart, Workload::Fixed { a: 13, b: 7 }, 3, 2),
+        Backend::Native,
+        None,
+    )
+    .unwrap();
+    assert_bit_identical(&auto, &explicit, "auto vs explicit shards");
+}

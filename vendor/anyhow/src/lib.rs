@@ -1,0 +1,214 @@
+//! Offline stand-in for the `anyhow` crate: the subset of its API this
+//! workspace uses, implemented over a plain message chain.
+//!
+//! The build environment resolves crates offline, so instead of the real
+//! `anyhow` this path dependency provides compatible `Error`, `Result`,
+//! `Context`, and the `anyhow!` / `bail!` / `ensure!` macros. Semantics
+//! mirror upstream where it matters to callers:
+//!
+//! * `{e}` displays the outermost message; `{e:#}` joins the whole
+//!   context chain with `": "` (what the CLI prints).
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing its `source()` chain.
+//! * Like upstream, [`Error`] deliberately does NOT implement
+//!   `std::error::Error` (that is what makes the blanket `From` legal).
+
+use std::fmt;
+
+/// An error carrying a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by the [`Context`] trait).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file gone")
+    }
+
+    #[test]
+    fn display_plain_vs_alternate() {
+        let e: Error = Error::from(io_err()).context("loading manifest");
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: file gone");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(format!("{e}"), "bad value 3");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e}"), "owned");
+        let e = anyhow!("{} and {}", 1, 2);
+        assert_eq!(format!("{e}"), "1 and 2");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<()> {
+            ensure!(ok, "not ok");
+            bail!("reached the end")
+        }
+        assert_eq!(format!("{}", f(false).unwrap_err()), "not ok");
+        assert_eq!(format!("{}", f(true).unwrap_err()), "reached the end");
+        fn g(x: u32) -> Result<u32> {
+            ensure!(x > 1);
+            Ok(x)
+        }
+        assert!(format!("{}", g(0).unwrap_err()).contains("x > 1"));
+        assert_eq!(g(2).unwrap(), 2);
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 7)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 7: file gone");
+        let o: Option<u8> = None;
+        let e = Context::context(o, "missing key").unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn question_mark_captures_source_chain() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.chain().count(), 1);
+        let wrapped = Err::<(), _>(e).context("outer").unwrap_err();
+        assert_eq!(wrapped.chain().next(), Some("outer"));
+    }
+}
