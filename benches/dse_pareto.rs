@@ -1,0 +1,57 @@
+//! Bench + demo of the design-space exploration subsystem: expand the
+//! threshold-suppression grid, run every point through the sharded MC
+//! runner, extract the energy-vs-sigma Pareto front.
+//!
+//! Run: `cargo bench --offline --bench dse_pareto`
+
+use smart_insram::bench::Runner;
+use smart_insram::dse::{run_sweep, SweepOptions, SweepSpec};
+use smart_insram::report;
+
+const SPEC: &str = r#"
+name = "dse-bench"
+seed = 2022
+n_mc = 16
+[grid]
+variant = ["smart"]
+vdd = [0.9, 1.0]
+v_bulk = [0.0, 0.3, 0.6]
+bits = [2, 4]
+corner = ["tt"]
+"#;
+
+fn main() {
+    let spec = SweepSpec::parse(SPEC).expect("spec");
+    let out_dir = std::env::temp_dir().join("smart_dse_bench");
+    println!("=== DSE sweep — {} grid points, n_mc = {} ===", spec.grid.len(), spec.n_mc);
+
+    let r = Runner::quick();
+    for (shards, threads) in [(1usize, 1usize), (0, 0)] {
+        let opts = SweepOptions {
+            shards,
+            threads,
+            resume: false,
+            out_dir: out_dir.clone(),
+        };
+        let label = if threads == 0 {
+            "dse/sweep (auto shards/threads)".to_string()
+        } else {
+            format!("dse/sweep ({shards} shard, {threads} thread)")
+        };
+        let s = r.bench(&label, || run_sweep(&spec, &opts).expect("sweep"));
+        let total: u64 = spec.grid.len() as u64; // campaigns per iteration
+        println!("  {:.1} grid points/s", s.per_second(total));
+    }
+
+    // resumed re-run: every row comes from the checkpoint (no simulation)
+    let opts =
+        SweepOptions { shards: 0, threads: 0, resume: true, out_dir: out_dir.clone() };
+    r.bench("dse/sweep (fully resumed)", || run_sweep(&spec, &opts).expect("resume"));
+
+    let result = run_sweep(&spec, &opts).expect("sweep");
+    print!("{}", report::sweep_panel(&result));
+    assert_eq!(result.resumed, result.points.len(), "checkpoint must cover the grid");
+    let n_front = result.pareto.iter().filter(|&&f| f).count();
+    assert!(n_front >= 1, "empty Pareto front");
+    assert!(n_front <= result.points.len());
+}

@@ -9,11 +9,17 @@ use std::time::{Duration, Instant};
 /// Timing summary over the measured samples.
 #[derive(Debug, Clone, Copy)]
 pub struct Summary {
+    /// Timed samples the summary is over.
     pub samples: usize,
+    /// Mean sample time.
     pub mean: Duration,
+    /// Median sample time.
     pub median: Duration,
+    /// Standard deviation of the sample times.
     pub std_dev: Duration,
+    /// Fastest sample.
     pub min: Duration,
+    /// Slowest sample.
     pub max: Duration,
 }
 
@@ -48,7 +54,9 @@ impl Summary {
 
 /// Benchmark runner: fixed warmup iterations then timed samples.
 pub struct Runner {
+    /// Untimed warmup iterations before sampling.
     pub warmup: usize,
+    /// Timed samples per bench.
     pub samples: usize,
 }
 
@@ -59,6 +67,7 @@ impl Default for Runner {
 }
 
 impl Runner {
+    /// Low-iteration runner for slow end-to-end benches.
     pub fn quick() -> Self {
         Self { warmup: 1, samples: 5 }
     }

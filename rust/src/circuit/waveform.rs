@@ -8,6 +8,7 @@ pub struct Waveform {
 }
 
 impl Waveform {
+    /// Empty waveform with room for `n` samples.
     pub fn with_capacity(n: usize) -> Self {
         Self { t: Vec::with_capacity(n), v: Vec::with_capacity(n) }
     }
@@ -19,22 +20,27 @@ impl Waveform {
         self.v.push(v);
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.t.len()
     }
 
+    /// True when no samples have been appended.
     pub fn is_empty(&self) -> bool {
         self.t.is_empty()
     }
 
+    /// The time points (strictly increasing).
     pub fn times(&self) -> &[f64] {
         &self.t
     }
 
+    /// The sampled values, parallel to [`Self::times`].
     pub fn values(&self) -> &[f64] {
         &self.v
     }
 
+    /// Iterate `(t, v)` pairs in time order.
     pub fn iter(&self) -> impl Iterator<Item = (f64, f64)> + '_ {
         self.t.iter().copied().zip(self.v.iter().copied())
     }

@@ -20,12 +20,14 @@ pub struct ExperimentConfig {
 }
 
 impl ExperimentConfig {
+    /// Load and parse an experiment file from disk.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading {}", path.as_ref().display()))?;
         Self::parse(&text)
     }
 
+    /// Parse an experiment document (TOML-lite).
     pub fn parse(text: &str) -> Result<Self> {
         let doc = toml_lite::parse(text).map_err(|e| anyhow::anyhow!("experiment TOML: {e}"))?;
         let name = doc

@@ -72,6 +72,9 @@ impl Aggregator {
         }
     }
 
+    /// Seal the aggregates into the final report. `wall` is the measured
+    /// campaign wall-clock (throughput reporting only — it never affects
+    /// the statistics).
     pub fn finish(self, wall: std::time::Duration) -> CampaignReport {
         let per_op = self
             .per_op
@@ -113,9 +116,13 @@ pub struct CampaignReport {
     pub hist: Histogram,
     /// Raw bitline energy stats (J).
     pub energy: OnlineStats,
+    /// Nominal full-scale output (V) the accuracy metrics normalize by.
     pub full_scale: f64,
+    /// Valid (non-padding) rows folded.
     pub rows: u64,
+    /// Batches folded (padding included in their shapes).
     pub batches: u64,
+    /// Campaign wall-clock (reporting only; never affects statistics).
     pub wall: std::time::Duration,
 }
 

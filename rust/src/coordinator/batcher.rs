@@ -21,19 +21,34 @@ use crate::runtime::MacBatch;
 /// carries, or padding.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RowTag {
-    Item { op_idx: u32, mc_idx: u32, a: u8, b: u8 },
+    /// A real work item: MC draw `mc_idx` of operand pair `(a, b)`.
+    Item {
+        /// Index of the operand pair in the workload's operand list.
+        op_idx: u32,
+        /// Monte-Carlo draw index within the operand pair.
+        mc_idx: u32,
+        /// Stored 4-bit operand.
+        a: u8,
+        /// DAC-coded 4-bit operand.
+        b: u8,
+    },
+    /// Padding row filling the fixed batch shape; never aggregated.
     Pad,
 }
 
 /// A fixed-size batch plus per-row identity tags.
 #[derive(Debug, Clone)]
 pub struct PackedBatch {
+    /// Submission sequence number (the canonical fold order).
     pub seq: u64,
+    /// The packed model inputs (fixed batch shape).
     pub inputs: MacBatch,
+    /// Per-row identity, parallel to the input rows.
     pub tags: Vec<RowTag>,
 }
 
 impl PackedBatch {
+    /// Number of non-padding rows.
     pub fn n_valid(&self) -> usize {
         self.tags.iter().filter(|t| !matches!(t, RowTag::Pad)).count()
     }
@@ -42,8 +57,11 @@ impl PackedBatch {
 /// Scalar inputs shared by every batch of a campaign.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchCfg {
+    /// Forward body bias (V).
     pub v_bulk: f32,
+    /// DAC transfer flag (0 = linear, 1 = sqrt) — the L2 model's input.
     pub dac_mode: f32,
+    /// WL pulse width at the sampling instant (s).
     pub t_sample: f32,
 }
 

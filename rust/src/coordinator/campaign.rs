@@ -37,7 +37,21 @@ pub enum Backend {
 ///
 /// The native path fans shards out over a dynamic thread pool; the XLA
 /// path interleaves submission and draining so the bounded job queue
-/// applies backpressure to the batcher.
+/// applies backpressure to the batcher. Either way the report is
+/// bit-identical for any shard/thread choice (DESIGN.md §4).
+///
+/// ```
+/// use smart_insram::coordinator::{run_campaign, Backend, CampaignSpec};
+/// use smart_insram::mac::Variant;
+/// use smart_insram::params::Params;
+///
+/// let params = Params::default();
+/// let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+/// spec.n_mc = 8; // keep the example fast (the paper runs 1000)
+/// let report = run_campaign(&params, &spec, Backend::Native, None).unwrap();
+/// assert_eq!(report.rows, 8);
+/// assert!(report.accuracy.sigma_norm < 0.05);
+/// ```
 pub fn run_campaign(
     params: &Params,
     spec: &CampaignSpec,
@@ -139,11 +153,14 @@ pub struct CampaignEngine {
 }
 
 impl CampaignEngine {
+    /// Spawn a persistent pool of `workers` PJRT threads, each compiling
+    /// the `batch`-row MAC artifact from `artifact_dir`.
     pub fn new(artifact_dir: PathBuf, batch: usize, workers: usize) -> Result<Self> {
         let pool = WorkerPool::spawn(artifact_dir, batch, workers.max(1))?;
         Ok(Self { pool, batch })
     }
 
+    /// The compiled batch size every campaign on this engine must use.
     pub fn batch(&self) -> usize {
         self.batch
     }

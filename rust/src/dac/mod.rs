@@ -28,6 +28,7 @@ impl DacMode {
 /// effective VTH — the designer knows the body bias, not the mismatch).
 #[derive(Debug, Clone, Copy)]
 pub struct WordlineDac {
+    /// Transfer curve (Eq. 7 linear / Eq. 8 sqrt).
     pub mode: DacMode,
     /// Design threshold the code range is anchored to (V).
     pub vth_design: f64,

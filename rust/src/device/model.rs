@@ -19,6 +19,7 @@ pub enum Region {
 /// [`crate::montecarlo::MismatchSampler`]; nominal devices use 0.
 #[derive(Debug, Clone, Copy)]
 pub struct Mosfet {
+    /// The shared model card this instance is built on.
     pub card: DeviceCard,
     /// Threshold mismatch offset (V).
     pub dvth: f64,

@@ -6,8 +6,11 @@ use crate::params::DeviceCard;
 /// One point of an I_D(V_WL) transfer sweep (Fig. 3).
 #[derive(Debug, Clone, Copy)]
 pub struct IvPoint {
+    /// Word-line (gate) voltage (V).
     pub v_wl: f64,
+    /// Forward body bias (V).
     pub v_bulk: f64,
+    /// Drain current (A).
     pub i_d: f64,
 }
 
@@ -28,8 +31,11 @@ pub fn iv_sweep(card: DeviceCard, v_bulks: &[f64], n_points: usize) -> Vec<IvPoi
 /// One point of the width sweep (Fig. 4).
 #[derive(Debug, Clone, Copy)]
 pub struct WidthPoint {
+    /// Width scale relative to the card's W/L.
     pub w_scale: f64,
+    /// Forward body bias (V).
     pub v_bulk: f64,
+    /// Drain current (A).
     pub i_d: f64,
 }
 

@@ -1,0 +1,43 @@
+//! Design-space exploration (DSE): sweep the SMART design knobs across a
+//! multi-dimensional grid and map the energy–accuracy trade-off.
+//!
+//! The paper evaluates one operating point (1 V supply, 0.6 V body bias,
+//! 4×4-bit MAC — Table 1); this subsystem turns the repo into an
+//! exploration engine over the whole neighbourhood of that point
+//! (DESIGN.md §8). A sweep is specified in a `configs/dse.toml`-style
+//! file as one axis list per design knob:
+//!
+//! * `variant` — the designs of Table 1 (`smart`, `aid`, `imac`,
+//!   `smart-on-imac`);
+//! * `vdd` — cell supply voltage (V), the precharge level the transient
+//!   integrates from;
+//! * `v_bulk` — threshold-suppression level: the forward body bias (V)
+//!   on the dual-VDD rail. It drives the biased variants (`smart`,
+//!   `smart-on-imac`); the unbiased baselines ignore it, so
+//!   `smart` at `v_bulk = 0` *is* the AID baseline;
+//! * `bits` — operand bit-width (1..=4): the workload sweeps the full
+//!   `bits`-wide operand space, the IMAC-style reduced-precision study;
+//! * `corner` — process corner (`tt`/`ff`/`ss`).
+//!
+//! [`SweepSpec::parse`] expands the axes into a cartesian grid
+//! ([`GridAxes::expand`]), [`run_sweep`] executes every point through the
+//! sharded Monte-Carlo campaign runner
+//! ([`crate::coordinator::run_campaign`], native backend) with streaming
+//! per-point aggregation (memory stays O(grid), never O(samples)), and
+//! the post-pass extracts the energy-vs-sigma Pareto front
+//! ([`pareto_flags`]) and writes CSV/JSON artifacts.
+//!
+//! Determinism: a sweep's artifacts are **byte-identical** for any
+//! `--shards`/`--threads` choice — the campaign layer's bit-reproducibility
+//! contract (DESIGN.md §4) carries through the per-point statistics, and
+//! every artifact number is canonicalized to the CSV cell precision so
+//! `--resume` (which re-reads rows from a previous `sweep.csv`) re-emits
+//! the same bytes it read.
+
+mod pareto;
+mod runner;
+mod spec;
+
+pub use pareto::pareto_flags;
+pub use runner::{run_sweep, PointResult, SweepOptions, SweepResult};
+pub use spec::{GridAxes, GridPoint, SweepSpec};

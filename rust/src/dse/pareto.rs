@@ -1,0 +1,82 @@
+//! Pareto-front extraction over the (energy, sigma) objective plane.
+//!
+//! Both objectives are minimized: a grid point is on the front iff no
+//! other point is at least as good on both axes and strictly better on
+//! one (weak domination — DESIGN.md §8). Ties survive: two points with
+//! identical objectives are both on the front, so inert-axis duplicates
+//! (e.g. a `v_bulk` sweep over an unbiased baseline) never knock each
+//! other out. Points with non-finite objectives are never on the front.
+
+/// Flag the Pareto-optimal points of a set of `(energy, sigma)` pairs,
+/// minimizing both coordinates. Returns one flag per input, in order.
+///
+/// ```
+/// use smart_insram::dse::pareto_flags;
+/// // (energy, sigma): the third point is dominated by the second.
+/// let flags = pareto_flags(&[(1.0, 3.0), (2.0, 1.0), (3.0, 2.0)]);
+/// assert_eq!(flags, vec![true, true, false]);
+/// ```
+pub fn pareto_flags(objectives: &[(f64, f64)]) -> Vec<bool> {
+    let finite = |p: (f64, f64)| p.0.is_finite() && p.1.is_finite();
+    let dominates = |a: (f64, f64), b: (f64, f64)| {
+        a.0 <= b.0 && a.1 <= b.1 && (a.0 < b.0 || a.1 < b.1)
+    };
+    objectives
+        .iter()
+        .map(|&p| finite(p) && !objectives.iter().any(|&q| finite(q) && dominates(q, p)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hand_computed_fixture() {
+        // The fixture the acceptance criteria reference: six operating
+        // points on the (energy pJ, sigma/FS) plane, front worked out by
+        // hand. A: cheapest, D: most accurate, B: the knee — C, E, F are
+        // each dominated (C by B, E by B, F by D).
+        let pts = [
+            (0.50, 0.090), // A: on the front (nothing is cheaper)
+            (0.70, 0.020), // B: on the front (knee)
+            (0.75, 0.030), // C: dominated by B (0.70 <= 0.75, 0.020 < 0.030)
+            (0.95, 0.008), // D: on the front (nothing is more accurate)
+            (0.90, 0.025), // E: dominated by B
+            (1.10, 0.009), // F: dominated by D
+        ];
+        assert_eq!(pareto_flags(&pts), vec![true, true, false, true, false, false]);
+    }
+
+    #[test]
+    fn single_point_is_always_optimal() {
+        assert_eq!(pareto_flags(&[(5.0, 5.0)]), vec![true]);
+        assert_eq!(pareto_flags(&[]), Vec::<bool>::new());
+    }
+
+    #[test]
+    fn duplicates_survive_together() {
+        let flags = pareto_flags(&[(1.0, 1.0), (1.0, 1.0), (2.0, 2.0)]);
+        assert_eq!(flags, vec![true, true, false]);
+    }
+
+    #[test]
+    fn equal_on_one_axis_still_dominates() {
+        // same energy, strictly better sigma -> the first point falls
+        let flags = pareto_flags(&[(1.0, 2.0), (1.0, 1.0)]);
+        assert_eq!(flags, vec![false, true]);
+    }
+
+    #[test]
+    fn non_finite_points_never_make_the_front() {
+        let flags = pareto_flags(&[(f64::NAN, 0.1), (1.0, f64::INFINITY), (1.0, 0.1)]);
+        assert_eq!(flags, vec![false, false, true]);
+    }
+
+    #[test]
+    fn front_of_a_monotone_chain_is_everything() {
+        // strictly trading energy for accuracy: the whole chain is optimal
+        let pts: Vec<(f64, f64)> = (0..5).map(|i| (i as f64, 4.0 - i as f64)).collect();
+        assert!(pareto_flags(&pts).iter().all(|&f| f));
+    }
+}

@@ -1,0 +1,446 @@
+//! Sweep execution: grid -> campaigns -> per-point stats -> artifacts.
+//!
+//! Every grid point runs as one sharded native campaign
+//! ([`crate::coordinator::run_campaign`]); only the point's aggregate
+//! statistics are retained, so sweep memory is O(grid points) no matter
+//! how many Monte-Carlo samples each point draws. The CSV artifact doubles
+//! as the resume checkpoint: it is rewritten after every computed point,
+//! and with [`SweepOptions::resume`] set, rows whose (variant, vdd,
+//! v_bulk, bits, corner, n_mc, seed, card-fingerprint) key already
+//! exists in `sweep.csv` are reused instead of recomputed — so an
+//! interrupted sweep resumes from its last completed point, and a
+//! checkpoint from an edited spec (different seed, n_mc, or `[params.*]`
+//! overrides) is never reused. Because every stored number is
+//! canonicalized to the CSV cell precision first (6 significant digits),
+//! a resumed sweep re-emits byte-identical artifacts (DESIGN.md §8).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{run_campaign, Backend};
+use crate::dac::WordlineDac;
+use crate::energy::EnergyModel;
+use crate::report::csv_cell;
+use crate::util::json::{self, Value};
+
+use super::pareto::pareto_flags;
+use super::spec::{GridPoint, SweepSpec};
+
+/// Execution knobs of one sweep run (all orthogonal to the results:
+/// shards/threads are pure performance knobs, resume only skips work).
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Shards per campaign (0 = auto) — forwarded to the campaign runner.
+    pub shards: usize,
+    /// Worker threads per campaign (0 = auto).
+    pub threads: usize,
+    /// Reuse rows already present in the output CSV (cheap checkpointing
+    /// for long sweeps).
+    pub resume: bool,
+    /// Directory receiving `sweep.csv` and `sweep.json`.
+    pub out_dir: PathBuf,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        Self { shards: 0, threads: 0, resume: false, out_dir: PathBuf::from("target/dse") }
+    }
+}
+
+/// Aggregate statistics of one grid point (one row of the artifacts).
+#[derive(Debug, Clone, Copy)]
+pub struct PointResult {
+    /// The operating point these statistics belong to.
+    pub point: GridPoint,
+    /// Valid Monte-Carlo rows folded (operands x n_mc).
+    pub rows: u64,
+    /// Std-dev of the normalized error — Table 1's "Accuracy (STD.V)".
+    pub sigma_norm: f64,
+    /// RMS of the normalized error (includes systematic offset).
+    pub rms_norm: f64,
+    /// Bit-error rate at the 4-bit output grid.
+    pub ber: f64,
+    /// Saturation-exit (systematic) fault rate.
+    pub fault_rate: f64,
+    /// Full per-MAC energy (pJ): workload-mean bitline energy through the
+    /// peripheral model, supply tracking the swept VDD.
+    pub energy_pj: f64,
+    /// Operating frequency (MHz) from the cycle-time model.
+    pub freq_mhz: f64,
+}
+
+/// A finished sweep: per-point stats, the Pareto front, artifact paths.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    /// Sweep label (from the spec).
+    pub name: String,
+    /// Per-point statistics in canonical grid order.
+    pub points: Vec<PointResult>,
+    /// One flag per point: true iff on the energy-vs-sigma Pareto front.
+    pub pareto: Vec<bool>,
+    /// Grid points actually simulated this run.
+    pub computed: usize,
+    /// Grid points reused from the resume checkpoint.
+    pub resumed: usize,
+    /// Path of the CSV artifact (also the resume checkpoint).
+    pub csv_path: PathBuf,
+    /// Path of the JSON artifact.
+    pub json_path: PathBuf,
+}
+
+impl SweepResult {
+    /// The Pareto-optimal points, in canonical grid order.
+    pub fn front(&self) -> Vec<&PointResult> {
+        self.points
+            .iter()
+            .zip(&self.pareto)
+            .filter_map(|(p, &on)| on.then_some(p))
+            .collect()
+    }
+}
+
+/// Column order of the CSV artifact; the first eight columns form the
+/// resume key (`card` fingerprints the base model card so edited
+/// `[params.*]` overrides invalidate old checkpoint rows).
+const CSV_HEADER: &str = "variant,vdd,v_bulk,bits,corner,n_mc,seed,card,rows,\
+sigma_norm,rms_norm,ber,fault_rate,energy_pj,freq_mhz,pareto";
+
+/// Run every grid point of `spec` and write the CSV/JSON artifacts.
+///
+/// Deterministic: the artifacts are byte-identical for any
+/// [`SweepOptions::shards`]/[`SweepOptions::threads`] choice, and a
+/// resumed run re-emits exactly the bytes a scratch run would produce.
+pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepResult> {
+    spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let points = spec.grid.expand();
+    let csv_path = opts.out_dir.join("sweep.csv");
+    let json_path = opts.out_dir.join("sweep.json");
+
+    let mut prior: BTreeMap<String, ResumeRow> = BTreeMap::new();
+    if opts.resume {
+        if let Ok(text) = std::fs::read_to_string(&csv_path) {
+            prior = parse_resume_rows(&text);
+        }
+    }
+    // fail on an unwritable --out before simulating anything
+    std::fs::create_dir_all(&opts.out_dir)
+        .with_context(|| format!("creating {}", opts.out_dir.display()))?;
+
+    let flags_of = |results: &[PointResult]| {
+        let objectives: Vec<(f64, f64)> =
+            results.iter().map(|r| (r.energy_pj, r.sigma_norm)).collect();
+        pareto_flags(&objectives)
+    };
+
+    let mut results: Vec<PointResult> = Vec::with_capacity(points.len());
+    let (mut computed, mut resumed) = (0usize, 0usize);
+    for point in &points {
+        let key = point_key(point, spec);
+        if let Some(row) = prior.get(&key) {
+            results.push(row.to_result(*point));
+            resumed += 1;
+        } else {
+            results.push(run_point(spec, point, opts)?);
+            computed += 1;
+            // Checkpoint after every computed point, so an interrupted
+            // sweep resumes from the last completed point rather than
+            // from scratch. Pareto flags are provisional here (computed
+            // over the rows so far); the final write below recomputes
+            // them over the full grid — and resume ignores the flag
+            // column anyway.
+            let partial = flags_of(&results);
+            std::fs::write(&csv_path, render_csv(spec, &results, &partial))
+                .with_context(|| format!("checkpointing {}", csv_path.display()))?;
+        }
+    }
+
+    let pareto = flags_of(&results);
+    std::fs::write(&csv_path, render_csv(spec, &results, &pareto))
+        .with_context(|| format!("writing {}", csv_path.display()))?;
+    std::fs::write(&json_path, render_json(spec, &results, &pareto))
+        .with_context(|| format!("writing {}", json_path.display()))?;
+
+    Ok(SweepResult {
+        name: spec.name.clone(),
+        points: results,
+        pareto,
+        computed,
+        resumed,
+        csv_path,
+        json_path,
+    })
+}
+
+/// Simulate one grid point: a full sharded campaign plus the energy model
+/// evaluated at the point's operating conditions.
+fn run_point(spec: &SweepSpec, point: &GridPoint, opts: &SweepOptions) -> Result<PointResult> {
+    let params = point.apply(&spec.params);
+    let cspec = point.campaign_spec(spec.seed, spec.n_mc, opts.shards, opts.threads);
+    let rep = run_campaign(&params, &cspec, Backend::Native, None)
+        .with_context(|| format!("grid point {} ({})", point.index, point.label()))?;
+
+    // Per-MAC cost at this operating point: the campaign's workload-mean
+    // raw bitline energy through the peripheral model. op_energy's
+    // contract is raw energy from the 1 V card rescaled by supply^2
+    // (see nominal_cost / Table 1); the campaign already simulated at
+    // the swept VDD, so normalize its raw energy back to the 1 V card
+    // before letting the supply (which tracks the swept VDD) rescale it
+    // — otherwise the bitline term would count vdd^2 twice.
+    let mut cfg = point.variant.config(&params);
+    cfg.supply *= point.vdd;
+    let raw_1v = rep.energy.mean() / (point.vdd * point.vdd);
+    let dac = WordlineDac::new(cfg.dac_mode, &params.device, &params.circuit, cfg.v_bulk);
+    let v_wl_max = dac.v_wl(((1u16 << point.bits) - 1) as u8);
+    let cost = EnergyModel::default().cost(&cfg, raw_1v, rep.full_scale, v_wl_max);
+
+    Ok(PointResult {
+        point: *point,
+        rows: rep.rows,
+        sigma_norm: canon(rep.accuracy.sigma_norm),
+        rms_norm: canon(rep.accuracy.rms_norm),
+        ber: canon(rep.accuracy.ber),
+        fault_rate: canon(rep.accuracy.fault_rate),
+        energy_pj: canon(cost.energy * 1e12),
+        freq_mhz: canon(cost.frequency / 1e6),
+    })
+}
+
+/// Round to the artifact precision (the CSV cell format, 6 significant
+/// digits) so CSV and JSON carry identical values and resume round-trips
+/// are byte-exact.
+fn canon(v: f64) -> f64 {
+    if v.is_finite() {
+        format!("{v:.6e}").parse().unwrap_or(v)
+    } else {
+        v
+    }
+}
+
+/// The resume key: the first eight CSV columns, rendered exactly as the
+/// writer renders them.
+fn point_key(p: &GridPoint, spec: &SweepSpec) -> String {
+    format!(
+        "{},{},{},{},{},{},{},{}",
+        p.variant.token(),
+        csv_cell(p.vdd),
+        csv_cell(p.v_bulk),
+        p.bits,
+        p.corner.name(),
+        spec.n_mc,
+        spec.seed,
+        card_fingerprint(&spec.params)
+    )
+}
+
+/// FNV-1a fingerprint of the base model card, EXCLUDING `device.vdd` and
+/// `circuit.v_bulk_smart` (those are per-point key columns already).
+/// Any other `[params.*]` override changes the fingerprint, so `--resume`
+/// never reuses rows computed under a different card.
+fn card_fingerprint(p: &crate::params::Params) -> String {
+    let d = &p.device;
+    let c = &p.circuit;
+    let canon = format!(
+        "{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{},{},{:e},{:e}",
+        d.vth0,
+        d.gamma,
+        d.phi2f,
+        d.mu_cox,
+        d.w_over_l,
+        d.lam,
+        d.n_sub,
+        d.vt_thermal,
+        d.k_leak,
+        c.c_blb,
+        c.wl_max,
+        c.t_sample,
+        c.n_steps,
+        c.n_bits,
+        c.sigma_vth,
+        c.sigma_beta
+    );
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in canon.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+fn render_csv(spec: &SweepSpec, results: &[PointResult], pareto: &[bool]) -> String {
+    let mut s = String::with_capacity(results.len() * 128 + CSV_HEADER.len() + 1);
+    s.push_str(CSV_HEADER);
+    s.push('\n');
+    for (r, &front) in results.iter().zip(pareto) {
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{},{},{},{},{}",
+            point_key(&r.point, spec),
+            r.rows,
+            csv_cell(r.sigma_norm),
+            csv_cell(r.rms_norm),
+            csv_cell(r.ber),
+            csv_cell(r.fault_rate),
+            csv_cell(r.energy_pj),
+            csv_cell(r.freq_mhz),
+            u8::from(front)
+        );
+    }
+    s
+}
+
+fn render_json(spec: &SweepSpec, results: &[PointResult], pareto: &[bool]) -> String {
+    let mut root = BTreeMap::new();
+    root.insert("name".to_string(), Value::Str(spec.name.clone()));
+    root.insert("seed".to_string(), Value::Num(spec.seed as f64));
+    root.insert("n_mc".to_string(), Value::Num(f64::from(spec.n_mc)));
+    root.insert("card".to_string(), Value::Str(card_fingerprint(&spec.params)));
+    let pts: Vec<Value> = results
+        .iter()
+        .zip(pareto)
+        .map(|(r, &front)| {
+            let mut m = BTreeMap::new();
+            m.insert("variant".to_string(), Value::Str(r.point.variant.token().to_string()));
+            m.insert("vdd".to_string(), Value::Num(r.point.vdd));
+            m.insert("v_bulk".to_string(), Value::Num(r.point.v_bulk));
+            m.insert("bits".to_string(), Value::Num(f64::from(r.point.bits)));
+            m.insert("corner".to_string(), Value::Str(r.point.corner.name().to_string()));
+            m.insert("rows".to_string(), Value::Num(r.rows as f64));
+            m.insert("sigma_norm".to_string(), Value::Num(r.sigma_norm));
+            m.insert("rms_norm".to_string(), Value::Num(r.rms_norm));
+            m.insert("ber".to_string(), Value::Num(r.ber));
+            m.insert("fault_rate".to_string(), Value::Num(r.fault_rate));
+            m.insert("energy_pj".to_string(), Value::Num(r.energy_pj));
+            m.insert("freq_mhz".to_string(), Value::Num(r.freq_mhz));
+            m.insert("pareto".to_string(), Value::Bool(front));
+            Value::Obj(m)
+        })
+        .collect();
+    root.insert("points".to_string(), Value::Arr(pts));
+    let mut text = json::to_string_pretty(&Value::Obj(root));
+    text.push('\n');
+    text
+}
+
+/// Stats columns of one checkpoint row (the key is the map key).
+struct ResumeRow {
+    rows: u64,
+    sigma_norm: f64,
+    rms_norm: f64,
+    ber: f64,
+    fault_rate: f64,
+    energy_pj: f64,
+    freq_mhz: f64,
+}
+
+impl ResumeRow {
+    fn to_result(&self, point: GridPoint) -> PointResult {
+        PointResult {
+            point,
+            rows: self.rows,
+            sigma_norm: self.sigma_norm,
+            rms_norm: self.rms_norm,
+            ber: self.ber,
+            fault_rate: self.fault_rate,
+            energy_pj: self.energy_pj,
+            freq_mhz: self.freq_mhz,
+        }
+    }
+}
+
+/// Parse checkpoint rows from a previous `sweep.csv`. Rows that fail to
+/// parse (e.g. a file truncated mid-write) are silently skipped — they
+/// are simply recomputed.
+fn parse_resume_rows(text: &str) -> BTreeMap<String, ResumeRow> {
+    let mut out = BTreeMap::new();
+    for line in text.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 16 {
+            continue;
+        }
+        let cell = |s: &str| -> Option<f64> {
+            // empty cell = the CSV writer's non-finite sentinel
+            if s.is_empty() {
+                Some(f64::NAN)
+            } else {
+                s.parse().ok()
+            }
+        };
+        let Ok(rows) = f[8].parse::<u64>() else { continue };
+        let (Some(sigma_norm), Some(rms_norm), Some(ber), Some(fault_rate)) =
+            (cell(f[9]), cell(f[10]), cell(f[11]), cell(f[12]))
+        else {
+            continue;
+        };
+        let (Some(energy_pj), Some(freq_mhz)) = (cell(f[13]), cell(f[14])) else { continue };
+        out.insert(
+            f[..8].join(","),
+            ResumeRow { rows, sigma_norm, rms_norm, ber, fault_rate, energy_pj, freq_mhz },
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canon_is_idempotent_and_preserves_non_finite() {
+        let x = canon(0.012_345_678_9);
+        assert_eq!(canon(x), x);
+        assert_eq!(format!("{x:.6e}"), "1.234568e-2");
+        assert!(canon(f64::NAN).is_nan());
+        assert_eq!(canon(f64::INFINITY), f64::INFINITY);
+        assert_eq!(canon(0.0), 0.0);
+    }
+
+    #[test]
+    fn resume_rows_roundtrip_through_the_writer() {
+        let spec = SweepSpec::parse("name = \"rt\"\nn_mc = 8\nseed = 3\n").unwrap();
+        let point = spec.grid.expand()[0];
+        let r = PointResult {
+            point,
+            rows: 128,
+            sigma_norm: canon(0.0123456789),
+            rms_norm: canon(0.02),
+            ber: canon(0.5),
+            fault_rate: f64::NAN,
+            energy_pj: canon(0.783),
+            freq_mhz: canon(250.0),
+        };
+        let text = render_csv(&spec, &[r], &[true]);
+        let rows = parse_resume_rows(&text);
+        assert_eq!(rows.len(), 1);
+        let key = point_key(&point, &spec);
+        let back = rows.get(&key).expect("key matches");
+        assert_eq!(back.rows, 128);
+        assert_eq!(back.sigma_norm.to_bits(), r.sigma_norm.to_bits());
+        assert!(back.fault_rate.is_nan());
+        // re-render from the parsed row: byte-identical
+        let again = render_csv(&spec, &[back.to_result(point)], &[true]);
+        assert_eq!(text, again);
+    }
+
+    #[test]
+    fn corrupt_resume_rows_are_skipped() {
+        let text = "header\nnot,enough,cols\n\
+                    smart,1.000000e0,0.000000e0,4,tt,8,3,cafe,oops,1e-2,1e-2,0,0,1,250,0\n";
+        assert!(parse_resume_rows(text).is_empty());
+    }
+
+    #[test]
+    fn card_fingerprint_tracks_overrides_but_not_swept_fields() {
+        let base = SweepSpec::parse("name = \"fp\"\n").unwrap();
+        let overridden =
+            SweepSpec::parse("name = \"fp\"\n[params.circuit]\nsigma_vth = 0.05\n").unwrap();
+        assert_ne!(card_fingerprint(&base.params), card_fingerprint(&overridden.params));
+        // the swept fields are per-point key columns, not card identity
+        let mut swept = base.params;
+        swept.device.vdd = 0.9;
+        swept.circuit.v_bulk_smart = 0.3;
+        assert_eq!(card_fingerprint(&base.params), card_fingerprint(&swept));
+    }
+}

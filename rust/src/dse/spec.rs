@@ -1,0 +1,368 @@
+//! Sweep specification: the DSE grid a user can check in.
+//!
+//! A sweep file is TOML-lite (`crate::util::toml_lite`): top-level
+//! `name`/`seed`/`n_mc`, optional `[params.*]` model-card overrides
+//! (shared by every grid point), and a `[grid]` table with one axis list
+//! per design knob. Missing axes collapse to the card's single default
+//! value, so the degenerate sweep (no `[grid]`) is exactly one campaign.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{CampaignSpec, Workload};
+use crate::mac::Variant;
+use crate::montecarlo::Corner;
+use crate::params::Params;
+use crate::util::{json::Value, toml_lite};
+
+/// Axis lists of the design-space grid. Grid points are the cartesian
+/// product, expanded in canonical nested order (variant, vdd, v_bulk,
+/// bits, corner) — the order the artifacts list rows in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridAxes {
+    /// Design variants to sweep (Table 1 rows).
+    pub variants: Vec<Variant>,
+    /// Cell supply voltages (V).
+    pub vdd: Vec<f64>,
+    /// Threshold-suppression levels: forward body bias (V). Inert for the
+    /// unbiased baselines (`aid`, `imac`).
+    pub v_bulk: Vec<f64>,
+    /// Operand bit-widths (1..=4): each point runs the full `bits`-wide
+    /// operand space.
+    pub bits: Vec<u32>,
+    /// Process corners.
+    pub corners: Vec<Corner>,
+}
+
+impl GridAxes {
+    /// Number of grid points (product of the axis lengths).
+    pub fn len(&self) -> usize {
+        self.variants.len()
+            * self.vdd.len()
+            * self.v_bulk.len()
+            * self.bits.len()
+            * self.corners.len()
+    }
+
+    /// True when any axis is empty (the grid has no points).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand into the full cartesian product, in canonical order.
+    pub fn expand(&self) -> Vec<GridPoint> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut index = 0usize;
+        for &variant in &self.variants {
+            for &vdd in &self.vdd {
+                for &v_bulk in &self.v_bulk {
+                    for &bits in &self.bits {
+                        for &corner in &self.corners {
+                            out.push(GridPoint { index, variant, vdd, v_bulk, bits, corner });
+                            index += 1;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One operating point of the design-space grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GridPoint {
+    /// Position in the canonical grid order (row index in the artifacts).
+    pub index: usize,
+    /// Design variant.
+    pub variant: Variant,
+    /// Cell supply voltage (V).
+    pub vdd: f64,
+    /// Forward body bias (V) — the threshold-suppression knob.
+    pub v_bulk: f64,
+    /// Operand bit-width (1..=4).
+    pub bits: u32,
+    /// Process corner.
+    pub corner: Corner,
+}
+
+impl GridPoint {
+    /// Model card for this point: the base card with the swept supply and
+    /// body-bias rail applied.
+    pub fn apply(&self, base: &Params) -> Params {
+        let mut p = *base;
+        p.device.vdd = self.vdd;
+        p.circuit.v_bulk_smart = self.v_bulk;
+        p
+    }
+
+    /// Campaign spec running this point's workload through the sharded
+    /// Monte-Carlo runner.
+    pub fn campaign_spec(&self, seed: u64, n_mc: u32, shards: usize, threads: usize) -> CampaignSpec {
+        CampaignSpec {
+            variant: self.variant,
+            workload: Workload::BitSweep { bits: self.bits },
+            n_mc,
+            seed,
+            corner: self.corner,
+            workers: threads,
+            batch: 0,
+            shards,
+        }
+    }
+
+    /// Short human label for progress lines and panels.
+    pub fn label(&self) -> String {
+        format!(
+            "{} vdd={:.2} v_bulk={:.2} bits={} {}",
+            self.variant.token(),
+            self.vdd,
+            self.v_bulk,
+            self.bits,
+            self.corner.name()
+        )
+    }
+}
+
+/// Everything needed to reproduce a design-space sweep bit-for-bit.
+///
+/// ```
+/// let toml = r#"
+/// name = "demo"
+/// n_mc = 4
+/// [grid]
+/// variant = ["smart", "aid"]
+/// v_bulk = [0.0, 0.6]
+/// "#;
+/// let spec = smart_insram::dse::SweepSpec::parse(toml).unwrap();
+/// assert_eq!(spec.grid.expand().len(), 4);
+/// assert_eq!(spec.n_mc, 4);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    /// Human label for reports and the JSON artifact.
+    pub name: String,
+    /// Base RNG seed shared by every grid point (campaign determinism).
+    pub seed: u64,
+    /// Monte-Carlo samples per operand pair at every point.
+    pub n_mc: u32,
+    /// Base model card (defaults + any `[params.*]` overrides).
+    pub params: Params,
+    /// The design-space grid.
+    pub grid: GridAxes,
+}
+
+impl SweepSpec {
+    /// Load and parse a sweep file from disk.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse a sweep document (see the module docs for the format).
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = toml_lite::parse(text).map_err(|e| anyhow::anyhow!("sweep TOML: {e}"))?;
+        let name = doc
+            .get("name")
+            .and_then(Value::as_str)
+            .unwrap_or("dse")
+            .to_string();
+        let mut params = Params::default();
+        if let Some(p) = doc.get("params") {
+            params.apply_overrides(p).context("[params] overrides")?;
+        }
+        let u = |k: &str, default: u64| doc.get(k).and_then(Value::as_u64).unwrap_or(default);
+        let empty = Value::Obj(Default::default());
+        let grid_v = doc.get("grid").unwrap_or(&empty);
+        let grid = GridAxes {
+            variants: str_axis(grid_v, "variant", vec![Variant::Smart])?,
+            vdd: num_axis(grid_v, "vdd", vec![params.device.vdd])?,
+            v_bulk: num_axis(grid_v, "v_bulk", vec![params.circuit.v_bulk_smart])?,
+            bits: bit_axis(grid_v, "bits", vec![params.circuit.n_bits])?,
+            corners: str_axis(grid_v, "corner", vec![Corner::Tt])?,
+        };
+        let spec = Self { name, seed: u("seed", 2022), n_mc: u("n_mc", 1000) as u32, params, grid };
+        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        Ok(spec)
+    }
+
+    /// Check the spec is runnable and reproducible.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_mc == 0 {
+            return Err("n_mc must be >= 1".into());
+        }
+        // Same f64-representability bound as CampaignSpec::validate.
+        if self.seed >= (1u64 << 53) {
+            return Err("seed must be < 2^53 (config numbers are f64)".into());
+        }
+        if self.grid.is_empty() {
+            return Err("grid has an empty axis".into());
+        }
+        for &b in &self.grid.bits {
+            if !(1..=4).contains(&b) {
+                return Err(format!("grid.bits value {b} outside 1..=4"));
+            }
+        }
+        for &v in &self.grid.vdd {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("grid.vdd value {v} must be a positive voltage"));
+            }
+        }
+        for &v in &self.grid.v_bulk {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("grid.v_bulk value {v} must be >= 0"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A single value or a list — both are accepted for every axis.
+fn list_of(v: &Value) -> &[Value] {
+    match v {
+        Value::Arr(a) => a,
+        other => std::slice::from_ref(other),
+    }
+}
+
+fn str_axis<T>(grid: &Value, key: &str, default: Vec<T>) -> Result<Vec<T>>
+where
+    T: std::str::FromStr<Err = String>,
+{
+    let Some(v) = grid.get(key) else { return Ok(default) };
+    let mut out = Vec::new();
+    for item in list_of(v) {
+        let s = item
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("grid.{key}: expected a string list"))?;
+        out.push(s.parse().map_err(|e: String| anyhow::anyhow!("grid.{key}: {e}"))?);
+    }
+    Ok(out)
+}
+
+fn num_axis(grid: &Value, key: &str, default: Vec<f64>) -> Result<Vec<f64>> {
+    let Some(v) = grid.get(key) else { return Ok(default) };
+    let mut out = Vec::new();
+    for item in list_of(v) {
+        out.push(
+            item.as_f64()
+                .ok_or_else(|| anyhow::anyhow!("grid.{key}: expected a number list"))?,
+        );
+    }
+    Ok(out)
+}
+
+fn bit_axis(grid: &Value, key: &str, default: Vec<u32>) -> Result<Vec<u32>> {
+    let Some(v) = grid.get(key) else { return Ok(default) };
+    let mut out = Vec::new();
+    for item in list_of(v) {
+        out.push(
+            item.as_u64()
+                .ok_or_else(|| anyhow::anyhow!("grid.{key}: expected an integer list"))?
+                as u32,
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+        name = "dse-test"
+        seed = 7
+        n_mc = 16
+        [grid]
+        variant = ["smart", "aid"]
+        vdd = [0.9, 1.0]
+        v_bulk = [0.0, 0.3, 0.6]
+        bits = [2, 4]
+        corner = ["tt"]
+    "#;
+
+    #[test]
+    fn parses_and_expands_cartesian_product() {
+        let spec = SweepSpec::parse(EXAMPLE).unwrap();
+        assert_eq!(spec.name, "dse-test");
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.n_mc, 16);
+        let points = spec.grid.expand();
+        assert_eq!(points.len(), 2 * 2 * 3 * 2);
+        assert_eq!(spec.grid.len(), points.len());
+        // canonical order: corner fastest, variant slowest
+        assert_eq!(points[0].variant, Variant::Smart);
+        assert_eq!(points[0].vdd, 0.9);
+        assert_eq!(points[0].v_bulk, 0.0);
+        assert_eq!(points[0].bits, 2);
+        assert_eq!(points[1].bits, 4);
+        assert_eq!(points[2].v_bulk, 0.3);
+        assert_eq!(points.last().unwrap().variant, Variant::Aid);
+        // indices are the row order
+        for (i, p) in points.iter().enumerate() {
+            assert_eq!(p.index, i);
+        }
+    }
+
+    #[test]
+    fn missing_axes_default_to_single_card_values() {
+        let spec = SweepSpec::parse("name = \"min\"\n[grid]\nvdd = [1.0]\n").unwrap();
+        assert_eq!(spec.grid.variants, vec![Variant::Smart]);
+        assert_eq!(spec.grid.v_bulk, vec![0.6]);
+        assert_eq!(spec.grid.bits, vec![4]);
+        assert_eq!(spec.grid.corners, vec![Corner::Tt]);
+        assert_eq!(spec.grid.expand().len(), 1);
+        // no [grid] at all: the degenerate one-point sweep
+        let spec = SweepSpec::parse("name = \"none\"\n").unwrap();
+        assert_eq!(spec.grid.expand().len(), 1);
+        assert_eq!(spec.n_mc, 1000);
+    }
+
+    #[test]
+    fn scalar_axis_values_accepted() {
+        let spec = SweepSpec::parse("[grid]\nvdd = 0.95\nvariant = \"aid\"\n").unwrap();
+        assert_eq!(spec.grid.vdd, vec![0.95]);
+        assert_eq!(spec.grid.variants, vec![Variant::Aid]);
+    }
+
+    #[test]
+    fn params_overrides_feed_axis_defaults() {
+        let spec = SweepSpec::parse("[params.circuit]\nv_bulk_smart = 0.4\n").unwrap();
+        assert_eq!(spec.grid.v_bulk, vec![0.4]);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        assert!(SweepSpec::parse("[grid]\nbits = [5]\n").is_err());
+        assert!(SweepSpec::parse("[grid]\nbits = [0]\n").is_err());
+        assert!(SweepSpec::parse("[grid]\nvdd = [-1.0]\n").is_err());
+        assert!(SweepSpec::parse("[grid]\nvdd = []\n").is_err());
+        assert!(SweepSpec::parse("n_mc = 0\n").is_err());
+        assert!(SweepSpec::parse("[grid]\nvariant = [\"bogus\"]\n").is_err());
+        assert!(SweepSpec::parse("[grid]\ncorner = [\"xx\"]\n").is_err());
+    }
+
+    #[test]
+    fn point_applies_card_overrides() {
+        let spec = SweepSpec::parse(EXAMPLE).unwrap();
+        let p = GridPoint {
+            index: 0,
+            variant: Variant::Smart,
+            vdd: 0.9,
+            v_bulk: 0.3,
+            bits: 4,
+            corner: Corner::Tt,
+        };
+        let card = p.apply(&spec.params);
+        assert_eq!(card.device.vdd, 0.9);
+        assert_eq!(card.circuit.v_bulk_smart, 0.3);
+        let cspec = p.campaign_spec(spec.seed, spec.n_mc, 4, 2);
+        assert_eq!(cspec.n_mc, 16);
+        assert_eq!(cspec.shards, 4);
+        assert_eq!(cspec.workers, 2);
+        assert!(cspec.validate().is_ok());
+        assert!(p.label().contains("smart"));
+    }
+}

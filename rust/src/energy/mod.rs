@@ -33,10 +33,11 @@ pub struct EnergyModel {
     /// Sense time constant (s*V): t_sense = k / dV_fullscale — a larger
     /// sampled swing resolves faster.
     pub k_sense: f64,
-    /// Interface/digitization time (s) per variant family; fitted to the
-    /// published frequencies ([9] 100 MHz, [10] 200 MHz). SMART inherits
-    /// AID's interface circuitry (paper §III).
+    /// Interface/digitization time (s) for the sqrt-DAC family; fitted to
+    /// the published frequencies ([9] 100 MHz, [10] 200 MHz). SMART
+    /// inherits AID's interface circuitry (paper §III).
     pub t_iface_sqrt: f64,
+    /// Interface/digitization time (s) for the linear-DAC family.
     pub t_iface_linear: f64,
 }
 
@@ -62,8 +63,9 @@ impl Default for EnergyModel {
 pub struct OpCost {
     /// Total energy per MAC (J).
     pub energy: f64,
-    /// Cycle time (s) and the resulting operating frequency (Hz).
+    /// Cycle time (s).
     pub t_cycle: f64,
+    /// Operating frequency (Hz) — the cycle time's reciprocal.
     pub frequency: f64,
 }
 
@@ -117,11 +119,17 @@ impl EnergyModel {
 /// published netlists; carried as constants exactly like the paper does.
 #[derive(Debug, Clone, Copy)]
 pub struct LiteratureRow {
+    /// Citation label as printed in Table 1.
     pub label: &'static str,
+    /// Technology node (nm).
     pub tech_nm: u32,
+    /// Supply voltage (V).
     pub supply: f64,
+    /// Published MAC energy (pJ).
     pub mac_energy_pj: f64,
+    /// Published accuracy figure, when the source reports one.
     pub accuracy_std: Option<f64>,
+    /// Published frequency, verbatim (some sources quote ranges).
     pub freq_mhz: &'static str,
 }
 

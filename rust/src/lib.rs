@@ -23,22 +23,43 @@
 //! The native simulator ([`device`], [`circuit`], [`sram`], [`dac`],
 //! [`mac`]) is a complete Rust twin of the AOT path, used as its
 //! cross-check oracle and for shapes the fixed-batch artifacts don't
-//! cover.
+//! cover. On top of the campaign layer, [`dse`] sweeps the design knobs
+//! (supply, body bias, bit-width, corner, variant) across a grid and
+//! extracts the energy-vs-accuracy Pareto front (DESIGN.md §8).
 
+#![warn(missing_docs)]
+
+/// Micro-benchmark harness for the `harness = false` benches.
 pub mod bench;
+/// Bitline discharge transients: the ODE integration behind every MAC.
 pub mod circuit;
+/// TOML-lite experiment configuration (`smart run`).
 pub mod config;
+/// L3 Monte-Carlo campaign coordinator (sharded, bit-reproducible).
 pub mod coordinator;
+/// Word-line DACs (Eq. 7 linear / Eq. 8 sqrt).
 pub mod dac;
+/// 65 nm device model + characterization sweeps (Fig. 3/4).
 pub mod device;
+/// Design-space exploration: grid sweeps + Pareto fronts (`smart sweep`).
+pub mod dse;
+/// Energy-per-MAC and cycle-time models behind Table 1.
 pub mod energy;
+/// The analog in-SRAM MAC engine and the design-variant table.
 pub mod mac;
+/// Statistics + accuracy metrics (Welford, histograms, BER, SNR).
 pub mod metrics;
+/// Seeded mismatch/corner sampling behind the 1000-point MC (§IV).
 pub mod montecarlo;
+/// The 65 nm model card (device + circuit constants).
 pub mod params;
+/// Report emission: the paper's tables/figures as markdown and CSV.
 pub mod report;
+/// PJRT/XLA artifact loading and execution (stubbed offline).
 pub mod runtime;
+/// 6T cells, 4-cell MAC words, and the precharge model.
 pub mod sram;
+/// Self-contained utilities: CLI args, JSON, TOML-lite, property RNG.
 pub mod util;
 
 pub use mac::{MacResult, NativeMacEngine, Variant};

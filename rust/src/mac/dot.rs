@@ -32,11 +32,13 @@ pub struct NativeDotEngine {
 }
 
 impl NativeDotEngine {
+    /// Engine for `rows` simultaneously-discharging array rows.
     pub fn new(params: Params, cfg: VariantConfig, rows: usize) -> Self {
         let dac = WordlineDac::new(cfg.dac_mode, &params.device, &params.circuit, cfg.v_bulk);
         Self { params, cfg, dac, rows }
     }
 
+    /// Array rows per dot product.
     pub fn rows(&self) -> usize {
         self.rows
     }

@@ -36,19 +36,23 @@ pub struct NativeMacEngine {
 }
 
 impl NativeMacEngine {
+    /// Engine for one variant configuration on one model card.
     pub fn new(params: Params, cfg: VariantConfig) -> Self {
         let dac = WordlineDac::new(cfg.dac_mode, &params.device, &params.circuit, cfg.v_bulk);
         Self { params, cfg, dac }
     }
 
+    /// The model card the engine was built on.
     pub fn params(&self) -> &Params {
         &self.params
     }
 
+    /// The resolved variant configuration.
     pub fn config(&self) -> &VariantConfig {
         &self.cfg
     }
 
+    /// The calibrated word-line DAC.
     pub fn dac(&self) -> &WordlineDac {
         &self.dac
     }

@@ -7,6 +7,7 @@ use super::engine::NativeMacEngine;
 /// V_ideal(a, b) = (a/15) * (b/15) * full_scale.
 #[derive(Debug, Clone, Copy)]
 pub struct IdealTransfer {
+    /// Nominal full-scale output V_ideal(15, 15) in volts.
     pub full_scale: f64,
 }
 

@@ -1,6 +1,13 @@
 //! The analog in-SRAM MAC engine built on the native simulator, plus the
 //! design-variant table (SMART vs the state-of-the-art baselines) and the
 //! sense/reconstruction model.
+//!
+//! One MAC stores operand `a` in a 4-cell word, DAC-codes operand `b`
+//! onto the word line, integrates the four BLB discharges for
+//! `t_sample`, and combines them with binary weights — paper Fig. 7 /
+//! DESIGN.md §3. [`Variant`] captures the head-to-head designs of
+//! Table 1; [`NativeMacEngine`] is the single-MAC oracle the campaign
+//! layer cross-checks the AOT path against.
 
 mod dot;
 mod engine;

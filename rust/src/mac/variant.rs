@@ -17,15 +17,28 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// Every design variant, in Table 1 order.
     pub const ALL: [Variant; 4] =
         [Variant::Smart, Variant::Aid, Variant::Imac, Variant::SmartOnImac];
 
+    /// Display name with the paper's citation tags (Table 1 row labels).
     pub fn name(self) -> &'static str {
         match self {
             Self::Smart => "SMART",
             Self::Aid => "AID [10]",
             Self::Imac => "IMAC [9]",
             Self::SmartOnImac => "SMART-on-IMAC",
+        }
+    }
+
+    /// Config-file token — round-trips through [`std::str::FromStr`], and
+    /// is what campaign/sweep artifacts store.
+    pub fn token(self) -> &'static str {
+        match self {
+            Self::Smart => "smart",
+            Self::Aid => "aid",
+            Self::Imac => "imac",
+            Self::SmartOnImac => "smart-on-imac",
         }
     }
 
@@ -82,7 +95,9 @@ impl std::str::FromStr for Variant {
 /// Resolved per-variant circuit knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct VariantConfig {
+    /// The variant these knobs belong to.
     pub variant: Variant,
+    /// WL DAC transfer curve (Eq. 7 linear / Eq. 8 sqrt).
     pub dac_mode: DacMode,
     /// Forward body bias on the access transistors (V).
     pub v_bulk: f64,
@@ -124,5 +139,12 @@ mod tests {
             assert_eq!(parsed, v);
         }
         assert!("bogus".parse::<Variant>().is_err());
+    }
+
+    #[test]
+    fn token_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(v.token().parse::<Variant>().unwrap(), v);
+        }
     }
 }

@@ -8,6 +8,7 @@
 //! smart mc --variant aid --n-mc 1000 [--a 15 --b 15 | --full-sweep]
 //! smart table1 [--n-mc 300]
 //! smart run configs/fig8.toml
+//! smart sweep configs/dse.toml --shards 4 --threads 2 [--resume]
 //! ```
 
 use std::path::PathBuf;
@@ -16,6 +17,7 @@ use std::process::ExitCode;
 use anyhow::Result;
 
 use smart_insram::coordinator::{run_campaign, Backend, CampaignSpec, Workload};
+use smart_insram::dse::{run_sweep, SweepOptions, SweepSpec};
 use smart_insram::energy::{nominal_cost, EnergyModel};
 use smart_insram::mac::Variant;
 use smart_insram::montecarlo::Corner;
@@ -40,11 +42,20 @@ COMMANDS:
                                --shards/--threads choice
   table1 [--n-mc N]            regenerate Table 1 (all variants + lit rows)
   run <config.toml>            run campaigns from an experiment file
+  sweep <dse.toml> [--shards K] [--threads T] [--resume] [--out DIR]
+                               design-space exploration: run every grid
+                               point (variant x vdd x v_bulk x bits x
+                               corner) through the sharded MC runner and
+                               emit CSV/JSON + the energy-vs-sigma Pareto
+                               front; artifacts are byte-identical for any
+                               --shards/--threads, and --resume skips
+                               points already present in the output CSV
 
 OPTIONS:
   --artifacts DIR   artifact directory (default: $SMART_ARTIFACTS or ./artifacts)
   --native          use the native Rust simulator instead of the AOT/PJRT path
   --variant V       smart | aid | imac | smart-on-imac (default: smart)
+  --out DIR         sweep artifact directory (default: target/dse)
 ";
 
 fn main() -> ExitCode {
@@ -58,7 +69,7 @@ fn main() -> ExitCode {
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["native", "full-sweep", "help"])
+    let args = Args::parse(std::env::args().skip(1), &["native", "full-sweep", "help", "resume"])
         .map_err(|e| anyhow::anyhow!(e))?;
     if args.flag("help") || args.positional(0).is_none() {
         print!("{USAGE}");
@@ -128,6 +139,31 @@ fn run() -> Result<()> {
         "table1" => {
             let n_mc: u32 = args.opt_parse("n-mc", 300u32).map_err(|e| anyhow::anyhow!(e))?;
             cmd_table1(&params, &art, backend, n_mc)
+        }
+        "sweep" => {
+            let path = args.positional(1).ok_or_else(|| {
+                anyhow::anyhow!("usage: smart sweep <dse.toml> [--shards K --threads T --resume --out DIR]")
+            })?;
+            let sweep = SweepSpec::load(path)?;
+            let opts = SweepOptions {
+                shards: args.opt_parse("shards", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+                threads: {
+                    // --threads is the documented knob; --workers remains
+                    // as an alias for symmetry with `smart mc`
+                    let w = args.opt_parse("workers", 0usize).map_err(|e| anyhow::anyhow!(e))?;
+                    args.opt_parse("threads", w).map_err(|e| anyhow::anyhow!(e))?
+                },
+                resume: args.flag("resume"),
+                out_dir: args
+                    .opt("out")
+                    .map(PathBuf::from)
+                    .unwrap_or_else(|| SweepOptions::default().out_dir),
+            };
+            let n_points = sweep.grid.len();
+            println!("sweep '{}': {} grid points, n_mc = {}", sweep.name, n_points, sweep.n_mc);
+            let r = run_sweep(&sweep, &opts)?;
+            print!("{}", report::sweep_panel(&r));
+            Ok(())
         }
         "run" => {
             let path = args

@@ -21,6 +21,7 @@ pub struct ErrorAccumulator {
 }
 
 impl ErrorAccumulator {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self {
             err: OnlineStats::new(),
@@ -53,6 +54,7 @@ impl ErrorAccumulator {
         self.n += 1;
     }
 
+    /// Combine with another accumulator (exact parallel merge).
     pub fn merge(&mut self, other: &ErrorAccumulator) {
         self.err.merge(&other.err);
         self.sig.merge(&other.sig);
@@ -62,14 +64,17 @@ impl ErrorAccumulator {
         self.n += other.n;
     }
 
+    /// Outcomes recorded so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Stats of the raw (unnormalized) output voltage.
     pub fn raw_stats(&self) -> &OnlineStats {
         &self.raw
     }
 
+    /// Summarize into the paper's accuracy figures.
     pub fn report(&self) -> AccuracyReport {
         let rms = (self.err.variance() + self.err.mean().powi(2)).sqrt();
         let sig_pow = self.sig.variance() + self.sig.mean().powi(2);
@@ -98,6 +103,7 @@ pub struct AccuracyReport {
     pub ber: f64,
     /// Fraction flagged with a saturation-exit (systematic) fault.
     pub fault_rate: f64,
+    /// Outcomes the figures are computed over.
     pub n: u64,
 }
 

@@ -11,11 +11,13 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// `n_bins` equal-width bins over `[lo, hi)`.
     pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
         assert!(hi > lo && n_bins > 0);
         Self { lo, hi, bins: vec![0; n_bins], n: 0 }
     }
 
+    /// Count one sample (out-of-range clamps to the edge bins).
     pub fn push(&mut self, x: f64) {
         let nb = self.bins.len();
         let idx = ((x - self.lo) / (self.hi - self.lo) * nb as f64).floor();
@@ -24,10 +26,12 @@ impl Histogram {
         self.n += 1;
     }
 
+    /// Per-bin counts, in bin order.
     pub fn counts(&self) -> &[u64] {
         &self.bins
     }
 
+    /// Total samples counted.
     pub fn total(&self) -> u64 {
         self.n
     }

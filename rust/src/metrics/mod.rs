@@ -1,5 +1,12 @@
 //! Statistics + accuracy metrics: Welford online stats, histograms, BER,
 //! and the SNR-based accuracy figure of [10] used in Table 1.
+//!
+//! Everything here streams: campaigns fold millions of MAC outcomes into
+//! O(1) accumulators ([`OnlineStats`], [`ErrorAccumulator`]) plus a
+//! fixed-bin [`Histogram`] (the Fig. 8/9 distributions), with exact
+//! parallel merges so sharded execution changes nothing (DESIGN.md §4).
+//! [`SampleSet`] keeps raw samples for quantiles and the bootstrap CI on
+//! the reported sigma.
 
 mod error;
 mod histogram;

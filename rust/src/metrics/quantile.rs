@@ -12,18 +12,22 @@ pub struct SampleSet {
 }
 
 impl SampleSet {
+    /// Empty reservoir.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Keep one sample.
     pub fn push(&mut self, x: f64) {
         self.xs.push(x);
     }
 
+    /// Samples kept so far.
     pub fn len(&self) -> usize {
         self.xs.len()
     }
 
+    /// True when no samples have been kept.
     pub fn is_empty(&self) -> bool {
         self.xs.is_empty()
     }

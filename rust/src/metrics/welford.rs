@@ -12,10 +12,12 @@ pub struct OnlineStats {
 }
 
 impl OnlineStats {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample (Welford's update).
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -43,10 +45,12 @@ impl OnlineStats {
         self.max = self.max.max(other.max);
     }
 
+    /// Samples folded so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 when empty).
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -60,14 +64,17 @@ impl OnlineStats {
         }
     }
 
+    /// Population standard deviation.
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest sample seen (+inf when empty).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample seen (-inf when empty).
     pub fn max(&self) -> f64 {
         self.max
     }

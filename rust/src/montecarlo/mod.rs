@@ -1,6 +1,12 @@
 //! Monte-Carlo process/mismatch substrate: seeded RNG, Pelgrom-style
 //! mismatch sampling, and process-corner generation — the stand-in for the
 //! foundry statistical models behind the paper's 1000-point MC (§IV).
+//!
+//! The reproducibility keystone is [`SplitMix64::for_stream`] /
+//! [`MismatchSampler::sample_item`]: deviates for work item `k` are a
+//! pure function of `(seed, corner, k)`, never of draw order, which is
+//! what lets the coordinator re-shard campaigns freely without moving a
+//! single bit of the aggregates (DESIGN.md §4).
 
 mod rng;
 mod sampler;

@@ -10,6 +10,7 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Stream seeded at `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed, spare: None }
     }
@@ -31,6 +32,7 @@ impl SplitMix64 {
         Self::new(state)
     }
 
+    /// Next 64 uniform bits (the SplitMix64 avalanche).
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;

@@ -5,7 +5,9 @@ use super::rng::SplitMix64;
 /// Per-word mismatch deviates: one (dVTH, dbeta/beta) pair per cell.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct McSample {
+    /// Per-cell threshold-voltage offsets (V), MSB first.
     pub dvth: [f64; 4],
+    /// Per-cell relative transconductance offsets, MSB first.
     pub dbeta: [f64; 4],
 }
 
@@ -21,8 +23,11 @@ impl McSample {
 /// other, as slow/fast corners do.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Corner {
+    /// Typical-typical (centered).
     Tt,
+    /// Fast-fast (lower VTH, higher beta).
     Ff,
+    /// Slow-slow (higher VTH, lower beta).
     Ss,
 }
 
@@ -40,6 +45,7 @@ impl std::str::FromStr for Corner {
 }
 
 impl Corner {
+    /// Config-file token (`tt`/`ff`/`ss`) — round-trips through FromStr.
     pub fn name(self) -> &'static str {
         match self {
             Self::Tt => "tt",
@@ -64,16 +70,21 @@ impl Corner {
 pub struct MismatchSampler {
     rng: SplitMix64,
     seed: u64,
+    /// Local sigma(VTH) in volts (Pelgrom).
     pub sigma_vth: f64,
+    /// Local relative sigma(beta).
     pub sigma_beta: f64,
+    /// Global corner shift applied on top of the local mismatch.
     pub corner: Corner,
 }
 
 impl MismatchSampler {
+    /// Sampler at the TT corner with the given local sigmas.
     pub fn new(seed: u64, sigma_vth: f64, sigma_beta: f64) -> Self {
         Self { rng: SplitMix64::new(seed), seed, sigma_vth, sigma_beta, corner: Corner::Tt }
     }
 
+    /// Rebias to a process corner (builder style).
     pub fn with_corner(mut self, corner: Corner) -> Self {
         self.corner = corner;
         self

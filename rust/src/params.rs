@@ -159,7 +159,9 @@ impl CircuitCard {
 /// Complete model card (device + circuit).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Params {
+    /// Access-transistor device card.
     pub device: DeviceCard,
+    /// Bitline / timing / DAC circuit card.
     pub circuit: CircuitCard,
 }
 

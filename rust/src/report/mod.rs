@@ -9,15 +9,22 @@ use crate::mac::Variant;
 /// One simulated row of Table 1.
 #[derive(Debug, Clone)]
 pub struct Table1Row {
+    /// Design label (Table 1 row name).
     pub label: String,
+    /// Technology node (nm).
     pub tech_nm: u32,
+    /// Supply voltage (V).
     pub supply: f64,
+    /// MAC energy (pJ).
     pub energy_pj: f64,
+    /// Accuracy figure (STD.V — normalized output sigma).
     pub sigma: f64,
+    /// Operating frequency (MHz).
     pub freq_mhz: f64,
 }
 
 impl Table1Row {
+    /// Build a row from a variant's simulated cost and accuracy.
     pub fn new(variant: Variant, cost: &OpCost, sigma: f64, supply: f64) -> Self {
         Self {
             label: variant.name().to_string(),
@@ -95,6 +102,19 @@ pub fn mc_panel(title: &str, r: &CampaignReport) -> String {
     s
 }
 
+/// Format one CSV numeric cell: finite values as `{:.6e}`, non-finite as
+/// an **empty cell** — the same "value absent" sentinel the JSON writer
+/// uses (`crate::util::json` emits `null` for NaN/inf), so the two
+/// artifact formats always agree. A bare `NaN`/`inf` token would parse
+/// differently (or not at all) in downstream tools.
+pub fn csv_cell(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6e}")
+    } else {
+        String::new()
+    }
+}
+
 /// CSV emitter for figure series: header + rows of (x, series..., value).
 pub fn csv<H: AsRef<str>>(header: &[H], rows: &[Vec<f64>]) -> String {
     let mut s = String::new();
@@ -107,9 +127,52 @@ pub fn csv<H: AsRef<str>>(header: &[H], rows: &[Vec<f64>]) -> String {
         let _ = writeln!(
             s,
             "{}",
-            row.iter().map(|v| format!("{v:.6e}")).collect::<Vec<_>>().join(",")
+            row.iter().map(|v| csv_cell(*v)).collect::<Vec<_>>().join(",")
         );
     }
+    s
+}
+
+/// Render a finished design-space sweep as a markdown panel: the full
+/// grid with Pareto markers, then the front summary and artifact paths.
+pub fn sweep_panel(r: &crate::dse::SweepResult) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "## DSE sweep '{}' — {} points ({} computed, {} resumed)",
+        r.name,
+        r.points.len(),
+        r.computed,
+        r.resumed
+    );
+    let _ = writeln!(
+        s,
+        "| variant | vdd (V) | v_bulk (V) | bits | corner | energy (pJ) | sigma/FS | BER | front |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|");
+    for (p, &front) in r.points.iter().zip(&r.pareto) {
+        let _ = writeln!(
+            s,
+            "| {} | {:.2} | {:.2} | {} | {} | {:.3} | {:.4} | {:.4} | {} |",
+            p.point.variant.token(),
+            p.point.vdd,
+            p.point.v_bulk,
+            p.point.bits,
+            p.point.corner.name(),
+            p.energy_pj,
+            p.sigma_norm,
+            p.ber,
+            if front { "*" } else { "" }
+        );
+    }
+    let n_front = r.pareto.iter().filter(|&&f| f).count();
+    let _ = writeln!(s, "pareto front: {} / {} points", n_front, r.points.len());
+    let _ = writeln!(
+        s,
+        "artifacts: {} , {}",
+        r.csv_path.display(),
+        r.json_path.display()
+    );
     s
 }
 
@@ -141,5 +204,25 @@ mod tests {
         let mut lines = out.lines();
         assert_eq!(lines.next().unwrap(), "x,y");
         assert!(lines.next().unwrap().starts_with("1.0"));
+    }
+
+    #[test]
+    fn csv_non_finite_cells_are_empty() {
+        // agreement with the JSON writer: both emit a "value absent"
+        // sentinel for non-finite numbers, never a bare NaN/inf token
+        assert_eq!(csv_cell(f64::NAN), "");
+        assert_eq!(csv_cell(f64::INFINITY), "");
+        assert_eq!(csv_cell(f64::NEG_INFINITY), "");
+        assert_eq!(csv_cell(1.0), "1.000000e0");
+        let out = csv(&["x", "y"], &[vec![f64::NAN, 2.0], vec![3.0, f64::INFINITY]]);
+        let mut lines = out.lines();
+        assert_eq!(lines.next().unwrap(), "x,y");
+        assert_eq!(lines.next().unwrap(), ",2.000000e0");
+        assert_eq!(lines.next().unwrap(), "3.000000e0,");
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let json = crate::util::json::to_string_pretty(&crate::util::json::Value::Num(bad));
+            assert_eq!(json, "null");
+            assert_eq!(csv_cell(bad), "");
+        }
     }
 }

@@ -11,26 +11,37 @@ use crate::util::json::{self, Value};
 /// One AOT artifact entry.
 #[derive(Debug, Clone)]
 pub struct Artifact {
+    /// Lookup key (e.g. `mac_b256`).
     pub name: String,
+    /// HLO text file path, relative to the artifact directory.
     pub path: String,
+    /// Artifact family (`mac`, `trace`, `dot`).
     pub kind: String,
+    /// Compiled batch size.
     pub batch: usize,
+    /// Trace artifacts only: number of time points.
     pub n_points: Option<usize>,
 }
 
 /// `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Every artifact, in manifest order.
     pub artifacts: Vec<Artifact>,
+    /// Batch sizes of the compiled MAC artifacts.
     pub mac_batches: Vec<usize>,
+    /// Batch sizes of the waveform-trace artifacts.
     pub trace_batches: Vec<usize>,
+    /// Time points per waveform trace.
     pub trace_points: usize,
     /// Batch sizes of the multi-row dot-product artifacts (may be empty
     /// for manifests generated before the VMM extension).
     pub dot_batches: Vec<usize>,
     /// Row count R of the dot artifacts.
     pub dot_rows: usize,
+    /// Transient integration steps the kernels were compiled with.
     pub n_steps: u32,
+    /// The mirrored model card (`params.json`), when present.
     pub params: Option<Params>,
 }
 
@@ -105,6 +116,7 @@ impl Manifest {
         })
     }
 
+    /// Look up an artifact by its manifest name.
     pub fn find(&self, name: &str) -> Option<&Artifact> {
         self.artifacts.iter().find(|a| a.name == name)
     }

@@ -38,8 +38,9 @@ pub struct MacBatch {
     pub dac_mode: f32,
     /// WL pulse width at the sampling instant (s).
     pub t_sample: f32,
-    /// Mismatch deviates, row-major (batch, 4).
+    /// VTH mismatch deviates (V), row-major (batch, 4).
     pub dvth: Vec<f32>,
+    /// Relative beta mismatch deviates, row-major (batch, 4).
     pub dbeta: Vec<f32>,
 }
 
@@ -57,10 +58,12 @@ impl MacBatch {
         }
     }
 
+    /// Number of rows in the batch.
     pub fn len(&self) -> usize {
         self.b_code.len()
     }
 
+    /// True for a zero-row batch.
     pub fn is_empty(&self) -> bool {
         self.b_code.is_empty()
     }
@@ -97,6 +100,7 @@ pub struct MacExecutable {
 }
 
 impl MacExecutable {
+    /// The fixed batch size this executable was compiled for.
     pub fn batch(&self) -> usize {
         self.batch
     }
@@ -144,17 +148,22 @@ pub struct DotBatch {
     pub a_bits: Vec<f32>,
     /// Per-row DAC codes (batch, R).
     pub b_code: Vec<f32>,
+    /// Forward body bias (V).
     pub v_bulk: f32,
+    /// DAC mode flag: 0 = linear Eq. 7, 1 = sqrt Eq. 8.
     pub dac_mode: f32,
     /// WL pulse width (s). Convention: `t_sample / 4` keeps the all-rows
     /// full scale equal to the single-row MAC's (C_bl scales with R).
     pub t_sample: f32,
+    /// VTH mismatch deviates (V), row-major (batch, R, 4).
     pub dvth: Vec<f32>,
+    /// Relative beta mismatch deviates, row-major (batch, R, 4).
     pub dbeta: Vec<f32>,
     rows: usize,
 }
 
 impl DotBatch {
+    /// Batch with nominal devices, ready to be filled.
     pub fn nominal(batch: usize, rows: usize, v_bulk: f32, dac_mode: f32, t_sample: f32) -> Self {
         Self {
             a_bits: vec![0.0; batch * rows * 4],
@@ -168,14 +177,17 @@ impl DotBatch {
         }
     }
 
+    /// Number of batch elements (dot products).
     pub fn len(&self) -> usize {
         self.b_code.len() / self.rows
     }
 
+    /// True for a zero-element batch.
     pub fn is_empty(&self) -> bool {
         self.b_code.is_empty()
     }
 
+    /// Array rows per dot product.
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -200,7 +212,9 @@ pub struct DotBatchOut {
     pub v_dot: Vec<f32>,
     /// Sampled shared-bitline voltages (batch, 4).
     pub v_bl: Vec<f32>,
+    /// Raw dynamic bitline energy per element (J).
     pub energy: Vec<f32>,
+    /// Saturation-exit fault flags per element (0/1).
     pub fault: Vec<f32>,
 }
 
@@ -212,14 +226,17 @@ pub struct DotExecutable {
 }
 
 impl DotExecutable {
+    /// The fixed batch size this executable was compiled for.
     pub fn batch(&self) -> usize {
         self.batch
     }
 
+    /// The fixed row count this executable was compiled for.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Execute one batch. Shapes must match the compiled (batch, rows).
     pub fn run(&self, inputs: &DotBatch) -> Result<DotBatchOut> {
         let (b, r) = (self.batch, self.rows);
         anyhow::ensure!(
@@ -271,10 +288,12 @@ impl XlaRuntime {
         Ok(Self { client, artifact_dir: dir, manifest, cache: HashMap::new() })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

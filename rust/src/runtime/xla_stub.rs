@@ -20,14 +20,17 @@ fn unavailable() -> Error {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Always succeeds — manifests stay inspectable offline.
     pub fn cpu() -> Result<Self> {
         Ok(Self)
     }
 
+    /// Stub platform tag, distinguishable from a real PJRT CPU client.
     pub fn platform_name(&self) -> String {
         "cpu-stub (xla unavailable)".to_string()
     }
 
+    /// Always fails: there is no compiler behind the stub.
     pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         Err(unavailable())
     }
@@ -39,6 +42,7 @@ pub struct PjRtLoadedExecutable {
 }
 
 impl PjRtLoadedExecutable {
+    /// Always fails (unreachable in practice — compile never succeeds).
     pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(unavailable())
     }
@@ -48,6 +52,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Always fails (unreachable in practice).
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Err(unavailable())
     }
@@ -59,6 +64,7 @@ impl PjRtBuffer {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Always fails, naming the artifact that could not be loaded.
     pub fn from_text_file(path: &Path) -> Result<Self> {
         Err(anyhow!(
             "cannot load HLO text '{}': XLA/PJRT backend is not available in this offline build",
@@ -71,6 +77,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Wraps a (stub) proto; trivially succeeds.
     pub fn from_proto(_proto: &HloModuleProto) -> Self {
         Self
     }
@@ -80,26 +87,32 @@ impl XlaComputation {
 pub struct Literal;
 
 impl Literal {
+    /// Host-side literal construction trivially succeeds.
     pub fn vec1(_values: &[f32]) -> Literal {
         Literal
     }
 
+    /// Host-side literal construction trivially succeeds.
     pub fn scalar(_value: f32) -> Literal {
         Literal
     }
 
+    /// Host-side reshape trivially succeeds.
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
         Ok(Literal)
     }
 
+    /// Always fails: no device data exists to read back.
     pub fn to_vec<T>(&self) -> Result<Vec<T>> {
         Err(unavailable())
     }
 
+    /// Always fails: no device data exists to read back.
     pub fn to_tuple(self) -> Result<Vec<Literal>> {
         Err(unavailable())
     }
 
+    /// Always fails: no device data exists to read back.
     pub fn to_tuple1(self) -> Result<Literal> {
         Err(unavailable())
     }

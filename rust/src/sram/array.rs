@@ -6,7 +6,9 @@ use crate::params::DeviceCard;
 /// Operating mode (paper §III: "memory mode" vs "mathematical mode").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ArrayMode {
+    /// Plain SRAM read/write access.
     Memory,
+    /// Analog in-memory MAC compute.
     Mathematical,
 }
 
@@ -21,14 +23,17 @@ pub struct SramArray {
 }
 
 impl SramArray {
+    /// `n_rows` nominal words, starting in memory mode.
     pub fn new(card: DeviceCard, n_rows: usize) -> Self {
         Self { rows: vec![MacWord::new(card); n_rows], mode: ArrayMode::Memory, card }
     }
 
+    /// Number of word rows.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
 
+    /// Current operating mode.
     pub fn mode(&self) -> ArrayMode {
         self.mode
     }
@@ -77,8 +82,11 @@ impl SramArray {
 /// memory and mathematical operations in the same phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ModeError {
+    /// Digital write attempted in mathematical mode.
     WriteInMathMode,
+    /// Digital read attempted in mathematical mode.
     ReadInMathMode,
+    /// Compute access attempted in memory mode.
     ComputeInMemoryMode,
 }
 

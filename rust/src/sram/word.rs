@@ -51,6 +51,7 @@ impl MacWord {
         ]
     }
 
+    /// The four cells, MSB first.
     pub fn cells(&self) -> &[SramCell; 4] {
         &self.cells
     }

@@ -42,14 +42,18 @@ impl Args {
         Ok(out)
     }
 
+    /// True when `--name` was given (as a flag or with a value).
     pub fn flag(&self, name: &str) -> bool {
         self.opts.contains_key(name)
     }
 
+    /// Last value given for `--name`, if any.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.opts.get(name).and_then(|v| v.last()).map(String::as_str)
     }
 
+    /// Parse `--name`'s value into `T`, falling back to `default` when the
+    /// option is absent; parse failures name the offending option.
     pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
     where
         T::Err: std::fmt::Display,
@@ -62,10 +66,12 @@ impl Args {
         }
     }
 
+    /// The `idx`-th positional argument, if present.
     pub fn positional(&self, idx: usize) -> Option<&str> {
         self.pos.get(idx).map(String::as_str)
     }
 
+    /// All positional arguments, in order.
     pub fn positionals(&self) -> &[String] {
         &self.pos
     }

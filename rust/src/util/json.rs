@@ -10,15 +10,22 @@ use std::fmt;
 /// deterministic (matching Python's `sort_keys=True`).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (all numbers are f64, as in JavaScript).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Value>),
+    /// JSON object (sorted keys — deterministic serialization).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Object field access (`None` for non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -26,6 +33,7 @@ impl Value {
         }
     }
 
+    /// The number, if this is one.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -33,10 +41,12 @@ impl Value {
         }
     }
 
+    /// The number as an exact non-negative integer, if it is one.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
     }
 
+    /// The string, if this is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -44,6 +54,7 @@ impl Value {
         }
     }
 
+    /// The array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -51,6 +62,7 @@ impl Value {
         }
     }
 
+    /// The boolean, if this is one.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -67,7 +79,9 @@ impl Value {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset into the input where parsing failed.
     pub offset: usize,
 }
 
@@ -79,6 +93,7 @@ impl fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
+/// Parse a complete JSON document.
 pub fn parse(text: &str) -> Result<Value, ParseError> {
     let mut p = Parser { b: text.as_bytes(), i: 0 };
     p.ws();

@@ -12,35 +12,43 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Generator seeded for exact replay.
     pub fn new(seed: u64) -> Self {
         Self { rng: SplitMix64::new(seed) }
     }
 
+    /// Uniform integer in `[0, bound)`.
     pub fn u64(&mut self, bound: u64) -> u64 {
         assert!(bound > 0);
         self.rng.next_u64() % bound
     }
 
+    /// Uniform integer in `[lo, hi]` (inclusive).
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         lo + self.u64((hi - lo + 1) as u64) as usize
     }
 
+    /// Uniform byte in `[lo, hi]` (inclusive).
     pub fn u8_in(&mut self, lo: u8, hi: u8) -> u8 {
         lo + self.u64(u64::from(hi - lo + 1)) as u8
     }
 
+    /// Uniform float in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         lo + self.rng.next_f64() * (hi - lo)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
 
+    /// Normal deviate with the given sigma.
     pub fn normal(&mut self, sigma: f64) -> f64 {
         self.rng.next_normal() * sigma
     }
 
+    /// Uniformly pick one element of a non-empty slice.
     pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.u64(items.len() as u64) as usize]
     }

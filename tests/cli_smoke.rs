@@ -103,16 +103,63 @@ fn info_smokes_pjrt() {
 
 #[test]
 fn checked_in_configs_parse() {
-    // keep the shipped configs/ directory loadable at all times
+    // keep the shipped configs/ directory loadable at all times; dse*
+    // files are sweep specs, the rest are experiment files
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
     let mut n = 0;
     for entry in std::fs::read_dir(root).unwrap() {
         let path = entry.unwrap().path();
         if path.extension().is_some_and(|e| e == "toml") {
-            smart_insram::config::ExperimentConfig::load(&path)
-                .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            let is_sweep = path
+                .file_name()
+                .and_then(|s| s.to_str())
+                .is_some_and(|s| s.starts_with("dse"));
+            if is_sweep {
+                smart_insram::dse::SweepSpec::load(&path)
+                    .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            } else {
+                smart_insram::config::ExperimentConfig::load(&path)
+                    .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            }
             n += 1;
         }
     }
-    assert!(n >= 3, "expected the shipped configs, found {n}");
+    assert!(n >= 4, "expected the shipped configs, found {n}");
+}
+
+#[test]
+fn sweep_cli_is_byte_deterministic() {
+    // THE acceptance criterion: `smart sweep configs/dse.toml --shards 4
+    // --threads 2` and `--shards 1 --threads 1` produce byte-identical
+    // CSV/JSON artifacts.
+    let cfg = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/dse.toml");
+    let run = |tag: &str, shards: &str, threads: &str| {
+        let out_dir =
+            std::env::temp_dir().join(format!("smart_cli_sweep_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&out_dir);
+        let out = smart()
+            .args([
+                "sweep",
+                cfg.to_str().unwrap(),
+                "--shards",
+                shards,
+                "--threads",
+                threads,
+                "--out",
+                out_dir.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        assert!(text.contains("pareto front"), "{text}");
+        let csv = std::fs::read_to_string(out_dir.join("sweep.csv")).unwrap();
+        let json = std::fs::read_to_string(out_dir.join("sweep.json")).unwrap();
+        (csv, json)
+    };
+    let (csv_a, json_a) = run("a", "4", "2");
+    let (csv_b, json_b) = run("b", "1", "1");
+    assert_eq!(csv_a, csv_b, "CSV artifacts differ across --shards/--threads");
+    assert_eq!(json_a, json_b, "JSON artifacts differ across --shards/--threads");
+    assert!(csv_a.lines().count() > 1);
 }

@@ -1,0 +1,161 @@
+//! DSE subsystem integration: grid sweeps must be byte-deterministic for
+//! any `--shards`/`--threads` choice (the campaign layer's contract
+//! carried through to the artifacts — acceptance: `smart sweep
+//! configs/dse.toml --shards 4 --threads 2` matches `--shards 1
+//! --threads 1` byte for byte), and `--resume` must reuse checkpoint
+//! rows without changing a single output byte.
+
+use std::path::PathBuf;
+
+use smart_insram::dse::{pareto_flags, run_sweep, SweepOptions, SweepSpec};
+
+/// A grid small enough for CI but wide enough to cross shard boundaries:
+/// 2 variants x 2 v_bulk = 4 points, 16 operands x 8 MC each.
+const SPEC: &str = r#"
+name = "dse-test"
+seed = 7
+n_mc = 8
+[grid]
+variant = ["smart", "aid"]
+v_bulk = [0.0, 0.6]
+bits = [2]
+corner = ["tt"]
+"#;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("smart_dse_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn read(p: &PathBuf) -> String {
+    std::fs::read_to_string(p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+#[test]
+fn shard_and_thread_counts_never_change_artifacts() {
+    let spec = SweepSpec::parse(SPEC).unwrap();
+    let base_dir = tmp_dir("base");
+    let base = run_sweep(
+        &spec,
+        &SweepOptions { shards: 1, threads: 1, resume: false, out_dir: base_dir },
+    )
+    .unwrap();
+    assert_eq!(base.points.len(), 4);
+    assert_eq!(base.computed, 4);
+    assert_eq!(base.resumed, 0);
+    let (csv, json) = (read(&base.csv_path), read(&base.json_path));
+    for (shards, threads) in [(4usize, 2usize), (7, 3), (0, 0)] {
+        let dir = tmp_dir(&format!("s{shards}t{threads}"));
+        let r = run_sweep(
+            &spec,
+            &SweepOptions { shards, threads, resume: false, out_dir: dir },
+        )
+        .unwrap();
+        assert_eq!(read(&r.csv_path), csv, "CSV differs at shards={shards} threads={threads}");
+        assert_eq!(read(&r.json_path), json, "JSON differs at shards={shards} threads={threads}");
+    }
+}
+
+#[test]
+fn sweep_shape_matches_the_paper() {
+    // smart (v_bulk 0.6) must beat its own unbiased point (== AID), and
+    // the two baseline rows (smart@0, aid@0) must agree exactly.
+    let spec = SweepSpec::parse(SPEC).unwrap();
+    let r = run_sweep(
+        &spec,
+        &SweepOptions { out_dir: tmp_dir("shape"), ..Default::default() },
+    )
+    .unwrap();
+    // canonical order: (smart, 0.0), (smart, 0.6), (aid, 0.0), (aid, 0.6)
+    let sigma: Vec<f64> = r.points.iter().map(|p| p.sigma_norm).collect();
+    assert!(sigma[1] < sigma[0], "body bias must shrink sigma: {sigma:?}");
+    assert_eq!(
+        sigma[0].to_bits(),
+        sigma[2].to_bits(),
+        "smart@v_bulk=0 must equal the AID baseline"
+    );
+    // aid ignores the v_bulk axis entirely
+    assert_eq!(sigma[2].to_bits(), sigma[3].to_bits());
+    assert_eq!(r.points.iter().map(|p| p.rows).sum::<u64>(), 4 * 16 * 8);
+    // the front is recomputed from the artifact objectives
+    let objectives: Vec<(f64, f64)> =
+        r.points.iter().map(|p| (p.energy_pj, p.sigma_norm)).collect();
+    assert_eq!(pareto_flags(&objectives), r.pareto);
+    assert!(!r.front().is_empty());
+}
+
+#[test]
+fn resume_reuses_rows_and_preserves_bytes() {
+    let spec = SweepSpec::parse(SPEC).unwrap();
+    let scratch = run_sweep(
+        &spec,
+        &SweepOptions { out_dir: tmp_dir("scratch"), ..Default::default() },
+    )
+    .unwrap();
+    let (csv, json) = (read(&scratch.csv_path), read(&scratch.json_path));
+
+    // simulate an interrupted sweep: keep the header + first two rows
+    let resume_dir = tmp_dir("resume");
+    std::fs::create_dir_all(&resume_dir).unwrap();
+    let partial: String = csv.lines().take(3).map(|l| format!("{l}\n")).collect();
+    std::fs::write(resume_dir.join("sweep.csv"), partial).unwrap();
+
+    let resumed = run_sweep(
+        &spec,
+        &SweepOptions { resume: true, out_dir: resume_dir, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(resumed.resumed, 2, "two checkpoint rows must be reused");
+    assert_eq!(resumed.computed, 2);
+    assert_eq!(read(&resumed.csv_path), csv, "resume changed the CSV bytes");
+    assert_eq!(read(&resumed.json_path), json, "resume changed the JSON bytes");
+
+    // resume with no checkpoint at all: a plain scratch run
+    let cold = run_sweep(
+        &spec,
+        &SweepOptions { resume: true, out_dir: tmp_dir("cold"), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(cold.computed, 4);
+    assert_eq!(read(&cold.csv_path), csv);
+}
+
+#[test]
+fn checkpoint_from_a_different_spec_is_ignored() {
+    // a checkpoint keyed with a different seed must not be reused
+    let spec = SweepSpec::parse(SPEC).unwrap();
+    let other = SweepSpec::parse(&SPEC.replace("seed = 7", "seed = 8")).unwrap();
+    let dir = tmp_dir("cross");
+    run_sweep(&other, &SweepOptions { out_dir: dir.clone(), ..Default::default() }).unwrap();
+    let r = run_sweep(
+        &spec,
+        &SweepOptions { resume: true, out_dir: dir, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(r.resumed, 0);
+    assert_eq!(r.computed, 4);
+
+    // ... and neither must a checkpoint computed under different
+    // [params.*] overrides (the card fingerprint differs)
+    let edited =
+        SweepSpec::parse(&format!("{SPEC}\n[params.circuit]\nsigma_vth = 0.05\n")).unwrap();
+    let dir = tmp_dir("cross_params");
+    run_sweep(&spec, &SweepOptions { out_dir: dir.clone(), ..Default::default() }).unwrap();
+    let r = run_sweep(
+        &edited,
+        &SweepOptions { resume: true, out_dir: dir, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(r.resumed, 0, "edited model card must invalidate the checkpoint");
+    assert_eq!(r.computed, 4);
+}
+
+#[test]
+fn shipped_dse_config_loads() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/dse.toml");
+    let spec = SweepSpec::load(&path).unwrap();
+    assert_eq!(spec.name, "dse-demo");
+    assert!(spec.grid.len() >= 8, "demo grid should cover several points");
+    spec.validate().unwrap();
+}
