@@ -30,6 +30,7 @@ fn main() {
         let opts = SweepOptions {
             shards,
             threads,
+            block: 0,
             resume: false,
             out_dir: out_dir.clone(),
         };
@@ -45,7 +46,7 @@ fn main() {
 
     // resumed re-run: every row comes from the checkpoint (no simulation)
     let opts =
-        SweepOptions { shards: 0, threads: 0, resume: true, out_dir: out_dir.clone() };
+        SweepOptions { shards: 0, threads: 0, block: 0, resume: true, out_dir: out_dir.clone() };
     r.bench("dse/sweep (fully resumed)", || run_sweep(&spec, &opts).expect("resume"));
 
     let result = run_sweep(&spec, &opts).expect("sweep");

@@ -5,7 +5,7 @@
 //! Run: `cargo bench --offline --bench fig3_body_bias`
 
 use smart_insram::bench::{eng, Runner};
-use smart_insram::device::{iv_sweep, Mosfet};
+use smart_insram::device::{iv_sweep, turn_on_v_wl, Mosfet};
 use smart_insram::params::Params;
 
 fn main() {
@@ -26,10 +26,7 @@ fn main() {
 
     println!("\nturn-on voltage (I_D > 10 uA) per body bias:");
     let turn_on = |vb: f64| {
-        (0..=4000)
-            .map(|k| k as f64 * 0.00025)
-            .find(|&v| dev.drain_current(v, card.vdd, vb) > 10e-6)
-            .unwrap()
+        turn_on_v_wl(&iv_sweep(card, &[vb], 4001), 10e-6).expect("sweep must cross 10 uA")
     };
     for &vb in &bulks {
         println!(

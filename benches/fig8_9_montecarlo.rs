@@ -62,6 +62,26 @@ fn main() {
     let r = Runner::quick();
     let s = r.bench("fig8_9/xla cold (compile + run)", || run(Variant::Smart, 1000));
     println!("  {:.0} MAC evals/s", s.per_second(1000));
+    {
+        // native kernels head to head (§9): the default campaign path is
+        // the lockstep block kernel; the scalar oracle is the baseline
+        use smart_insram::coordinator::run_native_campaign_with;
+        use smart_insram::mac::{BlockKernel, ScalarKernel};
+        let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+        spec.n_mc = 1000;
+        let s = r.bench("fig8_9/native scalar oracle", || {
+            run_native_campaign_with(&params, &spec, &ScalarKernel).unwrap()
+        });
+        let scalar_ips = s.per_second(1000);
+        let s = r.bench("fig8_9/native block kernel", || {
+            run_native_campaign_with(&params, &spec, &BlockKernel).unwrap()
+        });
+        let block_ips = s.per_second(1000);
+        println!(
+            "  scalar {scalar_ips:.0} -> block {block_ips:.0} MAC evals/s ({:.2}x)",
+            block_ips / scalar_ips
+        );
+    }
     if have_artifacts {
         // §Perf: persistent CampaignEngine amortizes the PJRT compile —
         // the dominant per-campaign cost on this host.

@@ -1,0 +1,81 @@
+//! Bench: scalar oracle vs lockstep block kernel, items/sec (DESIGN.md §9).
+//!
+//! Measures the native campaign path both ways at several block sizes —
+//! the number that gates the block-execution engine is the end-to-end
+//! fig8-campaign speedup (target >= 2x). Pass `--smoke` for a single
+//! low-cost sample (the CI configuration); `smart bench --json` records
+//! the same measurement as `BENCH_native.json`.
+//!
+//! Run: `cargo bench --offline --bench mac_block`
+
+use smart_insram::bench::Runner;
+use smart_insram::coordinator::{run_native_campaign_with, CampaignSpec};
+use smart_insram::mac::{BlockKernel, NativeMacEngine, ScalarKernel, SimKernel, TrialBlock, Variant};
+use smart_insram::montecarlo::MismatchSampler;
+use smart_insram::params::Params;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let params = Params::default();
+    let n_mc: u32 = if smoke { 64 } else { 1000 };
+    let runner = if smoke { Runner { warmup: 0, samples: 1 } } else { Runner::default() };
+
+    println!("=== kernel microbench — one reused 256-lane block ===");
+    let engine = NativeMacEngine::new(params, Variant::Smart.config(&params));
+    let sampler =
+        MismatchSampler::new(7, params.circuit.sigma_vth, params.circuit.sigma_beta);
+    let lanes = 256usize;
+    let mut block = TrialBlock::with_capacity(lanes);
+    let refill = |block: &mut TrialBlock| {
+        block.reset(lanes);
+        let (dvth, dbeta) = block.deviates_mut();
+        sampler.fill_block(0, dvth, dbeta);
+        for i in 0..lanes {
+            block.set_operands(i, 15, 15);
+        }
+    };
+    refill(&mut block);
+    let s = runner.bench("mac_block/scalar kernel (256 lanes)", || {
+        ScalarKernel.simulate(&engine, &mut block)
+    });
+    let scalar_lane_ips = s.per_second(lanes as u64);
+    refill(&mut block);
+    let s = runner.bench("mac_block/block kernel  (256 lanes)", || {
+        BlockKernel.simulate(&engine, &mut block)
+    });
+    let block_lane_ips = s.per_second(lanes as u64);
+    println!(
+        "  scalar {scalar_lane_ips:.0} lanes/s, block {block_lane_ips:.0} lanes/s \
+         ({:.2}x)\n",
+        block_lane_ips / scalar_lane_ips
+    );
+
+    println!("=== end-to-end fig8 campaign (n_mc = {n_mc}) ===");
+    let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+    spec.n_mc = n_mc;
+    spec.workers = 1; // single thread: isolate the kernel, not the pool
+    let campaign = |label: &str, kernel: &dyn SimKernel, block: usize| {
+        let mut spec = spec.clone();
+        spec.block = block;
+        let s = runner.bench(label, || {
+            run_native_campaign_with(&params, &spec, kernel).expect("campaign")
+        });
+        s.per_second(u64::from(n_mc))
+    };
+    let scalar_ips = campaign("mac_block/campaign scalar oracle", &ScalarKernel, 0);
+    let block_ips = campaign("mac_block/campaign block kernel", &BlockKernel, 0);
+    for b in [64usize, 1024] {
+        campaign(&format!("mac_block/campaign block kernel (block = {b})"), &BlockKernel, b);
+    }
+    let speedup = block_ips / scalar_ips;
+    println!(
+        "  campaign: scalar {scalar_ips:.0} items/s -> block {block_ips:.0} items/s \
+         ({speedup:.2}x)"
+    );
+    if !smoke {
+        assert!(
+            speedup > 1.0,
+            "block kernel slower than the scalar oracle ({speedup:.2}x)"
+        );
+    }
+}

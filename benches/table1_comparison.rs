@@ -33,6 +33,7 @@ fn main() {
             workers: 0,
             batch: 0,
             shards: 0,
+            block: 0,
         };
         run_campaign(&params, &spec, backend, Some(dir.clone())).expect("campaign")
     };
@@ -91,6 +92,7 @@ fn main() {
                 workers: 1,
                 batch: 256,
                 shards: 0,
+                block: 0,
             };
             let s = r.bench(&format!("table1/{} (warm engine)", v.name()), || {
                 engine.run(&params, &spec).unwrap()

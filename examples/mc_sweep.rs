@@ -76,6 +76,7 @@ fn main() -> Result<()> {
             workers: 1,
             batch: 256,
             shards: 0,
+            block: 0,
         };
         let r = engine.run(&params, &spec)?;
         println!(

@@ -43,5 +43,30 @@ fn main() {
         outs.push(smart_insram::coordinator::run_native_batch(&e, b));
     }
     println!("native exec: {:.2} ms", t0.elapsed().as_secs_f64()*1e3);
+
+    // block engine decomposition: the same 1000 items through one reusable
+    // 256-lane SoA block (DESIGN.md §9)
+    use smart_insram::mac::{BlockKernel, SimKernel, TrialBlock};
+    let block_sampler = MismatchSampler::new(2022, p.circuit.sigma_vth, p.circuit.sigma_beta);
+    let mut blk = TrialBlock::with_capacity(256);
+    let t0 = Instant::now();
+    let mut n_blocks = 0u32;
+    let mut cursor = 0u64;
+    while cursor < 1000 {
+        let n = 256usize.min((1000 - cursor) as usize);
+        blk.reset(n);
+        let (dvth, dbeta) = blk.deviates_mut();
+        block_sampler.fill_block(cursor, dvth, dbeta);
+        for i in 0..n {
+            blk.set_operands(i, 15, 15);
+        }
+        BlockKernel.simulate(&e, &mut blk);
+        n_blocks += 1;
+        cursor += n as u64;
+    }
+    println!(
+        "block exec:  {:.2} ms for {n_blocks} blocks (reused SoA buffers)",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
     let _ = (outs, spec);
 }

@@ -3,7 +3,7 @@
 use super::integrator::{integrate_fixed, Method};
 use super::waveform::Waveform;
 use crate::device::Mosfet;
-use crate::params::Params;
+use crate::params::{DeviceCard, Params};
 
 /// Bias/state inputs for one cell's discharge transient.
 #[derive(Debug, Clone, Copy)]
@@ -104,6 +104,146 @@ pub fn discharge_word(
     v
 }
 
+/// Integrate an arbitrary number of independent cell lanes in lockstep —
+/// the block-execution hot path (DESIGN.md §9).
+///
+/// Inputs are per-lane time-invariant device quantities, hoisted once by
+/// the caller: overdrive `vov[k]`, effective beta `beta[k]` (as
+/// [`Mosfet::beta`] returns it) and the conduction gate `gate[k]` (1 for a
+/// stored 1, `k_leak` for a stored 0). Lanes in strong inversion
+/// (`vov >= 3*vt`) are stepped together — steps outer, lanes inner, no
+/// branches in the inner loop beyond the saturation/triode select — so
+/// the compiler can auto-vectorize across lanes; when every lane is
+/// strong (the campaign-dominant case) integration happens in place on
+/// the caller's buffers and allocates nothing, otherwise the strong
+/// lanes are packed densely first. The exp-bearing weak/cutoff lanes
+/// integrate one lane at a time through a verbatim replica of
+/// [`Mosfet::drain_current_vov`] below the strong-inversion cut.
+///
+/// Determinism contract: every lane's recurrence reads only that lane's
+/// state, and the per-step expression tree is grouped exactly as in
+/// [`discharge`] / [`discharge_word`], so each lane's endpoint is
+/// bit-identical to the scalar oracle no matter how lanes are packed or
+/// how many share a block (property-tested in `tests/block_kernel.rs`).
+pub fn discharge_block(
+    p: &Params,
+    vov: &[f64],
+    beta: &[f64],
+    gate: &[f64],
+    t_total: f64,
+    n_steps: u32,
+    v_out: &mut [f64],
+) {
+    let n = vov.len();
+    assert!(
+        beta.len() == n && gate.len() == n && v_out.len() == n,
+        "lane buffers must be the same length"
+    );
+    let card = &p.device;
+    let vt = card.vt_thermal;
+    let lam = card.lam;
+    let dt_c = (t_total / n_steps as f64) / p.circuit.c_blb;
+
+    // Fast path: every lane in strong inversion (the campaign-dominant
+    // case — all DAC codes well above threshold). Integrates in place on
+    // the caller's buffers, so the hot path allocates nothing. The inline
+    // product chain groups exactly like `discharge`'s hoisted
+    // `half_bv2 * clm`, so endpoints stay bit-identical.
+    if vov.iter().all(|&x| x >= 3.0 * vt) {
+        v_out.fill(card.vdd);
+        for _ in 0..n_steps {
+            for k in 0..n {
+                let v = v_out[k];
+                let clm = 1.0 + lam * v;
+                let i = if v >= vov[k] {
+                    0.5 * beta[k] * vov[k] * vov[k] * clm
+                } else {
+                    beta[k] * (vov[k] - 0.5 * v) * v * clm
+                };
+                v_out[k] = (v - i.max(0.0) * gate[k] * dt_c).max(0.0);
+            }
+        }
+        return;
+    }
+
+    // Mixed block: weak/cutoff lanes integrate per lane with the exp
+    // model; the remaining strong lanes are packed densely for the
+    // lockstep loop (packing allocates, but only on mixed blocks —
+    // low DAC codes — where the exp lanes dominate the cost anyway).
+    let mut idx: Vec<usize> = Vec::with_capacity(n);
+    for k in 0..n {
+        if vov[k] >= 3.0 * vt {
+            idx.push(k);
+        } else {
+            v_out[k] = discharge_lane_weak(card, vov[k], beta[k], gate[k], dt_c, n_steps);
+        }
+    }
+    let m = idx.len();
+    let mut pv = vec![card.vdd; m];
+    let mut pvov = Vec::with_capacity(m);
+    let mut pbeta = Vec::with_capacity(m);
+    let mut pgate = Vec::with_capacity(m);
+    let mut phalf = Vec::with_capacity(m);
+    for &k in &idx {
+        pvov.push(vov[k]);
+        pbeta.push(beta[k]);
+        pgate.push(gate[k]);
+        // same grouping as `discharge`'s hoisted half_bv2
+        phalf.push(0.5 * beta[k] * vov[k] * vov[k]);
+    }
+    for _ in 0..n_steps {
+        for j in 0..m {
+            let v = pv[j];
+            let clm = 1.0 + lam * v;
+            let i = if v >= pvov[j] {
+                phalf[j] * clm
+            } else {
+                pbeta[j] * (pvov[j] - 0.5 * v) * v * clm
+            };
+            pv[j] = (v - i.max(0.0) * pgate[j] * dt_c).max(0.0);
+        }
+    }
+    for (j, &k) in idx.iter().enumerate() {
+        v_out[k] = pv[j];
+    }
+}
+
+/// One weak/cutoff lane: the Euler recurrence of [`discharge`]'s
+/// non-hoisted branch, with the current expression replicated term for
+/// term from [`Mosfet::drain_current_vov`] below the `3*vt` cut (the
+/// hoisted `beta` equals `Mosfet::beta()` exactly, so the endpoints are
+/// bit-identical).
+#[inline]
+fn discharge_lane_weak(
+    card: &DeviceCard,
+    vov: f64,
+    beta: f64,
+    gate: f64,
+    dt_c: f64,
+    n_steps: u32,
+) -> f64 {
+    let vt = card.vt_thermal;
+    let lam = card.lam;
+    let mut v = card.vdd;
+    for _ in 0..n_steps {
+        let i_sub = beta * vt * vt * (vov.min(0.0) / (card.n_sub * vt)).exp()
+            * (1.0 - (-v.max(0.0) / vt).exp());
+        let i = if vov > 0.0 {
+            let clm = 1.0 + lam * v;
+            let i_on = if v >= vov {
+                0.5 * beta * vov * vov * clm
+            } else {
+                beta * (vov - 0.5 * v) * v * clm
+            };
+            i_on.max(0.0).max(i_sub)
+        } else {
+            i_sub
+        };
+        v = (v - i * gate * dt_c).max(0.0);
+    }
+    v
+}
+
 /// Same transient, but record the waveform at every `stride` steps
 /// (Fig. 5/6). The final sample equals [`discharge`]'s return value.
 pub fn discharge_trace(
@@ -186,6 +326,81 @@ mod tests {
         for w in wf.values().windows(2) {
             assert!(w[1] <= w[0] + 1e-15);
         }
+    }
+
+    #[test]
+    fn block_matches_scalar_lane_for_lane() {
+        // Mixed strong/weak/cutoff/leakage lanes in one block: every lane's
+        // endpoint must be bit-identical to the scalar `discharge` path.
+        let p = Params::default();
+        let card = p.device;
+        let cases: [(f64, bool, f64, f64, f64); 6] = [
+            // (v_wl, bit, v_bulk, dvth, dbeta)
+            (0.70, true, 0.6, 0.0, 0.0),    // strong
+            (0.70, true, 0.0, 2e-3, 0.01),  // strong, mismatched
+            (0.33, true, 0.0, 0.0, 0.0),    // weak inversion
+            (0.10, true, 0.0, -1e-3, 0.0),  // cutoff
+            (0.70, false, 0.6, 0.0, -0.02), // leakage gate
+            (0.00, true, 0.0, 0.0, 0.0),    // grounded WL
+        ];
+        let mut vov = Vec::new();
+        let mut beta = Vec::new();
+        let mut gate = Vec::new();
+        let mut want = Vec::new();
+        for &(v_wl, bit, v_bulk, dvth, dbeta) in &cases {
+            let dev = Mosfet::with_mismatch(card, dvth, dbeta);
+            vov.push(v_wl - dev.vth(v_bulk));
+            beta.push(dev.beta());
+            gate.push(if bit { 1.0 } else { dev.card.k_leak });
+            want.push(discharge(
+                &p,
+                &dev,
+                &inputs(v_wl, bit, v_bulk),
+                p.circuit.t_sample,
+                p.circuit.n_steps,
+            ));
+        }
+        let mut got = vec![0.0; cases.len()];
+        discharge_block(
+            &p,
+            &vov,
+            &beta,
+            &gate,
+            p.circuit.t_sample,
+            p.circuit.n_steps,
+            &mut got,
+        );
+        for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "lane {k}: {g} != {w}");
+        }
+    }
+
+    #[test]
+    fn block_is_lane_order_free() {
+        // permuting lanes permutes outputs and nothing else
+        let p = Params::default();
+        let card = p.device;
+        let dev = Mosfet::nominal(card);
+        let v_wls = [0.7, 0.55, 0.33, 0.62];
+        let mk = |order: &[usize]| {
+            let vov: Vec<f64> = order.iter().map(|&i| v_wls[i] - dev.vth(0.0)).collect();
+            let beta = vec![dev.beta(); 4];
+            let gate = vec![1.0; 4];
+            let mut out = vec![0.0; 4];
+            discharge_block(&p, &vov, &beta, &gate, p.circuit.t_sample, 128, &mut out);
+            out
+        };
+        let fwd = mk(&[0, 1, 2, 3]);
+        let rev = mk(&[3, 2, 1, 0]);
+        for k in 0..4 {
+            assert_eq!(fwd[k].to_bits(), rev[3 - k].to_bits(), "lane {k}");
+        }
+    }
+
+    #[test]
+    fn block_handles_empty_lane_set() {
+        let p = Params::default();
+        discharge_block(&p, &[], &[], &[], p.circuit.t_sample, 16, &mut []);
     }
 
     #[test]

@@ -49,25 +49,37 @@ impl Aggregator {
     /// Fold executed rows by tag — the batch inputs themselves are never
     /// needed here, so sharded runners can drop them before buffering.
     pub fn push_rows(&mut self, tags: &[RowTag], out: &MacBatchOut) {
-        assert_eq!(tags.len(), out.v_mult.len(), "batch/output shape mismatch");
+        self.fold(tags, &out.v_mult, &out.energy, &out.fault);
+    }
+
+    /// Fold one executed trial block (the native block path's output SoA,
+    /// same `f32` precision as the batch outputs — either path folds
+    /// identical numbers in identical order, DESIGN.md §9).
+    pub fn push_block(&mut self, tags: &[RowTag], out: &crate::mac::MacResultBlock) {
+        self.fold(tags, &out.v_mult, &out.energy, &out.fault);
+    }
+
+    /// The shared fold core behind [`Self::push_rows`] / [`Self::push_block`].
+    fn fold(&mut self, tags: &[RowTag], vm: &[f32], energy: &[f32], fault: &[f32]) {
+        assert_eq!(tags.len(), vm.len(), "batch/output shape mismatch");
         self.batches_seen += 1;
         for (row, tag) in tags.iter().enumerate() {
             let &RowTag::Item { a, b, .. } = tag else { continue };
-            let v_mult = f64::from(out.v_mult[row]);
+            let v_mult = f64::from(vm[row]);
             let v_ideal = self.ideal.v_ideal(a, b);
-            let fault = out.fault[row] > 0.5;
+            let is_fault = fault[row] > 0.5;
             // BER at the architecture's 4-bit output resolution (§III: the
             // widened margin buys BER reduction at this grid).
             let code_err = crate::mac::reconstruct4(&self.ideal, v_mult)
                 != crate::mac::exact_code4(a, b);
-            self.global.push(v_mult, v_ideal, self.ideal.full_scale, code_err, fault);
+            self.global.push(v_mult, v_ideal, self.ideal.full_scale, code_err, is_fault);
             self.per_op
                 .entry((a, b))
                 .or_insert_with(ErrorAccumulator::new)
-                .push(v_mult, v_ideal, self.ideal.full_scale, code_err, fault);
+                .push(v_mult, v_ideal, self.ideal.full_scale, code_err, is_fault);
             self.vmult_hist.push(v_mult);
             self.vmult_samples.push(v_mult);
-            self.energy.push(f64::from(out.energy[row]));
+            self.energy.push(f64::from(energy[row]));
             self.rows_seen += 1;
         }
     }

@@ -1,14 +1,19 @@
-//! Campaign orchestration: spec -> shards -> batches -> pool -> report.
+//! Campaign orchestration: spec -> shards -> blocks -> kernel -> report.
 //!
 //! The native backend runs as a sharded parallel campaign: the item space
 //! is split into contiguous shards ([`super::pool::shard_range`]), worker
 //! threads claim shards dynamically ([`super::pool::execute_sharded`]),
+//! each shard streams its items through one reusable SoA
+//! [`crate::mac::TrialBlock`] executed by a [`crate::mac::SimKernel`]
+//! (the lockstep [`crate::mac::BlockKernel`] by default, DESIGN.md §9),
 //! and results are folded strictly in global item order. Because mismatch
 //! deviates are a pure function of the item index
-//! ([`crate::montecarlo::MismatchSampler::sample_item`]) and padding rows
-//! never reach the aggregator, the aggregate statistics are bit-identical
-//! for ANY shard count and ANY thread count — `--shards`/`--threads` are
-//! pure performance knobs.
+//! ([`crate::montecarlo::MismatchSampler::sample_item`]) and padding
+//! lanes never reach the aggregator, the aggregate statistics are
+//! bit-identical for ANY shard count, thread count, block size, or
+//! kernel — `--shards`/`--threads`/`--block` are pure performance knobs.
+//! The XLA path keeps the fixed-shape [`Batcher`] stream the AOT
+//! artifacts were compiled for.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -19,7 +24,7 @@ use super::aggregate::{Aggregator, CampaignReport};
 use super::batcher::{BatchCfg, Batcher, RowTag};
 use super::pool::{execute_sharded, shard_range, WorkerPool};
 use super::spec::CampaignSpec;
-use crate::mac::NativeMacEngine;
+use crate::mac::{BlockKernel, MacResultBlock, NativeMacEngine, SimKernel, TrialBlock};
 use crate::montecarlo::MismatchSampler;
 use crate::params::Params;
 use crate::runtime::{MacBatchOut, XlaRuntime};
@@ -82,9 +87,28 @@ pub fn run_campaign(
     }
 }
 
-/// Sharded native campaign: split the item space, execute shards on a
-/// dynamic thread pool, fold results in canonical item order.
+/// Sharded native campaign on the default data-parallel kernel.
 fn run_native_campaign(params: &Params, spec: &CampaignSpec) -> Result<CampaignReport> {
+    run_native_campaign_with(params, spec, &BlockKernel)
+}
+
+/// Sharded native campaign over an explicit simulation kernel: split the
+/// item space into contiguous shards, stream each shard through ONE
+/// reusable [`TrialBlock`] (refilled in place per chunk — zero per-item
+/// allocation), execute blocks on the given [`SimKernel`], and fold the
+/// outputs in canonical item order.
+///
+/// The kernel is a pure performance knob: [`BlockKernel`] (the default
+/// behind [`Backend::Native`]) and the [`crate::mac::ScalarKernel`]
+/// oracle produce bit-identical aggregates, as do all `--shards` /
+/// `--threads` / `--block` choices (DESIGN.md §9; property-tested in
+/// `tests/block_kernel.rs`).
+pub fn run_native_campaign_with(
+    params: &Params,
+    spec: &CampaignSpec,
+    kernel: &dyn SimKernel,
+) -> Result<CampaignReport> {
+    spec.validate().map_err(|e| anyhow::anyhow!(e))?;
     let cfg = spec.variant.config(params);
     let engine = NativeMacEngine::new(*params, cfg);
     let full_scale = engine.full_scale();
@@ -94,49 +118,65 @@ fn run_native_campaign(params: &Params, spec: &CampaignSpec) -> Result<CampaignR
             .with_corner(spec.corner);
 
     let total = spec.total_items(operands.len());
-    let batch = if spec.batch > 0 { spec.batch } else { 256 };
+    // Chunk size: `--block`, else the legacy `--batch` knob, else 256
+    // lanes — enough for the lockstep loop to keep SIMD lanes busy.
+    let block_len = if spec.block > 0 {
+        spec.block
+    } else if spec.batch > 0 {
+        spec.batch
+    } else {
+        256
+    };
     let threads = if spec.workers > 0 {
         spec.workers
     } else {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     };
     // Auto-sharding: a few shards per thread for load balance, never more
-    // than one shard per batch of work. Any choice yields identical
+    // than one shard per block of work. Any choice yields identical
     // aggregates; this only tunes scheduling granularity.
-    let n_batches = total.div_ceil(batch as u64).max(1) as usize;
-    let n_shards = if spec.shards > 0 { spec.shards } else { n_batches.min(threads * 4) };
+    let n_blocks = total.div_ceil(block_len as u64).max(1) as usize;
+    let n_shards = if spec.shards > 0 { spec.shards } else { n_blocks.min(threads * 4) };
 
     let t0 = Instant::now();
     let mut agg = Aggregator::new(full_scale, 64);
-    let batch_cfg = BatchCfg::from(&cfg);
-    // Shard results buffer only (tags, outputs) — the batch inputs are
-    // dropped after simulation since the aggregator never reads them.
-    // Worst-case memory is still one campaign's outputs if the first
-    // shard is the last to finish; with auto-sharding (a few shards per
-    // thread) the typical in-flight window is a handful of shards.
+    let n_mc = u64::from(spec.n_mc);
+    // Shards buffer results only (tags, output SoA) — block inputs live
+    // in the shard's single reusable TrialBlock and are overwritten per
+    // chunk. Worst-case memory is still one campaign's outputs if the
+    // first shard is the last to finish; with auto-sharding (a few
+    // shards per thread) the typical in-flight window is a handful.
     let run_shard = |shard: usize| {
         let (start, end) = shard_range(total, n_shards, shard);
-        // no point packing (and simulating) a 256-row batch for a
-        // 32-item shard — clamp to the shard's own length
-        let shard_batch = batch.min((end - start).max(1) as usize);
-        Batcher::for_range(
-            operands.clone(),
-            spec.n_mc,
-            shard_batch,
-            batch_cfg,
-            sampler.clone(),
-            start,
-            end,
-        )
-        .map(|pb| {
-            let out = run_native_batch(&engine, &pb);
-            (pb.tags, out)
-        })
-        .collect::<Vec<_>>()
+        // no point reserving a 256-lane block for a 32-item shard —
+        // clamp to the shard's own length
+        let shard_block = block_len.min((end - start).max(1) as usize);
+        let mut block = TrialBlock::with_capacity(shard_block);
+        let mut results: Vec<(Vec<RowTag>, MacResultBlock)> = Vec::new();
+        let mut cursor = start;
+        while cursor < end {
+            let n = shard_block.min((end - cursor) as usize);
+            block.reset(n);
+            let (dvth, dbeta) = block.deviates_mut();
+            sampler.fill_block(cursor, dvth, dbeta);
+            let mut tags = Vec::with_capacity(n);
+            for i in 0..n {
+                let k = cursor + i as u64;
+                let op_idx = (k / n_mc) as u32;
+                let mc_idx = (k % n_mc) as u32;
+                let (a, b) = operands[op_idx as usize];
+                block.set_operands(i, a, b);
+                tags.push(RowTag::Item { op_idx, mc_idx, a, b });
+            }
+            kernel.simulate(&engine, &mut block);
+            results.push((tags, block.out.clone()));
+            cursor += n as u64;
+        }
+        results
     };
     execute_sharded(n_shards, threads, run_shard, |_, outs| {
         for (tags, out) in &outs {
-            agg.push_rows(tags, out);
+            agg.push_block(tags, out);
         }
     });
     Ok(agg.finish(t0.elapsed()))
@@ -310,6 +350,7 @@ mod tests {
             workers: 0,
             batch: 64,
             shards: 0,
+            block: 0,
         };
         let r = run_campaign(&p, &spec, Backend::Native, None).unwrap();
         assert_eq!(r.rows, 512);
@@ -337,5 +378,28 @@ mod tests {
             );
             assert_eq!(r.hist.counts(), base.hist.counts());
         }
+    }
+
+    #[test]
+    fn scalar_oracle_matches_block_kernel() {
+        // the default (block) campaign path against the per-item oracle
+        let p = Params::default();
+        let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+        spec.n_mc = 48;
+        spec.workers = 1;
+        let block = run_campaign(&p, &spec, Backend::Native, None).unwrap();
+        let scalar =
+            run_native_campaign_with(&p, &spec, &crate::mac::ScalarKernel).unwrap();
+        assert_eq!(block.rows, scalar.rows);
+        assert_eq!(
+            block.raw_vmult.mean().to_bits(),
+            scalar.raw_vmult.mean().to_bits()
+        );
+        assert_eq!(
+            block.accuracy.sigma_norm.to_bits(),
+            scalar.accuracy.sigma_norm.to_bits()
+        );
+        assert_eq!(block.hist.counts(), scalar.hist.counts());
+        assert_eq!(block.energy.mean().to_bits(), scalar.energy.mean().to_bits());
     }
 }

@@ -3,13 +3,16 @@
 //!
 //! A campaign = (variant, operand workload, MC sample count). The
 //! coordinator splits it into contiguous item shards with deterministic
-//! per-shard RNG streams, packs each shard into the fixed batch shapes the
-//! AOT artifacts were compiled for ([`Batcher`]), executes shards on a
-//! dynamic (work-stealing) thread pool ([`execute_sharded`]) or a pool of
-//! PJRT worker threads with bounded-queue backpressure ([`WorkerPool`]),
-//! and folds the results into the paper's metrics ([`Aggregator`]) in
-//! canonical item order. Every campaign is bit-reproducible from
-//! (spec, seed) — for ANY `--shards`/`--threads` (DESIGN.md §4).
+//! per-item RNG streams. Native shards stream through reusable SoA trial
+//! blocks executed by a [`crate::mac::SimKernel`]
+//! ([`run_native_campaign_with`], DESIGN.md §9); the AOT path packs the
+//! fixed batch shapes its artifacts were compiled for ([`Batcher`]) and
+//! runs them on a pool of PJRT worker threads with bounded-queue
+//! backpressure ([`WorkerPool`]). Either way shards execute on a dynamic
+//! (work-stealing) thread pool ([`execute_sharded`]) and results fold
+//! into the paper's metrics ([`Aggregator`]) in canonical item order.
+//! Every campaign is bit-reproducible from (spec, seed) — for ANY
+//! `--shards`/`--threads`/`--block` (DESIGN.md §4).
 //!
 //! PJRT handles are `!Send`, so XLA workers are OS threads each owning a
 //! private [`crate::runtime::XlaRuntime`]; [`spawn_campaign`] wraps the
@@ -23,6 +26,9 @@ mod spec;
 
 pub use aggregate::{Aggregator, CampaignReport, OpKey};
 pub use batcher::{BatchCfg, Batcher, PackedBatch, RowTag};
-pub use campaign::{run_campaign, run_native_batch, spawn_campaign, Backend, CampaignEngine};
+pub use campaign::{
+    run_campaign, run_native_batch, run_native_campaign_with, spawn_campaign, Backend,
+    CampaignEngine,
+};
 pub use pool::{execute_sharded, shard_range, WorkerPool};
 pub use spec::{CampaignSpec, Workload};

@@ -118,6 +118,11 @@ pub struct CampaignSpec {
     /// value produces bit-identical aggregates; this only tunes scheduling
     /// granularity.
     pub shards: usize,
+    /// Trial-block size of the native block-execution path (lanes per
+    /// [`crate::mac::TrialBlock`], DESIGN.md §9). 0 = auto (the `batch`
+    /// knob if set, else 256). Any value produces bit-identical
+    /// aggregates; this only tunes SIMD width vs memory footprint.
+    pub block: usize,
 }
 
 impl CampaignSpec {
@@ -132,6 +137,7 @@ impl CampaignSpec {
             workers: 0,
             batch: 0,
             shards: 0,
+            block: 0,
         }
     }
 
@@ -161,6 +167,7 @@ impl CampaignSpec {
             workers: u("workers", 0) as usize,
             batch: u("batch", 0) as usize,
             shards: u("shards", 0) as usize,
+            block: u("block", 0) as usize,
         };
         spec.validate().map_err(|e| anyhow::anyhow!(e))?;
         Ok(spec)
@@ -178,6 +185,7 @@ impl CampaignSpec {
         s.push_str(&format!("workers = {}\n", self.workers));
         s.push_str(&format!("batch = {}\n", self.batch));
         s.push_str(&format!("shards = {}\n", self.shards));
+        s.push_str(&format!("block = {}\n", self.block));
         s.push_str("[campaigns.workload]\n");
         match &self.workload {
             Workload::Fixed { a, b } => {
@@ -302,6 +310,7 @@ mod tests {
             let mut spec = CampaignSpec::paper_fig8(variant);
             spec.workers = 3;
             spec.shards = 8;
+            spec.block = 192;
             let doc = toml_lite::parse(&spec.to_toml()).unwrap();
             let arr = doc.get("campaigns").unwrap().as_arr().unwrap();
             let back = CampaignSpec::from_value(&arr[0]).unwrap();
@@ -322,6 +331,7 @@ mod tests {
         assert_eq!(spec.corner, Corner::Tt);
         assert_eq!(spec.workload, Workload::FullSweep);
         assert_eq!(spec.shards, 0);
+        assert_eq!(spec.block, 0);
     }
 
     #[test]

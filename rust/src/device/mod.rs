@@ -10,4 +10,4 @@ mod model;
 mod sweep;
 
 pub use model::{Mosfet, Region};
-pub use sweep::{iv_sweep, width_sweep, IvPoint, WidthPoint};
+pub use sweep::{iv_sweep, turn_on_v_wl, width_sweep, IvPoint, WidthPoint};

@@ -28,6 +28,24 @@ pub fn iv_sweep(card: DeviceCard, v_bulks: &[f64], n_points: usize) -> Vec<IvPoi
     out
 }
 
+/// Turn-on voltage extracted from an I-V sweep: the word-line voltage of
+/// the first point whose drain current crosses `i_ref` (Fig. 3's
+/// observable — the body-biased curve crosses ~125 mV earlier).
+///
+/// Errors instead of panicking when the sweep never reaches `i_ref`
+/// (wrong bias range, too small a reference, or an empty sweep), naming
+/// the ceiling actually reached so the caller can fix the sweep.
+pub fn turn_on_v_wl(points: &[IvPoint], i_ref: f64) -> anyhow::Result<f64> {
+    points.iter().find(|p| p.i_d > i_ref).map(|p| p.v_wl).ok_or_else(|| {
+        let i_max = points.iter().fold(f64::NEG_INFINITY, |m, p| m.max(p.i_d));
+        anyhow::anyhow!(
+            "I-V sweep never crosses i_ref = {i_ref:.3e} A \
+             (max current {i_max:.3e} A over {} points)",
+            points.len()
+        )
+    })
+}
+
 /// One point of the width sweep (Fig. 4).
 #[derive(Debug, Clone, Copy)]
 pub struct WidthPoint {
@@ -81,12 +99,24 @@ mod tests {
         let pts = iv_sweep(card, &[0.0, 0.6], n);
         let (base, smart) = pts.split_at(n);
         let i_ref = 10e-6;
-        let v_at = |s: &[IvPoint]| s.iter().find(|p| p.i_d > i_ref).unwrap().v_wl;
-        let shift = v_at(base) - v_at(smart);
+        let shift = turn_on_v_wl(base, i_ref).unwrap() - turn_on_v_wl(smart, i_ref).unwrap();
         assert!(
             (0.110..0.140).contains(&shift),
             "turn-on shift {shift} V, expected ~125 mV"
         );
+    }
+
+    #[test]
+    fn turn_on_errors_when_sweep_never_crosses() {
+        let card = DeviceCard::default();
+        let pts = iv_sweep(card, &[0.0], 51);
+        // an absurd reference current is above every sweep point
+        let err = turn_on_v_wl(&pts, 1.0).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("never crosses"), "{msg}");
+        assert!(msg.contains("51 points"), "{msg}");
+        // the empty sweep errors too, rather than panicking
+        assert!(turn_on_v_wl(&[], 1e-6).is_err());
     }
 
     #[test]

@@ -30,13 +30,17 @@ use super::pareto::pareto_flags;
 use super::spec::{GridPoint, SweepSpec};
 
 /// Execution knobs of one sweep run (all orthogonal to the results:
-/// shards/threads are pure performance knobs, resume only skips work).
+/// shards/threads/block are pure performance knobs, resume only skips
+/// work).
 #[derive(Debug, Clone)]
 pub struct SweepOptions {
     /// Shards per campaign (0 = auto) — forwarded to the campaign runner.
     pub shards: usize,
     /// Worker threads per campaign (0 = auto).
     pub threads: usize,
+    /// Trial-block size per campaign (0 = auto) — lanes per SoA block of
+    /// the block-execution path (DESIGN.md §9).
+    pub block: usize,
     /// Reuse rows already present in the output CSV (cheap checkpointing
     /// for long sweeps).
     pub resume: bool,
@@ -46,7 +50,7 @@ pub struct SweepOptions {
 
 impl Default for SweepOptions {
     fn default() -> Self {
-        Self { shards: 0, threads: 0, resume: false, out_dir: PathBuf::from("target/dse") }
+        Self { shards: 0, threads: 0, block: 0, resume: false, out_dir: PathBuf::from("target/dse") }
     }
 }
 
@@ -178,7 +182,8 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepResult> {
 /// evaluated at the point's operating conditions.
 fn run_point(spec: &SweepSpec, point: &GridPoint, opts: &SweepOptions) -> Result<PointResult> {
     let params = point.apply(&spec.params);
-    let cspec = point.campaign_spec(spec.seed, spec.n_mc, opts.shards, opts.threads);
+    let cspec =
+        point.campaign_spec(spec.seed, spec.n_mc, opts.shards, opts.threads, opts.block);
     let rep = run_campaign(&params, &cspec, Backend::Native, None)
         .with_context(|| format!("grid point {} ({})", point.index, point.label()))?;
 

@@ -98,8 +98,16 @@ impl GridPoint {
     }
 
     /// Campaign spec running this point's workload through the sharded
-    /// Monte-Carlo runner.
-    pub fn campaign_spec(&self, seed: u64, n_mc: u32, shards: usize, threads: usize) -> CampaignSpec {
+    /// block-execution Monte-Carlo runner (`shards`/`threads`/`block` are
+    /// pure performance knobs — the artifacts never move).
+    pub fn campaign_spec(
+        &self,
+        seed: u64,
+        n_mc: u32,
+        shards: usize,
+        threads: usize,
+        block: usize,
+    ) -> CampaignSpec {
         CampaignSpec {
             variant: self.variant,
             workload: Workload::BitSweep { bits: self.bits },
@@ -109,6 +117,7 @@ impl GridPoint {
             workers: threads,
             batch: 0,
             shards,
+            block,
         }
     }
 
@@ -358,10 +367,11 @@ mod tests {
         let card = p.apply(&spec.params);
         assert_eq!(card.device.vdd, 0.9);
         assert_eq!(card.circuit.v_bulk_smart, 0.3);
-        let cspec = p.campaign_spec(spec.seed, spec.n_mc, 4, 2);
+        let cspec = p.campaign_spec(spec.seed, spec.n_mc, 4, 2, 128);
         assert_eq!(cspec.n_mc, 16);
         assert_eq!(cspec.shards, 4);
         assert_eq!(cspec.workers, 2);
+        assert_eq!(cspec.block, 128);
         assert!(cspec.validate().is_ok());
         assert!(p.label().contains("smart"));
     }

@@ -1,0 +1,474 @@
+//! Block execution: struct-of-arrays trial blocks and the [`SimKernel`]
+//! trait the campaign layer drives them through (DESIGN.md §9).
+//!
+//! A [`TrialBlock`] packs many independent MAC trials (one lane per
+//! Monte-Carlo item) into flat SoA buffers: per-lane operands and
+//! deviates on the input side, per-lane `v_mult`/`v_blb`/`energy`/`fault`
+//! on the output side. Blocks are allocated once per shard and refilled
+//! in place, so the steady state of a campaign allocates nothing per
+//! item. Two kernels execute a block:
+//!
+//! * [`ScalarKernel`] — the oracle: one [`NativeMacEngine::mac`] call per
+//!   lane, numerically identical to the historical per-item path;
+//! * [`BlockKernel`] — [`NativeMacEngine::mac_block`]: hoists the
+//!   time-invariant device quantities once per lane and integrates every
+//!   lane in lockstep through
+//!   [`crate::circuit::discharge_block`].
+//!
+//! The two are bit-identical lane for lane (property-tested in
+//! `tests/block_kernel.rs`): deviates enter both through the same `f32`
+//! quantization the batch path uses, every per-lane recurrence is grouped
+//! exactly as the scalar expression tree, and outputs round to `f32` at
+//! the same point — so campaign aggregates and sweep artifacts do not
+//! move by a bit when the block path takes over.
+
+use crate::device::Mosfet;
+use crate::montecarlo::McSample;
+use crate::sram::WEIGHTS;
+
+use super::engine::NativeMacEngine;
+
+/// Per-lane outputs of one executed block — the SoA twin of
+/// [`crate::runtime::MacBatchOut`], in the same `f32` precision so the
+/// aggregator sees identical numbers from either path.
+#[derive(Debug, Clone, Default)]
+pub struct MacResultBlock {
+    /// Weighted discharge voltage per lane — the paper's V_multiplication.
+    pub v_mult: Vec<f32>,
+    /// Sampled BLB voltages, lane-major `(lane, 4)`, MSB first.
+    pub v_blb: Vec<f32>,
+    /// Raw dynamic bitline energy per lane (J).
+    pub energy: Vec<f32>,
+    /// Saturation-exit fault flags per lane (0/1).
+    pub fault: Vec<f32>,
+}
+
+impl MacResultBlock {
+    /// Number of lanes currently held.
+    pub fn len(&self) -> usize {
+        self.v_mult.len()
+    }
+
+    /// True when no lanes are held.
+    pub fn is_empty(&self) -> bool {
+        self.v_mult.is_empty()
+    }
+
+    /// Resize to `n` lanes with every output zeroed (capacity is kept, so
+    /// repeated resets on a reused block allocate nothing).
+    pub fn reset(&mut self, n: usize) {
+        self.v_mult.clear();
+        self.v_mult.resize(n, 0.0);
+        self.v_blb.clear();
+        self.v_blb.resize(n * 4, 0.0);
+        self.energy.clear();
+        self.energy.resize(n, 0.0);
+        self.fault.clear();
+        self.fault.resize(n, 0.0);
+    }
+}
+
+/// A struct-of-arrays block of independent MAC trials.
+///
+/// Lanes are set with [`TrialBlock::set_operands`] after a
+/// [`TrialBlock::reset`]; lanes left untouched stay padding (simulated by
+/// neither kernel, outputs all zero — exactly how batch padding rows
+/// behave). Deviates live in lane-major `f32` buffers filled by
+/// [`crate::montecarlo::MismatchSampler::fill_block`], mirroring the
+/// `f32` batch layout so both execution paths see the same quantized
+/// values.
+#[derive(Debug, Clone, Default)]
+pub struct TrialBlock {
+    n: usize,
+    a: Vec<u8>,
+    b: Vec<u8>,
+    pad: Vec<bool>,
+    dvth: Vec<f32>,
+    dbeta: Vec<f32>,
+    /// DAC word-line voltage per lane, filled by the executing kernel
+    /// (time-invariant during the transient).
+    v_wl: Vec<f64>,
+    // hoisted per-cell-lane quantities + active-lane map: kernel scratch,
+    // retained across refills so reuse allocates nothing
+    active: Vec<usize>,
+    vov: Vec<f64>,
+    beta: Vec<f64>,
+    gate: Vec<f64>,
+    v_lane: Vec<f64>,
+    /// Per-lane outputs of the last kernel run.
+    pub out: MacResultBlock,
+}
+
+impl TrialBlock {
+    /// Block with buffers preallocated for `cap` lanes.
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut blk = Self::default();
+        blk.reserve(cap);
+        blk
+    }
+
+    fn reserve(&mut self, cap: usize) {
+        self.a.reserve(cap);
+        self.b.reserve(cap);
+        self.pad.reserve(cap);
+        self.dvth.reserve(cap * 4);
+        self.dbeta.reserve(cap * 4);
+        self.v_wl.reserve(cap);
+        self.active.reserve(cap);
+        self.vov.reserve(cap * 4);
+        self.beta.reserve(cap * 4);
+        self.gate.reserve(cap * 4);
+        self.v_lane.reserve(cap * 4);
+    }
+
+    /// Number of lanes (padding included).
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True for a zero-lane block.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Re-shape to `n` lanes, all padding, all buffers zeroed. Capacity is
+    /// retained: refilling a reused block allocates nothing per item.
+    pub fn reset(&mut self, n: usize) {
+        self.n = n;
+        self.a.clear();
+        self.a.resize(n, 0);
+        self.b.clear();
+        self.b.resize(n, 0);
+        self.pad.clear();
+        self.pad.resize(n, true);
+        self.dvth.clear();
+        self.dvth.resize(n * 4, 0.0);
+        self.dbeta.clear();
+        self.dbeta.resize(n * 4, 0.0);
+        self.v_wl.clear();
+        self.v_wl.resize(n, 0.0);
+        self.out.reset(n);
+    }
+
+    /// Mark lane `i` live with operands `(a, b)` (4-bit each). Deviates
+    /// come from the lane-major buffers ([`Self::dvth_mut`] /
+    /// [`Self::dbeta_mut`]).
+    pub fn set_operands(&mut self, i: usize, a: u8, b: u8) {
+        assert!(a < 16 && b < 16, "operands must be 4-bit: ({a}, {b})");
+        assert!(i < self.n, "lane {i} out of range 0..{}", self.n);
+        self.a[i] = a;
+        self.b[i] = b;
+        self.pad[i] = false;
+    }
+
+    /// True when lane `i` is padding (never simulated, outputs zero).
+    pub fn is_pad(&self, i: usize) -> bool {
+        self.pad[i]
+    }
+
+    /// Operands of lane `i`.
+    pub fn operands(&self, i: usize) -> (u8, u8) {
+        (self.a[i], self.b[i])
+    }
+
+    /// DAC word-line voltage of lane `i` (V) — a hoisted, time-invariant
+    /// per-lane quantity, filled by the last kernel run (zero until then).
+    pub fn v_wl(&self, i: usize) -> f64 {
+        self.v_wl[i]
+    }
+
+    /// VTH deviate buffer, lane-major `(lane, 4)` (V).
+    pub fn dvth_mut(&mut self) -> &mut [f32] {
+        &mut self.dvth
+    }
+
+    /// Relative beta deviate buffer, lane-major `(lane, 4)`.
+    pub fn dbeta_mut(&mut self) -> &mut [f32] {
+        &mut self.dbeta
+    }
+
+    /// Both deviate buffers at once — the shape
+    /// [`crate::montecarlo::MismatchSampler::fill_block`] fills.
+    pub fn deviates_mut(&mut self) -> (&mut [f32], &mut [f32]) {
+        (&mut self.dvth, &mut self.dbeta)
+    }
+
+    /// The deviates of lane `i` as the `f64` sample both kernels consume
+    /// (the `f32` buffer widened, matching the batch path's round trip).
+    pub fn mc_sample(&self, i: usize) -> McSample {
+        McSample {
+            dvth: std::array::from_fn(|k| f64::from(self.dvth[i * 4 + k])),
+            dbeta: std::array::from_fn(|k| f64::from(self.dbeta[i * 4 + k])),
+        }
+    }
+}
+
+/// A simulation kernel: executes every live lane of a [`TrialBlock`] on a
+/// [`NativeMacEngine`], writing `block.out`. Implementations must be pure
+/// per lane — the campaign layer relies on lane results being independent
+/// of block shape and lane order (DESIGN.md §9).
+pub trait SimKernel: Sync {
+    /// Short identifier for reports and bench rows.
+    fn name(&self) -> &'static str;
+
+    /// Simulate all live lanes of `block`; padding lanes keep zero outputs.
+    fn simulate(&self, engine: &NativeMacEngine, block: &mut TrialBlock);
+}
+
+/// The scalar oracle: one full [`NativeMacEngine::mac`] evaluation per
+/// lane, numerically identical to the historical per-item batch path.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarKernel;
+
+impl SimKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn simulate(&self, engine: &NativeMacEngine, block: &mut TrialBlock) {
+        let n = block.len();
+        block.out.reset(n);
+        for i in 0..n {
+            if block.is_pad(i) {
+                continue;
+            }
+            let (a, b) = block.operands(i);
+            let mc = block.mc_sample(i);
+            block.v_wl[i] = engine.dac().v_wl(b);
+            let r = engine.mac(a, b, &mc);
+            block.out.v_mult[i] = r.v_mult as f32;
+            for k in 0..4 {
+                block.out.v_blb[i * 4 + k] = r.v_blb[k] as f32;
+            }
+            block.out.energy[i] = r.energy as f32;
+            block.out.fault[i] = f32::from(u8::from(r.fault));
+        }
+    }
+}
+
+/// The data-parallel kernel: [`NativeMacEngine::mac_block`] integrates
+/// every live lane in lockstep.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BlockKernel;
+
+impl SimKernel for BlockKernel {
+    fn name(&self) -> &'static str {
+        "block"
+    }
+
+    fn simulate(&self, engine: &NativeMacEngine, block: &mut TrialBlock) {
+        engine.mac_block(block);
+    }
+}
+
+impl NativeMacEngine {
+    /// Execute every live lane of `block` in lockstep, filling
+    /// `block.out`. Bit-identical to running [`NativeMacEngine::mac`] per
+    /// lane: the per-lane hoists below reproduce
+    /// [`NativeMacEngine::mac_word`]'s setup value for value, the
+    /// integration is [`crate::circuit::discharge_block`] (grouped as the
+    /// scalar loops), and the combine/fault tail mirrors `mac_word`
+    /// expression for expression.
+    pub fn mac_block(&self, block: &mut TrialBlock) {
+        let p = self.params();
+        let cfg = *self.config();
+        let card = p.device;
+        let n = block.len();
+        block.out.reset(n);
+
+        // Hoist the time-invariant device quantities of every live lane
+        // (4 cell lanes per trial lane), packed densely so padding costs
+        // nothing downstream.
+        block.active.clear();
+        block.vov.clear();
+        block.beta.clear();
+        block.gate.clear();
+        for i in 0..n {
+            if block.pad[i] {
+                continue;
+            }
+            let v_wl = self.dac().v_wl(block.b[i]);
+            block.v_wl[i] = v_wl;
+            let a = block.a[i];
+            block.active.push(i);
+            for k in 0..4 {
+                let dev = Mosfet::with_mismatch(
+                    card,
+                    f64::from(block.dvth[i * 4 + k]),
+                    f64::from(block.dbeta[i * 4 + k]),
+                );
+                let bit = a >> (3 - k) & 1 == 1;
+                block.vov.push(v_wl - dev.vth(cfg.v_bulk));
+                block.beta.push(dev.beta());
+                block.gate.push(if bit { 1.0 } else { dev.card.k_leak });
+            }
+        }
+
+        let m = block.active.len() * 4;
+        block.v_lane.clear();
+        block.v_lane.resize(m, 0.0);
+        crate::circuit::discharge_block(
+            p,
+            &block.vov,
+            &block.beta,
+            &block.gate,
+            cfg.t_sample,
+            p.circuit.n_steps,
+            &mut block.v_lane,
+        );
+
+        // Combine + fault tail, mirroring `mac_word` exactly.
+        let vdd = card.vdd;
+        for (j, &i) in block.active.iter().enumerate() {
+            let base = j * 4;
+            let a = block.a[i];
+            let mut fault = false;
+            for k in 0..4 {
+                let bit = a >> (3 - k) & 1 == 1;
+                let vov = block.vov[base + k];
+                let v = block.v_lane[base + k];
+                if bit && vov > 0.0 && v < vov {
+                    fault = true;
+                }
+                block.out.v_blb[i * 4 + k] = v as f32;
+            }
+            let lanes = &block.v_lane[base..base + 4];
+            let v_mult: f64 = lanes.iter().zip(WEIGHTS).map(|(&v, w)| (vdd - v) * w).sum();
+            let energy: f64 = lanes.iter().map(|&v| p.circuit.c_blb * vdd * (vdd - v)).sum();
+            block.out.v_mult[i] = v_mult as f32;
+            block.out.energy[i] = energy as f32;
+            block.out.fault[i] = f32::from(u8::from(fault));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::Variant;
+    use crate::montecarlo::MismatchSampler;
+    use crate::params::Params;
+
+    fn engine(v: Variant) -> NativeMacEngine {
+        let p = Params::default();
+        NativeMacEngine::new(p, v.config(&p))
+    }
+
+    fn fill(blk: &mut TrialBlock, n: usize, seed: u64) {
+        blk.reset(n);
+        let sampler = MismatchSampler::new(seed, 8e-3, 0.02);
+        let (dvth, dbeta) = blk.deviates_mut();
+        sampler.fill_block(0, dvth, dbeta);
+        for i in 0..n {
+            let a = (i * 7 % 16) as u8;
+            let b = (i * 3 % 16) as u8;
+            blk.set_operands(i, a, b);
+        }
+    }
+
+    fn filled_block(n: usize, seed: u64) -> TrialBlock {
+        let mut blk = TrialBlock::with_capacity(n);
+        fill(&mut blk, n, seed);
+        blk
+    }
+
+    #[test]
+    fn kernels_agree_bit_for_bit() {
+        for variant in Variant::ALL {
+            let e = engine(variant);
+            let mut scalar = filled_block(33, 9);
+            let mut block = scalar.clone();
+            ScalarKernel.simulate(&e, &mut scalar);
+            BlockKernel.simulate(&e, &mut block);
+            assert_eq!(scalar.out.v_mult.len(), block.out.v_mult.len());
+            for i in 0..scalar.out.v_mult.len() {
+                assert_eq!(
+                    scalar.out.v_mult[i].to_bits(),
+                    block.out.v_mult[i].to_bits(),
+                    "{variant:?} lane {i} v_mult"
+                );
+                assert_eq!(
+                    scalar.out.energy[i].to_bits(),
+                    block.out.energy[i].to_bits(),
+                    "{variant:?} lane {i} energy"
+                );
+                assert_eq!(scalar.out.fault[i], block.out.fault[i], "{variant:?} lane {i} fault");
+            }
+            assert_eq!(scalar.out.v_blb.len(), block.out.v_blb.len());
+            for k in 0..scalar.out.v_blb.len() {
+                assert_eq!(
+                    scalar.out.v_blb[k].to_bits(),
+                    block.out.v_blb[k].to_bits(),
+                    "{variant:?} cell lane {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_matches_engine_mac() {
+        let e = engine(Variant::Smart);
+        let mut blk = filled_block(10, 4);
+        e.mac_block(&mut blk);
+        for i in 0..10 {
+            let (a, b) = blk.operands(i);
+            let r = e.mac(a, b, &blk.mc_sample(i));
+            assert_eq!(blk.out.v_mult[i].to_bits(), (r.v_mult as f32).to_bits(), "lane {i}");
+            assert_eq!(blk.out.fault[i] > 0.5, r.fault, "lane {i} fault");
+            // the hoisted per-lane DAC voltage is recorded on the block
+            assert_eq!(blk.v_wl(i).to_bits(), e.dac().v_wl(b).to_bits(), "lane {i} v_wl");
+        }
+    }
+
+    #[test]
+    fn padding_lanes_stay_zero() {
+        let e = engine(Variant::Aid);
+        let mut blk = filled_block(8, 1);
+        // re-reset and only set half the lanes
+        let dvth: Vec<f32> = blk.dvth_mut().to_vec();
+        blk.reset(8);
+        blk.dvth_mut().copy_from_slice(&dvth);
+        for i in [0usize, 2, 5, 7] {
+            blk.set_operands(i, 15, 15);
+        }
+        e.mac_block(&mut blk);
+        for i in [1usize, 3, 4, 6] {
+            assert!(blk.is_pad(i));
+            assert_eq!(blk.out.v_mult[i], 0.0);
+            assert_eq!(blk.out.energy[i], 0.0);
+            assert_eq!(blk.out.fault[i], 0.0);
+            for k in 0..4 {
+                assert_eq!(blk.out.v_blb[i * 4 + k], 0.0);
+            }
+        }
+        for i in [0usize, 2, 5, 7] {
+            assert!(blk.out.v_mult[i] > 0.0, "live lane {i} must simulate");
+        }
+    }
+
+    #[test]
+    fn reuse_does_not_leak_state() {
+        // a block refilled in place (smaller, then original shape again)
+        // reproduces its first run bit for bit — the coordinator reuses
+        // one block per shard on exactly this contract
+        let e = engine(Variant::Smart);
+        let mut blk = filled_block(16, 2);
+        e.mac_block(&mut blk);
+        let first: Vec<u32> = blk.out.v_mult.iter().map(|v| v.to_bits()).collect();
+        fill(&mut blk, 5, 77);
+        e.mac_block(&mut blk);
+        assert_eq!(blk.out.v_mult.len(), 5);
+        fill(&mut blk, 16, 2);
+        e.mac_block(&mut blk);
+        let second: Vec<u32> = blk.out.v_mult.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic(expected = "4-bit")]
+    fn set_operands_rejects_wide_values() {
+        let mut blk = TrialBlock::with_capacity(1);
+        blk.reset(1);
+        blk.set_operands(0, 16, 0);
+    }
+}

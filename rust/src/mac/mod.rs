@@ -7,13 +7,19 @@
 //! `t_sample`, and combines them with binary weights — paper Fig. 7 /
 //! DESIGN.md §3. [`Variant`] captures the head-to-head designs of
 //! Table 1; [`NativeMacEngine`] is the single-MAC oracle the campaign
-//! layer cross-checks the AOT path against.
+//! layer cross-checks the AOT path against. Campaign-scale execution
+//! goes through the block layer ([`TrialBlock`], [`SimKernel`],
+//! DESIGN.md §9): many trials in one struct-of-arrays block, integrated
+//! in lockstep by [`BlockKernel`] or lane-by-lane by the [`ScalarKernel`]
+//! oracle.
 
+mod block;
 mod dot;
 mod engine;
 mod ideal;
 mod variant;
 
+pub use block::{BlockKernel, MacResultBlock, ScalarKernel, SimKernel, TrialBlock};
 pub use dot::{DotResult, NativeDotEngine};
 pub use engine::{MacResult, NativeMacEngine};
 pub use ideal::{exact_code4, reconstruct, reconstruct4, IdealTransfer, SenseAmp};

@@ -36,20 +36,26 @@ COMMANDS:
   info                         platform + artifact manifest + PJRT smoke test
   mac <a> <b> [--variant V]    one 4x4-bit MAC through the full stack
   mc [--variant V] [--n-mc N] [--a A --b B | --full-sweep]
-     [--seed S] [--shards K] [--threads T] [--corner tt|ff|ss]
+     [--seed S] [--shards K] [--threads T] [--block N] [--corner tt|ff|ss]
                                Monte-Carlo campaign (paper Fig. 8/9);
                                aggregates are bit-identical for any
-                               --shards/--threads choice
+                               --shards/--threads/--block choice
   table1 [--n-mc N]            regenerate Table 1 (all variants + lit rows)
   run <config.toml>            run campaigns from an experiment file
-  sweep <dse.toml> [--shards K] [--threads T] [--resume] [--out DIR]
-                               design-space exploration: run every grid
+  sweep <dse.toml> [--shards K] [--threads T] [--block N] [--resume]
+        [--out DIR]            design-space exploration: run every grid
                                point (variant x vdd x v_bulk x bits x
                                corner) through the sharded MC runner and
                                emit CSV/JSON + the energy-vs-sigma Pareto
                                front; artifacts are byte-identical for any
-                               --shards/--threads, and --resume skips
-                               points already present in the output CSV
+                               --shards/--threads/--block, and --resume
+                               skips points already present in the CSV
+  bench [--n-mc N] [--json] [--smoke] [--out DIR]
+                               native kernel throughput: the scalar oracle
+                               vs the lockstep block kernel on the fig8
+                               campaign; --json writes BENCH_native.json
+                               (schema: backend, items_per_sec, n_items),
+                               --smoke runs one sample for CI
 
 OPTIONS:
   --artifacts DIR   artifact directory (default: $SMART_ARTIFACTS or ./artifacts)
@@ -69,8 +75,11 @@ fn main() -> ExitCode {
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["native", "full-sweep", "help", "resume"])
-        .map_err(|e| anyhow::anyhow!(e))?;
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["native", "full-sweep", "help", "resume", "json", "smoke"],
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
     if args.flag("help") || args.positional(0).is_none() {
         print!("{USAGE}");
         return Ok(());
@@ -122,6 +131,7 @@ fn run() -> Result<()> {
                 },
                 batch: args.opt_parse("batch", 0usize).map_err(|e| anyhow::anyhow!(e))?,
                 shards: args.opt_parse("shards", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+                block: args.opt_parse("block", 0usize).map_err(|e| anyhow::anyhow!(e))?,
             };
             let r = run_campaign(&params, &spec, backend, Some(art))?;
             print!(
@@ -140,9 +150,16 @@ fn run() -> Result<()> {
             let n_mc: u32 = args.opt_parse("n-mc", 300u32).map_err(|e| anyhow::anyhow!(e))?;
             cmd_table1(&params, &art, backend, n_mc)
         }
+        "bench" => {
+            let n_mc: u32 = args.opt_parse("n-mc", 1000u32).map_err(|e| anyhow::anyhow!(e))?;
+            let out: PathBuf = args.opt("out").map(PathBuf::from).unwrap_or_else(|| ".".into());
+            cmd_bench(&params, variant, n_mc, args.flag("smoke"), args.flag("json"), &out)
+        }
         "sweep" => {
             let path = args.positional(1).ok_or_else(|| {
-                anyhow::anyhow!("usage: smart sweep <dse.toml> [--shards K --threads T --resume --out DIR]")
+                anyhow::anyhow!(
+                    "usage: smart sweep <dse.toml> [--shards K --threads T --block N --resume --out DIR]"
+                )
             })?;
             let sweep = SweepSpec::load(path)?;
             let opts = SweepOptions {
@@ -153,6 +170,7 @@ fn run() -> Result<()> {
                     let w = args.opt_parse("workers", 0usize).map_err(|e| anyhow::anyhow!(e))?;
                     args.opt_parse("threads", w).map_err(|e| anyhow::anyhow!(e))?
                 },
+                block: args.opt_parse("block", 0usize).map_err(|e| anyhow::anyhow!(e))?,
                 resume: args.flag("resume"),
                 out_dir: args
                     .opt("out")
@@ -232,6 +250,7 @@ fn cmd_mac(
         workers: 1,
         batch: 1,
         shards: 1,
+        block: 0,
     };
     let r = run_campaign(params, &spec, backend, Some(art.clone()))?;
     println!(
@@ -241,6 +260,61 @@ fn cmd_mac(
         r.full_scale * (f64::from(a) / 15.0) * (f64::from(b) / 15.0) * 1e3,
         r.full_scale * 1e3,
     );
+    Ok(())
+}
+
+/// `smart bench`: native kernel throughput on the paper's fig8 campaign —
+/// the scalar per-item oracle against the lockstep block kernel. With
+/// `--json`, records the measurement as `BENCH_native.json` (schema:
+/// `backend`, `items_per_sec`, `n_items`) so the perf trajectory is
+/// tracked across commits; `--smoke` runs a single sample for CI.
+fn cmd_bench(
+    params: &Params,
+    variant: Variant,
+    n_mc: u32,
+    smoke: bool,
+    json: bool,
+    out: &std::path::Path,
+) -> Result<()> {
+    use smart_insram::bench::Runner;
+    use smart_insram::coordinator::run_native_campaign_with;
+    use smart_insram::mac::{BlockKernel, ScalarKernel, SimKernel};
+
+    let mut spec = CampaignSpec::paper_fig8(variant);
+    spec.n_mc = n_mc;
+    let n_items = u64::from(n_mc);
+    let runner = if smoke { Runner { warmup: 0, samples: 1 } } else { Runner::default() };
+    let measure = |kernel: &dyn SimKernel| {
+        let s = runner.bench(&format!("bench/native {} kernel (n_mc = {n_mc})", kernel.name()), || {
+            run_native_campaign_with(params, &spec, kernel).expect("campaign")
+        });
+        s.per_second(n_items)
+    };
+    let scalar_ips = measure(&ScalarKernel);
+    let block_ips = measure(&BlockKernel);
+    let speedup = block_ips / scalar_ips;
+    println!("scalar oracle: {scalar_ips:>12.0} items/s");
+    println!("block kernel:  {block_ips:>12.0} items/s  ({speedup:.2}x)");
+
+    if json {
+        use smart_insram::util::json::{to_string_pretty, Value};
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("backend".to_string(), Value::Str("native-block".to_string()));
+        m.insert("items_per_sec".to_string(), Value::Num(block_ips));
+        m.insert("n_items".to_string(), Value::Num(n_items as f64));
+        m.insert("scalar_items_per_sec".to_string(), Value::Num(scalar_ips));
+        m.insert("speedup".to_string(), Value::Num(speedup));
+        m.insert("variant".to_string(), Value::Str(variant.token().to_string()));
+        let mut text = to_string_pretty(&Value::Obj(m));
+        text.push('\n');
+        std::fs::create_dir_all(out)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", out.display()))?;
+        let path = out.join("BENCH_native.json");
+        std::fs::write(&path, text)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }
 
@@ -257,6 +331,7 @@ fn cmd_table1(params: &Params, art: &PathBuf, backend: Backend, n_mc: u32) -> Re
             workers: 0,
             batch: 0,
             shards: 0,
+            block: 0,
         };
         let r = run_campaign(params, &spec, backend, Some(art.clone()))?;
         sigmas.push((v, r.accuracy.rms_norm));

@@ -32,11 +32,13 @@ impl SampleSet {
         self.xs.is_empty()
     }
 
-    /// Linear-interpolated quantile, q in [0, 1].
+    /// Linear-interpolated quantile, q in [0, 1]. Total over any input:
+    /// non-finite samples sort to the ends under IEEE total order (NaN
+    /// above +inf) instead of panicking the campaign that collected them.
     pub fn quantile(&self, q: f64) -> f64 {
         assert!(!self.xs.is_empty() && (0.0..=1.0).contains(&q));
         let mut s = self.xs.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         let pos = q * (s.len() - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
@@ -67,7 +69,9 @@ impl SampleSet {
                 Self::std_of(&resample)
             })
             .collect();
-        stds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total order: a NaN resample statistic (possible when a campaign
+        // pushed a non-finite sample) sorts last instead of panicking
+        stds.sort_by(f64::total_cmp);
         let alpha = (1.0 - level) / 2.0;
         let idx = |q: f64| ((q * (n_boot - 1) as f64).round() as usize).min(n_boot as usize - 1);
         (stds[idx(alpha)], stds[idx(1.0 - alpha)])
@@ -121,5 +125,20 @@ mod tests {
     #[should_panic]
     fn quantile_rejects_empty() {
         SampleSet::new().quantile(0.5);
+    }
+
+    #[test]
+    fn non_finite_samples_never_panic() {
+        // one bad MC sample must not take down the whole campaign report
+        let mut s = uniform();
+        s.push(f64::NAN);
+        s.push(f64::INFINITY);
+        s.push(f64::NEG_INFINITY);
+        assert_eq!(s.quantile(0.0), f64::NEG_INFINITY); // -inf sorts first
+        assert!(s.quantile(0.5).is_finite());
+        assert!(s.quantile(1.0).is_nan()); // NaN sorts above +inf
+        // resamples that drew a non-finite value produce non-finite stds,
+        // which sort to the ends; the call must complete either way
+        let _ = s.bootstrap_std_ci(50, 0.9, 3);
     }
 }

@@ -6,7 +6,10 @@
 //! [`MismatchSampler::sample_item`]: deviates for work item `k` are a
 //! pure function of `(seed, corner, k)`, never of draw order, which is
 //! what lets the coordinator re-shard campaigns freely without moving a
-//! single bit of the aggregates (DESIGN.md §4).
+//! single bit of the aggregates (DESIGN.md §4). The block-execution path
+//! consumes the same streams through
+//! [`MismatchSampler::fill_block`], which fills lane-major SoA buffers
+//! with the identical per-item deviates (DESIGN.md §9).
 
 mod rng;
 mod sampler;

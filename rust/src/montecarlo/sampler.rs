@@ -121,6 +121,26 @@ impl MismatchSampler {
         }
         s
     }
+
+    /// Fill lane-major SoA deviate buffers for the contiguous items
+    /// `first_item .. first_item + n` where `n = dvth.len() / 4` — the
+    /// block path's sampler (DESIGN.md §9). Lane `i` receives exactly
+    /// [`Self::sample_item`]`(first_item + i)` quantized to `f32`, the
+    /// same rounding the batch packer applies, so the block and batch
+    /// paths consume bit-identical deviates for every item no matter how
+    /// the item space is cut into blocks or shards.
+    pub fn fill_block(&self, first_item: u64, dvth: &mut [f32], dbeta: &mut [f32]) {
+        assert_eq!(dvth.len(), dbeta.len(), "deviate buffers must agree");
+        assert_eq!(dvth.len() % 4, 0, "deviate buffers are (lane, 4)");
+        let n = dvth.len() / 4;
+        for i in 0..n {
+            let s = self.sample_item(first_item + i as u64);
+            for k in 0..4 {
+                dvth[i * 4 + k] = s.dvth[k] as f32;
+                dbeta[i * 4 + k] = s.dbeta[k] as f32;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -185,6 +205,26 @@ mod tests {
         let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
         assert!(mean.abs() < 3e-4, "mean {mean}");
         assert!((var.sqrt() - 8e-3).abs() < 3e-4, "sigma {}", var.sqrt());
+    }
+
+    #[test]
+    fn fill_block_matches_item_draws() {
+        let s = MismatchSampler::new(2022, 8e-3, 0.02).with_corner(Corner::Ff);
+        let mut dvth = vec![0.0f32; 12 * 4];
+        let mut dbeta = vec![0.0f32; 12 * 4];
+        s.fill_block(40, &mut dvth, &mut dbeta);
+        for i in 0..12 {
+            let m = s.sample_item(40 + i as u64);
+            for k in 0..4 {
+                assert_eq!(dvth[i * 4 + k].to_bits(), (m.dvth[k] as f32).to_bits());
+                assert_eq!(dbeta[i * 4 + k].to_bits(), (m.dbeta[k] as f32).to_bits());
+            }
+        }
+        // block boundaries never change the per-item deviates
+        let mut lo = vec![0.0f32; 5 * 4];
+        let mut lo_b = vec![0.0f32; 5 * 4];
+        s.fill_block(40, &mut lo, &mut lo_b);
+        assert_eq!(&dvth[..20], &lo[..]);
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Block/scalar equivalence — the acceptance contract of the block
+//! execution engine (DESIGN.md §9): for ANY operands, deviates, block
+//! size, shard count, or padding pattern, the lockstep `BlockKernel`
+//! produces outputs bit-identical to the per-item `ScalarKernel` oracle,
+//! and campaign aggregates are invariant under every performance knob.
+
+use smart_insram::coordinator::{
+    run_campaign, run_native_campaign_with, Backend, CampaignReport, CampaignSpec, Workload,
+};
+use smart_insram::mac::{BlockKernel, NativeMacEngine, ScalarKernel, SimKernel, TrialBlock, Variant};
+use smart_insram::montecarlo::{Corner, MismatchSampler};
+use smart_insram::params::Params;
+use smart_insram::prop_assert;
+use smart_insram::util::prop::check;
+
+/// Bitwise comparison of every aggregate statistic in two reports.
+fn assert_reports_bit_identical(a: &CampaignReport, b: &CampaignReport, label: &str) {
+    assert_eq!(a.rows, b.rows, "{label}: rows");
+    assert_eq!(a.raw_vmult.mean().to_bits(), b.raw_vmult.mean().to_bits(), "{label}: mean");
+    assert_eq!(
+        a.raw_vmult.std_dev().to_bits(),
+        b.raw_vmult.std_dev().to_bits(),
+        "{label}: sigma"
+    );
+    assert_eq!(
+        a.accuracy.sigma_norm.to_bits(),
+        b.accuracy.sigma_norm.to_bits(),
+        "{label}: sigma_norm"
+    );
+    assert_eq!(a.accuracy.ber.to_bits(), b.accuracy.ber.to_bits(), "{label}: ber");
+    assert_eq!(
+        a.accuracy.fault_rate.to_bits(),
+        b.accuracy.fault_rate.to_bits(),
+        "{label}: fault_rate"
+    );
+    assert_eq!(a.hist.counts(), b.hist.counts(), "{label}: histogram");
+    assert_eq!(a.energy.mean().to_bits(), b.energy.mean().to_bits(), "{label}: energy");
+    assert_eq!(a.per_op.len(), b.per_op.len(), "{label}: per_op");
+}
+
+/// The block kernel's outputs equal the scalar oracle's, lane for lane and
+/// bit for bit — random operands, deviates, block sizes, and pad patterns.
+#[test]
+fn block_kernel_is_bit_identical_to_scalar_oracle() {
+    check(0xB10C, 40, |g| {
+        let p = Params::default();
+        let variant = *g.pick(&Variant::ALL);
+        let engine = NativeMacEngine::new(p, variant.config(&p));
+        let n = g.usize_in(1, 80);
+        let seed = g.u64(1 << 40);
+        let first_item = g.u64(1 << 20);
+
+        let mut block = TrialBlock::with_capacity(n);
+        block.reset(n);
+        let sampler = MismatchSampler::new(seed, p.circuit.sigma_vth, p.circuit.sigma_beta)
+            .with_corner(*g.pick(&[Corner::Tt, Corner::Ff, Corner::Ss]));
+        {
+            let (dvth, dbeta) = block.deviates_mut();
+            sampler.fill_block(first_item, dvth, dbeta);
+        }
+        let mut n_live = 0usize;
+        for i in 0..n {
+            if g.usize_in(0, 9) == 0 {
+                continue; // ~10% padding lanes, left unset
+            }
+            block.set_operands(i, g.u8_in(0, 15), g.u8_in(0, 15));
+            n_live += 1;
+        }
+        let mut scalar = block.clone();
+
+        BlockKernel.simulate(&engine, &mut block);
+        ScalarKernel.simulate(&engine, &mut scalar);
+
+        prop_assert!(block.out.v_mult.len() == n, "output shape");
+        let mut live_seen = 0usize;
+        for i in 0..n {
+            prop_assert!(
+                block.out.v_mult[i].to_bits() == scalar.out.v_mult[i].to_bits(),
+                "lane {i}: v_mult {} != {}",
+                block.out.v_mult[i],
+                scalar.out.v_mult[i]
+            );
+            prop_assert!(
+                block.out.energy[i].to_bits() == scalar.out.energy[i].to_bits(),
+                "lane {i}: energy diverged"
+            );
+            prop_assert!(
+                block.out.fault[i].to_bits() == scalar.out.fault[i].to_bits(),
+                "lane {i}: fault flag diverged"
+            );
+            for k in 0..4 {
+                prop_assert!(
+                    block.out.v_blb[i * 4 + k].to_bits() == scalar.out.v_blb[i * 4 + k].to_bits(),
+                    "lane {i} cell {k}: v_blb diverged"
+                );
+            }
+            if block.is_pad(i) {
+                prop_assert!(
+                    block.out.v_mult[i] == 0.0
+                        && block.out.energy[i] == 0.0
+                        && block.out.fault[i] == 0.0,
+                    "pad lane {i} simulated"
+                );
+            } else {
+                live_seen += 1;
+            }
+        }
+        prop_assert!(live_seen == n_live, "live-lane accounting");
+        Ok(())
+    });
+}
+
+/// Campaign aggregates are invariant bit for bit across kernel choice,
+/// block size, and shard count — random workloads and specs.
+#[test]
+fn campaign_invariant_under_kernel_block_and_shards() {
+    check(0xCA4470, 12, |g| {
+        let p = Params::default();
+        let spec = CampaignSpec {
+            variant: *g.pick(&Variant::ALL),
+            workload: match g.u64(3) {
+                0 => Workload::Fixed { a: g.u8_in(0, 15), b: g.u8_in(0, 15) },
+                1 => Workload::Random { n_ops: g.usize_in(1, 4) as u32 },
+                _ => Workload::BitSweep { bits: g.u8_in(1, 2) as u32 },
+            },
+            n_mc: g.usize_in(1, 40) as u32,
+            seed: g.u64(1 << 40),
+            corner: *g.pick(&[Corner::Tt, Corner::Ff, Corner::Ss]),
+            workers: 1,
+            batch: 0,
+            shards: 1,
+            block: 0,
+        };
+        let base = run_native_campaign_with(&p, &spec, &ScalarKernel)
+            .map_err(|e| format!("scalar: {e}"))?;
+        let mut alt = spec.clone();
+        alt.block = g.usize_in(1, 64);
+        alt.shards = g.usize_in(1, 9);
+        alt.workers = g.usize_in(1, 4);
+        let block = run_native_campaign_with(&p, &alt, &BlockKernel)
+            .map_err(|e| format!("block: {e}"))?;
+        prop_assert!(base.rows == block.rows, "rows {} != {}", base.rows, block.rows);
+        prop_assert!(
+            base.raw_vmult.mean().to_bits() == block.raw_vmult.mean().to_bits(),
+            "mean diverged"
+        );
+        prop_assert!(
+            base.raw_vmult.std_dev().to_bits() == block.raw_vmult.std_dev().to_bits(),
+            "sigma diverged"
+        );
+        prop_assert!(base.hist.counts() == block.hist.counts(), "histogram diverged");
+        prop_assert!(
+            base.accuracy.fault_rate.to_bits() == block.accuracy.fault_rate.to_bits(),
+            "fault rate diverged"
+        );
+        prop_assert!(
+            base.energy.mean().to_bits() == block.energy.mean().to_bits(),
+            "energy diverged"
+        );
+        Ok(())
+    });
+}
+
+/// The default native backend (block path) reproduces the scalar oracle on
+/// the paper's fig8 campaign, and block size 1 equals block size 1000.
+#[test]
+fn acceptance_fig8_block_path_matches_oracle() {
+    let p = Params::default();
+    let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+    spec.n_mc = 200;
+    let native = run_campaign(&p, &spec, Backend::Native, None).unwrap();
+    let oracle = run_native_campaign_with(&p, &spec, &ScalarKernel).unwrap();
+    assert_reports_bit_identical(&native, &oracle, "fig8 block vs oracle");
+
+    let mut tiny = spec.clone();
+    tiny.block = 1;
+    let one = run_campaign(&p, &tiny, Backend::Native, None).unwrap();
+    let mut big = spec.clone();
+    big.block = 1000;
+    let thousand = run_campaign(&p, &big, Backend::Native, None).unwrap();
+    assert_reports_bit_identical(&one, &thousand, "fig8 block=1 vs block=1000");
+}
+
+/// Weak-inversion and leakage lanes (low DAC codes, stored zeros) take the
+/// scalar fallback inside the lockstep kernel; the full-sweep workload
+/// exercises every such region and must still match the oracle exactly.
+#[test]
+fn full_sweep_mixed_regions_match_oracle() {
+    let p = Params::default();
+    let spec = CampaignSpec {
+        variant: Variant::Imac, // linear DAC: smallest low-code overdrives
+        workload: Workload::FullSweep,
+        n_mc: 4,
+        seed: 11,
+        corner: Corner::Tt,
+        workers: 2,
+        batch: 0,
+        shards: 3,
+        block: 37,
+    };
+    let block = run_campaign(&p, &spec, Backend::Native, None).unwrap();
+    let oracle = run_native_campaign_with(&p, &spec, &ScalarKernel).unwrap();
+    assert_reports_bit_identical(&block, &oracle, "full sweep mixed regions");
+    assert_eq!(block.rows, 256 * 4);
+}

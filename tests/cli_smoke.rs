@@ -59,6 +59,41 @@ fn mc_native_reports_sigma() {
 }
 
 #[test]
+fn mc_native_accepts_block_knob() {
+    let out = smart()
+        .args(["mc", "--variant", "smart", "--n-mc", "32", "--native", "--block", "9"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("sigma/FS"));
+}
+
+#[test]
+fn bench_json_writes_perf_artifact() {
+    let out_dir = std::env::temp_dir().join(format!("smart_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let out = smart()
+        .args([
+            "bench",
+            "--json",
+            "--smoke",
+            "--n-mc",
+            "16",
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("block kernel"), "{text}");
+    let json = std::fs::read_to_string(out_dir.join("BENCH_native.json")).unwrap();
+    for key in ["\"backend\"", "\"items_per_sec\"", "\"n_items\"", "native-block"] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+}
+
+#[test]
 fn run_config_native() {
     let cfg = concat!(
         "name = \"smoke\"\n",
@@ -133,7 +168,7 @@ fn sweep_cli_is_byte_deterministic() {
     // --threads 2` and `--shards 1 --threads 1` produce byte-identical
     // CSV/JSON artifacts.
     let cfg = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/dse.toml");
-    let run = |tag: &str, shards: &str, threads: &str| {
+    let run = |tag: &str, shards: &str, threads: &str, block: &str| {
         let out_dir =
             std::env::temp_dir().join(format!("smart_cli_sweep_{tag}_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&out_dir);
@@ -145,6 +180,8 @@ fn sweep_cli_is_byte_deterministic() {
                 shards,
                 "--threads",
                 threads,
+                "--block",
+                block,
                 "--out",
                 out_dir.to_str().unwrap(),
             ])
@@ -157,9 +194,9 @@ fn sweep_cli_is_byte_deterministic() {
         let json = std::fs::read_to_string(out_dir.join("sweep.json")).unwrap();
         (csv, json)
     };
-    let (csv_a, json_a) = run("a", "4", "2");
-    let (csv_b, json_b) = run("b", "1", "1");
-    assert_eq!(csv_a, csv_b, "CSV artifacts differ across --shards/--threads");
-    assert_eq!(json_a, json_b, "JSON artifacts differ across --shards/--threads");
+    let (csv_a, json_a) = run("a", "4", "2", "0");
+    let (csv_b, json_b) = run("b", "1", "1", "13");
+    assert_eq!(csv_a, csv_b, "CSV artifacts differ across --shards/--threads/--block");
+    assert_eq!(json_a, json_b, "JSON artifacts differ across --shards/--threads/--block");
     assert!(csv_a.lines().count() > 1);
 }

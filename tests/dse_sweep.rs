@@ -33,27 +33,35 @@ fn read(p: &PathBuf) -> String {
 }
 
 #[test]
-fn shard_and_thread_counts_never_change_artifacts() {
+fn shard_thread_block_choices_never_change_artifacts() {
     let spec = SweepSpec::parse(SPEC).unwrap();
     let base_dir = tmp_dir("base");
     let base = run_sweep(
         &spec,
-        &SweepOptions { shards: 1, threads: 1, resume: false, out_dir: base_dir },
+        &SweepOptions { shards: 1, threads: 1, resume: false, out_dir: base_dir, block: 0 },
     )
     .unwrap();
     assert_eq!(base.points.len(), 4);
     assert_eq!(base.computed, 4);
     assert_eq!(base.resumed, 0);
     let (csv, json) = (read(&base.csv_path), read(&base.json_path));
-    for (shards, threads) in [(4usize, 2usize), (7, 3), (0, 0)] {
-        let dir = tmp_dir(&format!("s{shards}t{threads}"));
+    for (shards, threads, block) in [(4usize, 2usize, 0usize), (7, 3, 5), (0, 0, 1), (2, 2, 999)] {
+        let dir = tmp_dir(&format!("s{shards}t{threads}b{block}"));
         let r = run_sweep(
             &spec,
-            &SweepOptions { shards, threads, resume: false, out_dir: dir },
+            &SweepOptions { shards, threads, block, resume: false, out_dir: dir },
         )
         .unwrap();
-        assert_eq!(read(&r.csv_path), csv, "CSV differs at shards={shards} threads={threads}");
-        assert_eq!(read(&r.json_path), json, "JSON differs at shards={shards} threads={threads}");
+        assert_eq!(
+            read(&r.csv_path),
+            csv,
+            "CSV differs at shards={shards} threads={threads} block={block}"
+        );
+        assert_eq!(
+            read(&r.json_path),
+            json,
+            "JSON differs at shards={shards} threads={threads} block={block}"
+        );
     }
 }
 

@@ -100,6 +100,7 @@ fn campaign_rejects_invalid_spec() {
         workers: 1,
         batch: 1,
         shards: 1,
+        block: 0,
     };
     assert!(run_campaign(&p, &spec, Backend::Native, None).is_err());
 }
@@ -117,6 +118,7 @@ fn corner_campaigns_shift_the_output_as_expected() {
         workers: 1,
         batch: 64,
         shards: 1,
+        block: 0,
     };
     let tt = run_campaign(&p, &mk(Corner::Tt), Backend::Native, None).unwrap();
     let ff = run_campaign(&p, &mk(Corner::Ff), Backend::Native, None).unwrap();

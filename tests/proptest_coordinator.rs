@@ -166,6 +166,7 @@ fn spec_toml_roundtrip_random() {
             workers: g.usize_in(0, 16),
             batch: g.usize_in(0, 2048),
             shards: g.usize_in(0, 64),
+            block: g.usize_in(0, 512),
         };
         let doc = smart_insram::util::toml_lite::parse(&spec.to_toml())
             .map_err(|e| format!("parse: {e}"))?;

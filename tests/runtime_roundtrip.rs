@@ -179,6 +179,7 @@ fn xla_campaign_matches_native_campaign() {
         workers: 2,
         batch: 256,
         shards: 0,
+        block: 0,
     };
     let x = run_campaign(&params, &spec, Backend::Xla, Some(dir)).unwrap();
     let n = run_campaign(&params, &spec, Backend::Native, None).unwrap();
@@ -207,6 +208,7 @@ fn worker_pool_scales_and_preserves_results() {
         workers,
         batch: 256,
         shards: 0,
+        block: 0,
     };
     let one = run_campaign(&params, &mk(1), Backend::Xla, Some(dir.clone())).unwrap();
     let four = run_campaign(&params, &mk(4), Backend::Xla, Some(dir)).unwrap();

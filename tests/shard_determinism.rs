@@ -1,6 +1,7 @@
 //! Regression: a sharded MC campaign produces aggregates bit-identical to
-//! a single-shard run — for any shard count and any thread count. This is
-//! the contract that makes `--shards`/`--threads` pure performance knobs
+//! a single-shard run — for any shard count, thread count, and trial-block
+//! size. This is the contract that makes `--shards`/`--threads`/`--block`
+//! pure performance knobs
 //! (acceptance: `smart mc --variant smart --n-mc 256 --native --shards 8`
 //! must match the single-shard aggregates bit for bit).
 
@@ -19,6 +20,7 @@ fn mc_spec(variant: Variant, workload: Workload, shards: usize, workers: usize) 
         workers,
         batch: 0,
         shards,
+        block: 0,
     }
 }
 
@@ -130,6 +132,26 @@ fn full_sweep_shard_invariance() {
         spec.workers = 4;
         let r = run_campaign(&p, &spec, Backend::Native, None).unwrap();
         assert_bit_identical(&one, &r, &format!("full sweep, {shards} shards"));
+    }
+}
+
+#[test]
+fn block_size_never_changes_aggregates() {
+    // --block is the third pure performance knob: any trial-block size
+    // folds identical rows in identical order (DESIGN.md §9)
+    let p = Params::default();
+    let base = run_campaign(
+        &p,
+        &mc_spec(Variant::Smart, Workload::Fixed { a: 15, b: 15 }, 2, 2),
+        Backend::Native,
+        None,
+    )
+    .unwrap();
+    for block in [1usize, 7, 100, 4096] {
+        let mut spec = mc_spec(Variant::Smart, Workload::Fixed { a: 15, b: 15 }, 2, 2);
+        spec.block = block;
+        let r = run_campaign(&p, &spec, Backend::Native, None).unwrap();
+        assert_bit_identical(&base, &r, &format!("block {block}"));
     }
 }
 
