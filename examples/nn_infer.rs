@@ -1,0 +1,60 @@
+//! End-to-end noisy-inference demo on the **native** block-execution
+//! path (`rust/src/nn/`, DESIGN.md §10): the checked-in fixture MLP
+//! with every multiply-accumulate executed by the simulated analog MAC,
+//! head-to-head across the paper's design variants.
+//!
+//! ```bash
+//! cargo run --offline --release --example nn_infer
+//! ```
+//!
+//! Prints the ideal (exact integer) top-1 accuracy, then each variant's
+//! noisy accuracy, agreement with the exact pipeline, output error, and
+//! energy per inference — SMART's suppressed threshold shrinks the
+//! application-level noise penalty at the same supply. (The sibling
+//! `nn_inference` example drives the AOT/PJRT path instead.)
+
+use anyhow::Result;
+use smart_insram::mac::Variant;
+use smart_insram::nn::{run_infer, InferOptions, ModelSpec};
+use smart_insram::params::Params;
+
+fn main() -> Result<()> {
+    let params = Params::default();
+    let spec = match ModelSpec::load("configs/nn.toml") {
+        Ok(s) => s,
+        Err(_) => ModelSpec::fixture(), // run from any cwd
+    };
+    let trials = 32u32;
+
+    // Noise off: the analog pipeline collapses to the exact integer one.
+    let quiet = InferOptions { trials, noise_off: true, ..InferOptions::default() };
+    let ideal = run_infer(&params, &spec, &quiet)?;
+    assert_eq!(ideal.noisy_accuracy, ideal.ideal_accuracy);
+    println!(
+        "model '{}': {} MACs/inference, exact top-1 {:.1}% ({} trials)\n",
+        ideal.name,
+        ideal.macs_per_inference,
+        ideal.ideal_accuracy * 100.0,
+        trials
+    );
+
+    println!(
+        "{:<14} {:>9} {:>10} {:>10} {:>13} {:>12}",
+        "variant", "noisy", "vs-exact", "out-err", "pJ/inference", "MAC evals/s"
+    );
+    for variant in [Variant::Smart, Variant::Aid, Variant::Imac] {
+        let opts = InferOptions { trials, variant, ..InferOptions::default() };
+        let r = run_infer(&params, &spec, &opts)?;
+        println!(
+            "{:<14} {:>8.1}% {:>9.1}% {:>10.4} {:>13.2} {:>12.0}",
+            variant.name(),
+            r.noisy_accuracy * 100.0,
+            r.agreement * 100.0,
+            r.out_err.mean(),
+            r.energy_per_inference_pj,
+            r.throughput()
+        );
+    }
+    println!("\n(noisy = top-1 on the synthetic labels; vs-exact = agreement with integer math)");
+    Ok(())
+}

@@ -29,6 +29,24 @@ use crate::montecarlo::MismatchSampler;
 use crate::params::Params;
 use crate::runtime::{MacBatchOut, XlaRuntime};
 
+/// Default lanes per [`TrialBlock`] when neither the `--block` nor the
+/// legacy `--batch` knob is set — enough for the lockstep loop to keep
+/// SIMD lanes busy. The single statement of the auto chunk size, shared
+/// by the campaign runner, `smart bench`'s provenance fields, and the
+/// `nn` inference tiler.
+pub const DEFAULT_BLOCK_LEN: usize = 256;
+
+/// Resolve a worker-thread knob: 0 (auto) means all available
+/// parallelism. Shared by every runner so CLI provenance fields record
+/// exactly what executed.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
 /// Execution backend for a campaign.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -118,20 +136,16 @@ pub fn run_native_campaign_with(
             .with_corner(spec.corner);
 
     let total = spec.total_items(operands.len());
-    // Chunk size: `--block`, else the legacy `--batch` knob, else 256
-    // lanes — enough for the lockstep loop to keep SIMD lanes busy.
+    // Chunk size: `--block`, else the legacy `--batch` knob, else the
+    // shared auto default.
     let block_len = if spec.block > 0 {
         spec.block
     } else if spec.batch > 0 {
         spec.batch
     } else {
-        256
+        DEFAULT_BLOCK_LEN
     };
-    let threads = if spec.workers > 0 {
-        spec.workers
-    } else {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    };
+    let threads = resolve_threads(spec.workers);
     // Auto-sharding: a few shards per thread for load balance, never more
     // than one shard per block of work. Any choice yields identical
     // aggregates; this only tunes scheduling granularity.

@@ -99,7 +99,11 @@ mod tests {
         let pts = iv_sweep(card, &[0.0, 0.6], n);
         let (base, smart) = pts.split_at(n);
         let i_ref = 10e-6;
-        let shift = turn_on_v_wl(base, i_ref).unwrap() - turn_on_v_wl(smart, i_ref).unwrap();
+        let base_on = turn_on_v_wl(base, i_ref)
+            .expect("unbiased sweep must cross the 10 uA reference on the default card");
+        let smart_on = turn_on_v_wl(smart, i_ref)
+            .expect("body-biased sweep must cross the 10 uA reference on the default card");
+        let shift = base_on - smart_on;
         assert!(
             (0.110..0.140).contains(&shift),
             "turn-on shift {shift} V, expected ~125 mV"

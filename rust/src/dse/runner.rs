@@ -23,7 +23,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::{run_campaign, Backend};
 use crate::dac::WordlineDac;
 use crate::energy::EnergyModel;
-use crate::report::csv_cell;
+use crate::report::{canon, csv_cell};
 use crate::util::json::{self, Value};
 
 use super::pareto::pareto_flags;
@@ -211,17 +211,6 @@ fn run_point(spec: &SweepSpec, point: &GridPoint, opts: &SweepOptions) -> Result
         energy_pj: canon(cost.energy * 1e12),
         freq_mhz: canon(cost.frequency / 1e6),
     })
-}
-
-/// Round to the artifact precision (the CSV cell format, 6 significant
-/// digits) so CSV and JSON carry identical values and resume round-trips
-/// are byte-exact.
-fn canon(v: f64) -> f64 {
-    if v.is_finite() {
-        format!("{v:.6e}").parse().unwrap_or(v)
-    } else {
-        v
-    }
 }
 
 /// The resume key: the first eight CSV columns, rendered exactly as the

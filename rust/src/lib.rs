@@ -25,7 +25,11 @@
 //! cross-check oracle and for shapes the fixed-batch artifacts don't
 //! cover. On top of the campaign layer, [`dse`] sweeps the design knobs
 //! (supply, body bias, bit-width, corner, variant) across a grid and
-//! extracts the energy-vs-accuracy Pareto front (DESIGN.md §8).
+//! extracts the energy-vs-accuracy Pareto front (DESIGN.md §8), and
+//! [`nn`] runs quantized neural-network inference with every
+//! multiply-accumulate executed by the simulated noisy MAC — the
+//! application-level accuracy story behind the paper's pitch
+//! (DESIGN.md §10).
 
 #![warn(missing_docs)]
 
@@ -51,6 +55,8 @@ pub mod mac;
 pub mod metrics;
 /// Seeded mismatch/corner sampling behind the 1000-point MC (§IV).
 pub mod montecarlo;
+/// Noisy NN inference on the simulated MAC (`smart infer`).
+pub mod nn;
 /// The 65 nm model card (device + circuit constants).
 pub mod params;
 /// Report emission: the paper's tables/figures as markdown and CSV.

@@ -9,6 +9,7 @@
 //! smart table1 [--n-mc 300]
 //! smart run configs/fig8.toml
 //! smart sweep configs/dse.toml --shards 4 --threads 2 [--resume]
+//! smart infer configs/nn.toml --trials 64 --variant smart [--json]
 //! ```
 
 use std::path::PathBuf;
@@ -50,19 +51,42 @@ COMMANDS:
                                front; artifacts are byte-identical for any
                                --shards/--threads/--block, and --resume
                                skips points already present in the CSV
-  bench [--n-mc N] [--json] [--smoke] [--out DIR]
-                               native kernel throughput: the scalar oracle
+  bench [--n-mc N] [--threads T] [--block N] [--json] [--smoke]
+        [--out DIR]            native kernel throughput: the scalar oracle
                                vs the lockstep block kernel on the fig8
                                campaign; --json writes BENCH_native.json
-                               (schema: backend, items_per_sec, n_items),
+                               (schema: backend, items_per_sec, n_items,
+                               plus variant/block/threads provenance),
                                --smoke runs one sample for CI
+  infer <nn.toml> [--trials N] [--variant V] [--shards K] [--threads T]
+        [--block B] [--scalar] [--noise-off] [--json] [--out DIR]
+        [--smoke]              noisy NN inference: run the model file's
+                               quantized layers with every MAC executed
+                               by the simulated noisy accelerator; report
+                               ideal-vs-noisy top-1 accuracy, output
+                               error, and energy per inference; --json
+                               writes infer.csv/infer.json (byte-identical
+                               for any --shards/--threads/--block and for
+                               either kernel); --noise-off zeroes the
+                               mismatch sigmas (the noisy pass must then
+                               equal the exact integer pipeline);
+                               --smoke caps trials at 8 for CI
 
 OPTIONS:
   --artifacts DIR   artifact directory (default: $SMART_ARTIFACTS or ./artifacts)
   --native          use the native Rust simulator instead of the AOT/PJRT path
   --variant V       smart | aid | imac | smart-on-imac (default: smart)
-  --out DIR         sweep artifact directory (default: target/dse)
+  --out DIR         artifact directory (sweep default: target/dse;
+                    infer default: target/infer; bench default: .)
 ";
+
+/// Resolve the worker-thread knob: `--threads` is the documented flag,
+/// `--workers` remains as an alias for existing scripts (shared by the
+/// `mc`, `sweep`, and `infer` subcommands).
+fn threads_opt(args: &Args) -> Result<usize> {
+    let w = args.opt_parse("workers", 0usize).map_err(|e| anyhow::anyhow!(e))?;
+    args.opt_parse("threads", w).map_err(|e| anyhow::anyhow!(e))
+}
 
 fn main() -> ExitCode {
     match run() {
@@ -77,7 +101,7 @@ fn main() -> ExitCode {
 fn run() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["native", "full-sweep", "help", "resume", "json", "smoke"],
+        &["native", "full-sweep", "help", "resume", "json", "smoke", "scalar", "noise-off"],
     )
     .map_err(|e| anyhow::anyhow!(e))?;
     if args.flag("help") || args.positional(0).is_none() {
@@ -123,12 +147,7 @@ fn run() -> Result<()> {
                 corner: args
                     .opt_parse("corner", Corner::Tt)
                     .map_err(|e| anyhow::anyhow!(e))?,
-                workers: {
-                    // --threads is the documented knob; --workers remains
-                    // as an alias for existing scripts
-                    let w = args.opt_parse("workers", 0usize).map_err(|e| anyhow::anyhow!(e))?;
-                    args.opt_parse("threads", w).map_err(|e| anyhow::anyhow!(e))?
-                },
+                workers: threads_opt(&args)?,
                 batch: args.opt_parse("batch", 0usize).map_err(|e| anyhow::anyhow!(e))?,
                 shards: args.opt_parse("shards", 0usize).map_err(|e| anyhow::anyhow!(e))?,
                 block: args.opt_parse("block", 0usize).map_err(|e| anyhow::anyhow!(e))?,
@@ -153,7 +172,59 @@ fn run() -> Result<()> {
         "bench" => {
             let n_mc: u32 = args.opt_parse("n-mc", 1000u32).map_err(|e| anyhow::anyhow!(e))?;
             let out: PathBuf = args.opt("out").map(PathBuf::from).unwrap_or_else(|| ".".into());
-            cmd_bench(&params, variant, n_mc, args.flag("smoke"), args.flag("json"), &out)
+            let threads = threads_opt(&args)?;
+            let block = args.opt_parse("block", 0usize).map_err(|e| anyhow::anyhow!(e))?;
+            cmd_bench(
+                &params,
+                variant,
+                n_mc,
+                threads,
+                block,
+                args.flag("smoke"),
+                args.flag("json"),
+                &out,
+            )
+        }
+        "infer" => {
+            let path = args.positional(1).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: smart infer <nn.toml> [--trials N --variant V --shards K \
+                     --threads T --block B --scalar --noise-off --json --out DIR --smoke]"
+                )
+            })?;
+            let spec = smart_insram::nn::ModelSpec::load(path)?;
+            let trials = {
+                let t = args.opt_parse("trials", 0u32).map_err(|e| anyhow::anyhow!(e))?;
+                let t = if t > 0 { t } else { spec.trials };
+                if args.flag("smoke") {
+                    t.min(8)
+                } else {
+                    t
+                }
+            };
+            let opts = smart_insram::nn::InferOptions {
+                trials,
+                shards: args.opt_parse("shards", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+                threads: threads_opt(&args)?,
+                block: args.opt_parse("block", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+                variant,
+                scalar: args.flag("scalar"),
+                noise_off: args.flag("noise-off"),
+                write_artifacts: args.flag("json"),
+                out_dir: args
+                    .opt("out")
+                    .map(PathBuf::from)
+                    .unwrap_or_else(|| smart_insram::nn::InferOptions::default().out_dir),
+            };
+            let r = smart_insram::nn::run_infer(&params, &spec, &opts)?;
+            print!("{}", report::infer_panel(&r));
+            println!(
+                "throughput: {:.0} MAC evals/s over {} trials ({:.2?})",
+                r.throughput(),
+                r.trials,
+                r.wall
+            );
+            Ok(())
         }
         "sweep" => {
             let path = args.positional(1).ok_or_else(|| {
@@ -164,12 +235,7 @@ fn run() -> Result<()> {
             let sweep = SweepSpec::load(path)?;
             let opts = SweepOptions {
                 shards: args.opt_parse("shards", 0usize).map_err(|e| anyhow::anyhow!(e))?,
-                threads: {
-                    // --threads is the documented knob; --workers remains
-                    // as an alias for symmetry with `smart mc`
-                    let w = args.opt_parse("workers", 0usize).map_err(|e| anyhow::anyhow!(e))?;
-                    args.opt_parse("threads", w).map_err(|e| anyhow::anyhow!(e))?
-                },
+                threads: threads_opt(&args)?,
                 block: args.opt_parse("block", 0usize).map_err(|e| anyhow::anyhow!(e))?,
                 resume: args.flag("resume"),
                 out_dir: args
@@ -266,12 +332,16 @@ fn cmd_mac(
 /// `smart bench`: native kernel throughput on the paper's fig8 campaign —
 /// the scalar per-item oracle against the lockstep block kernel. With
 /// `--json`, records the measurement as `BENCH_native.json` (schema:
-/// `backend`, `items_per_sec`, `n_items`) so the perf trajectory is
-/// tracked across commits; `--smoke` runs a single sample for CI.
+/// `backend`, `items_per_sec`, `n_items`, plus `variant`/`block`/
+/// `threads` provenance so the perf trajectory is comparable across
+/// commits and hosts); `--smoke` runs a single sample for CI.
+#[allow(clippy::too_many_arguments)]
 fn cmd_bench(
     params: &Params,
     variant: Variant,
     n_mc: u32,
+    threads: usize,
+    block: usize,
     smoke: bool,
     json: bool,
     out: &std::path::Path,
@@ -282,6 +352,15 @@ fn cmd_bench(
 
     let mut spec = CampaignSpec::paper_fig8(variant);
     spec.n_mc = n_mc;
+    spec.workers = threads;
+    spec.block = block;
+    // Provenance for the JSON: the resolved thread count and the lane
+    // cap handed to the runner (its auto default; shards may still clamp
+    // a block to the shard's own length) — enough to compare
+    // measurements across runs and hosts.
+    let threads_used = smart_insram::coordinator::resolve_threads(threads);
+    let block_cap =
+        if block > 0 { block } else { smart_insram::coordinator::DEFAULT_BLOCK_LEN };
     let n_items = u64::from(n_mc);
     let runner = if smoke { Runner { warmup: 0, samples: 1 } } else { Runner::default() };
     let measure = |kernel: &dyn SimKernel| {
@@ -306,6 +385,8 @@ fn cmd_bench(
         m.insert("scalar_items_per_sec".to_string(), Value::Num(scalar_ips));
         m.insert("speedup".to_string(), Value::Num(speedup));
         m.insert("variant".to_string(), Value::Str(variant.token().to_string()));
+        m.insert("block".to_string(), Value::Num(block_cap as f64));
+        m.insert("threads".to_string(), Value::Num(threads_used as f64));
         let mut text = to_string_pretty(&Value::Obj(m));
         text.push('\n');
         std::fs::create_dir_all(out)

@@ -1,0 +1,405 @@
+//! The noisy-inference campaign: sharded trials, canonical-order folds,
+//! energy costing, and the `smart infer` CSV/JSON artifacts.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{execute_sharded, resolve_threads, shard_range, DEFAULT_BLOCK_LEN};
+use crate::energy::EnergyModel;
+use crate::mac::{BlockKernel, NativeMacEngine, ScalarKernel, SimKernel, Variant};
+use crate::metrics::OnlineStats;
+use crate::montecarlo::MismatchSampler;
+use crate::params::Params;
+use crate::report::{canon, csv_cell};
+use crate::util::json::{self, Value};
+
+use super::model::ModelSpec;
+use super::tiler::Tiler;
+
+/// Execution knobs of one inference campaign. `shards`/`threads`/`block`
+/// and the kernel choice are pure performance knobs — the report and
+/// artifacts are byte-identical for every combination (DESIGN.md §10).
+#[derive(Debug, Clone)]
+pub struct InferOptions {
+    /// Inference trials (0 = the model file's `trials`).
+    pub trials: u32,
+    /// Shards the trial space splits into (0 = auto).
+    pub shards: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Lanes per [`crate::mac::TrialBlock`] (0 = auto, 256).
+    pub block: usize,
+    /// Design variant executing the MACs.
+    pub variant: Variant,
+    /// Use the per-op [`ScalarKernel`] oracle instead of the lockstep
+    /// [`BlockKernel`] (bit-identical; for cross-checks).
+    pub scalar: bool,
+    /// Zero the mismatch sigmas: the noisy pass must then equal the
+    /// exact integer pipeline bit for bit.
+    pub noise_off: bool,
+    /// Write `infer.csv` / `infer.json` to `out_dir`.
+    pub write_artifacts: bool,
+    /// Artifact directory.
+    pub out_dir: PathBuf,
+}
+
+impl Default for InferOptions {
+    fn default() -> Self {
+        Self {
+            trials: 0,
+            shards: 0,
+            threads: 0,
+            block: 0,
+            variant: Variant::Smart,
+            scalar: false,
+            noise_off: false,
+            write_artifacts: false,
+            out_dir: PathBuf::from("target/infer"),
+        }
+    }
+}
+
+/// One inference trial's outcome (a row of `infer.csv`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrialRecord {
+    /// Trial index (also the Monte-Carlo instance index).
+    pub trial: u64,
+    /// Synthetic ground-truth class.
+    pub label: usize,
+    /// Exact integer pipeline's top-1 class.
+    pub ideal_pred: usize,
+    /// Noisy analog pipeline's top-1 class.
+    pub noisy_pred: usize,
+    /// Relative L2 error of the noisy output scores vs the exact ones
+    /// (canonicalized to artifact precision).
+    pub out_err: f64,
+    /// Raw dynamic bitline energy of the trial (J), canonical op order.
+    pub energy_raw: f64,
+    /// Energy per inference through the peripheral model (pJ,
+    /// canonicalized).
+    pub energy_pj: f64,
+    /// Saturation-exit faults across the trial's MAC ops.
+    pub faults: u64,
+}
+
+/// A finished inference campaign.
+#[derive(Debug, Clone)]
+pub struct InferReport {
+    /// Model label (from the spec).
+    pub name: String,
+    /// Variant that executed the MACs.
+    pub variant: Variant,
+    /// Kernel name (`scalar` or `block`).
+    pub kernel: &'static str,
+    /// Trials run.
+    pub trials: u32,
+    /// Analog MAC ops per inference.
+    pub macs_per_inference: u64,
+    /// Exact-pipeline top-1 accuracy on the synthetic labels.
+    pub ideal_accuracy: f64,
+    /// Noisy-pipeline top-1 accuracy on the synthetic labels.
+    pub noisy_accuracy: f64,
+    /// Fraction of trials where noisy and exact top-1 agree.
+    pub agreement: f64,
+    /// Per-trial relative output-error statistics (canonical order).
+    pub out_err: OnlineStats,
+    /// Fault rate over all MAC ops.
+    pub fault_rate: f64,
+    /// Mean energy per MAC through the peripheral model (pJ).
+    pub energy_per_mac_pj: f64,
+    /// Mean energy per inference (pJ).
+    pub energy_per_inference_pj: f64,
+    /// Operating frequency of the executing variant (MHz).
+    pub freq_mhz: f64,
+    /// Per-trial outcomes in canonical trial order.
+    pub records: Vec<TrialRecord>,
+    /// CSV artifact path, when written.
+    pub csv_path: Option<PathBuf>,
+    /// JSON artifact path, when written.
+    pub json_path: Option<PathBuf>,
+    /// Campaign wall-clock (reporting only; never in the artifacts).
+    pub wall: std::time::Duration,
+}
+
+impl InferReport {
+    /// Accuracy lost to analog noise: ideal minus noisy top-1.
+    pub fn accuracy_delta(&self) -> f64 {
+        self.ideal_accuracy - self.noisy_accuracy
+    }
+
+    /// MAC evaluations per wall-clock second.
+    pub fn throughput(&self) -> f64 {
+        self.macs_per_inference as f64 * f64::from(self.trials)
+            / self.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Relative L2 distance between the noisy and exact output scores.
+fn rel_l2(noisy: &[f64], exact: &[f64]) -> f64 {
+    let num: f64 = noisy.iter().zip(exact).map(|(&n, &e)| (n - e) * (n - e)).sum();
+    let den: f64 = exact.iter().map(|&e| e * e).sum();
+    (num / den.max(1e-24)).sqrt()
+}
+
+/// Run a sharded noisy-inference campaign over `spec`'s synthetic set.
+///
+/// Trial `t`'s input, weights, and per-op mismatch deviates are pure
+/// functions of `(spec.seed, t)`, trials fold in canonical order, and
+/// artifact numbers are canonicalized — so the report and any written
+/// artifacts are byte-identical for every `shards`/`threads`/`block`/
+/// kernel choice (pinned in `tests/nn_infer.rs`).
+///
+/// ```
+/// use smart_insram::nn::{run_infer, InferOptions, ModelSpec};
+/// use smart_insram::params::Params;
+///
+/// let spec = ModelSpec::fixture();
+/// let opts = InferOptions { trials: 2, noise_off: true, ..InferOptions::default() };
+/// let r = run_infer(&Params::default(), &spec, &opts).unwrap();
+/// assert_eq!(r.trials, 2);
+/// // with mismatch off, the analog pipeline is the exact pipeline
+/// assert_eq!(r.agreement, 1.0);
+/// assert_eq!(r.out_err.max(), 0.0);
+/// ```
+pub fn run_infer(params: &Params, spec: &ModelSpec, opts: &InferOptions) -> Result<InferReport> {
+    spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let trials = if opts.trials > 0 { opts.trials } else { spec.trials };
+    let model = spec.build(trials);
+    let cfg = opts.variant.config(params);
+    let engine = NativeMacEngine::new(*params, cfg);
+    let (sv, sb) = if opts.noise_off {
+        (0.0, 0.0)
+    } else {
+        (params.circuit.sigma_vth, params.circuit.sigma_beta)
+    };
+    let sampler = MismatchSampler::new(spec.seed, sv, sb);
+    let kernel: &dyn SimKernel = if opts.scalar { &ScalarKernel } else { &BlockKernel };
+    let emodel = EnergyModel::default();
+    let v_wl_max = engine.dac().v_wl(15);
+    let ops = model.ops_per_trial();
+
+    let block_len = if opts.block > 0 { opts.block } else { DEFAULT_BLOCK_LEN };
+    let threads = resolve_threads(opts.threads);
+    let total = u64::from(trials);
+    let n_shards =
+        if opts.shards > 0 { opts.shards } else { (total as usize).min(threads * 4).max(1) };
+
+    let t0 = Instant::now();
+    // One calibration table (256 nominal transients) shared by every
+    // shard's tiler — cloning 1 KB beats re-simulating it per shard.
+    let cal = Tiler::calibrate(&engine);
+    let run_shard = |shard: usize| {
+        let (start, end) = shard_range(total, n_shards, shard);
+        let mut tiler = Tiler::with_calibration(&engine, kernel, &sampler, block_len, cal.clone());
+        let mut recs = Vec::with_capacity((end - start) as usize);
+        for t in start..end {
+            let (label, xs) = model.spec.trial_input(t);
+            let x0 = model.quantize_input(&xs);
+            let (ideal_pred, ideal_y) = model.forward_exact(&x0);
+            let base = t * ops;
+            let mut x = x0;
+            let mut energy_raw = 0.0f64;
+            let mut faults = 0u64;
+            let last = model.layers.len() - 1;
+            let mut final_acc = Vec::new();
+            for l in 0..model.layers.len() {
+                let r = tiler.matvec(&model.layers[l].w, &x, base + model.layer_item_offset(l));
+                energy_raw += r.energy;
+                faults += r.faults;
+                if l < last {
+                    x = model.activate(l, &r.acc);
+                } else {
+                    final_acc = r.acc;
+                }
+            }
+            let noisy_pred = model.predict(&final_acc);
+            let noisy_y = model.output_real(&final_acc);
+            let energy_pj =
+                canon(emodel.op_energy(&cfg, energy_raw / ops as f64, v_wl_max) * ops as f64 * 1e12);
+            recs.push(TrialRecord {
+                trial: t,
+                label,
+                ideal_pred,
+                noisy_pred,
+                out_err: canon(rel_l2(&noisy_y, &ideal_y)),
+                energy_raw,
+                energy_pj,
+                faults,
+            });
+        }
+        recs
+    };
+
+    // Canonical-order fold: execute_sharded hands shards back in shard
+    // (== trial) order regardless of the thread schedule.
+    let mut records: Vec<TrialRecord> = Vec::with_capacity(total as usize);
+    let mut out_err = OnlineStats::new();
+    let mut raw_energy = OnlineStats::new();
+    let (mut ideal_ok, mut noisy_ok, mut agree, mut faults) = (0u64, 0u64, 0u64, 0u64);
+    execute_sharded(n_shards, threads, run_shard, |_, recs| {
+        for r in recs {
+            out_err.push(r.out_err);
+            raw_energy.push(r.energy_raw);
+            ideal_ok += u64::from(r.ideal_pred == r.label);
+            noisy_ok += u64::from(r.noisy_pred == r.label);
+            agree += u64::from(r.noisy_pred == r.ideal_pred);
+            faults += r.faults;
+            records.push(r);
+        }
+    });
+    let wall = t0.elapsed();
+
+    let cost = emodel.cost(&cfg, raw_energy.mean() / ops as f64, engine.full_scale(), v_wl_max);
+    let rate = |n: u64| canon(n as f64 / total as f64);
+    let mut report = InferReport {
+        name: spec.name.clone(),
+        variant: opts.variant,
+        kernel: kernel.name(),
+        trials,
+        macs_per_inference: ops,
+        ideal_accuracy: rate(ideal_ok),
+        noisy_accuracy: rate(noisy_ok),
+        agreement: rate(agree),
+        out_err,
+        fault_rate: canon(faults as f64 / (ops * total) as f64),
+        energy_per_mac_pj: canon(cost.energy * 1e12),
+        energy_per_inference_pj: canon(cost.energy * ops as f64 * 1e12),
+        freq_mhz: canon(cost.frequency / 1e6),
+        records,
+        csv_path: None,
+        json_path: None,
+        wall,
+    };
+    if opts.write_artifacts {
+        std::fs::create_dir_all(&opts.out_dir)
+            .with_context(|| format!("creating {}", opts.out_dir.display()))?;
+        let csv_path = opts.out_dir.join("infer.csv");
+        let json_path = opts.out_dir.join("infer.json");
+        std::fs::write(&csv_path, render_csv(&report))
+            .with_context(|| format!("writing {}", csv_path.display()))?;
+        std::fs::write(&json_path, render_json(spec, &report))
+            .with_context(|| format!("writing {}", json_path.display()))?;
+        report.csv_path = Some(csv_path);
+        report.json_path = Some(json_path);
+    }
+    Ok(report)
+}
+
+/// Column order of the per-trial CSV artifact.
+const CSV_HEADER: &str = "trial,label,ideal_pred,noisy_pred,agree,out_err,energy_pj,faults";
+
+fn render_csv(r: &InferReport) -> String {
+    let mut s = String::with_capacity(r.records.len() * 64 + CSV_HEADER.len() + 1);
+    s.push_str(CSV_HEADER);
+    s.push('\n');
+    for t in &r.records {
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{},{},{},{}",
+            t.trial,
+            t.label,
+            t.ideal_pred,
+            t.noisy_pred,
+            u8::from(t.noisy_pred == t.ideal_pred),
+            csv_cell(t.out_err),
+            csv_cell(t.energy_pj),
+            t.faults
+        );
+    }
+    s
+}
+
+fn render_json(spec: &ModelSpec, r: &InferReport) -> String {
+    let mut root = std::collections::BTreeMap::new();
+    let mut put = |k: &str, v: Value| {
+        root.insert(k.to_string(), v);
+    };
+    put("name", Value::Str(r.name.clone()));
+    put("variant", Value::Str(r.variant.token().to_string()));
+    put("kernel", Value::Str(r.kernel.to_string()));
+    put("seed", Value::Num(spec.seed as f64));
+    put("bits", Value::Num(f64::from(spec.bits)));
+    put("trials", Value::Num(f64::from(r.trials)));
+    put("macs_per_inference", Value::Num(r.macs_per_inference as f64));
+    put("ideal_accuracy", Value::Num(r.ideal_accuracy));
+    put("noisy_accuracy", Value::Num(r.noisy_accuracy));
+    put("accuracy_delta", Value::Num(canon(r.accuracy_delta())));
+    put("agreement", Value::Num(r.agreement));
+    put("out_err_mean", Value::Num(canon(r.out_err.mean())));
+    put("out_err_max", Value::Num(canon(r.out_err.max())));
+    put("fault_rate", Value::Num(r.fault_rate));
+    put("energy_per_mac_pj", Value::Num(r.energy_per_mac_pj));
+    put("energy_per_inference_pj", Value::Num(r.energy_per_inference_pj));
+    put("freq_mhz", Value::Num(r.freq_mhz));
+    let rows: Vec<Value> = r
+        .records
+        .iter()
+        .map(|t| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("trial".to_string(), Value::Num(t.trial as f64));
+            m.insert("label".to_string(), Value::Num(t.label as f64));
+            m.insert("ideal_pred".to_string(), Value::Num(t.ideal_pred as f64));
+            m.insert("noisy_pred".to_string(), Value::Num(t.noisy_pred as f64));
+            m.insert("agree".to_string(), Value::Bool(t.noisy_pred == t.ideal_pred));
+            m.insert("out_err".to_string(), Value::Num(t.out_err));
+            m.insert("energy_pj".to_string(), Value::Num(t.energy_pj));
+            m.insert("faults".to_string(), Value::Num(t.faults as f64));
+            Value::Obj(m)
+        })
+        .collect();
+    put("records", Value::Arr(rows));
+    let mut text = json::to_string_pretty(&Value::Obj(root));
+    text.push('\n');
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canon_matches_the_csv_cell_precision() {
+        let x = canon(0.012_345_678_9);
+        assert_eq!(canon(x), x);
+        assert_eq!(csv_cell(x), "1.234568e-2");
+        assert!(canon(f64::NAN).is_nan());
+        assert_eq!(canon(0.0), 0.0);
+    }
+
+    #[test]
+    fn rel_l2_basics() {
+        assert_eq!(rel_l2(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        let e = rel_l2(&[1.0, 2.0], &[1.0, 1.0]);
+        assert!((e - 1.0 / (2.0f64).sqrt()).abs() < 1e-12);
+        // all-zero reference never divides by zero
+        assert!(rel_l2(&[1.0], &[0.0]).is_finite());
+    }
+
+    #[test]
+    fn infer_runs_end_to_end_on_the_fixture() {
+        let spec = ModelSpec::fixture();
+        let opts = InferOptions { trials: 4, ..InferOptions::default() };
+        let r = run_infer(&Params::default(), &spec, &opts).unwrap();
+        assert_eq!(r.trials, 4);
+        assert_eq!(r.records.len(), 4);
+        assert_eq!(r.macs_per_inference, 8 * 16 + 4 * 8);
+        assert!(r.energy_per_inference_pj > 0.0);
+        assert!((0.0..=1.0).contains(&r.noisy_accuracy));
+        assert!(r.records.windows(2).all(|w| w[0].trial < w[1].trial));
+    }
+
+    #[test]
+    fn artifacts_render_deterministically() {
+        let spec = ModelSpec::fixture();
+        let opts = InferOptions { trials: 3, ..InferOptions::default() };
+        let p = Params::default();
+        let a = run_infer(&p, &spec, &opts).unwrap();
+        let b = run_infer(&p, &spec, &opts).unwrap();
+        assert_eq!(render_csv(&a), render_csv(&b));
+        assert_eq!(render_json(&spec, &a), render_json(&spec, &b));
+        assert!(render_csv(&a).starts_with(CSV_HEADER));
+    }
+}

@@ -1,0 +1,102 @@
+//! Dense NN layers over quantized weights, with the exact-integer
+//! reference path the noisy MAC execution is compared against.
+
+use anyhow::Result;
+
+use crate::util::json::Value;
+
+use super::quant::{QuantMatrix, QuantVec};
+
+/// Shape of one dense layer as written in the model file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSpec {
+    /// Input features.
+    pub inputs: usize,
+    /// Output neurons.
+    pub outputs: usize,
+    /// Apply ReLU before handing activations to the next layer.
+    pub relu: bool,
+}
+
+impl LayerSpec {
+    /// Parse one `[[layers]]` table: `inputs`/`outputs` required,
+    /// `relu` optional (default false).
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let dim = |k: &str| {
+            v.get(k)
+                .and_then(Value::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("layers.{k} missing or not an integer"))
+        };
+        Ok(Self {
+            inputs: dim("inputs")? as usize,
+            outputs: dim("outputs")? as usize,
+            relu: v.get("relu").and_then(Value::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+/// One dense layer: a quantized weight matrix plus its activation kind.
+#[derive(Debug, Clone)]
+pub struct DenseLayer {
+    /// Per-layer symmetrically quantized weights.
+    pub w: QuantMatrix,
+    /// Apply ReLU before requantizing for the next layer.
+    pub relu: bool,
+}
+
+impl DenseLayer {
+    /// Exact integer matrix–vector product: `acc_j = sum_i w_ji * x_i`
+    /// in signed integer code space — the bit-exact reference the tiled
+    /// analog execution reproduces when mismatch is off.
+    pub fn forward_exact(&self, x: &QuantVec) -> Vec<i64> {
+        assert_eq!(x.len(), self.w.cols, "layer input shape mismatch");
+        (0..self.w.rows)
+            .map(|j| {
+                (0..self.w.cols)
+                    .map(|i| i64::from(self.w.at(j, i)) * i64::from(x.q[i]))
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Analog MAC operations this layer tiles into, for operands split
+    /// into `words` 4-bit array words each (`rows * cols * words^2`).
+    pub fn ops(&self, words: u32) -> u64 {
+        self.w.rows as u64 * self.w.cols as u64 * u64::from(words) * u64::from(words)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::quant::QParams;
+    use crate::util::toml_lite;
+
+    #[test]
+    fn exact_forward_matches_hand_computation() {
+        let w = QuantMatrix {
+            rows: 2,
+            cols: 2,
+            q: vec![3, -5, 2, 7],
+            qp: QParams::symmetric(1.0, 4),
+        };
+        let layer = DenseLayer { w, relu: false };
+        let x = QuantVec { q: vec![4, 9], qp: QParams::symmetric(1.0, 4) };
+        assert_eq!(layer.forward_exact(&x), vec![3 * 4 - 5 * 9, 2 * 4 + 7 * 9]);
+        assert_eq!(layer.ops(1), 4);
+        assert_eq!(layer.ops(2), 16);
+    }
+
+    #[test]
+    fn spec_parses_with_relu_default() {
+        let doc = toml_lite::parse("[[layers]]\ninputs = 16\noutputs = 8\nrelu = true\n").unwrap();
+        let arr = doc.get("layers").unwrap().as_arr().unwrap();
+        let spec = LayerSpec::from_value(&arr[0]).unwrap();
+        assert_eq!(spec, LayerSpec { inputs: 16, outputs: 8, relu: true });
+        let doc = toml_lite::parse("[[layers]]\ninputs = 4\noutputs = 2\n").unwrap();
+        let spec = LayerSpec::from_value(&doc.get("layers").unwrap().as_arr().unwrap()[0]).unwrap();
+        assert!(!spec.relu);
+        let doc = toml_lite::parse("[[layers]]\ninputs = 4\n").unwrap();
+        assert!(LayerSpec::from_value(&doc.get("layers").unwrap().as_arr().unwrap()[0]).is_err());
+    }
+}

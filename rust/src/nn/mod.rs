@@ -1,0 +1,52 @@
+//! Noisy neural-network inference on the analog in-SRAM MAC
+//! (`smart infer`, DESIGN.md §10).
+//!
+//! The paper's pitch is that threshold-voltage suppression makes the
+//! analog 4×4-bit MAC accurate *enough for real workloads*; this
+//! subsystem closes the loop by running fixed-point NN inference where
+//! **every multiply-accumulate executes on the simulated noisy MAC**
+//! instead of exact integer arithmetic. The pipeline:
+//!
+//! * [`Tensor`] + [`QParams`] — a minimal row-major `f64` tensor and
+//!   symmetric per-layer quantization to the MAC's 4-bit operand width,
+//!   with multi-bit operands split into 4-bit words exactly as the
+//!   array stores them ([`nibble`], the `MacWord` convention);
+//! * [`DenseLayer`] / [`ModelSpec`] — dense layers with ReLU/argmax,
+//!   specified in a `configs/nn.toml`-style file; weights come from a
+//!   seeded [`crate::montecarlo::SplitMix64`] stream so models are
+//!   reproducible without external weight files, and a tiny fixture
+//!   model is embedded ([`ModelSpec::fixture`]);
+//! * [`Tiler`] — tiles each matrix–vector product into 4×4-bit MAC ops
+//!   and drives them through the existing [`crate::mac::SimKernel`]
+//!   block-execution path (scalar oracle and lockstep block kernel are
+//!   bit-identical), drawing per-op mismatch from
+//!   [`crate::montecarlo::MismatchSampler`]'s per-item counter streams;
+//! * [`run_infer`] — a sharded campaign over N inference trials (one
+//!   Monte-Carlo instance per trial) on a deterministic synthetic
+//!   classification set, folding per-trial top-1 accuracy and output
+//!   error through [`crate::metrics::OnlineStats`] in canonical trial
+//!   order, and costing energy per inference through
+//!   [`crate::energy::EnergyModel`].
+//!
+//! Determinism contract (DESIGN.md §10): per-op mismatch deviates are a
+//! pure function of `(seed, global op index)`, per-trial results fold in
+//! trial order, and every artifact number is canonicalized to the CSV
+//! cell precision — so `smart infer` artifacts are **byte-identical for
+//! any `--shards`/`--threads`/`--block`** and for either kernel. With
+//! mismatch off (`--noise-off`) the offset-calibrated reconstruction
+//! recovers every product exactly, so the noisy forward pass equals the
+//! exact integer forward pass bit for bit.
+
+mod eval;
+mod layer;
+mod model;
+mod quant;
+mod tensor;
+mod tiler;
+
+pub use eval::{run_infer, InferOptions, InferReport, TrialRecord};
+pub use layer::{DenseLayer, LayerSpec};
+pub use model::{DatasetSpec, Model, ModelSpec};
+pub use quant::{nibble, QParams, QuantMatrix, QuantVec};
+pub use tensor::Tensor;
+pub use tiler::{MatvecResult, Tiler};

@@ -1,0 +1,446 @@
+//! Model specification, reproducible weight init, the synthetic
+//! classification set, and the exact-integer reference forward pass.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::montecarlo::SplitMix64;
+use crate::util::{json::Value, toml_lite};
+
+use super::layer::{DenseLayer, LayerSpec};
+use super::quant::{QParams, QuantMatrix, QuantVec};
+use super::tensor::Tensor;
+
+/// Stream salt for per-layer weight draws (distinct from the data and
+/// mismatch streams, so no two generators ever share a state).
+const WEIGHT_SALT: u64 = 0x0057_E167_0000_0001;
+/// Stream salt for per-trial dataset draws.
+const DATA_SALT: u64 = 0x00DA_7A5E_0000_0002;
+
+/// The embedded fixture model: a 2-layer 4-bit MLP on the 4-class
+/// synthetic band dataset — the checked-in `configs/nn.toml`, compiled
+/// into the crate so it needs no external file and cannot drift from
+/// what the CLI/CI run.
+const FIXTURE_TOML: &str = include_str!("../../../configs/nn.toml");
+
+/// The synthetic classification set: `classes` band-prototype patterns
+/// over `features` inputs, jittered per trial from a seeded counter
+/// stream (trial `t` is a pure function of `(seed, t)`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DatasetSpec {
+    /// Number of classes (== the last layer's output count).
+    pub classes: usize,
+    /// Input features (== the first layer's input count).
+    pub features: usize,
+    /// Uniform jitter amplitude added to each feature (0..=0.5).
+    pub jitter: f64,
+}
+
+impl DatasetSpec {
+    /// Parse the `[dataset]` table.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let dim = |k: &str| {
+            v.get(k)
+                .and_then(Value::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("dataset.{k} missing or not an integer"))
+        };
+        Ok(Self {
+            classes: dim("classes")? as usize,
+            features: dim("features")? as usize,
+            jitter: v.get("jitter").and_then(Value::as_f64).unwrap_or(0.15),
+        })
+    }
+
+    /// Class band owning feature `i`: features are split into
+    /// contiguous per-class bands (the prototype structure the weight
+    /// init mirrors).
+    pub fn feature_tag(&self, i: usize) -> usize {
+        i * self.classes / self.features
+    }
+}
+
+/// Everything needed to reproduce a noisy-inference workload bit-for-bit
+/// (see the `configs/nn.toml` format).
+///
+/// ```
+/// let spec = smart_insram::nn::ModelSpec::fixture();
+/// assert!(spec.validate().is_ok());
+/// assert_eq!(spec.layers.len(), 2);
+/// assert_eq!(spec.dataset.classes, 4);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Human label for reports and artifacts.
+    pub name: String,
+    /// Seed for the weight, dataset, and mismatch streams.
+    pub seed: u64,
+    /// Default inference trial count (CLI `--trials` overrides).
+    pub trials: u32,
+    /// Operand magnitude width (4 or 8 bits — 1 or 2 array words).
+    pub bits: u32,
+    /// The synthetic classification set.
+    pub dataset: DatasetSpec,
+    /// Dense layer shapes, input to output.
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelSpec {
+    /// The embedded tiny fixture model (no external file needed).
+    pub fn fixture() -> Self {
+        Self::parse(FIXTURE_TOML).expect("embedded fixture model parses")
+    }
+
+    /// Load and parse a model file from disk.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse a model document (TOML-lite, see the module docs).
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = toml_lite::parse(text).map_err(|e| anyhow::anyhow!("model TOML: {e}"))?;
+        let name = doc.get("name").and_then(Value::as_str).unwrap_or("nn").to_string();
+        let u = |k: &str, default: u64| doc.get(k).and_then(Value::as_u64).unwrap_or(default);
+        let dataset = DatasetSpec::from_value(
+            doc.get("dataset").ok_or_else(|| anyhow::anyhow!("no [dataset] in model"))?,
+        )?;
+        let mut layers = Vec::new();
+        let arr = doc
+            .get("layers")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("no [[layers]] in model"))?;
+        for (i, l) in arr.iter().enumerate() {
+            layers.push(LayerSpec::from_value(l).with_context(|| format!("layer #{i}"))?);
+        }
+        let spec = Self {
+            name,
+            seed: u("seed", 2022),
+            trials: u("trials", 64) as u32,
+            bits: u("bits", 4) as u32,
+            dataset,
+            layers,
+        };
+        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        Ok(spec)
+    }
+
+    /// Check the spec is runnable and exactly reproducible.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bits != 4 && self.bits != 8 {
+            return Err(format!("bits must be 4 or 8 (array words), got {}", self.bits));
+        }
+        if self.trials == 0 {
+            return Err("trials must be >= 1".into());
+        }
+        // Same f64-representability bound as CampaignSpec::validate.
+        if self.seed >= (1u64 << 53) {
+            return Err("seed must be < 2^53 (config numbers are f64)".into());
+        }
+        if self.layers.is_empty() {
+            return Err("model needs at least one [[layers]] entry".into());
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.inputs == 0 || l.outputs == 0 {
+                return Err(format!("layer #{i} has a zero dimension"));
+            }
+        }
+        for (i, pair) in self.layers.windows(2).enumerate() {
+            if pair[0].outputs != pair[1].inputs {
+                return Err(format!(
+                    "layer #{i} outputs {} != layer #{} inputs {}",
+                    pair[0].outputs,
+                    i + 1,
+                    pair[1].inputs
+                ));
+            }
+        }
+        if self.dataset.classes < 2 {
+            return Err("dataset.classes must be >= 2".into());
+        }
+        if self.dataset.features != self.layers[0].inputs {
+            return Err(format!(
+                "dataset.features {} != first layer inputs {}",
+                self.dataset.features, self.layers[0].inputs
+            ));
+        }
+        if self.layers.last().unwrap().outputs != self.dataset.classes {
+            return Err(format!(
+                "last layer outputs {} != dataset.classes {}",
+                self.layers.last().unwrap().outputs,
+                self.dataset.classes
+            ));
+        }
+        if self.dataset.features < self.dataset.classes {
+            return Err("dataset needs features >= classes (one band per class)".into());
+        }
+        if !(0.0..=0.5).contains(&self.dataset.jitter) {
+            return Err(format!("dataset.jitter {} outside 0..=0.5", self.dataset.jitter));
+        }
+        Ok(())
+    }
+
+    /// Synthetic trial `t`: `(label, features)` as a pure function of
+    /// `(seed, t)` — any shard can materialize any trial independently.
+    /// Features sit near 0.75 inside the label's band and near 0.15
+    /// outside, jittered by `dataset.jitter`.
+    pub fn trial_input(&self, t: u64) -> (usize, Vec<f64>) {
+        let d = &self.dataset;
+        let label = (t % d.classes as u64) as usize;
+        let mut rng = SplitMix64::for_stream(self.seed ^ DATA_SALT, t);
+        let xs = (0..d.features)
+            .map(|i| {
+                let base = if d.feature_tag(i) == label { 0.75 } else { 0.15 };
+                (base + d.jitter * (2.0 * rng.next_f64() - 1.0)).clamp(0.0, 1.0)
+            })
+            .collect();
+        (label, xs)
+    }
+
+    /// Prototype-structured weights for layer `l`, drawn from the
+    /// layer's own counter stream: unit `j` prefers inputs tagged with
+    /// its class (`j % classes`), so the quantized model actually
+    /// classifies the synthetic set — reproducible from the seed alone,
+    /// no external weight files.
+    pub fn layer_weights(&self, l: usize) -> Tensor {
+        let spec = self.layers[l];
+        let classes = self.dataset.classes;
+        let mut rng = SplitMix64::for_stream(self.seed ^ WEIGHT_SALT, l as u64);
+        Tensor::from_fn(spec.outputs, spec.inputs, |j, i| {
+            let tag_in = if l == 0 { self.dataset.feature_tag(i) } else { i % classes };
+            let u = rng.next_f64();
+            if tag_in == j % classes {
+                0.5 + 0.5 * u
+            } else {
+                -0.25 + 0.35 * u
+            }
+        })
+    }
+
+    /// Build the executable model: generate + quantize weights and
+    /// calibrate the inter-layer activation quantizers over the first
+    /// `trials` trials of the exact-integer pipeline.
+    pub fn build(&self, trials: u32) -> Model {
+        let bits = self.bits;
+        let layers: Vec<DenseLayer> = (0..self.layers.len())
+            .map(|l| DenseLayer {
+                w: QuantMatrix::from_tensor(&self.layer_weights(l), bits),
+                relu: self.layers[l].relu,
+            })
+            .collect();
+        let in_q = QParams::symmetric(1.0, bits);
+        // Boundary-by-boundary static calibration, carrying every trial's
+        // activations forward so the whole pass is O(layers x trials):
+        // with quantizers 0..l fixed, the exact pipeline's layer-l
+        // pre-quantization activations give boundary l's symmetric range.
+        // The final layer feeds argmax directly, so it needs no quantizer.
+        // Deterministic in (spec, trials).
+        let mut xs: Vec<QuantVec> = (0..u64::from(trials.max(1)))
+            .map(|t| QuantVec::from_f64(&self.trial_input(t).1, in_q))
+            .collect();
+        let mut act_q: Vec<QParams> = Vec::with_capacity(layers.len().saturating_sub(1));
+        for l in 0..layers.len() - 1 {
+            let accs: Vec<Vec<i64>> = xs.iter().map(|x| layers[l].forward_exact(x)).collect();
+            let unit = scale_of(&layers, in_q, &act_q, l);
+            let mut max_abs = 0.0f64;
+            for acc in &accs {
+                for &a in acc {
+                    max_abs = max_abs.max(post_act(a as f64 * unit, layers[l].relu).abs());
+                }
+            }
+            act_q.push(QParams::symmetric(max_abs, bits));
+            xs = accs
+                .iter()
+                .map(|acc| requantize(acc, &layers[l], unit, act_q[l]))
+                .collect();
+        }
+        Model { spec: self.clone(), layers, in_q, act_q }
+    }
+}
+
+/// ReLU when the layer asks for it.
+fn post_act(y: f64, relu: bool) -> f64 {
+    if relu {
+        y.max(0.0)
+    } else {
+        y
+    }
+}
+
+/// Real value of one integer accumulator unit of layer `l`:
+/// `w_scale(l) * in_scale(l)`.
+fn scale_of(layers: &[DenseLayer], in_q: QParams, act_q: &[QParams], l: usize) -> f64 {
+    let in_scale = if l == 0 { in_q.scale } else { act_q[l - 1].scale };
+    layers[l].w.qp.scale * in_scale
+}
+
+/// Accumulators -> next layer's quantized activations (shared by the
+/// exact and analog paths, so noise is the only difference between them).
+fn requantize(acc: &[i64], layer: &DenseLayer, unit: f64, out_q: QParams) -> QuantVec {
+    let q = acc
+        .iter()
+        .map(|&a| out_q.quantize(post_act(a as f64 * unit, layer.relu)))
+        .collect();
+    QuantVec { q, qp: out_q }
+}
+
+/// Argmax with first-wins ties — the deterministic top-1 rule both the
+/// exact and the noisy path use.
+fn argmax_i64(acc: &[i64]) -> usize {
+    let mut best = 0;
+    for (j, &a) in acc.iter().enumerate().skip(1) {
+        if a > acc[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// A built model: quantized layers plus the calibrated quantizer chain.
+#[derive(Debug, Clone)]
+pub struct Model {
+    /// The spec the model was built from.
+    pub spec: ModelSpec,
+    /// Quantized dense layers, input to output.
+    pub layers: Vec<DenseLayer>,
+    /// Input quantizer (unit range onto the magnitude grid).
+    pub in_q: QParams,
+    /// Inter-layer activation quantizers from static calibration — one
+    /// per layer boundary (`layers.len() - 1` entries; the final layer
+    /// feeds argmax directly and needs none).
+    pub act_q: Vec<QParams>,
+}
+
+impl Model {
+    /// 4-bit array words per operand.
+    pub fn words(&self) -> u32 {
+        self.in_q.words()
+    }
+
+    /// Analog MAC operations per inference trial.
+    pub fn ops_per_trial(&self) -> u64 {
+        self.layers.iter().map(|l| l.ops(self.words())).sum()
+    }
+
+    /// Global-item offset of layer `l` within one trial's op stream.
+    pub fn layer_item_offset(&self, l: usize) -> u64 {
+        self.layers[..l].iter().map(|x| x.ops(self.words())).sum()
+    }
+
+    /// Quantize a raw feature vector with the input quantizer.
+    pub fn quantize_input(&self, xs: &[f64]) -> QuantVec {
+        QuantVec::from_f64(xs, self.in_q)
+    }
+
+    /// Real value of one accumulator unit of layer `l`.
+    pub fn acc_unit(&self, l: usize) -> f64 {
+        scale_of(&self.layers, self.in_q, &self.act_q, l)
+    }
+
+    /// Layer `l` accumulators -> the next layer's quantized input.
+    pub fn activate(&self, l: usize, acc: &[i64]) -> QuantVec {
+        requantize(acc, &self.layers[l], self.acc_unit(l), self.act_q[l])
+    }
+
+    /// Final-layer accumulators -> real output scores.
+    pub fn output_real(&self, acc: &[i64]) -> Vec<f64> {
+        let unit = self.acc_unit(self.layers.len() - 1);
+        acc.iter().map(|&a| a as f64 * unit).collect()
+    }
+
+    /// Deterministic top-1 over final-layer accumulators.
+    pub fn predict(&self, acc: &[i64]) -> usize {
+        argmax_i64(acc)
+    }
+
+    /// Exact integer forward pass: `(top-1 class, real output scores)` —
+    /// the reference the noisy analog execution is measured against.
+    pub fn forward_exact(&self, x0: &QuantVec) -> (usize, Vec<f64>) {
+        let mut x = x0.clone();
+        let last = self.layers.len() - 1;
+        for l in 0..last {
+            let acc = self.layers[l].forward_exact(&x);
+            x = self.activate(l, &acc);
+        }
+        let acc = self.layers[last].forward_exact(&x);
+        (self.predict(&acc), self.output_real(&acc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixture_parses_and_validates() {
+        let spec = ModelSpec::fixture();
+        assert_eq!(spec.name, "fixture-mlp");
+        assert_eq!(spec.bits, 4);
+        assert_eq!(spec.layers.len(), 2);
+        assert!(spec.layers[0].relu && !spec.layers[1].relu);
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut s = ModelSpec::fixture();
+        s.bits = 6;
+        assert!(s.validate().is_err());
+        let mut s = ModelSpec::fixture();
+        s.layers[0].outputs = 7; // breaks the chain to layer 1
+        assert!(s.validate().is_err());
+        let mut s = ModelSpec::fixture();
+        s.dataset.features = 12; // != first layer inputs
+        assert!(s.validate().is_err());
+        let mut s = ModelSpec::fixture();
+        s.dataset.jitter = 0.9;
+        assert!(s.validate().is_err());
+        let mut s = ModelSpec::fixture();
+        s.trials = 0;
+        assert!(s.validate().is_err());
+        assert!(ModelSpec::parse("name = \"x\"\n").is_err()); // no dataset/layers
+    }
+
+    #[test]
+    fn trials_are_pure_functions_of_seed_and_index() {
+        let spec = ModelSpec::fixture();
+        let (l1, x1) = spec.trial_input(13);
+        let (l2, x2) = spec.trial_input(13);
+        assert_eq!((l1, &x1), (l2, &x2));
+        assert_ne!(x1, spec.trial_input(14).1);
+        assert_eq!(l1, 13 % 4);
+        assert!(x1.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let mut other = spec.clone();
+        other.seed = 1;
+        assert_ne!(x1, other.trial_input(13).1);
+    }
+
+    #[test]
+    fn build_is_deterministic_and_classifies_the_synthetic_set() {
+        let spec = ModelSpec::fixture();
+        let a = spec.build(16);
+        let b = spec.build(16);
+        assert_eq!(a.layers[0].w, b.layers[0].w);
+        assert_eq!(a.act_q, b.act_q);
+        assert_eq!(a.ops_per_trial(), 8 * 16 + 4 * 8);
+        assert_eq!(a.layer_item_offset(1), 128);
+        // the exact pipeline separates the bands well: >= 75% top-1
+        let correct = (0..16u64)
+            .filter(|&t| {
+                let (label, xs) = spec.trial_input(t);
+                a.forward_exact(&a.quantize_input(&xs)).0 == label
+            })
+            .count();
+        assert!(correct >= 12, "exact fixture accuracy {correct}/16");
+    }
+
+    #[test]
+    fn eight_bit_operands_quadruple_the_op_count() {
+        let mut spec = ModelSpec::fixture();
+        spec.bits = 8;
+        let m = spec.build(4);
+        assert_eq!(m.words(), 2);
+        assert_eq!(m.ops_per_trial(), (8 * 16 + 4 * 8) * 4);
+    }
+}

@@ -1,0 +1,185 @@
+//! Symmetric per-layer quantization to the MAC's operand width
+//! (DESIGN.md §10).
+//!
+//! Weights and activations are quantized with a symmetric linear
+//! quantizer: `q = round(x / scale)` clamped to `±(2^bits - 1)`. The
+//! sign lives in the digital domain (the array stores magnitudes; signs
+//! are applied when the coordinator accumulates reconstructed
+//! products), and magnitudes wider than the array's 4-bit word are
+//! split into 4-bit words exactly as [`crate::sram::MacWord`] stores
+//! multi-bit operands — the product of two split operands recombines
+//! with binary weights `16^(wa + wb)` ([`nibble`]).
+
+use super::tensor::Tensor;
+
+/// Symmetric linear quantization parameters for one layer.
+///
+/// ```
+/// use smart_insram::nn::QParams;
+/// let qp = QParams::symmetric(3.0, 4); // map [-3, 3] onto -15..=15
+/// let q = qp.quantize(1.0);
+/// assert!((qp.dequantize(q) - 1.0).abs() <= qp.scale / 2.0);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    /// Real value of one quantization step (> 0).
+    pub scale: f64,
+    /// Operand magnitude width in bits (4 or 8 — 1 or 2 array words).
+    pub bits: u32,
+}
+
+impl QParams {
+    /// Quantizer mapping `[-max_abs, max_abs]` onto the full magnitude
+    /// range. A non-positive / non-finite `max_abs` (e.g. an all-zero
+    /// calibration set) falls back to a unit range.
+    pub fn symmetric(max_abs: f64, bits: u32) -> Self {
+        assert!(bits == 4 || bits == 8, "operand width must be 4 or 8 bits, got {bits}");
+        let q_max = f64::from((1u32 << bits) - 1);
+        let scale = if max_abs.is_finite() && max_abs > 0.0 { max_abs / q_max } else { 1.0 / q_max };
+        Self { scale, bits }
+    }
+
+    /// Largest representable magnitude (`2^bits - 1`).
+    pub fn q_max(&self) -> i32 {
+        ((1u32 << self.bits) - 1) as i32
+    }
+
+    /// 4-bit array words per operand (1 for 4-bit, 2 for 8-bit).
+    pub fn words(&self) -> u32 {
+        self.bits / 4
+    }
+
+    /// Quantize a real value to the signed grid (round to nearest,
+    /// clamp to `±q_max`).
+    pub fn quantize(&self, x: f64) -> i32 {
+        let m = f64::from(self.q_max());
+        (x / self.scale).round().clamp(-m, m) as i32
+    }
+
+    /// Real value of a quantized code.
+    pub fn dequantize(&self, q: i32) -> f64 {
+        f64::from(q) * self.scale
+    }
+}
+
+/// 4-bit word `w` (LSB-first) of magnitude `mag` — the array-word split
+/// of a multi-bit operand. `sum_w nibble(m, w) * 16^w == m`.
+pub fn nibble(mag: u32, w: u32) -> u8 {
+    ((mag >> (4 * w)) & 0xF) as u8
+}
+
+/// A quantized activation vector (signed codes + its quantizer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantVec {
+    /// Signed quantized codes, magnitude `<= qp.q_max()`.
+    pub q: Vec<i32>,
+    /// The quantizer the codes were produced with.
+    pub qp: QParams,
+}
+
+impl QuantVec {
+    /// Quantize a real vector.
+    pub fn from_f64(xs: &[f64], qp: QParams) -> Self {
+        Self { q: xs.iter().map(|&x| qp.quantize(x)).collect(), qp }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// True when the vector has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+/// A quantized weight matrix (row-major signed codes + its quantizer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantMatrix {
+    /// Number of rows (output neurons).
+    pub rows: usize,
+    /// Number of columns (input features).
+    pub cols: usize,
+    /// Row-major signed quantized codes, magnitude `<= qp.q_max()`.
+    pub q: Vec<i32>,
+    /// The per-layer symmetric quantizer.
+    pub qp: QParams,
+}
+
+impl QuantMatrix {
+    /// Symmetric per-layer quantization of a weight tensor: one scale
+    /// for the whole matrix, calibrated to its largest magnitude.
+    pub fn from_tensor(t: &Tensor, bits: u32) -> Self {
+        let qp = QParams::symmetric(t.max_abs(), bits);
+        let mut q = Vec::with_capacity(t.rows() * t.cols());
+        for r in 0..t.rows() {
+            for c in 0..t.cols() {
+                q.push(qp.quantize(t.get(r, c)));
+            }
+        }
+        Self { rows: t.rows(), cols: t.cols(), q, qp }
+    }
+
+    /// Quantized code at `(row, col)`.
+    pub fn at(&self, row: usize, col: usize) -> i32 {
+        assert!(row < self.rows && col < self.cols, "index ({row}, {col}) out of range");
+        self.q[row * self.cols + col]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        for bits in [4u32, 8] {
+            let qp = QParams::symmetric(2.5, bits);
+            for k in -100..=100 {
+                let x = f64::from(k) * 0.025; // spans [-2.5, 2.5]
+                let err = (qp.dequantize(qp.quantize(x)) - x).abs();
+                assert!(err <= qp.scale / 2.0 + 1e-12, "bits={bits} x={x}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_clamps_and_is_symmetric() {
+        let qp = QParams::symmetric(1.0, 4);
+        assert_eq!(qp.quantize(10.0), 15);
+        assert_eq!(qp.quantize(-10.0), -15);
+        assert_eq!(qp.quantize(0.0), 0);
+        assert_eq!(qp.quantize(-0.5), -qp.quantize(0.5));
+        assert_eq!(qp.q_max(), 15);
+        assert_eq!(QParams::symmetric(1.0, 8).q_max(), 255);
+    }
+
+    #[test]
+    fn degenerate_range_falls_back_to_unit() {
+        let qp = QParams::symmetric(0.0, 4);
+        assert!(qp.scale > 0.0);
+        assert_eq!(qp.quantize(1.0), 15);
+    }
+
+    #[test]
+    fn nibbles_recombine_to_the_magnitude() {
+        for mag in [0u32, 1, 15, 16, 0x5A, 200, 255] {
+            let lo = u32::from(nibble(mag, 0));
+            let hi = u32::from(nibble(mag, 1));
+            assert_eq!(lo + 16 * hi, mag, "mag={mag}");
+            assert!(lo < 16 && hi < 16);
+        }
+    }
+
+    #[test]
+    fn matrix_quantization_preserves_shape_and_scale() {
+        let t = Tensor::from_fn(2, 3, |r, c| (r as f64 - 1.0) * (c as f64 + 1.0));
+        let m = QuantMatrix::from_tensor(&t, 4);
+        assert_eq!((m.rows, m.cols), (2, 3));
+        // largest magnitude maps to the full code
+        assert_eq!(m.at(0, 2), -15);
+        assert_eq!(m.at(1, 0), 0);
+        assert!((m.qp.scale - 3.0 / 15.0).abs() < 1e-12);
+    }
+}

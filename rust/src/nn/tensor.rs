@@ -1,0 +1,106 @@
+//! Minimal row-major `f64` tensor — just enough linear algebra for the
+//! NN workload's weight matrices and reference math (DESIGN.md §10).
+
+/// A dense row-major 2-D tensor of `f64` values.
+///
+/// ```
+/// use smart_insram::nn::Tensor;
+/// let t = Tensor::from_fn(2, 3, |r, c| (r * 3 + c) as f64);
+/// assert_eq!(t.get(1, 2), 5.0);
+/// assert_eq!(t.matvec(&[1.0, 0.0, 1.0]), vec![2.0, 7.0]);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Tensor {
+    /// All-zero tensor of shape `(rows, cols)`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Tensor filled by `f(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut t = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                t.data[r * cols + c] = f(r, c);
+            }
+        }
+        t
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Element at `(row, col)`.
+    pub fn get(&self, row: usize, col: usize) -> f64 {
+        assert!(row < self.rows && col < self.cols, "index ({row}, {col}) out of range");
+        self.data[row * self.cols + col]
+    }
+
+    /// Set element at `(row, col)`.
+    pub fn set(&mut self, row: usize, col: usize, v: f64) {
+        assert!(row < self.rows && col < self.cols, "index ({row}, {col}) out of range");
+        self.data[row * self.cols + col] = v;
+    }
+
+    /// Row `row` as a slice.
+    pub fn row(&self, row: usize) -> &[f64] {
+        assert!(row < self.rows, "row {row} out of range");
+        &self.data[row * self.cols..(row + 1) * self.cols]
+    }
+
+    /// Largest absolute element (0 for an empty tensor) — the symmetric
+    /// quantizer's calibration statistic.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+    }
+
+    /// Matrix–vector product `self * x` in exact `f64` arithmetic — the
+    /// floating-point reference the quantized pipeline approximates.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec shape mismatch");
+        (0..self.rows)
+            .map(|r| self.row(r).iter().zip(x).map(|(&w, &v)| w * v).sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_access_roundtrip() {
+        let mut t = Tensor::zeros(3, 2);
+        assert_eq!((t.rows(), t.cols()), (3, 2));
+        t.set(2, 1, 4.5);
+        assert_eq!(t.get(2, 1), 4.5);
+        assert_eq!(t.row(2), &[0.0, 4.5]);
+        assert_eq!(t.max_abs(), 4.5);
+    }
+
+    #[test]
+    fn matvec_matches_hand_computation() {
+        let t = Tensor::from_fn(2, 3, |r, c| (r * 3 + c + 1) as f64);
+        // [[1 2 3], [4 5 6]] * [1, -1, 2] = [5, 11]
+        assert_eq!(t.matvec(&[1.0, -1.0, 2.0]), vec![5.0, 11.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_access_panics() {
+        Tensor::zeros(1, 1).get(0, 1);
+    }
+}

@@ -1,0 +1,248 @@
+//! Tiling quantized matrix–vector products onto the analog MAC through
+//! the block-execution engine (DESIGN.md §10).
+//!
+//! Each signed product `w_q * x_q` splits into unsigned 4-bit array
+//! words ([`super::nibble`]); every word pair is one analog MAC op. Ops
+//! are enumerated in canonical nested order — output neuron, input
+//! feature, weight word, activation word — and carry a **global item
+//! index**, so their mismatch deviates come from
+//! [`MismatchSampler::fill_block`]'s per-item counter streams: a pure
+//! function of `(seed, item)`, independent of how the op stream is cut
+//! into blocks, shards, or threads.
+//!
+//! Reconstruction is **offset-calibrated**: the digital side subtracts
+//! the nominal (mismatch-free) output of the executing kernel for the
+//! same operand pair and adds the rounded deviation, in product units,
+//! to the exact word product. With mismatch off the measured voltage
+//! equals the calibration entry bit for bit, so the noisy forward pass
+//! collapses to the exact integer pipeline — the property
+//! `tests/nn_infer.rs` pins.
+
+use crate::mac::{NativeMacEngine, SimKernel, TrialBlock};
+use crate::montecarlo::{McSample, MismatchSampler};
+
+use super::quant::{nibble, QuantMatrix, QuantVec};
+
+/// Outputs of one tiled matrix–vector product.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatvecResult {
+    /// Signed integer accumulators per output neuron (code space).
+    pub acc: Vec<i64>,
+    /// Raw dynamic bitline energy over all ops (J), summed in canonical
+    /// op order.
+    pub energy: f64,
+    /// Saturation-exit faults observed across the ops.
+    pub faults: u64,
+    /// Analog MAC ops executed (`rows * cols * words^2`).
+    pub ops: u64,
+}
+
+/// Drives quantized layers through a [`SimKernel`], one reusable
+/// [`TrialBlock`] per tiler (zero steady-state allocation).
+pub struct Tiler<'a> {
+    engine: &'a NativeMacEngine,
+    kernel: &'a dyn SimKernel,
+    sampler: &'a MismatchSampler,
+    /// Nominal kernel output per operand pair (`f32`, the kernels'
+    /// output precision) — the offset-calibration table.
+    cal: Vec<f32>,
+    full_scale: f64,
+    block_len: usize,
+    block: TrialBlock,
+}
+
+impl<'a> Tiler<'a> {
+    /// The offset-calibration table for `engine`: its nominal output for
+    /// all 256 operand pairs, in the same `f32` precision the kernels
+    /// emit (scalar and block kernels are bit-identical, so the table is
+    /// kernel-independent). 256 transient simulations — compute it once
+    /// per engine and share it across shard tilers
+    /// ([`Tiler::with_calibration`]).
+    pub fn calibrate(engine: &NativeMacEngine) -> Vec<f32> {
+        let nominal = McSample::nominal();
+        let mut cal = Vec::with_capacity(256);
+        for a in 0..16u8 {
+            for b in 0..16u8 {
+                cal.push(engine.mac(a, b, &nominal).v_mult as f32);
+            }
+        }
+        cal
+    }
+
+    /// Tiler over `engine` executing at most `block_len` ops per
+    /// [`TrialBlock`], computing its own calibration table (convenience
+    /// for one-off tilers; campaigns share one table via
+    /// [`Tiler::with_calibration`]).
+    pub fn new(
+        engine: &'a NativeMacEngine,
+        kernel: &'a dyn SimKernel,
+        sampler: &'a MismatchSampler,
+        block_len: usize,
+    ) -> Self {
+        let cal = Self::calibrate(engine);
+        Self::with_calibration(engine, kernel, sampler, block_len, cal)
+    }
+
+    /// Tiler reusing a precomputed [`Tiler::calibrate`] table for the
+    /// same engine configuration.
+    pub fn with_calibration(
+        engine: &'a NativeMacEngine,
+        kernel: &'a dyn SimKernel,
+        sampler: &'a MismatchSampler,
+        block_len: usize,
+        cal: Vec<f32>,
+    ) -> Self {
+        assert!(block_len >= 1, "block_len must be >= 1");
+        assert_eq!(cal.len(), 256, "calibration table must cover all operand pairs");
+        let full_scale = engine.full_scale();
+        Self {
+            engine,
+            kernel,
+            sampler,
+            cal,
+            full_scale,
+            block_len,
+            block: TrialBlock::with_capacity(block_len),
+        }
+    }
+
+    /// One tiled matrix–vector product. `first_item` is the global item
+    /// index of the product's first op; ops occupy the contiguous range
+    /// `first_item .. first_item + result.ops`, so deviates — and hence
+    /// every output — are independent of `block_len`, shard cuts, and
+    /// thread schedule.
+    pub fn matvec(&mut self, w: &QuantMatrix, x: &QuantVec, first_item: u64) -> MatvecResult {
+        assert_eq!(w.cols, x.len(), "matvec shape mismatch");
+        assert_eq!(w.qp.bits, x.qp.bits, "weight/activation word widths differ");
+        let words = w.qp.words() as usize;
+        let total = w.rows as u64 * w.cols as u64 * (words * words) as u64;
+        let mut acc = vec![0i64; w.rows];
+        let mut energy = 0.0f64;
+        let mut faults = 0u64;
+        let mut op = 0u64;
+        while op < total {
+            let n = self.block_len.min((total - op) as usize);
+            self.block.reset(n);
+            let (dvth, dbeta) = self.block.deviates_mut();
+            self.sampler.fill_block(first_item + op, dvth, dbeta);
+            for lane in 0..n {
+                let (j, i, pw, xw) = decode(op + lane as u64, w.cols, words);
+                let a = nibble(w.at(j, i).unsigned_abs(), pw);
+                let b = nibble(x.q[i].unsigned_abs(), xw);
+                self.block.set_operands(lane, a, b);
+            }
+            self.kernel.simulate(self.engine, &mut self.block);
+            for lane in 0..n {
+                let (j, i, pw, xw) = decode(op + lane as u64, w.cols, words);
+                let (wq, xq) = (w.at(j, i), x.q[i]);
+                let (a, b) = self.block.operands(lane);
+                // Offset-calibrated reconstruction: exact word product
+                // plus the rounded deviation from the nominal output.
+                let v = f64::from(self.block.out.v_mult[lane]);
+                let cal = f64::from(self.cal[usize::from(a) * 16 + usize::from(b)]);
+                let delta = ((v - cal) / self.full_scale * 225.0).round() as i64;
+                let prod = (i64::from(a) * i64::from(b) + delta).clamp(0, 225);
+                let sign: i64 = if (wq < 0) != (xq < 0) { -1 } else { 1 };
+                acc[j] += sign * (prod << (4 * (pw + xw)));
+                energy += f64::from(self.block.out.energy[lane]);
+                faults += u64::from(self.block.out.fault[lane] > 0.5);
+            }
+            op += n as u64;
+        }
+        MatvecResult { acc, energy, faults, ops: total }
+    }
+}
+
+/// Canonical op order: `(neuron, input, weight word, activation word)`,
+/// activation word fastest.
+fn decode(k: u64, cols: usize, words: usize) -> (usize, usize, u32, u32) {
+    let w2 = (words * words) as u64;
+    let per_row = cols as u64 * w2;
+    let j = (k / per_row) as usize;
+    let rem = k % per_row;
+    let i = (rem / w2) as usize;
+    let p = rem % w2;
+    (j, i, (p / words as u64) as u32, (p % words as u64) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::{BlockKernel, ScalarKernel, Variant};
+    use crate::nn::quant::QParams;
+    use crate::params::Params;
+
+    fn engine(v: Variant) -> NativeMacEngine {
+        let p = Params::default();
+        NativeMacEngine::new(p, v.config(&p))
+    }
+
+    fn fixture_mat(bits: u32) -> (QuantMatrix, QuantVec) {
+        let qp = QParams::symmetric(1.0, bits);
+        let m = QuantMatrix { rows: 2, cols: 3, q: vec![3, -5, 0, 2, 7, -1], qp };
+        let x = QuantVec { q: vec![4, 9, -2], qp };
+        (m, x)
+    }
+
+    #[test]
+    fn decode_covers_the_canonical_order() {
+        // 2 cols, 2 words: 16 ops per row pair
+        let seen: Vec<_> = (0..8).map(|k| decode(k, 2, 2)).collect();
+        assert_eq!(seen[0], (0, 0, 0, 0));
+        assert_eq!(seen[1], (0, 0, 0, 1));
+        assert_eq!(seen[2], (0, 0, 1, 0));
+        assert_eq!(seen[4], (0, 1, 0, 0));
+        assert_eq!(decode(8, 2, 2), (1, 0, 0, 0));
+        assert_eq!(decode(5, 3, 1), (1, 2, 0, 0));
+    }
+
+    #[test]
+    fn noise_off_reproduces_the_exact_integer_product() {
+        let e = engine(Variant::Smart);
+        let quiet = MismatchSampler::new(7, 0.0, 0.0);
+        for bits in [4u32, 8] {
+            let (m, x) = fixture_mat(bits);
+            let mut tiler = Tiler::new(&e, &ScalarKernel, &quiet, 5);
+            let r = tiler.matvec(&m, &x, 1000);
+            assert_eq!(r.acc, vec![3 * 4 - 5 * 9, 2 * 4 + 7 * 9 + 2], "bits={bits}");
+            assert_eq!(r.ops, 6 * u64::from(bits / 4) * u64::from(bits / 4));
+            assert_eq!(r.faults, 0);
+            assert!(r.energy > 0.0);
+        }
+    }
+
+    #[test]
+    fn block_size_and_kernel_do_not_change_results() {
+        let e = engine(Variant::Aid);
+        let p = Params::default();
+        let noisy = MismatchSampler::new(2022, p.circuit.sigma_vth, p.circuit.sigma_beta);
+        let (m, x) = fixture_mat(8);
+        let mut base = Tiler::new(&e, &ScalarKernel, &noisy, 7);
+        let want = base.matvec(&m, &x, 64);
+        // shards share one calibration table; results must not move
+        let cal = Tiler::calibrate(&e);
+        for block_len in [1usize, 3, 64] {
+            let mut t = Tiler::with_calibration(&e, &BlockKernel, &noisy, block_len, cal.clone());
+            let got = t.matvec(&m, &x, 64);
+            assert_eq!(got.acc, want.acc, "block_len={block_len}");
+            assert_eq!(got.energy.to_bits(), want.energy.to_bits(), "block_len={block_len}");
+            assert_eq!(got.faults, want.faults);
+        }
+        // a different item base draws different deviates
+        let other = base.matvec(&m, &x, 65);
+        assert_ne!(other.energy.to_bits(), want.energy.to_bits());
+    }
+
+    #[test]
+    fn tiler_block_reuse_is_stateless() {
+        let e = engine(Variant::Smart);
+        let p = Params::default();
+        let noisy = MismatchSampler::new(5, p.circuit.sigma_vth, p.circuit.sigma_beta);
+        let (m, x) = fixture_mat(4);
+        let mut t = Tiler::new(&e, &BlockKernel, &noisy, 4);
+        let a = t.matvec(&m, &x, 0);
+        let _ = t.matvec(&m, &x, 999);
+        let b = t.matvec(&m, &x, 0);
+        assert_eq!(a, b);
+    }
+}

@@ -115,6 +115,19 @@ pub fn csv_cell(v: f64) -> String {
     }
 }
 
+/// Round to the artifact precision — [`csv_cell`]'s `{:.6e}` format, 6
+/// significant digits — so CSV and JSON artifacts carry identical
+/// values and checkpoint round-trips are byte-exact. The single
+/// statement of the artifact precision, shared by the `dse` and `nn`
+/// artifact writers.
+pub fn canon(v: f64) -> f64 {
+    if v.is_finite() {
+        format!("{v:.6e}").parse().unwrap_or(v)
+    } else {
+        v
+    }
+}
+
 /// CSV emitter for figure series: header + rows of (x, series..., value).
 pub fn csv<H: AsRef<str>>(header: &[H], rows: &[Vec<f64>]) -> String {
     let mut s = String::new();
@@ -176,6 +189,45 @@ pub fn sweep_panel(r: &crate::dse::SweepResult) -> String {
     s
 }
 
+/// Render a finished noisy-inference campaign (`smart infer`) as a
+/// markdown panel: accuracy triplet, noise figures, and the energy cost.
+pub fn infer_panel(r: &crate::nn::InferReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "## smart infer '{}' — {} on {} kernel, {} trials",
+        r.name,
+        r.variant.name(),
+        r.kernel,
+        r.trials
+    );
+    let _ = writeln!(
+        s,
+        "top-1: ideal {:.1}% | noisy {:.1}% | delta {:+.1} pp | noisy-vs-ideal agreement {:.1}%",
+        r.ideal_accuracy * 100.0,
+        r.noisy_accuracy * 100.0,
+        r.accuracy_delta() * 100.0,
+        r.agreement * 100.0
+    );
+    let _ = writeln!(
+        s,
+        "output err mean {:.4} max {:.4} | fault rate {:.2e} | {} MACs/inference",
+        r.out_err.mean(),
+        r.out_err.max(),
+        r.fault_rate,
+        r.macs_per_inference
+    );
+    let _ = writeln!(
+        s,
+        "energy: {:.3} pJ/MAC, {:.2} pJ/inference @ {:.0} MHz",
+        r.energy_per_mac_pj, r.energy_per_inference_pj, r.freq_mhz
+    );
+    if let (Some(csv), Some(json)) = (&r.csv_path, &r.json_path) {
+        let _ = writeln!(s, "artifacts: {} , {}", csv.display(), json.display());
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +256,36 @@ mod tests {
         let mut lines = out.lines();
         assert_eq!(lines.next().unwrap(), "x,y");
         assert!(lines.next().unwrap().starts_with("1.0"));
+    }
+
+    #[test]
+    fn infer_panel_lists_the_accuracy_triplet() {
+        let mut out_err = crate::metrics::OnlineStats::new();
+        out_err.push(0.01);
+        let r = crate::nn::InferReport {
+            name: "fixture-mlp".to_string(),
+            variant: Variant::Smart,
+            kernel: "block",
+            trials: 8,
+            macs_per_inference: 160,
+            ideal_accuracy: 1.0,
+            noisy_accuracy: 0.875,
+            agreement: 0.875,
+            out_err,
+            fault_rate: 0.0,
+            energy_per_mac_pj: 0.783,
+            energy_per_inference_pj: 125.3,
+            freq_mhz: 250.0,
+            records: Vec::new(),
+            csv_path: None,
+            json_path: None,
+            wall: std::time::Duration::from_millis(5),
+        };
+        let s = infer_panel(&r);
+        for needle in ["fixture-mlp", "SMART", "ideal 100.0%", "noisy 87.5%", "+12.5 pp", "160 MACs"]
+        {
+            assert!(s.contains(needle), "missing {needle} in:\n{s}");
+        }
     }
 
     #[test]

@@ -88,7 +88,15 @@ fn bench_json_writes_perf_artifact() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("block kernel"), "{text}");
     let json = std::fs::read_to_string(out_dir.join("BENCH_native.json")).unwrap();
-    for key in ["\"backend\"", "\"items_per_sec\"", "\"n_items\"", "native-block"] {
+    for key in [
+        "\"backend\"",
+        "\"items_per_sec\"",
+        "\"n_items\"",
+        "\"variant\"",
+        "\"block\"",
+        "\"threads\"",
+        "native-block",
+    ] {
         assert!(json.contains(key), "missing {key} in {json}");
     }
 }
@@ -139,18 +147,19 @@ fn info_smokes_pjrt() {
 #[test]
 fn checked_in_configs_parse() {
     // keep the shipped configs/ directory loadable at all times; dse*
-    // files are sweep specs, the rest are experiment files
+    // files are sweep specs, nn* files are inference models, the rest
+    // are experiment files
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
     let mut n = 0;
     for entry in std::fs::read_dir(root).unwrap() {
         let path = entry.unwrap().path();
         if path.extension().is_some_and(|e| e == "toml") {
-            let is_sweep = path
-                .file_name()
-                .and_then(|s| s.to_str())
-                .is_some_and(|s| s.starts_with("dse"));
-            if is_sweep {
+            let stem = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if stem.starts_with("dse") {
                 smart_insram::dse::SweepSpec::load(&path)
+                    .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            } else if stem.starts_with("nn") {
+                smart_insram::nn::ModelSpec::load(&path)
                     .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
             } else {
                 smart_insram::config::ExperimentConfig::load(&path)
@@ -159,7 +168,7 @@ fn checked_in_configs_parse() {
             n += 1;
         }
     }
-    assert!(n >= 4, "expected the shipped configs, found {n}");
+    assert!(n >= 5, "expected the shipped configs, found {n}");
 }
 
 #[test]

@@ -1,0 +1,190 @@
+//! The noisy-inference workload subsystem (`smart infer`, DESIGN.md
+//! §10): quantizer properties, a hand-computed dense-layer golden
+//! fixture through the scalar oracle, scalar-vs-block bit-identity on a
+//! full inference, and shard/thread/block byte-identity of the CLI's
+//! JSON/CSV artifacts.
+
+use std::process::Command;
+
+use smart_insram::mac::{NativeMacEngine, ScalarKernel, Variant};
+use smart_insram::montecarlo::MismatchSampler;
+use smart_insram::nn::{
+    nibble, run_infer, InferOptions, ModelSpec, QParams, QuantMatrix, QuantVec, Tiler,
+};
+use smart_insram::params::Params;
+
+fn engine(v: Variant) -> NativeMacEngine {
+    let p = Params::default();
+    NativeMacEngine::new(p, v.config(&p))
+}
+
+#[test]
+fn quantizer_roundtrip_property() {
+    // |dequantize(quantize(x)) - x| <= scale/2 over the calibrated range,
+    // for both supported operand widths, and nibbles recombine exactly.
+    for bits in [4u32, 8] {
+        for max_abs in [0.4f64, 1.0, 37.5] {
+            let qp = QParams::symmetric(max_abs, bits);
+            for k in -250..=250 {
+                let x = max_abs * f64::from(k) / 250.0;
+                let q = qp.quantize(x);
+                assert!(q.unsigned_abs() <= qp.q_max() as u32);
+                let err = (qp.dequantize(q) - x).abs();
+                assert!(err <= qp.scale / 2.0 + 1e-12, "bits={bits} x={x}: err {err}");
+                let mag = q.unsigned_abs();
+                let recombined: u32 = (0..qp.words())
+                    .map(|w| u32::from(nibble(mag, w)) << (4 * w))
+                    .sum();
+                assert_eq!(recombined, mag);
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_2x2_dense_layer_through_scalar_kernel() {
+    // Hand-computed fixture: W = [[3, -5], [2, 7]], x = [4, 9]. With
+    // mismatch off, the offset-calibrated reconstruction recovers every
+    // product exactly, so the analog accumulators equal the integer
+    // matvec: [3*4 - 5*9, 2*4 + 7*9] = [-33, 71].
+    let e = engine(Variant::Smart);
+    let quiet = MismatchSampler::new(2022, 0.0, 0.0);
+    let qp = QParams::symmetric(1.0, 4);
+    let w = QuantMatrix { rows: 2, cols: 2, q: vec![3, -5, 2, 7], qp };
+    let x = QuantVec { q: vec![4, 9], qp };
+    let mut tiler = Tiler::new(&e, &ScalarKernel, &quiet, 3);
+    let r = tiler.matvec(&w, &x, 0);
+    assert_eq!(r.acc, vec![-33, 71]);
+    assert_eq!(r.ops, 4);
+    assert_eq!(r.faults, 0);
+    assert!(r.energy > 0.0);
+}
+
+#[test]
+fn noise_off_equals_the_exact_integer_pipeline() {
+    // Acceptance: with mismatch off, `smart infer` reports the ideal
+    // accuracy exactly — the noisy pass IS the exact pipeline.
+    let spec = ModelSpec::fixture();
+    let opts = InferOptions { trials: 8, noise_off: true, ..InferOptions::default() };
+    let r = run_infer(&Params::default(), &spec, &opts).unwrap();
+    assert_eq!(r.noisy_accuracy, r.ideal_accuracy);
+    assert_eq!(r.agreement, 1.0);
+    assert_eq!(r.accuracy_delta(), 0.0);
+    assert_eq!(r.out_err.max(), 0.0);
+    for rec in &r.records {
+        assert_eq!(rec.noisy_pred, rec.ideal_pred, "trial {}", rec.trial);
+        assert_eq!(rec.out_err, 0.0);
+    }
+}
+
+#[test]
+fn scalar_and_block_kernels_are_bit_identical_on_a_full_inference() {
+    let spec = ModelSpec::fixture();
+    let p = Params::default();
+    let base = InferOptions { trials: 6, ..InferOptions::default() };
+    let block = run_infer(&p, &spec, &base).unwrap();
+    let scalar =
+        run_infer(&p, &spec, &InferOptions { scalar: true, block: 7, shards: 3, ..base }).unwrap();
+    assert_eq!(block.kernel, "block");
+    assert_eq!(scalar.kernel, "scalar");
+    assert_eq!(block.records.len(), scalar.records.len());
+    for (a, b) in block.records.iter().zip(&scalar.records) {
+        assert_eq!(a.noisy_pred, b.noisy_pred, "trial {}", a.trial);
+        assert_eq!(a.out_err.to_bits(), b.out_err.to_bits(), "trial {}", a.trial);
+        assert_eq!(a.energy_raw.to_bits(), b.energy_raw.to_bits(), "trial {}", a.trial);
+        assert_eq!(a.faults, b.faults, "trial {}", a.trial);
+    }
+    assert_eq!(block.out_err.mean().to_bits(), scalar.out_err.mean().to_bits());
+    assert_eq!(block.noisy_accuracy.to_bits(), scalar.noisy_accuracy.to_bits());
+}
+
+#[test]
+fn smart_variant_shrinks_the_noise_penalty_vs_baseline() {
+    // Acceptance: at the same supply, replacing the AID baseline with
+    // SMART (threshold suppression on) must shrink the application-level
+    // noise figures.
+    let spec = ModelSpec::fixture();
+    let p = Params::default();
+    let mk = |variant| {
+        let opts = InferOptions { trials: 12, variant, ..InferOptions::default() };
+        run_infer(&p, &spec, &opts).unwrap()
+    };
+    let smart = mk(Variant::Smart);
+    let aid = mk(Variant::Aid);
+    assert!(
+        smart.out_err.mean() < aid.out_err.mean(),
+        "SMART output error {} !< AID {}",
+        smart.out_err.mean(),
+        aid.out_err.mean()
+    );
+    assert!(
+        smart.accuracy_delta() <= aid.accuracy_delta(),
+        "SMART delta {} !<= AID delta {}",
+        smart.accuracy_delta(),
+        aid.accuracy_delta()
+    );
+    // both share the same exact reference
+    assert_eq!(smart.ideal_accuracy, aid.ideal_accuracy);
+}
+
+fn smart_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_smart"))
+}
+
+#[test]
+fn infer_cli_artifacts_are_shard_thread_block_invariant() {
+    // Acceptance: `smart infer --json` artifacts are byte-identical for
+    // any --shards/--threads/--block choice and for either kernel.
+    let cfg = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/nn.toml");
+    let run = |tag: &str, extra: &[&str]| {
+        let out_dir =
+            std::env::temp_dir().join(format!("smart_nn_infer_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&out_dir);
+        let mut args = vec![
+            "infer".to_string(),
+            cfg.to_str().unwrap().to_string(),
+            "--trials".to_string(),
+            "6".to_string(),
+            "--json".to_string(),
+            "--out".to_string(),
+            out_dir.to_str().unwrap().to_string(),
+        ];
+        args.extend(extra.iter().map(|s| s.to_string()));
+        let out = smart_bin().args(&args).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        assert!(text.contains("top-1"), "{text}");
+        let csv = std::fs::read_to_string(out_dir.join("infer.csv")).unwrap();
+        let json = std::fs::read_to_string(out_dir.join("infer.json")).unwrap();
+        (csv, json)
+    };
+    let (csv_a, json_a) = run("a", &["--shards", "1", "--threads", "1"]);
+    let (csv_b, json_b) = run("b", &["--shards", "4", "--threads", "2", "--block", "9"]);
+    let (csv_c, json_c) = run("c", &["--scalar", "--shards", "3", "--threads", "3"]);
+    assert_eq!(csv_a, csv_b, "CSV artifacts differ across --shards/--threads/--block");
+    assert_eq!(json_a, json_b, "JSON artifacts differ across --shards/--threads/--block");
+    // the scalar oracle reproduces every number; only the recorded
+    // kernel name may differ between the two JSON artifacts
+    assert_eq!(csv_a, csv_c, "CSV artifacts differ between kernels");
+    assert!(json_c.contains("\"kernel\": \"scalar\""));
+    assert_eq!(
+        json_a.replace("\"kernel\": \"block\"", "\"kernel\": \"scalar\""),
+        json_c,
+        "JSON artifacts differ between kernels beyond the kernel tag"
+    );
+    assert_eq!(csv_a.lines().count(), 7); // header + 6 trials
+    assert!(json_a.contains("\"noisy_accuracy\""));
+}
+
+#[test]
+fn infer_cli_smoke_caps_trials() {
+    let cfg = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/nn.toml");
+    let out = smart_bin()
+        .args(["infer", cfg.to_str().unwrap(), "--smoke", "--noise-off"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("8 trials"), "{text}");
+    assert!(text.contains("delta +0.0 pp"), "{text}");
+}
