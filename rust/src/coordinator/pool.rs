@@ -91,9 +91,17 @@ pub struct WorkerPool {
 impl WorkerPool {
     /// Spawn `workers` threads, each compiling the `mac_b{batch}`
     /// artifact from `artifact_dir`. Fails fast if a worker cannot
-    /// initialize (bad artifact dir, missing batch size).
+    /// initialize (bad artifact dir, missing batch size). `workers` and
+    /// `batch` must be >= 1 — a zero-worker pool would accept jobs into a
+    /// rendezvous channel nobody drains (a silent deadlock, not a crash),
+    /// so this is a descriptive error rather than a deep `assert!`.
     pub fn spawn(artifact_dir: PathBuf, batch: usize, workers: usize) -> Result<Self> {
-        assert!(workers > 0);
+        anyhow::ensure!(
+            workers > 0,
+            "worker pool needs at least 1 thread (got workers = 0; \
+             pass 0 at the spec/CLI level for auto-selection instead)"
+        );
+        anyhow::ensure!(batch > 0, "worker pool needs a batch size >= 1 (got 0)");
         let (job_tx, job_rx) = sync_channel::<PackedBatch>(workers * 2);
         let job_rx = Arc::new(Mutex::new(job_rx));
         let (result_tx, result_rx) =

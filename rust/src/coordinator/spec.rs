@@ -52,12 +52,60 @@ impl Workload {
         }
     }
 
+    /// Number of operand pairs [`Self::operands`] expands to, **without
+    /// materializing the list**. The `smart serve` work-ceiling check
+    /// must reject oversized workloads before allocating them — e.g. a
+    /// 60-byte `random` request with `n_ops = u32::MAX` would otherwise
+    /// collect ~4.3e9 pairs just to be counted and rejected.
+    pub fn n_operands(&self) -> u64 {
+        match self {
+            Self::Fixed { .. } => 1,
+            Self::FullSweep => 256,
+            Self::Random { n_ops } => u64::from(*n_ops),
+            Self::BitSweep { bits } => {
+                let hi = 1u64 << (*bits).min(4);
+                hi * hi
+            }
+        }
+    }
+
+    /// Encode as a config value tree — exactly the shape
+    /// [`Self::from_value`] parses, so workloads round-trip. Used by the
+    /// canonical `mc.json` artifact encoder ([`crate::report::mc_json`])
+    /// and the `smart serve` request canonicalization.
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::BTreeMap::new();
+        match self {
+            Self::Fixed { a, b } => {
+                m.insert("kind".to_string(), Value::Str("fixed".to_string()));
+                m.insert("a".to_string(), Value::Num(f64::from(*a)));
+                m.insert("b".to_string(), Value::Num(f64::from(*b)));
+            }
+            Self::FullSweep => {
+                m.insert("kind".to_string(), Value::Str("full_sweep".to_string()));
+            }
+            Self::Random { n_ops } => {
+                m.insert("kind".to_string(), Value::Str("random".to_string()));
+                m.insert("n_ops".to_string(), Value::Num(f64::from(*n_ops)));
+            }
+            Self::BitSweep { bits } => {
+                m.insert("kind".to_string(), Value::Str("bit_sweep".to_string()));
+                m.insert("bits".to_string(), Value::Num(f64::from(*bits)));
+            }
+        }
+        Value::Obj(m)
+    }
+
     /// Parse from a config tree: `{kind = "fixed", a = 15, b = 15}` etc.
     pub fn from_value(v: &Value) -> anyhow::Result<Self> {
         let kind = v
             .get("kind")
             .and_then(Value::as_str)
             .ok_or_else(|| anyhow::anyhow!("workload.kind missing"))?;
+        // Range-checked narrowing, not `as` casts: this parser also sits
+        // behind `smart serve`'s untrusted POST bodies, where a silently
+        // wrapped integer (a = 256 -> 0) would return a 200 computed for
+        // a different campaign than the client asked for.
         match kind {
             "fixed" => {
                 let g = |k: &str| {
@@ -65,23 +113,35 @@ impl Workload {
                         .and_then(Value::as_u64)
                         .ok_or_else(|| anyhow::anyhow!("workload.{k} missing"))
                 };
-                Ok(Self::Fixed { a: g("a")? as u8, b: g("b")? as u8 })
+                let (a, b) = (g("a")?, g("b")?);
+                anyhow::ensure!(
+                    a <= 15 && b <= 15,
+                    "fixed workload operands must be 4-bit (got a = {a}, b = {b})"
+                );
+                Ok(Self::Fixed { a: a as u8, b: b as u8 })
             }
             "full_sweep" => Ok(Self::FullSweep),
-            "random" => Ok(Self::Random {
-                n_ops: v
+            "random" => {
+                let n = v
                     .get("n_ops")
                     .and_then(Value::as_u64)
-                    .ok_or_else(|| anyhow::anyhow!("workload.n_ops missing"))?
-                    as u32,
-            }),
-            "bit_sweep" => Ok(Self::BitSweep {
-                bits: v
+                    .ok_or_else(|| anyhow::anyhow!("workload.n_ops missing"))?;
+                Ok(Self::Random {
+                    n_ops: u32::try_from(n)
+                        .map_err(|_| anyhow::anyhow!("workload.n_ops = {n} exceeds u32"))?,
+                })
+            }
+            "bit_sweep" => {
+                let bits = v
                     .get("bits")
                     .and_then(Value::as_u64)
-                    .ok_or_else(|| anyhow::anyhow!("workload.bits missing"))?
-                    as u32,
-            }),
+                    .ok_or_else(|| anyhow::anyhow!("workload.bits missing"))?;
+                anyhow::ensure!(
+                    (1..=4).contains(&bits),
+                    "workload.bits must be 1..=4, got {bits}"
+                );
+                Ok(Self::BitSweep { bits: bits as u32 })
+            }
             other => anyhow::bail!("unknown workload kind '{other}'"),
         }
     }
@@ -158,10 +218,15 @@ impl CampaignSpec {
             None => Corner::Tt,
             Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
         };
+        // n_mc narrows range-checked (no silent wrap for untrusted HTTP
+        // bodies); the usize knobs are 64-bit on every supported target.
+        let n_mc = u("n_mc", 1000);
+        let n_mc = u32::try_from(n_mc)
+            .map_err(|_| anyhow::anyhow!("campaign.n_mc = {n_mc} exceeds u32"))?;
         let spec = Self {
             variant,
             workload,
-            n_mc: u("n_mc", 1000) as u32,
+            n_mc,
             seed: u("seed", 2022),
             corner,
             workers: u("workers", 0) as usize,
@@ -284,6 +349,34 @@ mod tests {
     }
 
     #[test]
+    fn n_operands_matches_the_materialized_list() {
+        for w in [
+            Workload::Fixed { a: 3, b: 12 },
+            Workload::FullSweep,
+            Workload::Random { n_ops: 9 },
+            Workload::BitSweep { bits: 2 },
+            Workload::BitSweep { bits: 4 },
+        ] {
+            assert_eq!(w.n_operands(), w.operands(7).len() as u64, "{w:?}");
+        }
+        // the point of the method: huge counts are computed, not allocated
+        assert_eq!(Workload::Random { n_ops: u32::MAX }.n_operands(), u64::from(u32::MAX));
+    }
+
+    #[test]
+    fn workload_value_roundtrip() {
+        for w in [
+            Workload::Fixed { a: 3, b: 12 },
+            Workload::FullSweep,
+            Workload::Random { n_ops: 9 },
+            Workload::BitSweep { bits: 2 },
+        ] {
+            let back = Workload::from_value(&w.to_value()).unwrap();
+            assert_eq!(back, w);
+        }
+    }
+
+    #[test]
     fn random_workload_is_seeded() {
         let a = Workload::Random { n_ops: 50 }.operands(7);
         let b = Workload::Random { n_ops: 50 }.operands(7);
@@ -332,6 +425,23 @@ mod tests {
         assert_eq!(spec.workload, Workload::FullSweep);
         assert_eq!(spec.shards, 0);
         assert_eq!(spec.block, 0);
+    }
+
+    #[test]
+    fn from_value_rejects_out_of_range_integers() {
+        // regression: `as u8`/`as u32` casts silently wrapped (a = 256 ->
+        // 0, n_mc = 2^32 + 8 -> 8), so the serve surface could answer 200
+        // with results for a different campaign than the client requested
+        for toml in [
+            "[[campaigns]]\nvariant = \"smart\"\n[campaigns.workload]\nkind = \"fixed\"\na = 256\nb = 15\n",
+            "[[campaigns]]\nvariant = \"smart\"\nn_mc = 4294967304\n[campaigns.workload]\nkind = \"full_sweep\"\n",
+            "[[campaigns]]\nvariant = \"smart\"\n[campaigns.workload]\nkind = \"random\"\nn_ops = 4294967296\n",
+            "[[campaigns]]\nvariant = \"smart\"\n[campaigns.workload]\nkind = \"bit_sweep\"\nbits = 4294967298\n",
+        ] {
+            let doc = toml_lite::parse(toml).unwrap();
+            let c = &doc.get("campaigns").unwrap().as_arr().unwrap()[0];
+            assert!(CampaignSpec::from_value(c).is_err(), "accepted: {toml}");
+        }
     }
 
     #[test]

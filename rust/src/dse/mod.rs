@@ -39,5 +39,7 @@ mod runner;
 mod spec;
 
 pub use pareto::pareto_flags;
-pub use runner::{run_sweep, PointResult, SweepOptions, SweepResult};
+pub use runner::{
+    point_key, run_grid_point, run_sweep, sweep_json, PointResult, SweepOptions, SweepResult,
+};
 pub use spec::{GridAxes, GridPoint, SweepSpec};

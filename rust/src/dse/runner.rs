@@ -147,7 +147,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepResult> {
             results.push(row.to_result(*point));
             resumed += 1;
         } else {
-            results.push(run_point(spec, point, opts)?);
+            results.push(run_grid_point(spec, point, opts)?);
             computed += 1;
             // Checkpoint after every computed point, so an interrupted
             // sweep resumes from the last completed point rather than
@@ -164,7 +164,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepResult> {
     let pareto = flags_of(&results);
     std::fs::write(&csv_path, render_csv(spec, &results, &pareto))
         .with_context(|| format!("writing {}", csv_path.display()))?;
-    std::fs::write(&json_path, render_json(spec, &results, &pareto))
+    std::fs::write(&json_path, sweep_json(spec, &results, &pareto))
         .with_context(|| format!("writing {}", json_path.display()))?;
 
     Ok(SweepResult {
@@ -179,8 +179,15 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepResult> {
 }
 
 /// Simulate one grid point: a full sharded campaign plus the energy model
-/// evaluated at the point's operating conditions.
-fn run_point(spec: &SweepSpec, point: &GridPoint, opts: &SweepOptions) -> Result<PointResult> {
+/// evaluated at the point's operating conditions. Public so embedders
+/// (`smart serve`'s `POST /v1/sweep/point`) can run a single point
+/// through exactly the sweep pipeline — statistics are canonicalized
+/// here, so a point's numbers are byte-identical however it is reached.
+pub fn run_grid_point(
+    spec: &SweepSpec,
+    point: &GridPoint,
+    opts: &SweepOptions,
+) -> Result<PointResult> {
     let params = point.apply(&spec.params);
     let cspec =
         point.campaign_spec(spec.seed, spec.n_mc, opts.shards, opts.threads, opts.block);
@@ -213,9 +220,12 @@ fn run_point(spec: &SweepSpec, point: &GridPoint, opts: &SweepOptions) -> Result
     })
 }
 
-/// The resume key: the first eight CSV columns, rendered exactly as the
-/// writer renders them.
-fn point_key(p: &GridPoint, spec: &SweepSpec) -> String {
+/// The canonical identity key of one grid point under one sweep spec:
+/// the first eight CSV columns, rendered exactly as the writer renders
+/// them (floats through [`csv_cell`]'s 6-significant-digit precision).
+/// Doubles as the `sweep.csv` resume key and the `smart serve` cache
+/// key for `POST /v1/sweep/point`.
+pub fn point_key(p: &GridPoint, spec: &SweepSpec) -> String {
     format!(
         "{},{},{},{},{},{},{},{}",
         p.variant.token(),
@@ -255,12 +265,7 @@ fn card_fingerprint(p: &crate::params::Params) -> String {
         c.sigma_vth,
         c.sigma_beta
     );
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in canon.bytes() {
-        h ^= u64::from(b);
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    format!("{h:016x}")
+    format!("{:016x}", crate::util::fnv1a(&canon))
 }
 
 fn render_csv(spec: &SweepSpec, results: &[PointResult], pareto: &[bool]) -> String {
@@ -285,7 +290,13 @@ fn render_csv(spec: &SweepSpec, results: &[PointResult], pareto: &[bool]) -> Str
     s
 }
 
-fn render_json(spec: &SweepSpec, results: &[PointResult], pareto: &[bool]) -> String {
+/// Render the canonical `sweep.json` artifact for `results` (one entry
+/// per grid point, every float already canonicalized by
+/// [`run_grid_point`]). The single JSON encoder for sweep results: the
+/// CLI artifact writer and `smart serve`'s `POST /v1/sweep/point`
+/// responses both call it, so a served single-point sweep is
+/// byte-identical to the `smart sweep` artifact of the same spec.
+pub fn sweep_json(spec: &SweepSpec, results: &[PointResult], pareto: &[bool]) -> String {
     let mut root = BTreeMap::new();
     root.insert("name".to_string(), Value::Str(spec.name.clone()));
     root.insert("seed".to_string(), Value::Num(spec.seed as f64));

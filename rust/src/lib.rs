@@ -29,7 +29,10 @@
 //! [`nn`] runs quantized neural-network inference with every
 //! multiply-accumulate executed by the simulated noisy MAC — the
 //! application-level accuracy story behind the paper's pitch
-//! (DESIGN.md §10).
+//! (DESIGN.md §10). [`serve`] fronts all three workloads (`mc`, sweep
+//! points, inference) with a long-lived HTTP service whose spec-keyed
+//! result cache exploits the byte-identity contract for O(1) repeat
+//! lookups (DESIGN.md §11).
 
 #![warn(missing_docs)]
 
@@ -63,6 +66,8 @@ pub mod params;
 pub mod report;
 /// PJRT/XLA artifact loading and execution (stubbed offline).
 pub mod runtime;
+/// `smart serve`: the concurrent, cache-fronted campaign-result service.
+pub mod serve;
 /// 6T cells, 4-cell MAC words, and the precharge model.
 pub mod sram;
 /// Self-contained utilities: CLI args, JSON, TOML-lite, property RNG.

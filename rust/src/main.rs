@@ -10,6 +10,7 @@
 //! smart run configs/fig8.toml
 //! smart sweep configs/dse.toml --shards 4 --threads 2 [--resume]
 //! smart infer configs/nn.toml --trials 64 --variant smart [--json]
+//! smart serve --addr 127.0.0.1:7878 --workers 4 [--self-test]
 //! ```
 
 use std::path::PathBuf;
@@ -38,9 +39,12 @@ COMMANDS:
   mac <a> <b> [--variant V]    one 4x4-bit MAC through the full stack
   mc [--variant V] [--n-mc N] [--a A --b B | --full-sweep]
      [--seed S] [--shards K] [--threads T] [--block N] [--corner tt|ff|ss]
-                               Monte-Carlo campaign (paper Fig. 8/9);
+     [--json] [--out DIR]      Monte-Carlo campaign (paper Fig. 8/9);
                                aggregates are bit-identical for any
-                               --shards/--threads/--block choice
+                               --shards/--threads/--block choice; --json
+                               writes the canonical mc.json artifact
+                               (identity fields only — the same bytes
+                               `smart serve` answers POST /v1/mc with)
   table1 [--n-mc N]            regenerate Table 1 (all variants + lit rows)
   run <config.toml>            run campaigns from an experiment file
   sweep <dse.toml> [--shards K] [--threads T] [--block N] [--resume]
@@ -71,21 +75,55 @@ COMMANDS:
                                mismatch sigmas (the noisy pass must then
                                equal the exact integer pipeline);
                                --smoke caps trials at 8 for CI
+  serve [--addr A] [--workers N] [--cache-cap N]
+        [--self-test] [--smoke] [--json] [--out DIR]
+                               long-lived campaign-result service:
+                               POST /v1/mc, /v1/sweep/point, /v1/infer
+                               (JSON bodies mirroring the TOML specs),
+                               GET /v1/health, /v1/stats; responses are
+                               byte-identical to the CLI --json
+                               artifacts and repeat requests are served
+                               from a spec-keyed LRU cache; --self-test
+                               starts an ephemeral server, hammers it
+                               with concurrent loopback clients, and
+                               asserts byte-identity + cache hit-rate
+                               (--smoke shrinks it for CI, --json writes
+                               SERVE_stats.json to --out)
 
 OPTIONS:
   --artifacts DIR   artifact directory (default: $SMART_ARTIFACTS or ./artifacts)
   --native          use the native Rust simulator instead of the AOT/PJRT path
   --variant V       smart | aid | imac | smart-on-imac (default: smart)
   --out DIR         artifact directory (sweep default: target/dse;
-                    infer default: target/infer; bench default: .)
+                    infer default: target/infer; mc default: target/mc;
+                    bench and serve --self-test default: .)
 ";
+
+/// Parse a positive tuning knob (`--shards`/`--threads`/`--block`/
+/// `--workers`): absent means 0 = auto-select; an **explicit** 0 is
+/// rejected here with a descriptive error. Before this boundary check,
+/// `--workers 0` and friends sailed into the campaign stack and died on
+/// an `assert!` deep in `coordinator::pool` (or deadlocked a pool with
+/// nobody to drain it) instead of telling the user what to fix.
+fn knob(args: &Args, name: &str) -> Result<usize> {
+    let v: usize = args.opt_parse(name, 0usize).map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(
+        v > 0 || args.opt(name).is_none(),
+        "--{name} must be >= 1 (omit the flag to auto-select)"
+    );
+    Ok(v)
+}
 
 /// Resolve the worker-thread knob: `--threads` is the documented flag,
 /// `--workers` remains as an alias for existing scripts (shared by the
-/// `mc`, `sweep`, and `infer` subcommands).
+/// `mc`, `sweep`, and `infer` subcommands). Explicit zeros are rejected
+/// by [`knob`].
 fn threads_opt(args: &Args) -> Result<usize> {
-    let w = args.opt_parse("workers", 0usize).map_err(|e| anyhow::anyhow!(e))?;
-    args.opt_parse("threads", w).map_err(|e| anyhow::anyhow!(e))
+    let w = knob(args, "workers")?;
+    if args.opt("threads").is_none() {
+        return Ok(w);
+    }
+    knob(args, "threads")
 }
 
 fn main() -> ExitCode {
@@ -101,7 +139,10 @@ fn main() -> ExitCode {
 fn run() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["native", "full-sweep", "help", "resume", "json", "smoke", "scalar", "noise-off"],
+        &[
+            "native", "full-sweep", "help", "resume", "json", "smoke", "scalar", "noise-off",
+            "self-test",
+        ],
     )
     .map_err(|e| anyhow::anyhow!(e))?;
     if args.flag("help") || args.positional(0).is_none() {
@@ -148,9 +189,9 @@ fn run() -> Result<()> {
                     .opt_parse("corner", Corner::Tt)
                     .map_err(|e| anyhow::anyhow!(e))?,
                 workers: threads_opt(&args)?,
-                batch: args.opt_parse("batch", 0usize).map_err(|e| anyhow::anyhow!(e))?,
-                shards: args.opt_parse("shards", 0usize).map_err(|e| anyhow::anyhow!(e))?,
-                block: args.opt_parse("block", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+                batch: knob(&args, "batch")?,
+                shards: knob(&args, "shards")?,
+                block: knob(&args, "block")?,
             };
             let r = run_campaign(&params, &spec, backend, Some(art))?;
             print!(
@@ -163,6 +204,16 @@ fn run() -> Result<()> {
                 r.batches,
                 r.wall
             );
+            if args.flag("json") {
+                let out: PathBuf =
+                    args.opt("out").map(PathBuf::from).unwrap_or_else(|| "target/mc".into());
+                std::fs::create_dir_all(&out)
+                    .map_err(|e| anyhow::anyhow!("creating {}: {e}", out.display()))?;
+                let path = out.join("mc.json");
+                std::fs::write(&path, report::mc_json(&spec, &r))
+                    .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+                println!("wrote {}", path.display());
+            }
             Ok(())
         }
         "table1" => {
@@ -173,7 +224,7 @@ fn run() -> Result<()> {
             let n_mc: u32 = args.opt_parse("n-mc", 1000u32).map_err(|e| anyhow::anyhow!(e))?;
             let out: PathBuf = args.opt("out").map(PathBuf::from).unwrap_or_else(|| ".".into());
             let threads = threads_opt(&args)?;
-            let block = args.opt_parse("block", 0usize).map_err(|e| anyhow::anyhow!(e))?;
+            let block = knob(&args, "block")?;
             cmd_bench(
                 &params,
                 variant,
@@ -204,9 +255,9 @@ fn run() -> Result<()> {
             };
             let opts = smart_insram::nn::InferOptions {
                 trials,
-                shards: args.opt_parse("shards", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+                shards: knob(&args, "shards")?,
                 threads: threads_opt(&args)?,
-                block: args.opt_parse("block", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+                block: knob(&args, "block")?,
                 variant,
                 scalar: args.flag("scalar"),
                 noise_off: args.flag("noise-off"),
@@ -234,9 +285,9 @@ fn run() -> Result<()> {
             })?;
             let sweep = SweepSpec::load(path)?;
             let opts = SweepOptions {
-                shards: args.opt_parse("shards", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+                shards: knob(&args, "shards")?,
                 threads: threads_opt(&args)?,
-                block: args.opt_parse("block", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+                block: knob(&args, "block")?,
                 resume: args.flag("resume"),
                 out_dir: args
                     .opt("out")
@@ -249,6 +300,7 @@ fn run() -> Result<()> {
             print!("{}", report::sweep_panel(&r));
             Ok(())
         }
+        "serve" => cmd_serve(&params, &args),
         "run" => {
             let path = args
                 .positional(1)
@@ -396,6 +448,65 @@ fn cmd_bench(
             .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
         println!("wrote {}", path.display());
     }
+    Ok(())
+}
+
+/// `smart serve`: start the campaign-result service, or (with
+/// `--self-test`) run the loopback load generator against an ephemeral
+/// instance and assert the service contract — byte-identity with the CLI
+/// `--json` artifacts, cache hit-rate, histogram NaN integrity. With
+/// `--json` the self-test writes the server's final `/v1/stats` body to
+/// `--out`/SERVE_stats.json (the CI smoke artifact).
+fn cmd_serve(params: &Params, args: &Args) -> Result<()> {
+    use smart_insram::serve::{self_test, ServeOptions, Server};
+    let workers = {
+        let w = threads_opt(args)?;
+        if w > 0 {
+            w
+        } else {
+            ServeOptions::default().workers
+        }
+    };
+    let cache_cap = {
+        let c = knob(args, "cache-cap")?;
+        if c > 0 {
+            c
+        } else {
+            ServeOptions::default().cache_cap
+        }
+    };
+    if args.flag("self-test") {
+        let r = self_test(params, workers, args.flag("smoke"))?;
+        println!(
+            "serve self-test OK: {} requests, {} hits / {} misses \
+             ({} clients x {} repeats x 3 endpoints, byte-identical to the CLI artifacts)",
+            r.requests, r.hits, r.misses, r.clients, r.repeats
+        );
+        if args.flag("json") {
+            let out: PathBuf = args.opt("out").map(PathBuf::from).unwrap_or_else(|| ".".into());
+            std::fs::create_dir_all(&out)
+                .map_err(|e| anyhow::anyhow!("creating {}: {e}", out.display()))?;
+            let path = out.join("SERVE_stats.json");
+            std::fs::write(&path, &r.stats_json)
+                .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+            println!("wrote {}", path.display());
+        }
+        return Ok(());
+    }
+    let opts = ServeOptions {
+        addr: args.opt("addr").unwrap_or("127.0.0.1:7878").to_string(),
+        workers,
+        cache_cap,
+    };
+    let mut server = Server::start(*params, &opts)?;
+    println!(
+        "smart serve listening on {} ({} workers, cache capacity {})",
+        server.addr(),
+        opts.workers,
+        opts.cache_cap
+    );
+    println!("endpoints: POST /v1/mc /v1/sweep/point /v1/infer ; GET /v1/health /v1/stats");
+    server.join();
     Ok(())
 }
 

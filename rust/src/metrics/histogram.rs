@@ -1,24 +1,35 @@
 //! Fixed-bin histogram for the Fig. 8/9 Monte-Carlo distributions.
 
 /// Equal-width histogram over [lo, hi); out-of-range samples clamp to the
-/// edge bins so nothing is silently dropped.
+/// edge bins so nothing is silently dropped. Non-finite samples never
+/// enter a bin — they are tracked in a separate [`Self::non_finite`]
+/// counter (a NaN has no position on the axis; `idx.max(0.0)` used to
+/// map it into bin 0, silently corrupting the Fig. 8/9 mode and
+/// sparkline).
 #[derive(Debug, Clone)]
 pub struct Histogram {
     lo: f64,
     hi: f64,
     bins: Vec<u64>,
     n: u64,
+    non_finite: u64,
 }
 
 impl Histogram {
     /// `n_bins` equal-width bins over `[lo, hi)`.
     pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
         assert!(hi > lo && n_bins > 0);
-        Self { lo, hi, bins: vec![0; n_bins], n: 0 }
+        Self { lo, hi, bins: vec![0; n_bins], n: 0, non_finite: 0 }
     }
 
-    /// Count one sample (out-of-range clamps to the edge bins).
+    /// Count one sample (out-of-range clamps to the edge bins; non-finite
+    /// samples are diverted to the [`Self::non_finite`] counter and never
+    /// perturb the bins, [`Self::total`], or [`Self::mode`]).
     pub fn push(&mut self, x: f64) {
+        if !x.is_finite() {
+            self.non_finite += 1;
+            return;
+        }
         let nb = self.bins.len();
         let idx = ((x - self.lo) / (self.hi - self.lo) * nb as f64).floor();
         let idx = (idx.max(0.0) as usize).min(nb - 1);
@@ -31,9 +42,19 @@ impl Histogram {
         &self.bins
     }
 
-    /// Total samples counted.
+    /// Total finite samples counted into bins.
     pub fn total(&self) -> u64 {
         self.n
+    }
+
+    /// Non-finite (NaN/±inf) samples diverted away from the bins.
+    pub fn non_finite(&self) -> u64 {
+        self.non_finite
+    }
+
+    /// The `[lo, hi)` range the bins span.
+    pub fn range(&self) -> (f64, f64) {
+        (self.lo, self.hi)
     }
 
     /// Center of bin `i`.
@@ -95,5 +116,21 @@ mod tests {
         let mut h = Histogram::new(0.0, 1.0, 25);
         h.push(0.5);
         assert_eq!(h.sparkline().chars().count(), 25);
+    }
+
+    #[test]
+    fn non_finite_samples_never_reach_bin_0() {
+        // regression: `idx.max(0.0)` used to map NaN into bin 0
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.push(f64::NAN);
+        h.push(f64::INFINITY);
+        h.push(f64::NEG_INFINITY);
+        h.push(0.55);
+        assert_eq!(h.counts()[0], 0, "NaN leaked into bin 0");
+        assert_eq!(h.total(), 1);
+        assert_eq!(h.non_finite(), 3);
+        // the mode is computed over finite samples only
+        assert!((h.mode() - 0.55).abs() < 0.05);
+        assert_eq!(h.range(), (0.0, 1.0));
     }
 }

@@ -280,7 +280,7 @@ pub fn run_infer(params: &Params, spec: &ModelSpec, opts: &InferOptions) -> Resu
         let json_path = opts.out_dir.join("infer.json");
         std::fs::write(&csv_path, render_csv(&report))
             .with_context(|| format!("writing {}", csv_path.display()))?;
-        std::fs::write(&json_path, render_json(spec, &report))
+        std::fs::write(&json_path, infer_json(spec, &report))
             .with_context(|| format!("writing {}", json_path.display()))?;
         report.csv_path = Some(csv_path);
         report.json_path = Some(json_path);
@@ -312,7 +312,13 @@ fn render_csv(r: &InferReport) -> String {
     s
 }
 
-fn render_json(spec: &ModelSpec, r: &InferReport) -> String {
+/// Render the canonical `infer.json` artifact for a finished inference
+/// campaign. The single JSON encoder for inference results: the CLI
+/// `--json` artifact writer and `smart serve`'s `POST /v1/infer`
+/// responses both call it, so a served inference is byte-identical to
+/// the `smart infer --json` artifact of the same spec (every float is
+/// already canonicalized by [`run_infer`]; wall-clock never appears).
+pub fn infer_json(spec: &ModelSpec, r: &InferReport) -> String {
     let mut root = std::collections::BTreeMap::new();
     let mut put = |k: &str, v: Value| {
         root.insert(k.to_string(), v);
@@ -399,7 +405,7 @@ mod tests {
         let a = run_infer(&p, &spec, &opts).unwrap();
         let b = run_infer(&p, &spec, &opts).unwrap();
         assert_eq!(render_csv(&a), render_csv(&b));
-        assert_eq!(render_json(&spec, &a), render_json(&spec, &b));
+        assert_eq!(infer_json(&spec, &a), infer_json(&spec, &b));
         assert!(render_csv(&a).starts_with(CSV_HEADER));
     }
 }

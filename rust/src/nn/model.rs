@@ -101,6 +101,14 @@ impl ModelSpec {
     /// Parse a model document (TOML-lite, see the module docs).
     pub fn parse(text: &str) -> Result<Self> {
         let doc = toml_lite::parse(text).map_err(|e| anyhow::anyhow!("model TOML: {e}"))?;
+        Self::from_value(&doc)
+    }
+
+    /// Build a spec from an already-parsed config tree. TOML-lite files
+    /// and JSON documents parse into the same [`Value`] shape, so this is
+    /// also how `smart serve` accepts `nn.toml`-mirroring JSON request
+    /// bodies on `POST /v1/infer`.
+    pub fn from_value(doc: &Value) -> Result<Self> {
         let name = doc.get("name").and_then(Value::as_str).unwrap_or("nn").to_string();
         let u = |k: &str, default: u64| doc.get(k).and_then(Value::as_u64).unwrap_or(default);
         let dataset = DatasetSpec::from_value(
@@ -114,11 +122,18 @@ impl ModelSpec {
         for (i, l) in arr.iter().enumerate() {
             layers.push(LayerSpec::from_value(l).with_context(|| format!("layer #{i}"))?);
         }
+        // Range-checked narrowing: this parser also serves `smart serve`'s
+        // untrusted POST /v1/infer bodies, where a wrapped integer
+        // (trials = 2^32 + 8 -> 8) would silently run a different
+        // campaign than requested and cache it under the wrapped key.
+        let narrow = |k: &str, v: u64| {
+            u32::try_from(v).map_err(|_| anyhow::anyhow!("model {k} = {v} exceeds u32"))
+        };
         let spec = Self {
             name,
             seed: u("seed", 2022),
-            trials: u("trials", 64) as u32,
-            bits: u("bits", 4) as u32,
+            trials: narrow("trials", u("trials", 64))?,
+            bits: narrow("bits", u("bits", 4))?,
             dataset,
             layers,
         };

@@ -99,7 +99,68 @@ pub fn mc_panel(title: &str, r: &CampaignReport) -> String {
     );
     let _ = writeln!(s, "V_mult histogram [0, {:.0} mV):", r.full_scale * 1.25 * 1e3);
     let _ = writeln!(s, "{}", r.hist.sparkline());
+    if r.hist.non_finite() > 0 {
+        let _ = writeln!(
+            s,
+            "warning: {} non-finite sample(s) excluded from the bins",
+            r.hist.non_finite()
+        );
+    }
     s
+}
+
+/// Canonical JSON encoding of a finished Monte-Carlo campaign — the
+/// `mc.json` artifact `smart mc --json` writes and the byte-identical
+/// body `smart serve` answers `POST /v1/mc` with (DESIGN.md §11).
+///
+/// Only the spec's *identity* fields appear (variant, workload, n_mc,
+/// seed, corner): `--shards`/`--threads`/`--block` are pure performance
+/// knobs under the bit-identical-aggregates contract (DESIGN.md §4), so
+/// they must never change the bytes. Wall-clock and throughput are
+/// deliberately absent for the same reason, and every float is
+/// canonicalized through [`canon`].
+pub fn mc_json(spec: &crate::coordinator::CampaignSpec, r: &CampaignReport) -> String {
+    use crate::util::json::{to_string_pretty, Value};
+    use std::collections::BTreeMap;
+    let mut root = BTreeMap::new();
+    let mut put = |k: &str, v: Value| {
+        root.insert(k.to_string(), v);
+    };
+    put("variant", Value::Str(spec.variant.token().to_string()));
+    put("workload", spec.workload.to_value());
+    put("n_mc", Value::Num(f64::from(spec.n_mc)));
+    put("seed", Value::Num(spec.seed as f64));
+    put("corner", Value::Str(spec.corner.name().to_string()));
+    put("rows", Value::Num(r.rows as f64));
+    put("full_scale", Value::Num(canon(r.full_scale)));
+    put("mean_v", Value::Num(canon(r.raw_vmult.mean())));
+    put("sigma_v", Value::Num(canon(r.raw_vmult.std_dev())));
+    put(
+        "sigma_ci",
+        match r.sigma_ci {
+            Some((lo, hi)) => Value::Arr(vec![Value::Num(canon(lo)), Value::Num(canon(hi))]),
+            None => Value::Null,
+        },
+    );
+    put("sigma_norm", Value::Num(canon(r.accuracy.sigma_norm)));
+    put("rms_norm", Value::Num(canon(r.accuracy.rms_norm)));
+    put("snr_db", Value::Num(canon(r.accuracy.snr_db)));
+    put("ber", Value::Num(canon(r.accuracy.ber)));
+    put("fault_rate", Value::Num(canon(r.accuracy.fault_rate)));
+    put("energy_mean", Value::Num(canon(r.energy.mean())));
+    let (lo, hi) = r.hist.range();
+    let mut hist = BTreeMap::new();
+    hist.insert("lo".to_string(), Value::Num(canon(lo)));
+    hist.insert("hi".to_string(), Value::Num(canon(hi)));
+    hist.insert(
+        "counts".to_string(),
+        Value::Arr(r.hist.counts().iter().map(|&c| Value::Num(c as f64)).collect()),
+    );
+    hist.insert("non_finite".to_string(), Value::Num(r.hist.non_finite() as f64));
+    put("hist", Value::Obj(hist));
+    let mut text = to_string_pretty(&Value::Obj(root));
+    text.push('\n');
+    text
 }
 
 /// Format one CSV numeric cell: finite values as `{:.6e}`, non-finite as
@@ -109,19 +170,36 @@ pub fn mc_panel(title: &str, r: &CampaignReport) -> String {
 /// differently (or not at all) in downstream tools.
 pub fn csv_cell(v: f64) -> String {
     if v.is_finite() {
-        format!("{v:.6e}")
+        format!("{:.6e}", canon_zero(v))
     } else {
         String::new()
     }
 }
 
+/// Normalize `-0.0` to `+0.0`. The two compare equal but render with
+/// different signs (`-0.000000e0` vs `0.000000e0`), so without this two
+/// bit-identical pipelines could still diverge *textually* in CSV/JSON
+/// artifacts and cache keys. The single statement of the sign-of-zero
+/// rule, applied by [`canon`], [`csv_cell`], and the
+/// [`crate::util::json`] number writer.
+pub fn canon_zero(v: f64) -> f64 {
+    if v == 0.0 {
+        0.0
+    } else {
+        v
+    }
+}
+
 /// Round to the artifact precision — [`csv_cell`]'s `{:.6e}` format, 6
-/// significant digits — so CSV and JSON artifacts carry identical
+/// significant digits, with `-0.0` normalized to `0.0`
+/// ([`canon_zero`]) — so CSV and JSON artifacts carry identical
 /// values and checkpoint round-trips are byte-exact. The single
-/// statement of the artifact precision, shared by the `dse` and `nn`
-/// artifact writers.
+/// statement of the artifact precision, shared by the `dse`, `nn`, and
+/// `serve` artifact/response writers.
 pub fn canon(v: f64) -> f64 {
-    if v.is_finite() {
+    if v == 0.0 {
+        0.0
+    } else if v.is_finite() {
         format!("{v:.6e}").parse().unwrap_or(v)
     } else {
         v
@@ -286,6 +364,50 @@ mod tests {
         {
             assert!(s.contains(needle), "missing {needle} in:\n{s}");
         }
+    }
+
+    #[test]
+    fn negative_zero_is_canonicalized_everywhere() {
+        // regression: -0.0 rendered as "-0.000000e0", so bit-identical
+        // pipelines could diverge textually on sign-of-zero
+        assert_eq!(canon(-0.0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(canon_zero(-0.0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(canon_zero(-1.5), -1.5);
+        assert_eq!(csv_cell(-0.0), "0.000000e0");
+        assert_eq!(csv_cell(-0.0), csv_cell(0.0));
+        // the CSV emitter and the JSON writer agree
+        let out = csv(&["x"], &[vec![-0.0]]);
+        assert_eq!(out.lines().nth(1).unwrap(), "0.000000e0");
+        let json = crate::util::json::to_string_pretty(&crate::util::json::Value::Num(-0.0));
+        assert_eq!(json, "0");
+        // negative non-zero values keep their sign
+        assert_eq!(csv_cell(-1.0), "-1.000000e0");
+        assert_eq!(canon(-1.0), -1.0);
+    }
+
+    #[test]
+    fn mc_json_is_canonical_and_excludes_perf_knobs() {
+        use crate::coordinator::{run_campaign, Backend, CampaignSpec};
+        let p = Params::default();
+        let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+        spec.n_mc = 16;
+        let r = run_campaign(&p, &spec, Backend::Native, None).unwrap();
+        let a = mc_json(&spec, &r);
+        // perf knobs never appear in the canonical bytes
+        let mut knobbed = spec.clone();
+        knobbed.workers = 3;
+        knobbed.shards = 7;
+        knobbed.block = 5;
+        let r2 = run_campaign(&p, &knobbed, Backend::Native, None).unwrap();
+        let b = mc_json(&knobbed, &r2);
+        assert_eq!(a, b, "perf knobs leaked into mc.json");
+        for needle in ["\"variant\"", "\"workload\"", "\"hist\"", "\"non_finite\"", "\"sigma_norm\""]
+        {
+            assert!(a.contains(needle), "missing {needle} in {a}");
+        }
+        assert!(!a.contains("\"shards\""));
+        assert!(crate::util::json::parse(&a).is_ok());
+        assert!(a.ends_with('\n'));
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Sharded LRU result cache keyed by canonical spec keys.
+//!
+//! Values are the finished canonical JSON response bodies (`Arc<String>`
+//! — hits clone a pointer, never the bytes). Keys are the deterministic
+//! spec keys the router builds (DESIGN.md §11): because every float in a
+//! key passes through the `report::canon` precision rules, two requests
+//! describing the same campaign always collide onto one entry, and a hit
+//! returns bytes identical to what the campaign stack would recompute.
+//!
+//! Sharding bounds lock contention: a key hashes (FNV-1a) to one shard,
+//! each shard is an independent `Mutex<HashMap>` with its own logical
+//! clock, and eviction removes the shard's least-recently-used entry by
+//! linear scan — caps are service-sized (hundreds), so O(cap) eviction
+//! is cheaper than maintaining an intrusive list.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::fnv1a;
+
+/// One cached response body plus its recency stamp.
+struct Entry {
+    body: Arc<String>,
+    last_used: u64,
+}
+
+/// One independent LRU shard.
+struct Shard {
+    map: HashMap<String, Entry>,
+    clock: u64,
+}
+
+/// A sharded LRU cache of canonical response bodies.
+pub struct ResultCache {
+    shards: Vec<Mutex<Shard>>,
+    cap_per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ResultCache {
+    /// A cache holding at most `capacity` entries across `n_shards`
+    /// shards (both clamped to >= 1; capacity rounds up to a multiple of
+    /// the shard count).
+    pub fn new(capacity: usize, n_shards: usize) -> Self {
+        let n_shards = n_shards.max(1);
+        let cap_per_shard = capacity.max(1).div_ceil(n_shards);
+        let shards = (0..n_shards)
+            .map(|_| Mutex::new(Shard { map: HashMap::new(), clock: 0 }))
+            .collect();
+        Self {
+            shards,
+            cap_per_shard,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Mutex<Shard> {
+        &self.shards[(fnv1a(key) % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up a canonical key; a hit refreshes its recency.
+    pub fn get(&self, key: &str) -> Option<Arc<String>> {
+        let mut s = self.shard(key).lock().unwrap();
+        s.clock += 1;
+        let clock = s.clock;
+        match s.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = clock;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.body))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a canonical key, evicting the shard's
+    /// least-recently-used entry when it is full. Concurrent misses on
+    /// the same key may both insert — the bodies are deterministic and
+    /// byte-identical, so last-writer-wins is harmless.
+    pub fn put(&self, key: &str, body: Arc<String>) {
+        let mut s = self.shard(key).lock().unwrap();
+        s.clock += 1;
+        let clock = s.clock;
+        if !s.map.contains_key(key) && s.map.len() >= self.cap_per_shard {
+            if let Some(lru) = s
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                s.map.remove(&lru);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        s.map.insert(key.to_string(), Entry { body, last_used: clock });
+    }
+
+    /// Entries currently cached (sum over shards).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    /// True when no entry is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups answered from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that missed (and went to the campaign stack).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries evicted to make room.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn body(s: &str) -> Arc<String> {
+        Arc::new(s.to_string())
+    }
+
+    #[test]
+    fn get_put_hit_miss_counters() {
+        let c = ResultCache::new(8, 2);
+        assert!(c.get("a").is_none());
+        c.put("a", body("A"));
+        assert_eq!(c.get("a").unwrap().as_str(), "A");
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert_eq!(c.len(), 1);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_entry() {
+        // single shard so the LRU order is fully observable
+        let c = ResultCache::new(2, 1);
+        c.put("a", body("A"));
+        c.put("b", body("B"));
+        assert!(c.get("a").is_some()); // refresh a; b is now coldest
+        c.put("c", body("C"));
+        assert_eq!(c.evictions(), 1);
+        assert!(c.get("b").is_none(), "expected the cold entry to be evicted");
+        assert!(c.get("a").is_some());
+        assert!(c.get("c").is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn refreshing_an_existing_key_never_evicts() {
+        let c = ResultCache::new(2, 1);
+        c.put("a", body("A"));
+        c.put("b", body("B"));
+        c.put("a", body("A2"));
+        assert_eq!(c.evictions(), 0);
+        assert_eq!(c.get("a").unwrap().as_str(), "A2");
+        assert!(c.get("b").is_some());
+    }
+
+    #[test]
+    fn sharding_is_deterministic_and_capacity_rounds_up() {
+        let c = ResultCache::new(10, 4);
+        assert_eq!(c.cap_per_shard, 3);
+        for i in 0..40 {
+            c.put(&format!("key-{i}"), body("x"));
+        }
+        // every shard respects its own cap
+        assert!(c.len() <= 12, "len = {}", c.len());
+        assert!(c.evictions() > 0);
+        // same key always lands on the same shard: a put is always visible
+        c.put("stable", body("S"));
+        assert_eq!(c.get("stable").unwrap().as_str(), "S");
+    }
+}

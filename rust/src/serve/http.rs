@@ -1,0 +1,236 @@
+//! Minimal HTTP/1.1 framing over `std::net` (no external dependencies).
+//!
+//! One request per connection (`Connection: close` on every response):
+//! the service's workloads are campaign-sized, so connection reuse would
+//! buy nothing while keep-alive bookkeeping would complicate the bounded
+//! worker pool. The server side parses just what the JSON API needs —
+//! request line, `Content-Length`, body; the client side
+//! ([`http_request`]) is the loopback counterpart used by
+//! `smart serve --self-test` and the integration tests.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+/// Largest request body accepted (bytes) — guards the service against
+/// unbounded allocations from a misbehaving client.
+pub const MAX_BODY: usize = 1 << 20;
+
+/// Largest request head (request line + headers) accepted (bytes). The
+/// whole connection read is capped at `MAX_HEAD + MAX_BODY` via
+/// [`Read::take`], so even a client streaming newline-free garbage can
+/// never grow server memory past the cap.
+pub const MAX_HEAD: usize = 16 << 10;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Request method (`GET`, `POST`, ...), as sent.
+    pub method: String,
+    /// Request path (`/v1/mc`, ...), query strings included verbatim.
+    pub path: String,
+    /// Decoded request body (empty when no `Content-Length`).
+    pub body: String,
+}
+
+/// One response about to be framed. `headers` rows are emitted verbatim
+/// as extra response headers (cache/timing provenance); the body is
+/// always served as `application/json`.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// Extra response headers (name, value).
+    pub headers: Vec<(String, String)>,
+    /// Response body (canonical JSON). Shared so a cache hit serves the
+    /// stored bytes without copying them.
+    pub body: Arc<String>,
+}
+
+impl Response {
+    /// A 200 response around a canonical JSON body.
+    pub fn ok(body: String) -> Self {
+        Self::ok_shared(Arc::new(body))
+    }
+
+    /// A 200 response around an already-shared body (a cache hit): the
+    /// Arc is cloned, the bytes are not.
+    pub fn ok_shared(body: Arc<String>) -> Self {
+        Self { status: 200, headers: Vec::new(), body }
+    }
+
+    /// An error response with a JSON `{"error": ...}` body (the message
+    /// travels through the JSON string escaper, so arbitrary error text
+    /// is safe).
+    pub fn error(status: u16, msg: &str) -> Self {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("error".to_string(), crate::util::json::Value::Str(msg.to_string()));
+        let mut body = crate::util::json::to_string_pretty(&crate::util::json::Value::Obj(m));
+        body.push('\n');
+        Self { status, headers: Vec::new(), body: Arc::new(body) }
+    }
+}
+
+/// Reason phrase for the status codes the router emits.
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Read one HTTP/1.1 request from the stream (request line, headers,
+/// `Content-Length` body). The whole read is capped at
+/// [`MAX_HEAD`] + [`MAX_BODY`] bytes ([`Read::take`]): a client that
+/// never sends a newline exhausts its budget, not the server's memory.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut r = BufReader::new(Read::take(&mut *stream, (MAX_HEAD + MAX_BODY) as u64));
+    let mut line = String::new();
+    r.read_line(&mut line).context("reading request line")?;
+    anyhow::ensure!(line.len() <= MAX_HEAD, "request line over {MAX_HEAD} bytes");
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    anyhow::ensure!(
+        !method.is_empty() && path.starts_with('/'),
+        "malformed request line {line:?}"
+    );
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        let n = r.read_line(&mut h).context("reading header")?;
+        let h = h.trim_end();
+        if n == 0 || h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().context("bad Content-Length")?;
+            }
+        }
+    }
+    anyhow::ensure!(content_len <= MAX_BODY, "request body over {MAX_BODY} bytes");
+    let mut body = vec![0u8; content_len];
+    r.read_exact(&mut body).context("reading request body")?;
+    Ok(Request {
+        method,
+        path,
+        body: String::from_utf8(body).context("request body is not UTF-8")?,
+    })
+}
+
+/// Frame and send one response; always closes the connection afterwards
+/// (`Connection: close`).
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.body.len()
+    );
+    for (k, v) in &resp.headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+/// Blocking one-shot HTTP client: connect to `addr`, issue
+/// `method path` with `body`, and return `(status, headers, body)`.
+/// The loopback counterpart of the server framing, used by
+/// `smart serve --self-test` and `tests/serve.rs`.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Result<(u16, Vec<(String, String)>, String)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .context("sending request")?;
+    stream.flush().context("flushing request")?;
+    let mut text = String::new();
+    stream.read_to_string(&mut text).context("reading response")?;
+    let (head, payload) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("response without header terminator"))?;
+    let mut lines = head.lines();
+    let status_line = lines.next().unwrap_or_default();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed status line {status_line:?}"))?;
+    let headers = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        .collect();
+    Ok((status, headers, payload.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_bodies_are_valid_json() {
+        let r = Response::error(400, "broken \"spec\"\nline two");
+        assert_eq!(r.status, 400);
+        let v = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(
+            v.get("error").unwrap().as_str().unwrap(),
+            "broken \"spec\"\nline two"
+        );
+    }
+
+    #[test]
+    fn status_phrases_cover_the_router_codes() {
+        for code in [200, 400, 404, 405, 500] {
+            assert_ne!(status_text(code), "Unknown");
+        }
+        assert_eq!(status_text(418), "Unknown");
+    }
+
+    #[test]
+    fn request_response_roundtrip_over_loopback() {
+        // one real socket round-trip: client framing -> server parse ->
+        // server framing -> client parse
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let req = read_request(&mut s).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/v1/echo");
+            assert_eq!(req.body, "{\"a\": 1}");
+            let mut resp = Response::ok("{\"pong\": true}".to_string());
+            resp.headers.push(("X-Smart-Cache".to_string(), "miss".to_string()));
+            write_response(&mut s, &resp).unwrap();
+        });
+        let (status, headers, body) =
+            http_request(&addr, "POST", "/v1/echo", "{\"a\": 1}").unwrap();
+        server.join().unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"pong\": true}");
+        assert!(headers
+            .iter()
+            .any(|(k, v)| k == "X-Smart-Cache" && v == "miss"));
+    }
+}

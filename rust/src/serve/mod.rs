@@ -1,0 +1,580 @@
+//! `smart serve` — a long-lived campaign-result service (DESIGN.md §11).
+//!
+//! The first subsystem on the ROADMAP's "serve heavy traffic" axis:
+//! instead of re-running a full Monte-Carlo campaign per CLI invocation,
+//! a dependency-free (`std::net`) multi-threaded HTTP/1.1 JSON service
+//! keeps a **spec-keyed result cache** in front of the existing
+//! block-execution campaign stack. Because campaigns are deterministic
+//! and their artifacts byte-identical (DESIGN.md §4/§9/§10), a cache hit
+//! returns exactly the bytes a fresh run would produce — repeat requests
+//! are O(1) lookups.
+//!
+//! Endpoints:
+//!
+//! | method/path          | body                                | response |
+//! |----------------------|-------------------------------------|----------|
+//! | `POST /v1/mc`        | a `[[campaigns]]` table as JSON     | canonical `mc.json` bytes |
+//! | `POST /v1/sweep/point` | one DSE grid point (`dse.toml` terms) | canonical single-point `sweep.json` bytes |
+//! | `POST /v1/infer`     | an `nn.toml` model document as JSON | canonical `infer.json` bytes |
+//! | `GET /v1/health`     | —                                   | liveness probe |
+//! | `GET /v1/stats`      | —                                   | request/cache/timing counters |
+//!
+//! Architecture: an acceptor thread feeds accepted connections into a
+//! bounded channel drained by a fixed pool of request workers (one
+//! campaign runs per worker thread — request-level parallelism comes
+//! from the pool, not from nested campaign fan-out). Shutdown is
+//! graceful: [`Server::stop`] stops accepting, drains the queue, and
+//! joins every thread. Responses carry `X-Smart-Cache` (hit/miss) and
+//! `X-Smart-Time-Us` provenance headers; the body bytes themselves never
+//! depend on cache state or timing.
+
+mod cache;
+mod http;
+mod router;
+
+pub use cache::ResultCache;
+pub use http::{http_request, read_request, write_response, Request, Response, MAX_BODY};
+pub use router::{handle, Routed, MAX_REQUEST_ITEMS};
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::params::Params;
+use crate::util::json::{to_string_pretty, Value};
+
+/// Service configuration (the `smart serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address; port 0 binds an ephemeral port (tests, self-test).
+    pub addr: String,
+    /// Request worker threads (each runs at most one campaign at a time).
+    pub workers: usize,
+    /// Result-cache capacity in entries.
+    pub cache_cap: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7878".to_string(), workers: 4, cache_cap: 256 }
+    }
+}
+
+/// Service-lifetime counters behind `GET /v1/stats`.
+struct Counters {
+    started: Instant,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    busy_us: AtomicU64,
+}
+
+impl Counters {
+    fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            busy_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A running `smart serve` instance: acceptor thread + bounded worker
+/// pool + sharded result cache. Stop it with [`Self::stop`] (also runs
+/// on drop), or block on [`Self::join`] to serve until killed.
+pub struct Server {
+    addr: SocketAddr,
+    cache: Arc<ResultCache>,
+    counters: Arc<Counters>,
+    stopping: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    n_workers: usize,
+}
+
+impl Server {
+    /// Bind `opts.addr` and spawn the acceptor + `opts.workers` request
+    /// workers. Returns once the socket is live — [`Self::addr`] carries
+    /// the resolved address (useful with port 0).
+    pub fn start(params: Params, opts: &ServeOptions) -> Result<Self> {
+        anyhow::ensure!(
+            opts.workers > 0,
+            "smart serve needs at least 1 worker thread (got --workers 0)"
+        );
+        anyhow::ensure!(
+            opts.cache_cap > 0,
+            "smart serve needs a result-cache capacity >= 1 (got --cache-cap 0)"
+        );
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding {}", opts.addr))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let cache = Arc::new(ResultCache::new(opts.cache_cap, opts.workers.min(8)));
+        let counters = Arc::new(Counters::new());
+        let stopping = Arc::new(AtomicBool::new(false));
+
+        // Bounded hand-off: when every worker is busy and the queue is
+        // full, the acceptor blocks — the OS listen backlog, not this
+        // process, absorbs the burst (backpressure, bounded memory).
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(opts.workers * 4);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+        let mut workers = Vec::with_capacity(opts.workers);
+        for wid in 0..opts.workers {
+            let conn_rx = Arc::clone(&conn_rx);
+            let cache = Arc::clone(&cache);
+            let counters = Arc::clone(&counters);
+            let n_workers = opts.workers;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("smart-serve-{wid}"))
+                    .spawn(move || worker_loop(&params, &cache, &counters, &conn_rx, n_workers))
+                    .context("spawning serve worker")?,
+            );
+        }
+
+        let acceptor = {
+            let stopping = Arc::clone(&stopping);
+            std::thread::Builder::new()
+                .name("smart-serve-accept".to_string())
+                .spawn(move || {
+                    // conn_tx lives (only) here: when this loop exits, the
+                    // channel closes and the workers drain + exit.
+                    for conn in listener.incoming() {
+                        if stopping.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = conn else { continue };
+                        if conn_tx.send(stream).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .context("spawning serve acceptor")?
+        };
+
+        Ok(Self {
+            addr,
+            cache,
+            counters,
+            stopping,
+            acceptor: Some(acceptor),
+            workers,
+            n_workers: opts.workers,
+        })
+    }
+
+    /// The resolved bind address (the ephemeral port when bound to `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The current `GET /v1/stats` body (also reachable over HTTP).
+    pub fn stats_json(&self) -> String {
+        stats_body(&self.cache, &self.counters, self.n_workers)
+    }
+
+    /// Block until the acceptor exits (i.e. serve until the process is
+    /// killed or another thread calls [`Self::stop`]).
+    pub fn join(&mut self) {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, let in-flight requests finish,
+    /// join every thread. Idempotent; also runs on drop.
+    pub fn stop(&mut self) {
+        if self.acceptor.is_none() {
+            return;
+        }
+        self.stopping.store(true, Ordering::SeqCst);
+        // Unblock the acceptor's blocking accept with a loopback touch;
+        // it observes `stopping` and exits, closing the connection queue.
+        let _ = TcpStream::connect(self.addr);
+        self.join();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Per-connection socket timeout: a client that stalls mid-request (or
+/// never reads its response) costs a worker at most this long, so a
+/// handful of slow-loris connections cannot wedge the bounded pool.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One request worker: dequeue connections until the channel closes.
+fn worker_loop(
+    params: &Params,
+    cache: &ResultCache,
+    counters: &Counters,
+    conn_rx: &Mutex<Receiver<TcpStream>>,
+    n_workers: usize,
+) {
+    loop {
+        // hold the lock only while dequeuing (same pattern as the PJRT
+        // WorkerPool): handling runs fully in parallel
+        let conn = { conn_rx.lock().unwrap().recv() };
+        let Ok(mut stream) = conn else { break };
+        // A panic anywhere in request handling must cost one request,
+        // not one worker: without this, `--workers` poisoned requests
+        // would silently wedge the whole pool.
+        let handled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serve_connection(params, cache, counters, &mut stream, n_workers)
+        }));
+        if handled.is_err() {
+            counters.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = write_response(
+                &mut stream,
+                &Response::error(500, "internal error: request handler panicked"),
+            );
+        }
+    }
+}
+
+/// Serve one connection: read a request, route it, frame the response
+/// with cache/timing provenance headers, close.
+fn serve_connection(
+    params: &Params,
+    cache: &ResultCache,
+    counters: &Counters,
+    stream: &mut TcpStream,
+    n_workers: usize,
+) {
+    let t0 = Instant::now();
+    counters.requests.fetch_add(1, Ordering::Relaxed);
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let mut routed = match read_request(stream) {
+        // stats needs server-level state, so it is answered here rather
+        // than in the (stateless) router
+        Ok(req) if req.method == "GET" && req.path == "/v1/stats" => Routed {
+            response: Response::ok(stats_body(cache, counters, n_workers)),
+            cache: None,
+        },
+        Ok(req) => handle(params, cache, &req),
+        Err(e) => Routed {
+            response: Response::error(400, &format!("{e:#}")),
+            cache: None,
+        },
+    };
+    if routed.response.status >= 400 {
+        counters.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    let elapsed_us = t0.elapsed().as_micros() as u64;
+    counters.busy_us.fetch_add(elapsed_us, Ordering::Relaxed);
+    if let Some(hit) = routed.cache {
+        routed
+            .response
+            .headers
+            .push(("X-Smart-Cache".to_string(), if hit { "hit" } else { "miss" }.to_string()));
+    }
+    routed
+        .response
+        .headers
+        .push(("X-Smart-Time-Us".to_string(), elapsed_us.to_string()));
+    let _ = write_response(stream, &routed.response);
+}
+
+/// Render the `GET /v1/stats` body: request/error/busy counters plus the
+/// cache's hit/miss/eviction/occupancy numbers. Diagnostic only — unlike
+/// the compute endpoints, these bytes are not canonical artifacts.
+fn stats_body(cache: &ResultCache, c: &Counters, workers: usize) -> String {
+    let mut root = std::collections::BTreeMap::new();
+    let mut put = |k: &str, v: Value| {
+        root.insert(k.to_string(), v);
+    };
+    put("service", Value::Str("smart-serve".to_string()));
+    put("workers", Value::Num(workers as f64));
+    put("uptime_us", Value::Num(c.started.elapsed().as_micros() as f64));
+    put("requests", Value::Num(c.requests.load(Ordering::Relaxed) as f64));
+    put("errors", Value::Num(c.errors.load(Ordering::Relaxed) as f64));
+    put("busy_us", Value::Num(c.busy_us.load(Ordering::Relaxed) as f64));
+    let mut cm = std::collections::BTreeMap::new();
+    cm.insert("entries".to_string(), Value::Num(cache.len() as f64));
+    cm.insert("hits".to_string(), Value::Num(cache.hits() as f64));
+    cm.insert("misses".to_string(), Value::Num(cache.misses() as f64));
+    cm.insert("evictions".to_string(), Value::Num(cache.evictions() as f64));
+    put("cache", Value::Obj(cm));
+    let mut text = to_string_pretty(&Value::Obj(root));
+    text.push('\n');
+    text
+}
+
+/// Outcome of the `smart serve --self-test` loopback load generation.
+#[derive(Debug, Clone)]
+pub struct SelfTestReport {
+    /// Compute requests issued (priming + concurrent phases).
+    pub requests: u64,
+    /// Requests answered from the cache.
+    pub hits: u64,
+    /// Requests that ran a campaign.
+    pub misses: u64,
+    /// Concurrent client threads of the load phase.
+    pub clients: usize,
+    /// Requests per endpoint per client in the load phase.
+    pub repeats: usize,
+    /// The server's `GET /v1/stats` body at the end of the run.
+    pub stats_json: String,
+}
+
+/// Loopback self-test: start a server on an ephemeral port, hammer it
+/// with concurrent clients, and assert the service contract —
+///
+/// 1. every compute response is **byte-identical** to the corresponding
+///    CLI `--json` artifact encoder output ([`crate::report::mc_json`],
+///    [`crate::dse::sweep_json`], [`crate::nn::infer_json`]);
+/// 2. after one priming request per endpoint, every repeat (from any
+///    client, concurrently) is served from the cache;
+/// 3. a NaN-bearing sample stream no longer perturbs histogram bin 0
+///    (the PR-5 `metrics::Histogram` regression).
+///
+/// `smoke` shrinks the campaign sizes and client counts for CI. Returns
+/// the counters; any contract violation is an error.
+pub fn self_test(params: &Params, workers: usize, smoke: bool) -> Result<SelfTestReport> {
+    use crate::coordinator::{run_campaign, Backend, CampaignSpec};
+    use crate::dse::{run_grid_point, sweep_json, GridAxes, SweepOptions, SweepSpec};
+    use crate::mac::Variant;
+    use crate::montecarlo::Corner;
+    use crate::nn::{infer_json, run_infer, InferOptions, ModelSpec};
+
+    // (3) the histogram-integrity fix backing the acceptance criterion:
+    // non-finite samples must never reach bin 0.
+    let mut h = crate::metrics::Histogram::new(0.0, 1.0, 8);
+    h.push(f64::NAN);
+    h.push(f64::INFINITY);
+    h.push(0.4);
+    anyhow::ensure!(
+        h.counts()[0] == 0 && h.non_finite() == 2 && h.total() == 1,
+        "NaN-bearing stream perturbed histogram bin 0"
+    );
+
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        cache_cap: 64,
+    };
+    let mut server = Server::start(*params, &opts)?;
+    let addr = server.addr().to_string();
+
+    let (status, _, body) = http_request(&addr, "GET", "/v1/health", "")?;
+    anyhow::ensure!(status == 200 && body.contains("smart-serve"), "health probe failed");
+
+    // (1) expected bytes straight through the CLI artifact encoders.
+    let n_mc: u32 = if smoke { 8 } else { 64 };
+    let mc_body = format!(
+        "{{\"variant\": \"smart\", \"n_mc\": {n_mc}, \
+         \"workload\": {{\"kind\": \"fixed\", \"a\": 15, \"b\": 15}}}}"
+    );
+    let mut mc_spec = CampaignSpec::paper_fig8(Variant::Smart);
+    mc_spec.n_mc = n_mc;
+    let mc_expect = crate::report::mc_json(
+        &mc_spec,
+        &run_campaign(params, &mc_spec, Backend::Native, None)?,
+    );
+    anyhow::ensure!(
+        mc_expect.contains("\"non_finite\": 0"),
+        "mc.json must expose the histogram's non-finite counter"
+    );
+
+    let sweep_n_mc: u32 = if smoke { 8 } else { 32 };
+    let sweep_body =
+        format!("{{\"variant\": \"aid\", \"n_mc\": {sweep_n_mc}, \"bits\": 2, \"seed\": 5}}");
+    let sweep_spec = SweepSpec {
+        name: "serve".to_string(),
+        seed: 5,
+        n_mc: sweep_n_mc,
+        grid: GridAxes {
+            variants: vec![Variant::Aid],
+            vdd: vec![params.device.vdd],
+            v_bulk: vec![params.circuit.v_bulk_smart],
+            bits: vec![2],
+            corners: vec![Corner::Tt],
+        },
+        params: *params,
+    };
+    let sweep_point = sweep_spec.grid.expand().remove(0);
+    let sweep_expect = {
+        let r = run_grid_point(&sweep_spec, &sweep_point, &SweepOptions::default())?;
+        sweep_json(&sweep_spec, &[r], &[true])
+    };
+
+    let trials = if smoke { 3 } else { 8 };
+    let infer_body = format!(
+        "{{\"name\": \"serve-selftest\", \"seed\": 11, \"trials\": {trials}, \"bits\": 4, \
+         \"dataset\": {{\"classes\": 3, \"features\": 6, \"jitter\": 0.1}}, \
+         \"layers\": [{{\"inputs\": 6, \"outputs\": 4, \"relu\": true}}, \
+                      {{\"inputs\": 4, \"outputs\": 3}}]}}"
+    );
+    let infer_spec = ModelSpec::from_value(
+        &crate::util::json::parse(&infer_body).map_err(|e| anyhow::anyhow!(e))?,
+    )?;
+    let infer_expect = {
+        let r = run_infer(params, &infer_spec, &InferOptions::default())?;
+        infer_json(&infer_spec, &r)
+    };
+
+    let endpoints: Vec<(&str, String, String)> = vec![
+        ("/v1/mc", mc_body, mc_expect),
+        ("/v1/sweep/point", sweep_body, sweep_expect),
+        ("/v1/infer", infer_body, infer_expect),
+    ];
+
+    // Prime each endpoint once: a miss that computes and caches.
+    for (path, body, expect) in &endpoints {
+        let (status, headers, got) = http_request(&addr, "POST", path, body)?;
+        anyhow::ensure!(status == 200, "{path}: priming request failed ({status}): {got}");
+        anyhow::ensure!(
+            got == *expect,
+            "{path}: response diverged from the CLI --json artifact bytes"
+        );
+        anyhow::ensure!(
+            headers.iter().any(|(k, v)| k == "X-Smart-Cache" && v == "miss"),
+            "{path}: priming request should be a cache miss"
+        );
+    }
+
+    // (2) concurrent load: every repeat must be a byte-identical hit.
+    let clients = if smoke { 3 } else { 8 };
+    let repeats = if smoke { 3 } else { 8 };
+    let failures: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let addr = addr.clone();
+                let endpoints = &endpoints;
+                scope.spawn(move || -> Result<(), String> {
+                    for _ in 0..repeats {
+                        for (path, body, expect) in endpoints {
+                            let (status, headers, got) =
+                                http_request(&addr, "POST", path, body)
+                                    .map_err(|e| format!("{path}: {e:#}"))?;
+                            if status != 200 {
+                                return Err(format!("{path}: status {status}: {got}"));
+                            }
+                            if got != *expect {
+                                return Err(format!("{path}: cached bytes diverged"));
+                            }
+                            if !headers
+                                .iter()
+                                .any(|(k, v)| k == "X-Smart-Cache" && v == "hit")
+                            {
+                                return Err(format!("{path}: repeat was not a cache hit"));
+                            }
+                        }
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .filter_map(|h| h.join().expect("self-test client panicked").err())
+            .collect()
+    });
+    anyhow::ensure!(failures.is_empty(), "self-test clients failed: {}", failures.join("; "));
+
+    let (status, _, stats_json) = http_request(&addr, "GET", "/v1/stats", "")?;
+    anyhow::ensure!(status == 200, "stats probe failed");
+    crate::util::json::parse(&stats_json)
+        .map_err(|e| anyhow::anyhow!("stats body is not valid JSON: {e}"))?;
+
+    let want_hits = (clients * repeats * endpoints.len()) as u64;
+    let (hits, misses) = (server.cache_hits(), server.cache_misses());
+    anyhow::ensure!(
+        hits == want_hits && misses == endpoints.len() as u64,
+        "cache hit-rate off: {hits} hits / {misses} misses, expected {want_hits} / {}",
+        endpoints.len()
+    );
+    server.stop();
+    Ok(SelfTestReport {
+        requests: want_hits + endpoints.len() as u64,
+        hits,
+        misses,
+        clients,
+        repeats,
+        stats_json,
+    })
+}
+
+impl Server {
+    /// Cache lookups answered without running a campaign.
+    pub fn cache_hits(&self) -> u64 {
+        self.cache.hits()
+    }
+
+    /// Cache lookups that dispatched to the campaign stack.
+    pub fn cache_misses(&self) -> u64 {
+        self.cache.misses()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_stop_is_clean_and_idempotent() {
+        let mut s = Server::start(
+            Params::default(),
+            &ServeOptions { addr: "127.0.0.1:0".to_string(), workers: 2, cache_cap: 8 },
+        )
+        .unwrap();
+        assert_ne!(s.addr().port(), 0);
+        let (status, _, body) =
+            http_request(&s.addr().to_string(), "GET", "/v1/health", "").unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("\"ok\""));
+        s.stop();
+        s.stop(); // idempotent
+    }
+
+    #[test]
+    fn zero_workers_or_cache_cap_is_a_descriptive_error() {
+        let err_of = |workers: usize, cache_cap: usize| match Server::start(
+            Params::default(),
+            &ServeOptions { addr: "127.0.0.1:0".to_string(), workers, cache_cap },
+        ) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("zero-knob server must not start"),
+        };
+        assert!(err_of(0, 8).contains("--workers 0"));
+        assert!(err_of(1, 0).contains("--cache-cap 0"));
+    }
+
+    #[test]
+    fn stats_endpoint_counts_requests() {
+        let mut s = Server::start(
+            Params::default(),
+            &ServeOptions { addr: "127.0.0.1:0".to_string(), workers: 2, cache_cap: 8 },
+        )
+        .unwrap();
+        let addr = s.addr().to_string();
+        let _ = http_request(&addr, "GET", "/v1/health", "").unwrap();
+        let (status, _, body) = http_request(&addr, "GET", "/v1/stats", "").unwrap();
+        assert_eq!(status, 200);
+        let v = crate::util::json::parse(&body).unwrap();
+        assert!(v.get("requests").unwrap().as_u64().unwrap() >= 1);
+        assert_eq!(v.get("workers").unwrap().as_u64().unwrap(), 2);
+        assert!(v.get("cache").unwrap().get("entries").is_some());
+        s.stop();
+    }
+
+    #[test]
+    fn self_test_smoke_passes() {
+        let r = self_test(&Params::default(), 2, true).unwrap();
+        assert_eq!(r.misses, 3);
+        assert_eq!(r.hits, (r.clients * r.repeats * 3) as u64);
+        assert!(r.stats_json.contains("smart-serve"));
+    }
+}

@@ -1,0 +1,373 @@
+//! Request routing: JSON bodies -> canonical spec keys -> cache or the
+//! campaign stack.
+//!
+//! Every compute endpoint follows the same shape (DESIGN.md §11):
+//!
+//! 1. parse the JSON body into the same spec type the TOML configs parse
+//!    into (`util::json` and `util::toml_lite` share one [`Value`] tree,
+//!    so request bodies mirror the checked-in config files field for
+//!    field);
+//! 2. **canonicalize** the spec into a deterministic key — identity
+//!    fields only, floats rendered at the `report::canon`/`csv_cell`
+//!    precision, performance knobs (`shards`/`threads`/`block`/`workers`)
+//!    excluded because the campaign layer guarantees they never move the
+//!    artifacts (DESIGN.md §4);
+//! 3. answer from the sharded LRU on a hit, else run the existing
+//!    block-execution campaign stack and cache the canonical JSON body.
+//!
+//! Response bodies are produced by the *same* encoders the CLI artifact
+//! writers use ([`crate::report::mc_json`], [`crate::dse::sweep_json`],
+//! [`crate::nn::infer_json`]), so a served response is byte-identical to
+//! the corresponding `--json` artifact.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use crate::coordinator::{run_campaign, Backend, CampaignSpec};
+use crate::dse::{point_key, run_grid_point, sweep_json, GridAxes, SweepOptions, SweepSpec};
+use crate::mac::Variant;
+use crate::montecarlo::Corner;
+use crate::nn::{infer_json, run_infer, InferOptions, ModelSpec};
+use crate::params::Params;
+use crate::report;
+use crate::util::json::{self, Value};
+
+use super::cache::ResultCache;
+use super::http::{Request, Response};
+
+/// Work ceiling per request (MAC evaluations). A single request may not
+/// monopolize a worker indefinitely: campaigns above this are rejected
+/// with `400` instead of queued (batch-sized runs belong to the CLI).
+pub const MAX_REQUEST_ITEMS: u64 = 1 << 22;
+
+/// One routed request: the response plus the cache outcome
+/// (`Some(true)` = served from cache, `Some(false)` = computed,
+/// `None` = not a compute endpoint).
+pub struct Routed {
+    /// The response to frame.
+    pub response: Response,
+    /// Cache outcome for the `X-Smart-Cache` provenance header.
+    pub cache: Option<bool>,
+}
+
+impl Routed {
+    fn plain(response: Response) -> Self {
+        Self { response, cache: None }
+    }
+}
+
+/// A rejected request: status + message, rendered as a JSON error body.
+struct Reject {
+    status: u16,
+    msg: String,
+}
+
+/// Client-side problem (unparseable body, invalid spec, oversized work).
+fn bad(msg: impl std::fmt::Display) -> Reject {
+    Reject { status: 400, msg: msg.to_string() }
+}
+
+/// Server-side problem (the campaign stack failed).
+fn fail(msg: impl std::fmt::Display) -> Reject {
+    Reject { status: 500, msg: msg.to_string() }
+}
+
+/// Route one parsed request against the cache and the campaign stack.
+pub fn handle(params: &Params, cache: &ResultCache, req: &Request) -> Routed {
+    let outcome = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/v1/health") => return Routed::plain(health()),
+        ("POST", "/v1/mc") => mc(params, cache, &req.body),
+        ("POST", "/v1/sweep/point") => sweep_point(cache, &req.body),
+        ("POST", "/v1/infer") => infer(params, cache, &req.body),
+        (_, "/v1/health" | "/v1/mc" | "/v1/sweep/point" | "/v1/infer" | "/v1/stats") => {
+            return Routed::plain(Response::error(405, "method not allowed"))
+        }
+        _ => return Routed::plain(Response::error(404, "no such endpoint")),
+    };
+    match outcome {
+        Ok(routed) => routed,
+        Err(e) => Routed::plain(Response::error(e.status, &e.msg)),
+    }
+}
+
+/// `GET /v1/health`: liveness probe.
+fn health() -> Response {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("service".to_string(), Value::Str("smart-serve".to_string()));
+    m.insert("status".to_string(), Value::Str("ok".to_string()));
+    let mut body = json::to_string_pretty(&Value::Obj(m));
+    body.push('\n');
+    Response::ok(body)
+}
+
+/// Answer from the cache, or compute + insert. `compute` only runs on a
+/// miss; concurrent misses on one key may compute twice, which is safe
+/// (and byte-identical) by the determinism contract.
+fn cached(
+    cache: &ResultCache,
+    key: &str,
+    compute: impl FnOnce() -> Result<String, Reject>,
+) -> Result<Routed, Reject> {
+    if let Some(body) = cache.get(key) {
+        // a hit clones the Arc, never the bytes — the whole point of
+        // caching Arc<String> bodies
+        return Ok(Routed { response: Response::ok_shared(body), cache: Some(true) });
+    }
+    let body = Arc::new(compute()?);
+    cache.put(key, Arc::clone(&body));
+    Ok(Routed { response: Response::ok_shared(body), cache: Some(false) })
+}
+
+/// `POST /v1/mc`: body mirrors a `[[campaigns]]` table (JSON form);
+/// response is the canonical `mc.json` bytes.
+fn mc(params: &Params, cache: &ResultCache, body: &str) -> Result<Routed, Reject> {
+    let v = json::parse(body).map_err(|e| bad(format!("mc request body: {e}")))?;
+    let mut spec =
+        CampaignSpec::from_value(&v).map_err(|e| bad(format!("mc spec: {e:#}")))?;
+    // Identity canonicalization: performance knobs never change the
+    // artifact bytes (DESIGN.md §4), so they are stripped from the spec
+    // before it becomes the cache key.
+    spec.workers = 0;
+    spec.batch = 0;
+    spec.shards = 0;
+    spec.block = 0;
+    // n_operands never materializes the operand list: the ceiling must
+    // reject a 4-billion-op request before allocating it
+    let total = spec.workload.n_operands().saturating_mul(u64::from(spec.n_mc));
+    if total > MAX_REQUEST_ITEMS {
+        return Err(bad(format!(
+            "campaign of {total} MAC evals exceeds the per-request ceiling of {MAX_REQUEST_ITEMS}"
+        )));
+    }
+    let key = format!("mc\n{}", spec.to_toml());
+    cached(cache, &key, || {
+        // One OS thread per request worker: request-level parallelism
+        // comes from the serve pool, not from nested campaign fan-out.
+        let mut exec = spec.clone();
+        exec.workers = 1;
+        let rep = run_campaign(params, &exec, Backend::Native, None)
+            .map_err(|e| fail(format!("mc campaign: {e:#}")))?;
+        Ok(report::mc_json(&spec, &rep))
+    })
+}
+
+/// `POST /v1/sweep/point`: body is one grid point in `dse.toml` terms
+/// (scalar `variant`/`vdd`/`v_bulk`/`bits`/`corner` plus `name`/`seed`/
+/// `n_mc` and optional `params` overrides); response is the canonical
+/// single-point `sweep.json` bytes.
+fn sweep_point(cache: &ResultCache, body: &str) -> Result<Routed, Reject> {
+    let v = json::parse(body).map_err(|e| bad(format!("sweep request body: {e}")))?;
+    let mut card = Params::default();
+    if let Some(p) = v.get("params") {
+        card.apply_overrides(p).map_err(|e| bad(format!("sweep [params]: {e:#}")))?;
+    }
+    let variant: Variant = match v.get("variant").and_then(Value::as_str) {
+        Some(s) => s.parse().map_err(bad)?,
+        None => Variant::Smart,
+    };
+    let corner: Corner = match v.get("corner").and_then(Value::as_str) {
+        Some(s) => s.parse().map_err(bad)?,
+        None => Corner::Tt,
+    };
+    let num = |k: &str, default: f64| v.get(k).and_then(Value::as_f64).unwrap_or(default);
+    let int = |k: &str, default: u64| v.get(k).and_then(Value::as_u64).unwrap_or(default);
+    let spec = SweepSpec {
+        name: v.get("name").and_then(Value::as_str).unwrap_or("serve").to_string(),
+        seed: int("seed", 2022),
+        n_mc: int("n_mc", 1000) as u32,
+        grid: GridAxes {
+            variants: vec![variant],
+            vdd: vec![num("vdd", card.device.vdd)],
+            v_bulk: vec![num("v_bulk", card.circuit.v_bulk_smart)],
+            bits: vec![int("bits", u64::from(card.circuit.n_bits)) as u32],
+            corners: vec![corner],
+        },
+        params: card,
+    };
+    spec.validate().map_err(bad)?;
+    let point = spec.grid.expand().remove(0);
+    let total = (1u64 << (2 * point.bits)) * u64::from(spec.n_mc);
+    if total > MAX_REQUEST_ITEMS {
+        return Err(bad(format!(
+            "grid point of {total} MAC evals exceeds the per-request ceiling of {MAX_REQUEST_ITEMS}"
+        )));
+    }
+    // The name is part of the response bytes but not of point_key, so it
+    // joins the cache key explicitly.
+    let key = format!("sweep\n{}\n{}", spec.name, point_key(&point, &spec));
+    cached(cache, &key, || {
+        let opts = SweepOptions { threads: 1, ..SweepOptions::default() };
+        let r = run_grid_point(&spec, &point, &opts)
+            .map_err(|e| fail(format!("sweep point: {e:#}")))?;
+        // a single point is trivially Pareto-optimal
+        Ok(sweep_json(&spec, &[r], &[true]))
+    })
+}
+
+/// `POST /v1/infer`: body mirrors an `nn.toml` model file plus optional
+/// top-level `variant` and `noise_off`; response is the canonical
+/// `infer.json` bytes.
+fn infer(params: &Params, cache: &ResultCache, body: &str) -> Result<Routed, Reject> {
+    let v = json::parse(body).map_err(|e| bad(format!("infer request body: {e}")))?;
+    let spec = ModelSpec::from_value(&v).map_err(|e| bad(format!("infer model: {e:#}")))?;
+    let variant: Variant = match v.get("variant").and_then(Value::as_str) {
+        Some(s) => s.parse().map_err(bad)?,
+        None => Variant::Smart,
+    };
+    let noise_off = v.get("noise_off").and_then(Value::as_bool).unwrap_or(false);
+    // saturating arithmetic: layer dims are client-controlled, and an
+    // overflow that wrapped past the ceiling would admit a giant campaign
+    let words = u64::from(spec.bits / 4);
+    let ops: u64 = spec.layers.iter().fold(0u64, |acc, l| {
+        acc.saturating_add(
+            (l.inputs as u64)
+                .saturating_mul(l.outputs as u64)
+                .saturating_mul(words)
+                .saturating_mul(words),
+        )
+    });
+    let total = ops.saturating_mul(u64::from(spec.trials));
+    if total > MAX_REQUEST_ITEMS {
+        return Err(bad(format!(
+            "inference of {total} MAC evals exceeds the per-request ceiling of {MAX_REQUEST_ITEMS}"
+        )));
+    }
+    let key = infer_key(&spec, variant, noise_off);
+    cached(cache, &key, || {
+        let opts = InferOptions {
+            threads: 1,
+            variant,
+            noise_off,
+            ..InferOptions::default()
+        };
+        let r = run_infer(params, &spec, &opts)
+            .map_err(|e| fail(format!("infer campaign: {e:#}")))?;
+        Ok(infer_json(&spec, &r))
+    })
+}
+
+/// Canonical identity key of one inference request: every field that can
+/// move the response bytes (model identity + variant + noise switch),
+/// floats at the [`report::csv_cell`] precision; the kernel and
+/// `shards`/`threads`/`block` are bit-identical performance knobs and
+/// never appear.
+fn infer_key(spec: &ModelSpec, variant: Variant, noise_off: bool) -> String {
+    let mut k = String::from("infer\n");
+    let _ = writeln!(
+        k,
+        "{}\n{}\n{}\n{}\n{}\n{}",
+        spec.name,
+        spec.seed,
+        spec.trials,
+        spec.bits,
+        variant.token(),
+        u8::from(noise_off)
+    );
+    let d = &spec.dataset;
+    let _ = writeln!(k, "dataset {} {} {}", d.classes, d.features, report::csv_cell(d.jitter));
+    for l in &spec.layers {
+        let _ = writeln!(k, "layer {} {} {}", l.inputs, l.outputs, u8::from(l.relu));
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        Request { method: method.into(), path: path.into(), body: body.into() }
+    }
+
+    #[test]
+    fn health_is_a_plain_ok() {
+        let cache = ResultCache::new(4, 1);
+        let r = handle(&Params::default(), &cache, &req("GET", "/v1/health", ""));
+        assert_eq!(r.response.status, 200);
+        assert!(r.cache.is_none());
+        assert!(r.response.body.contains("smart-serve"));
+    }
+
+    #[test]
+    fn unknown_paths_and_methods_are_rejected() {
+        let cache = ResultCache::new(4, 1);
+        let p = Params::default();
+        assert_eq!(handle(&p, &cache, &req("GET", "/nope", "")).response.status, 404);
+        assert_eq!(handle(&p, &cache, &req("GET", "/v1/mc", "")).response.status, 405);
+        assert_eq!(handle(&p, &cache, &req("POST", "/v1/health", "")).response.status, 405);
+    }
+
+    #[test]
+    fn bad_bodies_get_400_with_json_errors() {
+        let cache = ResultCache::new(4, 1);
+        let p = Params::default();
+        for (path, body) in [
+            ("/v1/mc", "not json"),
+            ("/v1/mc", r#"{"variant": "bogus", "workload": {"kind": "full_sweep"}}"#),
+            ("/v1/sweep/point", r#"{"vdd": -1.0}"#),
+            ("/v1/infer", r#"{"name": "x"}"#),
+        ] {
+            let r = handle(&p, &cache, &req("POST", path, body));
+            assert_eq!(r.response.status, 400, "{path} {body}");
+            assert!(json::parse(&r.response.body).is_ok());
+        }
+        // work ceiling: a million-sample full sweep is CLI territory
+        let r = handle(
+            &p,
+            &cache,
+            &req(
+                "POST",
+                "/v1/mc",
+                r#"{"variant": "smart", "n_mc": 1000000, "workload": {"kind": "full_sweep"}}"#,
+            ),
+        );
+        assert_eq!(r.response.status, 400);
+        assert!(r.response.body.contains("ceiling"));
+    }
+
+    #[test]
+    fn mc_is_cached_and_byte_identical_to_the_artifact_encoder() {
+        let cache = ResultCache::new(8, 2);
+        let p = Params::default();
+        let body = r#"{"variant": "smart", "n_mc": 8,
+                       "workload": {"kind": "fixed", "a": 15, "b": 15}}"#;
+        let first = handle(&p, &cache, &req("POST", "/v1/mc", body));
+        assert_eq!(first.response.status, 200);
+        assert_eq!(first.cache, Some(false));
+        let again = handle(&p, &cache, &req("POST", "/v1/mc", body));
+        assert_eq!(again.cache, Some(true));
+        assert_eq!(first.response.body, again.response.body);
+        // the response is exactly the CLI artifact encoder's output
+        let mut spec = crate::coordinator::CampaignSpec::paper_fig8(Variant::Smart);
+        spec.n_mc = 8;
+        let rep = run_campaign(&p, &spec, Backend::Native, None).unwrap();
+        assert_eq!(*first.response.body, report::mc_json(&spec, &rep));
+    }
+
+    #[test]
+    fn perf_knobs_share_one_cache_entry() {
+        let cache = ResultCache::new(8, 2);
+        let p = Params::default();
+        let a = r#"{"variant": "aid", "n_mc": 8,
+                    "workload": {"kind": "fixed", "a": 3, "b": 9}}"#;
+        let b = r#"{"variant": "aid", "n_mc": 8, "shards": 4, "workers": 2, "block": 16,
+                    "workload": {"kind": "fixed", "a": 3, "b": 9}}"#;
+        let ra = handle(&p, &cache, &req("POST", "/v1/mc", a));
+        let rb = handle(&p, &cache, &req("POST", "/v1/mc", b));
+        assert_eq!(ra.cache, Some(false));
+        assert_eq!(rb.cache, Some(true), "perf knobs must not fork the cache key");
+        assert_eq!(ra.response.body, rb.response.body);
+    }
+
+    #[test]
+    fn infer_key_tracks_identity_fields_only() {
+        let spec = ModelSpec::fixture();
+        let base = infer_key(&spec, Variant::Smart, false);
+        assert_ne!(base, infer_key(&spec, Variant::Aid, false));
+        assert_ne!(base, infer_key(&spec, Variant::Smart, true));
+        let mut other = spec.clone();
+        other.trials += 1;
+        assert_ne!(base, infer_key(&other, Variant::Smart, false));
+        assert_eq!(base, infer_key(&spec, Variant::Smart, false));
+    }
+}

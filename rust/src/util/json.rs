@@ -286,12 +286,16 @@ fn write_value(v: &Value, indent: usize, out: &mut String) {
         Value::Null => out.push_str("null"),
         Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Value::Num(n) => {
+            // -0.0 == 0.0 numerically but renders with a sign; normalize so
+            // artifacts and cache keys never diverge on sign-of-zero (the
+            // same rule as report::canon_zero)
+            let n = if *n == 0.0 { 0.0 } else { *n };
             if !n.is_finite() {
                 // JSON has no NaN/Infinity literal; emitting one would
                 // produce a document parse() itself rejects
                 out.push_str("null");
             } else if n.fract() == 0.0 && n.abs() < 1e15 {
-                out.push_str(&format!("{}", *n as i64));
+                out.push_str(&format!("{}", n as i64));
             } else {
                 out.push_str(&format!("{n}"));
             }
@@ -419,6 +423,18 @@ mod tests {
             let text = to_string_pretty(&Value::Num(bad));
             assert_eq!(parse(&text).unwrap(), Value::Null);
         }
+    }
+
+    #[test]
+    fn writer_normalizes_negative_zero() {
+        // regression: -0.0 must serialize exactly as 0.0 so byte-identical
+        // pipelines can never diverge textually on sign-of-zero
+        assert_eq!(to_string_pretty(&Value::Num(-0.0)), "0");
+        assert_eq!(to_string_pretty(&Value::Num(0.0)), "0");
+        let arr = Value::Arr(vec![Value::Num(-0.0), Value::Num(-1.5)]);
+        let text = to_string_pretty(&arr);
+        assert!(!text.contains("-0,") && !text.contains("-0\n"), "sign leaked: {text}");
+        assert!(text.contains("-1.5"));
     }
 
     #[test]

@@ -12,3 +12,27 @@ pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod toml_lite;
+
+/// FNV-1a over a string's bytes — deterministic across runs and
+/// platforms, so anything derived from it (the dse resume fingerprint,
+/// `serve`'s cache-shard placement) is stable. The single statement of
+/// the constants; do not re-implement locally.
+pub fn fnv1a(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv1a_reference_vectors() {
+        // published FNV-1a 64-bit test vectors
+        assert_eq!(super::fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(super::fnv1a("foobar"), 0x8594_4171_f739_67e8);
+    }
+}

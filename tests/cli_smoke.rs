@@ -203,9 +203,82 @@ fn sweep_cli_is_byte_deterministic() {
         let json = std::fs::read_to_string(out_dir.join("sweep.json")).unwrap();
         (csv, json)
     };
-    let (csv_a, json_a) = run("a", "4", "2", "0");
+    let (csv_a, json_a) = run("a", "4", "2", "256");
     let (csv_b, json_b) = run("b", "1", "1", "13");
     assert_eq!(csv_a, csv_b, "CSV artifacts differ across --shards/--threads/--block");
     assert_eq!(json_a, json_b, "JSON artifacts differ across --shards/--threads/--block");
     assert!(csv_a.lines().count() > 1);
+}
+
+#[test]
+fn zero_knobs_fail_at_the_cli_boundary() {
+    // regression (PR 5): an explicit `--shards 0` etc. used to sail into
+    // the campaign stack and die on a deep `assert!` in coordinator::pool;
+    // now the CLI rejects it with a descriptive error before any work runs
+    for knob in ["--shards", "--threads", "--block", "--workers", "--batch"] {
+        let out = smart()
+            .args(["mc", "--variant", "smart", "--n-mc", "8", "--native", knob, "0"])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "mc {knob} 0 should fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            err.contains(&format!("{knob} must be >= 1")) && err.contains("auto-select"),
+            "mc {knob} 0: {err}"
+        );
+        assert!(!err.contains("panicked"), "mc {knob} 0 panicked instead of erroring: {err}");
+    }
+    let out = smart().args(["serve", "--workers", "0"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--workers must be >= 1"));
+    let out = smart().args(["serve", "--cache-cap", "0"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--cache-cap must be >= 1"));
+}
+
+#[test]
+fn mc_json_writes_the_canonical_artifact() {
+    let out_dir = std::env::temp_dir().join(format!("smart_cli_mcjson_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let run = |shards: &str| {
+        let out = smart()
+            .args([
+                "mc", "--variant", "aid", "--n-mc", "16", "--native", "--shards", shards,
+                "--json", "--out", out_dir.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        std::fs::read_to_string(out_dir.join("mc.json")).unwrap()
+    };
+    let a = run("2");
+    let b = run("5");
+    assert_eq!(a, b, "mc.json must be byte-identical for any --shards");
+    let v = smart_insram::util::json::parse(&a).unwrap();
+    assert_eq!(v.get("variant").unwrap().as_str().unwrap(), "aid");
+    assert_eq!(v.get("n_mc").unwrap().as_u64().unwrap(), 16);
+    assert!(v.get("hist").unwrap().get("non_finite").is_some());
+    assert!(v.get("shards").is_none(), "perf knobs must not appear in mc.json");
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+#[test]
+fn serve_self_test_smoke_passes_and_writes_stats() {
+    let out_dir = std::env::temp_dir().join(format!("smart_cli_serve_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let out = smart()
+        .args([
+            "serve", "--self-test", "--smoke", "--workers", "2", "--json", "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("serve self-test OK"), "{text}");
+    let stats = std::fs::read_to_string(out_dir.join("SERVE_stats.json")).unwrap();
+    let v = smart_insram::util::json::parse(&stats).unwrap();
+    assert_eq!(v.get("service").unwrap().as_str().unwrap(), "smart-serve");
+    assert!(v.get("cache").unwrap().get("hits").unwrap().as_u64().unwrap() > 0);
+    let _ = std::fs::remove_dir_all(&out_dir);
 }

@@ -1,0 +1,191 @@
+//! Integration tests for `smart serve` (DESIGN.md §11): a real server on
+//! an ephemeral port, concurrent loopback clients, and byte-identity
+//! between HTTP responses and the CLI `--json` artifacts.
+
+use std::sync::Arc;
+
+use smart_insram::params::Params;
+use smart_insram::serve::{http_request, ServeOptions, Server};
+
+fn start_server(workers: usize) -> Server {
+    Server::start(
+        Params::default(),
+        &ServeOptions { addr: "127.0.0.1:0".to_string(), workers, cache_cap: 16 },
+    )
+    .expect("server starts on an ephemeral port")
+}
+
+#[test]
+fn mc_response_byte_matches_the_cli_json_artifact() {
+    // the artifact, via the real binary: `smart mc --json`
+    let out_dir = std::env::temp_dir().join(format!("smart_serve_mc_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_smart"))
+        .args([
+            "mc",
+            "--variant",
+            "smart",
+            "--n-mc",
+            "12",
+            "--native",
+            "--json",
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let artifact = std::fs::read_to_string(out_dir.join("mc.json")).unwrap();
+
+    // the same campaign over HTTP
+    let mut server = start_server(2);
+    let addr = server.addr().to_string();
+    let body = r#"{"variant": "smart", "n_mc": 12,
+                   "workload": {"kind": "fixed", "a": 15, "b": 15}}"#;
+    let (status, headers, got) = http_request(&addr, "POST", "/v1/mc", body).unwrap();
+    assert_eq!(status, 200, "{got}");
+    assert_eq!(got, artifact, "HTTP response diverged from the CLI mc.json bytes");
+    assert!(
+        headers.iter().any(|(k, v)| k == "X-Smart-Cache" && v == "miss"),
+        "first request must miss: {headers:?}"
+    );
+    assert!(
+        headers.iter().any(|(k, _)| k == "X-Smart-Time-Us"),
+        "missing timing header: {headers:?}"
+    );
+
+    // a perf-knobbed request describes the same campaign: cache hit,
+    // identical bytes
+    let knobbed = r#"{"variant": "smart", "n_mc": 12, "shards": 3, "workers": 2, "block": 7,
+                      "workload": {"kind": "fixed", "a": 15, "b": 15}}"#;
+    let (status, headers, again) = http_request(&addr, "POST", "/v1/mc", knobbed).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(again, artifact);
+    assert!(
+        headers.iter().any(|(k, v)| k == "X-Smart-Cache" && v == "hit"),
+        "perf knobs must not fork the cache key: {headers:?}"
+    );
+    server.stop();
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+#[test]
+fn infer_response_byte_matches_the_written_artifact() {
+    use smart_insram::nn::{run_infer, InferOptions, ModelSpec};
+    // write the CLI-style artifact through the library entry point the
+    // `smart infer --json` subcommand calls
+    let out_dir = std::env::temp_dir().join(format!("smart_serve_infer_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let body = r#"{"name": "serve-it", "seed": 11, "trials": 3, "bits": 4,
+                   "dataset": {"classes": 3, "features": 6, "jitter": 0.1},
+                   "layers": [{"inputs": 6, "outputs": 4, "relu": true},
+                              {"inputs": 4, "outputs": 3}]}"#;
+    let spec = ModelSpec::from_value(&smart_insram::util::json::parse(body).unwrap()).unwrap();
+    let opts = InferOptions {
+        write_artifacts: true,
+        out_dir: out_dir.clone(),
+        ..InferOptions::default()
+    };
+    run_infer(&Params::default(), &spec, &opts).unwrap();
+    let artifact = std::fs::read_to_string(out_dir.join("infer.json")).unwrap();
+
+    let mut server = start_server(2);
+    let (status, _, got) =
+        http_request(&server.addr().to_string(), "POST", "/v1/infer", body).unwrap();
+    assert_eq!(status, 200, "{got}");
+    assert_eq!(got, artifact, "HTTP response diverged from the infer.json bytes");
+    server.stop();
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+#[test]
+fn concurrent_clients_share_the_cache_and_the_bytes() {
+    let mut server = start_server(3);
+    let addr = Arc::new(server.addr().to_string());
+    let body = r#"{"variant": "aid", "n_mc": 10,
+                   "workload": {"kind": "fixed", "a": 3, "b": 9}}"#;
+    // prime once so every concurrent request can be a hit
+    let (status, _, expect) = http_request(&addr, "POST", "/v1/mc", body).unwrap();
+    assert_eq!(status, 200, "{expect}");
+
+    let clients: u64 = 6;
+    let repeats: u64 = 4;
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            let addr = Arc::clone(&addr);
+            let expect = expect.clone();
+            scope.spawn(move || {
+                for _ in 0..repeats {
+                    let (status, headers, got) =
+                        http_request(&addr, "POST", "/v1/mc", body).unwrap();
+                    assert_eq!(status, 200);
+                    assert_eq!(got, expect, "concurrent responses must be byte-identical");
+                    assert!(
+                        headers.iter().any(|(k, v)| k == "X-Smart-Cache" && v == "hit"),
+                        "repeat requests must be served from the cache: {headers:?}"
+                    );
+                }
+            });
+        }
+    });
+    assert_eq!(server.cache_misses(), 1, "only the priming request computes");
+    assert_eq!(server.cache_hits(), clients * repeats);
+
+    // stats reflect the run and are valid JSON
+    let (status, _, stats) = http_request(&addr, "GET", "/v1/stats", "").unwrap();
+    assert_eq!(status, 200);
+    let v = smart_insram::util::json::parse(&stats).unwrap();
+    assert_eq!(v.get("cache").unwrap().get("hits").unwrap().as_u64().unwrap(), clients * repeats);
+    assert!(v.get("requests").unwrap().as_u64().unwrap() >= clients * repeats + 1);
+    server.stop();
+}
+
+#[test]
+fn wire_errors_are_json_with_the_right_status() {
+    let mut server = start_server(1);
+    let addr = server.addr().to_string();
+    for (method, path, body, want) in [
+        ("GET", "/nope", "", 404u16),
+        ("GET", "/v1/mc", "", 405),
+        ("POST", "/v1/health", "", 405),
+        ("POST", "/v1/mc", "not json", 400),
+        ("POST", "/v1/infer", r#"{"name": "no-layers"}"#, 400),
+    ] {
+        let (status, _, got) = http_request(&addr, method, path, body).unwrap();
+        assert_eq!(status, want, "{method} {path}: {got}");
+        let v = smart_insram::util::json::parse(&got).unwrap();
+        assert!(v.get("error").is_some(), "{method} {path}: {got}");
+    }
+    // the work ceiling guards the pool from batch-sized campaigns
+    let huge = r#"{"variant": "smart", "n_mc": 1000000, "workload": {"kind": "full_sweep"}}"#;
+    let (status, _, got) = http_request(&addr, "POST", "/v1/mc", huge).unwrap();
+    assert_eq!(status, 400);
+    assert!(got.contains("ceiling"), "{got}");
+    server.stop();
+}
+
+#[test]
+fn graceful_shutdown_finishes_in_flight_requests() {
+    let mut server = start_server(1);
+    let addr = server.addr().to_string();
+    // an uncached compute request large enough to still be in flight when
+    // stop() is called (~thousands of ODE integrations)
+    let body = r#"{"variant": "smart", "n_mc": 4000,
+                   "workload": {"kind": "fixed", "a": 9, "b": 9}}"#;
+    let client = {
+        let addr = addr.clone();
+        std::thread::spawn(move || http_request(&addr, "POST", "/v1/mc", body))
+    };
+    // let the request reach the worker, then shut down underneath it
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    server.stop();
+    let (status, _, got) = client.join().unwrap().expect("in-flight request completed");
+    assert_eq!(status, 200, "graceful stop must drain in-flight requests: {got}");
+    assert!(got.contains("\"n_mc\": 4000"), "{got}");
+    // stop-then-restart liveness: a fresh server binds and serves again
+    let mut again = start_server(1);
+    let (status, _, _) =
+        http_request(&again.addr().to_string(), "GET", "/v1/health", "").unwrap();
+    assert_eq!(status, 200);
+    again.stop();
+}
