@@ -29,12 +29,13 @@ impl Summary {
         xs.sort();
         let n = xs.len();
         let sum: Duration = xs.iter().sum();
+        // lint:allow(D3): n = xs.len() is a CLI-bounded sample count, far below u32::MAX
         let mean = sum / n as u32;
         let mean_s = mean.as_secs_f64();
         let var = xs
             .iter()
             .map(|d| (d.as_secs_f64() - mean_s).powi(2))
-            .sum::<f64>()
+            .sum::<f64>() // lint:allow(D2): variance over <=1e3 samples, display only
             / n as f64;
         Self {
             samples: n,

@@ -63,7 +63,7 @@ pub fn integrate_adaptive(
         let err = (full - half).abs();
         if err <= tol || dt <= t_end * 1e-6 {
             v = half;
-            t += dt;
+            t += dt; // lint:allow(D2): adaptive ODE time stepping is inherently sequential
             steps += 1;
             if err < tol * 0.25 {
                 dt *= 1.5;

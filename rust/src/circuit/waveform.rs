@@ -51,7 +51,9 @@ impl Waveform {
         if t <= self.t[0] {
             return self.v[0];
         }
+        // lint:allow(D4): non-emptiness is asserted at entry — last() is always Some
         if t >= *self.t.last().unwrap() {
+            // lint:allow(D4): non-emptiness is asserted at entry — last() is always Some
             return *self.v.last().unwrap();
         }
         let idx = self.t.partition_point(|&x| x < t);

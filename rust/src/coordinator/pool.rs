@@ -114,7 +114,7 @@ impl WorkerPool {
             let job_rx = Arc::clone(&job_rx);
             let result_tx = result_tx.clone();
             let ready_tx = ready_tx.clone();
-            handles.push(std::thread::Builder::new()
+            let handle = std::thread::Builder::new()
                 .name(format!("smart-worker-{wid}"))
                 .spawn(move || {
                     // Initialize a private runtime; report readiness.
@@ -126,8 +126,15 @@ impl WorkerPool {
                         Ok(exe) => {
                             let _ = ready_tx.send(Ok(()));
                             loop {
-                                // hold the lock only while dequeuing
-                                let job = { job_rx.lock().unwrap().recv() };
+                                // hold the lock only while dequeuing; a
+                                // poisoned lock means a sibling worker
+                                // panicked mid-dequeue — exit gracefully
+                                // (the pool reports "all workers exited")
+                                // instead of cascading the panic
+                                let job = match job_rx.lock() {
+                                    Ok(rx) => rx.recv(),
+                                    Err(_) => break,
+                                };
                                 let Ok(job) = job else { break };
                                 let out = exe.run(&job.inputs).map(|o| (job, o));
                                 if result_tx.send(out).is_err() {
@@ -140,22 +147,27 @@ impl WorkerPool {
                         }
                     }
                 })
-                .expect("spawn worker"));
+                .map_err(|e| anyhow::anyhow!("spawning worker thread {wid}: {e}"))?;
+            handles.push(handle);
         }
         drop(ready_tx);
         for _ in 0..workers {
-            ready_rx.recv().expect("worker readiness")?;
+            match ready_rx.recv() {
+                Ok(status) => status?,
+                Err(_) => anyhow::bail!("a worker exited before reporting readiness"),
+            }
         }
         Ok(Self { job_tx: Some(job_tx), result_rx, handles })
     }
 
     /// Submit a batch (blocks when the queue is full — backpressure).
+    /// Errors when the pool is closed or every worker has exited.
     pub fn submit(&self, batch: PackedBatch) -> Result<()> {
-        self.job_tx
+        let tx = self
+            .job_tx
             .as_ref()
-            .expect("pool already closed")
-            .send(batch)
-            .map_err(|_| anyhow::anyhow!("all workers exited"))
+            .ok_or_else(|| anyhow::anyhow!("pool already closed"))?;
+        tx.send(batch).map_err(|_| anyhow::anyhow!("all workers exited"))
     }
 
     /// Signal no more jobs; workers drain and exit.

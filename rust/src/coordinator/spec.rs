@@ -118,7 +118,10 @@ impl Workload {
                     a <= 15 && b <= 15,
                     "fixed workload operands must be 4-bit (got a = {a}, b = {b})"
                 );
-                Ok(Self::Fixed { a: a as u8, b: b as u8 })
+                Ok(Self::Fixed {
+                    a: u8::try_from(a).map_err(|_| anyhow::anyhow!("workload.a = {a} exceeds u8"))?,
+                    b: u8::try_from(b).map_err(|_| anyhow::anyhow!("workload.b = {b} exceeds u8"))?,
+                })
             }
             "full_sweep" => Ok(Self::FullSweep),
             "random" => {
@@ -140,7 +143,10 @@ impl Workload {
                     (1..=4).contains(&bits),
                     "workload.bits must be 1..=4, got {bits}"
                 );
-                Ok(Self::BitSweep { bits: bits as u32 })
+                Ok(Self::BitSweep {
+                    bits: u32::try_from(bits)
+                        .map_err(|_| anyhow::anyhow!("workload.bits = {bits} exceeds u32"))?,
+                })
             }
             other => anyhow::bail!("unknown workload kind '{other}'"),
         }
@@ -218,21 +224,25 @@ impl CampaignSpec {
             None => Corner::Tt,
             Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
         };
-        // n_mc narrows range-checked (no silent wrap for untrusted HTTP
-        // bodies); the usize knobs are 64-bit on every supported target.
+        // every narrowing is range-checked (no silent wrap for untrusted
+        // HTTP bodies) — lint rule D3 holds this parser to try_from
         let n_mc = u("n_mc", 1000);
         let n_mc = u32::try_from(n_mc)
             .map_err(|_| anyhow::anyhow!("campaign.n_mc = {n_mc} exceeds u32"))?;
+        let uz = |k: &str, default: u64| {
+            let n = u(k, default);
+            usize::try_from(n).map_err(|_| anyhow::anyhow!("campaign.{k} = {n} exceeds usize"))
+        };
         let spec = Self {
             variant,
             workload,
             n_mc,
             seed: u("seed", 2022),
             corner,
-            workers: u("workers", 0) as usize,
-            batch: u("batch", 0) as usize,
-            shards: u("shards", 0) as usize,
-            block: u("block", 0) as usize,
+            workers: uz("workers", 0)?,
+            batch: uz("batch", 0)?,
+            shards: uz("shards", 0)?,
+            block: uz("block", 0)?,
         };
         spec.validate().map_err(|e| anyhow::anyhow!(e))?;
         Ok(spec)

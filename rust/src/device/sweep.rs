@@ -37,6 +37,7 @@ pub fn iv_sweep(card: DeviceCard, v_bulks: &[f64], n_points: usize) -> Vec<IvPoi
 /// the ceiling actually reached so the caller can fix the sweep.
 pub fn turn_on_v_wl(points: &[IvPoint], i_ref: f64) -> anyhow::Result<f64> {
     points.iter().find(|p| p.i_d > i_ref).map(|p| p.v_wl).ok_or_else(|| {
+        // lint:allow(D2): max() fold is order-insensitive — no rounding accumulation
         let i_max = points.iter().fold(f64::NEG_INFINITY, |m, p| m.max(p.i_d));
         anyhow::anyhow!(
             "I-V sweep never crosses i_ref = {i_ref:.3e} A \

@@ -247,6 +247,7 @@ fn card_fingerprint(p: &crate::params::Params) -> String {
     let d = &p.device;
     let c = &p.circuit;
     let canon = format!(
+        // lint:allow(D5): fingerprint needs exact roundtrip floats, not canon rounding
         "{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{},{},{:e},{:e}",
         d.vth0,
         d.gamma,

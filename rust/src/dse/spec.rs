@@ -124,6 +124,7 @@ impl GridPoint {
     /// Short human label for progress lines and panels.
     pub fn label(&self) -> String {
         format!(
+            // lint:allow(D5): human progress label only — never artifact bytes
             "{} vdd={:.2} v_bulk={:.2} bits={} {}",
             self.variant.token(),
             self.vdd,
@@ -192,7 +193,10 @@ impl SweepSpec {
             bits: bit_axis(grid_v, "bits", vec![params.circuit.n_bits])?,
             corners: str_axis(grid_v, "corner", vec![Corner::Tt])?,
         };
-        let spec = Self { name, seed: u("seed", 2022), n_mc: u("n_mc", 1000) as u32, params, grid };
+        let n_mc = u("n_mc", 1000);
+        let n_mc =
+            u32::try_from(n_mc).map_err(|_| anyhow::anyhow!("dse.n_mc = {n_mc} exceeds u32"))?;
+        let spec = Self { name, seed: u("seed", 2022), n_mc, params, grid };
         spec.validate().map_err(|e| anyhow::anyhow!(e))?;
         Ok(spec)
     }
@@ -267,10 +271,11 @@ fn bit_axis(grid: &Value, key: &str, default: Vec<u32>) -> Result<Vec<u32>> {
     let Some(v) = grid.get(key) else { return Ok(default) };
     let mut out = Vec::new();
     for item in list_of(v) {
+        let n = item
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("grid.{key}: expected an integer list"))?;
         out.push(
-            item.as_u64()
-                .ok_or_else(|| anyhow::anyhow!("grid.{key}: expected an integer list"))?
-                as u32,
+            u32::try_from(n).map_err(|_| anyhow::anyhow!("grid.{key}: {n} exceeds u32"))?,
         );
     }
     Ok(out)

@@ -52,6 +52,8 @@ pub mod device;
 pub mod dse;
 /// Energy-per-MAC and cycle-time models behind Table 1.
 pub mod energy;
+/// `smart lint`: determinism/robustness static analysis (DESIGN.md §12).
+pub mod lint;
 /// The analog in-SRAM MAC engine and the design-variant table.
 pub mod mac;
 /// Statistics + accuracy metrics (Welford, histograms, BER, SNR).

@@ -1,0 +1,162 @@
+//! Lint configuration: scan roots and the file-level allowlist
+//! (`configs/lint.toml`).
+//!
+//! Inline pragmas suppress single findings; the allowlist suppresses a
+//! whole `(rule, file)` pair — the right tool when a file's *job* makes
+//! a rule inapplicable (e.g. `bench/` timing code and D6). Every entry
+//! carries a mandatory written reason, and unknown rule ids are
+//! config-load errors, so the allowlist stays as honest as the pragmas.
+
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context as _, Result};
+
+use super::Rule;
+use crate::util::json::Value;
+use crate::util::toml_lite;
+
+/// One allowlist entry: suppress `rule` findings in the file whose
+/// repo-relative path ends with `path`, for the stated `reason`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllowEntry {
+    /// The rule being suppressed.
+    pub rule: Rule,
+    /// Path suffix the entry applies to (`rust/src/bench/mod.rs`).
+    pub path: String,
+    /// Written justification — mandatory, like pragma reasons.
+    pub reason: String,
+}
+
+/// Parsed lint configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LintConfig {
+    /// Directories (repo-relative) scanned when no paths are given on
+    /// the command line.
+    pub roots: Vec<String>,
+    /// File-level suppressions.
+    pub allows: Vec<AllowEntry>,
+}
+
+impl Default for LintConfig {
+    /// Built-in defaults when no config file exists: scan `rust/src`,
+    /// allow nothing.
+    fn default() -> Self {
+        LintConfig { roots: vec!["rust/src".to_string()], allows: Vec::new() }
+    }
+}
+
+impl LintConfig {
+    /// Load from a TOML file; a missing file yields the defaults (the
+    /// analyzer must run in a bare checkout), any other error is fatal.
+    pub fn load(path: &Path) -> Result<Self> {
+        if !path.exists() {
+            return Ok(LintConfig::default());
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = toml_lite::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_value(&doc).with_context(|| format!("in {}", path.display()))
+    }
+
+    /// Build from a parsed TOML document:
+    ///
+    /// ```toml
+    /// [lint]
+    /// roots = ["rust/src"]
+    ///
+    /// [[allow]]
+    /// rule = "D6"
+    /// path = "rust/src/bench/mod.rs"
+    /// reason = "benchmark timing is the product, never a result artifact"
+    /// ```
+    pub fn from_value(doc: &Value) -> Result<Self> {
+        let mut cfg = LintConfig::default();
+        if let Some(roots) = doc.get("lint").and_then(|l| l.get("roots")) {
+            let arr = roots.as_arr().ok_or_else(|| anyhow!("lint.roots must be an array"))?;
+            cfg.roots = arr
+                .iter()
+                .map(|r| {
+                    r.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("lint.roots entries must be strings"))
+                })
+                .collect::<Result<_>>()?;
+            ensure!(!cfg.roots.is_empty(), "lint.roots must not be empty");
+        }
+        if let Some(allows) = doc.get("allow") {
+            let arr = allows.as_arr().ok_or_else(|| anyhow!("[[allow]] must be a table array"))?;
+            for (idx, entry) in arr.iter().enumerate() {
+                let field = |k: &str| {
+                    entry
+                        .get(k)
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("[[allow]] #{idx}: missing string `{k}`"))
+                };
+                let rule_id = field("rule")?;
+                let rule = Rule::from_id(rule_id)
+                    .ok_or_else(|| anyhow!("[[allow]] #{idx}: unknown rule id `{rule_id}`"))?;
+                ensure!(
+                    rule != Rule::Pragma,
+                    "[[allow]] #{idx}: D0 (pragma hygiene) cannot be allowlisted"
+                );
+                let path = field("path")?.to_string();
+                let reason = field("reason")?.to_string();
+                ensure!(
+                    !reason.trim().is_empty(),
+                    "[[allow]] #{idx}: reason must not be empty"
+                );
+                cfg.allows.push(AllowEntry { rule, path, reason });
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// The first allowlist entry covering `(rule, path)`, if any. Path
+    /// matching is exact or by `/`-separated suffix, so entries work
+    /// regardless of the scan root.
+    pub fn allow_for(&self, rule: Rule, path: &str) -> Option<&AllowEntry> {
+        self.allows.iter().find(|a| {
+            a.rule == rule && (path == a.path || path.ends_with(&format!("/{}", a.path)))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toml: &str) -> Result<LintConfig> {
+        LintConfig::from_value(&toml_lite::parse(toml).unwrap())
+    }
+
+    #[test]
+    fn defaults_without_file() {
+        let cfg = LintConfig::load(Path::new("/nonexistent/lint.toml")).unwrap();
+        assert_eq!(cfg.roots, vec!["rust/src"]);
+        assert!(cfg.allows.is_empty());
+    }
+
+    #[test]
+    fn parses_roots_and_allows() {
+        let cfg = parse(
+            "[lint]\nroots = [\"rust/src\"]\n\n[[allow]]\nrule = \"D6\"\n\
+             path = \"rust/src/bench/mod.rs\"\nreason = \"timing is the product\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.allows.len(), 1);
+        assert_eq!(cfg.allows[0].rule, Rule::WallClock);
+        assert!(cfg.allow_for(Rule::WallClock, "rust/src/bench/mod.rs").is_some());
+        assert!(cfg.allow_for(Rule::WallClock, "repo/rust/src/bench/mod.rs").is_some());
+        assert!(cfg.allow_for(Rule::WallClock, "rust/src/serve/mod.rs").is_none());
+        assert!(cfg.allow_for(Rule::PanicPath, "rust/src/bench/mod.rs").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_entries() {
+        assert!(parse("[[allow]]\nrule = \"D9\"\npath = \"x\"\nreason = \"r\"\n").is_err());
+        assert!(parse("[[allow]]\nrule = \"D4\"\npath = \"x\"\n").is_err());
+        assert!(parse("[[allow]]\nrule = \"D4\"\npath = \"x\"\nreason = \" \"\n").is_err());
+        assert!(parse("[[allow]]\nrule = \"D0\"\npath = \"x\"\nreason = \"r\"\n").is_err());
+    }
+}

@@ -1,0 +1,534 @@
+//! Hand-rolled Rust lexer for the lint passes (DESIGN.md §12).
+//!
+//! The analyzer must never fire on text inside comments or string
+//! literals (`"HashMap"` in a doc comment is not a determinism hazard),
+//! so the rule passes run over a token stream, not raw lines. The lexer
+//! understands exactly as much Rust as that requires: line and nested
+//! block comments, cooked/raw/byte strings, char literals vs lifetimes,
+//! numeric literals (with float suffixes and exponents), identifiers,
+//! and multi-character operators. It is intentionally lossy everywhere
+//! else — it never needs to parse, only to tokenize faithfully.
+//!
+//! Suppression pragmas travel in line comments
+//! (`// lint:allow(D4): reason`) and are collected here, alongside any
+//! malformed ones, so the rule layer can match findings against them
+//! and flag pragmas that are unused or missing a written reason.
+
+/// Token payload kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword (Rust keywords are not distinguished).
+    Ident(String),
+    /// Numeric literal, verbatim including any suffix (`0.5f64`).
+    Num(String),
+    /// String literal content (cooked, raw, or byte), escapes verbatim.
+    /// Content is retained so the float-format rule (D5) can inspect
+    /// format specs.
+    Str(String),
+    /// Char or byte literal (`'x'`, `b'\xFF'`); content dropped.
+    Char,
+    /// Lifetime (`'a`, `'static`); distinct from char literals.
+    Lifetime,
+    /// Punctuation / operator, single or multi character (`::`, `+=`).
+    Punct(String),
+}
+
+/// One token with the 1-based source line its first character sits on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    /// Token payload.
+    pub tok: Tok,
+    /// 1-based line number.
+    pub line: u32,
+}
+
+/// A parsed `// lint:allow(D4): reason` suppression pragma. It covers
+/// matching findings on its own line (trailing comment) and on the line
+/// immediately below (comment above the offending statement).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    pub line: u32,
+    /// Rule ids listed in the parentheses (`["D4"]`, `["D1", "D6"]`).
+    pub rules: Vec<String>,
+    /// The written justification after the closing `):`.
+    pub reason: String,
+}
+
+/// Lexer output: the token stream plus the pragma sidecar channels.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Lexed {
+    /// All tokens, in source order.
+    pub tokens: Vec<Token>,
+    /// Well-formed suppression pragmas.
+    pub pragmas: Vec<Pragma>,
+    /// Malformed pragmas as `(line, problem)` — anything starting with
+    /// `lint:allow` that does not parse to rules + a non-empty reason.
+    pub malformed: Vec<(u32, String)>,
+}
+
+/// Multi-character operators, longest first (maximal munch).
+const MULTI_PUNCT: [&str; 24] = [
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "..", "==", "!=", "<=", ">=", "&&", "||", "<<",
+    ">>", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=",
+];
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// True when a [`Tok::Num`] literal denotes a float (`0.5`, `1e-3`,
+/// `2f64`) rather than an integer. Hex literals never count — their
+/// `e` digits are not exponents — and an exponent `e`/`E` only counts
+/// when followed by a digit or sign, so the `e` in an integer suffix
+/// (`0usize`) never reads as one.
+pub fn is_float_literal(num: &str) -> bool {
+    if num.starts_with("0x") || num.starts_with("0X") {
+        return false;
+    }
+    if num.contains('.') || num.ends_with("f32") || num.ends_with("f64") {
+        return true;
+    }
+    num.bytes().zip(num.bytes().skip(1)).any(|(c, d)| {
+        (c == b'e' || c == b'E') && (d.is_ascii_digit() || d == b'+' || d == b'-')
+    })
+}
+
+/// Tokenize Rust source. Never fails: unrecognized bytes become
+/// single-character [`Tok::Punct`] tokens, which no rule matches.
+pub fn lex(text: &str) -> Lexed {
+    Lexer { chars: text.chars().collect(), i: 0, line: 1, out: Lexed::default() }.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    out: Lexed,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn push(&mut self, tok: Tok, line: u32) {
+        self.out.tokens.push(Token { tok, line });
+    }
+
+    fn run(mut self) -> Lexed {
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if c.is_whitespace() {
+                self.i += 1;
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment();
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment();
+            } else if c == '"' {
+                self.cooked_string();
+            } else if c == '\'' {
+                self.char_or_lifetime();
+            } else if c.is_ascii_digit() {
+                self.number();
+            } else if is_ident_start(c) {
+                self.ident_or_prefixed_literal();
+            } else {
+                self.punct();
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.i + 2;
+        let mut j = start;
+        while j < self.chars.len() && self.chars[j] != '\n' {
+            j += 1;
+        }
+        let body: String = self.chars[start..j].iter().collect();
+        self.scan_pragma(&body);
+        self.i = j;
+    }
+
+    fn scan_pragma(&mut self, comment: &str) {
+        // Strip doc-comment markers (`///`, `//!`) then whitespace.
+        let body = comment.trim_start_matches(['/', '!']).trim();
+        let Some(rest) = body.strip_prefix("lint:allow") else {
+            return;
+        };
+        let line = self.line;
+        let bad = |msg: &str| (line, format!("malformed pragma `{}`: {msg}", body.trim()));
+        let Some(rest) = rest.strip_prefix('(') else {
+            self.out.malformed.push(bad("expected `(` after lint:allow"));
+            return;
+        };
+        let Some((rules, reason)) = rest.split_once(')') else {
+            self.out.malformed.push(bad("missing `)`"));
+            return;
+        };
+        let rules: Vec<String> =
+            rules.split(',').map(|r| r.trim().to_string()).filter(|r| !r.is_empty()).collect();
+        if rules.is_empty() {
+            self.out.malformed.push(bad("no rule ids listed"));
+            return;
+        }
+        let Some(reason) = reason.trim_start().strip_prefix(':') else {
+            self.out.malformed.push(bad("expected `: reason` after `)`"));
+            return;
+        };
+        let reason = reason.trim();
+        if reason.is_empty() {
+            self.out.malformed.push(bad("suppression needs a written reason"));
+            return;
+        }
+        self.out.pragmas.push(Pragma { line, rules, reason: reason.to_string() });
+    }
+
+    fn block_comment(&mut self) {
+        let mut depth = 1usize;
+        let mut j = self.i + 2;
+        while j < self.chars.len() && depth > 0 {
+            match self.chars[j] {
+                '\n' => {
+                    self.line += 1;
+                    j += 1;
+                }
+                '/' if self.chars.get(j + 1) == Some(&'*') => {
+                    depth += 1;
+                    j += 2;
+                }
+                '*' if self.chars.get(j + 1) == Some(&'/') => {
+                    depth -= 1;
+                    j += 2;
+                }
+                _ => j += 1,
+            }
+        }
+        self.i = j;
+    }
+
+    /// Cooked string body starting at the opening quote: escapes skip
+    /// the next char, newlines (including escaped line continuations)
+    /// keep the line counter honest.
+    fn cooked_string(&mut self) {
+        let line = self.line;
+        let mut j = self.i + 1;
+        let mut content = String::new();
+        while j < self.chars.len() {
+            let c = self.chars[j];
+            if c == '"' {
+                j += 1;
+                break;
+            }
+            if c == '\n' {
+                self.line += 1;
+            }
+            content.push(c);
+            if c == '\\' {
+                if let Some(&e) = self.chars.get(j + 1) {
+                    if e == '\n' {
+                        self.line += 1;
+                    }
+                    content.push(e);
+                    j += 1;
+                }
+            }
+            j += 1;
+        }
+        self.i = j;
+        self.push(Tok::Str(content), line);
+    }
+
+    /// Raw string starting at `r`/`br` + hashes: no escapes; terminated
+    /// by `"` followed by the same number of hashes.
+    fn raw_string(&mut self, hash_start: usize) {
+        let line = self.line;
+        let mut hashes = 0usize;
+        let mut j = hash_start;
+        while self.chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        // caller guarantees chars[j] == '"'
+        j += 1;
+        let body_start = j;
+        let mut end = self.chars.len();
+        while j < self.chars.len() {
+            if self.chars[j] == '\n' {
+                self.line += 1;
+                j += 1;
+                continue;
+            }
+            if self.chars[j] == '"'
+                && self.chars[j + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes
+            {
+                end = j;
+                j += 1 + hashes;
+                break;
+            }
+            j += 1;
+        }
+        let content: String = self.chars[body_start..end.min(self.chars.len())].iter().collect();
+        self.i = j;
+        self.push(Tok::Str(content), line);
+    }
+
+    fn char_or_lifetime(&mut self) {
+        let line = self.line;
+        match (self.peek(1), self.peek(2)) {
+            // escaped char: '\n', '\u{1F600}' — scan to the closing quote
+            (Some('\\'), _) => {
+                let mut j = self.i + 3;
+                while j < self.chars.len() && self.chars[j] != '\'' {
+                    j += 1;
+                }
+                self.i = j + 1;
+                self.push(Tok::Char, line);
+            }
+            // plain char: 'x' (x may itself be an ident char)
+            (Some(c), Some('\'')) if c != '\'' => {
+                self.i += 3;
+                self.push(Tok::Char, line);
+            }
+            // lifetime: 'ident with no closing quote
+            (Some(c), _) if is_ident_start(c) => {
+                let mut j = self.i + 1;
+                while j < self.chars.len() && is_ident_continue(self.chars[j]) {
+                    j += 1;
+                }
+                self.i = j;
+                self.push(Tok::Lifetime, line);
+            }
+            _ => {
+                self.i += 1;
+                self.push(Tok::Punct("'".to_string()), line);
+            }
+        }
+    }
+
+    fn number(&mut self) {
+        let line = self.line;
+        let start = self.i;
+        let mut j = self.i;
+        while j < self.chars.len() {
+            let c = self.chars[j];
+            if is_ident_continue(c) {
+                j += 1;
+            } else if c == '.' && self.chars.get(j + 1).is_some_and(|d| d.is_ascii_digit()) {
+                // `0.5` continues the literal; `0..16` does not
+                j += 1;
+            } else if (c == '+' || c == '-')
+                && j > start
+                && matches!(self.chars[j - 1], 'e' | 'E')
+                && !self.chars[start..].starts_with(&['0', 'x'])
+            {
+                // decimal exponent sign: `1e-3`
+                j += 1;
+            } else {
+                break;
+            }
+        }
+        let text: String = self.chars[start..j].iter().collect();
+        self.i = j;
+        self.push(Tok::Num(text), line);
+    }
+
+    fn ident_or_prefixed_literal(&mut self) {
+        let line = self.line;
+        let start = self.i;
+        let mut j = self.i;
+        while j < self.chars.len() && is_ident_continue(self.chars[j]) {
+            j += 1;
+        }
+        let word: String = self.chars[start..j].iter().collect();
+        let next = self.chars.get(j).copied();
+        match (word.as_str(), next) {
+            // raw string r"..." / r#"..."# (also br variants)
+            ("r" | "br", Some('"' | '#')) if self.raw_string_follows(j) => {
+                self.i = j;
+                self.raw_string(j);
+            }
+            // byte string b"..."
+            ("b", Some('"')) => {
+                self.i = j;
+                self.cooked_string();
+            }
+            // byte char b'x'
+            ("b", Some('\'')) => {
+                self.i = j;
+                self.char_or_lifetime();
+            }
+            // raw identifier r#fn — consume as a plain identifier
+            ("r", Some('#')) if self.chars.get(j + 1).copied().is_some_and(is_ident_start) => {
+                let mut k = j + 2;
+                while k < self.chars.len() && is_ident_continue(self.chars[k]) {
+                    k += 1;
+                }
+                let raw: String = self.chars[j + 2..k].iter().collect();
+                self.i = k;
+                self.push(Tok::Ident(raw), line);
+            }
+            _ => {
+                self.i = j;
+                self.push(Tok::Ident(word), line);
+            }
+        }
+    }
+
+    /// After `r`/`br`, is this actually a raw string (hashes then a
+    /// quote), not a raw identifier or a lone `r`?
+    fn raw_string_follows(&self, mut j: usize) -> bool {
+        while self.chars.get(j) == Some(&'#') {
+            j += 1;
+        }
+        self.chars.get(j) == Some(&'"')
+    }
+
+    fn punct(&mut self) {
+        let line = self.line;
+        for op in MULTI_PUNCT {
+            let glyphs: Vec<char> = op.chars().collect();
+            if self.chars[self.i..].starts_with(&glyphs) {
+                self.i += glyphs.len();
+                self.push(Tok::Punct(op.to_string()), line);
+                return;
+            }
+        }
+        let c = self.chars[self.i];
+        self.i += 1;
+        self.push(Tok::Punct(c.to_string()), line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(text: &str) -> Vec<String> {
+        lex(text)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_produce_no_idents() {
+        let src = r##"
+            // HashMap in a line comment
+            /// "HashMap" in a doc comment
+            /* block /* nested */ HashMap */
+            let s = "HashMap::iter()";
+            let r = r#"unwrap() in a raw string"#;
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"HashMap".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert!(ids.contains(&"let".to_string()));
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_constructs() {
+        let src = "let a = 1;\n/* two\nlines */\nlet b = \"x\ny\";\nlet c = 2;";
+        let lexed = lex(src);
+        let line_of = |name: &str| {
+            lexed
+                .tokens
+                .iter()
+                .find(|t| t.tok == Tok::Ident(name.to_string()))
+                .map(|t| t.line)
+        };
+        assert_eq!(line_of("a"), Some(1));
+        assert_eq!(line_of("b"), Some(4));
+        assert_eq!(line_of("c"), Some(6));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let lexed = lex("fn f<'a>(x: &'a str) { let c = 'x'; let e = '\\n'; }");
+        let chars = lexed.tokens.iter().filter(|t| t.tok == Tok::Char).count();
+        let lifetimes = lexed.tokens.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        assert_eq!(chars, 2);
+        assert_eq!(lifetimes, 2);
+    }
+
+    #[test]
+    fn numbers_and_ranges() {
+        let lexed = lex("for i in 0..16 { let x = 1.5e-3; let y = 0.5f64; }");
+        let nums: Vec<String> = lexed
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Num(s) => Some(s),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec!["0", "16", "1.5e-3", "0.5f64"]);
+        assert!(!is_float_literal("0"));
+        assert!(!is_float_literal("0xEF"));
+        // the `e` in an integer suffix is not an exponent
+        assert!(!is_float_literal("0usize"));
+        assert!(!is_float_literal("1e"));
+        assert!(is_float_literal("1.5e-3"));
+        assert!(is_float_literal("0.5f64"));
+    }
+
+    #[test]
+    fn multi_char_operators_are_single_tokens() {
+        let lexed = lex("a += b; c::<f64>(); d -> e");
+        let puncts: Vec<String> = lexed
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Punct(s) => Some(s),
+                _ => None,
+            })
+            .collect();
+        assert!(puncts.contains(&"+=".to_string()));
+        assert!(puncts.contains(&"::".to_string()));
+        assert!(puncts.contains(&"->".to_string()));
+    }
+
+    #[test]
+    fn pragmas_parse_with_rules_and_reason() {
+        let src = "let x = 1; // lint:allow(D4, D6): console-only path\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.pragmas.len(), 1);
+        let p = &lexed.pragmas[0];
+        assert_eq!(p.line, 1);
+        assert_eq!(p.rules, vec!["D4", "D6"]);
+        assert_eq!(p.reason, "console-only path");
+        assert!(lexed.malformed.is_empty());
+    }
+
+    #[test]
+    fn reasonless_pragmas_are_malformed() {
+        for bad in [
+            "// lint:allow(D4):",
+            "// lint:allow(D4)",
+            "// lint:allow D4: reason",
+            "// lint:allow(): reason",
+        ] {
+            let lexed = lex(bad);
+            assert!(lexed.pragmas.is_empty(), "{bad}");
+            assert_eq!(lexed.malformed.len(), 1, "{bad}");
+        }
+    }
+
+    #[test]
+    fn string_escapes_do_not_end_the_literal() {
+        let lexed = lex(r#"let s = "a\"b"; let t = 2;"#);
+        assert!(lexed.tokens.iter().any(|t| t.tok == Tok::Str("a\\\"b".to_string())));
+        assert!(lexed.tokens.iter().any(|t| t.tok == Tok::Ident("t".to_string())));
+    }
+}

@@ -1,0 +1,425 @@
+//! `smart lint` — a determinism-and-robustness static analyzer for the
+//! campaign stack (DESIGN.md §12).
+//!
+//! Every headline guarantee this repo makes — byte-identical artifacts
+//! for any `--shards/--threads/--block`, `--resume` checkpoints,
+//! `smart serve` cache identity, scalar/block kernel equivalence —
+//! rests on source-level invariants: canonical fold order, canonical
+//! float formatting, no truncating casts on untrusted input, no panics
+//! in library code. Until this pass existed they were enforced only by
+//! integration tests *after* a violation shipped. `smart lint` checks
+//! them statically on every commit.
+//!
+//! The analyzer is dependency-free: a hand-rolled lexer ([`lexer`])
+//! strips comments and strings so rules never fire on prose, and the
+//! rule passes ([`rules`]) walk the token stream. Rules are keyed
+//! (`D1`..`D6`; `D0` is the pragma meta-rule) and individually
+//! suppressible, either inline —
+//!
+//! ```text
+//! // lint:allow(D6): wall-clock goes only to the console, never artifacts
+//! let t0 = Instant::now();
+//! ```
+//!
+//! — or per file via `configs/lint.toml` ([`config`]). Every
+//! suppression must carry a written reason; a reasonless or unused
+//! pragma is itself a finding (`D0`), so the suppression inventory can
+//! never rot silently.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context as _, Result};
+
+use crate::util::json::{to_string_pretty, Value};
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+pub use config::{AllowEntry, LintConfig};
+
+/// The rule catalogue. Each variant is one checkable determinism or
+/// robustness invariant; `D0` polices the suppression mechanism itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// D0 — malformed, reasonless, or unused `lint:allow` pragma.
+    Pragma,
+    /// D1 — `HashMap`/`HashSet` iteration in result-producing code
+    /// (order-nondeterminism; keyed lookup is fine).
+    MapIteration,
+    /// D2 — floating-point accumulation (`+=`, `sum()`, `fold`) outside
+    /// the approved canonical-fold sites (`Aggregator`, `Welford`).
+    FloatAccum,
+    /// D3 — `as` narrowing casts on parser-reachable values
+    /// (`toml_lite`, `from_value`, HTTP bodies) — checked conversions
+    /// required.
+    NarrowingCast,
+    /// D4 — `.unwrap()`/`.expect()`/`panic!` in non-test library code.
+    PanicPath,
+    /// D5 — direct `f64`/`f32` format specs outside
+    /// `report::canon`/`csv_cell` (the `-0.0` / precision divergence
+    /// class).
+    FloatFormat,
+    /// D6 — `Instant::now`/`SystemTime` in result-affecting paths.
+    WallClock,
+}
+
+/// All rules, in id order.
+pub const RULES: [Rule; 7] = [
+    Rule::Pragma,
+    Rule::MapIteration,
+    Rule::FloatAccum,
+    Rule::NarrowingCast,
+    Rule::PanicPath,
+    Rule::FloatFormat,
+    Rule::WallClock,
+];
+
+impl Rule {
+    /// Stable rule id (`"D0"`..`"D6"`), used in pragmas, the allowlist,
+    /// and `LINT_report.json`.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::Pragma => "D0",
+            Rule::MapIteration => "D1",
+            Rule::FloatAccum => "D2",
+            Rule::NarrowingCast => "D3",
+            Rule::PanicPath => "D4",
+            Rule::FloatFormat => "D5",
+            Rule::WallClock => "D6",
+        }
+    }
+
+    /// One-line description of the invariant the rule checks.
+    pub fn summary(self) -> &'static str {
+        match self {
+            Rule::Pragma => "suppression pragmas must parse, carry a reason, and match a finding",
+            Rule::MapIteration => "no HashMap/HashSet iteration in result-producing code",
+            Rule::FloatAccum => "float accumulation only at canonical-fold sites",
+            Rule::NarrowingCast => "no `as` narrowing casts on parser-reachable values",
+            Rule::PanicPath => "no unwrap/expect/panic! in library code",
+            Rule::FloatFormat => "float formatting only via report::canon/csv_cell",
+            Rule::WallClock => "no wall-clock reads in result-affecting paths",
+        }
+    }
+
+    /// Resolve a rule id (`"D4"`); `None` for unknown ids.
+    pub fn from_id(id: &str) -> Option<Rule> {
+        RULES.into_iter().find(|r| r.id() == id)
+    }
+}
+
+impl std::fmt::Display for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One analyzer finding, suppressed or not.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// The rule that fired.
+    pub rule: Rule,
+    /// Repo-relative path (`/`-separated) of the offending file.
+    pub path: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// What fired, in one sentence.
+    pub note: String,
+    /// `Some(reason)` when a pragma or allowlist entry suppressed the
+    /// finding; the reason is the suppression's written justification.
+    pub suppressed: Option<String>,
+}
+
+impl Finding {
+    /// `path:line` — the clickable location of the finding.
+    pub fn location(&self) -> String {
+        format!("{}:{}", self.path, self.line)
+    }
+}
+
+/// A finished lint run over a set of files.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// Every finding (suppressed ones included), sorted by
+    /// `(path, line, rule)`.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+impl LintReport {
+    /// Findings not covered by a pragma or allowlist entry — the ones
+    /// that fail the build.
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed.is_none())
+    }
+
+    /// Count of unsuppressed findings.
+    pub fn unsuppressed_count(&self) -> usize {
+        self.unsuppressed().count()
+    }
+
+    /// Canonical `LINT_report.json` bytes: sorted findings, per-rule
+    /// summary, no timestamps or host data — the same report is
+    /// byte-identical on every machine (the lint practices what it
+    /// preaches).
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("files".to_string(), Value::Num(self.files as f64));
+        let findings: Vec<Value> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut m = BTreeMap::new();
+                m.insert("rule".to_string(), Value::Str(f.rule.id().to_string()));
+                m.insert("path".to_string(), Value::Str(f.path.clone()));
+                m.insert("line".to_string(), Value::Num(f64::from(f.line)));
+                m.insert("note".to_string(), Value::Str(f.note.clone()));
+                m.insert(
+                    "suppressed".to_string(),
+                    match &f.suppressed {
+                        Some(reason) => Value::Str(reason.clone()),
+                        None => Value::Null,
+                    },
+                );
+                Value::Obj(m)
+            })
+            .collect();
+        root.insert("findings".to_string(), Value::Arr(findings));
+        let mut summary = BTreeMap::new();
+        for rule in RULES {
+            let total = self.findings.iter().filter(|f| f.rule == rule).count();
+            if total == 0 {
+                continue;
+            }
+            let open = self.unsuppressed().filter(|f| f.rule == rule).count();
+            let mut m = BTreeMap::new();
+            m.insert("total".to_string(), Value::Num(total as f64));
+            m.insert("unsuppressed".to_string(), Value::Num(open as f64));
+            summary.insert(rule.id().to_string(), Value::Obj(m));
+        }
+        root.insert("summary".to_string(), Value::Obj(summary));
+        root.insert(
+            "unsuppressed".to_string(),
+            Value::Num(self.unsuppressed_count() as f64),
+        );
+        let mut text = to_string_pretty(&Value::Obj(root));
+        text.push('\n');
+        text
+    }
+}
+
+/// Lint one source file (pure — no filesystem access). `path` is the
+/// repo-relative display path; it also drives the per-file rule scoping
+/// (approved canonical-fold/format sites) and allowlist matching.
+///
+/// ```
+/// use smart_insram::lint::{lint_source, LintConfig, Rule};
+///
+/// let cfg = LintConfig::default();
+/// let findings = lint_source("src/demo.rs", "fn f(o: Option<u8>) -> u8 { o.unwrap() }", &cfg);
+/// assert_eq!(findings.len(), 1);
+/// assert_eq!(findings[0].rule, Rule::PanicPath);
+/// assert!(findings[0].suppressed.is_none());
+/// ```
+pub fn lint_source(path: &str, text: &str, cfg: &LintConfig) -> Vec<Finding> {
+    let lexed = lexer::lex(text);
+    let raw = rules::scan(path, &lexed);
+    let mut findings: Vec<Finding> = raw
+        .into_iter()
+        .map(|r| Finding {
+            rule: r.rule,
+            path: path.to_string(),
+            line: r.line,
+            note: r.note,
+            suppressed: None,
+        })
+        .collect();
+
+    // Inline pragmas first (closest to the code), then the config
+    // allowlist for whatever is still open.
+    let mut used = vec![false; lexed.pragmas.len()];
+    for f in &mut findings {
+        for (pi, p) in lexed.pragmas.iter().enumerate() {
+            let covers = p.line == f.line || p.line + 1 == f.line;
+            if covers && p.rules.iter().any(|r| r == f.rule.id()) {
+                f.suppressed = Some(p.reason.clone());
+                used[pi] = true;
+                break;
+            }
+        }
+    }
+    for f in &mut findings {
+        if f.suppressed.is_none() {
+            if let Some(a) = cfg.allow_for(f.rule, path) {
+                f.suppressed = Some(a.reason.clone());
+            }
+        }
+    }
+
+    // D0: the pragma mechanism polices itself. Malformed pragmas,
+    // unknown rule ids, and pragmas that suppressed nothing are all
+    // findings — and are never themselves suppressible.
+    for (line, msg) in &lexed.malformed {
+        findings.push(Finding {
+            rule: Rule::Pragma,
+            path: path.to_string(),
+            line: *line,
+            note: msg.clone(),
+            suppressed: None,
+        });
+    }
+    for (pi, p) in lexed.pragmas.iter().enumerate() {
+        let unknown: Vec<&String> =
+            p.rules.iter().filter(|r| Rule::from_id(r).is_none()).collect();
+        if let Some(bad) = unknown.first() {
+            findings.push(Finding {
+                rule: Rule::Pragma,
+                path: path.to_string(),
+                line: p.line,
+                note: format!("pragma names unknown rule id `{bad}`"),
+                suppressed: None,
+            });
+        } else if !used[pi] {
+            findings.push(Finding {
+                rule: Rule::Pragma,
+                path: path.to_string(),
+                line: p.line,
+                note: format!(
+                    "unused pragma: no {} finding on this or the next line",
+                    p.rules.join("/")
+                ),
+                suppressed: None,
+            });
+        }
+    }
+
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// Run the analyzer over `paths` (files or directories, resolved
+/// relative to `root`; directories are walked recursively for `.rs`
+/// files in sorted order). Empty `paths` falls back to the config's
+/// `roots`.
+pub fn run(root: &Path, paths: &[PathBuf], cfg: &LintConfig) -> Result<LintReport> {
+    let requested: Vec<PathBuf> = if paths.is_empty() {
+        cfg.roots.iter().map(PathBuf::from).collect()
+    } else {
+        paths.to_vec()
+    };
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in &requested {
+        let full = root.join(p);
+        if full.is_dir() {
+            collect_rs_files(&full, &mut files)
+                .with_context(|| format!("walking {}", full.display()))?;
+        } else if full.is_file() {
+            files.push(full);
+        } else {
+            anyhow::bail!("lint path not found: {}", full.display());
+        }
+    }
+    files.sort();
+    files.dedup();
+
+    let mut report = LintReport { findings: Vec::new(), files: files.len() };
+    for file in &files {
+        let text = std::fs::read_to_string(file)
+            .with_context(|| format!("reading {}", file.display()))?;
+        let rel = display_path(root, file);
+        report.findings.extend(lint_source(&rel, &text, cfg));
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok(report)
+}
+
+/// Repo-relative, `/`-separated display path for a scanned file, so
+/// reports (and the allowlist they are matched against) are identical
+/// across hosts and platforms.
+fn display_path(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+/// Depth-first, name-sorted `.rs` collection — deterministic scan order
+/// for deterministic reports.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_ids_roundtrip() {
+        for rule in RULES {
+            assert_eq!(Rule::from_id(rule.id()), Some(rule));
+            assert!(!rule.summary().is_empty());
+        }
+        assert_eq!(Rule::from_id("D9"), None);
+        assert_eq!(Rule::WallClock.to_string(), "D6");
+    }
+
+    #[test]
+    fn pragma_suppresses_same_and_next_line() {
+        let cfg = LintConfig::default();
+        let same = "fn f(o: Option<u8>) -> u8 { o.unwrap() } // lint:allow(D4): fixture\n";
+        let fs = lint_source("x.rs", same, &cfg);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].suppressed.as_deref(), Some("fixture"));
+        let above = "// lint:allow(D4): fixture\nfn f(o: Option<u8>) -> u8 { o.unwrap() }\n";
+        let fs = lint_source("x.rs", above, &cfg);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].suppressed.is_some());
+    }
+
+    #[test]
+    fn unused_and_malformed_pragmas_are_d0_findings() {
+        let cfg = LintConfig::default();
+        let fs = lint_source("x.rs", "// lint:allow(D4): nothing here fires\nlet a = 1;\n", &cfg);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, Rule::Pragma);
+        assert!(fs[0].note.contains("unused"), "{}", fs[0].note);
+        let fs = lint_source("x.rs", "// lint:allow(D4):\nlet a = 1;\n", &cfg);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].note.contains("reason"), "{}", fs[0].note);
+        let fs = lint_source("x.rs", "// lint:allow(D99): made-up rule\nlet a = 1;\n", &cfg);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].note.contains("unknown rule id"), "{}", fs[0].note);
+    }
+
+    #[test]
+    fn report_json_is_canonical() {
+        let cfg = LintConfig::default();
+        let findings =
+            lint_source("b.rs", "fn g(o: Option<u8>) -> u8 { o.expect(\"x\") }\n", &cfg);
+        let report = LintReport { findings, files: 1 };
+        let json = report.to_json();
+        assert!(crate::util::json::parse(&json).is_ok());
+        assert!(json.contains("\"D4\""));
+        assert!(json.contains("\"unsuppressed\": 1"), "{json}");
+        assert!(json.ends_with('\n'));
+        // byte-identical on re-serialization
+        assert_eq!(json, report.to_json());
+    }
+}

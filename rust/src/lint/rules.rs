@@ -1,0 +1,738 @@
+//! Rule passes over the lexed token stream (rules `D1`..`D6`).
+//!
+//! Each pass is a linear walk with small, bounded look-around — no AST,
+//! no type information. That keeps the analyzer dependency-free and
+//! fast, at the cost of approximation; the approximations are chosen so
+//! false *negatives* are possible but false *positives* are rare, and
+//! every remaining false positive can carry a reasoned pragma.
+//!
+//! All passes skip `#[cfg(test)]` / `#[test]` item bodies: the
+//! invariants protect shipped artifacts, and tests legitimately
+//! `unwrap`, time things, and accumulate ad-hoc sums.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{is_float_literal, Lexed, Tok, Token};
+use super::Rule;
+
+/// A rule hit before suppression (pragma / allowlist) is applied.
+#[derive(Debug, Clone)]
+pub struct RawFinding {
+    /// Which rule fired.
+    pub rule: Rule,
+    /// 1-based line of the offending token.
+    pub line: u32,
+    /// One-sentence description of what fired.
+    pub note: String,
+}
+
+/// Files whose whole job is canonical float accumulation (D2 exempt).
+const FOLD_SITES: [&str; 2] = ["coordinator/aggregate.rs", "metrics/welford.rs"];
+/// Files whose whole job is canonical float formatting (D5 exempt).
+const FORMAT_SITES: [&str; 2] = ["report/mod.rs", "util/json.rs"];
+
+/// Run every rule pass over one lexed file. `path` selects the per-file
+/// exemptions (the canonical fold/format sites check themselves against
+/// every *other* rule, but are the one sanctioned home of their own).
+pub fn scan(path: &str, lexed: &Lexed) -> Vec<RawFinding> {
+    let toks = &lexed.tokens;
+    let test = test_mask(toks);
+    let mut out = Vec::new();
+    d1_map_iteration(toks, &test, &mut out);
+    if !path_matches(path, &FOLD_SITES) {
+        d2_float_accum(toks, &test, &mut out);
+    }
+    d3_narrowing_cast(toks, &test, &mut out);
+    d4_panic_path(toks, &test, &mut out);
+    if !path_matches(path, &FORMAT_SITES) {
+        d5_float_format(toks, &test, &mut out);
+    }
+    d6_wall_clock(toks, &test, &mut out);
+    out
+}
+
+fn path_matches(path: &str, sites: &[&str]) -> bool {
+    sites.iter().any(|s| path == *s || path.ends_with(&format!("/{s}")))
+}
+
+// ---------------------------------------------------------------------------
+// token helpers
+
+fn ident_at<'a>(toks: &'a [Token], i: usize) -> Option<&'a str> {
+    match toks.get(i).map(|t| &t.tok) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct_at(toks: &[Token], i: usize, op: &str) -> bool {
+    matches!(toks.get(i).map(|t| &t.tok), Some(Tok::Punct(p)) if p == op)
+}
+
+fn any_punct_at<'a>(toks: &'a [Token], i: usize) -> Option<&'a str> {
+    match toks.get(i).map(|t| &t.tok) {
+        Some(Tok::Punct(p)) => Some(p.as_str()),
+        _ => None,
+    }
+}
+
+/// Track `(`/`[`/`{` nesting while scanning forward; returns the new depth.
+fn bump_depth(depth: i32, tok: &Tok) -> i32 {
+    match tok {
+        Tok::Punct(p) if p == "(" || p == "[" || p == "{" => depth + 1,
+        Tok::Punct(p) if p == ")" || p == "]" || p == "}" => depth - 1,
+        _ => depth,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// test-region detection
+
+/// Per-token mask: `true` when the token sits inside the body of an
+/// item annotated `#[test]` or `#[cfg(test)]` (or any `cfg(...)` whose
+/// arguments mention `test` without a leading `not`). All rules skip
+/// masked tokens.
+fn test_mask(toks: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        if punct_at(toks, i, "#") && punct_at(toks, i + 1, "[") {
+            let close = match_delim(toks, i + 1, "[", "]");
+            if is_test_attr(toks, i + 2, close) {
+                if let Some((open, end)) = item_body(toks, close + 1) {
+                    for m in mask.iter_mut().take(end + 1).skip(open) {
+                        *m = true;
+                    }
+                    i = end + 1;
+                    continue;
+                }
+            }
+            i = close + 1;
+        } else {
+            i += 1;
+        }
+    }
+    mask
+}
+
+/// Index of the delimiter matching `toks[open]` (which must be `open_d`);
+/// the token stream's end if unbalanced.
+fn match_delim(toks: &[Token], open: usize, open_d: &str, close_d: &str) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        if punct_at(toks, i, open_d) {
+            depth += 1;
+        } else if punct_at(toks, i, close_d) {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Does `toks[start..end]` spell a test attribute? Exactly `test`, or
+/// `cfg(...)` whose arguments mention `test` and do not start with `not`.
+fn is_test_attr(toks: &[Token], start: usize, end: usize) -> bool {
+    if end <= start {
+        return false;
+    }
+    if end - start == 1 {
+        return ident_at(toks, start) == Some("test");
+    }
+    if ident_at(toks, start) == Some("cfg") && punct_at(toks, start + 1, "(") {
+        let args: Vec<&str> =
+            (start + 2..end).filter_map(|k| ident_at(toks, k)).collect();
+        return args.first() != Some(&"not") && args.contains(&"test");
+    }
+    false
+}
+
+/// Given the token index just past an attribute, skip any further
+/// stacked attributes and return the `{`..`}` span of the annotated
+/// item's body (`None` for bodyless items like `use ...;`).
+fn item_body(toks: &[Token], mut i: usize) -> Option<(usize, usize)> {
+    while punct_at(toks, i, "#") && punct_at(toks, i + 1, "[") {
+        i = match_delim(toks, i + 1, "[", "]") + 1;
+    }
+    while i < toks.len() {
+        if punct_at(toks, i, "{") {
+            return Some((i, match_delim(toks, i, "{", "}")));
+        }
+        if punct_at(toks, i, ";") {
+            return None;
+        }
+        i += 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// D1: HashMap/HashSet iteration
+
+const MAP_TYPES: [&str; 2] = ["HashMap", "HashSet"];
+const ITER_METHODS: [&str; 9] = [
+    "iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "drain", "retain",
+    "extract_if",
+];
+
+fn d1_map_iteration(toks: &[Token], test: &[bool], out: &mut Vec<RawFinding>) {
+    let names = hash_bound_names(toks);
+    if names.is_empty() {
+        return;
+    }
+    for i in 0..toks.len() {
+        if test[i] {
+            continue;
+        }
+        // name.iter() / name.drain() / ...
+        if let Some(name) = ident_at(toks, i) {
+            if names.contains(name)
+                && punct_at(toks, i + 1, ".")
+                && ident_at(toks, i + 2).is_some_and(|m| ITER_METHODS.contains(&m))
+                && punct_at(toks, i + 3, "(")
+            {
+                let method = ident_at(toks, i + 2).unwrap_or("iter");
+                out.push(RawFinding {
+                    rule: Rule::MapIteration,
+                    line: toks[i + 2].line,
+                    note: format!(
+                        "`{name}.{method}()` iterates a HashMap/HashSet — order is \
+                         nondeterministic; sort the items or use a BTree collection"
+                    ),
+                });
+            }
+        }
+        // for k in &map { ... } / for k in map { ... }
+        if ident_at(toks, i) == Some("in") {
+            let mut j = i + 1;
+            while punct_at(toks, j, "&") || ident_at(toks, j) == Some("mut") {
+                j += 1;
+            }
+            if let Some(name) = ident_at(toks, j) {
+                if names.contains(name) && punct_at(toks, j + 1, "{") {
+                    out.push(RawFinding {
+                        rule: Rule::MapIteration,
+                        line: toks[j].line,
+                        note: format!(
+                            "`for _ in {name}` iterates a HashMap/HashSet — order is \
+                             nondeterministic; sort the items or use a BTree collection"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Names plausibly bound to a `HashMap`/`HashSet`: `let` bindings whose
+/// initializing statement mentions a hash type at bracket depth 0, and
+/// `name: ...HashMap...` field/parameter declarations.
+fn hash_bound_names(toks: &[Token]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for i in 0..toks.len() {
+        if ident_at(toks, i) == Some("let") {
+            let mut j = i + 1;
+            if ident_at(toks, j) == Some("mut") {
+                j += 1;
+            }
+            if let Some(name) = ident_at(toks, j) {
+                if span_mentions_hash(toks, j + 1, &[";"]) {
+                    names.insert(name.to_string());
+                }
+            }
+        }
+        if let Some(name) = ident_at(toks, i) {
+            if punct_at(toks, i + 1, ":") && span_mentions_hash(toks, i + 2, &[",", ";", "="]) {
+                names.insert(name.to_string());
+            }
+        }
+    }
+    names
+}
+
+/// Scan forward from `start` for a `HashMap`/`HashSet` ident at bracket
+/// depth 0, stopping at any of `stops` (depth 0), a closing delimiter,
+/// or a bounded horizon.
+fn span_mentions_hash(toks: &[Token], start: usize, stops: &[&str]) -> bool {
+    let mut depth = 0i32;
+    for k in start..toks.len().min(start + 100) {
+        if depth == 0 {
+            if let Some(p) = any_punct_at(toks, k) {
+                if stops.contains(&p) || p == ")" || p == "}" || p == "]" {
+                    return false;
+                }
+            }
+            if ident_at(toks, k).is_some_and(|s| MAP_TYPES.contains(&s)) {
+                return true;
+            }
+        }
+        depth = bump_depth(depth, &toks[k].tok);
+        if depth < 0 {
+            return false;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// D2: float accumulation
+
+const FLOAT_TYPES: [&str; 2] = ["f64", "f32"];
+
+fn d2_float_accum(toks: &[Token], test: &[bool], out: &mut Vec<RawFinding>) {
+    let floats = float_bound_names(toks);
+    for i in 0..toks.len() {
+        if test[i] {
+            continue;
+        }
+        // accumulate in place: floatvar += ... / floatvar -= ...
+        if let Some(name) = ident_at(toks, i) {
+            if floats.contains(name)
+                && any_punct_at(toks, i + 1).is_some_and(|p| p == "+=" || p == "-=")
+            {
+                out.push(RawFinding {
+                    rule: Rule::FloatAccum,
+                    line: toks[i + 1].line,
+                    note: format!(
+                        "in-place float accumulation on `{name}` — route through the \
+                         canonical fold (Aggregator/Welford) to keep summation order fixed"
+                    ),
+                });
+            }
+        }
+        // .sum::<f64>() / .product::<f32>() / .sum() with a float let nearby
+        if punct_at(toks, i, ".") {
+            if let Some(m) = ident_at(toks, i + 1) {
+                if m == "sum" || m == "product" {
+                    let turbofish = punct_at(toks, i + 2, "::")
+                        && punct_at(toks, i + 3, "<")
+                        && ident_at(toks, i + 4).is_some_and(|t| FLOAT_TYPES.contains(&t));
+                    let inferred =
+                        punct_at(toks, i + 2, "(") && stmt_has_float_let(toks, i);
+                    if turbofish || inferred {
+                        out.push(RawFinding {
+                            rule: Rule::FloatAccum,
+                            line: toks[i + 1].line,
+                            note: format!(
+                                "floating-point `.{m}()` outside the approved \
+                                 canonical-fold sites — order of reduction must be pinned"
+                            ),
+                        });
+                    }
+                }
+                // .fold(0.0, ...) — float initial accumulator
+                if m == "fold" && punct_at(toks, i + 2, "(") && fold_init_is_float(toks, i + 3) {
+                    out.push(RawFinding {
+                        rule: Rule::FloatAccum,
+                        line: toks[i + 1].line,
+                        note: "float-seeded `.fold()` outside the approved canonical-fold \
+                               sites — order of reduction must be pinned"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Names bound by `let` to an explicit `f64`/`f32` annotation or a
+/// float-literal initializer.
+fn float_bound_names(toks: &[Token]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for i in 0..toks.len() {
+        if ident_at(toks, i) != Some("let") {
+            continue;
+        }
+        let mut j = i + 1;
+        if ident_at(toks, j) == Some("mut") {
+            j += 1;
+        }
+        let Some(name) = ident_at(toks, j) else { continue };
+        let mut is_float = false;
+        if punct_at(toks, j + 1, ":") {
+            let mut depth = 0i32;
+            for k in j + 2..toks.len().min(j + 40) {
+                if depth == 0 && (punct_at(toks, k, "=") || punct_at(toks, k, ";")) {
+                    break;
+                }
+                if depth == 0 && ident_at(toks, k).is_some_and(|t| FLOAT_TYPES.contains(&t)) {
+                    is_float = true;
+                    break;
+                }
+                depth = bump_depth(depth, &toks[k].tok);
+            }
+        } else if punct_at(toks, j + 1, "=") {
+            if let Some(Tok::Num(n)) = toks.get(j + 2).map(|t| &t.tok) {
+                is_float = is_float_literal(n);
+            }
+        }
+        if is_float {
+            names.insert(name.to_string());
+        }
+    }
+    names
+}
+
+/// Walk back from a `.sum()`/`.product()` to the start of its statement
+/// looking for `let ...: f64/f32` / a float literal — evidence that the
+/// untyped reduction is floating-point.
+fn stmt_has_float_let(toks: &[Token], i: usize) -> bool {
+    let lo = i.saturating_sub(120);
+    let mut saw_let = false;
+    let mut saw_float = false;
+    for k in (lo..i).rev() {
+        match &toks[k].tok {
+            Tok::Punct(p) if p == ";" || p == "{" => break,
+            Tok::Ident(s) if s == "let" => saw_let = true,
+            Tok::Ident(s) if FLOAT_TYPES.contains(&s.as_str()) => saw_float = true,
+            Tok::Num(n) if is_float_literal(n) => saw_float = true,
+            _ => {}
+        }
+    }
+    saw_let && saw_float
+}
+
+/// Is the first argument of `.fold(` (starting at `start`, just past the
+/// `(`) a float literal or float-typed expression?
+fn fold_init_is_float(toks: &[Token], start: usize) -> bool {
+    let mut depth = 0i32;
+    for k in start..toks.len().min(start + 12) {
+        if depth == 0 {
+            if punct_at(toks, k, ",") || punct_at(toks, k, ")") {
+                return false;
+            }
+            match &toks[k].tok {
+                Tok::Num(n) if is_float_literal(n) => return true,
+                Tok::Ident(s) if FLOAT_TYPES.contains(&s.as_str()) => return true,
+                _ => {}
+            }
+        }
+        depth = bump_depth(depth, &toks[k].tok);
+        if depth < 0 {
+            return false;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// D3: `as` narrowing casts in parser scope
+
+const NARROW_INTS: [&str; 12] = [
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+
+fn d3_narrowing_cast(toks: &[Token], test: &[bool], out: &mut Vec<RawFinding>) {
+    for (lo, hi) in parser_fn_bodies(toks) {
+        for i in lo..=hi.min(toks.len().saturating_sub(1)) {
+            if test[i] {
+                continue;
+            }
+            if ident_at(toks, i) == Some("as") {
+                if let Some(ty) = ident_at(toks, i + 1) {
+                    if NARROW_INTS.contains(&ty) {
+                        out.push(RawFinding {
+                            rule: Rule::NarrowingCast,
+                            line: toks[i].line,
+                            note: format!(
+                                "`as {ty}` on parser-reachable data — use \
+                                 try_from/try_into with a descriptive error"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Body spans of functions that handle parser output: named
+/// `from_value`/`from_*`/`parse*`, or whose signature mentions `Value`
+/// or `toml_lite`.
+fn parser_fn_bodies(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if ident_at(toks, i) == Some("fn") {
+            if let Some(name) = ident_at(toks, i + 1) {
+                let mut sig_hit = name == "from_value"
+                    || name.starts_with("from_")
+                    || name.starts_with("parse");
+                let mut j = i + 2;
+                let mut body = None;
+                while j < toks.len().min(i + 220) {
+                    if punct_at(toks, j, "{") {
+                        body = Some((j, match_delim(toks, j, "{", "}")));
+                        break;
+                    }
+                    if punct_at(toks, j, ";") {
+                        break;
+                    }
+                    if ident_at(toks, j).is_some_and(|s| s == "Value" || s == "toml_lite") {
+                        sig_hit = true;
+                    }
+                    j += 1;
+                }
+                if sig_hit {
+                    if let Some((open, close)) = body {
+                        spans.push((open, close));
+                        i = close + 1;
+                        continue;
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+// ---------------------------------------------------------------------------
+// D4: unwrap/expect/panic! in library code
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+fn d4_panic_path(toks: &[Token], test: &[bool], out: &mut Vec<RawFinding>) {
+    for i in 0..toks.len() {
+        if test[i] {
+            continue;
+        }
+        if punct_at(toks, i, ".")
+            && ident_at(toks, i + 1).is_some_and(|m| m == "unwrap" || m == "expect")
+            && punct_at(toks, i + 2, "(")
+        {
+            let method = ident_at(toks, i + 1).unwrap_or("unwrap");
+            out.push(RawFinding {
+                rule: Rule::PanicPath,
+                line: toks[i + 1].line,
+                note: format!(
+                    "`.{method}()` in library code — propagate an anyhow error instead"
+                ),
+            });
+        }
+        if ident_at(toks, i).is_some_and(|m| PANIC_MACROS.contains(&m))
+            && punct_at(toks, i + 1, "!")
+        {
+            let mac = ident_at(toks, i).unwrap_or("panic");
+            out.push(RawFinding {
+                rule: Rule::PanicPath,
+                line: toks[i].line,
+                note: format!("`{mac}!` in library code — return an anyhow error instead"),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D5: direct float formatting
+
+const FORMAT_MACROS: [&str; 12] = [
+    "format", "write", "writeln", "print", "println", "eprint", "eprintln", "format_args",
+    "assert", "assert_eq", "assert_ne", "debug_assert",
+];
+
+fn d5_float_format(toks: &[Token], test: &[bool], out: &mut Vec<RawFinding>) {
+    for i in 0..toks.len() {
+        if test[i] {
+            continue;
+        }
+        let Tok::Str(content) = &toks[i].tok else { continue };
+        if !in_format_macro(toks, i) {
+            continue;
+        }
+        if let Some(spec) = float_format_spec(content) {
+            out.push(RawFinding {
+                rule: Rule::FloatFormat,
+                line: toks[i].line,
+                note: format!(
+                    "float format spec `{{:{spec}}}` outside report::canon/csv_cell — \
+                     canonical formatting keeps artifacts byte-identical"
+                ),
+            });
+        }
+    }
+}
+
+/// Is the string at `i` an argument of a formatting macro call? (Looks
+/// back a few tokens for `ident !` followed by an open delimiter.)
+fn in_format_macro(toks: &[Token], i: usize) -> bool {
+    let lo = i.saturating_sub(8);
+    for k in (lo..i).rev() {
+        if punct_at(toks, k, "!")
+            && ident_at(toks, k.wrapping_sub(1)).is_some_and(|m| FORMAT_MACROS.contains(&m))
+        {
+            return true;
+        }
+        // a statement boundary between the macro and the string breaks the link
+        if punct_at(toks, k, ";") {
+            return false;
+        }
+    }
+    false
+}
+
+/// The first float-smelling format spec in a format string: explicit
+/// precision (`{:.3}`) or scientific (`{:e}`), excluding Debug (`?`) and
+/// integer-radix (`x`/`X`/`b`/`o`) specs.
+fn float_format_spec(s: &str) -> Option<String> {
+    let bytes = s.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] != b'{' {
+            i += 1;
+            continue;
+        }
+        if bytes.get(i + 1) == Some(&b'{') {
+            i += 2; // escaped brace
+            continue;
+        }
+        let Some(end) = s[i..].find('}').map(|off| i + off) else { return None };
+        let seg = &s[i + 1..end];
+        if let Some((_, spec)) = seg.split_once(':') {
+            let benign =
+                spec.contains('?') || spec.contains(['x', 'X', 'b', 'o']);
+            let floaty = spec.contains('.') || spec.ends_with('e') || spec.ends_with('E');
+            if floaty && !benign {
+                return Some(spec.to_string());
+            }
+        }
+        i = end + 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// D6: wall-clock reads
+
+fn d6_wall_clock(toks: &[Token], test: &[bool], out: &mut Vec<RawFinding>) {
+    for i in 0..toks.len() {
+        if test[i] {
+            continue;
+        }
+        if ident_at(toks, i) == Some("Instant")
+            && punct_at(toks, i + 1, "::")
+            && ident_at(toks, i + 2) == Some("now")
+        {
+            out.push(RawFinding {
+                rule: Rule::WallClock,
+                line: toks[i].line,
+                note: "`Instant::now()` — wall-clock reads must not influence result \
+                       artifacts"
+                    .to_string(),
+            });
+        }
+        if ident_at(toks, i) == Some("SystemTime") && punct_at(toks, i + 1, "::") {
+            out.push(RawFinding {
+                rule: Rule::WallClock,
+                line: toks[i].line,
+                note: "`SystemTime` — wall-clock reads must not influence result artifacts"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn hits(src: &str) -> Vec<(Rule, u32)> {
+        scan("x.rs", &lex(src)).into_iter().map(|f| (f.rule, f.line)).collect()
+    }
+
+    #[test]
+    fn d1_fires_on_map_iteration_not_lookup() {
+        let src = "fn f() {\n    let mut m: HashMap<String, u32> = HashMap::new();\n    \
+                   let v = m.get(\"k\");\n    for (k, _) in &m { drop(k); }\n    \
+                   let n: Vec<u32> = m.values().cloned().collect();\n}\n";
+        let got = hits(src);
+        assert_eq!(got, vec![(Rule::MapIteration, 4), (Rule::MapIteration, 5)]);
+    }
+
+    #[test]
+    fn d1_ignores_btree_and_comment_mentions() {
+        let src = "// a HashMap would be wrong here\nfn f() {\n    \
+                   let m: BTreeMap<String, u32> = BTreeMap::new();\n    \
+                   for (k, _) in &m { drop(k); }\n}\n";
+        assert!(hits(src).is_empty());
+    }
+
+    #[test]
+    fn d2_fires_on_float_accumulation() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n    let mut acc = 0.0;\n    \
+                   for x in xs { acc += x; }\n    acc\n}\n";
+        assert_eq!(hits(src), vec![(Rule::FloatAccum, 3)]);
+        let turbo = "fn g(xs: &[f64]) -> f64 { xs.iter().sum::<f64>() }\n";
+        assert_eq!(hits(turbo), vec![(Rule::FloatAccum, 1)]);
+        let fold = "fn h(xs: &[f64]) -> f64 { xs.iter().fold(0.0, |a, b| a + b) }\n";
+        assert_eq!(hits(fold), vec![(Rule::FloatAccum, 1)]);
+    }
+
+    #[test]
+    fn d2_ignores_integer_accumulation() {
+        let src = "fn f(xs: &[u64]) -> u64 {\n    let mut acc = 0u64;\n    \
+                   for x in xs { acc += x; }\n    let s: u64 = xs.iter().sum();\n    acc + s\n}\n";
+        assert!(hits(src).is_empty());
+    }
+
+    #[test]
+    fn d3_fires_only_in_parser_scope() {
+        let parser = "fn from_value(v: &Value) -> Spec {\n    let n = v.num();\n    \
+                      let k = n as u32;\n    Spec { k }\n}\n";
+        assert_eq!(hits(parser), vec![(Rule::NarrowingCast, 3)]);
+        let free = "fn shade(x: u64) -> u32 { x as u32 }\n";
+        assert!(hits(free).is_empty());
+    }
+
+    #[test]
+    fn d4_fires_outside_tests_only() {
+        let src = "fn f(o: Option<u8>) -> u8 { o.unwrap() }\n\
+                   #[cfg(test)]\nmod tests {\n    fn g(o: Option<u8>) -> u8 { o.unwrap() }\n}\n";
+        assert_eq!(hits(src), vec![(Rule::PanicPath, 1)]);
+        let not_test = "#[cfg(not(test))]\nfn f(o: Option<u8>) -> u8 { o.expect(\"x\") }\n";
+        assert_eq!(hits(not_test), vec![(Rule::PanicPath, 2)]);
+    }
+
+    #[test]
+    fn d4_fires_on_panic_macro_not_assert() {
+        let src = "fn f(x: u8) {\n    assert!(x < 10);\n    \
+                   if x == 9 { panic!(\"nope\"); }\n}\n";
+        assert_eq!(hits(src), vec![(Rule::PanicPath, 3)]);
+    }
+
+    #[test]
+    fn d5_fires_on_float_spec_not_debug_or_hex() {
+        let src = "fn f(x: f64) -> String {\n    let a = format!(\"{x:.3}\");\n    \
+                   let b = format!(\"{x:?}\");\n    let c = format!(\"{:04x}\", 7u32);\n    \
+                   a + &b + &c\n}\n";
+        assert_eq!(hits(src), vec![(Rule::FloatFormat, 2)]);
+    }
+
+    #[test]
+    fn d5_ignores_specs_in_plain_strings() {
+        let src = "fn f() -> &'static str { \"use {:.3} for floats\" }\n";
+        assert!(hits(src).is_empty());
+    }
+
+    #[test]
+    fn d6_fires_on_clock_reads() {
+        let src = "fn f() {\n    let t0 = Instant::now();\n    drop(t0);\n}\n";
+        assert_eq!(hits(src), vec![(Rule::WallClock, 2)]);
+        let import_only = "use std::time::SystemTime;\nfn f() {}\n";
+        assert!(hits(import_only).is_empty());
+    }
+
+    #[test]
+    fn approved_sites_are_exempt_from_their_own_rule() {
+        let src = "fn f(xs: &[f64]) -> f64 { xs.iter().sum::<f64>() }\n";
+        assert!(scan("rust/src/metrics/welford.rs", &lex(src)).is_empty());
+        assert_eq!(scan("rust/src/metrics/other.rs", &lex(src)).len(), 1);
+        let fmtsrc = "fn c(x: f64) -> String { format!(\"{x:.17}\") }\n";
+        assert!(scan("rust/src/report/mod.rs", &lex(fmtsrc)).is_empty());
+    }
+}

@@ -333,7 +333,9 @@ impl NativeMacEngine {
                 block.out.v_blb[i * 4 + k] = v as f32;
             }
             let lanes = &block.v_lane[base..base + 4];
+            // lint:allow(D2): fixed 4-lane weighted fold in array order — the modeled physics
             let v_mult: f64 = lanes.iter().zip(WEIGHTS).map(|(&v, w)| (vdd - v) * w).sum();
+            // lint:allow(D2): fixed 4-lane weighted fold in array order — the modeled physics
             let energy: f64 = lanes.iter().map(|&v| p.circuit.c_blb * vdd * (vdd - v)).sum();
             block.out.v_mult[i] = v_mult as f32;
             block.out.energy[i] = energy as f32;

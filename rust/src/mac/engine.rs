@@ -96,7 +96,9 @@ impl NativeMacEngine {
             .iter()
             .zip(WEIGHTS)
             .map(|(&v, w)| (vdd - v) * w)
+            // lint:allow(D2): fixed 4-lane weighted fold in array order — the modeled physics
             .sum();
+        // lint:allow(D2): fixed 4-lane weighted fold in array order — the modeled physics
         let energy: f64 = v_blb.iter().map(|&v| p.circuit.c_blb * vdd * (vdd - v)).sum();
         MacResult { v_mult, v_blb, energy, fault }
     }

@@ -11,6 +11,7 @@
 //! smart sweep configs/dse.toml --shards 4 --threads 2 [--resume]
 //! smart infer configs/nn.toml --trials 64 --variant smart [--json]
 //! smart serve --addr 127.0.0.1:7878 --workers 4 [--self-test]
+//! smart lint [paths…] [--json --out DIR]
 //! ```
 
 use std::path::PathBuf;
@@ -89,6 +90,18 @@ COMMANDS:
                                asserts byte-identity + cache hit-rate
                                (--smoke shrinks it for CI, --json writes
                                SERVE_stats.json to --out)
+  lint [paths...] [--json] [--out DIR]
+                               determinism/robustness static analysis
+                               (rules D1-D6, DESIGN.md §12): lexes the
+                               Rust sources under rust/src (or the given
+                               paths), applies the rule passes with
+                               inline `// lint:allow(Dn): reason`
+                               pragmas and the configs/lint.toml
+                               allowlist, prints the findings panel, and
+                               exits nonzero on any unsuppressed
+                               finding; --json writes the canonical
+                               LINT_report.json to --out (the CI gate
+                               artifact)
 
 OPTIONS:
   --artifacts DIR   artifact directory (default: $SMART_ARTIFACTS or ./artifacts)
@@ -145,10 +158,13 @@ fn run() -> Result<()> {
         ],
     )
     .map_err(|e| anyhow::anyhow!(e))?;
-    if args.flag("help") || args.positional(0).is_none() {
-        print!("{USAGE}");
-        return Ok(());
-    }
+    let cmd = match args.positional(0) {
+        Some(cmd) if !args.flag("help") => cmd,
+        _ => {
+            print!("{USAGE}");
+            return Ok(());
+        }
+    };
     let params = Params::default();
     let backend = if args.flag("native") { Backend::Native } else { Backend::Xla };
     let art: PathBuf = args
@@ -159,7 +175,7 @@ fn run() -> Result<()> {
         .opt_parse("variant", Variant::Smart)
         .map_err(|e| anyhow::anyhow!(e))?;
 
-    match args.positional(0).unwrap() {
+    match cmd {
         "info" => cmd_info(&params, &art),
         "mac" => {
             let a: u8 = args
@@ -301,6 +317,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "serve" => cmd_serve(&params, &args),
+        "lint" => cmd_lint(&args),
         "run" => {
             let path = args
                 .positional(1)
@@ -417,6 +434,7 @@ fn cmd_bench(
     let runner = if smoke { Runner { warmup: 0, samples: 1 } } else { Runner::default() };
     let measure = |kernel: &dyn SimKernel| {
         let s = runner.bench(&format!("bench/native {} kernel (n_mc = {n_mc})", kernel.name()), || {
+            // lint:allow(D4): timing closure cannot propagate errors; spec is pre-validated
             run_native_campaign_with(params, &spec, kernel).expect("campaign")
         });
         s.per_second(n_items)
@@ -507,6 +525,31 @@ fn cmd_serve(params: &Params, args: &Args) -> Result<()> {
     );
     println!("endpoints: POST /v1/mc /v1/sweep/point /v1/infer ; GET /v1/health /v1/stats");
     server.join();
+    Ok(())
+}
+
+/// `smart lint`: run the determinism/robustness analyzer (DESIGN.md
+/// §12) over `rust/src` (or explicit paths), print the findings panel,
+/// optionally write the canonical `LINT_report.json`, and exit nonzero
+/// on any unsuppressed finding — the CI gate contract.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use smart_insram::lint;
+    let cfg = lint::LintConfig::load(std::path::Path::new("configs/lint.toml"))?;
+    let paths: Vec<PathBuf> =
+        args.positionals().iter().skip(1).map(PathBuf::from).collect();
+    let r = lint::run(std::path::Path::new("."), &paths, &cfg)?;
+    print!("{}", report::lint_panel(&r));
+    if args.flag("json") {
+        let out: PathBuf = args.opt("out").map(PathBuf::from).unwrap_or_else(|| ".".into());
+        std::fs::create_dir_all(&out)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", out.display()))?;
+        let path = out.join("LINT_report.json");
+        std::fs::write(&path, r.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
+    let open = r.unsuppressed_count();
+    anyhow::ensure!(open == 0, "{open} unsuppressed lint finding(s)");
     Ok(())
 }
 

@@ -70,6 +70,7 @@ impl Histogram {
             .iter()
             .enumerate()
             .max_by_key(|(_, &c)| c)
+            // lint:allow(D4): bins.len() >= 1 is a constructor invariant
             .expect("non-empty bins");
         self.bin_center(i)
     }

@@ -51,7 +51,9 @@ impl SampleSet {
 
     fn std_of(xs: &[f64]) -> f64 {
         let n = xs.len() as f64;
+        // lint:allow(D2): folds a slice already in canonical sorted order
         let mean = xs.iter().sum::<f64>() / n;
+        // lint:allow(D2): folds a slice already in canonical sorted order
         (xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n).sqrt()
     }
 

@@ -22,14 +22,16 @@ impl LayerSpec {
     /// Parse one `[[layers]]` table: `inputs`/`outputs` required,
     /// `relu` optional (default false).
     pub fn from_value(v: &Value) -> Result<Self> {
-        let dim = |k: &str| {
-            v.get(k)
+        let dim = |k: &str| -> anyhow::Result<usize> {
+            let n = v
+                .get(k)
                 .and_then(Value::as_u64)
-                .ok_or_else(|| anyhow::anyhow!("layers.{k} missing or not an integer"))
+                .ok_or_else(|| anyhow::anyhow!("layers.{k} missing or not an integer"))?;
+            usize::try_from(n).map_err(|_| anyhow::anyhow!("layers.{k} = {n} exceeds usize"))
         };
         Ok(Self {
-            inputs: dim("inputs")? as usize,
-            outputs: dim("outputs")? as usize,
+            inputs: dim("inputs")?,
+            outputs: dim("outputs")?,
             relu: v.get("relu").and_then(Value::as_bool).unwrap_or(false),
         })
     }

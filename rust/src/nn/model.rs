@@ -40,14 +40,16 @@ pub struct DatasetSpec {
 impl DatasetSpec {
     /// Parse the `[dataset]` table.
     pub fn from_value(v: &Value) -> Result<Self> {
-        let dim = |k: &str| {
-            v.get(k)
+        let dim = |k: &str| -> anyhow::Result<usize> {
+            let n = v
+                .get(k)
                 .and_then(Value::as_u64)
-                .ok_or_else(|| anyhow::anyhow!("dataset.{k} missing or not an integer"))
+                .ok_or_else(|| anyhow::anyhow!("dataset.{k} missing or not an integer"))?;
+            usize::try_from(n).map_err(|_| anyhow::anyhow!("dataset.{k} = {n} exceeds usize"))
         };
         Ok(Self {
-            classes: dim("classes")? as usize,
-            features: dim("features")? as usize,
+            classes: dim("classes")?,
+            features: dim("features")?,
             jitter: v.get("jitter").and_then(Value::as_f64).unwrap_or(0.15),
         })
     }
@@ -88,6 +90,7 @@ pub struct ModelSpec {
 impl ModelSpec {
     /// The embedded tiny fixture model (no external file needed).
     pub fn fixture() -> Self {
+        // lint:allow(D4): compile-time-embedded fixture; failure is a build defect, not input
         Self::parse(FIXTURE_TOML).expect("embedded fixture model parses")
     }
 
@@ -180,11 +183,13 @@ impl ModelSpec {
                 self.dataset.features, self.layers[0].inputs
             ));
         }
-        if self.layers.last().unwrap().outputs != self.dataset.classes {
+        let Some(last) = self.layers.last() else {
+            return Err("model needs at least one [[layers]] entry".into());
+        };
+        if last.outputs != self.dataset.classes {
             return Err(format!(
                 "last layer outputs {} != dataset.classes {}",
-                self.layers.last().unwrap().outputs,
-                self.dataset.classes
+                last.outputs, self.dataset.classes
             ));
         }
         if self.dataset.features < self.dataset.classes {

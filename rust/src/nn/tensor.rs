@@ -64,6 +64,7 @@ impl Tensor {
     /// Largest absolute element (0 for an empty tensor) — the symmetric
     /// quantizer's calibration statistic.
     pub fn max_abs(&self) -> f64 {
+        // lint:allow(D2): max() fold is order-insensitive — no rounding accumulation
         self.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
     }
 

@@ -144,6 +144,7 @@ impl<'a> Tiler<'a> {
                 let prod = (i64::from(a) * i64::from(b) + delta).clamp(0, 225);
                 let sign: i64 = if (wq < 0) != (xq < 0) { -1 } else { 1 };
                 acc[j] += sign * (prod << (4 * (pw + xw)));
+                // lint:allow(D2): energy folds in fixed lane order within one tile
                 energy += f64::from(self.block.out.energy[lane]);
                 faults += u64::from(self.block.out.fault[lane] > 0.5);
             }

@@ -147,13 +147,24 @@ impl CircuitCard {
         c.c_blb = get("c_blb")?;
         c.wl_max = get("wl_max")?;
         c.t_sample = get("t_sample")?;
-        c.n_steps = get("n_steps")? as u32;
-        c.n_bits = get("n_bits")? as u32;
+        c.n_steps = count_u32("circuit.n_steps", get("n_steps")?)?;
+        c.n_bits = count_u32("circuit.n_bits", get("n_bits")?)?;
         c.v_bulk_smart = get("v_bulk_smart")?;
         c.sigma_vth = get("sigma_vth")?;
         c.sigma_beta = get("sigma_beta")?;
         Ok(c)
     }
+}
+
+/// Checked conversion for spec-provided counts: rejects negatives,
+/// fractions, and out-of-range values instead of silently truncating
+/// through an `as` cast.
+fn count_u32(key: &str, x: f64) -> anyhow::Result<u32> {
+    anyhow::ensure!(
+        x.is_finite() && x.fract() == 0.0 && x >= 0.0 && x <= f64::from(u32::MAX),
+        "{key} = {x} is not a valid count (need an integer in 0..=u32::MAX)"
+    );
+    Ok(x as u32)
 }
 
 /// Complete model card (device + circuit).
@@ -233,8 +244,8 @@ impl Params {
                     ("sigma_beta", &mut c.sigma_beta),
                 ],
             )?;
-            c.n_steps = n_steps as u32;
-            c.n_bits = n_bits as u32;
+            c.n_steps = count_u32("circuit.n_steps", n_steps)?;
+            c.n_bits = count_u32("circuit.n_bits", n_bits)?;
         }
         Ok(())
     }

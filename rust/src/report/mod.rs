@@ -306,6 +306,39 @@ pub fn infer_panel(r: &crate::nn::InferReport) -> String {
     s
 }
 
+/// Render a lint run (`smart lint`) as a markdown panel: unsuppressed
+/// findings as a table (these fail the build), then a per-rule tally of
+/// the reasoned suppressions so the allowlist stays visible.
+pub fn lint_panel(r: &crate::lint::LintReport) -> String {
+    let mut s = String::new();
+    let open: Vec<&crate::lint::Finding> = r.unsuppressed().collect();
+    let suppressed = r.findings.len() - open.len();
+    let _ = writeln!(
+        s,
+        "## smart lint — {} file(s), {} finding(s) ({} unsuppressed, {} suppressed)",
+        r.files,
+        r.findings.len(),
+        open.len(),
+        suppressed
+    );
+    if open.is_empty() {
+        let _ = writeln!(s, "clean: determinism invariants D1-D6 hold (DESIGN.md §12)");
+    } else {
+        let _ = writeln!(s, "| rule | location | note |");
+        let _ = writeln!(s, "|---|---|---|");
+        for f in &open {
+            let _ = writeln!(s, "| {} | {} | {} |", f.rule.id(), f.location(), f.note);
+        }
+    }
+    for rule in crate::lint::RULES {
+        let n = r.findings.iter().filter(|f| f.rule == rule && f.suppressed.is_some()).count();
+        if n > 0 {
+            let _ = writeln!(s, "suppressed {}: {} ({})", rule.id(), n, rule.summary());
+        }
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -408,6 +441,31 @@ mod tests {
         assert!(!a.contains("\"shards\""));
         assert!(crate::util::json::parse(&a).is_ok());
         assert!(a.ends_with('\n'));
+    }
+
+    #[test]
+    fn lint_panel_tables_open_findings_and_tallies_suppressions() {
+        use crate::lint::{Finding, LintReport, Rule};
+        let mk = |rule, line, suppressed: Option<&str>| Finding {
+            rule,
+            path: "rust/src/x.rs".to_string(),
+            line,
+            note: "note".to_string(),
+            suppressed: suppressed.map(str::to_string),
+        };
+        let r = LintReport {
+            findings: vec![
+                mk(Rule::PanicPath, 3, None),
+                mk(Rule::WallClock, 9, Some("console-only")),
+            ],
+            files: 1,
+        };
+        let s = lint_panel(&r);
+        assert!(s.contains("1 unsuppressed, 1 suppressed"), "{s}");
+        assert!(s.contains("| D4 | rust/src/x.rs:3 |"), "{s}");
+        assert!(s.contains("suppressed D6: 1"), "{s}");
+        let clean = lint_panel(&LintReport { findings: vec![], files: 2 });
+        assert!(clean.contains("clean"), "{clean}");
     }
 
     #[test]

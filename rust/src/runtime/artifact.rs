@@ -67,10 +67,13 @@ impl Manifest {
                 .iter()
                 .map(|x| {
                     x.as_u64()
-                        .map(|n| n as usize)
+                        .and_then(|n| usize::try_from(n).ok())
                         .ok_or_else(|| anyhow::anyhow!("bad entry in '{key}'"))
                 })
                 .collect()
+        };
+        let to_usize = |key: &str, n: u64| -> Result<usize> {
+            usize::try_from(n).map_err(|_| anyhow::anyhow!("manifest '{key}' = {n} exceeds usize"))
         };
         let mut artifacts = Vec::new();
         for a in v
@@ -88,12 +91,17 @@ impl Manifest {
                 name: s("name")?,
                 path: s("path")?,
                 kind: s("kind")?,
-                batch: a
-                    .get("batch")
+                batch: to_usize(
+                    "batch",
+                    a.get("batch")
+                        .and_then(Value::as_u64)
+                        .ok_or_else(|| anyhow::anyhow!("artifact 'batch' missing"))?,
+                )?,
+                n_points: a
+                    .get("n_points")
                     .and_then(Value::as_u64)
-                    .ok_or_else(|| anyhow::anyhow!("artifact 'batch' missing"))?
-                    as usize,
-                n_points: a.get("n_points").and_then(Value::as_u64).map(|n| n as usize),
+                    .map(|n| to_usize("n_points", n))
+                    .transpose()?,
             });
         }
         let dot_batches = if v.get("dot_batches").is_some() {
@@ -101,17 +109,26 @@ impl Manifest {
         } else {
             Vec::new()
         };
+        let mac_batches = usizes("mac_batches")?;
+        anyhow::ensure!(
+            !mac_batches.is_empty(),
+            "manifest 'mac_batches' is empty — the artifact bundle has no MAC kernel"
+        );
         Ok(Self {
             artifacts,
-            mac_batches: usizes("mac_batches")?,
+            mac_batches,
             trace_batches: usizes("trace_batches")?,
             dot_batches,
-            dot_rows: v.get("dot_rows").and_then(Value::as_u64).unwrap_or(0) as usize,
-            trace_points: v
-                .get("trace_points")
-                .and_then(Value::as_u64)
-                .unwrap_or(0) as usize,
-            n_steps: v.get("n_steps").and_then(Value::as_u64).unwrap_or(0) as u32,
+            dot_rows: to_usize("dot_rows", v.get("dot_rows").and_then(Value::as_u64).unwrap_or(0))?,
+            trace_points: to_usize(
+                "trace_points",
+                v.get("trace_points").and_then(Value::as_u64).unwrap_or(0),
+            )?,
+            n_steps: {
+                let n = v.get("n_steps").and_then(Value::as_u64).unwrap_or(0);
+                u32::try_from(n)
+                    .map_err(|_| anyhow::anyhow!("manifest 'n_steps' = {n} exceeds u32"))?
+            },
             params: None,
         })
     }

@@ -129,11 +129,12 @@ impl MacExecutable {
         let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
         anyhow::ensure!(tuple.len() == 4, "expected 4 outputs, got {}", tuple.len());
         let mut it = tuple.into_iter();
+        let mut next = || it.next().ok_or_else(|| anyhow::anyhow!("output tuple ended early"));
         let out = MacBatchOut {
-            v_mult: it.next().unwrap().to_vec::<f32>()?,
-            v_blb: it.next().unwrap().to_vec::<f32>()?,
-            energy: it.next().unwrap().to_vec::<f32>()?,
-            fault: it.next().unwrap().to_vec::<f32>()?,
+            v_mult: next()?.to_vec::<f32>()?,
+            v_blb: next()?.to_vec::<f32>()?,
+            energy: next()?.to_vec::<f32>()?,
+            fault: next()?.to_vec::<f32>()?,
         };
         anyhow::ensure!(out.v_mult.len() == b && out.v_blb.len() == b * 4);
         Ok(out)
@@ -259,11 +260,12 @@ impl DotExecutable {
         let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
         anyhow::ensure!(tuple.len() == 4, "expected 4 outputs, got {}", tuple.len());
         let mut it = tuple.into_iter();
+        let mut next = || it.next().ok_or_else(|| anyhow::anyhow!("output tuple ended early"));
         let out = DotBatchOut {
-            v_dot: it.next().unwrap().to_vec::<f32>()?,
-            v_bl: it.next().unwrap().to_vec::<f32>()?,
-            energy: it.next().unwrap().to_vec::<f32>()?,
-            fault: it.next().unwrap().to_vec::<f32>()?,
+            v_dot: next()?.to_vec::<f32>()?,
+            v_bl: next()?.to_vec::<f32>()?,
+            energy: next()?.to_vec::<f32>()?,
+            fault: next()?.to_vec::<f32>()?,
         };
         anyhow::ensure!(out.v_dot.len() == b && out.v_bl.len() == b * 4);
         Ok(out)
@@ -365,6 +367,7 @@ impl XlaRuntime {
             .filter(|&b| b <= n)
             .max()
             .or_else(|| self.manifest.mac_batches.iter().copied().min())
+            // lint:allow(D4): Manifest::parse rejects empty mac_batches, so min() is always Some
             .expect("manifest has at least one mac batch")
     }
 

@@ -8,12 +8,13 @@
 //! returns bytes identical to what the campaign stack would recompute.
 //!
 //! Sharding bounds lock contention: a key hashes (FNV-1a) to one shard,
-//! each shard is an independent `Mutex<HashMap>` with its own logical
+//! each shard is an independent `Mutex<BTreeMap>` with its own logical
 //! clock, and eviction removes the shard's least-recently-used entry by
 //! linear scan — caps are service-sized (hundreds), so O(cap) eviction
-//! is cheaper than maintaining an intrusive list.
+//! is cheaper than maintaining an intrusive list. The ordered map keeps
+//! every walk (eviction scans, stats) deterministic by construction.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -27,7 +28,7 @@ struct Entry {
 
 /// One independent LRU shard.
 struct Shard {
-    map: HashMap<String, Entry>,
+    map: BTreeMap<String, Entry>,
     clock: u64,
 }
 
@@ -48,7 +49,7 @@ impl ResultCache {
         let n_shards = n_shards.max(1);
         let cap_per_shard = capacity.max(1).div_ceil(n_shards);
         let shards = (0..n_shards)
-            .map(|_| Mutex::new(Shard { map: HashMap::new(), clock: 0 }))
+            .map(|_| Mutex::new(Shard { map: BTreeMap::new(), clock: 0 }))
             .collect();
         Self {
             shards,
@@ -65,7 +66,9 @@ impl ResultCache {
 
     /// Look up a canonical key; a hit refreshes its recency.
     pub fn get(&self, key: &str) -> Option<Arc<String>> {
-        let mut s = self.shard(key).lock().unwrap();
+        // A poisoned shard only means a sibling panicked mid-update; the
+        // map holds complete immutable bodies, so recover and keep serving.
+        let mut s = self.shard(key).lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         s.clock += 1;
         let clock = s.clock;
         match s.map.get_mut(key) {
@@ -86,7 +89,7 @@ impl ResultCache {
     /// the same key may both insert — the bodies are deterministic and
     /// byte-identical, so last-writer-wins is harmless.
     pub fn put(&self, key: &str, body: Arc<String>) {
-        let mut s = self.shard(key).lock().unwrap();
+        let mut s = self.shard(key).lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         s.clock += 1;
         let clock = s.clock;
         if !s.map.contains_key(key) && s.map.len() >= self.cap_per_shard {
@@ -105,7 +108,10 @@ impl ResultCache {
 
     /// Entries currently cached (sum over shards).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(std::sync::PoisonError::into_inner).map.len())
+            .sum()
     }
 
     /// True when no entry is cached.

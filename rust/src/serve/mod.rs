@@ -225,7 +225,10 @@ fn worker_loop(
     loop {
         // hold the lock only while dequeuing (same pattern as the PJRT
         // WorkerPool): handling runs fully in parallel
-        let conn = { conn_rx.lock().unwrap().recv() };
+        // catch_unwind below means handlers cannot poison this lock, but
+        // recover anyway rather than wedge the accept loop
+        let conn =
+            { conn_rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner).recv() };
         let Ok(mut stream) = conn else { break };
         // A panic anywhere in request handling must cost one request,
         // not one worker: without this, `--workers` poisoned requests
@@ -479,7 +482,10 @@ pub fn self_test(params: &Params, workers: usize, smoke: bool) -> Result<SelfTes
             .collect();
         handles
             .into_iter()
-            .filter_map(|h| h.join().expect("self-test client panicked").err())
+            .filter_map(|h| match h.join() {
+                Ok(outcome) => outcome.err(),
+                Err(_) => Some("self-test client panicked".to_string()),
+            })
             .collect()
     });
     anyhow::ensure!(failures.is_empty(), "self-test clients failed: {}", failures.join("; "));

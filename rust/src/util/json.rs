@@ -197,7 +197,9 @@ impl<'a> Parser<'a> {
                     // consume one UTF-8 scalar
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let ch = rest.chars().next().unwrap();
+                    let Some(ch) = rest.chars().next() else {
+                        return Err(self.err("unterminated string"));
+                    };
                     s.push(ch);
                     self.i += ch.len_utf8();
                 }
@@ -216,7 +218,8 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("invalid utf-8 in number"))?;
         text.parse::<f64>()
             .map(Value::Num)
             .map_err(|_| ParseError { msg: format!("bad number '{text}'"), offset: start })
@@ -295,6 +298,7 @@ fn write_value(v: &Value, indent: usize, out: &mut String) {
                 // produce a document parse() itself rejects
                 out.push_str("null");
             } else if n.fract() == 0.0 && n.abs() < 1e15 {
+                // lint:allow(D3): fract() == 0 and |n| < 1e15 make the i64 conversion exact
                 out.push_str(&format!("{}", n as i64));
             } else {
                 out.push_str(&format!("{n}"));

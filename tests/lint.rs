@@ -1,0 +1,181 @@
+//! Integration tests for `smart lint` (DESIGN.md §12): every rule on an
+//! inline fixture (positive hit, pragma suppression, comment/string
+//! immunity), the repo's own sources staying lint-clean, and the CLI
+//! exit/report contract on a seeded violation.
+
+use std::path::Path;
+
+use smart_insram::lint::{self, lint_source, LintConfig, Rule};
+
+/// One triggering fixture per rule: `(rule, source, line of the hit)`.
+/// Each source produces EXACTLY one finding, on the stated line.
+fn fixtures() -> Vec<(Rule, &'static str, u32)> {
+    vec![
+        (
+            Rule::MapIteration,
+            "fn f() -> u32 {\n    let m: std::collections::HashMap<u32, u32> = Default::default();\n    let mut total = 0u32;\n    for v in m.values() {\n        total += v;\n    }\n    total\n}\n",
+            4,
+        ),
+        (
+            Rule::FloatAccum,
+            "fn f(xs: &[f64]) -> f64 {\n    let mut acc = 0.0;\n    for x in xs {\n        acc += x;\n    }\n    acc\n}\n",
+            4,
+        ),
+        (Rule::NarrowingCast, "fn parse_count(n: u64) -> u32 {\n    n as u32\n}\n", 2),
+        (Rule::PanicPath, "fn f(o: Option<u8>) -> u8 {\n    o.unwrap()\n}\n", 2),
+        (
+            Rule::FloatFormat,
+            "fn show(x: f64) -> String {\n    format!(\"{x:.3}\")\n}\n",
+            2,
+        ),
+        (
+            Rule::WallClock,
+            "fn f() -> std::time::Instant {\n    std::time::Instant::now()\n}\n",
+            2,
+        ),
+    ]
+}
+
+#[test]
+fn every_rule_fires_on_its_fixture() {
+    let cfg = LintConfig::default();
+    for (rule, src, line) in fixtures() {
+        let fs = lint_source("fixture.rs", src, &cfg);
+        assert_eq!(fs.len(), 1, "{}: expected one finding, got {fs:?}", rule.id());
+        assert_eq!(fs[0].rule, rule, "{}: wrong rule: {fs:?}", rule.id());
+        assert_eq!(fs[0].line, line, "{}: wrong line: {fs:?}", rule.id());
+        assert!(fs[0].suppressed.is_none(), "{}: should be open", rule.id());
+        assert_eq!(fs[0].location(), format!("fixture.rs:{line}"));
+    }
+}
+
+#[test]
+fn a_reasoned_pragma_suppresses_each_rule_without_d0_noise() {
+    let cfg = LintConfig::default();
+    for (rule, src, line) in fixtures() {
+        // splice `// lint:allow(Dn): reason` directly above the hit line
+        let mut lines: Vec<&str> = src.lines().collect();
+        let pragma = format!("// lint:allow({}): fixture justification", rule.id());
+        lines.insert(line as usize - 1, &pragma);
+        let patched = lines.join("\n");
+        let fs = lint_source("fixture.rs", &patched, &cfg);
+        assert_eq!(fs.len(), 1, "{}: {fs:?}", rule.id());
+        assert_eq!(
+            fs[0].suppressed.as_deref(),
+            Some("fixture justification"),
+            "{}: pragma did not suppress: {fs:?}",
+            rule.id()
+        );
+    }
+}
+
+#[test]
+fn rule_tokens_in_comments_and_strings_are_ignored() {
+    let cfg = LintConfig::default();
+    let src = "// prose: HashMap iteration, .unwrap(), panic!, Instant::now(), {x:.3}\n\
+               /* block prose: acc += x; n as u32; m.values() */\n\
+               fn f() -> &'static str {\n    \
+                   \".unwrap() and {x:.3} and Instant::now() inside a string\"\n\
+               }\n";
+    let fs = lint_source("fixture.rs", src, &cfg);
+    assert!(fs.is_empty(), "prose should never fire rules: {fs:?}");
+}
+
+#[test]
+fn test_code_is_masked() {
+    let cfg = LintConfig::default();
+    let src = "#[cfg(test)]\nmod tests {\n    fn helper(o: Option<u8>) -> u8 {\n        o.unwrap()\n    }\n}\n";
+    let fs = lint_source("fixture.rs", src, &cfg);
+    assert!(fs.is_empty(), "#[cfg(test)] bodies are out of scope: {fs:?}");
+    let src = "#[test]\nfn t() {\n    let x: Option<u8> = None;\n    x.unwrap();\n}\n";
+    let fs = lint_source("fixture.rs", src, &cfg);
+    assert!(fs.is_empty(), "#[test] bodies are out of scope: {fs:?}");
+}
+
+#[test]
+fn allowlist_suppresses_by_path_suffix_and_carries_its_reason() {
+    let cfg = LintConfig {
+        roots: vec!["rust/src".to_string()],
+        allows: vec![lint::AllowEntry {
+            rule: Rule::PanicPath,
+            path: "sub/fixture.rs".to_string(),
+            reason: "fixture file-level waiver".to_string(),
+        }],
+    };
+    let src = "fn f(o: Option<u8>) -> u8 {\n    o.unwrap()\n}\n";
+    let fs = lint_source("rust/src/sub/fixture.rs", src, &cfg);
+    assert_eq!(fs.len(), 1);
+    assert_eq!(fs[0].suppressed.as_deref(), Some("fixture file-level waiver"));
+    // a different file stays open
+    let fs = lint_source("rust/src/other.rs", src, &cfg);
+    assert!(fs[0].suppressed.is_none());
+}
+
+#[test]
+fn unused_pragmas_are_d0_and_never_suppressible() {
+    let cfg = LintConfig::default();
+    let fs = lint_source("fixture.rs", "// lint:allow(D4): suppresses nothing\nfn f() {}\n", &cfg);
+    assert_eq!(fs.len(), 1, "{fs:?}");
+    assert_eq!(fs[0].rule, Rule::Pragma);
+    assert!(fs[0].suppressed.is_none());
+}
+
+/// The acceptance criterion of DESIGN.md §12: the repository's own
+/// sources produce zero unsuppressed findings under the checked-in
+/// `configs/lint.toml`.
+#[test]
+fn repo_sources_are_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = LintConfig::load(&root.join("configs/lint.toml")).expect("lint.toml parses");
+    let report = lint::run(root, &[], &cfg).expect("lint runs over rust/src");
+    assert!(report.files >= 40, "scanned only {} files", report.files);
+    let open: Vec<String> = report
+        .unsuppressed()
+        .map(|f| format!("{} {} — {}", f.rule, f.location(), f.note))
+        .collect();
+    assert!(open.is_empty(), "unsuppressed lint findings at HEAD:\n{}", open.join("\n"));
+    // the canonical report parses and is stable under re-serialization
+    let json = report.to_json();
+    assert!(smart_insram::util::json::parse(&json).is_ok());
+    assert_eq!(json, report.to_json());
+}
+
+/// CLI contract: nonzero exit on a seeded violation, rule id and
+/// `file:line` in the panel, and `LINT_report.json` written via `--json`.
+#[test]
+fn cli_fails_with_rule_id_and_location_on_seeded_fixture() {
+    let dir = std::env::temp_dir().join(format!("smart_lint_cli_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let fixture = dir.join("seeded.rs");
+    std::fs::write(&fixture, "fn f(o: Option<u8>) -> u8 { o.unwrap() }\n").expect("fixture");
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_smart"))
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args(["lint", "--json", "--out"])
+        .arg(&dir)
+        .arg(&fixture)
+        .output()
+        .expect("smart lint runs");
+    assert!(!out.status.success(), "seeded violation must fail the lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("D4"), "panel names the rule id:\n{stdout}");
+    assert!(stdout.contains("seeded.rs:1"), "panel names file:line:\n{stdout}");
+    let json = std::fs::read_to_string(dir.join("LINT_report.json")).expect("report written");
+    assert!(json.contains("\"D4\""), "{json}");
+    assert!(json.contains("\"unsuppressed\": 1"), "{json}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CLI contract: the full repo run under the checked-in config exits 0.
+#[test]
+fn cli_is_clean_at_head() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_smart"))
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .arg("lint")
+        .output()
+        .expect("smart lint runs");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "lint must be clean at HEAD\n{stdout}\n{stderr}");
+}
