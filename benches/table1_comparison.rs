@@ -34,6 +34,7 @@ fn main() {
             batch: 0,
             shards: 0,
             block: 0,
+            kernel: smart_insram::mac::KernelKind::Block,
         };
         run_campaign(&params, &spec, backend, Some(dir.clone())).expect("campaign")
     };
@@ -93,6 +94,7 @@ fn main() {
                 batch: 256,
                 shards: 0,
                 block: 0,
+                kernel: smart_insram::mac::KernelKind::Block,
             };
             let s = r.bench(&format!("table1/{} (warm engine)", v.name()), || {
                 engine.run(&params, &spec).unwrap()

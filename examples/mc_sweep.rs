@@ -77,6 +77,7 @@ fn main() -> Result<()> {
             batch: 256,
             shards: 0,
             block: 0,
+            kernel: smart_insram::mac::KernelKind::Block,
         };
         let r = engine.run(&params, &spec)?;
         println!(

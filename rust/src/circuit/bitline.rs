@@ -208,6 +208,42 @@ pub fn discharge_block(
     }
 }
 
+/// Integrate ONE hoisted cell lane — the entry point the fast surrogate
+/// kernel uses for its exact fallback and for building its endpoint
+/// tables (DESIGN.md §13).
+///
+/// Takes the same hoisted time-invariant quantities as one lane of
+/// [`discharge_block`] (overdrive `vov`, effective beta as
+/// [`Mosfet::beta`] returns it, conduction gate) and steps the identical
+/// Euler recurrence with the identical expression grouping, so the
+/// endpoint is bit-identical to that lane's treatment inside
+/// [`discharge`] / [`discharge_block`].
+pub fn discharge_lane(
+    p: &Params,
+    vov: f64,
+    beta: f64,
+    gate: f64,
+    t_total: f64,
+    n_steps: u32,
+) -> f64 {
+    let card = &p.device;
+    let dt_c = (t_total / n_steps as f64) / p.circuit.c_blb;
+    if vov >= 3.0 * card.vt_thermal {
+        // strong inversion: square law only (see drain_current_vov proof)
+        let lam = card.lam;
+        let half_bv2 = 0.5 * beta * vov * vov;
+        let mut v = card.vdd;
+        for _ in 0..n_steps {
+            let clm = 1.0 + lam * v;
+            let i = if v >= vov { half_bv2 * clm } else { beta * (vov - 0.5 * v) * v * clm };
+            v = (v - i.max(0.0) * gate * dt_c).max(0.0);
+        }
+        v
+    } else {
+        discharge_lane_weak(card, vov, beta, gate, dt_c, n_steps)
+    }
+}
+
 /// One weak/cutoff lane: the Euler recurrence of [`discharge`]'s
 /// non-hoisted branch, with the current expression replicated term for
 /// term from [`Mosfet::drain_current_vov`] below the `3*vt` cut (the
@@ -372,6 +408,44 @@ mod tests {
         );
         for (k, (g, w)) in got.iter().zip(&want).enumerate() {
             assert_eq!(g.to_bits(), w.to_bits(), "lane {k}: {g} != {w}");
+        }
+    }
+
+    #[test]
+    fn lane_matches_scalar_discharge_bit_for_bit() {
+        // `discharge_lane` is the fast kernel's exact fallback: for every
+        // operating region it must reproduce the scalar `discharge` path
+        // (and therefore the block path) bit for bit.
+        let p = Params::default();
+        let card = p.device;
+        let cases: [(f64, bool, f64, f64, f64); 6] = [
+            (0.70, true, 0.6, 0.0, 0.0),    // strong
+            (0.70, true, 0.0, 2e-3, 0.01),  // strong, mismatched
+            (0.33, true, 0.0, 0.0, 0.0),    // weak inversion
+            (0.10, true, 0.0, -1e-3, 0.0),  // cutoff
+            (0.70, false, 0.6, 0.0, -0.02), // leakage gate
+            (0.00, true, 0.0, 0.0, 0.0),    // grounded WL
+        ];
+        for &(v_wl, bit, v_bulk, dvth, dbeta) in &cases {
+            let dev = Mosfet::with_mismatch(card, dvth, dbeta);
+            let vov = v_wl - dev.vth(v_bulk);
+            let gate = if bit { 1.0 } else { dev.card.k_leak };
+            let want = discharge(
+                &p,
+                &dev,
+                &inputs(v_wl, bit, v_bulk),
+                p.circuit.t_sample,
+                p.circuit.n_steps,
+            );
+            let got = discharge_lane(
+                &p,
+                vov,
+                dev.beta(),
+                gate,
+                p.circuit.t_sample,
+                p.circuit.n_steps,
+            );
+            assert_eq!(got.to_bits(), want.to_bits(), "v_wl={v_wl}: {got} != {want}");
         }
     }
 

@@ -11,6 +11,8 @@ mod bitline;
 mod integrator;
 mod waveform;
 
-pub use bitline::{discharge, discharge_block, discharge_trace, discharge_word, BitlineInputs};
+pub use bitline::{
+    discharge, discharge_block, discharge_lane, discharge_trace, discharge_word, BitlineInputs,
+};
 pub use integrator::{integrate_adaptive, integrate_fixed, Method};
 pub use waveform::Waveform;

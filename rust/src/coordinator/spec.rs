@@ -1,6 +1,6 @@
 //! Campaign specification: what to run, reproducibly.
 
-use crate::mac::Variant;
+use crate::mac::{KernelKind, Variant};
 use crate::montecarlo::Corner;
 use crate::util::json::Value;
 
@@ -189,6 +189,11 @@ pub struct CampaignSpec {
     /// knob if set, else 256). Any value produces bit-identical
     /// aggregates; this only tunes SIMD width vs memory footprint.
     pub block: usize,
+    /// Simulation kernel tier (DESIGN.md §13). Unlike
+    /// `workers`/`batch`/`shards`/`block` this is an **identity** field:
+    /// the fast tier is tolerance-bounded rather than bit-identical, so
+    /// the choice is recorded in artifacts and forks serve cache keys.
+    pub kernel: KernelKind,
 }
 
 impl CampaignSpec {
@@ -204,6 +209,7 @@ impl CampaignSpec {
             batch: 0,
             shards: 0,
             block: 0,
+            kernel: KernelKind::Block,
         }
     }
 
@@ -222,6 +228,10 @@ impl CampaignSpec {
         let u = |k: &str, default: u64| v.get(k).and_then(Value::as_u64).unwrap_or(default);
         let corner = match v.get("corner").and_then(Value::as_str) {
             None => Corner::Tt,
+            Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+        };
+        let kernel = match v.get("kernel").and_then(Value::as_str) {
+            None => KernelKind::Block,
             Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
         };
         // every narrowing is range-checked (no silent wrap for untrusted
@@ -243,6 +253,7 @@ impl CampaignSpec {
             batch: uz("batch", 0)?,
             shards: uz("shards", 0)?,
             block: uz("block", 0)?,
+            kernel,
         };
         spec.validate().map_err(|e| anyhow::anyhow!(e))?;
         Ok(spec)
@@ -261,6 +272,7 @@ impl CampaignSpec {
         s.push_str(&format!("batch = {}\n", self.batch));
         s.push_str(&format!("shards = {}\n", self.shards));
         s.push_str(&format!("block = {}\n", self.block));
+        s.push_str(&format!("kernel = \"{}\"\n", self.kernel.token()));
         s.push_str("[campaigns.workload]\n");
         match &self.workload {
             Workload::Fixed { a, b } => {
@@ -414,6 +426,7 @@ mod tests {
             spec.workers = 3;
             spec.shards = 8;
             spec.block = 192;
+            spec.kernel = KernelKind::Fast;
             let doc = toml_lite::parse(&spec.to_toml()).unwrap();
             let arr = doc.get("campaigns").unwrap().as_arr().unwrap();
             let back = CampaignSpec::from_value(&arr[0]).unwrap();
@@ -435,6 +448,7 @@ mod tests {
         assert_eq!(spec.workload, Workload::FullSweep);
         assert_eq!(spec.shards, 0);
         assert_eq!(spec.block, 0);
+        assert_eq!(spec.kernel, KernelKind::Block);
     }
 
     #[test]
@@ -462,5 +476,16 @@ mod tests {
         .unwrap();
         let c = &doc.get("campaigns").unwrap().as_arr().unwrap()[0];
         assert!(CampaignSpec::from_value(c).is_err());
+    }
+
+    #[test]
+    fn from_value_rejects_bad_kernel() {
+        let doc = toml_lite::parse(
+            "[[campaigns]]\nvariant = \"smart\"\nkernel = \"warp\"\n[campaigns.workload]\nkind = \"full_sweep\"\n",
+        )
+        .unwrap();
+        let c = &doc.get("campaigns").unwrap().as_arr().unwrap()[0];
+        let err = CampaignSpec::from_value(c).unwrap_err().to_string();
+        assert!(err.contains("unknown kernel 'warp'"), "{err}");
     }
 }

@@ -6,8 +6,8 @@
 //! how many Monte-Carlo samples each point draws. The CSV artifact doubles
 //! as the resume checkpoint: it is rewritten after every computed point,
 //! and with [`SweepOptions::resume`] set, rows whose (variant, vdd,
-//! v_bulk, bits, corner, n_mc, seed, card-fingerprint) key already
-//! exists in `sweep.csv` are reused instead of recomputed — so an
+//! v_bulk, bits, corner, kernel, n_mc, seed, card-fingerprint) key
+//! already exists in `sweep.csv` are reused instead of recomputed — so an
 //! interrupted sweep resumes from its last completed point, and a
 //! checkpoint from an edited spec (different seed, n_mc, or `[params.*]`
 //! overrides) is never reused. Because every stored number is
@@ -22,6 +22,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{run_campaign, Backend};
 use crate::dac::WordlineDac;
+use crate::mac::KernelKind;
 use crate::energy::EnergyModel;
 use crate::report::{canon, csv_cell};
 use crate::util::json::{self, Value};
@@ -29,9 +30,11 @@ use crate::util::json::{self, Value};
 use super::pareto::pareto_flags;
 use super::spec::{GridPoint, SweepSpec};
 
-/// Execution knobs of one sweep run (all orthogonal to the results:
-/// shards/threads/block are pure performance knobs, resume only skips
-/// work).
+/// Execution knobs of one sweep run. `shards`/`threads`/`block` are pure
+/// performance knobs and `resume` only skips work; `kernel` is an
+/// **identity** field — the fast tier is tolerance-bounded rather than
+/// bit-identical (DESIGN.md §13), so it enters every resume key and
+/// artifact row.
 #[derive(Debug, Clone)]
 pub struct SweepOptions {
     /// Shards per campaign (0 = auto) — forwarded to the campaign runner.
@@ -41,6 +44,8 @@ pub struct SweepOptions {
     /// Trial-block size per campaign (0 = auto) — lanes per SoA block of
     /// the block-execution path (DESIGN.md §9).
     pub block: usize,
+    /// Simulation kernel tier every grid point runs on (DESIGN.md §13).
+    pub kernel: KernelKind,
     /// Reuse rows already present in the output CSV (cheap checkpointing
     /// for long sweeps).
     pub resume: bool,
@@ -50,7 +55,14 @@ pub struct SweepOptions {
 
 impl Default for SweepOptions {
     fn default() -> Self {
-        Self { shards: 0, threads: 0, block: 0, resume: false, out_dir: PathBuf::from("target/dse") }
+        Self {
+            shards: 0,
+            threads: 0,
+            block: 0,
+            kernel: KernelKind::Block,
+            resume: false,
+            out_dir: PathBuf::from("target/dse"),
+        }
     }
 }
 
@@ -106,10 +118,12 @@ impl SweepResult {
     }
 }
 
-/// Column order of the CSV artifact; the first eight columns form the
+/// Column order of the CSV artifact; the first nine columns form the
 /// resume key (`card` fingerprints the base model card so edited
-/// `[params.*]` overrides invalidate old checkpoint rows).
-const CSV_HEADER: &str = "variant,vdd,v_bulk,bits,corner,n_mc,seed,card,rows,\
+/// `[params.*]` overrides invalidate old checkpoint rows; `kernel` makes
+/// rows computed on a different tier non-reusable). Checkpoints from the
+/// pre-kernel 16-column format fail the width check and recompute.
+const CSV_HEADER: &str = "variant,vdd,v_bulk,bits,corner,kernel,n_mc,seed,card,rows,\
 sigma_norm,rms_norm,ber,fault_rate,energy_pj,freq_mhz,pareto";
 
 /// Run every grid point of `spec` and write the CSV/JSON artifacts.
@@ -142,7 +156,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepResult> {
     let mut results: Vec<PointResult> = Vec::with_capacity(points.len());
     let (mut computed, mut resumed) = (0usize, 0usize);
     for point in &points {
-        let key = point_key(point, spec);
+        let key = point_key(point, spec, opts.kernel);
         if let Some(row) = prior.get(&key) {
             results.push(row.to_result(*point));
             resumed += 1;
@@ -156,15 +170,15 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepResult> {
             // them over the full grid — and resume ignores the flag
             // column anyway.
             let partial = flags_of(&results);
-            std::fs::write(&csv_path, render_csv(spec, &results, &partial))
+            std::fs::write(&csv_path, render_csv(spec, &results, &partial, opts.kernel))
                 .with_context(|| format!("checkpointing {}", csv_path.display()))?;
         }
     }
 
     let pareto = flags_of(&results);
-    std::fs::write(&csv_path, render_csv(spec, &results, &pareto))
+    std::fs::write(&csv_path, render_csv(spec, &results, &pareto, opts.kernel))
         .with_context(|| format!("writing {}", csv_path.display()))?;
-    std::fs::write(&json_path, sweep_json(spec, &results, &pareto))
+    std::fs::write(&json_path, sweep_json(spec, &results, &pareto, opts.kernel))
         .with_context(|| format!("writing {}", json_path.display()))?;
 
     Ok(SweepResult {
@@ -189,8 +203,14 @@ pub fn run_grid_point(
     opts: &SweepOptions,
 ) -> Result<PointResult> {
     let params = point.apply(&spec.params);
-    let cspec =
-        point.campaign_spec(spec.seed, spec.n_mc, opts.shards, opts.threads, opts.block);
+    let cspec = point.campaign_spec(
+        spec.seed,
+        spec.n_mc,
+        opts.shards,
+        opts.threads,
+        opts.block,
+        opts.kernel,
+    );
     let rep = run_campaign(&params, &cspec, Backend::Native, None)
         .with_context(|| format!("grid point {} ({})", point.index, point.label()))?;
 
@@ -220,19 +240,20 @@ pub fn run_grid_point(
     })
 }
 
-/// The canonical identity key of one grid point under one sweep spec:
-/// the first eight CSV columns, rendered exactly as the writer renders
-/// them (floats through [`csv_cell`]'s 6-significant-digit precision).
-/// Doubles as the `sweep.csv` resume key and the `smart serve` cache
-/// key for `POST /v1/sweep/point`.
-pub fn point_key(p: &GridPoint, spec: &SweepSpec) -> String {
+/// The canonical identity key of one grid point under one sweep spec and
+/// kernel tier: the first nine CSV columns, rendered exactly as the
+/// writer renders them (floats through [`csv_cell`]'s
+/// 6-significant-digit precision). Doubles as the `sweep.csv` resume key
+/// and the `smart serve` cache key for `POST /v1/sweep/point`.
+pub fn point_key(p: &GridPoint, spec: &SweepSpec, kernel: KernelKind) -> String {
     format!(
-        "{},{},{},{},{},{},{},{}",
+        "{},{},{},{},{},{},{},{},{}",
         p.variant.token(),
         csv_cell(p.vdd),
         csv_cell(p.v_bulk),
         p.bits,
         p.corner.name(),
+        kernel.token(),
         spec.n_mc,
         spec.seed,
         card_fingerprint(&spec.params)
@@ -269,7 +290,12 @@ fn card_fingerprint(p: &crate::params::Params) -> String {
     format!("{:016x}", crate::util::fnv1a(&canon))
 }
 
-fn render_csv(spec: &SweepSpec, results: &[PointResult], pareto: &[bool]) -> String {
+fn render_csv(
+    spec: &SweepSpec,
+    results: &[PointResult],
+    pareto: &[bool],
+    kernel: KernelKind,
+) -> String {
     let mut s = String::with_capacity(results.len() * 128 + CSV_HEADER.len() + 1);
     s.push_str(CSV_HEADER);
     s.push('\n');
@@ -277,7 +303,7 @@ fn render_csv(spec: &SweepSpec, results: &[PointResult], pareto: &[bool]) -> Str
         let _ = writeln!(
             s,
             "{},{},{},{},{},{},{},{},{}",
-            point_key(&r.point, spec),
+            point_key(&r.point, spec, kernel),
             r.rows,
             csv_cell(r.sigma_norm),
             csv_cell(r.rms_norm),
@@ -296,12 +322,19 @@ fn render_csv(spec: &SweepSpec, results: &[PointResult], pareto: &[bool]) -> Str
 /// [`run_grid_point`]). The single JSON encoder for sweep results: the
 /// CLI artifact writer and `smart serve`'s `POST /v1/sweep/point`
 /// responses both call it, so a served single-point sweep is
-/// byte-identical to the `smart sweep` artifact of the same spec.
-pub fn sweep_json(spec: &SweepSpec, results: &[PointResult], pareto: &[bool]) -> String {
+/// byte-identical to the `smart sweep` artifact of the same spec and
+/// kernel tier.
+pub fn sweep_json(
+    spec: &SweepSpec,
+    results: &[PointResult],
+    pareto: &[bool],
+    kernel: KernelKind,
+) -> String {
     let mut root = BTreeMap::new();
     root.insert("name".to_string(), Value::Str(spec.name.clone()));
     root.insert("seed".to_string(), Value::Num(spec.seed as f64));
     root.insert("n_mc".to_string(), Value::Num(f64::from(spec.n_mc)));
+    root.insert("kernel".to_string(), Value::Str(kernel.token().to_string()));
     root.insert("card".to_string(), Value::Str(card_fingerprint(&spec.params)));
     let pts: Vec<Value> = results
         .iter()
@@ -363,7 +396,7 @@ fn parse_resume_rows(text: &str) -> BTreeMap<String, ResumeRow> {
     let mut out = BTreeMap::new();
     for line in text.lines().skip(1) {
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 16 {
+        if f.len() != 17 {
             continue;
         }
         let cell = |s: &str| -> Option<f64> {
@@ -374,15 +407,15 @@ fn parse_resume_rows(text: &str) -> BTreeMap<String, ResumeRow> {
                 s.parse().ok()
             }
         };
-        let Ok(rows) = f[8].parse::<u64>() else { continue };
+        let Ok(rows) = f[9].parse::<u64>() else { continue };
         let (Some(sigma_norm), Some(rms_norm), Some(ber), Some(fault_rate)) =
-            (cell(f[9]), cell(f[10]), cell(f[11]), cell(f[12]))
+            (cell(f[10]), cell(f[11]), cell(f[12]), cell(f[13]))
         else {
             continue;
         };
-        let (Some(energy_pj), Some(freq_mhz)) = (cell(f[13]), cell(f[14])) else { continue };
+        let (Some(energy_pj), Some(freq_mhz)) = (cell(f[14]), cell(f[15])) else { continue };
         out.insert(
-            f[..8].join(","),
+            f[..9].join(","),
             ResumeRow { rows, sigma_norm, rms_norm, ber, fault_rate, energy_pj, freq_mhz },
         );
     }
@@ -417,24 +450,29 @@ mod tests {
             energy_pj: canon(0.783),
             freq_mhz: canon(250.0),
         };
-        let text = render_csv(&spec, &[r], &[true]);
+        let text = render_csv(&spec, &[r], &[true], KernelKind::Fast);
         let rows = parse_resume_rows(&text);
         assert_eq!(rows.len(), 1);
-        let key = point_key(&point, &spec);
+        let key = point_key(&point, &spec, KernelKind::Fast);
         let back = rows.get(&key).expect("key matches");
         assert_eq!(back.rows, 128);
         assert_eq!(back.sigma_norm.to_bits(), r.sigma_norm.to_bits());
         assert!(back.fault_rate.is_nan());
         // re-render from the parsed row: byte-identical
-        let again = render_csv(&spec, &[back.to_result(point)], &[true]);
+        let again = render_csv(&spec, &[back.to_result(point)], &[true], KernelKind::Fast);
         assert_eq!(text, again);
+        // a row computed on one kernel tier never resumes another
+        assert!(rows.get(&point_key(&point, &spec, KernelKind::Block)).is_none());
     }
 
     #[test]
     fn corrupt_resume_rows_are_skipped() {
         let text = "header\nnot,enough,cols\n\
-                    smart,1.000000e0,0.000000e0,4,tt,8,3,cafe,oops,1e-2,1e-2,0,0,1,250,0\n";
+                    smart,1.000000e0,0.000000e0,4,tt,block,8,3,cafe,oops,1e-2,1e-2,0,0,1,250,0\n";
         assert!(parse_resume_rows(text).is_empty());
+        // pre-kernel 16-column checkpoints fail the width check (recomputed)
+        let old = "header\nsmart,1.000000e0,0.000000e0,4,tt,8,3,cafe,128,1e-2,1e-2,0,0,1,250,0\n";
+        assert!(parse_resume_rows(old).is_empty());
     }
 
     #[test]

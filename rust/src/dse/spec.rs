@@ -11,7 +11,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{CampaignSpec, Workload};
-use crate::mac::Variant;
+use crate::mac::{KernelKind, Variant};
 use crate::montecarlo::Corner;
 use crate::params::Params;
 use crate::util::{json::Value, toml_lite};
@@ -98,8 +98,10 @@ impl GridPoint {
     }
 
     /// Campaign spec running this point's workload through the sharded
-    /// block-execution Monte-Carlo runner (`shards`/`threads`/`block` are
-    /// pure performance knobs — the artifacts never move).
+    /// block-execution Monte-Carlo runner. `shards`/`threads`/`block` are
+    /// pure performance knobs — the artifacts never move; `kernel` is an
+    /// identity field (the fast tier is tolerance-bounded, DESIGN.md §13)
+    /// and is recorded in every sweep row.
     pub fn campaign_spec(
         &self,
         seed: u64,
@@ -107,6 +109,7 @@ impl GridPoint {
         shards: usize,
         threads: usize,
         block: usize,
+        kernel: KernelKind,
     ) -> CampaignSpec {
         CampaignSpec {
             variant: self.variant,
@@ -118,6 +121,7 @@ impl GridPoint {
             batch: 0,
             shards,
             block,
+            kernel,
         }
     }
 
@@ -372,11 +376,12 @@ mod tests {
         let card = p.apply(&spec.params);
         assert_eq!(card.device.vdd, 0.9);
         assert_eq!(card.circuit.v_bulk_smart, 0.3);
-        let cspec = p.campaign_spec(spec.seed, spec.n_mc, 4, 2, 128);
+        let cspec = p.campaign_spec(spec.seed, spec.n_mc, 4, 2, 128, KernelKind::Fast);
         assert_eq!(cspec.n_mc, 16);
         assert_eq!(cspec.shards, 4);
         assert_eq!(cspec.workers, 2);
         assert_eq!(cspec.block, 128);
+        assert_eq!(cspec.kernel, KernelKind::Fast);
         assert!(cspec.validate().is_ok());
         assert!(p.label().contains("smart"));
     }

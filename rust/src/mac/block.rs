@@ -6,21 +6,29 @@
 //! deviates on the input side, per-lane `v_mult`/`v_blb`/`energy`/`fault`
 //! on the output side. Blocks are allocated once per shard and refilled
 //! in place, so the steady state of a campaign allocates nothing per
-//! item. Two kernels execute a block:
+//! item. Three kernels execute a block:
 //!
 //! * [`ScalarKernel`] — the oracle: one [`NativeMacEngine::mac`] call per
 //!   lane, numerically identical to the historical per-item path;
 //! * [`BlockKernel`] — [`NativeMacEngine::mac_block`]: hoists the
 //!   time-invariant device quantities once per lane and integrates every
 //!   lane in lockstep through
-//!   [`crate::circuit::discharge_block`].
+//!   [`crate::circuit::discharge_block`];
+//! * [`crate::mac::FastKernel`] — the surrogate tier (DESIGN.md §13):
+//!   replaces the per-step Euler loop with a closed-form saturation
+//!   endpoint plus per-configuration interpolation tables, accurate to a
+//!   *documented* tolerance instead of bit-identity.
 //!
-//! The two are bit-identical lane for lane (property-tested in
+//! The first two are bit-identical lane for lane (property-tested in
 //! `tests/block_kernel.rs`): deviates enter both through the same `f32`
 //! quantization the batch path uses, every per-lane recurrence is grouped
 //! exactly as the scalar expression tree, and outputs round to `f32` at
 //! the same point — so campaign aggregates and sweep artifacts do not
-//! move by a bit when the block path takes over.
+//! move by a bit when the block path takes over. The fast tier's
+//! endpoint error against the oracle is bounded by
+//! [`crate::mac::FAST_TOLERANCE`] (enforced in `tests/fast_kernel.rs`),
+//! which is why the kernel choice is an *identity* field on campaign
+//! specs rather than a performance knob.
 
 use crate::device::Mosfet;
 use crate::montecarlo::McSample;
@@ -80,21 +88,22 @@ impl MacResultBlock {
 #[derive(Debug, Clone, Default)]
 pub struct TrialBlock {
     n: usize,
-    a: Vec<u8>,
-    b: Vec<u8>,
-    pad: Vec<bool>,
-    dvth: Vec<f32>,
-    dbeta: Vec<f32>,
+    pub(super) a: Vec<u8>,
+    pub(super) b: Vec<u8>,
+    pub(super) pad: Vec<bool>,
+    pub(super) dvth: Vec<f32>,
+    pub(super) dbeta: Vec<f32>,
     /// DAC word-line voltage per lane, filled by the executing kernel
     /// (time-invariant during the transient).
-    v_wl: Vec<f64>,
-    // hoisted per-cell-lane quantities + active-lane map: kernel scratch,
-    // retained across refills so reuse allocates nothing
-    active: Vec<usize>,
-    vov: Vec<f64>,
-    beta: Vec<f64>,
-    gate: Vec<f64>,
-    v_lane: Vec<f64>,
+    pub(super) v_wl: Vec<f64>,
+    // hoisted per-cell-lane quantities + active-lane map: kernel scratch
+    // shared with the sibling fast kernel, retained across refills so
+    // reuse allocates nothing
+    pub(super) active: Vec<usize>,
+    pub(super) vov: Vec<f64>,
+    pub(super) beta: Vec<f64>,
+    pub(super) gate: Vec<f64>,
+    pub(super) v_lane: Vec<f64>,
     /// Per-lane outputs of the last kernel run.
     pub out: MacResultBlock,
 }

@@ -1,0 +1,590 @@
+//! The fast surrogate kernel tier (DESIGN.md §13).
+//!
+//! [`FastKernel`] replaces the per-lane per-step Euler integration of the
+//! bit-exact kernels with two error-bounded shortcuts:
+//!
+//! * **closed-form saturation endpoint** — inside saturation the channel
+//!   current is *exactly* linear in the bitline voltage
+//!   (`i = half_bv2 + half_bv2·λ·v`), so the forward-Euler recurrence is
+//!   an affine map whose n-th iterate has a closed form. Where the lane
+//!   provably never leaves saturation, the closed form reproduces the
+//!   oracle trajectory to floating-point rounding (~1e-14 V at 256
+//!   steps);
+//! * **per-configuration interpolation tables** — lanes that do leave
+//!   saturation (overlong pulses, low supplies) read their endpoint from
+//!   a bilinear table over (V_ov, β), built once per device/timing
+//!   configuration by the exact [`crate::circuit::discharge_lane`]
+//!   integrator and cached process-wide.
+//!
+//! Weak/cutoff lanes freeze the subthreshold current over the pulse (one
+//! or two current evaluations instead of 256), accepting the shortcut
+//! only when a midpoint refinement confirms the current is constant to
+//! well below the tolerance. Every lane that fails its validity check
+//! falls back to the exact integrator, so the kernel is *always* within
+//! the documented tolerance — speed degrades before accuracy does.
+//!
+//! The contract is a **stated tolerance**, not bit-identity: every lane
+//! endpoint is within [`FAST_TOLERANCE`] volts of the [`ScalarKernel`]
+//! oracle, and fault flags agree exactly (the crossing construction below
+//! makes the saturation-exit decision provable, not approximate). Per-
+//! configuration measured errors are pinned in `configs/fast_tol.toml`
+//! and enforced by `tests/fast_kernel.rs`. Because results are not
+//! bit-identical to the other kernels, the kernel choice is an *identity*
+//! field ([`KernelKind`] on [`crate::coordinator::CampaignSpec`]) — it
+//! appears in artifacts, serve cache keys, and sweep checkpoint rows.
+
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+use crate::device::Mosfet;
+use crate::params::{DeviceCard, Params};
+use crate::sram::WEIGHTS;
+
+use super::block::{SimKernel, TrialBlock};
+use super::engine::NativeMacEngine;
+
+/// Documented global endpoint tolerance of the fast tier: the maximum
+/// |Δv| on any bitline endpoint versus the bit-exact [`ScalarKernel`]
+/// oracle, in volts (DESIGN.md §13). Chosen at the same order as the
+/// Euler-vs-RK4 discretization bound already accepted by the simulator
+/// (2 mV, see `euler_discretization_error_is_bounded`); the measured
+/// per-configuration errors in `configs/fast_tol.toml` sit orders of
+/// magnitude below it.
+///
+/// [`ScalarKernel`]: super::ScalarKernel
+pub const FAST_TOLERANCE: f64 = 2.5e-3;
+
+/// Guard band around the saturation boundary (V): a closed-form endpoint
+/// within this distance of `vov` cannot be classified reliably against
+/// floating-point drift, so the lane falls back to the exact integrator.
+const CROSS_GUARD: f64 = 1e-6;
+
+/// Clamp margin keeping table endpoints strictly below `vov` (V), so the
+/// fault flag of a lane that provably left saturation agrees with the
+/// oracle by construction.
+const FAULT_MARGIN: f64 = 1e-9;
+
+/// Weak-lane frozen-current acceptance: a total discharge below this (V)
+/// makes the current constant to ~1e-8 V of endpoint error.
+const FREEZE_EPS: f64 = 1e-4;
+
+/// Weak-lane midpoint acceptance: the frozen and midpoint-refined
+/// discharges must agree within this (V) for the refinement to stand.
+const MID_EPS: f64 = 1e-5;
+
+/// Which [`SimKernel`] executes a campaign's trial blocks.
+///
+/// `Scalar` and `Block` are bit-identical to each other (DESIGN.md §9);
+/// `Fast` is accurate to [`FAST_TOLERANCE`] instead (DESIGN.md §13).
+/// Because the fast tier can move aggregate bytes, the kernel choice is
+/// an **identity** field: it is recorded in `mc.json`/`sweep.csv`/
+/// checkpoint rows and forks the `smart serve` cache keys, unlike the
+/// `shards`/`threads`/`block` performance knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    /// The per-item [`super::ScalarKernel`] oracle.
+    Scalar,
+    /// The lockstep [`super::BlockKernel`] (the default).
+    #[default]
+    Block,
+    /// The [`FastKernel`] table/closed-form surrogate.
+    Fast,
+}
+
+impl KernelKind {
+    /// Every kernel tier, in `scalar|block|fast` order.
+    pub const ALL: [KernelKind; 3] = [KernelKind::Scalar, KernelKind::Block, KernelKind::Fast];
+
+    /// Canonical token used in artifacts, TOML specs, and `--kernel`.
+    pub fn token(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Block => "block",
+            KernelKind::Fast => "fast",
+        }
+    }
+}
+
+impl std::str::FromStr for KernelKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "scalar" => Ok(KernelKind::Scalar),
+            "block" => Ok(KernelKind::Block),
+            "fast" => Ok(KernelKind::Fast),
+            other => Err(format!("unknown kernel '{other}' (scalar|block|fast)")),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.token())
+    }
+}
+
+/// Precomputed endpoint table for fully-conducting strong-inversion lanes
+/// that leave saturation before sampling: bilinear interpolation over
+/// (V_ov, β), node values integrated by the exact
+/// [`crate::circuit::discharge_lane`] at `gate = 1`.
+#[derive(Debug)]
+struct FastTable {
+    vov_lo: f64,
+    vov_step: f64,
+    n_vov: usize,
+    beta_lo: f64,
+    beta_step: f64,
+    n_beta: usize,
+    /// Endpoints, vov-major `(n_vov, n_beta)`.
+    v: Vec<f64>,
+}
+
+/// V_ov axis resolution: ~2 mV spacing over the reachable overdrive range
+/// keeps the bilinear error well under a tenth of [`FAST_TOLERANCE`].
+const TABLE_N_VOV: usize = 257;
+
+/// β axis resolution over ±30% of the nominal card value (>10 sigma of
+/// the mismatch model, and wide enough for every process corner).
+const TABLE_N_BETA: usize = 33;
+
+impl FastTable {
+    fn build(p: &Params, t_sample: f64, vov_hi: f64) -> Self {
+        let card = &p.device;
+        let vov_lo = 3.0 * card.vt_thermal;
+        let vov_hi = vov_hi.max(vov_lo + 0.05);
+        let beta_nom = card.beta();
+        let beta_lo = 0.7 * beta_nom;
+        let beta_hi = 1.3 * beta_nom;
+        let vov_step = (vov_hi - vov_lo) / (TABLE_N_VOV - 1) as f64;
+        let beta_step = (beta_hi - beta_lo) / (TABLE_N_BETA - 1) as f64;
+        let mut v = Vec::with_capacity(TABLE_N_VOV * TABLE_N_BETA);
+        for iv in 0..TABLE_N_VOV {
+            let vov = vov_lo + iv as f64 * vov_step;
+            for ib in 0..TABLE_N_BETA {
+                let beta = beta_lo + ib as f64 * beta_step;
+                v.push(crate::circuit::discharge_lane(
+                    p,
+                    vov,
+                    beta,
+                    1.0,
+                    t_sample,
+                    p.circuit.n_steps,
+                ));
+            }
+        }
+        Self { vov_lo, vov_step, n_vov: TABLE_N_VOV, beta_lo, beta_step, n_beta: TABLE_N_BETA, v }
+    }
+
+    /// Bilinear lookup; `None` when `(vov, beta)` falls outside the grid
+    /// (the caller then takes the exact fallback).
+    fn lookup(&self, vov: f64, beta: f64) -> Option<f64> {
+        let x = (vov - self.vov_lo) / self.vov_step;
+        let y = (beta - self.beta_lo) / self.beta_step;
+        if !(x >= 0.0 && y >= 0.0) {
+            return None;
+        }
+        let ix = x.floor() as usize;
+        let iy = y.floor() as usize;
+        if ix + 1 >= self.n_vov || iy + 1 >= self.n_beta {
+            return None;
+        }
+        let fx = x - ix as f64;
+        let fy = y - iy as f64;
+        let at = |i: usize, j: usize| self.v[i * self.n_beta + j];
+        let v0 = at(ix, iy) * (1.0 - fy) + at(ix, iy + 1) * fy;
+        let v1 = at(ix + 1, iy) * (1.0 - fy) + at(ix + 1, iy + 1) * fy;
+        Some(v0 * (1.0 - fx) + v1 * fx)
+    }
+}
+
+/// Cache key of one table configuration: exact round-trip renderings of
+/// every quantity the node values depend on. Two engines with the same
+/// fingerprint would build byte-identical tables, so sharing is safe.
+fn table_fingerprint(p: &Params, t_sample: f64, vov_hi: f64) -> u64 {
+    let card = &p.device;
+    let text = format!(
+        // lint:allow(D5): fingerprint needs exact roundtrip floats, not canon rounding
+        "{:e}|{:e}|{:e}|{:e}|{:e}|{:e}|{}|{:e}|{:e}",
+        card.vdd,
+        card.lam,
+        card.vt_thermal,
+        card.n_sub,
+        card.beta(),
+        t_sample,
+        p.circuit.n_steps,
+        p.circuit.c_blb,
+        vov_hi,
+    );
+    crate::util::fnv1a(&text)
+}
+
+/// The weak/cutoff drain current of [`Mosfet::drain_current_vov`] below
+/// the `3·vt` cut, replicated term for term at one bitline voltage `v`.
+/// Returns the current and whether the square-law branch won the `max`
+/// (the branch winner must be stable across the pulse for the frozen-
+/// current shortcut to be valid).
+fn weak_current(card: &DeviceCard, vov: f64, beta: f64, v: f64) -> (f64, bool) {
+    let vt = card.vt_thermal;
+    let i_sub = beta * vt * vt * (vov.min(0.0) / (card.n_sub * vt)).exp()
+        * (1.0 - (-v.max(0.0) / vt).exp());
+    if vov > 0.0 {
+        let lam = card.lam;
+        let clm = 1.0 + lam * v;
+        let i_on = if v >= vov {
+            0.5 * beta * vov * vov * clm
+        } else {
+            beta * (vov - 0.5 * v) * v * clm
+        };
+        let on = i_on.max(0.0);
+        (on.max(i_sub), on >= i_sub)
+    } else {
+        (i_sub, false)
+    }
+}
+
+/// The fast surrogate kernel (DESIGN.md §13): closed-form saturation
+/// endpoints, per-configuration interpolation tables for saturation-exit
+/// lanes, frozen-current weak lanes — every lane within
+/// [`FAST_TOLERANCE`] of the [`super::ScalarKernel`] oracle, with exact
+/// fault-flag agreement, falling back to the exact integrator whenever a
+/// validity check fails.
+///
+/// Tables are built lazily on the first saturation-exit lane of a given
+/// device/timing configuration and cached for the life of the kernel;
+/// use [`FastKernel::shared`] so campaigns, shards, and serve workers
+/// reuse one cache.
+#[derive(Debug, Default)]
+pub struct FastKernel {
+    tables: Mutex<std::collections::BTreeMap<u64, Arc<FastTable>>>,
+}
+
+impl FastKernel {
+    /// A kernel with an empty table cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide shared instance: table construction costs a few
+    /// milliseconds per configuration, so campaign dispatch shares one
+    /// cache across every shard, thread, and campaign.
+    pub fn shared() -> &'static FastKernel {
+        static SHARED: OnceLock<FastKernel> = OnceLock::new();
+        SHARED.get_or_init(FastKernel::new)
+    }
+
+    /// The endpoint table for `engine`'s configuration, built on first use.
+    fn table(&self, engine: &NativeMacEngine) -> Arc<FastTable> {
+        let p = engine.params();
+        let cfg = engine.config();
+        let card = &p.device;
+        // Upper overdrive bound: the strongest DAC code minus the nominal
+        // threshold, plus 0.10 V of headroom for mismatch/corner shifts
+        // (>12 sigma of the vth model). Lanes beyond it fall back.
+        let vov_hi = engine.dac().v_wl(15) - card.vth_effective(cfg.v_bulk, 0.0) + 0.10;
+        let key = table_fingerprint(p, cfg.t_sample, vov_hi);
+        let mut tables = self.tables.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(t) = tables.get(&key) {
+            return Arc::clone(t);
+        }
+        let t = Arc::new(FastTable::build(p, cfg.t_sample, vov_hi));
+        tables.insert(key, Arc::clone(&t));
+        t
+    }
+
+    /// One cell lane's endpoint. The decision tree (DESIGN.md §13):
+    ///
+    /// * strong inversion, closed form stays in saturation → closed form
+    ///   (exact to fp rounding; no fault, provably);
+    /// * strong inversion, closed form crosses below `vov` → the oracle
+    ///   provably faults; fully-conducting lanes read the endpoint from
+    ///   the table, clamped below `vov` so the flag agrees;
+    /// * weak/cutoff → frozen or midpoint-refined subthreshold current;
+    /// * anything unprovable → exact [`crate::circuit::discharge_lane`].
+    fn endpoint(
+        &self,
+        engine: &NativeMacEngine,
+        table: &mut Option<Arc<FastTable>>,
+        vov: f64,
+        beta: f64,
+        gate: f64,
+    ) -> f64 {
+        let p = engine.params();
+        let cfg = engine.config();
+        let card = &p.device;
+        let vt = card.vt_thermal;
+        let n_steps = p.circuit.n_steps;
+        let dt_c = (cfg.t_sample / f64::from(n_steps)) / p.circuit.c_blb;
+        let exact =
+            || crate::circuit::discharge_lane(p, vov, beta, gate, cfg.t_sample, n_steps);
+
+        if vov >= 3.0 * vt {
+            // Saturation current is exactly linear in v:
+            //   i = half_bv2·(1 + λ·v)  ⇒  v' = v·(1 − h·half_bv2·λ) − h·half_bv2
+            // with h = gate·dt_c — an affine map with fixed point −1/λ,
+            // so the n-th iterate is (v0 + 1/λ)·rⁿ − 1/λ. The trajectory
+            // is strictly decreasing; it equals the oracle's until the
+            // first step below vov, hence:
+            //   v_cf ≥ vov  ⇔  the oracle never left saturation.
+            let h = gate * dt_c;
+            let a = 0.5 * beta * vov * vov;
+            let lam = card.lam;
+            let v_cf = if lam.abs() < 1e-12 {
+                card.vdd - f64::from(n_steps) * h * a
+            } else {
+                let r = 1.0 - h * a * lam;
+                if r <= 0.0 {
+                    // step size too coarse for the closed form's stability
+                    return exact();
+                }
+                let v_star = -1.0 / lam;
+                (card.vdd - v_star) * r.powi(n_steps as i32) + v_star
+            };
+            if v_cf >= vov + CROSS_GUARD {
+                return v_cf;
+            }
+            if v_cf <= vov - CROSS_GUARD && gate == 1.0 {
+                // The oracle provably left saturation (fault = true): the
+                // endpoint comes from the exact-integrator table, clamped
+                // strictly below vov so the recomputed flag agrees.
+                let t = table.get_or_insert_with(|| self.table(engine));
+                if let Some(v_tab) = t.lookup(vov, beta) {
+                    return v_tab.min(vov - FAULT_MARGIN).max(0.0);
+                }
+            }
+            // within the guard band of the boundary, leaking gate, or
+            // outside the table grid: integrate exactly
+            exact()
+        } else {
+            // Weak/cutoff: the subthreshold current barely moves over a
+            // design-timing pulse, so freeze it at v = vdd...
+            let (i0, on0) = weak_current(card, vov, beta, card.vdd);
+            let dv = f64::from(n_steps) * i0 * gate * dt_c;
+            if dv <= FREEZE_EPS {
+                return card.vdd - dv;
+            }
+            // ...or refine once at the midpoint of the predicted drop.
+            // Valid only when the two estimates agree, the max-branch
+            // winner is stable, and the endpoint stays far above both the
+            // fault threshold and the exponential's sensitive region.
+            let (i_m, on_m) = weak_current(card, vov, beta, card.vdd - 0.5 * dv);
+            let dv2 = f64::from(n_steps) * i_m * gate * dt_c;
+            let end = card.vdd - dv2;
+            if (dv2 - dv).abs() <= MID_EPS && on0 == on_m && end >= vov.max(10.0 * vt) {
+                return end;
+            }
+            exact()
+        }
+    }
+}
+
+impl SimKernel for FastKernel {
+    fn name(&self) -> &'static str {
+        "fast"
+    }
+
+    fn simulate(&self, engine: &NativeMacEngine, block: &mut TrialBlock) {
+        let p = engine.params();
+        let cfg = *engine.config();
+        let card = p.device;
+        let n = block.len();
+        block.out.reset(n);
+
+        // Hoist the time-invariant device quantities of every live lane —
+        // value for value the same setup as `NativeMacEngine::mac_block`,
+        // reusing the block's kernel scratch.
+        block.active.clear();
+        block.vov.clear();
+        block.beta.clear();
+        block.gate.clear();
+        for i in 0..n {
+            if block.pad[i] {
+                continue;
+            }
+            let v_wl = engine.dac().v_wl(block.b[i]);
+            block.v_wl[i] = v_wl;
+            let a = block.a[i];
+            block.active.push(i);
+            for k in 0..4 {
+                let dev = Mosfet::with_mismatch(
+                    card,
+                    f64::from(block.dvth[i * 4 + k]),
+                    f64::from(block.dbeta[i * 4 + k]),
+                );
+                let bit = a >> (3 - k) & 1 == 1;
+                block.vov.push(v_wl - dev.vth(cfg.v_bulk));
+                block.beta.push(dev.beta());
+                block.gate.push(if bit { 1.0 } else { dev.card.k_leak });
+            }
+        }
+
+        // Per-lane surrogate endpoints (pure per lane: independent of
+        // block shape and lane order, like the exact kernels). The table
+        // handle is resolved lazily so configurations whose lanes never
+        // exit saturation — the design point — build no table at all.
+        let m = block.active.len() * 4;
+        block.v_lane.clear();
+        block.v_lane.resize(m, 0.0);
+        let mut table: Option<Arc<FastTable>> = None;
+        for j in 0..m {
+            block.v_lane[j] = self.endpoint(
+                engine,
+                &mut table,
+                block.vov[j],
+                block.beta[j],
+                block.gate[j],
+            );
+        }
+
+        // Combine + fault tail, mirroring `mac_word` exactly.
+        let vdd = card.vdd;
+        for (j, &i) in block.active.iter().enumerate() {
+            let base = j * 4;
+            let a = block.a[i];
+            let mut fault = false;
+            for k in 0..4 {
+                let bit = a >> (3 - k) & 1 == 1;
+                let vov = block.vov[base + k];
+                let v = block.v_lane[base + k];
+                if bit && vov > 0.0 && v < vov {
+                    fault = true;
+                }
+                block.out.v_blb[i * 4 + k] = v as f32;
+            }
+            let lanes = &block.v_lane[base..base + 4];
+            // lint:allow(D2): fixed 4-lane weighted fold in array order — the modeled physics
+            let v_mult: f64 = lanes.iter().zip(WEIGHTS).map(|(&v, w)| (vdd - v) * w).sum();
+            // lint:allow(D2): fixed 4-lane weighted fold in array order — the modeled physics
+            let energy: f64 = lanes.iter().map(|&v| p.circuit.c_blb * vdd * (vdd - v)).sum();
+            block.out.v_mult[i] = v_mult as f32;
+            block.out.energy[i] = energy as f32;
+            block.out.fault[i] = f32::from(u8::from(fault));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ScalarKernel, Variant};
+    use super::*;
+    use crate::montecarlo::MismatchSampler;
+
+    #[test]
+    fn kernel_kind_tokens_roundtrip() {
+        for k in KernelKind::ALL {
+            assert_eq!(k.token().parse::<KernelKind>(), Ok(k));
+            assert_eq!(k.to_string(), k.token());
+        }
+        assert_eq!(KernelKind::default(), KernelKind::Block);
+        let err = "bogus".parse::<KernelKind>().unwrap_err();
+        assert!(err.contains("unknown kernel 'bogus'"), "{err}");
+        assert!(err.contains("scalar|block|fast"), "{err}");
+    }
+
+    fn filled_block(n: usize, seed: u64) -> TrialBlock {
+        let mut blk = TrialBlock::with_capacity(n);
+        blk.reset(n);
+        let sampler = MismatchSampler::new(seed, 8e-3, 0.02);
+        let (dvth, dbeta) = blk.deviates_mut();
+        sampler.fill_block(0, dvth, dbeta);
+        for i in 0..n {
+            blk.set_operands(i, (i * 7 % 16) as u8, (i * 3 % 16) as u8);
+        }
+        blk
+    }
+
+    fn assert_within_tolerance(engine: &NativeMacEngine, n: usize, seed: u64) {
+        let mut fast = filled_block(n, seed);
+        let mut oracle = fast.clone();
+        FastKernel::new().simulate(engine, &mut fast);
+        ScalarKernel.simulate(engine, &mut oracle);
+        for i in 0..n {
+            for k in 0..4 {
+                let dv =
+                    f64::from(fast.out.v_blb[i * 4 + k]) - f64::from(oracle.out.v_blb[i * 4 + k]);
+                assert!(
+                    dv.abs() <= FAST_TOLERANCE,
+                    "lane {i} cell {k}: |dv| = {} > {FAST_TOLERANCE}",
+                    dv.abs()
+                );
+            }
+            assert_eq!(fast.out.fault[i], oracle.out.fault[i], "lane {i} fault flag");
+        }
+    }
+
+    #[test]
+    fn fast_matches_oracle_within_tolerance_all_variants() {
+        for variant in Variant::ALL {
+            let p = Params::default();
+            let engine = NativeMacEngine::new(p, variant.config(&p));
+            assert_within_tolerance(&engine, 33, 0xFA57);
+        }
+    }
+
+    #[test]
+    fn saturation_exit_lanes_use_the_table_and_agree_on_faults() {
+        // An overlong pulse drives every conducting lane out of
+        // saturation (the `overlong_pulse_faults` condition): the table
+        // path must stay within tolerance and flag exactly the oracle's
+        // faults.
+        let p = Params::default();
+        let mut cfg = Variant::Smart.config(&p);
+        cfg.t_sample = 2e-9;
+        let engine = NativeMacEngine::new(p, cfg);
+        assert_within_tolerance(&engine, 24, 0xFA11);
+    }
+
+    #[test]
+    fn padding_lanes_stay_zero() {
+        let p = Params::default();
+        let engine = NativeMacEngine::new(p, Variant::Smart.config(&p));
+        let mut blk = TrialBlock::with_capacity(4);
+        blk.reset(4);
+        blk.set_operands(1, 15, 15);
+        FastKernel::new().simulate(&engine, &mut blk);
+        for i in [0usize, 2, 3] {
+            assert_eq!(blk.out.v_mult[i], 0.0, "pad lane {i}");
+            assert_eq!(blk.out.fault[i], 0.0, "pad lane {i}");
+        }
+        assert!(blk.out.v_mult[1] > 0.0, "live lane must simulate");
+    }
+
+    #[test]
+    fn table_cache_is_shared_and_keyed_on_configuration() {
+        let p = Params::default();
+        let kernel = FastKernel::new();
+        let mut cfg = Variant::Smart.config(&p);
+        cfg.t_sample = 2e-9; // saturation-exit regime: forces a table
+        let engine = NativeMacEngine::new(p, cfg);
+        let a = kernel.table(&engine);
+        let b = kernel.table(&engine);
+        assert!(Arc::ptr_eq(&a, &b), "same configuration must share one table");
+        let mut other = Variant::Smart.config(&p);
+        other.t_sample = 1e-9;
+        let c = kernel.table(&NativeMacEngine::new(p, other));
+        assert!(!Arc::ptr_eq(&a, &c), "different timing must fork the table");
+    }
+
+    #[test]
+    fn closed_form_equals_the_iterated_recurrence_in_saturation() {
+        // A lane that never exits saturation: the closed form must agree
+        // with the exact integrator to fp rounding, far below tolerance.
+        let p = Params::default();
+        let engine = NativeMacEngine::new(p, Variant::Smart.config(&p));
+        let dev = Mosfet::nominal(p.device);
+        let vov = engine.dac().v_wl(15) - dev.vth(0.6);
+        let beta = dev.beta();
+        let exact = crate::circuit::discharge_lane(
+            &p,
+            vov,
+            beta,
+            1.0,
+            p.circuit.t_sample,
+            p.circuit.n_steps,
+        );
+        let kernel = FastKernel::new();
+        let mut table = None;
+        let got = kernel.endpoint(&engine, &mut table, vov, beta, 1.0);
+        assert!((got - exact).abs() < 1e-9, "closed form {got} vs exact {exact}");
+        assert!(table.is_none(), "no saturation exit, no table");
+    }
+}

@@ -10,16 +10,20 @@
 //! layer cross-checks the AOT path against. Campaign-scale execution
 //! goes through the block layer ([`TrialBlock`], [`SimKernel`],
 //! DESIGN.md §9): many trials in one struct-of-arrays block, integrated
-//! in lockstep by [`BlockKernel`] or lane-by-lane by the [`ScalarKernel`]
-//! oracle.
+//! in lockstep by [`BlockKernel`], lane-by-lane by the [`ScalarKernel`]
+//! oracle, or by the [`FastKernel`] surrogate tier — closed-form and
+//! table endpoints within a documented tolerance of the oracle
+//! (DESIGN.md §13), selected by [`KernelKind`].
 
 mod block;
 mod dot;
 mod engine;
+mod fast;
 mod ideal;
 mod variant;
 
 pub use block::{BlockKernel, MacResultBlock, ScalarKernel, SimKernel, TrialBlock};
+pub use fast::{FastKernel, KernelKind, FAST_TOLERANCE};
 pub use dot::{DotResult, NativeDotEngine};
 pub use engine::{MacResult, NativeMacEngine};
 pub use ideal::{exact_code4, reconstruct, reconstruct4, IdealTransfer, SenseAmp};

@@ -22,7 +22,7 @@ use anyhow::Result;
 use smart_insram::coordinator::{run_campaign, Backend, CampaignSpec, Workload};
 use smart_insram::dse::{run_sweep, SweepOptions, SweepSpec};
 use smart_insram::energy::{nominal_cost, EnergyModel};
-use smart_insram::mac::Variant;
+use smart_insram::mac::{KernelKind, Variant};
 use smart_insram::montecarlo::Corner;
 use smart_insram::params::Params;
 use smart_insram::report;
@@ -40,44 +40,55 @@ COMMANDS:
   mac <a> <b> [--variant V]    one 4x4-bit MAC through the full stack
   mc [--variant V] [--n-mc N] [--a A --b B | --full-sweep]
      [--seed S] [--shards K] [--threads T] [--block N] [--corner tt|ff|ss]
-     [--json] [--out DIR]      Monte-Carlo campaign (paper Fig. 8/9);
+     [--kernel scalar|block|fast] [--json] [--out DIR]
+                               Monte-Carlo campaign (paper Fig. 8/9);
                                aggregates are bit-identical for any
-                               --shards/--threads/--block choice; --json
+                               --shards/--threads/--block choice within a
+                               fixed --kernel (the fast surrogate tier is
+                               tolerance-bounded, DESIGN.md §13); --json
                                writes the canonical mc.json artifact
                                (identity fields only — the same bytes
                                `smart serve` answers POST /v1/mc with)
   table1 [--n-mc N]            regenerate Table 1 (all variants + lit rows)
   run <config.toml>            run campaigns from an experiment file
   sweep <dse.toml> [--shards K] [--threads T] [--block N] [--resume]
-        [--out DIR]            design-space exploration: run every grid
+        [--kernel scalar|block|fast] [--out DIR]
+                               design-space exploration: run every grid
                                point (variant x vdd x v_bulk x bits x
                                corner) through the sharded MC runner and
                                emit CSV/JSON + the energy-vs-sigma Pareto
                                front; artifacts are byte-identical for any
-                               --shards/--threads/--block, and --resume
-                               skips points already present in the CSV
+                               --shards/--threads/--block within a fixed
+                               --kernel, and --resume skips points already
+                               present in the CSV (the kernel is part of
+                               each point's resume key)
   bench [--n-mc N] [--threads T] [--block N] [--json] [--smoke]
-        [--out DIR]            native kernel throughput: the scalar oracle
-                               vs the lockstep block kernel on the fig8
-                               campaign; --json writes BENCH_native.json
-                               (schema: backend, items_per_sec, n_items,
-                               plus variant/block/threads provenance),
+        [--out DIR]            native kernel throughput: the scalar
+                               oracle, the lockstep block kernel, and the
+                               fast surrogate tier on the fig8 campaign;
+                               --json writes BENCH_native.json (schema:
+                               backend, items_per_sec, n_items,
+                               fast_items_per_sec, fast_speedup, plus
+                               variant/block/threads provenance),
                                --smoke runs one sample for CI
   infer <nn.toml> [--trials N] [--variant V] [--shards K] [--threads T]
-        [--block B] [--scalar] [--noise-off] [--json] [--out DIR]
-        [--smoke]              noisy NN inference: run the model file's
+        [--block B] [--kernel scalar|block|fast] [--noise-off] [--json]
+        [--out DIR] [--smoke]  noisy NN inference: run the model file's
                                quantized layers with every MAC executed
                                by the simulated noisy accelerator; report
                                ideal-vs-noisy top-1 accuracy, output
                                error, and energy per inference; --json
                                writes infer.csv/infer.json (byte-identical
-                               for any --shards/--threads/--block and for
-                               either kernel); --noise-off zeroes the
-                               mismatch sigmas (the noisy pass must then
-                               equal the exact integer pipeline);
+                               for any --shards/--threads/--block; scalar
+                               and block tiers also match each other);
+                               --noise-off zeroes the mismatch sigmas
+                               (the noisy pass must then equal the exact
+                               integer pipeline); --scalar is a deprecated
+                               alias for --kernel scalar;
                                --smoke caps trials at 8 for CI
   serve [--addr A] [--workers N] [--cache-cap N]
-        [--self-test] [--smoke] [--json] [--out DIR]
+        [--self-test] [--kernel scalar|block|fast] [--smoke] [--json]
+        [--out DIR]
                                long-lived campaign-result service:
                                POST /v1/mc, /v1/sweep/point, /v1/infer
                                (JSON bodies mirroring the TOML specs),
@@ -107,6 +118,9 @@ OPTIONS:
   --artifacts DIR   artifact directory (default: $SMART_ARTIFACTS or ./artifacts)
   --native          use the native Rust simulator instead of the AOT/PJRT path
   --variant V       smart | aid | imac | smart-on-imac (default: smart)
+  --kernel K        scalar | block | fast (default: block) — simulation
+                    tier; fast is the table/closed-form surrogate, bounded
+                    by the DESIGN.md §13 tolerance contract
   --out DIR         artifact directory (sweep default: target/dse;
                     infer default: target/infer; mc default: target/mc;
                     bench and serve --self-test default: .)
@@ -137,6 +151,13 @@ fn threads_opt(args: &Args) -> Result<usize> {
         return Ok(w);
     }
     knob(args, "threads")
+}
+
+/// Resolve `--kernel {scalar|block|fast}` (shared by `mc`, `sweep`,
+/// `infer`, and `serve --self-test`). Unknown tokens are rejected with
+/// the kernel parser's descriptive error; absent means the block kernel.
+fn kernel_opt(args: &Args) -> Result<KernelKind> {
+    args.opt_parse("kernel", KernelKind::Block).map_err(|e| anyhow::anyhow!(e))
 }
 
 fn main() -> ExitCode {
@@ -208,6 +229,7 @@ fn run() -> Result<()> {
                 batch: knob(&args, "batch")?,
                 shards: knob(&args, "shards")?,
                 block: knob(&args, "block")?,
+                kernel: kernel_opt(&args)?,
             };
             let r = run_campaign(&params, &spec, backend, Some(art))?;
             print!(
@@ -256,7 +278,8 @@ fn run() -> Result<()> {
             let path = args.positional(1).ok_or_else(|| {
                 anyhow::anyhow!(
                     "usage: smart infer <nn.toml> [--trials N --variant V --shards K \
-                     --threads T --block B --scalar --noise-off --json --out DIR --smoke]"
+                     --threads T --block B --kernel scalar|block|fast --noise-off \
+                     --json --out DIR --smoke]"
                 )
             })?;
             let spec = smart_insram::nn::ModelSpec::load(path)?;
@@ -269,13 +292,23 @@ fn run() -> Result<()> {
                     t
                 }
             };
+            // `--kernel` is authoritative; `--scalar` stays honored as a
+            // deprecated alias for `--kernel scalar` (warned on stderr).
+            let kernel = if args.opt("kernel").is_some() {
+                kernel_opt(&args)?
+            } else if args.flag("scalar") {
+                eprintln!("warning: --scalar is deprecated; use --kernel scalar");
+                KernelKind::Scalar
+            } else {
+                KernelKind::Block
+            };
             let opts = smart_insram::nn::InferOptions {
                 trials,
                 shards: knob(&args, "shards")?,
                 threads: threads_opt(&args)?,
                 block: knob(&args, "block")?,
                 variant,
-                scalar: args.flag("scalar"),
+                kernel,
                 noise_off: args.flag("noise-off"),
                 write_artifacts: args.flag("json"),
                 out_dir: args
@@ -296,7 +329,8 @@ fn run() -> Result<()> {
         "sweep" => {
             let path = args.positional(1).ok_or_else(|| {
                 anyhow::anyhow!(
-                    "usage: smart sweep <dse.toml> [--shards K --threads T --block N --resume --out DIR]"
+                    "usage: smart sweep <dse.toml> [--shards K --threads T --block N \
+                     --kernel scalar|block|fast --resume --out DIR]"
                 )
             })?;
             let sweep = SweepSpec::load(path)?;
@@ -304,6 +338,7 @@ fn run() -> Result<()> {
                 shards: knob(&args, "shards")?,
                 threads: threads_opt(&args)?,
                 block: knob(&args, "block")?,
+                kernel: kernel_opt(&args)?,
                 resume: args.flag("resume"),
                 out_dir: args
                     .opt("out")
@@ -386,6 +421,7 @@ fn cmd_mac(
         batch: 1,
         shards: 1,
         block: 0,
+        kernel: KernelKind::Block,
     };
     let r = run_campaign(params, &spec, backend, Some(art.clone()))?;
     println!(
@@ -399,11 +435,14 @@ fn cmd_mac(
 }
 
 /// `smart bench`: native kernel throughput on the paper's fig8 campaign —
-/// the scalar per-item oracle against the lockstep block kernel. With
-/// `--json`, records the measurement as `BENCH_native.json` (schema:
-/// `backend`, `items_per_sec`, `n_items`, plus `variant`/`block`/
+/// the scalar per-item oracle, the lockstep block kernel, and the fast
+/// surrogate tier. With `--json`, records the measurement as
+/// `BENCH_native.json` (schema: `backend`, `items_per_sec`, `n_items`,
+/// `fast_items_per_sec`, `fast_speedup`, plus `variant`/`block`/
 /// `threads` provenance so the perf trajectory is comparable across
-/// commits and hosts); `--smoke` runs a single sample for CI.
+/// commits and hosts); `--smoke` runs a single sample for CI. The fast
+/// tier gets one untimed pre-warm campaign so its one-time interpolation
+/// table build (DESIGN.md §13) never pollutes the measurement.
 #[allow(clippy::too_many_arguments)]
 fn cmd_bench(
     params: &Params,
@@ -417,7 +456,7 @@ fn cmd_bench(
 ) -> Result<()> {
     use smart_insram::bench::Runner;
     use smart_insram::coordinator::run_native_campaign_with;
-    use smart_insram::mac::{BlockKernel, ScalarKernel, SimKernel};
+    use smart_insram::mac::{BlockKernel, FastKernel, ScalarKernel, SimKernel};
 
     let mut spec = CampaignSpec::paper_fig8(variant);
     spec.n_mc = n_mc;
@@ -442,8 +481,16 @@ fn cmd_bench(
     let scalar_ips = measure(&ScalarKernel);
     let block_ips = measure(&BlockKernel);
     let speedup = block_ips / scalar_ips;
+    // Pre-warm the fast tier outside the timer: `--smoke` runs zero
+    // warmup samples, and the surrogate's one-time table build must not
+    // be billed to its steady-state throughput.
+    // lint:allow(D4): pre-warm shares the timing closure's pre-validated spec
+    run_native_campaign_with(params, &spec, FastKernel::shared()).expect("campaign");
+    let fast_ips = measure(FastKernel::shared());
+    let fast_speedup = fast_ips / block_ips;
     println!("scalar oracle: {scalar_ips:>12.0} items/s");
     println!("block kernel:  {block_ips:>12.0} items/s  ({speedup:.2}x)");
+    println!("fast kernel:   {fast_ips:>12.0} items/s  ({fast_speedup:.2}x vs block)");
 
     if json {
         use smart_insram::util::json::{to_string_pretty, Value};
@@ -454,6 +501,8 @@ fn cmd_bench(
         m.insert("n_items".to_string(), Value::Num(n_items as f64));
         m.insert("scalar_items_per_sec".to_string(), Value::Num(scalar_ips));
         m.insert("speedup".to_string(), Value::Num(speedup));
+        m.insert("fast_items_per_sec".to_string(), Value::Num(fast_ips));
+        m.insert("fast_speedup".to_string(), Value::Num(fast_speedup));
         m.insert("variant".to_string(), Value::Str(variant.token().to_string()));
         m.insert("block".to_string(), Value::Num(block_cap as f64));
         m.insert("threads".to_string(), Value::Num(threads_used as f64));
@@ -494,7 +543,7 @@ fn cmd_serve(params: &Params, args: &Args) -> Result<()> {
         }
     };
     if args.flag("self-test") {
-        let r = self_test(params, workers, args.flag("smoke"))?;
+        let r = self_test(params, workers, args.flag("smoke"), kernel_opt(args)?)?;
         println!(
             "serve self-test OK: {} requests, {} hits / {} misses \
              ({} clients x {} repeats x 3 endpoints, byte-identical to the CLI artifacts)",
@@ -567,6 +616,7 @@ fn cmd_table1(params: &Params, art: &PathBuf, backend: Backend, n_mc: u32) -> Re
             batch: 0,
             shards: 0,
             block: 0,
+            kernel: KernelKind::Block,
         };
         let r = run_campaign(params, &spec, backend, Some(art.clone()))?;
         sigmas.push((v, r.accuracy.rms_norm));

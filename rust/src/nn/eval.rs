@@ -9,7 +9,9 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{execute_sharded, resolve_threads, shard_range, DEFAULT_BLOCK_LEN};
 use crate::energy::EnergyModel;
-use crate::mac::{BlockKernel, NativeMacEngine, ScalarKernel, SimKernel, Variant};
+use crate::mac::{
+    BlockKernel, FastKernel, KernelKind, NativeMacEngine, ScalarKernel, SimKernel, Variant,
+};
 use crate::metrics::OnlineStats;
 use crate::montecarlo::MismatchSampler;
 use crate::params::Params;
@@ -20,8 +22,11 @@ use super::model::ModelSpec;
 use super::tiler::Tiler;
 
 /// Execution knobs of one inference campaign. `shards`/`threads`/`block`
-/// and the kernel choice are pure performance knobs — the report and
-/// artifacts are byte-identical for every combination (DESIGN.md §10).
+/// are pure performance knobs — the report and artifacts are
+/// byte-identical for every combination (DESIGN.md §10). The `kernel`
+/// tier is identity: `scalar` and `block` are bit-identical to each
+/// other, while `fast` is tolerance-bounded (DESIGN.md §13), and the
+/// executing kernel is recorded in `infer.json`.
 #[derive(Debug, Clone)]
 pub struct InferOptions {
     /// Inference trials (0 = the model file's `trials`).
@@ -34,9 +39,11 @@ pub struct InferOptions {
     pub block: usize,
     /// Design variant executing the MACs.
     pub variant: Variant,
-    /// Use the per-op [`ScalarKernel`] oracle instead of the lockstep
-    /// [`BlockKernel`] (bit-identical; for cross-checks).
-    pub scalar: bool,
+    /// Simulation kernel executing the MAC ops: the lockstep
+    /// [`BlockKernel`] default, the per-op [`ScalarKernel`] oracle
+    /// (bit-identical; for cross-checks), or the [`FastKernel`] surrogate
+    /// tier (DESIGN.md §13).
+    pub kernel: KernelKind,
     /// Zero the mismatch sigmas: the noisy pass must then equal the
     /// exact integer pipeline bit for bit.
     pub noise_off: bool,
@@ -54,7 +61,7 @@ impl Default for InferOptions {
             threads: 0,
             block: 0,
             variant: Variant::Smart,
-            scalar: false,
+            kernel: KernelKind::Block,
             noise_off: false,
             write_artifacts: false,
             out_dir: PathBuf::from("target/infer"),
@@ -92,7 +99,7 @@ pub struct InferReport {
     pub name: String,
     /// Variant that executed the MACs.
     pub variant: Variant,
-    /// Kernel name (`scalar` or `block`).
+    /// Kernel name (`scalar`, `block`, or `fast`).
     pub kernel: &'static str,
     /// Trials run.
     pub trials: u32,
@@ -151,8 +158,10 @@ fn rel_l2(noisy: &[f64], exact: &[f64]) -> f64 {
 /// Trial `t`'s input, weights, and per-op mismatch deviates are pure
 /// functions of `(spec.seed, t)`, trials fold in canonical order, and
 /// artifact numbers are canonicalized — so the report and any written
-/// artifacts are byte-identical for every `shards`/`threads`/`block`/
-/// kernel choice (pinned in `tests/nn_infer.rs`).
+/// artifacts are byte-identical for every `shards`/`threads`/`block`
+/// choice under a fixed kernel (pinned in `tests/nn_infer.rs`). The
+/// `scalar` and `block` tiers are additionally bit-identical to each
+/// other; `fast` is tolerance-bounded (DESIGN.md §13).
 ///
 /// ```
 /// use smart_insram::nn::{run_infer, InferOptions, ModelSpec};
@@ -178,7 +187,11 @@ pub fn run_infer(params: &Params, spec: &ModelSpec, opts: &InferOptions) -> Resu
         (params.circuit.sigma_vth, params.circuit.sigma_beta)
     };
     let sampler = MismatchSampler::new(spec.seed, sv, sb);
-    let kernel: &dyn SimKernel = if opts.scalar { &ScalarKernel } else { &BlockKernel };
+    let kernel: &dyn SimKernel = match opts.kernel {
+        KernelKind::Scalar => &ScalarKernel,
+        KernelKind::Block => &BlockKernel,
+        KernelKind::Fast => FastKernel::shared(),
+    };
     let emodel = EnergyModel::default();
     let v_wl_max = engine.dac().v_wl(15);
     let ops = model.ops_per_trial();

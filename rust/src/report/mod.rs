@@ -114,9 +114,11 @@ pub fn mc_panel(title: &str, r: &CampaignReport) -> String {
 /// body `smart serve` answers `POST /v1/mc` with (DESIGN.md §11).
 ///
 /// Only the spec's *identity* fields appear (variant, workload, n_mc,
-/// seed, corner): `--shards`/`--threads`/`--block` are pure performance
-/// knobs under the bit-identical-aggregates contract (DESIGN.md §4), so
-/// they must never change the bytes. Wall-clock and throughput are
+/// seed, corner, kernel): `--shards`/`--threads`/`--block` are pure
+/// performance knobs under the bit-identical-aggregates contract
+/// (DESIGN.md §4), so they must never change the bytes. The kernel tier
+/// IS identity — `--kernel fast` is tolerance-bounded, not bit-identical
+/// (DESIGN.md §13) — so it is recorded. Wall-clock and throughput are
 /// deliberately absent for the same reason, and every float is
 /// canonicalized through [`canon`].
 pub fn mc_json(spec: &crate::coordinator::CampaignSpec, r: &CampaignReport) -> String {
@@ -131,6 +133,7 @@ pub fn mc_json(spec: &crate::coordinator::CampaignSpec, r: &CampaignReport) -> S
     put("n_mc", Value::Num(f64::from(spec.n_mc)));
     put("seed", Value::Num(spec.seed as f64));
     put("corner", Value::Str(spec.corner.name().to_string()));
+    put("kernel", Value::Str(spec.kernel.token().to_string()));
     put("rows", Value::Num(r.rows as f64));
     put("full_scale", Value::Num(canon(r.full_scale)));
     put("mean_v", Value::Num(canon(r.raw_vmult.mean())));
@@ -434,8 +437,14 @@ mod tests {
         let r2 = run_campaign(&p, &knobbed, Backend::Native, None).unwrap();
         let b = mc_json(&knobbed, &r2);
         assert_eq!(a, b, "perf knobs leaked into mc.json");
-        for needle in ["\"variant\"", "\"workload\"", "\"hist\"", "\"non_finite\"", "\"sigma_norm\""]
-        {
+        for needle in [
+            "\"variant\"",
+            "\"workload\"",
+            "\"hist\"",
+            "\"non_finite\"",
+            "\"sigma_norm\"",
+            "\"kernel\": \"block\"",
+        ] {
             assert!(a.contains(needle), "missing {needle} in {a}");
         }
         assert!(!a.contains("\"shards\""));

@@ -45,6 +45,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::mac::KernelKind;
 use crate::params::Params;
 use crate::util::json::{to_string_pretty, Value};
 
@@ -343,9 +344,17 @@ pub struct SelfTestReport {
 /// 3. a NaN-bearing sample stream no longer perturbs histogram bin 0
 ///    (the PR-5 `metrics::Histogram` regression).
 ///
-/// `smoke` shrinks the campaign sizes and client counts for CI. Returns
-/// the counters; any contract violation is an error.
-pub fn self_test(params: &Params, workers: usize, smoke: bool) -> Result<SelfTestReport> {
+/// `smoke` shrinks the campaign sizes and client counts for CI.
+/// `kernel` selects the simulation tier every request (and every
+/// expected artifact) is pinned to — `--kernel fast` exercises the
+/// surrogate tier end to end, including its cache-key fork (DESIGN.md
+/// §13). Returns the counters; any contract violation is an error.
+pub fn self_test(
+    params: &Params,
+    workers: usize,
+    smoke: bool,
+    kernel: KernelKind,
+) -> Result<SelfTestReport> {
     use crate::coordinator::{run_campaign, Backend, CampaignSpec};
     use crate::dse::{run_grid_point, sweep_json, GridAxes, SweepOptions, SweepSpec};
     use crate::mac::Variant;
@@ -376,12 +385,14 @@ pub fn self_test(params: &Params, workers: usize, smoke: bool) -> Result<SelfTes
 
     // (1) expected bytes straight through the CLI artifact encoders.
     let n_mc: u32 = if smoke { 8 } else { 64 };
+    let tok = kernel.token();
     let mc_body = format!(
-        "{{\"variant\": \"smart\", \"n_mc\": {n_mc}, \
+        "{{\"variant\": \"smart\", \"n_mc\": {n_mc}, \"kernel\": \"{tok}\", \
          \"workload\": {{\"kind\": \"fixed\", \"a\": 15, \"b\": 15}}}}"
     );
     let mut mc_spec = CampaignSpec::paper_fig8(Variant::Smart);
     mc_spec.n_mc = n_mc;
+    mc_spec.kernel = kernel;
     let mc_expect = crate::report::mc_json(
         &mc_spec,
         &run_campaign(params, &mc_spec, Backend::Native, None)?,
@@ -392,8 +403,10 @@ pub fn self_test(params: &Params, workers: usize, smoke: bool) -> Result<SelfTes
     );
 
     let sweep_n_mc: u32 = if smoke { 8 } else { 32 };
-    let sweep_body =
-        format!("{{\"variant\": \"aid\", \"n_mc\": {sweep_n_mc}, \"bits\": 2, \"seed\": 5}}");
+    let sweep_body = format!(
+        "{{\"variant\": \"aid\", \"n_mc\": {sweep_n_mc}, \"bits\": 2, \"seed\": 5, \
+         \"kernel\": \"{tok}\"}}"
+    );
     let sweep_spec = SweepSpec {
         name: "serve".to_string(),
         seed: 5,
@@ -409,13 +422,15 @@ pub fn self_test(params: &Params, workers: usize, smoke: bool) -> Result<SelfTes
     };
     let sweep_point = sweep_spec.grid.expand().remove(0);
     let sweep_expect = {
-        let r = run_grid_point(&sweep_spec, &sweep_point, &SweepOptions::default())?;
-        sweep_json(&sweep_spec, &[r], &[true])
+        let opts = SweepOptions { kernel, ..SweepOptions::default() };
+        let r = run_grid_point(&sweep_spec, &sweep_point, &opts)?;
+        sweep_json(&sweep_spec, &[r], &[true], kernel)
     };
 
     let trials = if smoke { 3 } else { 8 };
     let infer_body = format!(
         "{{\"name\": \"serve-selftest\", \"seed\": 11, \"trials\": {trials}, \"bits\": 4, \
+         \"kernel\": \"{tok}\", \
          \"dataset\": {{\"classes\": 3, \"features\": 6, \"jitter\": 0.1}}, \
          \"layers\": [{{\"inputs\": 6, \"outputs\": 4, \"relu\": true}}, \
                       {{\"inputs\": 4, \"outputs\": 3}}]}}"
@@ -424,7 +439,8 @@ pub fn self_test(params: &Params, workers: usize, smoke: bool) -> Result<SelfTes
         &crate::util::json::parse(&infer_body).map_err(|e| anyhow::anyhow!(e))?,
     )?;
     let infer_expect = {
-        let r = run_infer(params, &infer_spec, &InferOptions::default())?;
+        let opts = InferOptions { kernel, ..InferOptions::default() };
+        let r = run_infer(params, &infer_spec, &opts)?;
         infer_json(&infer_spec, &r)
     };
 
@@ -578,9 +594,16 @@ mod tests {
 
     #[test]
     fn self_test_smoke_passes() {
-        let r = self_test(&Params::default(), 2, true).unwrap();
+        let r = self_test(&Params::default(), 2, true, KernelKind::Block).unwrap();
         assert_eq!(r.misses, 3);
         assert_eq!(r.hits, (r.clients * r.repeats * 3) as u64);
         assert!(r.stats_json.contains("smart-serve"));
+    }
+
+    #[test]
+    fn self_test_smoke_passes_on_the_fast_tier() {
+        let r = self_test(&Params::default(), 2, true, KernelKind::Fast).unwrap();
+        assert_eq!(r.misses, 3);
+        assert_eq!(r.hits, (r.clients * r.repeats * 3) as u64);
     }
 }

@@ -11,7 +11,9 @@
 //!    fields only, floats rendered at the `report::canon`/`csv_cell`
 //!    precision, performance knobs (`shards`/`threads`/`block`/`workers`)
 //!    excluded because the campaign layer guarantees they never move the
-//!    artifacts (DESIGN.md §4);
+//!    artifacts (DESIGN.md §4). The `kernel` tier IS identity — the fast
+//!    surrogate is tolerance-bounded, not bit-identical (DESIGN.md §13) —
+//!    so it stays in the spec and forks the key;
 //! 3. answer from the sharded LRU on a hit, else run the existing
 //!    block-execution campaign stack and cache the canonical JSON body.
 //!
@@ -25,7 +27,7 @@ use std::sync::Arc;
 
 use crate::coordinator::{run_campaign, Backend, CampaignSpec};
 use crate::dse::{point_key, run_grid_point, sweep_json, GridAxes, SweepOptions, SweepSpec};
-use crate::mac::Variant;
+use crate::mac::{KernelKind, Variant};
 use crate::montecarlo::Corner;
 use crate::nn::{infer_json, run_infer, InferOptions, ModelSpec};
 use crate::params::Params;
@@ -126,7 +128,9 @@ fn mc(params: &Params, cache: &ResultCache, body: &str) -> Result<Routed, Reject
         CampaignSpec::from_value(&v).map_err(|e| bad(format!("mc spec: {e:#}")))?;
     // Identity canonicalization: performance knobs never change the
     // artifact bytes (DESIGN.md §4), so they are stripped from the spec
-    // before it becomes the cache key.
+    // before it becomes the cache key. The kernel field survives — a
+    // fast-tier result is not byte-interchangeable with a block-tier one
+    // (DESIGN.md §13).
     spec.workers = 0;
     spec.batch = 0;
     spec.shards = 0;
@@ -153,10 +157,14 @@ fn mc(params: &Params, cache: &ResultCache, body: &str) -> Result<Routed, Reject
 
 /// `POST /v1/sweep/point`: body is one grid point in `dse.toml` terms
 /// (scalar `variant`/`vdd`/`v_bulk`/`bits`/`corner` plus `name`/`seed`/
-/// `n_mc` and optional `params` overrides); response is the canonical
-/// single-point `sweep.json` bytes.
+/// `n_mc`, an optional `kernel` tier, and optional `params` overrides);
+/// response is the canonical single-point `sweep.json` bytes.
 fn sweep_point(cache: &ResultCache, body: &str) -> Result<Routed, Reject> {
     let v = json::parse(body).map_err(|e| bad(format!("sweep request body: {e}")))?;
+    let kernel: KernelKind = match v.get("kernel").and_then(Value::as_str) {
+        Some(s) => s.parse().map_err(bad)?,
+        None => KernelKind::Block,
+    };
     let mut card = Params::default();
     if let Some(p) = v.get("params") {
         card.apply_overrides(p).map_err(|e| bad(format!("sweep [params]: {e:#}")))?;
@@ -193,26 +201,30 @@ fn sweep_point(cache: &ResultCache, body: &str) -> Result<Routed, Reject> {
         )));
     }
     // The name is part of the response bytes but not of point_key, so it
-    // joins the cache key explicitly.
-    let key = format!("sweep\n{}\n{}", spec.name, point_key(&point, &spec));
+    // joins the cache key explicitly. point_key carries the kernel tier.
+    let key = format!("sweep\n{}\n{}", spec.name, point_key(&point, &spec, kernel));
     cached(cache, &key, || {
-        let opts = SweepOptions { threads: 1, ..SweepOptions::default() };
+        let opts = SweepOptions { threads: 1, kernel, ..SweepOptions::default() };
         let r = run_grid_point(&spec, &point, &opts)
             .map_err(|e| fail(format!("sweep point: {e:#}")))?;
         // a single point is trivially Pareto-optimal
-        Ok(sweep_json(&spec, &[r], &[true]))
+        Ok(sweep_json(&spec, &[r], &[true], kernel))
     })
 }
 
 /// `POST /v1/infer`: body mirrors an `nn.toml` model file plus optional
-/// top-level `variant` and `noise_off`; response is the canonical
-/// `infer.json` bytes.
+/// top-level `variant`, `kernel`, and `noise_off`; response is the
+/// canonical `infer.json` bytes.
 fn infer(params: &Params, cache: &ResultCache, body: &str) -> Result<Routed, Reject> {
     let v = json::parse(body).map_err(|e| bad(format!("infer request body: {e}")))?;
     let spec = ModelSpec::from_value(&v).map_err(|e| bad(format!("infer model: {e:#}")))?;
     let variant: Variant = match v.get("variant").and_then(Value::as_str) {
         Some(s) => s.parse().map_err(bad)?,
         None => Variant::Smart,
+    };
+    let kernel: KernelKind = match v.get("kernel").and_then(Value::as_str) {
+        Some(s) => s.parse().map_err(bad)?,
+        None => KernelKind::Block,
     };
     let noise_off = v.get("noise_off").and_then(Value::as_bool).unwrap_or(false);
     // saturating arithmetic: layer dims are client-controlled, and an
@@ -232,11 +244,12 @@ fn infer(params: &Params, cache: &ResultCache, body: &str) -> Result<Routed, Rej
             "inference of {total} MAC evals exceeds the per-request ceiling of {MAX_REQUEST_ITEMS}"
         )));
     }
-    let key = infer_key(&spec, variant, noise_off);
+    let key = infer_key(&spec, variant, noise_off, kernel);
     cached(cache, &key, || {
         let opts = InferOptions {
             threads: 1,
             variant,
+            kernel,
             noise_off,
             ..InferOptions::default()
         };
@@ -247,20 +260,22 @@ fn infer(params: &Params, cache: &ResultCache, body: &str) -> Result<Routed, Rej
 }
 
 /// Canonical identity key of one inference request: every field that can
-/// move the response bytes (model identity + variant + noise switch),
-/// floats at the [`report::csv_cell`] precision; the kernel and
+/// move the response bytes (model identity + variant + kernel tier +
+/// noise switch), floats at the [`report::csv_cell`] precision;
 /// `shards`/`threads`/`block` are bit-identical performance knobs and
-/// never appear.
-fn infer_key(spec: &ModelSpec, variant: Variant, noise_off: bool) -> String {
+/// never appear. The kernel is identity because `infer.json` records it
+/// and the fast tier is tolerance-bounded (DESIGN.md §13).
+fn infer_key(spec: &ModelSpec, variant: Variant, noise_off: bool, kernel: KernelKind) -> String {
     let mut k = String::from("infer\n");
     let _ = writeln!(
         k,
-        "{}\n{}\n{}\n{}\n{}\n{}",
+        "{}\n{}\n{}\n{}\n{}\n{}\n{}",
         spec.name,
         spec.seed,
         spec.trials,
         spec.bits,
         variant.token(),
+        kernel.token(),
         u8::from(noise_off)
     );
     let d = &spec.dataset;
@@ -304,7 +319,12 @@ mod tests {
         for (path, body) in [
             ("/v1/mc", "not json"),
             ("/v1/mc", r#"{"variant": "bogus", "workload": {"kind": "full_sweep"}}"#),
+            (
+                "/v1/mc",
+                r#"{"variant": "smart", "kernel": "warp", "workload": {"kind": "full_sweep"}}"#,
+            ),
             ("/v1/sweep/point", r#"{"vdd": -1.0}"#),
+            ("/v1/sweep/point", r#"{"kernel": "warp"}"#),
             ("/v1/infer", r#"{"name": "x"}"#),
         ] {
             let r = handle(&p, &cache, &req("POST", path, body));
@@ -357,17 +377,25 @@ mod tests {
         assert_eq!(ra.cache, Some(false));
         assert_eq!(rb.cache, Some(true), "perf knobs must not fork the cache key");
         assert_eq!(ra.response.body, rb.response.body);
+        // the kernel tier IS identity: an explicit fast-tier request
+        // computes its own entry instead of reusing the block-tier bytes
+        let c = r#"{"variant": "aid", "n_mc": 8, "kernel": "fast",
+                    "workload": {"kind": "fixed", "a": 3, "b": 9}}"#;
+        let rc = handle(&p, &cache, &req("POST", "/v1/mc", c));
+        assert_eq!(rc.cache, Some(false), "kernel must fork the cache key");
+        assert!(rc.response.body.contains("\"kernel\": \"fast\""));
     }
 
     #[test]
     fn infer_key_tracks_identity_fields_only() {
         let spec = ModelSpec::fixture();
-        let base = infer_key(&spec, Variant::Smart, false);
-        assert_ne!(base, infer_key(&spec, Variant::Aid, false));
-        assert_ne!(base, infer_key(&spec, Variant::Smart, true));
+        let base = infer_key(&spec, Variant::Smart, false, KernelKind::Block);
+        assert_ne!(base, infer_key(&spec, Variant::Aid, false, KernelKind::Block));
+        assert_ne!(base, infer_key(&spec, Variant::Smart, true, KernelKind::Block));
+        assert_ne!(base, infer_key(&spec, Variant::Smart, false, KernelKind::Fast));
         let mut other = spec.clone();
         other.trials += 1;
-        assert_ne!(base, infer_key(&other, Variant::Smart, false));
-        assert_eq!(base, infer_key(&spec, Variant::Smart, false));
+        assert_ne!(base, infer_key(&other, Variant::Smart, false, KernelKind::Block));
+        assert_eq!(base, infer_key(&spec, Variant::Smart, false, KernelKind::Block));
     }
 }

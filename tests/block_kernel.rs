@@ -130,6 +130,7 @@ fn campaign_invariant_under_kernel_block_and_shards() {
             batch: 0,
             shards: 1,
             block: 0,
+            kernel: smart_insram::mac::KernelKind::Block,
         };
         let base = run_native_campaign_with(&p, &spec, &ScalarKernel)
             .map_err(|e| format!("scalar: {e}"))?;
@@ -197,6 +198,7 @@ fn full_sweep_mixed_regions_match_oracle() {
         batch: 0,
         shards: 3,
         block: 37,
+        kernel: smart_insram::mac::KernelKind::Block,
     };
     let block = run_campaign(&p, &spec, Backend::Native, None).unwrap();
     let oracle = run_native_campaign_with(&p, &spec, &ScalarKernel).unwrap();

@@ -87,6 +87,7 @@ fn bench_json_writes_perf_artifact() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("block kernel"), "{text}");
+    assert!(text.contains("fast kernel"), "{text}");
     let json = std::fs::read_to_string(out_dir.join("BENCH_native.json")).unwrap();
     for key in [
         "\"backend\"",
@@ -95,10 +96,17 @@ fn bench_json_writes_perf_artifact() {
         "\"variant\"",
         "\"block\"",
         "\"threads\"",
+        "\"fast_items_per_sec\"",
+        "\"fast_speedup\"",
         "native-block",
     ] {
         assert!(json.contains(key), "missing {key} in {json}");
     }
+    // the surrogate replaces 256-step integrations with closed forms and
+    // table lookups; even a one-sample smoke must measure a real speedup
+    let v = smart_insram::util::json::parse(&json).unwrap();
+    let fast_speedup = v.get("fast_speedup").unwrap().as_f64().unwrap();
+    assert!(fast_speedup > 1.0, "fast tier must beat the block kernel, got {fast_speedup}");
 }
 
 #[test]
@@ -158,6 +166,13 @@ fn checked_in_configs_parse() {
             if stem.starts_with("dse") {
                 smart_insram::dse::SweepSpec::load(&path)
                     .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            } else if stem.starts_with("fast_tol") {
+                // golden tolerance fixture for tests/fast_kernel.rs
+                let text = std::fs::read_to_string(&path).unwrap();
+                let doc = smart_insram::util::toml_lite::parse(&text)
+                    .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                assert!(doc.path(&["global", "max_abs_dv"]).is_some());
+                assert!(!doc.get("config").unwrap().as_arr().unwrap().is_empty());
             } else if stem.starts_with("nn") {
                 smart_insram::nn::ModelSpec::load(&path)
                     .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
@@ -260,6 +275,120 @@ fn mc_json_writes_the_canonical_artifact() {
     assert!(v.get("hist").unwrap().get("non_finite").is_some());
     assert!(v.get("shards").is_none(), "perf knobs must not appear in mc.json");
     let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+#[test]
+fn kernel_knob_selects_the_tier_on_mc() {
+    // `--kernel` is an identity knob: the selected tier lands in mc.json
+    let out_dir = std::env::temp_dir().join(format!("smart_cli_kernel_{}", std::process::id()));
+    for kernel in ["scalar", "block", "fast"] {
+        let _ = std::fs::remove_dir_all(&out_dir);
+        let out = smart()
+            .args([
+                "mc", "--variant", "smart", "--n-mc", "8", "--native", "--kernel", kernel,
+                "--json", "--out", out_dir.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "--kernel {kernel}: {err}");
+        let json = std::fs::read_to_string(out_dir.join("mc.json")).unwrap();
+        assert!(
+            json.contains(&format!("\"kernel\": \"{kernel}\"")),
+            "--kernel {kernel} missing from mc.json: {json}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+#[test]
+fn unknown_kernel_is_rejected_descriptively() {
+    let nn = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/nn.toml");
+    let nn = nn.to_str().unwrap();
+    for cmd in [
+        vec!["mc", "--variant", "smart", "--n-mc", "8", "--native", "--kernel", "warp"],
+        vec!["infer", nn, "--smoke", "--kernel", "warp"],
+        vec!["serve", "--self-test", "--smoke", "--kernel", "warp"],
+    ] {
+        let out = smart().args(&cmd).output().unwrap();
+        assert!(!out.status.success(), "{cmd:?} should fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            err.contains("unknown kernel 'warp'") && err.contains("scalar|block|fast"),
+            "{cmd:?}: {err}"
+        );
+        assert!(!err.contains("panicked"), "{cmd:?} panicked: {err}");
+    }
+}
+
+#[test]
+fn sweep_accepts_the_kernel_knob() {
+    // a tiny inline grid so the fast tier runs in milliseconds; the CSV
+    // carries the kernel token in every row (it is part of the resume key)
+    let spec = concat!(
+        "name = \"k\"\nseed = 7\nn_mc = 4\n",
+        "[grid]\nvariant = [\"smart\"]\nv_bulk = [0.6]\nbits = [2]\ncorner = [\"tt\"]\n"
+    );
+    let cfg = std::env::temp_dir().join(format!("smart_cli_ksweep_{}.toml", std::process::id()));
+    std::fs::write(&cfg, spec).unwrap();
+    let out_dir = std::env::temp_dir().join(format!("smart_cli_ksweep_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let out = smart()
+        .args([
+            "sweep",
+            cfg.to_str().unwrap(),
+            "--kernel",
+            "fast",
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let csv = std::fs::read_to_string(out_dir.join("sweep.csv")).unwrap();
+    assert!(csv.lines().next().unwrap().contains(",kernel,"), "{csv}");
+    assert!(csv.lines().nth(1).unwrap().contains(",fast,"), "{csv}");
+    let json = std::fs::read_to_string(out_dir.join("sweep.json")).unwrap();
+    assert!(json.contains("\"kernel\": \"fast\""), "{json}");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let _ = std::fs::remove_file(&cfg);
+}
+
+#[test]
+fn infer_kernel_knob_and_deprecated_scalar_alias() {
+    let cfg = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/nn.toml");
+    // explicit --kernel fast
+    let out = smart()
+        .args(["infer", cfg.to_str().unwrap(), "--smoke", "--kernel", "fast"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("top-1"));
+    // the deprecated boolean stays honored, with a warning on stderr
+    let out = smart()
+        .args(["infer", cfg.to_str().unwrap(), "--smoke", "--scalar"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--scalar is deprecated"), "{err}");
+    // ... and an explicit --kernel wins over the alias, silently for the
+    // alias (one warning, the kernel parser's choice takes effect)
+    let out = smart()
+        .args(["infer", cfg.to_str().unwrap(), "--smoke", "--scalar", "--kernel", "block"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+}
+
+#[test]
+fn serve_self_test_passes_on_the_fast_tier() {
+    let out = smart()
+        .args(["serve", "--self-test", "--smoke", "--workers", "2", "--kernel", "fast"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("serve self-test OK"));
 }
 
 #[test]

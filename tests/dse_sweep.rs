@@ -38,7 +38,14 @@ fn shard_thread_block_choices_never_change_artifacts() {
     let base_dir = tmp_dir("base");
     let base = run_sweep(
         &spec,
-        &SweepOptions { shards: 1, threads: 1, resume: false, out_dir: base_dir, block: 0 },
+        &SweepOptions {
+            shards: 1,
+            threads: 1,
+            resume: false,
+            out_dir: base_dir,
+            block: 0,
+            kernel: smart_insram::mac::KernelKind::Block,
+        },
     )
     .unwrap();
     assert_eq!(base.points.len(), 4);
@@ -49,7 +56,14 @@ fn shard_thread_block_choices_never_change_artifacts() {
         let dir = tmp_dir(&format!("s{shards}t{threads}b{block}"));
         let r = run_sweep(
             &spec,
-            &SweepOptions { shards, threads, block, resume: false, out_dir: dir },
+            &SweepOptions {
+                shards,
+                threads,
+                block,
+                resume: false,
+                out_dir: dir,
+                kernel: smart_insram::mac::KernelKind::Block,
+            },
         )
         .unwrap();
         assert_eq!(

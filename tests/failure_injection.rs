@@ -101,6 +101,7 @@ fn campaign_rejects_invalid_spec() {
         batch: 1,
         shards: 1,
         block: 0,
+        kernel: smart_insram::mac::KernelKind::Block,
     };
     assert!(run_campaign(&p, &spec, Backend::Native, None).is_err());
 }
@@ -119,6 +120,7 @@ fn corner_campaigns_shift_the_output_as_expected() {
         batch: 64,
         shards: 1,
         block: 0,
+        kernel: smart_insram::mac::KernelKind::Block,
     };
     let tt = run_campaign(&p, &mk(Corner::Tt), Backend::Native, None).unwrap();
     let ff = run_campaign(&p, &mk(Corner::Ff), Backend::Native, None).unwrap();

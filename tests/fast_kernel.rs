@@ -1,0 +1,320 @@
+//! Fast surrogate kernel tier (DESIGN.md §13): `FastKernel` must track
+//! the bit-exact `ScalarKernel` oracle within the committed error-bound
+//! contract on every bit-line endpoint, agree with it on every
+//! saturation-exit fault flag, and preserve the campaign layer's
+//! shard/thread/block byte-identity within the fast tier. The golden
+//! bounds live in `configs/fast_tol.toml`; this suite re-measures them
+//! and fails on any drift above the committed values, writing the
+//! measurements to `target/fast_tol_report.json` for CI.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::str::FromStr;
+
+use smart_insram::coordinator::{run_campaign, Backend, CampaignReport, CampaignSpec, Workload};
+use smart_insram::mac::{
+    FastKernel, KernelKind, NativeMacEngine, ScalarKernel, SimKernel, TrialBlock, Variant,
+    FAST_TOLERANCE,
+};
+use smart_insram::montecarlo::{Corner, MismatchSampler};
+use smart_insram::params::Params;
+use smart_insram::prop_assert;
+use smart_insram::util::json::{to_string_pretty, Value};
+use smart_insram::util::prop::check;
+
+/// Worst lane error and fault census of one fast-vs-oracle block run.
+struct Measured {
+    /// max |v_blb(fast) - v_blb(oracle)| over all 4*n_words lanes, on the
+    /// f32 endpoints the public API reports.
+    max_abs_dv: f64,
+    /// oracle fault flags raised (the fast kernel agreed on every one —
+    /// asserted before this is returned)
+    faults: u32,
+}
+
+/// Run the deterministic fixture block (operands a=(i*5+3)%16, b=i%16 so
+/// all 16 DAC codes appear) through both kernels and compare endpoints.
+fn measure(
+    variant: Variant,
+    corner: Corner,
+    vdd: f64,
+    t_sample: Option<f64>,
+    n_words: usize,
+    seed: u64,
+) -> Measured {
+    let mut p = Params::default();
+    p.device.vdd = vdd;
+    let mut cfg = variant.config(&p);
+    if let Some(t) = t_sample {
+        cfg.t_sample = t;
+    }
+    let engine = NativeMacEngine::new(p, cfg);
+
+    let mut fast = TrialBlock::with_capacity(n_words);
+    fast.reset(n_words);
+    let sampler = MismatchSampler::new(seed, p.circuit.sigma_vth, p.circuit.sigma_beta)
+        .with_corner(corner);
+    {
+        let (dvth, dbeta) = fast.deviates_mut();
+        sampler.fill_block(0, dvth, dbeta);
+    }
+    for i in 0..n_words {
+        fast.set_operands(i, ((i * 5 + 3) % 16) as u8, (i % 16) as u8);
+    }
+    let mut oracle = fast.clone();
+
+    FastKernel::shared().simulate(&engine, &mut fast);
+    ScalarKernel.simulate(&engine, &mut oracle);
+
+    let mut max_abs_dv = 0.0f64;
+    let mut faults = 0u32;
+    let tag = format!("{variant:?}/{corner:?} vdd={vdd} t_sample={t_sample:?}");
+    for i in 0..n_words {
+        assert_eq!(
+            fast.out.fault[i].to_bits(),
+            oracle.out.fault[i].to_bits(),
+            "{tag}: word {i} fault flag diverged"
+        );
+        if oracle.out.fault[i] > 0.5 {
+            faults += 1;
+        }
+        for k in 0..4 {
+            let dv = f64::from((fast.out.v_blb[i * 4 + k] - oracle.out.v_blb[i * 4 + k]).abs());
+            assert!(
+                dv <= FAST_TOLERANCE,
+                "{tag}: word {i} lane {k} error {dv:e} above FAST_TOLERANCE"
+            );
+            max_abs_dv = max_abs_dv.max(dv);
+        }
+    }
+    Measured { max_abs_dv, faults }
+}
+
+fn fixture_path() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/fast_tol.toml")
+}
+
+/// Golden regression: re-measure every committed `[[config]]` row of
+/// `configs/fast_tol.toml` and fail if the surrogate drifted above its
+/// committed bound. The measurements land in `target/fast_tol_report.json`
+/// so CI can archive the actual error profile next to the pass/fail bit.
+#[test]
+fn committed_tolerances_hold_on_the_fixture_grid() {
+    let text = std::fs::read_to_string(fixture_path()).unwrap();
+    let doc = smart_insram::util::toml_lite::parse(&text).unwrap();
+
+    let global = doc.path(&["global", "max_abs_dv"]).unwrap().as_f64().unwrap();
+    assert_eq!(
+        global.to_bits(),
+        FAST_TOLERANCE.to_bits(),
+        "global.max_abs_dv must mirror mac::FAST_TOLERANCE"
+    );
+    let n_words = doc.path(&["global", "n_words"]).unwrap().as_u64().unwrap() as usize;
+    let seed = doc.path(&["global", "seed"]).unwrap().as_u64().unwrap();
+
+    let rows = doc.get("config").unwrap().as_arr().unwrap();
+    assert!(rows.len() >= 10, "fixture grid shrank to {} rows", rows.len());
+
+    let mut report_rows = Vec::new();
+    let mut deep_faults = 0u32;
+    for row in rows {
+        let variant = Variant::from_str(row.get("variant").unwrap().as_str().unwrap()).unwrap();
+        let corner = Corner::from_str(row.get("corner").unwrap().as_str().unwrap()).unwrap();
+        let vdd = row.get("vdd").unwrap().as_f64().unwrap();
+        let t_sample = row.get("t_sample").and_then(Value::as_f64);
+        let bound = row.get("max_abs_dv").unwrap().as_f64().unwrap();
+        assert!(
+            bound <= global,
+            "row bound {bound:e} exceeds the global contract {global:e}"
+        );
+
+        let m = measure(variant, corner, vdd, t_sample, n_words, seed);
+        assert!(
+            m.max_abs_dv <= bound,
+            "{}/{} vdd={vdd} t_sample={t_sample:?}: measured {:e} drifted above \
+             the committed bound {bound:e}",
+            variant.token(),
+            corner.name(),
+            m.max_abs_dv
+        );
+        if t_sample.is_some() {
+            deep_faults += m.faults;
+        }
+
+        let mut r = BTreeMap::new();
+        r.insert("variant".to_string(), Value::Str(variant.token().to_string()));
+        r.insert("corner".to_string(), Value::Str(corner.name().to_string()));
+        r.insert("vdd".to_string(), Value::Num(vdd));
+        if let Some(t) = t_sample {
+            r.insert("t_sample".to_string(), Value::Num(t));
+        }
+        r.insert("committed_max_abs_dv".to_string(), Value::Num(bound));
+        r.insert("measured_max_abs_dv".to_string(), Value::Num(m.max_abs_dv));
+        r.insert("oracle_faults".to_string(), Value::Num(f64::from(m.faults)));
+        report_rows.push(Value::Obj(r));
+    }
+    // The grid must actually exercise the saturation-exit table path:
+    // the overlong-pulse rows fault on a large fraction of their lanes.
+    assert!(deep_faults >= 64, "deep-discharge rows faulted only {deep_faults} words");
+
+    let mut root = BTreeMap::new();
+    root.insert("tolerance".to_string(), Value::Num(FAST_TOLERANCE));
+    root.insert("n_words".to_string(), Value::Num(n_words as f64));
+    root.insert("configs".to_string(), Value::Arr(report_rows));
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("target/fast_tol_report.json");
+    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    std::fs::write(&out, to_string_pretty(&Value::Obj(root))).unwrap();
+}
+
+/// Property: on random blocks (variant, corner, supply, pulse length,
+/// operands, padding), every live lane endpoint stays within
+/// [`FAST_TOLERANCE`] of the oracle, fault flags agree bit for bit, and
+/// padding lanes stay zeroed.
+#[test]
+fn fast_endpoints_track_the_oracle_on_random_blocks() {
+    check(0xFA57_0007, 32, |g| {
+        let mut p = Params::default();
+        p.device.vdd = *g.pick(&[1.0, 0.9, 0.8]);
+        let variant = *g.pick(&Variant::ALL);
+        let mut cfg = variant.config(&p);
+        if g.usize_in(0, 3) == 0 {
+            cfg.t_sample = 2e-9; // deep discharge: the table is the hot path
+        }
+        let engine = NativeMacEngine::new(p, cfg);
+
+        let n = g.usize_in(1, 48);
+        let mut fast = TrialBlock::with_capacity(n);
+        fast.reset(n);
+        let sampler =
+            MismatchSampler::new(g.u64(1 << 40), p.circuit.sigma_vth, p.circuit.sigma_beta)
+                .with_corner(*g.pick(&[Corner::Tt, Corner::Ff, Corner::Ss]));
+        {
+            let (dvth, dbeta) = fast.deviates_mut();
+            sampler.fill_block(g.u64(1 << 20), dvth, dbeta);
+        }
+        for i in 0..n {
+            if g.usize_in(0, 9) == 0 {
+                continue; // ~10% padding lanes, left unset
+            }
+            fast.set_operands(i, g.u8_in(0, 15), g.u8_in(0, 15));
+        }
+        let mut oracle = fast.clone();
+
+        FastKernel::shared().simulate(&engine, &mut fast);
+        ScalarKernel.simulate(&engine, &mut oracle);
+
+        for i in 0..n {
+            prop_assert!(
+                fast.out.fault[i].to_bits() == oracle.out.fault[i].to_bits(),
+                "word {i}: fault flag diverged"
+            );
+            for k in 0..4 {
+                let dv = f64::from((fast.out.v_blb[i * 4 + k] - oracle.out.v_blb[i * 4 + k]).abs());
+                prop_assert!(
+                    dv <= FAST_TOLERANCE,
+                    "word {i} lane {k}: |dv| = {dv:e} above tolerance"
+                );
+            }
+            if fast.is_pad(i) {
+                prop_assert!(
+                    fast.out.v_mult[i] == 0.0 && fast.out.fault[i] == 0.0,
+                    "pad word {i} simulated"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Bitwise comparison of the aggregate statistics two campaign reports
+/// expose (the same set `tests/shard_determinism.rs` pins).
+fn assert_reports_bit_identical(a: &CampaignReport, b: &CampaignReport, label: &str) {
+    assert_eq!(a.rows, b.rows, "{label}: rows");
+    assert_eq!(a.raw_vmult.mean().to_bits(), b.raw_vmult.mean().to_bits(), "{label}: mean");
+    assert_eq!(
+        a.raw_vmult.std_dev().to_bits(),
+        b.raw_vmult.std_dev().to_bits(),
+        "{label}: sigma"
+    );
+    assert_eq!(
+        a.accuracy.sigma_norm.to_bits(),
+        b.accuracy.sigma_norm.to_bits(),
+        "{label}: sigma_norm"
+    );
+    assert_eq!(a.accuracy.ber.to_bits(), b.accuracy.ber.to_bits(), "{label}: ber");
+    assert_eq!(
+        a.accuracy.fault_rate.to_bits(),
+        b.accuracy.fault_rate.to_bits(),
+        "{label}: fault_rate"
+    );
+    assert_eq!(a.hist.counts(), b.hist.counts(), "{label}: histogram");
+    assert_eq!(a.energy.mean().to_bits(), b.energy.mean().to_bits(), "{label}: energy");
+    assert_eq!(a.per_op.len(), b.per_op.len(), "{label}: per_op");
+}
+
+/// Within the fast tier, `--shards`/`--threads`/`--block` stay pure
+/// performance knobs: aggregates are bit-identical for every choice (the
+/// DESIGN.md §9 contract, carried over to the surrogate kernel).
+#[test]
+fn fast_tier_aggregates_are_shard_thread_block_invariant() {
+    let p = Params::default();
+    let spec = |shards: usize, workers: usize, block: usize| CampaignSpec {
+        variant: Variant::Smart,
+        workload: Workload::FullSweep,
+        n_mc: 8,
+        seed: 2022,
+        corner: Corner::Tt,
+        workers,
+        batch: 0,
+        shards,
+        block,
+        kernel: KernelKind::Fast,
+    };
+    let base = run_campaign(&p, &spec(1, 1, 0), Backend::Native, None).unwrap();
+    assert_eq!(base.rows, 256 * 8);
+    for (shards, workers, block) in [(4, 2, 0), (7, 3, 5), (0, 0, 1), (2, 2, 999)] {
+        let r = run_campaign(&p, &spec(shards, workers, block), Backend::Native, None).unwrap();
+        assert_reports_bit_identical(
+            &base,
+            &r,
+            &format!("shards={shards} workers={workers} block={block}"),
+        );
+    }
+}
+
+/// The surrogate's aggregates land on top of the oracle's: the paper-level
+/// statistics a fast-tier campaign reports differ from the scalar tier by
+/// no more than the endpoint tolerance allows.
+#[test]
+fn fast_tier_campaign_statistics_track_the_oracle() {
+    let p = Params::default();
+    let spec = |kernel| CampaignSpec {
+        variant: Variant::Smart,
+        workload: Workload::FullSweep,
+        n_mc: 8,
+        seed: 7,
+        corner: Corner::Tt,
+        workers: 1,
+        batch: 0,
+        shards: 1,
+        block: 0,
+        kernel,
+    };
+    let fast = run_campaign(&p, &spec(KernelKind::Fast), Backend::Native, None).unwrap();
+    let exact = run_campaign(&p, &spec(KernelKind::Scalar), Backend::Native, None).unwrap();
+    assert_eq!(fast.rows, exact.rows);
+    // v_mult folds 4 lanes with weights summing to 8.52; a per-lane bound
+    // of FAST_TOLERANCE bounds the fold by 8.52x that.
+    let bound = 10.0 * FAST_TOLERANCE;
+    assert!(
+        (fast.raw_vmult.mean() - exact.raw_vmult.mean()).abs() <= bound,
+        "fast mean {} vs oracle {}",
+        fast.raw_vmult.mean(),
+        exact.raw_vmult.mean()
+    );
+    assert_eq!(
+        fast.accuracy.fault_rate.to_bits(),
+        exact.accuracy.fault_rate.to_bits(),
+        "fault rates must agree exactly (flag-level agreement)"
+    );
+}

@@ -83,8 +83,17 @@ fn scalar_and_block_kernels_are_bit_identical_on_a_full_inference() {
     let p = Params::default();
     let base = InferOptions { trials: 6, ..InferOptions::default() };
     let block = run_infer(&p, &spec, &base).unwrap();
-    let scalar =
-        run_infer(&p, &spec, &InferOptions { scalar: true, block: 7, shards: 3, ..base }).unwrap();
+    let scalar = run_infer(
+        &p,
+        &spec,
+        &InferOptions {
+            kernel: smart_insram::mac::KernelKind::Scalar,
+            block: 7,
+            shards: 3,
+            ..base
+        },
+    )
+    .unwrap();
     assert_eq!(block.kernel, "block");
     assert_eq!(scalar.kernel, "scalar");
     assert_eq!(block.records.len(), scalar.records.len());

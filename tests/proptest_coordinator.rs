@@ -167,6 +167,7 @@ fn spec_toml_roundtrip_random() {
             batch: g.usize_in(0, 2048),
             shards: g.usize_in(0, 64),
             block: g.usize_in(0, 512),
+            kernel: *g.pick(&smart_insram::mac::KernelKind::ALL),
         };
         let doc = smart_insram::util::toml_lite::parse(&spec.to_toml())
             .map_err(|e| format!("parse: {e}"))?;

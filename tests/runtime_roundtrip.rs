@@ -180,6 +180,7 @@ fn xla_campaign_matches_native_campaign() {
         batch: 256,
         shards: 0,
         block: 0,
+        kernel: smart_insram::mac::KernelKind::Block,
     };
     let x = run_campaign(&params, &spec, Backend::Xla, Some(dir)).unwrap();
     let n = run_campaign(&params, &spec, Backend::Native, None).unwrap();
@@ -209,6 +210,7 @@ fn worker_pool_scales_and_preserves_results() {
         batch: 256,
         shards: 0,
         block: 0,
+        kernel: smart_insram::mac::KernelKind::Block,
     };
     let one = run_campaign(&params, &mk(1), Backend::Xla, Some(dir.clone())).unwrap();
     let four = run_campaign(&params, &mk(4), Backend::Xla, Some(dir)).unwrap();

@@ -21,6 +21,7 @@ fn mc_spec(variant: Variant, workload: Workload, shards: usize, workers: usize) 
         batch: 0,
         shards,
         block: 0,
+        kernel: smart_insram::mac::KernelKind::Block,
     }
 }
 
