@@ -210,6 +210,104 @@ pub fn run_native_campaign_with(
     Ok(agg.finish(t0.elapsed()))
 }
 
+/// Run several campaigns that share one variant and kernel tier through
+/// ONE engine, ONE kernel instance, and ONE reusable [`TrialBlock`],
+/// returning one report per spec in input order.
+///
+/// This is the serving path's cross-request batching primitive
+/// (DESIGN.md §14): when a group of small compatible requests arrives,
+/// the engine construction and — on the fast tier — the shared
+/// surrogate tables amortize across all of them instead of being paid
+/// per request. Each spec still replicates the solo runner's shard and
+/// chunk arithmetic exactly and folds blocks in canonical item order,
+/// so every report is **bit-identical** to what
+/// [`run_native_campaign_with`] would produce for that spec alone
+/// ([`TrialBlock::reset`] fully resizes the SoA buffers, making block
+/// reuse byte-safe; property-tested in `tests/serve.rs`).
+///
+/// Specs run sequentially on the caller's thread: merged groups are
+/// small (the serve `--batch-max` bound), and keeping one thread per
+/// group lets the service's worker pool parallelize across groups
+/// instead of within them.
+pub fn run_native_campaigns_merged(
+    params: &Params,
+    specs: &[CampaignSpec],
+) -> Result<Vec<CampaignReport>> {
+    let Some(first) = specs.first() else {
+        return Ok(Vec::new());
+    };
+    for s in specs {
+        s.validate().map_err(|e| anyhow::anyhow!(e))?;
+        anyhow::ensure!(
+            s.variant == first.variant && s.kernel == first.kernel,
+            "merged campaigns must share one variant and kernel tier (got {}/{} vs {}/{})",
+            s.variant.token(),
+            s.kernel.token(),
+            first.variant.token(),
+            first.kernel.token()
+        );
+    }
+    let kernel: &dyn SimKernel = match first.kernel {
+        KernelKind::Scalar => &ScalarKernel,
+        KernelKind::Block => &BlockKernel,
+        KernelKind::Fast => FastKernel::shared(),
+    };
+    let cfg = first.variant.config(params);
+    let engine = NativeMacEngine::new(*params, cfg);
+    let full_scale = engine.full_scale();
+    let mut block = TrialBlock::with_capacity(DEFAULT_BLOCK_LEN);
+    let mut reports = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let operands = spec.workload.operands(spec.seed);
+        let sampler =
+            MismatchSampler::new(spec.seed, params.circuit.sigma_vth, params.circuit.sigma_beta)
+                .with_corner(spec.corner);
+        let total = spec.total_items(operands.len());
+        let block_len = if spec.block > 0 {
+            spec.block
+        } else if spec.batch > 0 {
+            spec.batch
+        } else {
+            DEFAULT_BLOCK_LEN
+        };
+        let threads = resolve_threads(spec.workers);
+        let n_blocks = total.div_ceil(block_len as u64).max(1) as usize;
+        let n_shards = if spec.shards > 0 { spec.shards } else { n_blocks.min(threads * 4) };
+        // lint:allow(D6): elapsed feeds the report's console wall field only, never artifact bytes
+        let t0 = Instant::now();
+        let mut agg = Aggregator::new(full_scale, 64);
+        let n_mc = u64::from(spec.n_mc);
+        // Identical shard/chunk arithmetic to the solo runner, executed
+        // in shard order — the same canonical fold order the threaded
+        // path reduces in.
+        for shard in 0..n_shards {
+            let (start, end) = shard_range(total, n_shards, shard);
+            let shard_block = block_len.min((end - start).max(1) as usize);
+            let mut cursor = start;
+            while cursor < end {
+                let n = shard_block.min((end - cursor) as usize);
+                block.reset(n);
+                let (dvth, dbeta) = block.deviates_mut();
+                sampler.fill_block(cursor, dvth, dbeta);
+                let mut tags = Vec::with_capacity(n);
+                for i in 0..n {
+                    let k = cursor + i as u64;
+                    let op_idx = (k / n_mc) as u32;
+                    let mc_idx = (k % n_mc) as u32;
+                    let (a, b) = operands[op_idx as usize];
+                    block.set_operands(i, a, b);
+                    tags.push(RowTag::Item { op_idx, mc_idx, a, b });
+                }
+                kernel.simulate(&engine, &mut block);
+                agg.push_block(&tags, &block.out);
+                cursor += n as u64;
+            }
+        }
+        reports.push(agg.finish(t0.elapsed()));
+    }
+    Ok(reports)
+}
+
 /// A reusable campaign executor: the worker pool (and its compiled PJRT
 /// executables) persist across campaigns of the same batch size. For
 /// drivers that run many campaigns (mc_sweep, the benches, services) this
@@ -436,6 +534,46 @@ mod tests {
         );
         assert_eq!(block.hist.counts(), scalar.hist.counts());
         assert_eq!(block.energy.mean().to_bits(), scalar.energy.mean().to_bits());
+    }
+
+    #[test]
+    fn merged_campaigns_bit_match_their_solo_runs() {
+        let p = Params::default();
+        let mut a = CampaignSpec::paper_fig8(Variant::Smart);
+        a.n_mc = 24;
+        a.workers = 1;
+        let mut b = a.clone();
+        b.seed ^= 7; // same variant/kernel, different campaign
+        let mut c = a.clone();
+        c.workload = Workload::Random { n_ops: 3 };
+        let specs = [a, b, c];
+        let merged = run_native_campaigns_merged(&p, &specs).unwrap();
+        assert_eq!(merged.len(), specs.len());
+        for (spec, m) in specs.iter().zip(&merged) {
+            let solo = run_campaign(&p, spec, Backend::Native, None).unwrap();
+            assert_eq!(m.rows, solo.rows);
+            assert_eq!(m.raw_vmult.mean().to_bits(), solo.raw_vmult.mean().to_bits());
+            assert_eq!(
+                m.accuracy.sigma_norm.to_bits(),
+                solo.accuracy.sigma_norm.to_bits()
+            );
+            assert_eq!(m.hist.counts(), solo.hist.counts());
+            assert_eq!(m.energy.mean().to_bits(), solo.energy.mean().to_bits());
+        }
+    }
+
+    #[test]
+    fn merged_campaigns_reject_mixed_variants_or_kernels() {
+        let p = Params::default();
+        let a = CampaignSpec::paper_fig8(Variant::Smart);
+        let b = CampaignSpec::paper_fig8(Variant::Aid);
+        let err = run_native_campaigns_merged(&p, &[a.clone(), b]).unwrap_err().to_string();
+        assert!(err.contains("variant"), "{err}");
+        let mut f = a.clone();
+        f.kernel = KernelKind::Fast;
+        let err = run_native_campaigns_merged(&p, &[a, f]).unwrap_err().to_string();
+        assert!(err.contains("kernel"), "{err}");
+        assert!(run_native_campaigns_merged(&p, &[]).unwrap().is_empty());
     }
 
     #[test]

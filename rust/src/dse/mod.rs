@@ -40,6 +40,8 @@ mod spec;
 
 pub use pareto::pareto_flags;
 pub use runner::{
-    point_key, run_grid_point, run_sweep, sweep_json, PointResult, SweepOptions, SweepResult,
+    point_key, point_result, run_grid_point, run_sweep, sweep_json, PointResult, SweepOptions,
+    SweepResult,
 };
+pub(crate) use runner::card_fingerprint;
 pub use spec::{GridAxes, GridPoint, SweepSpec};

@@ -213,7 +213,21 @@ pub fn run_grid_point(
     );
     let rep = run_campaign(&params, &cspec, Backend::Native, None)
         .with_context(|| format!("grid point {} ({})", point.index, point.label()))?;
+    Ok(point_result(spec, point, &rep))
+}
 
+/// Fold a finished campaign report into one grid point's canonical
+/// statistics: the energy model evaluated at the point's operating
+/// conditions, every float canonicalized to artifact precision. Public
+/// so embedders that run the campaign themselves (the `smart serve`
+/// batching layer merges compatible points through one engine) reach
+/// byte-identical numbers to [`run_grid_point`].
+pub fn point_result(
+    spec: &SweepSpec,
+    point: &GridPoint,
+    rep: &crate::coordinator::CampaignReport,
+) -> PointResult {
+    let params = point.apply(&spec.params);
     // Per-MAC cost at this operating point: the campaign's workload-mean
     // raw bitline energy through the peripheral model. op_energy's
     // contract is raw energy from the 1 V card rescaled by supply^2
@@ -228,7 +242,7 @@ pub fn run_grid_point(
     let v_wl_max = dac.v_wl(((1u16 << point.bits) - 1) as u8);
     let cost = EnergyModel::default().cost(&cfg, raw_1v, rep.full_scale, v_wl_max);
 
-    Ok(PointResult {
+    PointResult {
         point: *point,
         rows: rep.rows,
         sigma_norm: canon(rep.accuracy.sigma_norm),
@@ -237,7 +251,7 @@ pub fn run_grid_point(
         fault_rate: canon(rep.accuracy.fault_rate),
         energy_pj: canon(cost.energy * 1e12),
         freq_mhz: canon(cost.frequency / 1e6),
-    })
+    }
 }
 
 /// The canonical identity key of one grid point under one sweep spec and
@@ -263,8 +277,10 @@ pub fn point_key(p: &GridPoint, spec: &SweepSpec, kernel: KernelKind) -> String 
 /// FNV-1a fingerprint of the base model card, EXCLUDING `device.vdd` and
 /// `circuit.v_bulk_smart` (those are per-point key columns already).
 /// Any other `[params.*]` override changes the fingerprint, so `--resume`
-/// never reuses rows computed under a different card.
-fn card_fingerprint(p: &crate::params::Params) -> String {
+/// never reuses rows computed under a different card. Crate-visible so
+/// the `smart serve` batching layer can use it as a compatibility-group
+/// field for `/v1/sweep/point` coalescing.
+pub(crate) fn card_fingerprint(p: &crate::params::Params) -> String {
     let d = &p.device;
     let c = &p.circuit;
     let canon = format!(

@@ -86,21 +86,31 @@ COMMANDS:
                                integer pipeline); --scalar is a deprecated
                                alias for --kernel scalar;
                                --smoke caps trials at 8 for CI
-  serve [--addr A] [--workers N] [--cache-cap N]
-        [--self-test] [--kernel scalar|block|fast] [--smoke] [--json]
-        [--out DIR]
+  serve [--addr A] [--workers N] [--cache-cap BYTES] [--cache-dir DIR]
+        [--batch-max N] [--self-test] [--kernel scalar|block|fast]
+        [--smoke] [--json] [--out DIR]
                                long-lived campaign-result service:
                                POST /v1/mc, /v1/sweep/point, /v1/infer
                                (JSON bodies mirroring the TOML specs),
                                GET /v1/health, /v1/stats; responses are
                                byte-identical to the CLI --json
-                               artifacts and repeat requests are served
-                               from a spec-keyed LRU cache; --self-test
-                               starts an ephemeral server, hammers it
-                               with concurrent loopback clients, and
-                               asserts byte-identity + cache hit-rate
+                               artifacts, served through a spec-keyed
+                               byte-budgeted LRU (--cache-cap bytes), an
+                               optional disk tier (--cache-dir) that
+                               survives restarts, a single-flight map
+                               (concurrent identical misses cost one
+                               campaign), and a coalescer that merges up
+                               to --batch-max compatible infer/sweep
+                               requests into one engine execution;
+                               --self-test starts an ephemeral server,
+                               hammers it with concurrent loopback
+                               clients, and asserts byte-identity,
+                               cache hit-rate, thundering-herd dedup,
+                               batched-vs-solo byte-identity, and
+                               kill/restart warm-start from disk
                                (--smoke shrinks it for CI, --json writes
-                               SERVE_stats.json to --out)
+                               SERVE_stats.json + BENCH_serve.json to
+                               --out)
   lint [paths...] [--json] [--out DIR]
                                determinism/robustness static analysis
                                (rules D1-D6, DESIGN.md §12): lexes the
@@ -520,10 +530,13 @@ fn cmd_bench(
 
 /// `smart serve`: start the campaign-result service, or (with
 /// `--self-test`) run the loopback load generator against an ephemeral
-/// instance and assert the service contract — byte-identity with the CLI
-/// `--json` artifacts, cache hit-rate, histogram NaN integrity. With
-/// `--json` the self-test writes the server's final `/v1/stats` body to
-/// `--out`/SERVE_stats.json (the CI smoke artifact).
+/// instance and assert the full serving contract — byte-identity with
+/// the CLI `--json` artifacts, cache hit-rate, thundering-herd dedup,
+/// batched-vs-solo byte-identity, kill/restart warm-start from disk,
+/// histogram NaN integrity. With `--json` the self-test writes the
+/// server's final `/v1/stats` body to `--out`/SERVE_stats.json and the
+/// benchmark record (throughput, p50/p95/p99 latency, hit/dedup/batch
+/// counters) to `--out`/BENCH_serve.json (the CI smoke artifacts).
 fn cmd_serve(params: &Params, args: &Args) -> Result<()> {
     use smart_insram::serve::{self_test, ServeOptions, Server};
     let workers = {
@@ -542,6 +555,15 @@ fn cmd_serve(params: &Params, args: &Args) -> Result<()> {
             ServeOptions::default().cache_cap
         }
     };
+    let batch_max = {
+        let b = knob(args, "batch-max")?;
+        if b > 0 {
+            b
+        } else {
+            ServeOptions::default().batch_max
+        }
+    };
+    let cache_dir = args.opt("cache-dir").map(PathBuf::from);
     if args.flag("self-test") {
         let r = self_test(params, workers, args.flag("smoke"), kernel_opt(args)?)?;
         println!(
@@ -549,14 +571,27 @@ fn cmd_serve(params: &Params, args: &Args) -> Result<()> {
              ({} clients x {} repeats x 3 endpoints, byte-identical to the CLI artifacts)",
             r.requests, r.hits, r.misses, r.clients, r.repeats
         );
+        println!(
+            "  herd: {} clients -> 1 campaign ({} deduped); batch: {} jobs -> {} group(s); \
+             warm start: {} disk entries, 0 recomputed",
+            r.herd_clients, r.deduped, r.batched, r.batch_groups, r.warm_entries
+        );
+        println!(
+            "  hit-phase: {:.0} req/s, latency p50 {} us / p95 {} us / p99 {} us",
+            r.throughput_rps, r.p50_us, r.p95_us, r.p99_us
+        );
         if args.flag("json") {
             let out: PathBuf = args.opt("out").map(PathBuf::from).unwrap_or_else(|| ".".into());
             std::fs::create_dir_all(&out)
                 .map_err(|e| anyhow::anyhow!("creating {}: {e}", out.display()))?;
-            let path = out.join("SERVE_stats.json");
-            std::fs::write(&path, &r.stats_json)
-                .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
-            println!("wrote {}", path.display());
+            for (name, text) in
+                [("SERVE_stats.json", &r.stats_json), ("BENCH_serve.json", &r.bench_json)]
+            {
+                let path = out.join(name);
+                std::fs::write(&path, text)
+                    .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+                println!("wrote {}", path.display());
+            }
         }
         return Ok(());
     }
@@ -564,13 +599,21 @@ fn cmd_serve(params: &Params, args: &Args) -> Result<()> {
         addr: args.opt("addr").unwrap_or("127.0.0.1:7878").to_string(),
         workers,
         cache_cap,
+        cache_dir,
+        batch_max,
     };
     let mut server = Server::start(*params, &opts)?;
     println!(
-        "smart serve listening on {} ({} workers, cache capacity {})",
+        "smart serve listening on {} ({} workers, cache budget {} bytes, disk tier {}, \
+         batch window {})",
         server.addr(),
         opts.workers,
-        opts.cache_cap
+        opts.cache_cap,
+        match &opts.cache_dir {
+            Some(d) => d.display().to_string(),
+            None => "off".to_string(),
+        },
+        opts.batch_max
     );
     println!("endpoints: POST /v1/mc /v1/sweep/point /v1/infer ; GET /v1/health /v1/stats");
     server.join();

@@ -176,22 +176,80 @@ fn rel_l2(noisy: &[f64], exact: &[f64]) -> f64 {
 /// assert_eq!(r.out_err.max(), 0.0);
 /// ```
 pub fn run_infer(params: &Params, spec: &ModelSpec, opts: &InferOptions) -> Result<InferReport> {
+    let cfg = opts.variant.config(params);
+    let engine = NativeMacEngine::new(*params, cfg);
+    // One calibration table (256 nominal transients) shared by every
+    // shard's tiler — cloning 1 KB beats re-simulating it per shard.
+    let cal = Tiler::calibrate(&engine);
+    run_infer_on(params, spec, opts, &engine, kernel_for(opts.kernel), &cal)
+}
+
+/// Run several inference campaigns that share one variant and kernel
+/// tier through ONE engine, ONE kernel instance, and ONE calibration
+/// table, returning one report per job in input order.
+///
+/// The serving path's `/v1/infer` cross-request batching primitive
+/// (DESIGN.md §14): engine construction and the tiler calibration
+/// transients amortize across the whole group. Each job still runs
+/// [`run_infer_on`]'s exact trial loop, so every report — and therefore
+/// every [`infer_json`] body — is **byte-identical** to a solo
+/// [`run_infer`] of the same job for any batch size (pinned in
+/// `tests/serve.rs`).
+pub fn run_infer_batch(
+    params: &Params,
+    jobs: &[(ModelSpec, InferOptions)],
+) -> Result<Vec<InferReport>> {
+    let Some((_, first)) = jobs.first() else {
+        return Ok(Vec::new());
+    };
+    for (_, o) in jobs {
+        anyhow::ensure!(
+            o.variant == first.variant && o.kernel == first.kernel,
+            "batched inferences must share one variant and kernel tier (got {}/{} vs {}/{})",
+            o.variant.token(),
+            o.kernel.token(),
+            first.variant.token(),
+            first.kernel.token()
+        );
+    }
+    let cfg = first.variant.config(params);
+    let engine = NativeMacEngine::new(*params, cfg);
+    let kernel = kernel_for(first.kernel);
+    let cal = Tiler::calibrate(&engine);
+    jobs.iter().map(|(spec, opts)| run_infer_on(params, spec, opts, &engine, kernel, &cal)).collect()
+}
+
+/// Map a kernel tier to its shared kernel instance.
+fn kernel_for(kind: KernelKind) -> &'static dyn SimKernel {
+    match kind {
+        KernelKind::Scalar => &ScalarKernel,
+        KernelKind::Block => &BlockKernel,
+        KernelKind::Fast => FastKernel::shared(),
+    }
+}
+
+/// The inference campaign core over an explicit engine, kernel, and
+/// calibration table — the shared substrate of [`run_infer`] (which
+/// builds all three for one spec) and [`run_infer_batch`] (which builds
+/// them once per compatible group).
+fn run_infer_on(
+    params: &Params,
+    spec: &ModelSpec,
+    opts: &InferOptions,
+    engine: &NativeMacEngine,
+    kernel: &dyn SimKernel,
+    cal: &[f32],
+) -> Result<InferReport> {
     spec.validate().map_err(|e| anyhow::anyhow!(e))?;
     let trials = if opts.trials > 0 { opts.trials } else { spec.trials };
     let model = spec.build(trials);
     let cfg = opts.variant.config(params);
-    let engine = NativeMacEngine::new(*params, cfg);
     let (sv, sb) = if opts.noise_off {
         (0.0, 0.0)
     } else {
         (params.circuit.sigma_vth, params.circuit.sigma_beta)
     };
     let sampler = MismatchSampler::new(spec.seed, sv, sb);
-    let kernel: &dyn SimKernel = match opts.kernel {
-        KernelKind::Scalar => &ScalarKernel,
-        KernelKind::Block => &BlockKernel,
-        KernelKind::Fast => FastKernel::shared(),
-    };
     let emodel = EnergyModel::default();
     let v_wl_max = engine.dac().v_wl(15);
     let ops = model.ops_per_trial();
@@ -204,12 +262,9 @@ pub fn run_infer(params: &Params, spec: &ModelSpec, opts: &InferOptions) -> Resu
 
     // lint:allow(D6): elapsed feeds the console timing line only, never artifact bytes
     let t0 = Instant::now();
-    // One calibration table (256 nominal transients) shared by every
-    // shard's tiler — cloning 1 KB beats re-simulating it per shard.
-    let cal = Tiler::calibrate(&engine);
     let run_shard = |shard: usize| {
         let (start, end) = shard_range(total, n_shards, shard);
-        let mut tiler = Tiler::with_calibration(&engine, kernel, &sampler, block_len, cal.clone());
+        let mut tiler = Tiler::with_calibration(engine, kernel, &sampler, block_len, cal.to_vec());
         let mut recs = Vec::with_capacity((end - start) as usize);
         for t in start..end {
             let (label, xs) = model.spec.trial_input(t);
@@ -412,6 +467,36 @@ mod tests {
         assert!(r.energy_per_inference_pj > 0.0);
         assert!((0.0..=1.0).contains(&r.noisy_accuracy));
         assert!(r.records.windows(2).all(|w| w[0].trial < w[1].trial));
+    }
+
+    #[test]
+    fn batched_inferences_byte_match_their_solo_runs() {
+        let p = Params::default();
+        let mut other = ModelSpec::fixture();
+        other.seed ^= 3; // same variant/kernel, different model stream
+        let opts = InferOptions { trials: 3, ..InferOptions::default() };
+        let jobs = vec![(ModelSpec::fixture(), opts.clone()), (other, opts)];
+        let batch = run_infer_batch(&p, &jobs).unwrap();
+        assert_eq!(batch.len(), jobs.len());
+        for ((spec, o), r) in jobs.iter().zip(&batch) {
+            let solo = run_infer(&p, spec, o).unwrap();
+            assert_eq!(infer_json(spec, r), infer_json(spec, &solo));
+        }
+    }
+
+    #[test]
+    fn batched_inferences_reject_mixed_tiers() {
+        let p = Params::default();
+        let jobs = vec![
+            (ModelSpec::fixture(), InferOptions::default()),
+            (
+                ModelSpec::fixture(),
+                InferOptions { variant: Variant::Aid, ..InferOptions::default() },
+            ),
+        ];
+        let err = run_infer_batch(&p, &jobs).unwrap_err().to_string();
+        assert!(err.contains("variant"), "{err}");
+        assert!(run_infer_batch(&p, &[]).unwrap().is_empty());
     }
 
     #[test]

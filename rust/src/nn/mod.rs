@@ -44,7 +44,7 @@ mod quant;
 mod tensor;
 mod tiler;
 
-pub use eval::{infer_json, run_infer, InferOptions, InferReport, TrialRecord};
+pub use eval::{infer_json, run_infer, run_infer_batch, InferOptions, InferReport, TrialRecord};
 pub use layer::{DenseLayer, LayerSpec};
 pub use model::{DatasetSpec, Model, ModelSpec};
 pub use quant::{nibble, QParams, QuantMatrix, QuantVec};

@@ -1,0 +1,451 @@
+//! Cross-request trial batching: group-commit coalescing of small
+//! compatible `/v1/infer` and `/v1/sweep/point` computations.
+//!
+//! DSE-style clients hammer the service with many *near*-identical
+//! requests — same model card and grid axes, different seeds or trial
+//! ranges — that the cache and single-flight layers cannot collapse
+//! because their canonical keys differ. This layer coalesces them at the
+//! engine level instead: requests whose **compatibility key** matches
+//! (same variant + kernel tier, and for sweep points the same operating
+//! conditions and card fingerprint) merge into one shared execution
+//! where the SoA engine, the `FastKernel` tables, and the tiler
+//! calibration amortize across users
+//! ([`crate::coordinator::run_native_campaigns_merged`],
+//! [`crate::nn::run_infer_batch`]).
+//!
+//! The protocol is group-commit: the first submitter of a compatibility
+//! key becomes the *group leader*; while it stalls at the compute
+//! [`Gate`] (and, in production, simply while its own computation is
+//! pending), later compatible submitters enqueue. The leader drains up
+//! to `batch_max` jobs per merged execution (its own job rides in the
+//! first group), delivers each body to its submitter, and keeps
+//! draining until the queue is empty before retiring. Every body is
+//! **byte-identical** to the solo computation of the same request — the
+//! merged runners replicate the solo loops exactly — so coalescing is a
+//! pure performance layer that never forks cache keys.
+//!
+//! Compatibility keys are coarser than cache keys (they drop the
+//! per-request identity fields that the merged runners handle per job),
+//! but for sweep points they carry `csv_cell`-precision floats; two
+//! requests can collide on the key with different exact cards, so the
+//! sweep executor re-partitions each group by exact [`Params`] equality
+//! before merging.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+
+use crate::coordinator::{run_native_campaigns_merged, CampaignSpec};
+use crate::dse::{card_fingerprint, point_result, sweep_json, GridPoint, SweepSpec};
+use crate::mac::{KernelKind, Variant};
+use crate::nn::{infer_json, run_infer_batch, InferOptions, ModelSpec};
+use crate::params::Params;
+use crate::report::csv_cell;
+
+use super::flight::Gate;
+use super::stats::{Monotonic, ServeStats};
+
+/// One batchable computation.
+pub enum Job {
+    /// A `/v1/infer` request (spec and serve-shaped options).
+    Infer {
+        /// The parsed model spec.
+        spec: ModelSpec,
+        /// Execution options (variant/kernel/noise_off as requested).
+        opts: InferOptions,
+    },
+    /// A `/v1/sweep/point` request.
+    SweepPoint {
+        /// The single-point sweep spec (card included).
+        spec: SweepSpec,
+        /// The one expanded grid point.
+        point: GridPoint,
+        /// Kernel tier the point runs on.
+        kernel: KernelKind,
+    },
+}
+
+/// Compatibility key for `/v1/infer` jobs: the fields the merged infer
+/// runner must hold fixed across a group (everything else — seed,
+/// trials, layers, noise_off — is per-job).
+pub fn infer_compat(variant: Variant, kernel: KernelKind) -> String {
+    format!("infer\n{}\n{}", variant.token(), kernel.token())
+}
+
+/// Compatibility key for `/v1/sweep/point` jobs: variant + kernel tier
+/// plus the operating conditions and card fingerprint that pin the
+/// merged campaign engine. Floats render at `csv_cell` precision, so
+/// the executor re-checks exact [`Params`] equality before merging.
+pub fn sweep_compat(spec: &SweepSpec, point: &GridPoint, kernel: KernelKind) -> String {
+    format!(
+        "sweep\n{}\n{}\n{}\n{}\n{}",
+        point.variant.token(),
+        kernel.token(),
+        csv_cell(point.vdd),
+        csv_cell(point.v_bulk),
+        card_fingerprint(&spec.params)
+    )
+}
+
+/// A follower's delivery slot: the leader stores the job's outcome and
+/// signals the condvar.
+type SlotCell = Arc<(Mutex<Option<Result<String, String>>>, Condvar)>;
+
+/// One queued follower.
+struct Cell {
+    job: Job,
+    slot: SlotCell,
+}
+
+/// Queue state shared by all submitters.
+struct State {
+    /// Compatibility keys with an active group leader.
+    leaders: BTreeSet<String>,
+    /// Followers queued per compatibility key, in arrival order.
+    pending: BTreeMap<String, Vec<Cell>>,
+}
+
+/// The group-commit coalescer.
+pub struct Coalescer {
+    params: Params,
+    batch_max: usize,
+    gate: Arc<Gate>,
+    stats: Arc<ServeStats>,
+    state: Mutex<State>,
+    batched: Monotonic,
+    groups: Monotonic,
+}
+
+impl Coalescer {
+    /// A coalescer over the server's model card. `batch_max` bounds the
+    /// jobs per merged execution (clamped to >= 1); the [`Gate`] is the
+    /// shared compute gate the self-test pauses.
+    pub fn new(params: Params, batch_max: usize, gate: Arc<Gate>, stats: Arc<ServeStats>) -> Self {
+        Coalescer {
+            params,
+            batch_max: batch_max.max(1),
+            gate,
+            stats,
+            state: Mutex::new(State { leaders: BTreeSet::new(), pending: BTreeMap::new() }),
+            batched: Monotonic::new(),
+            groups: Monotonic::new(),
+        }
+    }
+
+    /// Submit one job under its compatibility key and block until its
+    /// body is ready. The body is byte-identical to the solo
+    /// computation; `Err` carries a message for a 500 response.
+    pub fn submit(&self, compat: &str, job: Job) -> Result<String, String> {
+        let mut job = Some(job);
+        let follower_slot = {
+            let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+            if st.leaders.contains(compat) {
+                let slot: SlotCell = Arc::new((Mutex::new(None), Condvar::new()));
+                if let Some(job) = job.take() {
+                    st.pending
+                        .entry(compat.to_string())
+                        .or_default()
+                        .push(Cell { job, slot: Arc::clone(&slot) });
+                }
+                Some(slot)
+            } else {
+                st.leaders.insert(compat.to_string());
+                None
+            }
+        };
+        match follower_slot {
+            Some(slot) => {
+                let (result, cv) = &*slot;
+                let mut r = result.lock().unwrap_or_else(PoisonError::into_inner);
+                loop {
+                    if let Some(outcome) = r.take() {
+                        return outcome;
+                    }
+                    r = cv.wait(r).unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+            None => {
+                let Some(job) = job.take() else {
+                    return Err("coalescer lost the leader's job".to_string());
+                };
+                self.lead(compat, job)
+            }
+        }
+    }
+
+    /// Group-leader loop: drain and execute merged groups until the
+    /// compatibility queue is empty, then retire leadership.
+    fn lead(&self, compat: &str, job: Job) -> Result<String, String> {
+        // Leadership is registered, so compatible followers can enqueue
+        // while we stall here — this is what lets the self-test pile a
+        // whole group up behind one paused gate.
+        self.gate.wait();
+        let mut own: Option<Result<String, String>> = None;
+        let mut own_pending = Some(job);
+        loop {
+            let mut cells: Vec<Cell> = Vec::new();
+            let finished = {
+                let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+                let room = self.batch_max - usize::from(own_pending.is_some());
+                if let Some(q) = st.pending.get_mut(compat) {
+                    let take = q.len().min(room.max(usize::from(own_pending.is_none())));
+                    cells.extend(q.drain(..take));
+                }
+                let finished = own_pending.is_none() && cells.is_empty();
+                if finished {
+                    // Deregister under the same lock that enqueues, so a
+                    // late submitter either lands in a queue we will
+                    // drain or becomes the next leader — never both.
+                    st.leaders.remove(compat);
+                    st.pending.remove(compat);
+                }
+                finished
+            };
+            if finished {
+                break;
+            }
+            let own_this_round = own_pending.take();
+            let n_jobs = cells.len() + usize::from(own_this_round.is_some());
+            if n_jobs >= 2 {
+                self.groups.incr();
+                self.batched.add(n_jobs as u64);
+            }
+            let mut jobs: Vec<&Job> = Vec::with_capacity(n_jobs);
+            if let Some(j) = own_this_round.as_ref() {
+                jobs.push(j);
+            }
+            jobs.extend(cells.iter().map(|c| &c.job));
+            match exec_group(&self.params, &jobs) {
+                Ok(bodies) => {
+                    // One spec computation actually executed per job.
+                    self.stats.campaigns.add(jobs.len() as u64);
+                    let mut bodies = bodies.into_iter();
+                    if own_this_round.is_some() {
+                        own = bodies.next().map(Ok);
+                    }
+                    for (cell, body) in cells.iter().zip(bodies) {
+                        deliver(&cell.slot, Ok(body));
+                    }
+                }
+                Err(msg) => {
+                    if own_this_round.is_some() {
+                        own = Some(Err(msg.clone()));
+                    }
+                    for cell in &cells {
+                        deliver(&cell.slot, Err(msg.clone()));
+                    }
+                }
+            }
+        }
+        own.unwrap_or_else(|| Err("coalescer produced no result for the leader".to_string()))
+    }
+
+    /// Followers currently queued across all compatibility keys.
+    pub fn queued(&self) -> u64 {
+        let st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut n = 0u64;
+        for q in st.pending.values() {
+            n += q.len() as u64;
+        }
+        n
+    }
+
+    /// Jobs that rode in a merged group of two or more (leader included).
+    pub fn batched(&self) -> u64 {
+        self.batched.get()
+    }
+
+    /// Merged executions covering two or more jobs.
+    pub fn groups(&self) -> u64 {
+        self.groups.get()
+    }
+}
+
+/// Store a follower's outcome and wake it.
+fn deliver(slot: &SlotCell, outcome: Result<String, String>) {
+    let (result, cv) = &**slot;
+    *result.lock().unwrap_or_else(PoisonError::into_inner) = Some(outcome);
+    cv.notify_all();
+}
+
+/// Execute one homogeneous merged group and return one canonical body
+/// per job, in job order.
+fn exec_group(params: &Params, jobs: &[&Job]) -> Result<Vec<String>, String> {
+    match jobs.first() {
+        None => Ok(Vec::new()),
+        Some(Job::Infer { .. }) => {
+            let mut pairs: Vec<(ModelSpec, InferOptions)> = Vec::with_capacity(jobs.len());
+            for j in jobs {
+                let Job::Infer { spec, opts } = j else {
+                    return Err("mixed job kinds in one compatibility group".to_string());
+                };
+                pairs.push((spec.clone(), opts.clone()));
+            }
+            let reports = run_infer_batch(params, &pairs).map_err(|e| format!("{e:#}"))?;
+            Ok(pairs.iter().zip(&reports).map(|((spec, _), r)| infer_json(spec, r)).collect())
+        }
+        Some(Job::SweepPoint { .. }) => exec_sweep_group(jobs),
+    }
+}
+
+/// Execute a group of sweep points, re-partitioned by exact [`Params`]
+/// equality (the compatibility key's `csv_cell` floats can collide
+/// across different exact cards; a collider runs in its own sub-group).
+fn exec_sweep_group(jobs: &[&Job]) -> Result<Vec<String>, String> {
+    let mixed = || "mixed job kinds in one compatibility group".to_string();
+    let mut out: Vec<Option<String>> = Vec::new();
+    out.resize_with(jobs.len(), || None);
+    let mut remaining: Vec<usize> = (0..jobs.len()).collect();
+    while let Some(&anchor) = remaining.first() {
+        let Job::SweepPoint { spec: anchor_spec, point: anchor_point, .. } = jobs[anchor] else {
+            return Err(mixed());
+        };
+        let anchor_params = anchor_point.apply(&anchor_spec.params);
+        let mut group: Vec<usize> = Vec::new();
+        let mut rest: Vec<usize> = Vec::new();
+        for &i in &remaining {
+            let Job::SweepPoint { spec, point, .. } = jobs[i] else {
+                return Err(mixed());
+            };
+            if point.apply(&spec.params) == anchor_params {
+                group.push(i);
+            } else {
+                rest.push(i);
+            }
+        }
+        let mut cspecs: Vec<CampaignSpec> = Vec::with_capacity(group.len());
+        for &i in &group {
+            let Job::SweepPoint { spec, point, kernel } = jobs[i] else {
+                return Err(mixed());
+            };
+            // Mirror the solo serve path exactly: shards/block auto,
+            // one worker thread (the service parallelizes across
+            // requests, not within them).
+            cspecs.push(point.campaign_spec(spec.seed, spec.n_mc, 0, 1, 0, *kernel));
+        }
+        let reps =
+            run_native_campaigns_merged(&anchor_params, &cspecs).map_err(|e| format!("{e:#}"))?;
+        for (&i, rep) in group.iter().zip(&reps) {
+            let Job::SweepPoint { spec, point, kernel } = jobs[i] else {
+                return Err(mixed());
+            };
+            let r = point_result(spec, point, rep);
+            out[i] = Some(sweep_json(spec, &[r], &[true], *kernel));
+        }
+        remaining = rest;
+    }
+    out.into_iter()
+        .map(|o| o.ok_or_else(|| "sweep sub-group produced no body".to_string()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{run_grid_point, SweepOptions};
+    use crate::nn::run_infer;
+
+    fn infer_job(seed_xor: u64) -> Job {
+        let mut spec = ModelSpec::fixture();
+        spec.seed ^= seed_xor;
+        let opts = InferOptions { trials: 2, threads: 1, ..InferOptions::default() };
+        Job::Infer { spec, opts }
+    }
+
+    fn solo_infer_body(seed_xor: u64) -> String {
+        let Job::Infer { spec, opts } = infer_job(seed_xor) else { unreachable!() };
+        let r = run_infer(&Params::default(), &spec, &opts).unwrap();
+        infer_json(&spec, &r)
+    }
+
+    #[test]
+    fn a_lone_submit_computes_without_grouping_counters() {
+        let stats = Arc::new(ServeStats::new());
+        let co =
+            Coalescer::new(Params::default(), 8, Arc::new(Gate::new()), Arc::clone(&stats));
+        let compat = infer_compat(Variant::Smart, KernelKind::Block);
+        let body = co.submit(&compat, infer_job(0)).unwrap();
+        assert_eq!(body, solo_infer_body(0));
+        assert_eq!(co.groups(), 0);
+        assert_eq!(co.batched(), 0);
+        assert_eq!(co.queued(), 0);
+        assert_eq!(stats.campaigns.get(), 1);
+    }
+
+    #[test]
+    fn concurrent_compatible_infers_coalesce_and_byte_match_solo_runs() {
+        let stats = Arc::new(ServeStats::new());
+        let gate = Arc::new(Gate::new());
+        let co = Coalescer::new(Params::default(), 8, Arc::clone(&gate), Arc::clone(&stats));
+        let compat = infer_compat(Variant::Smart, KernelKind::Block);
+        gate.pause();
+        let bodies: Vec<(u64, String)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0u64..3)
+                .map(|i| {
+                    let (co, compat) = (&co, &compat);
+                    scope.spawn(move || (i, co.submit(compat, infer_job(i)).unwrap()))
+                })
+                .collect();
+            // one leader stalled at the gate, the other two enqueued
+            while co.queued() < 2 {
+                std::thread::yield_now();
+            }
+            gate.resume();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (i, body) in &bodies {
+            assert_eq!(*body, solo_infer_body(*i), "job {i} must byte-match its solo run");
+        }
+        assert_eq!(co.groups(), 1, "three compatible jobs must merge into one group");
+        assert_eq!(co.batched(), 3);
+        assert_eq!(stats.campaigns.get(), 3, "each job is one spec computation");
+        assert_eq!(co.queued(), 0);
+    }
+
+    #[test]
+    fn sweep_points_coalesce_and_byte_match_the_grid_runner() {
+        let stats = Arc::new(ServeStats::new());
+        let gate = Arc::new(Gate::new());
+        let co = Coalescer::new(Params::default(), 4, Arc::clone(&gate), Arc::clone(&stats));
+        let spec_a = SweepSpec::parse("name = \"co\"\nn_mc = 8\nseed = 3\n").unwrap();
+        let spec_b = SweepSpec::parse("name = \"co\"\nn_mc = 8\nseed = 4\n").unwrap();
+        let (pa, pb) = (spec_a.grid.expand()[0], spec_b.grid.expand()[0]);
+        let compat = sweep_compat(&spec_a, &pa, KernelKind::Block);
+        assert_eq!(compat, sweep_compat(&spec_b, &pb, KernelKind::Block));
+        gate.pause();
+        let (body_a, body_b) = std::thread::scope(|scope| {
+            let a = {
+                let (co, compat, spec, point) = (&co, &compat, &spec_a, pa);
+                scope.spawn(move || {
+                    co.submit(
+                        compat,
+                        Job::SweepPoint { spec: spec.clone(), point, kernel: KernelKind::Block },
+                    )
+                    .unwrap()
+                })
+            };
+            let b = {
+                let (co, compat, spec, point) = (&co, &compat, &spec_b, pb);
+                scope.spawn(move || {
+                    co.submit(
+                        compat,
+                        Job::SweepPoint { spec: spec.clone(), point, kernel: KernelKind::Block },
+                    )
+                    .unwrap()
+                })
+            };
+            while co.queued() < 1 {
+                std::thread::yield_now();
+            }
+            gate.resume();
+            (a.join().unwrap(), b.join().unwrap())
+        });
+        let opts = SweepOptions { threads: 1, ..SweepOptions::default() };
+        let ra = run_grid_point(&spec_a, &pa, &opts).unwrap();
+        let rb = run_grid_point(&spec_b, &pb, &opts).unwrap();
+        assert_eq!(body_a, sweep_json(&spec_a, &[ra], &[true], KernelKind::Block));
+        assert_eq!(body_b, sweep_json(&spec_b, &[rb], &[true], KernelKind::Block));
+        assert_eq!(co.groups(), 1);
+        assert_eq!(co.batched(), 2);
+        assert_eq!(stats.campaigns.get(), 2);
+    }
+}

@@ -7,12 +7,21 @@
 //! describing the same campaign always collide onto one entry, and a hit
 //! returns bytes identical to what the campaign stack would recompute.
 //!
+//! Capacity is accounted in **bytes**, not entries: a `/v1/sweep/point`
+//! body is orders of magnitude larger than a health probe, so an entry
+//! count bounds nothing. Every entry is charged `body.len()`; eviction
+//! removes least-recently-used entries until the newcomer fits, and a
+//! body larger than a whole shard's budget is simply not cached (it
+//! still gets served — the disk tier and single-flight layer above this
+//! one keep recomputation bounded).
+//!
 //! Sharding bounds lock contention: a key hashes (FNV-1a) to one shard,
 //! each shard is an independent `Mutex<BTreeMap>` with its own logical
 //! clock, and eviction removes the shard's least-recently-used entry by
-//! linear scan — caps are service-sized (hundreds), so O(cap) eviction
-//! is cheaper than maintaining an intrusive list. The ordered map keeps
-//! every walk (eviction scans, stats) deterministic by construction.
+//! linear scan — shards hold service-sized entry counts, so O(entries)
+//! eviction is cheaper than maintaining an intrusive list. The ordered
+//! map keeps every walk (eviction scans, stats) deterministic by
+//! construction.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -26,13 +35,16 @@ struct Entry {
     last_used: u64,
 }
 
-/// One independent LRU shard.
+/// One independent LRU shard with its byte ledger.
 struct Shard {
     map: BTreeMap<String, Entry>,
     clock: u64,
+    /// Sum of `body.len()` over `map` — kept incrementally so stats and
+    /// eviction never rescan.
+    bytes: usize,
 }
 
-/// A sharded LRU cache of canonical response bodies.
+/// A sharded, byte-budgeted LRU cache of canonical response bodies.
 pub struct ResultCache {
     shards: Vec<Mutex<Shard>>,
     cap_per_shard: usize,
@@ -42,14 +54,14 @@ pub struct ResultCache {
 }
 
 impl ResultCache {
-    /// A cache holding at most `capacity` entries across `n_shards`
-    /// shards (both clamped to >= 1; capacity rounds up to a multiple of
-    /// the shard count).
+    /// A cache holding at most `capacity` **bytes** of response bodies
+    /// across `n_shards` shards (both clamped to >= 1; the byte budget
+    /// rounds up to a multiple of the shard count).
     pub fn new(capacity: usize, n_shards: usize) -> Self {
         let n_shards = n_shards.max(1);
         let cap_per_shard = capacity.max(1).div_ceil(n_shards);
         let shards = (0..n_shards)
-            .map(|_| Mutex::new(Shard { map: BTreeMap::new(), clock: 0 }))
+            .map(|_| Mutex::new(Shard { map: BTreeMap::new(), clock: 0, bytes: 0 }))
             .collect();
         Self {
             shards,
@@ -84,25 +96,39 @@ impl ResultCache {
         }
     }
 
-    /// Insert (or refresh) a canonical key, evicting the shard's
-    /// least-recently-used entry when it is full. Concurrent misses on
-    /// the same key may both insert — the bodies are deterministic and
-    /// byte-identical, so last-writer-wins is harmless.
+    /// Insert (or refresh) a canonical key, evicting least-recently-used
+    /// entries until the shard's byte budget holds the newcomer. A body
+    /// larger than the whole shard budget is not cached at all (the
+    /// caller still serves it). Concurrent misses on the same key may
+    /// both insert — the bodies are deterministic and byte-identical,
+    /// so last-writer-wins is harmless.
     pub fn put(&self, key: &str, body: Arc<String>) {
+        let cost = body.len();
+        if cost > self.cap_per_shard {
+            return;
+        }
         let mut s = self.shard(key).lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         s.clock += 1;
         let clock = s.clock;
-        if !s.map.contains_key(key) && s.map.len() >= self.cap_per_shard {
-            if let Some(lru) = s
+        if let Some(old) = s.map.remove(key) {
+            // Refresh: release the old charge, then re-admit as new.
+            s.bytes -= old.body.len();
+        }
+        while s.bytes + cost > self.cap_per_shard {
+            let Some(lru) = s
                 .map
                 .iter()
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| k.clone())
-            {
-                s.map.remove(&lru);
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+            else {
+                break;
+            };
+            if let Some(e) = s.map.remove(&lru) {
+                s.bytes -= e.body.len();
             }
+            self.evictions.fetch_add(1, Ordering::Relaxed);
         }
+        s.bytes += cost;
         s.map.insert(key.to_string(), Entry { body, last_used: clock });
     }
 
@@ -119,12 +145,20 @@ impl ResultCache {
         self.len() == 0
     }
 
+    /// Bytes of response bodies currently cached (sum over shards).
+    pub fn bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(std::sync::PoisonError::into_inner).bytes)
+            .sum()
+    }
+
     /// Lookups answered from the cache.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
-    /// Lookups that missed (and went to the campaign stack).
+    /// Lookups that missed (and went to the next tier down).
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
@@ -145,7 +179,7 @@ mod tests {
 
     #[test]
     fn get_put_hit_miss_counters() {
-        let c = ResultCache::new(8, 2);
+        let c = ResultCache::new(64, 2);
         assert!(c.get("a").is_none());
         c.put("a", body("A"));
         assert_eq!(c.get("a").unwrap().as_str(), "A");
@@ -156,29 +190,56 @@ mod tests {
     }
 
     #[test]
-    fn lru_evicts_the_coldest_entry() {
-        // single shard so the LRU order is fully observable
-        let c = ResultCache::new(2, 1);
-        c.put("a", body("A"));
-        c.put("b", body("B"));
-        assert!(c.get("a").is_some()); // refresh a; b is now coldest
-        c.put("c", body("C"));
-        assert_eq!(c.evictions(), 1);
-        assert!(c.get("b").is_none(), "expected the cold entry to be evicted");
-        assert!(c.get("a").is_some());
-        assert!(c.get("c").is_some());
+    fn byte_accounting_tracks_inserts_and_replacements() {
+        let c = ResultCache::new(100, 1);
+        c.put("a", body("0123456789")); // 10 bytes
+        assert_eq!(c.bytes(), 10);
+        c.put("a", body("0123")); // refresh releases the old charge
+        assert_eq!(c.bytes(), 4);
+        c.put("b", body("012345"));
+        assert_eq!(c.bytes(), 10);
         assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 0);
     }
 
     #[test]
-    fn refreshing_an_existing_key_never_evicts() {
-        let c = ResultCache::new(2, 1);
-        c.put("a", body("A"));
-        c.put("b", body("B"));
-        c.put("a", body("A2"));
+    fn lru_evicts_by_bytes_until_the_newcomer_fits() {
+        // single shard so the LRU order is fully observable
+        let c = ResultCache::new(10, 1);
+        c.put("a", body("aaaa")); // 4 bytes
+        c.put("b", body("bbbb")); // 4 bytes
+        assert!(c.get("a").is_some()); // refresh a; b is now coldest
+        c.put("c", body("cccccccc")); // 8 bytes: must displace b, then a
+        assert_eq!(c.evictions(), 2);
+        assert!(c.get("b").is_none());
+        assert!(c.get("a").is_none());
+        assert_eq!(c.get("c").unwrap().as_str(), "cccccccc");
+        assert_eq!(c.bytes(), 8);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn same_size_refresh_never_evicts() {
+        let c = ResultCache::new(8, 1);
+        c.put("a", body("aaaa"));
+        c.put("b", body("bbbb"));
+        c.put("a", body("AAAA")); // deterministic bodies are same-sized
         assert_eq!(c.evictions(), 0);
-        assert_eq!(c.get("a").unwrap().as_str(), "A2");
+        assert_eq!(c.get("a").unwrap().as_str(), "AAAA");
         assert!(c.get("b").is_some());
+        assert_eq!(c.bytes(), 8);
+    }
+
+    #[test]
+    fn oversize_bodies_are_skipped_not_cached() {
+        let c = ResultCache::new(8, 1);
+        c.put("small", body("ssss"));
+        c.put("big", body("this body exceeds the shard budget"));
+        assert_eq!(c.len(), 1, "oversize body must not be cached");
+        assert_eq!(c.bytes(), 4);
+        assert_eq!(c.evictions(), 0, "oversize insert must not displace residents");
+        assert!(c.get("big").is_none());
+        assert!(c.get("small").is_some());
     }
 
     #[test]
@@ -188,8 +249,8 @@ mod tests {
         for i in 0..40 {
             c.put(&format!("key-{i}"), body("x"));
         }
-        // every shard respects its own cap
-        assert!(c.len() <= 12, "len = {}", c.len());
+        // every shard respects its own byte budget
+        assert!(c.bytes() <= 12, "bytes = {}", c.bytes());
         assert!(c.evictions() > 0);
         // same key always lands on the same shard: a put is always visible
         c.put("stable", body("S"));

@@ -1,0 +1,304 @@
+//! Disk-backed cache tier: canonical response bodies that survive
+//! restarts.
+//!
+//! Every body the service computes is byte-reproducible (DESIGN.md §9),
+//! which makes a disk cache trivially validatable: a stored body is
+//! either byte-identical to what a recompute would produce, or it is
+//! corrupt and must be rejected. Entries live under `--cache-dir`, one
+//! file per canonical spec key, named `{fnv1a(key):016x}.body`. The file
+//! format is length-prefixed and fingerprinted:
+//!
+//! ```text
+//! smart-serve-cache v1\n
+//! key <len>\n
+//! <key bytes>\n
+//! body <len> <fnv1a(body):016x>\n
+//! <body bytes>\n
+//! ```
+//!
+//! Keys embed newlines (the `/v1/mc` key carries a whole canonical
+//! TOML), so the format is length-prefixed rather than line-oriented.
+//! A read validates magic, lengths, terminators, and the body
+//! fingerprint; any mismatch rejects the entry — the file is deleted and
+//! the request falls through to recompute, which rewrites it. The one
+//! exception is a well-formed file whose *stored key* differs from the
+//! requested key (an FNV filename collision): that is a plain miss and
+//! the resident entry is kept.
+//!
+//! Writes go to a uniquely-suffixed temp file in the same directory and
+//! are renamed into place, so a concurrent reader (or a crash) sees
+//! either the old complete entry or the new complete entry, never a
+//! torn one.
+//!
+//! Because bodies are the same bytes the CLI `--json` artifacts carry,
+//! the tier also warm-starts from prior CLI runs: anything inserted via
+//! [`DiskTier::put`] under the router's canonical key (see the
+//! `*_cache_key` helpers) is served byte-identically with zero
+//! recompute.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::fnv1a;
+
+use super::stats::Monotonic;
+
+/// File magic; bump the version when the layout changes so stale tiers
+/// reject cleanly instead of misparsing.
+const MAGIC: &str = "smart-serve-cache v1\n";
+
+/// The persistent cache tier under one directory.
+pub struct DiskTier {
+    dir: PathBuf,
+    /// Monotonic temp-file suffix: concurrent writers in one process
+    /// never collide on a temp name.
+    tmp_seq: AtomicU64,
+    hits: Monotonic,
+    misses: Monotonic,
+    writes: Monotonic,
+    rejects: Monotonic,
+    warm_entries: u64,
+}
+
+impl DiskTier {
+    /// Open (creating if needed) the tier rooted at `dir` and count the
+    /// entries already present — the warm-start inventory.
+    pub fn open(dir: &Path) -> io::Result<DiskTier> {
+        fs::create_dir_all(dir)?;
+        let mut warm = 0u64;
+        for entry in fs::read_dir(dir)? {
+            let name = entry?.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(stem) = name.strip_suffix(".body") else { continue };
+            if stem.len() == 16 && stem.bytes().all(|b| b.is_ascii_hexdigit()) {
+                warm += 1;
+            }
+        }
+        Ok(DiskTier {
+            dir: dir.to_path_buf(),
+            tmp_seq: AtomicU64::new(0),
+            hits: Monotonic::new(),
+            misses: Monotonic::new(),
+            writes: Monotonic::new(),
+            rejects: Monotonic::new(),
+            warm_entries: warm,
+        })
+    }
+
+    /// The on-disk path an entry for `key` lives at.
+    pub fn path_for(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{:016x}.body", fnv1a(key)))
+    }
+
+    /// Look up `key`. A malformed, truncated, or fingerprint-mismatched
+    /// file is rejected: deleted, counted, and reported as a miss so the
+    /// caller recomputes (and rewrites) it.
+    pub fn get(&self, key: &str) -> Option<Arc<String>> {
+        let path = self.path_for(key);
+        let text = match fs::read_to_string(&path) {
+            Ok(text) => text,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => {
+                self.misses.incr();
+                return None;
+            }
+            Err(_) => {
+                // Unreadable (non-UTF-8 garbage, permissions): reject.
+                self.reject(&path);
+                return None;
+            }
+        };
+        match decode_entry(&text) {
+            Ok((stored_key, body)) if stored_key == key => {
+                self.hits.incr();
+                Some(Arc::new(body.to_string()))
+            }
+            Ok(_) => {
+                // FNV filename collision with a different spec: a plain
+                // miss; the resident entry stays.
+                self.misses.incr();
+                None
+            }
+            Err(_) => self.reject(&path),
+        }
+    }
+
+    fn reject(&self, path: &Path) -> Option<Arc<String>> {
+        self.rejects.incr();
+        self.misses.incr();
+        let _ = fs::remove_file(path);
+        None
+    }
+
+    /// Persist `body` under `key` (atomic temp-file + rename). Serving
+    /// never depends on this succeeding; the caller may ignore the
+    /// error after counting it.
+    pub fn put(&self, key: &str, body: &str) -> io::Result<()> {
+        let mut text = String::with_capacity(MAGIC.len() + key.len() + body.len() + 64);
+        text.push_str(MAGIC);
+        text.push_str(&format!("key {}\n", key.len()));
+        text.push_str(key);
+        text.push('\n');
+        text.push_str(&format!("body {} {:016x}\n", body.len(), fnv1a(body)));
+        text.push_str(body);
+        text.push('\n');
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let path = self.path_for(key);
+        let mut tmp = path.clone();
+        tmp.set_extension(format!("tmp{seq}"));
+        fs::write(&tmp, &text)?;
+        fs::rename(&tmp, &path)?;
+        self.writes.incr();
+        Ok(())
+    }
+
+    /// Lookups served from disk.
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// Lookups not present on disk (includes rejected entries and
+    /// filename collisions).
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    /// Entries persisted.
+    pub fn writes(&self) -> u64 {
+        self.writes.get()
+    }
+
+    /// Malformed/truncated/mismatched entries deleted on read.
+    pub fn rejects(&self) -> u64 {
+        self.rejects.get()
+    }
+
+    /// Entries already present when the tier was opened.
+    pub fn warm_entries(&self) -> u64 {
+        self.warm_entries
+    }
+}
+
+/// Split one stored entry into `(key, body)`, validating structure and
+/// the body fingerprint. Any violation is an error the caller treats as
+/// a rejected entry. Uses checked slicing throughout: a corrupt length
+/// that lands mid-UTF-8-sequence is an error, never a panic.
+fn decode_entry(text: &str) -> Result<(&str, &str), &'static str> {
+    let rest = text.strip_prefix(MAGIC).ok_or("bad magic")?;
+    let (key_line, rest) = rest.split_once('\n').ok_or("missing key header")?;
+    let key_len: usize = key_line
+        .strip_prefix("key ")
+        .ok_or("bad key header")?
+        .parse()
+        .map_err(|_| "bad key length")?;
+    let key = rest.get(..key_len).ok_or("truncated key")?;
+    let rest = rest.get(key_len..).ok_or("truncated key")?;
+    let rest = rest.strip_prefix('\n').ok_or("unterminated key")?;
+    let (body_line, rest) = rest.split_once('\n').ok_or("missing body header")?;
+    let mut fields = body_line.strip_prefix("body ").ok_or("bad body header")?.split(' ');
+    let body_len: usize = fields
+        .next()
+        .ok_or("missing body length")?
+        .parse()
+        .map_err(|_| "bad body length")?;
+    let fingerprint = fields.next().ok_or("missing body fingerprint")?;
+    if fields.next().is_some() {
+        return Err("trailing body header fields");
+    }
+    let body = rest.get(..body_len).ok_or("truncated body")?;
+    if rest.get(body_len..) != Some("\n") {
+        return Err("unterminated body");
+    }
+    if format!("{:016x}", fnv1a(body)) != fingerprint {
+        return Err("body fingerprint mismatch");
+    }
+    Ok((key, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Unique scratch directory per test (removed on drop).
+    struct Scratch(PathBuf);
+
+    impl Scratch {
+        fn new(tag: &str) -> Scratch {
+            let dir = std::env::temp_dir()
+                .join(format!("smart-disktier-{tag}-{}", std::process::id()));
+            let _ = fs::remove_dir_all(&dir);
+            Scratch(dir)
+        }
+    }
+
+    impl Drop for Scratch {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    #[test]
+    fn put_get_roundtrips_bytes_and_counts() {
+        let scratch = Scratch::new("roundtrip");
+        let tier = DiskTier::open(&scratch.0).unwrap();
+        assert_eq!(tier.warm_entries(), 0);
+        let key = "mc\nvariant = \"smart\"\nn_mc = 8\n"; // keys embed newlines
+        let body = "{\n  \"sigma\": 0.009\n}\n";
+        assert!(tier.get(key).is_none());
+        tier.put(key, body).unwrap();
+        assert_eq!(tier.get(key).unwrap().as_str(), body);
+        assert_eq!((tier.hits(), tier.misses(), tier.writes(), tier.rejects()), (1, 1, 1, 0));
+
+        // A reopened tier (the "restart") serves the same bytes and
+        // reports the warm inventory.
+        let reopened = DiskTier::open(&scratch.0).unwrap();
+        assert_eq!(reopened.warm_entries(), 1);
+        assert_eq!(reopened.get(key).unwrap().as_str(), body);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_entries_are_rejected_and_deleted() {
+        let scratch = Scratch::new("corrupt");
+        let tier = DiskTier::open(&scratch.0).unwrap();
+        let cases: [&dyn Fn(&str); 3] = [
+            &|p: &str| fs::write(p, "not a cache entry").unwrap(),
+            &|p: &str| {
+                // truncate the stored body mid-way
+                let text = fs::read_to_string(p).unwrap();
+                fs::write(p, &text[..text.len() - 4]).unwrap();
+            },
+            &|p: &str| {
+                // flip a body byte: structure intact, fingerprint not
+                let text = fs::read_to_string(p).unwrap();
+                fs::write(p, text.replace("42", "43")).unwrap();
+            },
+        ];
+        for (i, corrupt) in cases.iter().enumerate() {
+            let key = format!("spec-{i}");
+            tier.put(&key, "{\"answer\": 42}\n").unwrap();
+            let path = tier.path_for(&key);
+            corrupt(path.to_str().unwrap());
+            assert!(tier.get(&key).is_none(), "case {i} must reject");
+            assert!(!path.exists(), "case {i} must delete the bad entry");
+            // recompute path: a fresh put repairs the entry
+            tier.put(&key, "{\"answer\": 42}\n").unwrap();
+            assert_eq!(tier.get(&key).unwrap().as_str(), "{\"answer\": 42}\n");
+        }
+        assert_eq!(tier.rejects(), 3);
+    }
+
+    #[test]
+    fn filename_collisions_miss_without_evicting_the_resident() {
+        let scratch = Scratch::new("collision");
+        let tier = DiskTier::open(&scratch.0).unwrap();
+        tier.put("resident", "{\"r\": 1}\n").unwrap();
+        // Simulate an FNV collision: a well-formed entry for a different
+        // key sitting at the requested key's path.
+        fs::rename(tier.path_for("resident"), tier.path_for("wanted")).unwrap();
+        assert!(tier.get("wanted").is_none());
+        assert_eq!(tier.rejects(), 0, "a collision is a miss, not corruption");
+        assert!(tier.path_for("wanted").exists(), "the resident entry must survive");
+    }
+}

@@ -1,0 +1,373 @@
+//! Single-flight deduplication of concurrent cache misses.
+//!
+//! N concurrent requests for the same canonical spec key should cost one
+//! campaign, not N (DESIGN.md §14).  The first miss *leads*: it gets a
+//! [`Lease`] and runs the computation.  Every later miss on the same key
+//! is a *follower* — in the serve path it parks its connection inside
+//! the flight slot and its worker returns to the pool, so a thundering
+//! herd of a thousand clients occupies one worker, not a thousand.  When
+//! the leader completes, the shared `Arc<String>` body fans out to every
+//! parked connection (cloning the Arc, never the bytes) tagged
+//! `X-Smart-Cache: dedup`.
+//!
+//! The [`Lease`] is a drop guard: if the leader panics mid-computation,
+//! the unwinding drop completes the flight with a 500 so followers get
+//! an answer instead of hanging until their socket timeout.
+//!
+//! [`Gate`] is the self-test's determinism lever: pausing it stalls
+//! compute sites (never cache reads), so a test can pile an entire herd
+//! onto one in-flight slot before releasing a single execution.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+
+use super::http::{write_response, ParkedConn, Response};
+use super::stats::Monotonic;
+
+/// One in-flight computation keyed by canonical spec key.
+struct Slot {
+    /// Set exactly once, by the leader's completion (or its drop guard).
+    done: Option<(u16, Arc<String>)>,
+    /// Follower connections awaiting the fan-out.
+    parked: Vec<ParkedConn>,
+    /// Followers blocked in [`SingleFlight::join`] without a connection
+    /// (the in-process `handle` path); they drain the slot on wake.
+    sync_waiters: usize,
+}
+
+/// Outcome of joining a flight.
+pub enum Join<'a> {
+    /// This caller leads: run the computation, then
+    /// [`Lease::complete`]. The connection (if any) is handed back so
+    /// the leader can answer it directly.
+    Lead(Lease<'a>, Option<ParkedConn>),
+    /// The flight already finished; serve the shared result. The
+    /// connection (if any) is handed back untouched.
+    Done {
+        /// Status the leader completed with.
+        status: u16,
+        /// Shared canonical body.
+        body: Arc<String>,
+        /// The caller's connection, returned unconsumed.
+        conn: Option<ParkedConn>,
+    },
+    /// The connection was parked in the slot; the leader's fan-out will
+    /// answer it. The caller's worker is free.
+    Parked,
+}
+
+/// Drop-guard lease held by a flight leader. Completing publishes the
+/// result to every follower; dropping without completing publishes a
+/// 500 so followers never hang on a panicked leader.
+pub struct Lease<'a> {
+    flight: &'a SingleFlight,
+    key: String,
+    done: bool,
+}
+
+impl Lease<'_> {
+    /// The canonical key this lease leads.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Publish the result: wakes sync waiters and writes the shared
+    /// body to every parked connection (`X-Smart-Cache: dedup`).
+    /// Returns how many parked connections were answered, so the caller
+    /// can fold fan-out errors into the service counters.
+    pub fn complete(mut self, status: u16, body: &Arc<String>) -> usize {
+        self.done = true;
+        self.flight.finish(&self.key, status, body)
+    }
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            let r = Response::error(500, "internal error: in-flight computation failed");
+            self.flight.finish(&self.key, r.status, &r.body);
+        }
+    }
+}
+
+/// The dedup map: canonical key -> in-flight slot.
+pub struct SingleFlight {
+    slots: Mutex<BTreeMap<String, Slot>>,
+    cv: Condvar,
+    deduped: Monotonic,
+    leads: Monotonic,
+}
+
+impl SingleFlight {
+    /// An empty dedup map.
+    pub fn new() -> Self {
+        SingleFlight {
+            slots: Mutex::new(BTreeMap::new()),
+            cv: Condvar::new(),
+            deduped: Monotonic::new(),
+            leads: Monotonic::new(),
+        }
+    }
+
+    /// Join the flight for `key`. The first caller leads; later callers
+    /// either park their connection (serve path) or block until the
+    /// leader publishes (in-process path, `conn == None`).
+    pub fn join(&self, key: &str, conn: Option<ParkedConn>) -> Join<'_> {
+        let mut slots = self.slots.lock().unwrap_or_else(PoisonError::into_inner);
+        if !slots.contains_key(key) {
+            slots.insert(
+                key.to_string(),
+                Slot { done: None, parked: Vec::new(), sync_waiters: 0 },
+            );
+            self.leads.incr();
+            return Join::Lead(
+                Lease { flight: self, key: key.to_string(), done: false },
+                conn,
+            );
+        }
+        self.deduped.incr();
+        if let Some((status, body)) = slots.get(key).and_then(|s| s.done.clone()) {
+            // Completed but not yet reaped (sync waiters still draining):
+            // serve the published result directly.
+            return Join::Done { status, body, conn };
+        }
+        match conn {
+            Some(c) => {
+                if let Some(slot) = slots.get_mut(key) {
+                    slot.parked.push(c);
+                }
+                Join::Parked
+            }
+            None => {
+                if let Some(slot) = slots.get_mut(key) {
+                    slot.sync_waiters += 1;
+                }
+                loop {
+                    if let Some((status, body)) = slots.get(key).and_then(|s| s.done.clone()) {
+                        let mut drained = false;
+                        if let Some(slot) = slots.get_mut(key) {
+                            slot.sync_waiters -= 1;
+                            drained = slot.sync_waiters == 0;
+                        }
+                        if drained {
+                            slots.remove(key);
+                        }
+                        return Join::Done { status, body, conn: None };
+                    }
+                    slots = self.cv.wait(slots).unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+        }
+    }
+
+    /// Publish `key`'s result and fan it out; returns the number of
+    /// parked connections answered.
+    fn finish(&self, key: &str, status: u16, body: &Arc<String>) -> usize {
+        let parked = {
+            let mut slots = self.slots.lock().unwrap_or_else(PoisonError::into_inner);
+            let Some(slot) = slots.get_mut(key) else {
+                return 0;
+            };
+            slot.done = Some((status, Arc::clone(body)));
+            let parked = std::mem::take(&mut slot.parked);
+            if slot.sync_waiters == 0 {
+                slots.remove(key);
+            }
+            self.cv.notify_all();
+            parked
+        };
+        let n = parked.len();
+        for mut c in parked {
+            let mut resp = Response { status, headers: Vec::new(), body: Arc::clone(body) };
+            resp.headers.push(("X-Smart-Cache".to_string(), "dedup".to_string()));
+            resp.headers.push((
+                "X-Smart-Time-Us".to_string(),
+                format!("{}", c.t0.elapsed().as_micros()),
+            ));
+            // A follower that hung up early is its own problem; the
+            // fan-out must keep serving the rest.
+            let _ = write_response(&mut c.stream, &resp);
+        }
+        n
+    }
+
+    /// Followers currently waiting (parked connections + sync waiters)
+    /// across all in-flight slots.
+    pub fn waiting(&self) -> u64 {
+        let slots = self.slots.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut n = 0u64;
+        for s in slots.values() {
+            n += (s.parked.len() + s.sync_waiters) as u64;
+        }
+        n
+    }
+
+    /// Total followers that joined an existing flight (the work they
+    /// did NOT duplicate).
+    pub fn deduped(&self) -> u64 {
+        self.deduped.get()
+    }
+
+    /// Total flights led (computations that actually ran or will run).
+    pub fn leads(&self) -> u64 {
+        self.leads.get()
+    }
+}
+
+impl Default for SingleFlight {
+    fn default() -> Self {
+        SingleFlight::new()
+    }
+}
+
+/// A pausable gate in front of compute sites. `wait` returns
+/// immediately unless paused; the self-test pauses it to pile
+/// concurrent misses onto one flight slot deterministically, then
+/// resumes to release a single execution.
+pub struct Gate {
+    paused: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    /// An open (un-paused) gate.
+    pub fn new() -> Self {
+        Gate { paused: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    /// Stall every subsequent `wait` until `resume`.
+    pub fn pause(&self) {
+        *self.paused.lock().unwrap_or_else(PoisonError::into_inner) = true;
+    }
+
+    /// Release all waiters and stop stalling.
+    pub fn resume(&self) {
+        *self.paused.lock().unwrap_or_else(PoisonError::into_inner) = false;
+        self.cv.notify_all();
+    }
+
+    /// Block while the gate is paused; a no-op otherwise.
+    pub fn wait(&self) {
+        let mut paused = self.paused.lock().unwrap_or_else(PoisonError::into_inner);
+        while *paused {
+            paused = self.cv.wait(paused).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+impl Default for Gate {
+    fn default() -> Self {
+        Gate::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn first_join_leads_and_later_joins_dedup() {
+        let flight = SingleFlight::new();
+        let computed = AtomicU64::new(0);
+        let body = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            // Take the lease first so every spawned join is a follower.
+            let lease = match flight.join("k", None) {
+                Join::Lead(lease, None) => lease,
+                _ => panic!("first join must lead"),
+            };
+            for _ in 0..4 {
+                let (flight, computed) = (&flight, &computed);
+                handles.push(scope.spawn(move || match flight.join("k", None) {
+                    Join::Done { status, body, conn } => {
+                        assert_eq!(status, 200);
+                        assert!(conn.is_none());
+                        body
+                    }
+                    Join::Lead(..) => {
+                        computed.fetch_add(1, Ordering::Relaxed);
+                        panic!("follower must not lead");
+                    }
+                    Join::Parked => panic!("no conn, so no parking"),
+                }));
+            }
+            // Give followers time to block on the condvar.
+            while flight.waiting() < 4 {
+                std::thread::yield_now();
+            }
+            computed.fetch_add(1, Ordering::Relaxed);
+            let shared = Arc::new("{\"x\": 1}\n".to_string());
+            lease.complete(200, &shared);
+            let bodies: Vec<Arc<String>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            for b in &bodies {
+                // Same allocation, not just equal bytes.
+                assert!(Arc::ptr_eq(b, &shared));
+            }
+            shared
+        });
+        assert_eq!(computed.load(Ordering::Relaxed), 1);
+        assert_eq!(flight.leads(), 1);
+        assert_eq!(flight.deduped(), 4);
+        assert_eq!(flight.waiting(), 0);
+        assert_eq!(*body, "{\"x\": 1}\n");
+    }
+
+    #[test]
+    fn dropped_lease_publishes_a_500_to_waiters() {
+        let flight = SingleFlight::new();
+        std::thread::scope(|scope| {
+            let lease = match flight.join("k", None) {
+                Join::Lead(lease, _) => lease,
+                _ => panic!("first join must lead"),
+            };
+            let waiter = scope.spawn(|| match flight.join("k", None) {
+                Join::Done { status, body, .. } => (status, body),
+                _ => panic!("follower must get the published result"),
+            });
+            while flight.waiting() < 1 {
+                std::thread::yield_now();
+            }
+            drop(lease); // leader "panicked"
+            let (status, body) = waiter.join().unwrap();
+            assert_eq!(status, 500);
+            let v = crate::util::json::parse(&body).unwrap();
+            assert!(v.get("error").unwrap().as_str().unwrap().contains("in-flight"));
+        });
+        // Slot fully reaped; the key can lead again.
+        assert!(matches!(flight.join("k", None), Join::Lead(..)));
+    }
+
+    #[test]
+    fn distinct_keys_fly_independently() {
+        let flight = SingleFlight::new();
+        let a = flight.join("a", None);
+        let b = flight.join("b", None);
+        assert!(matches!(a, Join::Lead(..)));
+        assert!(matches!(b, Join::Lead(..)));
+        assert_eq!(flight.leads(), 2);
+        assert_eq!(flight.deduped(), 0);
+    }
+
+    #[test]
+    fn gate_stalls_and_releases_waiters() {
+        let gate = Gate::new();
+        gate.wait(); // un-paused gate is a no-op
+        gate.pause();
+        let released = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let (gate, released) = (&gate, &released);
+                scope.spawn(move || {
+                    gate.wait();
+                    released.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            assert_eq!(released.load(Ordering::Relaxed), 0);
+            gate.resume();
+        });
+        assert_eq!(released.load(Ordering::Relaxed), 3);
+    }
+}

@@ -49,6 +49,20 @@ pub struct Response {
     pub body: Arc<String>,
 }
 
+/// A connection handed off to an in-flight computation (single-flight
+/// dedup, DESIGN.md §14): the follower's worker returns to the pool and
+/// the leader's completion fan-out writes the response. Carries the
+/// request arrival instant so the fan-out can stamp an honest
+/// `X-Smart-Time-Us` per connection (the instant is captured by the
+/// caller; this module never reads the clock).
+#[derive(Debug)]
+pub struct ParkedConn {
+    /// The follower's socket, still awaiting its response.
+    pub stream: TcpStream,
+    /// When the request arrived (drives the per-connection latency header).
+    pub t0: std::time::Instant,
+}
+
 impl Response {
     /// A 200 response around a canonical JSON body.
     pub fn ok(body: String) -> Self {

@@ -1,13 +1,26 @@
-//! `smart serve` — a long-lived campaign-result service (DESIGN.md §11).
+//! `smart serve` — a long-lived campaign-result service (DESIGN.md
+//! §11/§14).
 //!
-//! The first subsystem on the ROADMAP's "serve heavy traffic" axis:
-//! instead of re-running a full Monte-Carlo campaign per CLI invocation,
-//! a dependency-free (`std::net`) multi-threaded HTTP/1.1 JSON service
-//! keeps a **spec-keyed result cache** in front of the existing
-//! block-execution campaign stack. Because campaigns are deterministic
-//! and their artifacts byte-identical (DESIGN.md §4/§9/§10), a cache hit
-//! returns exactly the bytes a fresh run would produce — repeat requests
-//! are O(1) lookups.
+//! The ROADMAP's "serve heavy traffic" axis: instead of re-running a
+//! full Monte-Carlo campaign per CLI invocation, a dependency-free
+//! (`std::net`) multi-threaded HTTP/1.1 JSON service fronts the
+//! block-execution campaign stack with a three-layer serving pipeline:
+//!
+//! 1. a **byte-budgeted sharded LRU** ([`ResultCache`], `--cache-cap`
+//!    bytes) of canonical response bodies;
+//! 2. a **disk tier** ([`DiskTier`], `--cache-dir`) that persists
+//!    bodies keyed by the spec-identity hash, survives restarts, and is
+//!    trivially validatable because served bytes are byte-reproducible;
+//! 3. a **single-flight dedup map** ([`SingleFlight`]): concurrent
+//!    misses on one canonical key cost one campaign — followers park
+//!    their connection and the leader's `Arc<body>` fans out to all of
+//!    them — plus a **cross-request coalescer** ([`Coalescer`]) that
+//!    merges small compatible `/v1/infer` and `/v1/sweep/point`
+//!    computations into shared engine executions.
+//!
+//! Because campaigns are deterministic and their artifacts
+//! byte-identical (DESIGN.md §4/§9/§10), every layer returns exactly
+//! the bytes a fresh solo run would produce.
 //!
 //! Endpoints:
 //!
@@ -17,27 +30,43 @@
 //! | `POST /v1/sweep/point` | one DSE grid point (`dse.toml` terms) | canonical single-point `sweep.json` bytes |
 //! | `POST /v1/infer`     | an `nn.toml` model document as JSON | canonical `infer.json` bytes |
 //! | `GET /v1/health`     | —                                   | liveness probe |
-//! | `GET /v1/stats`      | —                                   | request/cache/timing counters |
+//! | `GET /v1/stats`      | —                                   | request/cache/flight/disk/batch counters |
 //!
 //! Architecture: an acceptor thread feeds accepted connections into a
 //! bounded channel drained by a fixed pool of request workers (one
 //! campaign runs per worker thread — request-level parallelism comes
-//! from the pool, not from nested campaign fan-out). Shutdown is
-//! graceful: [`Server::stop`] stops accepting, drains the queue, and
-//! joins every thread. Responses carry `X-Smart-Cache` (hit/miss) and
-//! `X-Smart-Time-Us` provenance headers; the body bytes themselves never
-//! depend on cache state or timing.
+//! from the pool, not from nested campaign fan-out). A worker whose
+//! request joins an in-flight computation parks the connection and
+//! returns to the pool immediately, so a thundering herd occupies one
+//! worker. Shutdown is graceful: [`Server::stop`] stops accepting,
+//! drains the queue, and joins every thread. Responses carry
+//! `X-Smart-Cache` (`hit`/`disk`/`dedup`/`miss`) and `X-Smart-Time-Us`
+//! provenance headers; the body bytes themselves never depend on cache
+//! state or timing.
 
+mod batch;
 mod cache;
+mod disk;
+mod flight;
 mod http;
 mod router;
+mod stats;
 
+pub use batch::{infer_compat, sweep_compat, Coalescer, Job};
 pub use cache::ResultCache;
-pub use http::{http_request, read_request, write_response, Request, Response, MAX_BODY};
-pub use router::{handle, Routed, MAX_REQUEST_ITEMS};
+pub use disk::DiskTier;
+pub use flight::{Gate, Join, Lease, SingleFlight};
+pub use http::{
+    http_request, read_request, write_response, ParkedConn, Request, Response, MAX_BODY,
+};
+pub use router::{
+    handle, handle_conn, mc_cache_key, CacheTier, Fetched, Pipeline, Routed, MAX_REQUEST_ITEMS,
+};
+pub use stats::{Monotonic, ServeStats};
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -56,42 +85,35 @@ pub struct ServeOptions {
     pub addr: String,
     /// Request worker threads (each runs at most one campaign at a time).
     pub workers: usize,
-    /// Result-cache capacity in entries.
+    /// Result-cache budget in **bytes** (entries are charged their body
+    /// length; eviction is by bytes, LRU order).
     pub cache_cap: usize,
+    /// Disk cache directory (`--cache-dir`); `None` = memory-only.
+    pub cache_dir: Option<PathBuf>,
+    /// Maximum compatible jobs per merged batch execution
+    /// (`--batch-max`).
+    pub batch_max: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:7878".to_string(), workers: 4, cache_cap: 256 }
-    }
-}
-
-/// Service-lifetime counters behind `GET /v1/stats`.
-struct Counters {
-    started: Instant,
-    requests: AtomicU64,
-    errors: AtomicU64,
-    busy_us: AtomicU64,
-}
-
-impl Counters {
-    fn new() -> Self {
         Self {
-            started: Instant::now(),
-            requests: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-            busy_us: AtomicU64::new(0),
+            addr: "127.0.0.1:7878".to_string(),
+            workers: 4,
+            cache_cap: 64 << 20,
+            cache_dir: None,
+            batch_max: 16,
         }
     }
 }
 
 /// A running `smart serve` instance: acceptor thread + bounded worker
-/// pool + sharded result cache. Stop it with [`Self::stop`] (also runs
-/// on drop), or block on [`Self::join`] to serve until killed.
+/// pool over the serving [`Pipeline`]. Stop it with [`Self::stop`]
+/// (also runs on drop), or block on [`Self::join`] to serve until
+/// killed.
 pub struct Server {
     addr: SocketAddr,
-    cache: Arc<ResultCache>,
-    counters: Arc<Counters>,
+    pipe: Arc<Pipeline>,
     stopping: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
@@ -109,13 +131,28 @@ impl Server {
         );
         anyhow::ensure!(
             opts.cache_cap > 0,
-            "smart serve needs a result-cache capacity >= 1 (got --cache-cap 0)"
+            "smart serve needs a result-cache budget >= 1 byte (got --cache-cap 0)"
+        );
+        anyhow::ensure!(
+            opts.batch_max > 0,
+            "smart serve needs a batch window >= 1 (got --batch-max 0)"
         );
         let listener = TcpListener::bind(&opts.addr)
             .with_context(|| format!("binding {}", opts.addr))?;
         let addr = listener.local_addr().context("resolving bound address")?;
-        let cache = Arc::new(ResultCache::new(opts.cache_cap, opts.workers.min(8)));
-        let counters = Arc::new(Counters::new());
+        let pipe = Arc::new(
+            Pipeline::new(
+                params,
+                opts.cache_cap,
+                opts.workers.min(8),
+                opts.cache_dir.as_deref(),
+                opts.batch_max,
+            )
+            .with_context(|| match &opts.cache_dir {
+                Some(d) => format!("opening --cache-dir {}", d.display()),
+                None => "building the serving pipeline".to_string(),
+            })?,
+        );
         let stopping = Arc::new(AtomicBool::new(false));
 
         // Bounded hand-off: when every worker is busy and the queue is
@@ -127,13 +164,12 @@ impl Server {
         let mut workers = Vec::with_capacity(opts.workers);
         for wid in 0..opts.workers {
             let conn_rx = Arc::clone(&conn_rx);
-            let cache = Arc::clone(&cache);
-            let counters = Arc::clone(&counters);
+            let pipe = Arc::clone(&pipe);
             let n_workers = opts.workers;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("smart-serve-{wid}"))
-                    .spawn(move || worker_loop(&params, &cache, &counters, &conn_rx, n_workers))
+                    .spawn(move || worker_loop(&pipe, &conn_rx, n_workers))
                     .context("spawning serve worker")?,
             );
         }
@@ -160,8 +196,7 @@ impl Server {
 
         Ok(Self {
             addr,
-            cache,
-            counters,
+            pipe,
             stopping,
             acceptor: Some(acceptor),
             workers,
@@ -174,9 +209,25 @@ impl Server {
         self.addr
     }
 
+    /// The serving pipeline (caches, flight map, coalescer, gate,
+    /// counters). Shared — cheap to clone out of the server.
+    pub fn pipeline(&self) -> Arc<Pipeline> {
+        Arc::clone(&self.pipe)
+    }
+
     /// The current `GET /v1/stats` body (also reachable over HTTP).
     pub fn stats_json(&self) -> String {
-        stats_body(&self.cache, &self.counters, self.n_workers)
+        stats_body(&self.pipe, self.n_workers)
+    }
+
+    /// Cache lookups answered without leaving the in-memory tier.
+    pub fn cache_hits(&self) -> u64 {
+        self.pipe.cache().hits()
+    }
+
+    /// Cache lookups that fell through the in-memory tier.
+    pub fn cache_misses(&self) -> u64 {
+        self.pipe.cache().misses()
     }
 
     /// Block until the acceptor exits (i.e. serve until the process is
@@ -216,13 +267,7 @@ impl Drop for Server {
 const IO_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// One request worker: dequeue connections until the channel closes.
-fn worker_loop(
-    params: &Params,
-    cache: &ResultCache,
-    counters: &Counters,
-    conn_rx: &Mutex<Receiver<TcpStream>>,
-    n_workers: usize,
-) {
+fn worker_loop(pipe: &Pipeline, conn_rx: &Mutex<Receiver<TcpStream>>, n_workers: usize) {
     loop {
         // hold the lock only while dequeuing (same pattern as the PJRT
         // WorkerPool): handling runs fully in parallel
@@ -233,12 +278,14 @@ fn worker_loop(
         let Ok(mut stream) = conn else { break };
         // A panic anywhere in request handling must cost one request,
         // not one worker: without this, `--workers` poisoned requests
-        // would silently wedge the whole pool.
+        // would silently wedge the whole pool. (A panicking flight
+        // leader additionally publishes a 500 to its parked followers
+        // via the Lease drop guard.)
         let handled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            serve_connection(params, cache, counters, &mut stream, n_workers)
+            serve_connection(pipe, &mut stream, n_workers)
         }));
         if handled.is_err() {
-            counters.errors.fetch_add(1, Ordering::Relaxed);
+            pipe.stats().errors.incr();
             let _ = write_response(
                 &mut stream,
                 &Response::error(500, "internal error: request handler panicked"),
@@ -247,121 +294,223 @@ fn worker_loop(
     }
 }
 
-/// Serve one connection: read a request, route it, frame the response
-/// with cache/timing provenance headers, close.
-fn serve_connection(
-    params: &Params,
-    cache: &ResultCache,
-    counters: &Counters,
-    stream: &mut TcpStream,
-    n_workers: usize,
-) {
+/// Serve one connection: read a request, walk the pipeline, frame the
+/// response with cache/timing provenance headers, close. If the request
+/// joins an in-flight computation its connection is parked — the flight
+/// leader's fan-out answers it and this worker returns immediately.
+fn serve_connection(pipe: &Pipeline, stream: &mut TcpStream, n_workers: usize) {
     let t0 = Instant::now();
-    counters.requests.fetch_add(1, Ordering::Relaxed);
+    pipe.stats().requests.incr();
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
-    let mut routed = match read_request(stream) {
-        // stats needs server-level state, so it is answered here rather
-        // than in the (stateless) router
-        Ok(req) if req.method == "GET" && req.path == "/v1/stats" => Routed {
-            response: Response::ok(stats_body(cache, counters, n_workers)),
-            cache: None,
-        },
-        Ok(req) => handle(params, cache, &req),
-        Err(e) => Routed {
-            response: Response::error(400, &format!("{e:#}")),
-            cache: None,
-        },
+    let req = match read_request(stream) {
+        Ok(req) => req,
+        Err(e) => {
+            pipe.stats().errors.incr();
+            let mut resp = Response::error(400, &format!("{e:#}"));
+            respond(pipe, stream, &mut resp, t0);
+            return;
+        }
     };
-    if routed.response.status >= 400 {
-        counters.errors.fetch_add(1, Ordering::Relaxed);
+    // stats needs server-level state, so it is answered here rather
+    // than in the router
+    if req.method == "GET" && req.path == "/v1/stats" {
+        let mut resp = Response::ok(stats_body(pipe, n_workers));
+        respond(pipe, stream, &mut resp, t0);
+        return;
     }
-    let elapsed_us = t0.elapsed().as_micros() as u64;
-    counters.busy_us.fetch_add(elapsed_us, Ordering::Relaxed);
-    if let Some(hit) = routed.cache {
-        routed
-            .response
-            .headers
-            .push(("X-Smart-Cache".to_string(), if hit { "hit" } else { "miss" }.to_string()));
+    // Duplicate the socket handle so the pipeline can park it on an
+    // in-flight slot while this handle stays with the worker (dropping
+    // one keeps the connection open for the other).
+    let fetched = match stream.try_clone() {
+        Ok(dup) => handle_conn(pipe, &req, ParkedConn { stream: dup, t0 }),
+        // fd duplication failed: degrade to the blocking in-process path
+        Err(_) => Fetched::Done(handle(pipe, &req), None),
+    };
+    match fetched {
+        Fetched::Parked => {
+            // The connection now belongs to the flight leader's fan-out;
+            // only the routing time was spent on this worker.
+            pipe.stats().busy_us.add(t0.elapsed().as_micros() as u64);
+        }
+        Fetched::Done(mut routed, _conn) => {
+            if routed.response.status >= 400 {
+                // a failed leader also answered its parked followers
+                pipe.stats().errors.add(1 + routed.fanout as u64);
+            }
+            if let Some(tier) = routed.cache {
+                routed
+                    .response
+                    .headers
+                    .push(("X-Smart-Cache".to_string(), tier.token().to_string()));
+            }
+            respond(pipe, stream, &mut routed.response, t0);
+        }
     }
-    routed
-        .response
-        .headers
-        .push(("X-Smart-Time-Us".to_string(), elapsed_us.to_string()));
-    let _ = write_response(stream, &routed.response);
 }
 
-/// Render the `GET /v1/stats` body: request/error/busy counters plus the
-/// cache's hit/miss/eviction/occupancy numbers. Diagnostic only — unlike
-/// the compute endpoints, these bytes are not canonical artifacts.
-fn stats_body(cache: &ResultCache, c: &Counters, workers: usize) -> String {
+/// Frame and write one response: account busy time, stamp the timing
+/// header.
+fn respond(pipe: &Pipeline, stream: &mut TcpStream, resp: &mut Response, t0: Instant) {
+    let elapsed_us = t0.elapsed().as_micros() as u64;
+    pipe.stats().busy_us.add(elapsed_us);
+    resp.headers.push(("X-Smart-Time-Us".to_string(), elapsed_us.to_string()));
+    let _ = write_response(stream, resp);
+}
+
+/// Render the `GET /v1/stats` body: request/error/busy/campaign
+/// counters plus per-layer cache, disk, flight, and batch numbers.
+/// Diagnostic only — unlike the compute endpoints, these bytes are not
+/// canonical artifacts.
+fn stats_body(pipe: &Pipeline, workers: usize) -> String {
+    let s = pipe.stats();
+    let num = |n: u64| Value::Num(n as f64);
     let mut root = std::collections::BTreeMap::new();
     let mut put = |k: &str, v: Value| {
         root.insert(k.to_string(), v);
     };
     put("service", Value::Str("smart-serve".to_string()));
-    put("workers", Value::Num(workers as f64));
-    put("uptime_us", Value::Num(c.started.elapsed().as_micros() as f64));
-    put("requests", Value::Num(c.requests.load(Ordering::Relaxed) as f64));
-    put("errors", Value::Num(c.errors.load(Ordering::Relaxed) as f64));
-    put("busy_us", Value::Num(c.busy_us.load(Ordering::Relaxed) as f64));
+    put("workers", num(workers as u64));
+    put("uptime_us", num(s.uptime_us()));
+    put("uptime_s", num(s.uptime_s()));
+    put("requests", num(s.requests.get()));
+    put("errors", num(s.errors.get()));
+    put("busy_us", num(s.busy_us.get()));
+    put("campaigns", num(s.campaigns.get()));
+    let cache = pipe.cache();
     let mut cm = std::collections::BTreeMap::new();
-    cm.insert("entries".to_string(), Value::Num(cache.len() as f64));
-    cm.insert("hits".to_string(), Value::Num(cache.hits() as f64));
-    cm.insert("misses".to_string(), Value::Num(cache.misses() as f64));
-    cm.insert("evictions".to_string(), Value::Num(cache.evictions() as f64));
+    cm.insert("entries".to_string(), num(cache.len() as u64));
+    cm.insert("bytes".to_string(), num(cache.bytes() as u64));
+    cm.insert("hits".to_string(), num(cache.hits()));
+    cm.insert("misses".to_string(), num(cache.misses()));
+    cm.insert("evictions".to_string(), num(cache.evictions()));
     put("cache", Value::Obj(cm));
+    let mut dm = std::collections::BTreeMap::new();
+    let (enabled, h, m, w, r, warm) = match pipe.disk() {
+        Some(d) => (true, d.hits(), d.misses(), d.writes(), d.rejects(), d.warm_entries()),
+        None => (false, 0, 0, 0, 0, 0),
+    };
+    dm.insert("enabled".to_string(), Value::Bool(enabled));
+    dm.insert("hits".to_string(), num(h));
+    dm.insert("misses".to_string(), num(m));
+    dm.insert("writes".to_string(), num(w));
+    dm.insert("rejects".to_string(), num(r));
+    dm.insert("warm_entries".to_string(), num(warm));
+    put("disk", Value::Obj(dm));
+    let flight = pipe.flight();
+    let mut fm = std::collections::BTreeMap::new();
+    fm.insert("leads".to_string(), num(flight.leads()));
+    fm.insert("deduped".to_string(), num(flight.deduped()));
+    fm.insert("waiting".to_string(), num(flight.waiting()));
+    put("flight", Value::Obj(fm));
+    let batch = pipe.batch();
+    let mut bm = std::collections::BTreeMap::new();
+    bm.insert("batched".to_string(), num(batch.batched()));
+    bm.insert("groups".to_string(), num(batch.groups()));
+    bm.insert("queued".to_string(), num(batch.queued()));
+    put("batch", Value::Obj(bm));
     let mut text = to_string_pretty(&Value::Obj(root));
     text.push('\n');
     text
 }
 
+/// Nearest-rank percentile over a sorted latency sample
+/// (integer microseconds — no float accumulation anywhere).
+fn percentile(sorted_us: &[u64], p: u64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let last = sorted_us.len() as u64 - 1;
+    let idx = (last * p + 50) / 100;
+    sorted_us[idx.min(last) as usize]
+}
+
 /// Outcome of the `smart serve --self-test` loopback load generation.
 #[derive(Debug, Clone)]
 pub struct SelfTestReport {
-    /// Compute requests issued (priming + concurrent phases).
+    /// Compute requests issued across all phases.
     pub requests: u64,
-    /// Requests answered from the cache.
+    /// Requests answered from the in-memory cache (hit phase).
     pub hits: u64,
-    /// Requests that ran a campaign.
+    /// Priming requests that ran a campaign.
     pub misses: u64,
-    /// Concurrent client threads of the load phase.
+    /// Concurrent client threads of the hit phase.
     pub clients: usize,
-    /// Requests per endpoint per client in the load phase.
+    /// Requests per endpoint per client in the hit phase.
     pub repeats: usize,
-    /// The server's `GET /v1/stats` body at the end of the run.
+    /// Concurrent clients of the thundering-herd phase.
+    pub herd_clients: usize,
+    /// Compatible concurrent inferences of the batching phase.
+    pub batch_jobs: usize,
+    /// Followers that shared an in-flight computation (must be
+    /// `herd_clients - 1` for the herd).
+    pub deduped: u64,
+    /// Spec computations actually executed across all phases.
+    pub campaigns: u64,
+    /// Jobs that rode in merged batch groups.
+    pub batched: u64,
+    /// Merged batch executions covering two or more jobs.
+    pub batch_groups: u64,
+    /// Disk-tier entries found by the warm-start server.
+    pub warm_entries: u64,
+    /// Hit-phase throughput (requests per second, client-side wall
+    /// clock).
+    pub throughput_rps: f64,
+    /// Hit-phase p50 latency (client-side, microseconds).
+    pub p50_us: u64,
+    /// Hit-phase p95 latency (client-side, microseconds).
+    pub p95_us: u64,
+    /// Hit-phase p99 latency (client-side, microseconds).
+    pub p99_us: u64,
+    /// The first server's `GET /v1/stats` body at the end of its run.
     pub stats_json: String,
+    /// The `BENCH_serve.json` document (throughput, latency
+    /// percentiles, hit/dedup/batch counters).
+    pub bench_json: String,
 }
 
 /// Loopback self-test: start a server on an ephemeral port, hammer it
-/// with concurrent clients, and assert the service contract —
+/// with concurrent clients, and assert the full serving contract —
 ///
 /// 1. every compute response is **byte-identical** to the corresponding
 ///    CLI `--json` artifact encoder output ([`crate::report::mc_json`],
 ///    [`crate::dse::sweep_json`], [`crate::nn::infer_json`]);
 /// 2. after one priming request per endpoint, every repeat (from any
-///    client, concurrently) is served from the cache;
-/// 3. a NaN-bearing sample stream no longer perturbs histogram bin 0
+///    client, concurrently) is served from the in-memory cache;
+/// 3. **thundering herd**: with the compute gate paused, a herd of
+///    clients requesting one uncached spec converges onto one flight
+///    slot — exactly one campaign executes, every other client shares
+///    its bytes (`X-Smart-Cache: dedup`);
+/// 4. **cross-request batching**: compatible concurrent `/v1/infer`
+///    requests coalesce into one merged engine execution, each body
+///    byte-identical to its solo run;
+/// 5. **kill/restart warm start**: a second server over the same
+///    `--cache-dir` serves every prior body byte-identically from the
+///    disk tier with zero recomputed campaigns;
+/// 6. a NaN-bearing sample stream no longer perturbs histogram bin 0
 ///    (the PR-5 `metrics::Histogram` regression).
 ///
-/// `smoke` shrinks the campaign sizes and client counts for CI.
+/// `smoke` shrinks campaign sizes, client counts, and the herd for CI.
 /// `kernel` selects the simulation tier every request (and every
 /// expected artifact) is pinned to — `--kernel fast` exercises the
 /// surrogate tier end to end, including its cache-key fork (DESIGN.md
-/// §13). Returns the counters; any contract violation is an error.
+/// §13). The worker pool is widened to the batch-phase group size if
+/// needed (batch followers block a worker each while they wait).
+/// Returns the counters plus the `BENCH_serve.json` document; any
+/// contract violation is an error.
 pub fn self_test(
     params: &Params,
     workers: usize,
     smoke: bool,
     kernel: KernelKind,
 ) -> Result<SelfTestReport> {
-    use crate::coordinator::{run_campaign, Backend, CampaignSpec};
+    use crate::coordinator::{run_campaign, Backend, CampaignSpec, Workload};
     use crate::dse::{run_grid_point, sweep_json, GridAxes, SweepOptions, SweepSpec};
     use crate::mac::Variant;
     use crate::montecarlo::Corner;
     use crate::nn::{infer_json, run_infer, InferOptions, ModelSpec};
 
-    // (3) the histogram-integrity fix backing the acceptance criterion:
+    // (6) the histogram-integrity fix backing the acceptance criterion:
     // non-finite samples must never reach bin 0.
     let mut h = crate::metrics::Histogram::new(0.0, 1.0, 8);
     h.push(f64::NAN);
@@ -372,13 +521,34 @@ pub fn self_test(
         "NaN-bearing stream perturbed histogram bin 0"
     );
 
+    let herd_clients: usize = if smoke { 64 } else { 1000 };
+    let batch_jobs: usize = if smoke { 4 } else { 8 };
+    // batch followers hold a worker each while they wait on the merged
+    // execution, so the pool must fit the whole group
+    let workers = workers.max(batch_jobs);
+
+    // Self-cleaning disk tier for the warm-start phase.
+    struct Cleanup(PathBuf);
+    impl Drop for Cleanup {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+    let cache_dir =
+        std::env::temp_dir().join(format!("smart-serve-selftest-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let _cleanup = Cleanup(cache_dir.clone());
+
     let opts = ServeOptions {
         addr: "127.0.0.1:0".to_string(),
         workers,
-        cache_cap: 64,
+        cache_cap: 16 << 20,
+        cache_dir: Some(cache_dir.clone()),
+        batch_max: batch_jobs.max(16),
     };
     let mut server = Server::start(*params, &opts)?;
     let addr = server.addr().to_string();
+    let pipe = server.pipeline();
 
     let (status, _, body) = http_request(&addr, "GET", "/v1/health", "")?;
     anyhow::ensure!(status == 200 && body.contains("smart-serve"), "health probe failed");
@@ -465,19 +635,25 @@ pub fn self_test(
     }
 
     // (2) concurrent load: every repeat must be a byte-identical hit.
+    // Client-side latency is the serving benchmark (recorded per
+    // request, integer microseconds).
     let clients = if smoke { 3 } else { 8 };
     let repeats = if smoke { 3 } else { 8 };
-    let failures: Vec<String> = std::thread::scope(|scope| {
+    let t_load = Instant::now();
+    let outcomes: Vec<Result<Vec<u64>, String>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..clients)
             .map(|_| {
                 let addr = addr.clone();
                 let endpoints = &endpoints;
-                scope.spawn(move || -> Result<(), String> {
+                scope.spawn(move || -> Result<Vec<u64>, String> {
+                    let mut lat = Vec::with_capacity(repeats * endpoints.len());
                     for _ in 0..repeats {
                         for (path, body, expect) in endpoints {
+                            let t = Instant::now();
                             let (status, headers, got) =
                                 http_request(&addr, "POST", path, body)
                                     .map_err(|e| format!("{path}: {e:#}"))?;
+                            lat.push(t.elapsed().as_micros() as u64);
                             if status != 200 {
                                 return Err(format!("{path}: status {status}: {got}"));
                             }
@@ -492,24 +668,28 @@ pub fn self_test(
                             }
                         }
                     }
-                    Ok(())
+                    Ok(lat)
                 })
             })
             .collect();
         handles
             .into_iter()
-            .filter_map(|h| match h.join() {
-                Ok(outcome) => outcome.err(),
-                Err(_) => Some("self-test client panicked".to_string()),
+            .map(|h| match h.join() {
+                Ok(outcome) => outcome,
+                Err(_) => Err("self-test client panicked".to_string()),
             })
             .collect()
     });
+    let load_us = t_load.elapsed().as_micros() as u64;
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    for o in outcomes {
+        match o {
+            Ok(lat) => latencies.extend(lat),
+            Err(e) => failures.push(e),
+        }
+    }
     anyhow::ensure!(failures.is_empty(), "self-test clients failed: {}", failures.join("; "));
-
-    let (status, _, stats_json) = http_request(&addr, "GET", "/v1/stats", "")?;
-    anyhow::ensure!(status == 200, "stats probe failed");
-    crate::util::json::parse(&stats_json)
-        .map_err(|e| anyhow::anyhow!("stats body is not valid JSON: {e}"))?;
 
     let want_hits = (clients * repeats * endpoints.len()) as u64;
     let (hits, misses) = (server.cache_hits(), server.cache_misses());
@@ -518,40 +698,318 @@ pub fn self_test(
         "cache hit-rate off: {hits} hits / {misses} misses, expected {want_hits} / {}",
         endpoints.len()
     );
+    latencies.sort_unstable();
+    let (p50, p95, p99) = (
+        percentile(&latencies, 50),
+        percentile(&latencies, 95),
+        percentile(&latencies, 99),
+    );
+    let throughput_rps = if load_us == 0 {
+        0.0
+    } else {
+        want_hits as f64 * 1.0e6 / load_us as f64
+    };
+
+    // (3) thundering herd: N clients, one uncached spec, exactly one
+    // campaign. The paused gate holds the flight leader mid-compute
+    // until every follower has parked on its slot.
+    let herd_body = format!(
+        "{{\"variant\": \"smart\", \"n_mc\": {n_mc}, \"kernel\": \"{tok}\", \
+         \"workload\": {{\"kind\": \"fixed\", \"a\": 3, \"b\": 13}}}}"
+    );
+    let herd_expect = {
+        let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+        spec.n_mc = n_mc;
+        spec.kernel = kernel;
+        spec.workload = Workload::Fixed { a: 3, b: 13 };
+        crate::report::mc_json(&spec, &run_campaign(params, &spec, Backend::Native, None)?)
+    };
+    let campaigns_before = pipe.stats().campaigns.get();
+    let deduped_before = pipe.flight().deduped();
+    pipe.gate().pause();
+    let (herded, herd_results) = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..herd_clients)
+            .map(|_| {
+                let addr = addr.clone();
+                let body = &herd_body;
+                scope.spawn(move || {
+                    http_request(&addr, "POST", "/v1/mc", body).map_err(|e| format!("{e:#}"))
+                })
+            })
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let mut herded = false;
+        while Instant::now() < deadline {
+            if pipe.flight().waiting() >= herd_clients as u64 - 1 {
+                herded = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // resume unconditionally so stalled clients can finish either way
+        pipe.gate().resume();
+        let results: Vec<Result<(u16, Vec<(String, String)>, String), String>> = handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err("herd client panicked".to_string()),
+            })
+            .collect();
+        (herded, results)
+    });
+    anyhow::ensure!(herded, "thundering herd never fully converged onto one flight slot");
+    let (mut lead_n, mut dedup_n) = (0u64, 0u64);
+    for r in &herd_results {
+        let (status, headers, got) = match r {
+            Ok(t) => t,
+            Err(e) => anyhow::bail!("herd client failed: {e}"),
+        };
+        anyhow::ensure!(*status == 200, "herd request failed ({status}): {got}");
+        anyhow::ensure!(
+            *got == herd_expect,
+            "herd response diverged from the CLI --json artifact bytes"
+        );
+        for (k, v) in headers {
+            if k == "X-Smart-Cache" {
+                match v.as_str() {
+                    "miss" => lead_n += 1,
+                    "dedup" => dedup_n += 1,
+                    other => anyhow::bail!("unexpected herd cache tier: {other}"),
+                }
+            }
+        }
+    }
+    let herd_campaigns = pipe.stats().campaigns.get() - campaigns_before;
+    let herd_deduped = pipe.flight().deduped() - deduped_before;
+    anyhow::ensure!(
+        herd_campaigns == 1 && lead_n == 1,
+        "thundering herd must cost exactly one campaign (ran {herd_campaigns}, {lead_n} leaders)"
+    );
+    anyhow::ensure!(
+        herd_deduped == herd_clients as u64 - 1 && dedup_n == herd_clients as u64 - 1,
+        "herd dedup off: {herd_deduped} deduped / {dedup_n} dedup responses, expected {}",
+        herd_clients - 1
+    );
+
+    // (4) cross-request batching: M compatible inferences (same variant
+    // + kernel tier, distinct seeds) coalesce into one merged engine
+    // execution, each body byte-identical to its solo run.
+    let batch_bodies: Vec<String> = (0..batch_jobs)
+        .map(|i| {
+            format!(
+                "{{\"name\": \"serve-batch\", \"seed\": {}, \"trials\": {trials}, \
+                 \"bits\": 4, \"kernel\": \"{tok}\", \
+                 \"dataset\": {{\"classes\": 3, \"features\": 6, \"jitter\": 0.1}}, \
+                 \"layers\": [{{\"inputs\": 6, \"outputs\": 4, \"relu\": true}}, \
+                              {{\"inputs\": 4, \"outputs\": 3}}]}}",
+                101 + i
+            )
+        })
+        .collect();
+    let mut batch_expects = Vec::with_capacity(batch_jobs);
+    for body in &batch_bodies {
+        let spec = ModelSpec::from_value(
+            &crate::util::json::parse(body).map_err(|e| anyhow::anyhow!(e))?,
+        )?;
+        let opts = InferOptions { threads: 1, kernel, ..InferOptions::default() };
+        let r = run_infer(params, &spec, &opts)?;
+        batch_expects.push(infer_json(&spec, &r));
+    }
+    let campaigns_before = pipe.stats().campaigns.get();
+    let (batched_before, groups_before) = (pipe.batch().batched(), pipe.batch().groups());
+    pipe.gate().pause();
+    let (queued_up, batch_results) = std::thread::scope(|scope| {
+        let handles: Vec<_> = batch_bodies
+            .iter()
+            .map(|body| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    http_request(&addr, "POST", "/v1/infer", body)
+                        .map_err(|e| format!("{e:#}"))
+                })
+            })
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let mut queued_up = false;
+        while Instant::now() < deadline {
+            if pipe.batch().queued() >= batch_jobs as u64 - 1 {
+                queued_up = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        pipe.gate().resume();
+        let results: Vec<Result<(u16, Vec<(String, String)>, String), String>> = handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err("batch client panicked".to_string()),
+            })
+            .collect();
+        (queued_up, results)
+    });
+    anyhow::ensure!(queued_up, "batch followers never queued behind the group leader");
+    for (i, r) in batch_results.iter().enumerate() {
+        let (status, _, got) = match r {
+            Ok(t) => t,
+            Err(e) => anyhow::bail!("batch client {i} failed: {e}"),
+        };
+        anyhow::ensure!(*status == 200, "batch request {i} failed ({status}): {got}");
+        anyhow::ensure!(
+            *got == batch_expects[i],
+            "batched inference {i} diverged from its solo artifact bytes"
+        );
+    }
+    let batch_campaigns = pipe.stats().campaigns.get() - campaigns_before;
+    let batch_batched = pipe.batch().batched() - batched_before;
+    let batch_groups = pipe.batch().groups() - groups_before;
+    anyhow::ensure!(
+        batch_campaigns == batch_jobs as u64 && batch_batched == batch_jobs as u64
+            && batch_groups == 1,
+        "batch phase off: {batch_campaigns} campaigns / {batch_batched} batched / \
+         {batch_groups} groups, expected {batch_jobs} / {batch_jobs} / 1"
+    );
+
+    // Final first-server counters (the bench record), then kill it.
+    let stats_json = server.stats_json();
+    let total_deduped = pipe.flight().deduped();
+    let total_leads = pipe.flight().leads();
+    let total_campaigns = pipe.stats().campaigns.get();
+    let total_batched = pipe.batch().batched();
+    let total_groups = pipe.batch().groups();
+    let (hits_total, misses_total) = (server.cache_hits(), server.cache_misses());
+    let disk_writes = match pipe.disk() {
+        Some(d) => d.writes(),
+        None => 0,
+    };
     server.stop();
+    drop(server);
+
+    // (5) kill/restart warm start: a fresh server over the same
+    // --cache-dir serves every prior body byte-identically from the
+    // disk tier, recomputing nothing.
+    let opts2 = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        cache_dir: Some(cache_dir.clone()),
+        ..ServeOptions::default()
+    };
+    let mut server2 = Server::start(*params, &opts2)?;
+    let addr2 = server2.addr().to_string();
+    let pipe2 = server2.pipeline();
+    let warm_entries = match pipe2.disk() {
+        Some(d) => d.warm_entries(),
+        None => 0,
+    };
+    let want_warm = (endpoints.len() + 1 + batch_jobs) as u64;
+    anyhow::ensure!(
+        warm_entries >= want_warm,
+        "warm start found {warm_entries} disk entries, expected at least {want_warm}"
+    );
+    let mut warm_checks: Vec<(&str, &String, &String)> =
+        endpoints.iter().map(|(p, b, e)| (*p, b, e)).collect();
+    warm_checks.push(("/v1/mc", &herd_body, &herd_expect));
+    for (path, body, expect) in warm_checks {
+        let (status, headers, got) = http_request(&addr2, "POST", path, body)?;
+        anyhow::ensure!(status == 200, "{path}: warm-start request failed ({status}): {got}");
+        anyhow::ensure!(
+            got == *expect,
+            "{path}: warm-start bytes diverged from the CLI --json artifact"
+        );
+        anyhow::ensure!(
+            headers.iter().any(|(k, v)| k == "X-Smart-Cache" && v == "disk"),
+            "{path}: warm-start request must be served from the disk tier"
+        );
+    }
+    let recomputed = pipe2.stats().campaigns.get();
+    anyhow::ensure!(
+        recomputed == 0,
+        "warm start recomputed {recomputed} campaigns; the disk tier must serve all of them"
+    );
+    server2.stop();
+
+    let requests_total = (endpoints.len()            // priming
+        + clients * repeats * endpoints.len()        // hit phase
+        + herd_clients                               // thundering herd
+        + batch_jobs                                 // batching
+        + endpoints.len() + 1) as u64; // warm start
+    let bench_json = {
+        let num = |n: u64| Value::Num(n as f64);
+        let mut lat = std::collections::BTreeMap::new();
+        lat.insert("p50".to_string(), num(p50));
+        lat.insert("p95".to_string(), num(p95));
+        lat.insert("p99".to_string(), num(p99));
+        let mut cm = std::collections::BTreeMap::new();
+        cm.insert("hits".to_string(), num(hits_total));
+        cm.insert("misses".to_string(), num(misses_total));
+        let mut fm = std::collections::BTreeMap::new();
+        fm.insert("deduped".to_string(), num(total_deduped));
+        fm.insert("leads".to_string(), num(total_leads));
+        let mut bm = std::collections::BTreeMap::new();
+        bm.insert("batched".to_string(), num(total_batched));
+        bm.insert("groups".to_string(), num(total_groups));
+        let mut dm = std::collections::BTreeMap::new();
+        dm.insert("writes".to_string(), num(disk_writes));
+        dm.insert("warm_entries".to_string(), num(warm_entries));
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("service".to_string(), Value::Str("smart-serve".to_string()));
+        root.insert("kernel".to_string(), Value::Str(tok.to_string()));
+        root.insert("smoke".to_string(), Value::Bool(smoke));
+        root.insert("clients".to_string(), num(clients as u64));
+        root.insert("repeats".to_string(), num(repeats as u64));
+        root.insert("herd_clients".to_string(), num(herd_clients as u64));
+        root.insert("batch_jobs".to_string(), num(batch_jobs as u64));
+        root.insert("requests".to_string(), num(requests_total));
+        root.insert("campaigns".to_string(), num(total_campaigns));
+        root.insert("throughput_rps".to_string(), Value::Num(throughput_rps));
+        root.insert("latency_us".to_string(), Value::Obj(lat));
+        root.insert("cache".to_string(), Value::Obj(cm));
+        root.insert("flight".to_string(), Value::Obj(fm));
+        root.insert("batch".to_string(), Value::Obj(bm));
+        root.insert("disk".to_string(), Value::Obj(dm));
+        let mut text = to_string_pretty(&Value::Obj(root));
+        text.push('\n');
+        text
+    };
+
     Ok(SelfTestReport {
-        requests: want_hits + endpoints.len() as u64,
+        requests: requests_total,
         hits,
         misses,
         clients,
         repeats,
+        herd_clients,
+        batch_jobs,
+        deduped: total_deduped,
+        campaigns: total_campaigns,
+        batched: total_batched,
+        batch_groups: total_groups,
+        warm_entries,
+        throughput_rps,
+        p50_us: p50,
+        p95_us: p95,
+        p99_us: p99,
         stats_json,
+        bench_json,
     })
-}
-
-impl Server {
-    /// Cache lookups answered without running a campaign.
-    pub fn cache_hits(&self) -> u64 {
-        self.cache.hits()
-    }
-
-    /// Cache lookups that dispatched to the campaign stack.
-    pub fn cache_misses(&self) -> u64 {
-        self.cache.misses()
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn opts(workers: usize) -> ServeOptions {
+        ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            workers,
+            cache_cap: 1 << 20,
+            ..ServeOptions::default()
+        }
+    }
+
     #[test]
     fn start_stop_is_clean_and_idempotent() {
-        let mut s = Server::start(
-            Params::default(),
-            &ServeOptions { addr: "127.0.0.1:0".to_string(), workers: 2, cache_cap: 8 },
-        )
-        .unwrap();
+        let mut s = Server::start(Params::default(), &opts(2)).unwrap();
         assert_ne!(s.addr().port(), 0);
         let (status, _, body) =
             http_request(&s.addr().to_string(), "GET", "/v1/health", "").unwrap();
@@ -562,25 +1020,19 @@ mod tests {
     }
 
     #[test]
-    fn zero_workers_or_cache_cap_is_a_descriptive_error() {
-        let err_of = |workers: usize, cache_cap: usize| match Server::start(
-            Params::default(),
-            &ServeOptions { addr: "127.0.0.1:0".to_string(), workers, cache_cap },
-        ) {
+    fn zero_knobs_are_descriptive_errors() {
+        let err_of = |o: ServeOptions| match Server::start(Params::default(), &o) {
             Err(e) => e.to_string(),
             Ok(_) => panic!("zero-knob server must not start"),
         };
-        assert!(err_of(0, 8).contains("--workers 0"));
-        assert!(err_of(1, 0).contains("--cache-cap 0"));
+        assert!(err_of(ServeOptions { workers: 0, ..opts(1) }).contains("--workers 0"));
+        assert!(err_of(ServeOptions { cache_cap: 0, ..opts(1) }).contains("--cache-cap 0"));
+        assert!(err_of(ServeOptions { batch_max: 0, ..opts(1) }).contains("--batch-max 0"));
     }
 
     #[test]
-    fn stats_endpoint_counts_requests() {
-        let mut s = Server::start(
-            Params::default(),
-            &ServeOptions { addr: "127.0.0.1:0".to_string(), workers: 2, cache_cap: 8 },
-        )
-        .unwrap();
+    fn stats_endpoint_reports_every_pipeline_layer() {
+        let mut s = Server::start(Params::default(), &opts(2)).unwrap();
         let addr = s.addr().to_string();
         let _ = http_request(&addr, "GET", "/v1/health", "").unwrap();
         let (status, _, body) = http_request(&addr, "GET", "/v1/stats", "").unwrap();
@@ -588,7 +1040,13 @@ mod tests {
         let v = crate::util::json::parse(&body).unwrap();
         assert!(v.get("requests").unwrap().as_u64().unwrap() >= 1);
         assert_eq!(v.get("workers").unwrap().as_u64().unwrap(), 2);
-        assert!(v.get("cache").unwrap().get("entries").is_some());
+        assert_eq!(v.get("campaigns").unwrap().as_u64().unwrap(), 0);
+        assert!(v.get("uptime_s").is_some());
+        assert!(v.get("cache").unwrap().get("bytes").is_some());
+        let disk = v.get("disk").unwrap();
+        assert!(!disk.get("enabled").unwrap().as_bool().unwrap());
+        assert!(v.get("flight").unwrap().get("deduped").is_some());
+        assert!(v.get("batch").unwrap().get("queued").is_some());
         s.stop();
     }
 
@@ -597,7 +1055,15 @@ mod tests {
         let r = self_test(&Params::default(), 2, true, KernelKind::Block).unwrap();
         assert_eq!(r.misses, 3);
         assert_eq!(r.hits, (r.clients * r.repeats * 3) as u64);
+        assert_eq!(r.deduped, r.herd_clients as u64 - 1, "herd must dedup all followers");
+        // priming (3) + herd leader (1) + one batch group of batch_jobs
+        assert_eq!(r.campaigns, 4 + r.batch_jobs as u64);
+        assert_eq!(r.batched, r.batch_jobs as u64);
+        assert_eq!(r.batch_groups, 1);
+        assert!(r.warm_entries >= 4 + r.batch_jobs as u64);
         assert!(r.stats_json.contains("smart-serve"));
+        assert!(r.bench_json.contains("throughput_rps"));
+        crate::util::json::parse(&r.bench_json).unwrap();
     }
 
     #[test]
@@ -605,5 +1071,6 @@ mod tests {
         let r = self_test(&Params::default(), 2, true, KernelKind::Fast).unwrap();
         assert_eq!(r.misses, 3);
         assert_eq!(r.hits, (r.clients * r.repeats * 3) as u64);
+        assert_eq!(r.deduped, r.herd_clients as u64 - 1);
     }
 }

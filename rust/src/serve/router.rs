@@ -1,7 +1,8 @@
-//! Request routing: JSON bodies -> canonical spec keys -> cache or the
-//! campaign stack.
+//! Request routing: JSON bodies -> canonical spec keys -> the serving
+//! pipeline (memory cache -> disk tier -> single-flight -> batched
+//! compute).
 //!
-//! Every compute endpoint follows the same shape (DESIGN.md §11):
+//! Every compute endpoint follows the same shape (DESIGN.md §11/§14):
 //!
 //! 1. parse the JSON body into the same spec type the TOML configs parse
 //!    into (`util::json` and `util::toml_lite` share one [`Value`] tree,
@@ -14,47 +15,177 @@
 //!    artifacts (DESIGN.md §4). The `kernel` tier IS identity — the fast
 //!    surrogate is tolerance-bounded, not bit-identical (DESIGN.md §13) —
 //!    so it stays in the spec and forks the key;
-//! 3. answer from the sharded LRU on a hit, else run the existing
-//!    block-execution campaign stack and cache the canonical JSON body.
+//! 3. walk the [`Pipeline`]: answer from the sharded in-memory LRU on a
+//!    hit; else from the [`DiskTier`] (promoting the body back into
+//!    memory); else join the [`SingleFlight`] for the key — followers
+//!    park their connection (or block, in-process) and share the
+//!    leader's result; the leader computes through the [`Coalescer`]
+//!    (for `/v1/infer` and `/v1/sweep/point`) or directly (for
+//!    `/v1/mc`), then publishes the body to both cache tiers and every
+//!    follower.
 //!
 //! Response bodies are produced by the *same* encoders the CLI artifact
 //! writers use ([`crate::report::mc_json`], [`crate::dse::sweep_json`],
 //! [`crate::nn::infer_json`]), so a served response is byte-identical to
-//! the corresponding `--json` artifact.
+//! the corresponding `--json` artifact — which is also what makes every
+//! pipeline layer sound: a cached, disk-persisted, deduplicated, or
+//! batch-computed body is the same bytes a solo computation would have
+//! produced.
 
 use std::fmt::Write as _;
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::coordinator::{run_campaign, Backend, CampaignSpec};
-use crate::dse::{point_key, run_grid_point, sweep_json, GridAxes, SweepOptions, SweepSpec};
+use crate::dse::{point_key, GridAxes, SweepSpec};
 use crate::mac::{KernelKind, Variant};
 use crate::montecarlo::Corner;
-use crate::nn::{infer_json, run_infer, InferOptions, ModelSpec};
+use crate::nn::{InferOptions, ModelSpec};
 use crate::params::Params;
 use crate::report;
 use crate::util::json::{self, Value};
 
+use super::batch::{infer_compat, sweep_compat, Coalescer, Job};
 use super::cache::ResultCache;
-use super::http::{Request, Response};
+use super::disk::DiskTier;
+use super::flight::{Gate, Join, SingleFlight};
+use super::http::{ParkedConn, Request, Response};
+use super::stats::ServeStats;
 
 /// Work ceiling per request (MAC evaluations). A single request may not
 /// monopolize a worker indefinitely: campaigns above this are rejected
 /// with `400` instead of queued (batch-sized runs belong to the CLI).
 pub const MAX_REQUEST_ITEMS: u64 = 1 << 22;
 
-/// One routed request: the response plus the cache outcome
-/// (`Some(true)` = served from cache, `Some(false)` = computed,
-/// `None` = not a compute endpoint).
+/// Which pipeline layer answered a compute request; the value of the
+/// `X-Smart-Cache` provenance header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheTier {
+    /// Served from the in-memory LRU.
+    Hit,
+    /// Served from the disk tier (and promoted back into memory).
+    Disk,
+    /// Joined an in-flight computation and shared its result.
+    Dedup,
+    /// Computed by this request (the flight leader).
+    Miss,
+}
+
+impl CacheTier {
+    /// Header token for this tier.
+    pub fn token(self) -> &'static str {
+        match self {
+            CacheTier::Hit => "hit",
+            CacheTier::Disk => "disk",
+            CacheTier::Dedup => "dedup",
+            CacheTier::Miss => "miss",
+        }
+    }
+}
+
+/// One routed request: the response, which pipeline layer produced it
+/// (`None` for non-compute endpoints), and how many parked follower
+/// connections were answered by this request's fan-out.
 pub struct Routed {
     /// The response to frame.
     pub response: Response,
-    /// Cache outcome for the `X-Smart-Cache` provenance header.
-    pub cache: Option<bool>,
+    /// Pipeline provenance for the `X-Smart-Cache` header.
+    pub cache: Option<CacheTier>,
+    /// Parked connections answered alongside this response (leader
+    /// fan-out); error statuses count once per answered connection.
+    pub fanout: usize,
 }
 
 impl Routed {
     fn plain(response: Response) -> Self {
-        Self { response, cache: None }
+        Self { response, cache: None, fanout: 0 }
+    }
+}
+
+/// Outcome of routing a request that carried a live connection.
+pub enum Fetched {
+    /// The response is ready; the connection (if one was passed in) is
+    /// handed back for the caller to write to.
+    Done(Routed, Option<ParkedConn>),
+    /// The connection was parked on an in-flight computation; the
+    /// flight leader's fan-out will answer it. Do not write anything.
+    Parked,
+}
+
+/// The three-layer serving pipeline plus the compute stack it fronts.
+pub struct Pipeline {
+    params: Params,
+    cache: ResultCache,
+    disk: Option<DiskTier>,
+    flight: SingleFlight,
+    batch: Coalescer,
+    gate: Arc<Gate>,
+    stats: Arc<ServeStats>,
+}
+
+impl Pipeline {
+    /// Build a pipeline: a byte-budgeted in-memory LRU (`cache_cap`
+    /// bytes across `cache_shards` shards), an optional disk tier under
+    /// `cache_dir` (created if missing; fails only on I/O errors), and
+    /// a coalescer merging up to `batch_max` compatible jobs per
+    /// execution.
+    pub fn new(
+        params: Params,
+        cache_cap: usize,
+        cache_shards: usize,
+        cache_dir: Option<&Path>,
+        batch_max: usize,
+    ) -> std::io::Result<Self> {
+        let gate = Arc::new(Gate::new());
+        let stats = Arc::new(ServeStats::new());
+        let disk = match cache_dir {
+            Some(dir) => Some(DiskTier::open(dir)?),
+            None => None,
+        };
+        Ok(Pipeline {
+            params,
+            cache: ResultCache::new(cache_cap, cache_shards),
+            disk,
+            flight: SingleFlight::new(),
+            batch: Coalescer::new(params, batch_max, Arc::clone(&gate), Arc::clone(&stats)),
+            gate,
+            stats,
+        })
+    }
+
+    /// The server's model card.
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    /// The in-memory result cache.
+    pub fn cache(&self) -> &ResultCache {
+        &self.cache
+    }
+
+    /// The disk tier, if one is configured.
+    pub fn disk(&self) -> Option<&DiskTier> {
+        self.disk.as_ref()
+    }
+
+    /// The single-flight dedup map.
+    pub fn flight(&self) -> &SingleFlight {
+        &self.flight
+    }
+
+    /// The cross-request coalescer.
+    pub fn batch(&self) -> &Coalescer {
+        &self.batch
+    }
+
+    /// The compute gate (paused by the self-test to pile herds up).
+    pub fn gate(&self) -> &Gate {
+        &self.gate
+    }
+
+    /// The service counters.
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
     }
 }
 
@@ -74,21 +205,52 @@ fn fail(msg: impl std::fmt::Display) -> Reject {
     Reject { status: 500, msg: msg.to_string() }
 }
 
-/// Route one parsed request against the cache and the campaign stack.
-pub fn handle(params: &Params, cache: &ResultCache, req: &Request) -> Routed {
-    let outcome = match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/v1/health") => return Routed::plain(health()),
-        ("POST", "/v1/mc") => mc(params, cache, &req.body),
-        ("POST", "/v1/sweep/point") => sweep_point(cache, &req.body),
-        ("POST", "/v1/infer") => infer(params, cache, &req.body),
+/// A validated compute request: its canonical cache key plus the
+/// computation that produces the canonical body on a full miss.
+struct Prepared<'a> {
+    key: String,
+    compute: Box<dyn FnOnce() -> Result<String, Reject> + 'a>,
+}
+
+/// Route one parsed request synchronously (the in-process path: no
+/// connection to park, so a follower blocks until the leader
+/// publishes).
+pub fn handle(pipe: &Pipeline, req: &Request) -> Routed {
+    match route(pipe, req, None) {
+        Fetched::Done(routed, _) => routed,
+        // unreachable: join() only parks when a connection is supplied
+        Fetched::Parked => Routed::plain(Response::error(
+            500,
+            "internal error: request parked without a connection",
+        )),
+    }
+}
+
+/// Route one parsed request that owns its connection. `Fetched::Parked`
+/// means the connection now belongs to an in-flight leader's fan-out.
+pub fn handle_conn(pipe: &Pipeline, req: &Request, conn: ParkedConn) -> Fetched {
+    route(pipe, req, Some(conn))
+}
+
+fn route(pipe: &Pipeline, req: &Request, conn: Option<ParkedConn>) -> Fetched {
+    let prepared = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/v1/health") => return Fetched::Done(Routed::plain(health()), conn),
+        ("POST", "/v1/mc") => mc(pipe, &req.body),
+        ("POST", "/v1/sweep/point") => sweep_point(pipe, &req.body),
+        ("POST", "/v1/infer") => infer(pipe, &req.body),
         (_, "/v1/health" | "/v1/mc" | "/v1/sweep/point" | "/v1/infer" | "/v1/stats") => {
-            return Routed::plain(Response::error(405, "method not allowed"))
+            return Fetched::Done(
+                Routed::plain(Response::error(405, "method not allowed")),
+                conn,
+            )
         }
-        _ => return Routed::plain(Response::error(404, "no such endpoint")),
+        _ => {
+            return Fetched::Done(Routed::plain(Response::error(404, "no such endpoint")), conn)
+        }
     };
-    match outcome {
-        Ok(routed) => routed,
-        Err(e) => Routed::plain(Response::error(e.status, &e.msg)),
+    match prepared {
+        Ok(p) => fetch(pipe, p, conn),
+        Err(e) => Fetched::Done(Routed::plain(Response::error(e.status, &e.msg)), conn),
     }
 }
 
@@ -102,35 +264,89 @@ fn health() -> Response {
     Response::ok(body)
 }
 
-/// Answer from the cache, or compute + insert. `compute` only runs on a
-/// miss; concurrent misses on one key may compute twice, which is safe
-/// (and byte-identical) by the determinism contract.
-fn cached(
-    cache: &ResultCache,
-    key: &str,
-    compute: impl FnOnce() -> Result<String, Reject>,
-) -> Result<Routed, Reject> {
-    if let Some(body) = cache.get(key) {
+/// Walk the pipeline for one validated compute request: memory, disk
+/// (with promotion), then the single-flight slot; the flight leader
+/// computes and publishes to every layer and follower.
+fn fetch(pipe: &Pipeline, p: Prepared<'_>, conn: Option<ParkedConn>) -> Fetched {
+    if let Some(body) = pipe.cache.get(&p.key) {
         // a hit clones the Arc, never the bytes — the whole point of
         // caching Arc<String> bodies
-        return Ok(Routed { response: Response::ok_shared(body), cache: Some(true) });
+        let routed =
+            Routed { response: Response::ok_shared(body), cache: Some(CacheTier::Hit), fanout: 0 };
+        return Fetched::Done(routed, conn);
     }
-    let body = Arc::new(compute()?);
-    cache.put(key, Arc::clone(&body));
-    Ok(Routed { response: Response::ok_shared(body), cache: Some(false) })
+    if let Some(disk) = &pipe.disk {
+        if let Some(body) = disk.get(&p.key) {
+            // promote: the next request for this key is a memory hit
+            pipe.cache.put(&p.key, Arc::clone(&body));
+            let routed = Routed {
+                response: Response::ok_shared(body),
+                cache: Some(CacheTier::Disk),
+                fanout: 0,
+            };
+            return Fetched::Done(routed, conn);
+        }
+    }
+    match pipe.flight.join(&p.key, conn) {
+        Join::Done { status, body, conn } => {
+            let routed = Routed {
+                response: Response { status, headers: Vec::new(), body },
+                cache: Some(CacheTier::Dedup),
+                fanout: 0,
+            };
+            Fetched::Done(routed, conn)
+        }
+        Join::Parked => Fetched::Parked,
+        Join::Lead(lease, conn) => match (p.compute)() {
+            Ok(body) => {
+                let body = Arc::new(body);
+                pipe.cache.put(&p.key, Arc::clone(&body));
+                if let Some(disk) = &pipe.disk {
+                    // persistence is best-effort: a full disk degrades
+                    // the service to memory-only, never to failure
+                    let _ = disk.put(&p.key, &body);
+                }
+                let fanout = lease.complete(200, &body);
+                let routed = Routed {
+                    response: Response::ok_shared(body),
+                    cache: Some(CacheTier::Miss),
+                    fanout,
+                };
+                Fetched::Done(routed, conn)
+            }
+            Err(e) => {
+                let response = Response::error(e.status, &e.msg);
+                let fanout = lease.complete(response.status, &response.body);
+                Fetched::Done(Routed { response, cache: None, fanout }, conn)
+            }
+        },
+    }
 }
 
-/// `POST /v1/mc`: body mirrors a `[[campaigns]]` table (JSON form);
-/// response is the canonical `mc.json` bytes.
-fn mc(params: &Params, cache: &ResultCache, body: &str) -> Result<Routed, Reject> {
-    let v = json::parse(body).map_err(|e| bad(format!("mc request body: {e}")))?;
-    let mut spec =
-        CampaignSpec::from_value(&v).map_err(|e| bad(format!("mc spec: {e:#}")))?;
+/// Canonical cache key of a `/v1/mc` campaign spec: the knob-zeroed
+/// `to_toml` rendering. Public so warm-start tooling can seed the disk
+/// tier from prior CLI artifacts — the key of an `mc.json` artifact is
+/// `mc_cache_key` of the spec that produced it.
+pub fn mc_cache_key(spec: &CampaignSpec) -> String {
     // Identity canonicalization: performance knobs never change the
     // artifact bytes (DESIGN.md §4), so they are stripped from the spec
     // before it becomes the cache key. The kernel field survives — a
     // fast-tier result is not byte-interchangeable with a block-tier one
     // (DESIGN.md §13).
+    let mut c = spec.clone();
+    c.workers = 0;
+    c.batch = 0;
+    c.shards = 0;
+    c.block = 0;
+    format!("mc\n{}", c.to_toml())
+}
+
+/// `POST /v1/mc`: body mirrors a `[[campaigns]]` table (JSON form);
+/// response is the canonical `mc.json` bytes.
+fn mc<'a>(pipe: &'a Pipeline, body: &str) -> Result<Prepared<'a>, Reject> {
+    let v = json::parse(body).map_err(|e| bad(format!("mc request body: {e}")))?;
+    let mut spec =
+        CampaignSpec::from_value(&v).map_err(|e| bad(format!("mc spec: {e:#}")))?;
     spec.workers = 0;
     spec.batch = 0;
     spec.shards = 0;
@@ -143,23 +359,30 @@ fn mc(params: &Params, cache: &ResultCache, body: &str) -> Result<Routed, Reject
             "campaign of {total} MAC evals exceeds the per-request ceiling of {MAX_REQUEST_ITEMS}"
         )));
     }
-    let key = format!("mc\n{}", spec.to_toml());
-    cached(cache, &key, || {
+    let key = mc_cache_key(&spec);
+    let compute = Box::new(move || {
+        // campaigns are not batchable across requests (each spec is its
+        // own engine configuration), so the gate sits directly here
+        pipe.gate.wait();
         // One OS thread per request worker: request-level parallelism
         // comes from the serve pool, not from nested campaign fan-out.
         let mut exec = spec.clone();
         exec.workers = 1;
-        let rep = run_campaign(params, &exec, Backend::Native, None)
+        let rep = run_campaign(&pipe.params, &exec, Backend::Native, None)
             .map_err(|e| fail(format!("mc campaign: {e:#}")))?;
+        pipe.stats.campaigns.incr();
         Ok(report::mc_json(&spec, &rep))
-    })
+    });
+    Ok(Prepared { key, compute })
 }
 
 /// `POST /v1/sweep/point`: body is one grid point in `dse.toml` terms
 /// (scalar `variant`/`vdd`/`v_bulk`/`bits`/`corner` plus `name`/`seed`/
 /// `n_mc`, an optional `kernel` tier, and optional `params` overrides);
-/// response is the canonical single-point `sweep.json` bytes.
-fn sweep_point(cache: &ResultCache, body: &str) -> Result<Routed, Reject> {
+/// response is the canonical single-point `sweep.json` bytes. Computes
+/// through the coalescer: compatible concurrent points share one merged
+/// campaign engine.
+fn sweep_point<'a>(pipe: &'a Pipeline, body: &str) -> Result<Prepared<'a>, Reject> {
     let v = json::parse(body).map_err(|e| bad(format!("sweep request body: {e}")))?;
     let kernel: KernelKind = match v.get("kernel").and_then(Value::as_str) {
         Some(s) => s.parse().map_err(bad)?,
@@ -203,19 +426,21 @@ fn sweep_point(cache: &ResultCache, body: &str) -> Result<Routed, Reject> {
     // The name is part of the response bytes but not of point_key, so it
     // joins the cache key explicitly. point_key carries the kernel tier.
     let key = format!("sweep\n{}\n{}", spec.name, point_key(&point, &spec, kernel));
-    cached(cache, &key, || {
-        let opts = SweepOptions { threads: 1, kernel, ..SweepOptions::default() };
-        let r = run_grid_point(&spec, &point, &opts)
-            .map_err(|e| fail(format!("sweep point: {e:#}")))?;
-        // a single point is trivially Pareto-optimal
-        Ok(sweep_json(&spec, &[r], &[true], kernel))
-    })
+    let compute = Box::new(move || {
+        let compat = sweep_compat(&spec, &point, kernel);
+        pipe.batch
+            .submit(&compat, Job::SweepPoint { spec, point, kernel })
+            .map_err(|e| fail(format!("sweep point: {e}")))
+    });
+    Ok(Prepared { key, compute })
 }
 
 /// `POST /v1/infer`: body mirrors an `nn.toml` model file plus optional
 /// top-level `variant`, `kernel`, and `noise_off`; response is the
-/// canonical `infer.json` bytes.
-fn infer(params: &Params, cache: &ResultCache, body: &str) -> Result<Routed, Reject> {
+/// canonical `infer.json` bytes. Computes through the coalescer:
+/// compatible concurrent inferences share one engine and tiler
+/// calibration.
+fn infer<'a>(pipe: &'a Pipeline, body: &str) -> Result<Prepared<'a>, Reject> {
     let v = json::parse(body).map_err(|e| bad(format!("infer request body: {e}")))?;
     let spec = ModelSpec::from_value(&v).map_err(|e| bad(format!("infer model: {e:#}")))?;
     let variant: Variant = match v.get("variant").and_then(Value::as_str) {
@@ -245,7 +470,7 @@ fn infer(params: &Params, cache: &ResultCache, body: &str) -> Result<Routed, Rej
         )));
     }
     let key = infer_key(&spec, variant, noise_off, kernel);
-    cached(cache, &key, || {
+    let compute = Box::new(move || {
         let opts = InferOptions {
             threads: 1,
             variant,
@@ -253,10 +478,12 @@ fn infer(params: &Params, cache: &ResultCache, body: &str) -> Result<Routed, Rej
             noise_off,
             ..InferOptions::default()
         };
-        let r = run_infer(params, &spec, &opts)
-            .map_err(|e| fail(format!("infer campaign: {e:#}")))?;
-        Ok(infer_json(&spec, &r))
-    })
+        let compat = infer_compat(variant, kernel);
+        pipe.batch
+            .submit(&compat, Job::Infer { spec, opts })
+            .map_err(|e| fail(format!("infer campaign: {e}")))
+    });
+    Ok(Prepared { key, compute })
 }
 
 /// Canonical identity key of one inference request: every field that can
@@ -294,10 +521,32 @@ mod tests {
         Request { method: method.into(), path: path.into(), body: body.into() }
     }
 
+    fn pipe() -> Pipeline {
+        Pipeline::new(Params::default(), 1 << 20, 2, None, 8).unwrap()
+    }
+
+    /// Self-cleaning temp dir for disk-tier tests.
+    struct Scratch(std::path::PathBuf);
+
+    impl Scratch {
+        fn new(tag: &str) -> Scratch {
+            let dir = std::env::temp_dir()
+                .join(format!("smart-router-{tag}-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            Scratch(dir)
+        }
+    }
+
+    impl Drop for Scratch {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
     #[test]
     fn health_is_a_plain_ok() {
-        let cache = ResultCache::new(4, 1);
-        let r = handle(&Params::default(), &cache, &req("GET", "/v1/health", ""));
+        let p = pipe();
+        let r = handle(&p, &req("GET", "/v1/health", ""));
         assert_eq!(r.response.status, 200);
         assert!(r.cache.is_none());
         assert!(r.response.body.contains("smart-serve"));
@@ -305,17 +554,15 @@ mod tests {
 
     #[test]
     fn unknown_paths_and_methods_are_rejected() {
-        let cache = ResultCache::new(4, 1);
-        let p = Params::default();
-        assert_eq!(handle(&p, &cache, &req("GET", "/nope", "")).response.status, 404);
-        assert_eq!(handle(&p, &cache, &req("GET", "/v1/mc", "")).response.status, 405);
-        assert_eq!(handle(&p, &cache, &req("POST", "/v1/health", "")).response.status, 405);
+        let p = pipe();
+        assert_eq!(handle(&p, &req("GET", "/nope", "")).response.status, 404);
+        assert_eq!(handle(&p, &req("GET", "/v1/mc", "")).response.status, 405);
+        assert_eq!(handle(&p, &req("POST", "/v1/health", "")).response.status, 405);
     }
 
     #[test]
     fn bad_bodies_get_400_with_json_errors() {
-        let cache = ResultCache::new(4, 1);
-        let p = Params::default();
+        let p = pipe();
         for (path, body) in [
             ("/v1/mc", "not json"),
             ("/v1/mc", r#"{"variant": "bogus", "workload": {"kind": "full_sweep"}}"#),
@@ -327,14 +574,13 @@ mod tests {
             ("/v1/sweep/point", r#"{"kernel": "warp"}"#),
             ("/v1/infer", r#"{"name": "x"}"#),
         ] {
-            let r = handle(&p, &cache, &req("POST", path, body));
+            let r = handle(&p, &req("POST", path, body));
             assert_eq!(r.response.status, 400, "{path} {body}");
             assert!(json::parse(&r.response.body).is_ok());
         }
         // work ceiling: a million-sample full sweep is CLI territory
         let r = handle(
             &p,
-            &cache,
             &req(
                 "POST",
                 "/v1/mc",
@@ -347,43 +593,103 @@ mod tests {
 
     #[test]
     fn mc_is_cached_and_byte_identical_to_the_artifact_encoder() {
-        let cache = ResultCache::new(8, 2);
-        let p = Params::default();
+        let p = pipe();
         let body = r#"{"variant": "smart", "n_mc": 8,
                        "workload": {"kind": "fixed", "a": 15, "b": 15}}"#;
-        let first = handle(&p, &cache, &req("POST", "/v1/mc", body));
+        let first = handle(&p, &req("POST", "/v1/mc", body));
         assert_eq!(first.response.status, 200);
-        assert_eq!(first.cache, Some(false));
-        let again = handle(&p, &cache, &req("POST", "/v1/mc", body));
-        assert_eq!(again.cache, Some(true));
+        assert_eq!(first.cache, Some(CacheTier::Miss));
+        let again = handle(&p, &req("POST", "/v1/mc", body));
+        assert_eq!(again.cache, Some(CacheTier::Hit));
         assert_eq!(first.response.body, again.response.body);
+        assert_eq!(p.stats().campaigns.get(), 1, "the hit must not recompute");
         // the response is exactly the CLI artifact encoder's output
         let mut spec = crate::coordinator::CampaignSpec::paper_fig8(Variant::Smart);
         spec.n_mc = 8;
-        let rep = run_campaign(&p, &spec, Backend::Native, None).unwrap();
+        let rep = run_campaign(&Params::default(), &spec, Backend::Native, None).unwrap();
         assert_eq!(*first.response.body, report::mc_json(&spec, &rep));
     }
 
     #[test]
     fn perf_knobs_share_one_cache_entry() {
-        let cache = ResultCache::new(8, 2);
-        let p = Params::default();
+        let p = pipe();
         let a = r#"{"variant": "aid", "n_mc": 8,
                     "workload": {"kind": "fixed", "a": 3, "b": 9}}"#;
         let b = r#"{"variant": "aid", "n_mc": 8, "shards": 4, "workers": 2, "block": 16,
                     "workload": {"kind": "fixed", "a": 3, "b": 9}}"#;
-        let ra = handle(&p, &cache, &req("POST", "/v1/mc", a));
-        let rb = handle(&p, &cache, &req("POST", "/v1/mc", b));
-        assert_eq!(ra.cache, Some(false));
-        assert_eq!(rb.cache, Some(true), "perf knobs must not fork the cache key");
+        let ra = handle(&p, &req("POST", "/v1/mc", a));
+        let rb = handle(&p, &req("POST", "/v1/mc", b));
+        assert_eq!(ra.cache, Some(CacheTier::Miss));
+        assert_eq!(rb.cache, Some(CacheTier::Hit), "perf knobs must not fork the cache key");
         assert_eq!(ra.response.body, rb.response.body);
         // the kernel tier IS identity: an explicit fast-tier request
         // computes its own entry instead of reusing the block-tier bytes
         let c = r#"{"variant": "aid", "n_mc": 8, "kernel": "fast",
                     "workload": {"kind": "fixed", "a": 3, "b": 9}}"#;
-        let rc = handle(&p, &cache, &req("POST", "/v1/mc", c));
-        assert_eq!(rc.cache, Some(false), "kernel must fork the cache key");
+        let rc = handle(&p, &req("POST", "/v1/mc", c));
+        assert_eq!(rc.cache, Some(CacheTier::Miss), "kernel must fork the cache key");
         assert!(rc.response.body.contains("\"kernel\": \"fast\""));
+    }
+
+    #[test]
+    fn concurrent_identical_requests_dedup_into_one_campaign() {
+        let p = pipe();
+        let body = r#"{"variant": "smart", "n_mc": 8,
+                       "workload": {"kind": "fixed", "a": 5, "b": 7}}"#;
+        // Pause the gate so the leader stalls mid-compute: the second
+        // request then provably joins the in-flight slot rather than
+        // hitting the cache.
+        p.gate().pause();
+        let (ra, rb) = std::thread::scope(|scope| {
+            let a = {
+                let p = &p;
+                scope.spawn(move || handle(p, &req("POST", "/v1/mc", body)))
+            };
+            let b = {
+                let p = &p;
+                scope.spawn(move || handle(p, &req("POST", "/v1/mc", body)))
+            };
+            // one thread leads (stalled at the gate), the other waits on
+            // the flight slot
+            while p.flight().waiting() < 1 {
+                std::thread::yield_now();
+            }
+            p.gate().resume();
+            (a.join().unwrap(), b.join().unwrap())
+        });
+        assert_eq!(ra.response.status, 200);
+        assert_eq!(rb.response.status, 200);
+        assert_eq!(ra.response.body, rb.response.body);
+        let tiers = [ra.cache, rb.cache];
+        assert!(tiers.contains(&Some(CacheTier::Miss)), "{tiers:?}");
+        assert!(tiers.contains(&Some(CacheTier::Dedup)), "{tiers:?}");
+        assert_eq!(p.stats().campaigns.get(), 1, "the herd must cost one campaign");
+        assert_eq!(p.flight().deduped(), 1);
+        assert_eq!(p.flight().leads(), 1);
+    }
+
+    #[test]
+    fn disk_tier_survives_a_restart_with_zero_recompute() {
+        let scratch = Scratch::new("restart");
+        let body = r#"{"variant": "smart", "n_mc": 8,
+                       "workload": {"kind": "fixed", "a": 2, "b": 11}}"#;
+        let first = {
+            let p = Pipeline::new(Params::default(), 1 << 20, 2, Some(&scratch.0), 8).unwrap();
+            let r = handle(&p, &req("POST", "/v1/mc", body));
+            assert_eq!(r.cache, Some(CacheTier::Miss));
+            assert_eq!(p.disk().unwrap().writes(), 1);
+            r.response.body
+        };
+        // "restart": a fresh pipeline over the same directory
+        let p = Pipeline::new(Params::default(), 1 << 20, 2, Some(&scratch.0), 8).unwrap();
+        assert_eq!(p.disk().unwrap().warm_entries(), 1);
+        let r = handle(&p, &req("POST", "/v1/mc", body));
+        assert_eq!(r.cache, Some(CacheTier::Disk), "restart must serve from disk");
+        assert_eq!(r.response.body, first, "disk bytes must be byte-identical");
+        assert_eq!(p.stats().campaigns.get(), 0, "restart must not recompute");
+        // the disk hit promoted the body into memory
+        let again = handle(&p, &req("POST", "/v1/mc", body));
+        assert_eq!(again.cache, Some(CacheTier::Hit));
     }
 
     #[test]

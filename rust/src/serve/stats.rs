@@ -1,0 +1,140 @@
+//! Saturating service counters and uptime for `/v1/stats`.
+//!
+//! Every monotonic counter the service exposes goes through [`Monotonic`],
+//! which saturates at `u64::MAX` instead of wrapping.  A fleet-scale
+//! deployment can legitimately run for months; a wrapped counter would
+//! read as a *reset* to a dashboard and trip rate alarms, while a
+//! saturated one merely stops moving — the safer failure.  None of these
+//! values ever enter result bytes (DESIGN.md §9): they are observability
+//! only, which is also why the wall-clock reads below carry reasoned
+//! `lint:allow(D6)` pragmas instead of being banned outright.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A monotonic, saturating `u64` counter safe for concurrent use.
+///
+/// `add`/`incr` never wrap: once the counter reaches `u64::MAX` it stays
+/// there.  Loads are `Relaxed` — stats are a snapshot, not a fence.
+#[derive(Debug)]
+pub struct Monotonic(AtomicU64);
+
+impl Monotonic {
+    /// A fresh counter at zero.
+    pub const fn new() -> Self {
+        Monotonic(AtomicU64::new(0))
+    }
+
+    /// Add `n`, saturating at `u64::MAX` instead of wrapping.
+    pub fn add(&self, n: u64) {
+        // fetch_update with a total function never fails, but the trait
+        // signature still returns Result; ignore the witness value.
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_add(n))
+            });
+    }
+
+    /// Add one, saturating.
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Current value (relaxed snapshot).
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Monotonic {
+    fn default() -> Self {
+        Monotonic::new()
+    }
+}
+
+/// Request-level counters plus the service start instant.
+///
+/// Owned by the `Server` and shared with every worker; all fields are
+/// interior-mutable so the struct itself can live behind a plain `Arc`.
+#[derive(Debug)]
+pub struct ServeStats {
+    started: Instant,
+    /// Total connections answered (any status).
+    pub requests: Monotonic,
+    /// Responses with status >= 400, plus handler panics.
+    pub errors: Monotonic,
+    /// Microseconds spent inside request handling (not idle accept time).
+    pub busy_us: Monotonic,
+    /// Spec computations actually executed (cache hits, disk hits and
+    /// dedup followers do NOT count; a merged batch of M jobs counts M).
+    pub campaigns: Monotonic,
+}
+
+impl ServeStats {
+    /// Fresh counters anchored at the current instant.
+    pub fn new() -> Self {
+        ServeStats {
+            // lint:allow(D6): start instant feeds /v1/stats uptime only, never artifact bytes
+            started: Instant::now(),
+            requests: Monotonic::new(),
+            errors: Monotonic::new(),
+            busy_us: Monotonic::new(),
+            campaigns: Monotonic::new(),
+        }
+    }
+
+    /// Whole seconds since the service started.
+    pub fn uptime_s(&self) -> u64 {
+        self.started.elapsed().as_secs()
+    }
+
+    /// Microseconds since the service started (feeds the legacy
+    /// `uptime_us` stats field).
+    pub fn uptime_us(&self) -> u64 {
+        self.started.elapsed().as_micros() as u64
+    }
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_saturates_instead_of_wrapping() {
+        let c = Monotonic::new();
+        c.add(u64::MAX - 1);
+        c.incr();
+        assert_eq!(c.get(), u64::MAX);
+        // One past the top must stick at the top, not wrap to zero.
+        c.incr();
+        assert_eq!(c.get(), u64::MAX);
+        c.add(12345);
+        assert_eq!(c.get(), u64::MAX);
+    }
+
+    #[test]
+    fn monotonic_counts_from_zero() {
+        let c = Monotonic::default();
+        assert_eq!(c.get(), 0);
+        c.incr();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn stats_uptime_is_monotone() {
+        let s = ServeStats::new();
+        let a = s.uptime_us();
+        let b = s.uptime_us();
+        assert!(b >= a);
+        // uptime_s is derived from the same start instant.
+        assert!(s.uptime_s() <= 1);
+    }
+}

@@ -1,7 +1,10 @@
-//! Integration tests for `smart serve` (DESIGN.md §11): a real server on
-//! an ephemeral port, concurrent loopback clients, and byte-identity
-//! between HTTP responses and the CLI `--json` artifacts.
+//! Integration tests for `smart serve` (DESIGN.md §11/§14): a real
+//! server on an ephemeral port, concurrent loopback clients, and
+//! byte-identity between HTTP responses and the CLI `--json` artifacts —
+//! through the in-memory LRU, the disk tier, the single-flight dedup
+//! map, and the cross-request coalescer.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use smart_insram::params::Params;
@@ -10,9 +13,45 @@ use smart_insram::serve::{http_request, ServeOptions, Server};
 fn start_server(workers: usize) -> Server {
     Server::start(
         Params::default(),
-        &ServeOptions { addr: "127.0.0.1:0".to_string(), workers, cache_cap: 16 },
+        &ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            workers,
+            cache_cap: 1 << 20,
+            ..ServeOptions::default()
+        },
     )
     .expect("server starts on an ephemeral port")
+}
+
+fn start_disk_server(workers: usize, dir: &std::path::Path) -> Server {
+    Server::start(
+        Params::default(),
+        &ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            workers,
+            cache_cap: 1 << 20,
+            cache_dir: Some(dir.to_path_buf()),
+            ..ServeOptions::default()
+        },
+    )
+    .expect("server starts with a disk tier")
+}
+
+/// Self-cleaning temp dir for disk-tier tests.
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(tag: &str) -> Scratch {
+        let dir = std::env::temp_dir().join(format!("smart-serve-it-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Scratch(dir)
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
 }
 
 #[test]
@@ -161,6 +200,221 @@ fn wire_errors_are_json_with_the_right_status() {
     let (status, _, got) = http_request(&addr, "POST", "/v1/mc", huge).unwrap();
     assert_eq!(status, 400);
     assert!(got.contains("ceiling"), "{got}");
+    server.stop();
+}
+
+#[test]
+fn concurrent_misses_single_flight_into_one_campaign() {
+    let mut server = start_server(4);
+    let addr = Arc::new(server.addr().to_string());
+    let pipe = server.pipeline();
+    let body = r#"{"variant": "smart", "n_mc": 8,
+                   "workload": {"kind": "fixed", "a": 6, "b": 10}}"#;
+    let clients = 8usize;
+    // Hold the flight leader at the compute gate until every follower has
+    // joined its slot: the dedup is then provable, not timing-dependent.
+    pipe.gate().pause();
+    let results: Vec<(u16, Vec<(String, String)>, String)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let addr = Arc::clone(&addr);
+                scope.spawn(move || http_request(&addr, "POST", "/v1/mc", body).unwrap())
+            })
+            .collect();
+        while pipe.flight().waiting() < clients as u64 - 1 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        pipe.gate().resume();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let (mut miss_n, mut dedup_n) = (0, 0);
+    let first = &results[0].2;
+    for (status, headers, got) in &results {
+        assert_eq!(*status, 200, "{got}");
+        assert_eq!(got, first, "fanned-out bodies must be byte-identical");
+        for (k, v) in headers {
+            if k == "X-Smart-Cache" {
+                match v.as_str() {
+                    "miss" => miss_n += 1,
+                    "dedup" => dedup_n += 1,
+                    other => panic!("unexpected cache tier {other}"),
+                }
+            }
+        }
+    }
+    assert_eq!(miss_n, 1, "exactly one client leads the flight");
+    assert_eq!(dedup_n, clients - 1, "every other client shares the leader's result");
+    assert_eq!(pipe.stats().campaigns.get(), 1, "the herd must cost one campaign");
+    assert_eq!(pipe.flight().deduped(), clients as u64 - 1);
+    server.stop();
+}
+
+#[test]
+fn disk_tier_serves_byte_identical_bodies_across_a_restart() {
+    let scratch = Scratch::new("restart");
+    let body = r#"{"variant": "aid", "n_mc": 8,
+                   "workload": {"kind": "fixed", "a": 4, "b": 12}}"#;
+    let expect = {
+        let mut server = start_disk_server(2, &scratch.0);
+        let (status, headers, got) =
+            http_request(&server.addr().to_string(), "POST", "/v1/mc", body).unwrap();
+        assert_eq!(status, 200, "{got}");
+        assert!(headers.iter().any(|(k, v)| k == "X-Smart-Cache" && v == "miss"));
+        server.stop();
+        got
+    };
+    // "kill/restart": a fresh process-equivalent over the same directory
+    let mut server = start_disk_server(2, &scratch.0);
+    let (status, headers, got) =
+        http_request(&server.addr().to_string(), "POST", "/v1/mc", body).unwrap();
+    assert_eq!(status, 200, "{got}");
+    assert_eq!(got, expect, "warm-start bytes must be identical to the pre-restart response");
+    assert!(
+        headers.iter().any(|(k, v)| k == "X-Smart-Cache" && v == "disk"),
+        "restart must serve from the disk tier: {headers:?}"
+    );
+    assert_eq!(server.pipeline().stats().campaigns.get(), 0, "warm start must not recompute");
+    server.stop();
+}
+
+#[test]
+fn corrupted_cache_files_are_rejected_and_recomputed() {
+    let scratch = Scratch::new("corrupt");
+    let body = r#"{"variant": "smart", "n_mc": 8,
+                   "workload": {"kind": "fixed", "a": 7, "b": 5}}"#;
+    let expect = {
+        let mut server = start_disk_server(2, &scratch.0);
+        let (status, _, got) =
+            http_request(&server.addr().to_string(), "POST", "/v1/mc", body).unwrap();
+        assert_eq!(status, 200, "{got}");
+        server.stop();
+        got
+    };
+    // flip stored bytes in every persisted entry (fingerprint mismatch)
+    let mut corrupted = 0;
+    for entry in std::fs::read_dir(&scratch.0).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) == Some("body") {
+            let text = std::fs::read_to_string(&path).unwrap();
+            std::fs::write(&path, text.replace(':', ";")).unwrap();
+            corrupted += 1;
+        }
+    }
+    assert_eq!(corrupted, 1, "the priming request must have persisted one entry");
+    let mut server = start_disk_server(2, &scratch.0);
+    let pipe = server.pipeline();
+    let (status, headers, got) =
+        http_request(&server.addr().to_string(), "POST", "/v1/mc", body).unwrap();
+    assert_eq!(status, 200, "{got}");
+    assert_eq!(got, expect, "the recomputed body must match the original bytes");
+    assert!(
+        headers.iter().any(|(k, v)| k == "X-Smart-Cache" && v == "miss"),
+        "a corrupted entry must be treated as a miss: {headers:?}"
+    );
+    assert_eq!(pipe.disk().unwrap().rejects(), 1, "the tampered entry must be rejected");
+    assert_eq!(pipe.stats().campaigns.get(), 1, "the rejected entry must be recomputed");
+    // the recompute re-persisted a valid entry: one more restart hits disk
+    server.stop();
+    let mut server = start_disk_server(2, &scratch.0);
+    let (_, headers, got) =
+        http_request(&server.addr().to_string(), "POST", "/v1/mc", body).unwrap();
+    assert_eq!(got, expect);
+    assert!(headers.iter().any(|(k, v)| k == "X-Smart-Cache" && v == "disk"), "{headers:?}");
+    server.stop();
+}
+
+#[test]
+fn batched_inferences_are_byte_identical_to_solo_runs() {
+    use smart_insram::nn::{infer_json, run_infer, InferOptions, ModelSpec};
+    let jobs = 3usize;
+    let bodies: Vec<String> = (0..jobs)
+        .map(|i| {
+            format!(
+                "{{\"name\": \"serve-it-batch\", \"seed\": {}, \"trials\": 3, \"bits\": 4, \
+                 \"dataset\": {{\"classes\": 3, \"features\": 6, \"jitter\": 0.1}}, \
+                 \"layers\": [{{\"inputs\": 6, \"outputs\": 4, \"relu\": true}}, \
+                              {{\"inputs\": 4, \"outputs\": 3}}]}}",
+                31 + i
+            )
+        })
+        .collect();
+    // the unbatched reference: each model solo, through the same encoder
+    let expects: Vec<String> = bodies
+        .iter()
+        .map(|b| {
+            let spec =
+                ModelSpec::from_value(&smart_insram::util::json::parse(b).unwrap()).unwrap();
+            let r = run_infer(&Params::default(), &spec, &InferOptions::default()).unwrap();
+            infer_json(&spec, &r)
+        })
+        .collect();
+
+    let mut server = start_server(jobs.max(2));
+    let addr = Arc::new(server.addr().to_string());
+    let pipe = server.pipeline();
+    // hold the group leader at the gate until every follower is queued,
+    // so the requests provably coalesce into one merged execution
+    pipe.gate().pause();
+    let results: Vec<(usize, u16, String)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = bodies
+            .iter()
+            .enumerate()
+            .map(|(i, body)| {
+                let addr = Arc::clone(&addr);
+                scope.spawn(move || {
+                    let (status, _, got) =
+                        http_request(&addr, "POST", "/v1/infer", body).unwrap();
+                    (i, status, got)
+                })
+            })
+            .collect();
+        while pipe.batch().queued() < jobs as u64 - 1 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        pipe.gate().resume();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (i, status, got) in &results {
+        assert_eq!(*status, 200, "batched infer {i}: {got}");
+        assert_eq!(
+            got, &expects[*i],
+            "batched inference {i} must be byte-identical to its solo run"
+        );
+    }
+    assert_eq!(pipe.batch().batched(), jobs as u64, "all jobs must ride the merged group");
+    assert_eq!(pipe.batch().groups(), 1, "one merged execution covers the whole group");
+    assert_eq!(pipe.stats().campaigns.get(), jobs as u64);
+    server.stop();
+}
+
+#[test]
+fn disk_tier_warm_starts_from_a_cli_artifact() {
+    use smart_insram::coordinator::{run_campaign, Backend, CampaignSpec};
+    use smart_insram::mac::Variant;
+    use smart_insram::report::mc_json;
+    use smart_insram::serve::{mc_cache_key, DiskTier};
+    let scratch = Scratch::new("warmcli");
+    // the artifact a prior `smart mc --json` run would have produced
+    let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+    spec.n_mc = 8;
+    let artifact =
+        mc_json(&spec, &run_campaign(&Params::default(), &spec, Backend::Native, None).unwrap());
+    // seed the disk tier from it: key = mc_cache_key(spec), body = bytes
+    DiskTier::open(&scratch.0).unwrap().put(&mc_cache_key(&spec), &artifact).unwrap();
+
+    let mut server = start_disk_server(2, &scratch.0);
+    assert_eq!(server.pipeline().disk().unwrap().warm_entries(), 1);
+    let body = r#"{"variant": "smart", "n_mc": 8,
+                   "workload": {"kind": "fixed", "a": 15, "b": 15}}"#;
+    let (status, headers, got) =
+        http_request(&server.addr().to_string(), "POST", "/v1/mc", body).unwrap();
+    assert_eq!(status, 200, "{got}");
+    assert_eq!(got, artifact, "the seeded artifact bytes must be served verbatim");
+    assert!(
+        headers.iter().any(|(k, v)| k == "X-Smart-Cache" && v == "disk"),
+        "the seeded entry must be served from disk: {headers:?}"
+    );
+    assert_eq!(server.pipeline().stats().campaigns.get(), 0, "nothing to recompute");
     server.stop();
 }
 
