@@ -19,19 +19,19 @@
 //! fixed-shape [`Batcher`] stream the AOT artifacts were compiled for.
 
 use std::path::PathBuf;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use super::aggregate::{Aggregator, CampaignReport};
 use super::batcher::{BatchCfg, Batcher, RowTag};
-use super::pool::{execute_sharded, shard_range, WorkerPool};
+use super::pool::{execute_sharded_traced, shard_range, WorkerPool};
 use super::spec::CampaignSpec;
 use crate::mac::{
     BlockKernel, FastKernel, KernelKind, MacResultBlock, NativeMacEngine, ScalarKernel, SimKernel,
     TrialBlock,
 };
 use crate::montecarlo::MismatchSampler;
+use crate::obs::{Stopwatch, Tracer};
 use crate::params::Params;
 use crate::runtime::{MacBatchOut, XlaRuntime};
 
@@ -87,9 +87,26 @@ pub fn run_campaign(
     backend: Backend,
     artifact_dir: Option<PathBuf>,
 ) -> Result<CampaignReport> {
+    run_campaign_traced(params, spec, backend, artifact_dir, &Tracer::disabled())
+}
+
+/// [`run_campaign`] with tracing (DESIGN.md §15): emits one `campaign`
+/// root span (kernel, item count, shard/block/thread shape, and — on the
+/// fast tier — lane/fallback/table-build counter deltas) plus per-shard
+/// `shard` and per-thread `worker` child spans on the native path. The
+/// report is byte-identical to the untraced call for every backend and
+/// tracer state: spans observe the run, the run never reads them
+/// (pinned by `tests/obs.rs`).
+pub fn run_campaign_traced(
+    params: &Params,
+    spec: &CampaignSpec,
+    backend: Backend,
+    artifact_dir: Option<PathBuf>,
+    tracer: &Tracer,
+) -> Result<CampaignReport> {
     spec.validate().map_err(|e| anyhow::anyhow!(e))?;
     match backend {
-        Backend::Native => run_native_campaign(params, spec),
+        Backend::Native => run_native_campaign_traced(params, spec, tracer),
         Backend::Xla => {
             let dir = artifact_dir.unwrap_or_else(crate::runtime::default_artifact_dir);
             // Pick a compiled batch size: honour the spec, else the largest
@@ -106,18 +123,29 @@ pub fn run_campaign(
                 1
             };
             let mut engine = CampaignEngine::new(dir, batch, workers)?;
-            engine.run(params, spec)
+            let mut span = tracer.span("campaign");
+            span.attr_str("backend", "xla");
+            span.attr_u64("items", total);
+            let report = engine.run(params, spec);
+            tracer.finish(span);
+            report
         }
     }
 }
 
 /// Sharded native campaign on the kernel tier the spec selects
 /// ([`CampaignSpec::kernel`], DESIGN.md §13).
-fn run_native_campaign(params: &Params, spec: &CampaignSpec) -> Result<CampaignReport> {
+fn run_native_campaign_traced(
+    params: &Params,
+    spec: &CampaignSpec,
+    tracer: &Tracer,
+) -> Result<CampaignReport> {
     match spec.kernel {
-        KernelKind::Scalar => run_native_campaign_with(params, spec, &ScalarKernel),
-        KernelKind::Block => run_native_campaign_with(params, spec, &BlockKernel),
-        KernelKind::Fast => run_native_campaign_with(params, spec, FastKernel::shared()),
+        KernelKind::Scalar => run_native_campaign_with_traced(params, spec, &ScalarKernel, tracer),
+        KernelKind::Block => run_native_campaign_with_traced(params, spec, &BlockKernel, tracer),
+        KernelKind::Fast => {
+            run_native_campaign_with_traced(params, spec, FastKernel::shared(), tracer)
+        }
     }
 }
 
@@ -138,6 +166,22 @@ pub fn run_native_campaign_with(
     params: &Params,
     spec: &CampaignSpec,
     kernel: &dyn SimKernel,
+) -> Result<CampaignReport> {
+    run_native_campaign_with_traced(params, spec, kernel, &Tracer::disabled())
+}
+
+/// [`run_native_campaign_with`] with tracing: the `campaign` root span
+/// carries the run shape (kernel, items, shards, block, threads) plus
+/// the kernel's counter deltas, each shard emits a `shard` child span
+/// with its item count, and each pool thread a `worker` span with its
+/// claimed-shard tally. All of it is observation only — the fold below
+/// never reads a span, so the report is byte-identical with tracing on
+/// or off (pinned by `tests/obs.rs`).
+pub fn run_native_campaign_with_traced(
+    params: &Params,
+    spec: &CampaignSpec,
+    kernel: &dyn SimKernel,
+    tracer: &Tracer,
 ) -> Result<CampaignReport> {
     spec.validate().map_err(|e| anyhow::anyhow!(e))?;
     let cfg = spec.variant.config(params);
@@ -165,8 +209,16 @@ pub fn run_native_campaign_with(
     let n_blocks = total.div_ceil(block_len as u64).max(1) as usize;
     let n_shards = if spec.shards > 0 { spec.shards } else { n_blocks.min(threads * 4) };
 
-    // lint:allow(D6): elapsed feeds the console throughput line only, never artifact bytes
-    let t0 = Instant::now();
+    let mut cspan = tracer.span("campaign");
+    cspan.attr_str("kernel", kernel.name());
+    cspan.attr_u64("items", total);
+    cspan.attr_u64("shards", n_shards as u64);
+    cspan.attr_u64("block", block_len as u64);
+    cspan.attr_u64("threads", threads as u64);
+    let parent = cspan.id();
+    let counters_before = kernel.counters();
+
+    let t0 = Stopwatch::start();
     let mut agg = Aggregator::new(full_scale, 64);
     let n_mc = u64::from(spec.n_mc);
     // Shards buffer results only (tags, output SoA) — block inputs live
@@ -175,7 +227,10 @@ pub fn run_native_campaign_with(
     // first shard is the last to finish; with auto-sharding (a few
     // shards per thread) the typical in-flight window is a handful.
     let run_shard = |shard: usize| {
+        let mut sspan = tracer.span_started("shard", parent, Stopwatch::start());
         let (start, end) = shard_range(total, n_shards, shard);
+        sspan.attr_u64("shard", shard as u64);
+        sspan.attr_u64("items", end - start);
         // no point reserving a 256-lane block for a 32-item shard —
         // clamp to the shard's own length
         let shard_block = block_len.min((end - start).max(1) as usize);
@@ -200,13 +255,21 @@ pub fn run_native_campaign_with(
             results.push((tags, block.out.clone()));
             cursor += n as u64;
         }
+        tracer.finish(sspan);
         results
     };
-    execute_sharded(n_shards, threads, run_shard, |_, outs| {
+    execute_sharded_traced(n_shards, threads, tracer, parent, run_shard, |_, outs| {
         for (tags, out) in &outs {
             agg.push_block(tags, out);
         }
     });
+    let delta = kernel.counters().since(&counters_before);
+    if delta != crate::mac::KernelCounters::default() {
+        cspan.attr_u64("lanes", delta.lanes);
+        cspan.attr_u64("fallbacks", delta.fallbacks);
+        cspan.attr_u64("table_builds", delta.table_builds);
+    }
+    tracer.finish(cspan);
     Ok(agg.finish(t0.elapsed()))
 }
 
@@ -273,8 +336,7 @@ pub fn run_native_campaigns_merged(
         let threads = resolve_threads(spec.workers);
         let n_blocks = total.div_ceil(block_len as u64).max(1) as usize;
         let n_shards = if spec.shards > 0 { spec.shards } else { n_blocks.min(threads * 4) };
-        // lint:allow(D6): elapsed feeds the report's console wall field only, never artifact bytes
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut agg = Aggregator::new(full_scale, 64);
         let n_mc = u64::from(spec.n_mc);
         // Identical shard/chunk arithmetic to the solo runner, executed
@@ -351,8 +413,7 @@ impl CampaignEngine {
             MismatchSampler::new(spec.seed, params.circuit.sigma_vth, params.circuit.sigma_beta)
                 .with_corner(spec.corner);
 
-        // lint:allow(D6): elapsed feeds the console throughput line only, never artifact bytes
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut agg = Aggregator::new(full_scale, 64);
         let batcher = Batcher::new(operands, spec.n_mc, self.batch, BatchCfg::from(&cfg), sampler);
         let mut in_flight: u64 = 0;

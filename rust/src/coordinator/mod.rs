@@ -27,8 +27,9 @@ mod spec;
 pub use aggregate::{Aggregator, CampaignReport, OpKey};
 pub use batcher::{BatchCfg, Batcher, PackedBatch, RowTag};
 pub use campaign::{
-    resolve_threads, run_campaign, run_native_batch, run_native_campaign_with,
-    run_native_campaigns_merged, spawn_campaign, Backend, CampaignEngine, DEFAULT_BLOCK_LEN,
+    resolve_threads, run_campaign, run_campaign_traced, run_native_batch,
+    run_native_campaign_with, run_native_campaign_with_traced, run_native_campaigns_merged,
+    spawn_campaign, Backend, CampaignEngine, DEFAULT_BLOCK_LEN,
 };
-pub use pool::{execute_sharded, shard_range, WorkerPool};
+pub use pool::{execute_sharded, execute_sharded_traced, shard_range, WorkerPool};
 pub use spec::{CampaignSpec, Workload};

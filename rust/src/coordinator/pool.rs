@@ -18,6 +18,7 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use super::batcher::PackedBatch;
+use crate::obs::{SpanId, Tracer};
 use crate::runtime::{MacBatchOut, XlaRuntime};
 
 /// Dynamic (work-stealing style) shard executor: worker threads claim
@@ -26,8 +27,30 @@ use crate::runtime::{MacBatchOut, XlaRuntime};
 /// shard order. With shard-invariant inputs (per-item RNG streams) this
 /// makes the downstream fold bit-identical for ANY `threads` value — the
 /// schedule affects wall-clock only, never the aggregate.
-pub fn execute_sharded<R, F, S>(n_shards: usize, threads: usize, run_shard: F, mut sink: S)
+pub fn execute_sharded<R, F, S>(n_shards: usize, threads: usize, run_shard: F, sink: S)
 where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+    S: FnMut(usize, R),
+{
+    execute_sharded_traced(n_shards, threads, &Tracer::disabled(), None, run_shard, sink);
+}
+
+/// [`execute_sharded`] with per-worker tracing: each worker thread emits
+/// one `worker` span under `parent` recording how many shards it claimed
+/// (the steal-count view of load balance — a worker that claimed many
+/// shards absorbed the slack of its siblings). Spans observe the
+/// schedule; the ordered merge below ignores them entirely, so traced
+/// and untraced runs hand `sink` byte-identical sequences
+/// (pinned by `tests/obs.rs`).
+pub fn execute_sharded_traced<R, F, S>(
+    n_shards: usize,
+    threads: usize,
+    tracer: &Tracer,
+    parent: Option<SpanId>,
+    run_shard: F,
+    mut sink: S,
+) where
     R: Send,
     F: Fn(usize) -> R + Sync,
     S: FnMut(usize, R),
@@ -40,15 +63,23 @@ where
     let (tx, rx) = channel::<(usize, R)>();
     let mut next_emit = 0usize;
     std::thread::scope(|scope| {
-        for _ in 0..threads.min(n_shards) {
+        for worker in 0..threads.min(n_shards) {
             let tx = tx.clone();
             let next_shard = &next_shard;
             let run_shard = &run_shard;
-            scope.spawn(move || loop {
-                let shard = next_shard.fetch_add(1, Ordering::Relaxed);
-                if shard >= n_shards || tx.send((shard, run_shard(shard))).is_err() {
-                    break;
+            scope.spawn(move || {
+                let mut span = tracer.span_started("worker", parent, crate::obs::Stopwatch::start());
+                span.attr_u64("worker", worker as u64);
+                let mut claimed = 0u64;
+                loop {
+                    let shard = next_shard.fetch_add(1, Ordering::Relaxed);
+                    if shard >= n_shards || tx.send((shard, run_shard(shard))).is_err() {
+                        break;
+                    }
+                    claimed += 1;
                 }
+                span.attr_u64("shards_claimed", claimed);
+                tracer.finish(span);
             });
         }
         drop(tx);
@@ -235,5 +266,32 @@ mod tests {
     #[test]
     fn execute_sharded_zero_shards_is_noop() {
         execute_sharded(0, 4, |s| s, |_, _| panic!("no shards to emit"));
+    }
+
+    #[test]
+    fn traced_execution_emits_worker_spans_and_keeps_order() {
+        let path = std::env::temp_dir()
+            .join(format!("smart-pool-trace-{}.jsonl", std::process::id()));
+        let tracer = Tracer::to_file(&path, "test").unwrap();
+        let mut seen = Vec::new();
+        execute_sharded_traced(9, 3, &tracer, None, |s| s + 1, |shard, out| {
+            seen.push((shard, out));
+        });
+        drop(tracer);
+        let want: Vec<(usize, usize)> = (0..9).map(|s| (s, s + 1)).collect();
+        assert_eq!(seen, want);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let workers: Vec<crate::util::json::Value> = text
+            .lines()
+            .map(|l| crate::util::json::parse(l).unwrap())
+            .filter(|r| r.get("name").and_then(|n| n.as_str()) == Some("worker"))
+            .collect();
+        assert_eq!(workers.len(), 3, "one span per worker thread");
+        let claimed: u64 = workers
+            .iter()
+            .map(|w| w.path(&["attrs", "shards_claimed"]).unwrap().as_u64().unwrap())
+            .sum();
+        assert_eq!(claimed, 9, "every shard claimed exactly once");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -20,10 +20,11 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{run_campaign, Backend};
+use crate::coordinator::{run_campaign_traced, Backend};
 use crate::dac::WordlineDac;
 use crate::mac::KernelKind;
 use crate::energy::EnergyModel;
+use crate::obs::{SpanId, Stopwatch, Tracer};
 use crate::report::{canon, csv_cell};
 use crate::util::json::{self, Value};
 
@@ -51,6 +52,11 @@ pub struct SweepOptions {
     pub resume: bool,
     /// Directory receiving `sweep.csv` and `sweep.json`.
     pub out_dir: PathBuf,
+    /// Trace sink (DESIGN.md §15): emits a `sweep` root span plus
+    /// `grid_point` children (each wrapping its campaign) when enabled.
+    /// Purely observational — artifacts are byte-identical whether
+    /// tracing is on or off (`tests/obs.rs`).
+    pub tracer: Tracer,
 }
 
 impl Default for SweepOptions {
@@ -62,6 +68,7 @@ impl Default for SweepOptions {
             kernel: KernelKind::Block,
             resume: false,
             out_dir: PathBuf::from("target/dse"),
+            tracer: Tracer::disabled(),
         }
     }
 }
@@ -153,6 +160,12 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepResult> {
         pareto_flags(&objectives)
     };
 
+    let mut sspan = opts.tracer.span("sweep");
+    sspan.attr_str("name", &spec.name);
+    sspan.attr_str("kernel", opts.kernel.token());
+    sspan.attr_u64("points", points.len() as u64);
+    let parent = sspan.id();
+
     let mut results: Vec<PointResult> = Vec::with_capacity(points.len());
     let (mut computed, mut resumed) = (0usize, 0usize);
     for point in &points {
@@ -161,7 +174,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepResult> {
             results.push(row.to_result(*point));
             resumed += 1;
         } else {
-            results.push(run_grid_point(spec, point, opts)?);
+            results.push(grid_point_traced(spec, point, opts, parent)?);
             computed += 1;
             // Checkpoint after every computed point, so an interrupted
             // sweep resumes from the last completed point rather than
@@ -180,6 +193,10 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepResult> {
         .with_context(|| format!("writing {}", csv_path.display()))?;
     std::fs::write(&json_path, sweep_json(spec, &results, &pareto, opts.kernel))
         .with_context(|| format!("writing {}", json_path.display()))?;
+
+    sspan.attr_u64("computed", computed as u64);
+    sspan.attr_u64("resumed", resumed as u64);
+    opts.tracer.finish(sspan);
 
     Ok(SweepResult {
         name: spec.name.clone(),
@@ -202,6 +219,21 @@ pub fn run_grid_point(
     point: &GridPoint,
     opts: &SweepOptions,
 ) -> Result<PointResult> {
+    grid_point_traced(spec, point, opts, None)
+}
+
+/// [`run_grid_point`] with an explicit trace parent, so sweep-driven
+/// points hang under the `sweep` root span while solo embedders (the
+/// serve layer) emit parentless `grid_point` phases.
+fn grid_point_traced(
+    spec: &SweepSpec,
+    point: &GridPoint,
+    opts: &SweepOptions,
+    parent: Option<SpanId>,
+) -> Result<PointResult> {
+    let mut span = opts.tracer.span_started("grid_point", parent, Stopwatch::start());
+    span.attr_u64("point", point.index as u64);
+    span.attr_str("variant", point.variant.token());
     let params = point.apply(&spec.params);
     let cspec = point.campaign_spec(
         spec.seed,
@@ -211,8 +243,9 @@ pub fn run_grid_point(
         opts.block,
         opts.kernel,
     );
-    let rep = run_campaign(&params, &cspec, Backend::Native, None)
+    let rep = run_campaign_traced(&params, &cspec, Backend::Native, None, &opts.tracer)
         .with_context(|| format!("grid point {} ({})", point.index, point.label()))?;
+    opts.tracer.finish(span);
     Ok(point_result(spec, point, &rep))
 }
 

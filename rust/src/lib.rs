@@ -62,6 +62,8 @@ pub mod metrics;
 pub mod montecarlo;
 /// Noisy NN inference on the simulated MAC (`smart infer`).
 pub mod nn;
+/// Tracing, metrics, and profiling — the wall-clock quarantine (§15).
+pub mod obs;
 /// The 65 nm model card (device + circuit constants).
 pub mod params;
 /// Report emission: the paper's tables/figures as markdown and CSV.

@@ -13,7 +13,7 @@
 //! The analyzer is dependency-free: a hand-rolled lexer ([`lexer`])
 //! strips comments and strings so rules never fire on prose, and the
 //! rule passes ([`rules`]) walk the token stream. Rules are keyed
-//! (`D1`..`D6`; `D0` is the pragma meta-rule) and individually
+//! (`D1`..`D7`; `D0` is the pragma meta-rule) and individually
 //! suppressible, either inline —
 //!
 //! ```text
@@ -63,10 +63,16 @@ pub enum Rule {
     FloatFormat,
     /// D6 — `Instant::now`/`SystemTime` in result-affecting paths.
     WallClock,
+    /// D7 — time/trace primitives (`Instant`, `SystemTime`,
+    /// `TraceSink`, `emit_record`) referenced outside `rust/src/obs/` —
+    /// the observability quarantine (DESIGN.md §15): all timing lives
+    /// behind `obs::Stopwatch`/`obs::Tracer` so inertness is auditable
+    /// in one directory.
+    TimeQuarantine,
 }
 
 /// All rules, in id order.
-pub const RULES: [Rule; 7] = [
+pub const RULES: [Rule; 8] = [
     Rule::Pragma,
     Rule::MapIteration,
     Rule::FloatAccum,
@@ -74,6 +80,7 @@ pub const RULES: [Rule; 7] = [
     Rule::PanicPath,
     Rule::FloatFormat,
     Rule::WallClock,
+    Rule::TimeQuarantine,
 ];
 
 impl Rule {
@@ -88,6 +95,7 @@ impl Rule {
             Rule::PanicPath => "D4",
             Rule::FloatFormat => "D5",
             Rule::WallClock => "D6",
+            Rule::TimeQuarantine => "D7",
         }
     }
 
@@ -101,6 +109,7 @@ impl Rule {
             Rule::PanicPath => "no unwrap/expect/panic! in library code",
             Rule::FloatFormat => "float formatting only via report::canon/csv_cell",
             Rule::WallClock => "no wall-clock reads in result-affecting paths",
+            Rule::TimeQuarantine => "time/trace primitives only under rust/src/obs/",
         }
     }
 
@@ -378,6 +387,7 @@ mod tests {
         }
         assert_eq!(Rule::from_id("D9"), None);
         assert_eq!(Rule::WallClock.to_string(), "D6");
+        assert_eq!(Rule::TimeQuarantine.to_string(), "D7");
     }
 
     #[test]

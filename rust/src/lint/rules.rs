@@ -1,4 +1,4 @@
-//! Rule passes over the lexed token stream (rules `D1`..`D6`).
+//! Rule passes over the lexed token stream (rules `D1`..`D7`).
 //!
 //! Each pass is a linear walk with small, bounded look-around — no AST,
 //! no type information. That keeps the analyzer dependency-free and
@@ -48,7 +48,17 @@ pub fn scan(path: &str, lexed: &Lexed) -> Vec<RawFinding> {
         d5_float_format(toks, &test, &mut out);
     }
     d6_wall_clock(toks, &test, &mut out);
+    if !in_obs(path) {
+        d7_time_quarantine(toks, &test, &mut out);
+    }
     out
+}
+
+/// Is `path` inside the observability quarantine (`rust/src/obs/`)?
+/// D7 exempts the quarantine itself — it is the one sanctioned home of
+/// the time and trace primitives.
+fn in_obs(path: &str) -> bool {
+    path.contains("/obs/") || path.starts_with("obs/")
 }
 
 fn path_matches(path: &str, sites: &[&str]) -> bool {
@@ -636,6 +646,36 @@ fn d6_wall_clock(toks: &[Token], test: &[bool], out: &mut Vec<RawFinding>) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// D7: the observability quarantine
+
+/// Idents that may appear only under `rust/src/obs/`: the raw clock
+/// types and the trace-sink internals. `Duration` stays legal everywhere
+/// (a span of time is data, not a clock read); the quarantined surface
+/// is anything that can *read* a clock or write a trace without going
+/// through `obs::Stopwatch` / `obs::Tracer`.
+const QUARANTINED: [&str; 4] = ["Instant", "SystemTime", "TraceSink", "emit_record"];
+
+fn d7_time_quarantine(toks: &[Token], test: &[bool], out: &mut Vec<RawFinding>) {
+    for i in 0..toks.len() {
+        if test[i] {
+            continue;
+        }
+        if let Some(name) = ident_at(toks, i) {
+            if QUARANTINED.contains(&name) {
+                out.push(RawFinding {
+                    rule: Rule::TimeQuarantine,
+                    line: toks[i].line,
+                    note: format!(
+                        "`{name}` outside rust/src/obs/ — time and trace primitives are \
+                         quarantined there; use obs::Stopwatch / obs::Tracer"
+                    ),
+                });
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::lexer::lex;
@@ -721,10 +761,31 @@ mod tests {
 
     #[test]
     fn d6_fires_on_clock_reads() {
+        // Outside obs/ the same read also breaches the D7 quarantine.
         let src = "fn f() {\n    let t0 = Instant::now();\n    drop(t0);\n}\n";
-        assert_eq!(hits(src), vec![(Rule::WallClock, 2)]);
+        assert_eq!(hits(src), vec![(Rule::WallClock, 2), (Rule::TimeQuarantine, 2)]);
         let import_only = "use std::time::SystemTime;\nfn f() {}\n";
-        assert!(hits(import_only).is_empty());
+        assert_eq!(hits(import_only), vec![(Rule::TimeQuarantine, 1)]);
+    }
+
+    #[test]
+    fn d7_quarantines_time_and_trace_idents_to_obs() {
+        let src = "use std::time::Instant;\nfn f() {}\n";
+        assert_eq!(hits(src), vec![(Rule::TimeQuarantine, 1)]);
+        // The quarantine itself is the sanctioned home (D6 still applies
+        // there, via its own pragmas).
+        assert!(scan("rust/src/obs/emit.rs", &lex(src)).is_empty());
+        assert!(scan("obs/mod.rs", &lex("struct X { t: Instant }\n")).is_empty());
+        // Duration is data, not a clock read: legal everywhere.
+        assert!(hits("use std::time::Duration;\nfn f(d: Duration) { drop(d); }\n").is_empty());
+        // Trace-sink internals are quarantined too.
+        assert_eq!(
+            hits("fn f(s: &mut TraceSink) { s.emit_record(); }\n"),
+            vec![(Rule::TimeQuarantine, 1), (Rule::TimeQuarantine, 1)]
+        );
+        // Tests may time things ad hoc.
+        assert!(hits("#[cfg(test)]\nmod t {\n    fn g() { let _ = Instant::now(); }\n}\n")
+            .is_empty());
     }
 
     #[test]

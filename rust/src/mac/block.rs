@@ -212,6 +212,34 @@ impl TrialBlock {
     }
 }
 
+/// Cumulative work counters a kernel exposes for observability
+/// (DESIGN.md §15). Counters are additive bookkeeping only: they are
+/// read by the campaign layer for trace span attributes and bench
+/// provenance, and never feed a result value — the inertness contract
+/// in `tests/obs.rs` pins that they cannot move artifact bytes.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KernelCounters {
+    /// Cell-lane endpoints computed (4 per live trial lane).
+    pub lanes: u64,
+    /// Lanes whose shortcut failed a validity check and fell back to the
+    /// exact integrator (fast tier only; zero on the exact kernels).
+    pub fallbacks: u64,
+    /// Interpolation tables built (fast tier only).
+    pub table_builds: u64,
+}
+
+impl KernelCounters {
+    /// The counter movement since an earlier snapshot (saturating, so a
+    /// snapshot taken across kernel instances never underflows).
+    pub fn since(&self, earlier: &KernelCounters) -> KernelCounters {
+        KernelCounters {
+            lanes: self.lanes.saturating_sub(earlier.lanes),
+            fallbacks: self.fallbacks.saturating_sub(earlier.fallbacks),
+            table_builds: self.table_builds.saturating_sub(earlier.table_builds),
+        }
+    }
+}
+
 /// A simulation kernel: executes every live lane of a [`TrialBlock`] on a
 /// [`NativeMacEngine`], writing `block.out`. Implementations must be pure
 /// per lane — the campaign layer relies on lane results being independent
@@ -222,6 +250,13 @@ pub trait SimKernel: Sync {
 
     /// Simulate all live lanes of `block`; padding lanes keep zero outputs.
     fn simulate(&self, engine: &NativeMacEngine, block: &mut TrialBlock);
+
+    /// Cumulative work counters since this kernel was created. The
+    /// stateless exact kernels report zeros; stateful kernels (the fast
+    /// tier) override with real lane/fallback/table tallies.
+    fn counters(&self) -> KernelCounters {
+        KernelCounters::default()
+    }
 }
 
 /// The scalar oracle: one full [`NativeMacEngine::mac`] evaluation per

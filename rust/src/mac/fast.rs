@@ -33,13 +33,14 @@
 //! field ([`KernelKind`] on [`crate::coordinator::CampaignSpec`]) — it
 //! appears in artifacts, serve cache keys, and sweep checkpoint rows.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 
 use crate::device::Mosfet;
 use crate::params::{DeviceCard, Params};
 use crate::sram::WEIGHTS;
 
-use super::block::{SimKernel, TrialBlock};
+use super::block::{KernelCounters, SimKernel, TrialBlock};
 use super::engine::NativeMacEngine;
 
 /// Documented global endpoint tolerance of the fast tier: the maximum
@@ -256,6 +257,12 @@ fn weak_current(card: &DeviceCard, vov: f64, beta: f64, v: f64) -> (f64, bool) {
 #[derive(Debug, Default)]
 pub struct FastKernel {
     tables: Mutex<std::collections::BTreeMap<u64, Arc<FastTable>>>,
+    // Work tallies for observability ([`SimKernel::counters`]): relaxed
+    // atomics because they are read only as after-the-fact snapshots —
+    // they never gate a lane's execution path (DESIGN.md §15).
+    lanes: AtomicU64,
+    fallbacks: AtomicU64,
+    table_builds: AtomicU64,
 }
 
 impl FastKernel {
@@ -288,6 +295,7 @@ impl FastKernel {
         }
         let t = Arc::new(FastTable::build(p, cfg.t_sample, vov_hi));
         tables.insert(key, Arc::clone(&t));
+        self.table_builds.fetch_add(1, Ordering::Relaxed);
         t
     }
 
@@ -314,8 +322,10 @@ impl FastKernel {
         let vt = card.vt_thermal;
         let n_steps = p.circuit.n_steps;
         let dt_c = (cfg.t_sample / f64::from(n_steps)) / p.circuit.c_blb;
-        let exact =
-            || crate::circuit::discharge_lane(p, vov, beta, gate, cfg.t_sample, n_steps);
+        let exact = || {
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+            crate::circuit::discharge_lane(p, vov, beta, gate, cfg.t_sample, n_steps)
+        };
 
         if vov >= 3.0 * vt {
             // Saturation current is exactly linear in v:
@@ -434,6 +444,7 @@ impl SimKernel for FastKernel {
                 block.gate[j],
             );
         }
+        self.lanes.fetch_add(m as u64, Ordering::Relaxed);
 
         // Combine + fault tail, mirroring `mac_word` exactly.
         let vdd = card.vdd;
@@ -458,6 +469,14 @@ impl SimKernel for FastKernel {
             block.out.v_mult[i] = v_mult as f32;
             block.out.energy[i] = energy as f32;
             block.out.fault[i] = f32::from(u8::from(fault));
+        }
+    }
+
+    fn counters(&self) -> KernelCounters {
+        KernelCounters {
+            lanes: self.lanes.load(Ordering::Relaxed),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+            table_builds: self.table_builds.load(Ordering::Relaxed),
         }
     }
 }
@@ -562,6 +581,36 @@ mod tests {
         other.t_sample = 1e-9;
         let c = kernel.table(&NativeMacEngine::new(p, other));
         assert!(!Arc::ptr_eq(&a, &c), "different timing must fork the table");
+    }
+
+    #[test]
+    fn counters_tally_lanes_fallbacks_and_table_builds() {
+        let p = Params::default();
+        let kernel = FastKernel::new();
+        assert_eq!(kernel.counters(), KernelCounters::default());
+        // Exact kernels report zeros through the trait default.
+        assert_eq!(SimKernel::counters(&ScalarKernel), KernelCounters::default());
+
+        // Design-point regime: every lane takes a shortcut, no table.
+        let engine = NativeMacEngine::new(p, Variant::Smart.config(&p));
+        let mut blk = filled_block(8, 3);
+        kernel.simulate(&engine, &mut blk);
+        let after = kernel.counters();
+        assert_eq!(after.lanes, 32, "4 cell lanes per trial lane");
+        assert_eq!(after.table_builds, 0, "no saturation exit, no table");
+
+        // Saturation-exit regime forces a table build; counters only grow.
+        let mut cfg = Variant::Smart.config(&p);
+        cfg.t_sample = 2e-9;
+        let engine = NativeMacEngine::new(p, cfg);
+        let mut blk = filled_block(8, 3);
+        kernel.simulate(&engine, &mut blk);
+        let end = kernel.counters();
+        assert_eq!(end.lanes, 64);
+        assert_eq!(end.table_builds, 1);
+        let delta = end.since(&after);
+        assert_eq!(delta.lanes, 32);
+        assert_eq!(delta.table_builds, 1);
     }
 
     #[test]

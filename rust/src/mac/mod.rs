@@ -22,7 +22,7 @@ mod fast;
 mod ideal;
 mod variant;
 
-pub use block::{BlockKernel, MacResultBlock, ScalarKernel, SimKernel, TrialBlock};
+pub use block::{BlockKernel, KernelCounters, MacResultBlock, ScalarKernel, SimKernel, TrialBlock};
 pub use fast::{FastKernel, KernelKind, FAST_TOLERANCE};
 pub use dot::{DotResult, NativeDotEngine};
 pub use engine::{MacResult, NativeMacEngine};

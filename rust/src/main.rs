@@ -12,18 +12,25 @@
 //! smart infer configs/nn.toml --trials 64 --variant smart [--json]
 //! smart serve --addr 127.0.0.1:7878 --workers 4 [--self-test]
 //! smart lint [paths…] [--json --out DIR]
+//! smart profile target/mc/trace.jsonl --out target/mc
 //! ```
+//!
+//! Every campaign-running subcommand accepts `--trace FILE` (or the
+//! `SMART_TRACE` env var) to append a JSONL span/counter trace; tracing
+//! is observability-only and provably inert — canonical artifacts are
+//! byte-identical with it on or off (DESIGN.md §15).
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
 use anyhow::Result;
 
-use smart_insram::coordinator::{run_campaign, Backend, CampaignSpec, Workload};
+use smart_insram::coordinator::{run_campaign, run_campaign_traced, Backend, CampaignSpec, Workload};
 use smart_insram::dse::{run_sweep, SweepOptions, SweepSpec};
 use smart_insram::energy::{nominal_cost, EnergyModel};
 use smart_insram::mac::{KernelKind, Variant};
 use smart_insram::montecarlo::Corner;
+use smart_insram::obs::Tracer;
 use smart_insram::params::Params;
 use smart_insram::report;
 use smart_insram::runtime::default_artifact_dir;
@@ -68,8 +75,11 @@ COMMANDS:
                                fast surrogate tier on the fig8 campaign;
                                --json writes BENCH_native.json (schema:
                                backend, items_per_sec, n_items,
-                               fast_items_per_sec, fast_speedup, plus
-                               variant/block/threads provenance),
+                               fast_items_per_sec, fast_speedup, the
+                               fast tier's lane/fallback/table counters
+                               and derived fast_fallback_rate /
+                               fast_lanes_per_sec, plus variant/block/
+                               threads provenance),
                                --smoke runs one sample for CI
   infer <nn.toml> [--trials N] [--variant V] [--shards K] [--threads T]
         [--block B] [--kernel scalar|block|fast] [--noise-off] [--json]
@@ -113,7 +123,7 @@ COMMANDS:
                                --out)
   lint [paths...] [--json] [--out DIR]
                                determinism/robustness static analysis
-                               (rules D1-D6, DESIGN.md §12): lexes the
+                               (rules D1-D7, DESIGN.md §12): lexes the
                                Rust sources under rust/src (or the given
                                paths), applies the rule passes with
                                inline `// lint:allow(Dn): reason`
@@ -123,9 +133,22 @@ COMMANDS:
                                finding; --json writes the canonical
                                LINT_report.json to --out (the CI gate
                                artifact)
+  profile <trace.jsonl> [--out DIR]
+                               fold a JSONL trace (written via --trace
+                               or SMART_TRACE) into PROFILE.json:
+                               per-phase wall time, span stats, shard
+                               balance, kernel lane/fallback mix, serve
+                               cache-tier breakdown with p50/p95/p99
+                               request latency, and the final metrics
+                               snapshot (DESIGN.md §15)
 
 OPTIONS:
   --artifacts DIR   artifact directory (default: $SMART_ARTIFACTS or ./artifacts)
+  --trace FILE      append a JSONL span/counter trace of the run (mc,
+                    sweep, infer, bench, serve, run); the SMART_TRACE
+                    env var names the same sink when the flag is absent.
+                    Tracing is observability-only: canonical artifacts
+                    are byte-identical with it on or off (DESIGN.md §15)
   --native          use the native Rust simulator instead of the AOT/PJRT path
   --variant V       smart | aid | imac | smart-on-imac (default: smart)
   --kernel K        scalar | block | fast (default: block) — simulation
@@ -168,6 +191,25 @@ fn threads_opt(args: &Args) -> Result<usize> {
 /// the kernel parser's descriptive error; absent means the block kernel.
 fn kernel_opt(args: &Args) -> Result<KernelKind> {
     args.opt_parse("kernel", KernelKind::Block).map_err(|e| anyhow::anyhow!(e))
+}
+
+/// Resolve the trace sink shared by every campaign-running subcommand:
+/// `--trace FILE` wins, else a non-empty `SMART_TRACE` env var names the
+/// file, else the disabled tracer (every emission a no-op). The sink is
+/// truncated and seeded with the schema `meta` record up front so a
+/// failed run still leaves a parseable trace. Tracing is
+/// observability-only — canonical artifacts are byte-identical with it
+/// on or off (DESIGN.md §15).
+fn tracer_for(args: &Args, cmd: &str) -> Result<Tracer> {
+    let path = args
+        .opt("trace")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SMART_TRACE").ok().filter(|v| !v.is_empty()));
+    match path {
+        Some(p) => Tracer::to_file(std::path::Path::new(&p), cmd)
+            .map_err(|e| anyhow::anyhow!("opening trace sink {p}: {e}")),
+        None => Ok(Tracer::disabled()),
+    }
 }
 
 fn main() -> ExitCode {
@@ -241,7 +283,8 @@ fn run() -> Result<()> {
                 block: knob(&args, "block")?,
                 kernel: kernel_opt(&args)?,
             };
-            let r = run_campaign(&params, &spec, backend, Some(art))?;
+            let tracer = tracer_for(&args, "mc")?;
+            let r = run_campaign_traced(&params, &spec, backend, Some(art), &tracer)?;
             print!(
                 "{}",
                 report::mc_panel(&format!("{} MC n={}", spec.variant.name(), spec.n_mc), &r)
@@ -282,6 +325,7 @@ fn run() -> Result<()> {
                 args.flag("smoke"),
                 args.flag("json"),
                 &out,
+                &tracer_for(&args, "bench")?,
             )
         }
         "infer" => {
@@ -325,6 +369,7 @@ fn run() -> Result<()> {
                     .opt("out")
                     .map(PathBuf::from)
                     .unwrap_or_else(|| smart_insram::nn::InferOptions::default().out_dir),
+                tracer: tracer_for(&args, "infer")?,
             };
             let r = smart_insram::nn::run_infer(&params, &spec, &opts)?;
             print!("{}", report::infer_panel(&r));
@@ -354,6 +399,7 @@ fn run() -> Result<()> {
                     .opt("out")
                     .map(PathBuf::from)
                     .unwrap_or_else(|| SweepOptions::default().out_dir),
+                tracer: tracer_for(&args, "sweep")?,
             };
             let n_points = sweep.grid.len();
             println!("sweep '{}': {} grid points, n_mc = {}", sweep.name, n_points, sweep.n_mc);
@@ -363,14 +409,21 @@ fn run() -> Result<()> {
         }
         "serve" => cmd_serve(&params, &args),
         "lint" => cmd_lint(&args),
+        "profile" => {
+            let path = args.positional(1).ok_or_else(|| {
+                anyhow::anyhow!("usage: smart profile <trace.jsonl> [--out DIR]")
+            })?;
+            cmd_profile(path, &args)
+        }
         "run" => {
             let path = args
                 .positional(1)
                 .ok_or_else(|| anyhow::anyhow!("usage: smart run <config.toml>"))?;
             let cfg = smart_insram::config::ExperimentConfig::load(path)?;
             println!("experiment: {}", cfg.name);
+            let tracer = tracer_for(&args, "run")?;
             for (i, spec) in cfg.campaigns.iter().enumerate() {
-                let r = run_campaign(&cfg.params, spec, backend, Some(art.clone()))?;
+                let r = run_campaign_traced(&cfg.params, spec, backend, Some(art.clone()), &tracer)?;
                 print!(
                     "{}",
                     report::mc_panel(&format!("campaign #{i} — {}", spec.variant.name()), &r)
@@ -453,6 +506,14 @@ fn cmd_mac(
 /// commits and hosts); `--smoke` runs a single sample for CI. The fast
 /// tier gets one untimed pre-warm campaign so its one-time interpolation
 /// table build (DESIGN.md §13) never pollutes the measurement.
+///
+/// With `--trace`, each kernel's measurement emits a `bench_kernel` span
+/// under one `bench` root, and the JSON gains the fast tier's
+/// [`smart_insram::mac::KernelCounters`] view: `fast_lanes`,
+/// `fast_fallbacks`, `fast_table_builds`, the derived
+/// `fast_fallback_rate`, and `fast_lanes_per_sec` (lane throughput at
+/// the measured items/s). The counter keys are additive to the schema
+/// and land in the JSON with or without tracing.
 #[allow(clippy::too_many_arguments)]
 fn cmd_bench(
     params: &Params,
@@ -463,6 +524,7 @@ fn cmd_bench(
     smoke: bool,
     json: bool,
     out: &std::path::Path,
+    tracer: &Tracer,
 ) -> Result<()> {
     use smart_insram::bench::Runner;
     use smart_insram::coordinator::run_native_campaign_with;
@@ -481,26 +543,55 @@ fn cmd_bench(
         if block > 0 { block } else { smart_insram::coordinator::DEFAULT_BLOCK_LEN };
     let n_items = u64::from(n_mc);
     let runner = if smoke { Runner { warmup: 0, samples: 1 } } else { Runner::default() };
+    let mut root = tracer.span("bench");
+    root.attr_u64("n_mc", u64::from(n_mc));
+    root.attr_u64("samples", runner.samples as u64);
     let measure = |kernel: &dyn SimKernel| {
+        let mut span = match root.id() {
+            Some(id) => tracer.child("bench_kernel", id),
+            None => tracer.span("bench_kernel"),
+        };
+        span.attr_str("kernel", kernel.name());
         let s = runner.bench(&format!("bench/native {} kernel (n_mc = {n_mc})", kernel.name()), || {
             // lint:allow(D4): timing closure cannot propagate errors; spec is pre-validated
             run_native_campaign_with(params, &spec, kernel).expect("campaign")
         });
-        s.per_second(n_items)
+        let ips = s.per_second(n_items);
+        span.attr_u64("items_per_sec", ips as u64);
+        tracer.finish(span);
+        ips
     };
     let scalar_ips = measure(&ScalarKernel);
     let block_ips = measure(&BlockKernel);
     let speedup = block_ips / scalar_ips;
     // Pre-warm the fast tier outside the timer: `--smoke` runs zero
     // warmup samples, and the surrogate's one-time table build must not
-    // be billed to its steady-state throughput.
+    // be billed to its steady-state throughput. Counter deltas bracket
+    // the pre-warm + measurement so the fallback rate reflects every
+    // lane the tier actually ran here.
+    let fast_before = SimKernel::counters(FastKernel::shared());
     // lint:allow(D4): pre-warm shares the timing closure's pre-validated spec
     run_native_campaign_with(params, &spec, FastKernel::shared()).expect("campaign");
     let fast_ips = measure(FastKernel::shared());
+    let fast = SimKernel::counters(FastKernel::shared()).since(&fast_before);
     let fast_speedup = fast_ips / block_ips;
+    // Items the fast tier executed under this bracket: the explicit
+    // pre-warm plus every warmup/timed sample the runner took.
+    let fast_items = n_items * (1 + runner.warmup as u64 + runner.samples as u64);
+    let lanes_per_item =
+        if fast_items > 0 { fast.lanes as f64 / fast_items as f64 } else { 0.0 };
+    let fast_lanes_per_sec = fast_ips * lanes_per_item;
+    let fast_fallback_rate =
+        if fast.lanes > 0 { fast.fallbacks as f64 / fast.lanes as f64 } else { 0.0 };
+    tracer.finish(root);
     println!("scalar oracle: {scalar_ips:>12.0} items/s");
     println!("block kernel:  {block_ips:>12.0} items/s  ({speedup:.2}x)");
     println!("fast kernel:   {fast_ips:>12.0} items/s  ({fast_speedup:.2}x vs block)");
+    println!(
+        "fast tier:     {fast_lanes_per_sec:>12.0} lanes/s, fallback rate {:.4} \
+         ({} of {} lanes), {} table build(s)",
+        fast_fallback_rate, fast.fallbacks, fast.lanes, fast.table_builds
+    );
 
     if json {
         use smart_insram::util::json::{to_string_pretty, Value};
@@ -513,6 +604,11 @@ fn cmd_bench(
         m.insert("speedup".to_string(), Value::Num(speedup));
         m.insert("fast_items_per_sec".to_string(), Value::Num(fast_ips));
         m.insert("fast_speedup".to_string(), Value::Num(fast_speedup));
+        m.insert("fast_lanes".to_string(), Value::Num(fast.lanes as f64));
+        m.insert("fast_fallbacks".to_string(), Value::Num(fast.fallbacks as f64));
+        m.insert("fast_table_builds".to_string(), Value::Num(fast.table_builds as f64));
+        m.insert("fast_fallback_rate".to_string(), Value::Num(fast_fallback_rate));
+        m.insert("fast_lanes_per_sec".to_string(), Value::Num(fast_lanes_per_sec));
         m.insert("variant".to_string(), Value::Str(variant.token().to_string()));
         m.insert("block".to_string(), Value::Num(block_cap as f64));
         m.insert("threads".to_string(), Value::Num(threads_used as f64));
@@ -564,8 +660,9 @@ fn cmd_serve(params: &Params, args: &Args) -> Result<()> {
         }
     };
     let cache_dir = args.opt("cache-dir").map(PathBuf::from);
+    let tracer = tracer_for(args, "serve")?;
     if args.flag("self-test") {
-        let r = self_test(params, workers, args.flag("smoke"), kernel_opt(args)?)?;
+        let r = self_test(params, workers, args.flag("smoke"), kernel_opt(args)?, &tracer)?;
         println!(
             "serve self-test OK: {} requests, {} hits / {} misses \
              ({} clients x {} repeats x 3 endpoints, byte-identical to the CLI artifacts)",
@@ -601,6 +698,7 @@ fn cmd_serve(params: &Params, args: &Args) -> Result<()> {
         cache_cap,
         cache_dir,
         batch_max,
+        tracer,
     };
     let mut server = Server::start(*params, &opts)?;
     println!(
@@ -615,8 +713,35 @@ fn cmd_serve(params: &Params, args: &Args) -> Result<()> {
         },
         opts.batch_max
     );
-    println!("endpoints: POST /v1/mc /v1/sweep/point /v1/infer ; GET /v1/health /v1/stats");
+    println!(
+        "endpoints: POST /v1/mc /v1/sweep/point /v1/infer ; \
+         GET /v1/health /v1/stats /v1/metrics"
+    );
     server.join();
+    Ok(())
+}
+
+/// `smart profile`: fold a JSONL trace (written by `--trace` /
+/// `SMART_TRACE`) into the `PROFILE.json` artifact — per-phase wall
+/// time, span stats, shard balance, kernel lane/fallback mix, the serve
+/// cache-tier breakdown with request-latency percentiles, and the last
+/// metrics snapshot (DESIGN.md §15). The profile is derived purely from
+/// the trace text, so the same trace always folds to the same bytes.
+fn cmd_profile(path: &str, args: &Args) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let profile = smart_insram::obs::profile_trace(&text)
+        .map_err(|e| anyhow::anyhow!("profiling {path}: {e}"))?;
+    let mut body = smart_insram::util::json::to_string_pretty(&profile);
+    body.push('\n');
+    let out: PathBuf = args.opt("out").map(PathBuf::from).unwrap_or_else(|| ".".into());
+    std::fs::create_dir_all(&out)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", out.display()))?;
+    let dest = out.join("PROFILE.json");
+    std::fs::write(&dest, &body)
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", dest.display()))?;
+    print!("{body}");
+    println!("wrote {}", dest.display());
     Ok(())
 }
 

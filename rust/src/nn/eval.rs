@@ -3,17 +3,17 @@
 
 use std::fmt::Write as _;
 use std::path::PathBuf;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{execute_sharded, resolve_threads, shard_range, DEFAULT_BLOCK_LEN};
+use crate::coordinator::{execute_sharded_traced, resolve_threads, shard_range, DEFAULT_BLOCK_LEN};
 use crate::energy::EnergyModel;
 use crate::mac::{
     BlockKernel, FastKernel, KernelKind, NativeMacEngine, ScalarKernel, SimKernel, Variant,
 };
 use crate::metrics::OnlineStats;
 use crate::montecarlo::MismatchSampler;
+use crate::obs::{Stopwatch, Tracer};
 use crate::params::Params;
 use crate::report::{canon, csv_cell};
 use crate::util::json::{self, Value};
@@ -51,6 +51,10 @@ pub struct InferOptions {
     pub write_artifacts: bool,
     /// Artifact directory.
     pub out_dir: PathBuf,
+    /// Trace sink (DESIGN.md §15): emits `infer` / `trial_block` /
+    /// `worker` spans when enabled. Purely observational — artifacts are
+    /// byte-identical whether tracing is on or off (`tests/obs.rs`).
+    pub tracer: Tracer,
 }
 
 impl Default for InferOptions {
@@ -65,6 +69,7 @@ impl Default for InferOptions {
             noise_off: false,
             write_artifacts: false,
             out_dir: PathBuf::from("target/infer"),
+            tracer: Tracer::disabled(),
         }
     }
 }
@@ -260,10 +265,21 @@ fn run_infer_on(
     let n_shards =
         if opts.shards > 0 { opts.shards } else { (total as usize).min(threads * 4).max(1) };
 
-    // lint:allow(D6): elapsed feeds the console timing line only, never artifact bytes
-    let t0 = Instant::now();
+    let mut ispan = opts.tracer.span("infer");
+    ispan.attr_str("model", &spec.name);
+    ispan.attr_str("kernel", kernel.name());
+    ispan.attr_u64("trials", total);
+    ispan.attr_u64("shards", n_shards as u64);
+    ispan.attr_u64("threads", threads as u64);
+    let parent = ispan.id();
+    let counters_before = kernel.counters();
+
+    let t0 = Stopwatch::start();
     let run_shard = |shard: usize| {
+        let mut sspan = opts.tracer.span_started("trial_block", parent, Stopwatch::start());
         let (start, end) = shard_range(total, n_shards, shard);
+        sspan.attr_u64("shard", shard as u64);
+        sspan.attr_u64("trials", end - start);
         let mut tiler = Tiler::with_calibration(engine, kernel, &sampler, block_len, cal.to_vec());
         let mut recs = Vec::with_capacity((end - start) as usize);
         for t in start..end {
@@ -302,6 +318,7 @@ fn run_infer_on(
                 faults,
             });
         }
+        opts.tracer.finish(sspan);
         recs
     };
 
@@ -311,7 +328,7 @@ fn run_infer_on(
     let mut out_err = OnlineStats::new();
     let mut raw_energy = OnlineStats::new();
     let (mut ideal_ok, mut noisy_ok, mut agree, mut faults) = (0u64, 0u64, 0u64, 0u64);
-    execute_sharded(n_shards, threads, run_shard, |_, recs| {
+    execute_sharded_traced(n_shards, threads, &opts.tracer, parent, run_shard, |_, recs| {
         for r in recs {
             out_err.push(r.out_err);
             raw_energy.push(r.energy_raw);
@@ -323,6 +340,13 @@ fn run_infer_on(
         }
     });
     let wall = t0.elapsed();
+    let delta = kernel.counters().since(&counters_before);
+    if delta != crate::mac::KernelCounters::default() {
+        ispan.attr_u64("lanes", delta.lanes);
+        ispan.attr_u64("fallbacks", delta.fallbacks);
+        ispan.attr_u64("table_builds", delta.table_builds);
+    }
+    opts.tracer.finish(ispan);
 
     let cost = emodel.cost(&cfg, raw_energy.mean() / ops as f64, engine.full_scale(), v_wl_max);
     let rate = |n: u64| canon(n as f64 / total as f64);

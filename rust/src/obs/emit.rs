@@ -1,0 +1,267 @@
+//! The JSONL trace sink (DESIGN.md §15).
+//!
+//! A [`Tracer`] is the one handle instrumented code holds: clone-cheap
+//! (an `Option<Arc>`), shareable across shard workers, and a complete
+//! no-op when disabled — `Tracer::disabled()` reads no clock, takes no
+//! lock, allocates nothing per span. Enabled tracers append one compact
+//! JSON record per line to the file named by `--trace FILE` (or the
+//! `SMART_TRACE` environment variable), written through `util::json` so
+//! the trace is parseable by the same code that parses every other
+//! artifact.
+//!
+//! ## Record schema (version 1)
+//!
+//! ```text
+//! {"type":"meta","version":1,"cmd":"mc"}
+//! {"type":"span","id":"<16 hex>","parent":"<16 hex>"|null,"name":"...",
+//!  "start_us":N,"dur_us":N,"attrs":{...}}
+//! {"type":"counters","at_us":N,"metrics":{...registry snapshot...}}
+//! ```
+//!
+//! `start_us`/`at_us` are microseconds since the tracer was created
+//! (its epoch), `dur_us` is the span's wall time. These are the ONLY
+//! wall-clock values the system ever writes, and they live only here:
+//! canonical artifacts never contain them, and nothing ever reads a
+//! trace back into a result path. Emission is best-effort — an I/O
+//! error drops the record rather than failing the traced computation.
+//!
+//! Concurrent spans (shard workers, serve workers) interleave in
+//! arrival order under the sink mutex; consumers must not assume record
+//! order beyond "meta first". Span *identity* is still deterministic
+//! ([`SpanId::derive`]), only emission order races.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+use crate::util::json::{self, Value};
+
+use super::registry::MetricsRegistry;
+use super::span::{LiveSpan, Span, SpanId};
+use super::Stopwatch;
+
+/// Trace schema version, carried in the `meta` record.
+pub const TRACE_VERSION: u64 = 1;
+
+/// The raw line-oriented writer behind a [`Tracer`]. Outside `obs::`
+/// this type is off-limits (lint rule D7): instrumentation goes through
+/// [`Tracer`] spans, which stay inert when tracing is off.
+#[derive(Debug)]
+pub struct TraceSink {
+    w: BufWriter<File>,
+}
+
+impl TraceSink {
+    /// Open (truncating) the trace file at `path`.
+    pub fn open(path: &Path) -> io::Result<TraceSink> {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(TraceSink { w: BufWriter::new(File::create(path)?) })
+    }
+
+    /// Append one record as a single compact JSON line and flush, so a
+    /// killed process leaves a readable prefix.
+    pub fn emit_record(&mut self, v: &Value) -> io::Result<()> {
+        let mut line = json::to_string_compact(v);
+        line.push('\n');
+        self.w.write_all(line.as_bytes())?;
+        self.w.flush()
+    }
+}
+
+#[derive(Debug)]
+struct TracerInner {
+    sink: Mutex<TraceSink>,
+    /// The trace epoch: all `start_us`/`at_us` values are relative to it.
+    epoch: Stopwatch,
+    /// Per-trace span sequence; span IDs derive from it.
+    seq: AtomicU64,
+}
+
+/// The tracing handle. `Clone` is an `Arc` bump; a disabled tracer is a
+/// `None` and every operation on it is free.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    inner: Option<Arc<TracerInner>>,
+}
+
+impl Tracer {
+    /// The inert tracer: hands out [`Span::noop`]s, emits nothing.
+    pub fn disabled() -> Tracer {
+        Tracer { inner: None }
+    }
+
+    /// An enabled tracer appending to `path`. Writes the `meta` record
+    /// immediately; `cmd` names the producing subcommand.
+    pub fn to_file(path: &Path, cmd: &str) -> io::Result<Tracer> {
+        let mut sink = TraceSink::open(path)?;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("type".to_string(), Value::Str("meta".to_string()));
+        m.insert("version".to_string(), Value::Num(TRACE_VERSION as f64));
+        m.insert("cmd".to_string(), Value::Str(cmd.to_string()));
+        sink.emit_record(&Value::Obj(m))?;
+        Ok(Tracer {
+            inner: Some(Arc::new(TracerInner {
+                sink: Mutex::new(sink),
+                epoch: Stopwatch::start(),
+                seq: AtomicU64::new(0),
+            })),
+        })
+    }
+
+    /// Whether spans from this tracer will be emitted.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Start a root span named `name`.
+    pub fn span(&self, name: &str) -> Span {
+        self.span_started(name, None, Stopwatch::start())
+    }
+
+    /// Start a span under `parent`.
+    pub fn child(&self, name: &str, parent: SpanId) -> Span {
+        self.span_started(name, Some(parent), Stopwatch::start())
+    }
+
+    /// Start a span whose clock began at `watch` (e.g. a request's
+    /// arrival stopwatch): `start_us` back-dates to when the watch
+    /// started, and the eventual `dur_us` is the watch's full reading.
+    pub fn span_started(&self, name: &str, parent: Option<SpanId>, watch: Stopwatch) -> Span {
+        let Some(inner) = &self.inner else {
+            return Span::noop();
+        };
+        let seq = inner.seq.fetch_add(1, Ordering::Relaxed);
+        let start_us = inner.epoch.elapsed_us().saturating_sub(watch.elapsed_us());
+        Span {
+            live: Some(LiveSpan {
+                id: SpanId::derive(seq),
+                parent,
+                name: name.to_string(),
+                start_us,
+                watch,
+                attrs: std::collections::BTreeMap::new(),
+            }),
+        }
+    }
+
+    /// Emit a finished span. A hollow span (disabled tracer) is dropped
+    /// silently; so is an I/O error — tracing never fails the traced
+    /// computation.
+    pub fn finish(&self, span: Span) {
+        let (Some(inner), Some(live)) = (&self.inner, span.live) else {
+            return;
+        };
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("type".to_string(), Value::Str("span".to_string()));
+        m.insert("id".to_string(), Value::Str(live.id.to_hex()));
+        let parent = match live.parent {
+            Some(p) => Value::Str(p.to_hex()),
+            None => Value::Null,
+        };
+        m.insert("parent".to_string(), parent);
+        m.insert("name".to_string(), Value::Str(live.name));
+        m.insert("start_us".to_string(), Value::Num(live.start_us as f64));
+        m.insert("dur_us".to_string(), Value::Num(live.watch.elapsed_us() as f64));
+        m.insert("attrs".to_string(), Value::Obj(live.attrs));
+        let mut sink = inner.sink.lock().unwrap_or_else(PoisonError::into_inner);
+        let _ = sink.emit_record(&Value::Obj(m));
+    }
+
+    /// Emit a `counters` record: a full registry snapshot stamped with
+    /// the trace-relative time.
+    pub fn counters(&self, registry: &MetricsRegistry) {
+        let Some(inner) = &self.inner else {
+            return;
+        };
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("type".to_string(), Value::Str("counters".to_string()));
+        m.insert("at_us".to_string(), Value::Num(inner.epoch.elapsed_us() as f64));
+        m.insert("metrics".to_string(), registry.snapshot());
+        let mut sink = inner.sink.lock().unwrap_or_else(PoisonError::into_inner);
+        let _ = sink.emit_record(&Value::Obj(m));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("smart-obs-{tag}-{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn disabled_tracer_is_fully_inert() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        let mut s = t.span("campaign");
+        assert!(!s.is_live());
+        s.attr_u64("items", 3);
+        t.finish(s);
+        t.counters(&MetricsRegistry::new());
+    }
+
+    #[test]
+    fn trace_records_are_one_parseable_json_object_per_line() {
+        let path = scratch("emit");
+        let t = Tracer::to_file(&path, "mc").unwrap();
+        let mut root = t.span("campaign");
+        root.attr_str("kernel", "block");
+        root.attr_u64("items", 256);
+        let parent = root.id().unwrap();
+        let mut shard = t.child("shard", parent);
+        shard.attr_u64("shard", 0);
+        t.finish(shard);
+        t.finish(root);
+        let reg = MetricsRegistry::new();
+        reg.counter("kernel_fast_lanes_total").add(12);
+        t.counters(&reg);
+        drop(t);
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let records: Vec<Value> =
+            lines.iter().map(|l| json::parse(l).expect("every line parses")).collect();
+        assert_eq!(records[0].get("type").unwrap().as_str(), Some("meta"));
+        assert_eq!(records[0].get("cmd").unwrap().as_str(), Some("mc"));
+        assert_eq!(records[0].get("version").unwrap().as_u64(), Some(TRACE_VERSION));
+        // child precedes root (finished first); parent links line up
+        assert_eq!(records[1].get("name").unwrap().as_str(), Some("shard"));
+        assert_eq!(
+            records[1].get("parent").unwrap().as_str(),
+            Some(parent.to_hex().as_str())
+        );
+        assert_eq!(records[2].get("name").unwrap().as_str(), Some("campaign"));
+        assert_eq!(records[2].get("parent"), Some(&Value::Null));
+        assert_eq!(
+            records[2].path(&["attrs", "kernel"]).unwrap().as_str(),
+            Some("block")
+        );
+        assert!(records[2].get("dur_us").unwrap().as_u64().is_some());
+        assert_eq!(
+            records[3].path(&["metrics", "counters", "kernel_fast_lanes_total"]).unwrap().as_u64(),
+            Some(12)
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn span_started_backdates_to_the_watch() {
+        let path = scratch("backdate");
+        let t = Tracer::to_file(&path, "serve").unwrap();
+        let watch = Stopwatch::start();
+        let s = t.span_started("request", None, watch);
+        t.finish(s);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rec = json::parse(text.lines().nth(1).unwrap()).unwrap();
+        // the span started at (or before) the time it was registered
+        let start = rec.get("start_us").unwrap().as_u64().unwrap();
+        assert!(start <= Stopwatch::start().elapsed_us().max(1_000_000));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,99 @@
+//! Observability: metrics, tracing spans, and post-hoc profiling
+//! (DESIGN.md §15).
+//!
+//! Every other layer of this crate is bound by the byte-determinism
+//! contract (DESIGN.md §4): artifacts depend only on the spec, never on
+//! wall-clock time or thread schedule. Observability is the one place
+//! that *wants* the clock — so the whole clock lives here, quarantined,
+//! and everything it produces flows into a side channel (the JSONL
+//! trace, the metrics registry, the `/v1/metrics` exposition) that no
+//! result path ever reads back. The quarantine is machine-enforced:
+//! lint rule D7 bans `Instant`/`SystemTime` and the raw trace-sink APIs
+//! outside `rust/src/obs/`, so callers time things with [`Stopwatch`]
+//! and emit through [`Tracer`] spans, both of which are inert no-ops
+//! when tracing is disabled.
+//!
+//! The four submodules:
+//!
+//! - [`registry`] — global-free [`MetricsRegistry`] of saturating
+//!   [`Counter`]s, [`Gauge`]s, and fixed-log2-bucket [`Histogram`]s,
+//!   with JSON snapshots and Prometheus text exposition;
+//! - [`span`] — lightweight [`Span`]s with counter-RNG-derived IDs,
+//!   parent links, and attributes;
+//! - [`emit`] — the [`Tracer`]: a JSONL trace sink (`--trace FILE` /
+//!   `SMART_TRACE=`) written through `util::json`;
+//! - [`profile`] — folds an emitted trace into the `PROFILE.json`
+//!   aggregate (per-phase wall time, shard balance, kernel mix,
+//!   serve-layer breakdown, span latency percentiles).
+//!
+//! The load-bearing invariant — pinned by `tests/obs.rs` — is that
+//! tracing is **provably inert**: `mc.json`, the sweep CSV/JSON,
+//! `infer.json`, and served response bodies are byte-identical with
+//! tracing on or off, for any `--shards/--threads/--block/--kernel`.
+//! Spans observe results; they never feed them.
+
+pub mod emit;
+pub mod profile;
+pub mod registry;
+pub mod span;
+
+pub use emit::Tracer;
+pub use profile::profile_trace;
+pub use registry::{Counter, Gauge, Histogram, MetricsRegistry};
+pub use span::{Span, SpanId};
+
+/// A started monotonic timer: the only sanctioned way to measure a
+/// duration outside this module (D7). `Stopwatch` wraps the quarantined
+/// `Instant` read; what it measures may feed operator-facing statistics
+/// (the `X-Smart-Time-Us` header, `/v1/stats` uptime, trace spans) but
+/// never a canonical artifact.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    // lint:allow(D6): the Stopwatch IS the quarantine — every timing
+    // read outside obs:: goes through this type
+    t0: std::time::Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        // lint:allow(D6): sole sanctioned clock read; consumers only see
+        // durations, which stay in the observability side channel
+        Stopwatch { t0: std::time::Instant::now() }
+    }
+
+    /// Elapsed time since [`Stopwatch::start`].
+    pub fn elapsed(&self) -> std::time::Duration {
+        self.t0.elapsed()
+    }
+
+    /// Elapsed whole microseconds (saturating at `u64::MAX`).
+    pub fn elapsed_us(&self) -> u64 {
+        u64::try_from(self.t0.elapsed().as_micros()).unwrap_or(u64::MAX)
+    }
+
+    /// Elapsed seconds as a float (operator display only).
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Stopwatch::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_is_monotone() {
+        let w = Stopwatch::start();
+        let a = w.elapsed_us();
+        let b = w.elapsed_us();
+        assert!(b >= a);
+        assert!(w.elapsed_s() >= 0.0);
+    }
+}

@@ -1,0 +1,286 @@
+//! Post-hoc trace profiling: fold a JSONL trace into the `PROFILE.json`
+//! aggregate (DESIGN.md §15).
+//!
+//! The trace is the raw record of one run; [`profile_trace`] reduces it
+//! to the questions the ROADMAP's planning items actually ask:
+//!
+//! - **phases** — wall time per root span (campaign, sweep, infer);
+//! - **spans** — count, total, and p50/p95/p99 latency per span name
+//!   (exact nearest-rank over the recorded durations, not a bucket
+//!   estimate — the profiler holds the full sample);
+//! - **shards** — work balance across `shard` spans: item counts,
+//!   max/mean balance factor, aggregate items/sec;
+//! - **kernels** — the kernel mix across `campaign` spans, including
+//!   the fast tier's lane/fallback/table-build counters and its
+//!   fallback rate;
+//! - **serve** — the request mix across `request` spans by cache tier
+//!   (hit/disk/dedup/miss) with request-latency percentiles;
+//! - **metrics** — the last `counters` registry snapshot, verbatim.
+//!
+//! Sections with no supporting records are elided, so an `mc` profile
+//! has no `serve` section and a serve profile no `shards` section.
+//! Derived ratios render at the [`report::canon`] 6-significant-digit
+//! precision like every other derived float in the repo.
+//!
+//! [`report::canon`]: crate::report::canon
+
+use std::collections::BTreeMap;
+
+use crate::report::canon;
+use crate::util::json::{self, Value};
+
+/// Durations of one span-name group, with the attr sums the sections
+/// need.
+#[derive(Debug, Default)]
+struct Group {
+    durs_us: Vec<u64>,
+    total_us: u64,
+}
+
+impl Group {
+    fn push(&mut self, dur: u64) {
+        self.durs_us.push(dur);
+        self.total_us = self.total_us.saturating_add(dur);
+    }
+}
+
+/// Nearest-rank percentile of a sorted sample (`p` in [0, 100]).
+fn percentile_us(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    // lint:allow(D3): p is in [0, 100] and sample sizes are far below
+    // 2^53, so the rank arithmetic is exact
+    let rank = ((p / 100.0 * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+fn num(n: u64) -> Value {
+    Value::Num(n as f64)
+}
+
+/// Fold a JSONL trace (the text of a `--trace` file) into the
+/// `PROFILE.json` aggregate. Fails with a line-numbered message on an
+/// unparseable line or a record without a `type`; unknown record types
+/// are skipped (forward compatibility).
+pub fn profile_trace(text: &str) -> Result<Value, String> {
+    let mut n_records = 0u64;
+    let mut phases: BTreeMap<String, Group> = BTreeMap::new();
+    let mut spans: BTreeMap<String, Group> = BTreeMap::new();
+    // shard spans: (items, dur_us)
+    let mut shards: Vec<(u64, u64)> = Vec::new();
+    // campaign spans keyed by kernel attr: summed counter attrs
+    let mut kernels: BTreeMap<String, BTreeMap<String, u64>> = BTreeMap::new();
+    // request spans: durations + per-cache-tier counts
+    let mut req_durs: Vec<u64> = Vec::new();
+    let mut req_tiers: BTreeMap<String, u64> = BTreeMap::new();
+    let mut last_metrics: Option<Value> = None;
+
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let rec = json::parse(line).map_err(|e| format!("trace line {}: {e}", i + 1))?;
+        let ty = rec
+            .get("type")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("trace line {}: record without a \"type\"", i + 1))?;
+        n_records += 1;
+        match ty {
+            "meta" => {}
+            "counters" => {
+                if let Some(m) = rec.get("metrics") {
+                    last_metrics = Some(m.clone());
+                }
+            }
+            "span" => {
+                let name = rec
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| format!("trace line {}: span without a \"name\"", i + 1))?
+                    .to_string();
+                let dur = rec.get("dur_us").and_then(Value::as_u64).unwrap_or(0);
+                let attrs = rec.get("attrs");
+                let attr = |k: &str| attrs.and_then(|a| a.get(k)).and_then(Value::as_u64);
+                spans.entry(name.clone()).or_default().push(dur);
+                if rec.get("parent") == Some(&Value::Null) {
+                    phases.entry(name.clone()).or_default().push(dur);
+                }
+                match name.as_str() {
+                    "shard" => shards.push((attr("items").unwrap_or(0), dur)),
+                    "campaign" => {
+                        let kernel = attrs
+                            .and_then(|a| a.get("kernel"))
+                            .and_then(Value::as_str)
+                            .unwrap_or("unknown")
+                            .to_string();
+                        let k = kernels.entry(kernel).or_default();
+                        *k.entry("campaigns".to_string()).or_default() += 1;
+                        for key in ["items", "lanes", "fallbacks", "table_builds"] {
+                            if let Some(v) = attr(key) {
+                                let e = k.entry(key.to_string()).or_default();
+                                *e = e.saturating_add(v);
+                            }
+                        }
+                    }
+                    "request" => {
+                        req_durs.push(dur);
+                        let tier = attrs
+                            .and_then(|a| a.get("cache"))
+                            .and_then(Value::as_str)
+                            .unwrap_or("none")
+                            .to_string();
+                        *req_tiers.entry(tier).or_default() += 1;
+                    }
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let mut out = BTreeMap::new();
+    out.insert("records".to_string(), num(n_records));
+
+    if !phases.is_empty() {
+        let m: BTreeMap<String, Value> = phases
+            .into_iter()
+            .map(|(name, g)| {
+                let mut p = BTreeMap::new();
+                p.insert("count".to_string(), num(g.durs_us.len() as u64));
+                p.insert("total_us".to_string(), num(g.total_us));
+                (name, Value::Obj(p))
+            })
+            .collect();
+        out.insert("phases".to_string(), Value::Obj(m));
+    }
+
+    if !spans.is_empty() {
+        let m: BTreeMap<String, Value> = spans
+            .into_iter()
+            .map(|(name, mut g)| {
+                g.durs_us.sort_unstable();
+                let mut p = BTreeMap::new();
+                p.insert("count".to_string(), num(g.durs_us.len() as u64));
+                p.insert("total_us".to_string(), num(g.total_us));
+                p.insert("p50_us".to_string(), num(percentile_us(&g.durs_us, 50.0)));
+                p.insert("p95_us".to_string(), num(percentile_us(&g.durs_us, 95.0)));
+                p.insert("p99_us".to_string(), num(percentile_us(&g.durs_us, 99.0)));
+                (name, Value::Obj(p))
+            })
+            .collect();
+        out.insert("spans".to_string(), Value::Obj(m));
+    }
+
+    if !shards.is_empty() {
+        let n = shards.len() as u64;
+        let items: u64 = shards.iter().map(|(i, _)| i).sum();
+        let dur: u64 = shards.iter().map(|(_, d)| d).sum();
+        let min_items = shards.iter().map(|(i, _)| *i).min().unwrap_or(0);
+        let max_items = shards.iter().map(|(i, _)| *i).max().unwrap_or(0);
+        let mean_items = items as f64 / n as f64;
+        let mut m = BTreeMap::new();
+        m.insert("n".to_string(), num(n));
+        m.insert("items".to_string(), num(items));
+        m.insert("min_items".to_string(), num(min_items));
+        m.insert("max_items".to_string(), num(max_items));
+        m.insert("mean_items".to_string(), Value::Num(canon(mean_items)));
+        // balance = heaviest shard / mean: 1.0 is a perfect split
+        let balance = if mean_items > 0.0 { max_items as f64 / mean_items } else { 0.0 };
+        m.insert("balance".to_string(), Value::Num(canon(balance)));
+        let ips = if dur > 0 { items as f64 * 1e6 / dur as f64 } else { 0.0 };
+        m.insert("items_per_sec".to_string(), Value::Num(canon(ips)));
+        out.insert("shards".to_string(), Value::Obj(m));
+    }
+
+    if !kernels.is_empty() {
+        let m: BTreeMap<String, Value> = kernels
+            .into_iter()
+            .map(|(kernel, counts)| {
+                let lanes = counts.get("lanes").copied().unwrap_or(0);
+                let fallbacks = counts.get("fallbacks").copied().unwrap_or(0);
+                let mut k: BTreeMap<String, Value> =
+                    counts.into_iter().map(|(key, v)| (key, num(v))).collect();
+                if lanes > 0 {
+                    let rate = fallbacks as f64 / lanes as f64;
+                    k.insert("fallback_rate".to_string(), Value::Num(canon(rate)));
+                }
+                (kernel, Value::Obj(k))
+            })
+            .collect();
+        out.insert("kernels".to_string(), Value::Obj(m));
+    }
+
+    if !req_durs.is_empty() {
+        req_durs.sort_unstable();
+        let mut m = BTreeMap::new();
+        m.insert("requests".to_string(), num(req_durs.len() as u64));
+        for (tier, n) in req_tiers {
+            m.insert(tier, num(n));
+        }
+        m.insert("p50_us".to_string(), num(percentile_us(&req_durs, 50.0)));
+        m.insert("p95_us".to_string(), num(percentile_us(&req_durs, 95.0)));
+        m.insert("p99_us".to_string(), num(percentile_us(&req_durs, 99.0)));
+        out.insert("serve".to_string(), Value::Obj(m));
+    }
+
+    if let Some(metrics) = last_metrics {
+        out.insert("metrics".to_string(), metrics);
+    }
+
+    Ok(Value::Obj(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_us(&s, 50.0), 50);
+        assert_eq!(percentile_us(&s, 95.0), 95);
+        assert_eq!(percentile_us(&s, 99.0), 99);
+        assert_eq!(percentile_us(&[7], 99.0), 7);
+        assert_eq!(percentile_us(&[], 50.0), 0);
+    }
+
+    #[test]
+    fn aggregates_shards_kernels_and_requests() {
+        let trace = concat!(
+            "{\"type\":\"meta\",\"version\":1,\"cmd\":\"mc\"}\n",
+            "{\"type\":\"span\",\"id\":\"aa\",\"parent\":null,\"name\":\"campaign\",",
+            "\"start_us\":0,\"dur_us\":1000,\"attrs\":{\"kernel\":\"fast\",\"items\":1000,",
+            "\"lanes\":1000,\"fallbacks\":250,\"table_builds\":1}}\n",
+            "{\"type\":\"span\",\"id\":\"bb\",\"parent\":\"aa\",\"name\":\"shard\",",
+            "\"start_us\":0,\"dur_us\":300,\"attrs\":{\"shard\":0,\"items\":600}}\n",
+            "{\"type\":\"span\",\"id\":\"cc\",\"parent\":\"aa\",\"name\":\"shard\",",
+            "\"start_us\":0,\"dur_us\":200,\"attrs\":{\"shard\":1,\"items\":400}}\n",
+            "{\"type\":\"span\",\"id\":\"dd\",\"parent\":null,\"name\":\"request\",",
+            "\"start_us\":0,\"dur_us\":40,\"attrs\":{\"cache\":\"hit\"}}\n",
+        );
+        let p = profile_trace(trace).unwrap();
+        assert_eq!(p.get("records").unwrap().as_u64(), Some(5));
+        assert_eq!(p.path(&["phases", "campaign", "total_us"]).unwrap().as_u64(), Some(1000));
+        assert_eq!(p.path(&["shards", "n"]).unwrap().as_u64(), Some(2));
+        assert_eq!(p.path(&["shards", "items"]).unwrap().as_u64(), Some(1000));
+        assert_eq!(p.path(&["shards", "balance"]).unwrap().as_f64(), Some(1.2));
+        assert_eq!(p.path(&["shards", "items_per_sec"]).unwrap().as_f64(), Some(2.0e6));
+        assert_eq!(p.path(&["kernels", "fast", "fallback_rate"]).unwrap().as_f64(), Some(0.25));
+        assert_eq!(p.path(&["kernels", "fast", "campaigns"]).unwrap().as_u64(), Some(1));
+        assert_eq!(p.path(&["serve", "hit"]).unwrap().as_u64(), Some(1));
+        assert_eq!(p.path(&["serve", "p99_us"]).unwrap().as_u64(), Some(40));
+        assert_eq!(p.path(&["spans", "shard", "p50_us"]).unwrap().as_u64(), Some(200));
+        // no counters record -> no metrics section; no sweep spans either
+        assert!(p.get("metrics").is_none());
+    }
+
+    #[test]
+    fn rejects_garbage_and_skips_unknown_types() {
+        assert!(profile_trace("not json\n").is_err());
+        assert!(profile_trace("{\"no_type\":1}\n").is_err());
+        let p = profile_trace("{\"type\":\"future_thing\",\"x\":1}\n").unwrap();
+        assert_eq!(p.get("records").unwrap().as_u64(), Some(1));
+        assert!(p.get("spans").is_none());
+    }
+}

@@ -1,0 +1,403 @@
+//! Global-free metrics: saturating counters, gauges, and
+//! fixed-log2-bucket histograms, collected in a [`MetricsRegistry`]
+//! (DESIGN.md §15).
+//!
+//! Nothing here is a process-wide static: a registry is owned by
+//! whoever needs one (the serve [`Pipeline`], a bench run) and handed
+//! around explicitly, so two servers in one test process never share
+//! counters. All primitives are lock-free `AtomicU64`s with `Relaxed`
+//! ordering — they are statistics, not synchronization — and additions
+//! saturate instead of wrapping so a countered service can run forever
+//! without a counter ever going backwards.
+//!
+//! [`Counter`] generalizes what used to be `serve::stats::Monotonic`
+//! (which is now a re-export of this type). [`Histogram`] uses 64 fixed
+//! log2 buckets — bucket `i` covers `[2^i, 2^(i+1))`, with 0 landing in
+//! bucket 0 — so recording is one `leading_zeros` and one atomic add,
+//! and the bucket layout never depends on the data.
+//!
+//! Snapshots serialize through `util::json` ([`MetricsRegistry::snapshot`])
+//! and as Prometheus text exposition ([`MetricsRegistry::prometheus`],
+//! the `/v1/metrics` endpoint body).
+//!
+//! [`Pipeline`]: crate::serve::Pipeline
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+use crate::util::json::Value;
+
+/// A saturating monotonic counter. Increments use `Relaxed` ordering
+/// (statistics, not synchronization) and saturate at `u64::MAX` rather
+/// than wrapping, so readers can rely on it never decreasing.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// A zeroed counter (usable in statics and struct literals).
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add `n`, saturating at `u64::MAX`.
+    pub fn add(&self, n: u64) {
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_add(n))
+        });
+    }
+
+    /// Add one.
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins gauge: a value that can move both ways (queue
+/// depth, resident entries). Stored as `u64`; `Relaxed` like the rest.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// A zeroed gauge.
+    pub const fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of log2 buckets in a [`Histogram`]: one per bit of `u64`, so
+/// every value has exactly one bucket and the layout is data-independent.
+pub const N_BUCKETS: usize = 64;
+
+/// The bucket index a value lands in: `floor(log2(v))`, with 0 in
+/// bucket 0. Bucket `i` therefore covers `[2^i, 2^(i+1))`.
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        63 - v.leading_zeros() as usize
+    }
+}
+
+/// The inclusive upper bound of bucket `i` (the Prometheus `le` label):
+/// `2^(i+1) - 1`, saturating at `u64::MAX` for the last bucket.
+pub fn bucket_bound(i: usize) -> u64 {
+    if i >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+/// A fixed-log2-bucket latency histogram: 64 buckets, a saturating
+/// count, and a saturating sum. Recording is lock-free; quantile reads
+/// are bucket-resolution estimates (the upper bound of the bucket the
+/// nearest-rank sample falls in), which is exactly the resolution the
+/// log2 layout promises.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [Counter; N_BUCKETS],
+    count: Counter,
+    sum: Counter,
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| Counter::new()),
+            count: Counter::new(),
+            sum: Counter::new(),
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].incr();
+        self.count.incr();
+        self.sum.add(v);
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count.get()
+    }
+
+    /// Sum of all observations (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum.get()
+    }
+
+    /// Count in bucket `i` (values in `[2^i, 2^(i+1))`).
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets[i].get()
+    }
+
+    /// Nearest-rank quantile estimate for `p` in [0, 100]: the upper
+    /// bound of the bucket holding the rank-`ceil(p/100 * count)`
+    /// observation. Returns 0 for an empty histogram.
+    pub fn quantile(&self, p: f64) -> u64 {
+        let count = self.count.get();
+        if count == 0 {
+            return 0;
+        }
+        // lint:allow(D3): p is clamped to [0, 100] and count <= 2^53 in
+        // any realistic run, so the f64 rank round-trips exactly
+        let rank = ((p.clamp(0.0, 100.0) / 100.0 * count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for i in 0..N_BUCKETS {
+            seen = seen.saturating_add(self.buckets[i].get());
+            if seen >= rank {
+                return bucket_bound(i);
+            }
+        }
+        bucket_bound(N_BUCKETS - 1)
+    }
+
+    /// JSON snapshot: count, sum, and the non-empty buckets keyed by
+    /// their `le` upper bound (sorted numerically via zero-padding).
+    pub fn snapshot(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Value::Num(self.count.get() as f64));
+        m.insert("sum".to_string(), Value::Num(self.sum.get() as f64));
+        let mut buckets = BTreeMap::new();
+        for i in 0..N_BUCKETS {
+            let n = self.buckets[i].get();
+            if n > 0 {
+                buckets.insert(format!("{:020}", bucket_bound(i)), Value::Num(n as f64));
+            }
+        }
+        m.insert("buckets".to_string(), Value::Obj(buckets));
+        Value::Obj(m)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// A registry of named metrics. Get-or-create accessors return `Arc`
+/// handles, so hot paths resolve a name once and increment lock-free
+/// thereafter; the maps themselves are `BTreeMap`s so every export is
+/// deterministically ordered.
+///
+/// Metric names should already be Prometheus-shaped
+/// (`[a-zA-Z_][a-zA-Z0-9_]*`, e.g. `serve_requests_total`); the
+/// exposition writer does not rewrite them.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        MetricsRegistry::default()
+    }
+
+    /// The counter named `name`, created zeroed on first use.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap_or_else(PoisonError::into_inner);
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// The gauge named `name`, created zeroed on first use.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap_or_else(PoisonError::into_inner);
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// The histogram named `name`, created empty on first use.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.histograms.lock().unwrap_or_else(PoisonError::into_inner);
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// JSON snapshot of every metric, deterministically ordered. The
+    /// shape is `{counters: {...}, gauges: {...}, histograms: {...}}`
+    /// with empty sections elided.
+    pub fn snapshot(&self) -> Value {
+        let mut out = BTreeMap::new();
+        let counters = self.counters.lock().unwrap_or_else(PoisonError::into_inner);
+        if !counters.is_empty() {
+            let m: BTreeMap<String, Value> = counters
+                .iter()
+                .map(|(k, c)| (k.clone(), Value::Num(c.get() as f64)))
+                .collect();
+            out.insert("counters".to_string(), Value::Obj(m));
+        }
+        drop(counters);
+        let gauges = self.gauges.lock().unwrap_or_else(PoisonError::into_inner);
+        if !gauges.is_empty() {
+            let m: BTreeMap<String, Value> =
+                gauges.iter().map(|(k, g)| (k.clone(), Value::Num(g.get() as f64))).collect();
+            out.insert("gauges".to_string(), Value::Obj(m));
+        }
+        drop(gauges);
+        let histograms = self.histograms.lock().unwrap_or_else(PoisonError::into_inner);
+        if !histograms.is_empty() {
+            let m: BTreeMap<String, Value> =
+                histograms.iter().map(|(k, h)| (k.clone(), h.snapshot())).collect();
+            out.insert("histograms".to_string(), Value::Obj(m));
+        }
+        Value::Obj(out)
+    }
+
+    /// Prometheus text exposition (version 0.0.4) of every metric:
+    /// `# TYPE` lines, cumulative `_bucket{le="..."}` series plus
+    /// `_sum`/`_count` for histograms. Deterministically ordered.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let counters = self.counters.lock().unwrap_or_else(PoisonError::into_inner);
+        for (name, c) in counters.iter() {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c.get());
+        }
+        drop(counters);
+        let gauges = self.gauges.lock().unwrap_or_else(PoisonError::into_inner);
+        for (name, g) in gauges.iter() {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", g.get());
+        }
+        drop(gauges);
+        let histograms = self.histograms.lock().unwrap_or_else(PoisonError::into_inner);
+        for (name, h) in histograms.iter() {
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let mut cumulative = 0u64;
+            for i in 0..N_BUCKETS {
+                let n = h.bucket(i);
+                cumulative = cumulative.saturating_add(n);
+                // only emit buckets up to (and including) the last
+                // non-empty one, plus +Inf — 64 mostly-zero series per
+                // histogram would drown the exposition
+                if n > 0 {
+                    let _ =
+                        writeln!(out, "{name}_bucket{{le=\"{}\"}} {cumulative}", bucket_bound(i));
+                }
+            }
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+            let _ = writeln!(out, "{name}_sum {}", h.sum());
+            let _ = writeln!(out, "{name}_count {}", h.count());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_saturates_instead_of_wrapping() {
+        let c = Counter::new();
+        c.add(u64::MAX - 1);
+        c.add(5);
+        assert_eq!(c.get(), u64::MAX);
+        c.incr();
+        assert_eq!(c.get(), u64::MAX);
+    }
+
+    #[test]
+    fn gauge_moves_both_ways() {
+        let g = Gauge::new();
+        g.set(9);
+        assert_eq!(g.get(), 9);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn bucket_boundaries_are_exact_powers_of_two() {
+        // bucket i covers [2^i, 2^(i+1)): both edges must land correctly
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        for i in 0..63 {
+            let lo = 1u64 << i;
+            assert_eq!(bucket_index(lo), i, "lower edge of bucket {i}");
+            assert_eq!(bucket_index(lo + (lo - 1)), i, "upper edge of bucket {i}");
+            if i < 62 {
+                assert_eq!(bucket_index(lo * 2), i + 1, "first value past bucket {i}");
+            }
+        }
+        assert_eq!(bucket_index(u64::MAX), 63);
+        assert_eq!(bucket_bound(0), 1);
+        assert_eq!(bucket_bound(1), 3);
+        assert_eq!(bucket_bound(62), (1u64 << 63) - 1);
+        assert_eq!(bucket_bound(63), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_counts_sums_and_estimates_quantiles() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 3, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1106);
+        assert_eq!(h.bucket(0), 1); // 1
+        assert_eq!(h.bucket(1), 2); // 2, 3
+        assert_eq!(h.bucket(6), 1); // 100 in [64, 128)
+        assert_eq!(h.bucket(9), 1); // 1000 in [512, 1024)
+        // rank 3 of 5 lands in bucket 1 -> le bound 3
+        assert_eq!(h.quantile(50.0), 3);
+        // the top sample lands in bucket 9 -> le bound 1023
+        assert_eq!(h.quantile(99.0), 1023);
+        assert_eq!(Histogram::new().quantile(50.0), 0);
+    }
+
+    #[test]
+    fn registry_handles_are_shared_and_snapshots_are_sorted() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("zz_total");
+        let b = reg.counter("zz_total");
+        assert!(Arc::ptr_eq(&a, &b));
+        a.add(2);
+        reg.gauge("aa_depth").set(7);
+        reg.histogram("mm_us").record(5);
+        let snap = reg.snapshot();
+        assert_eq!(snap.path(&["counters", "zz_total"]).unwrap().as_u64(), Some(2));
+        assert_eq!(snap.path(&["gauges", "aa_depth"]).unwrap().as_u64(), Some(7));
+        assert_eq!(snap.path(&["histograms", "mm_us", "count"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn prometheus_exposition_has_types_buckets_and_totals() {
+        let reg = MetricsRegistry::new();
+        reg.counter("smart_requests_total").add(3);
+        let h = reg.histogram("smart_request_us");
+        h.record(2);
+        h.record(700);
+        let text = reg.prometheus();
+        assert!(text.contains("# TYPE smart_requests_total counter"));
+        assert!(text.contains("smart_requests_total 3"));
+        assert!(text.contains("# TYPE smart_request_us histogram"));
+        assert!(text.contains("smart_request_us_bucket{le=\"3\"} 1"));
+        assert!(text.contains("smart_request_us_bucket{le=\"1023\"} 2"));
+        assert!(text.contains("smart_request_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("smart_request_us_sum 702"));
+        assert!(text.contains("smart_request_us_count 2"));
+    }
+}

@@ -38,6 +38,7 @@ use crate::coordinator::{run_native_campaigns_merged, CampaignSpec};
 use crate::dse::{card_fingerprint, point_result, sweep_json, GridPoint, SweepSpec};
 use crate::mac::{KernelKind, Variant};
 use crate::nn::{infer_json, run_infer_batch, InferOptions, ModelSpec};
+use crate::obs::Histogram;
 use crate::params::Params;
 use crate::report::csv_cell;
 
@@ -113,13 +114,24 @@ pub struct Coalescer {
     state: Mutex<State>,
     batched: Monotonic,
     groups: Monotonic,
+    /// Jobs per executed group (solo rounds included) — usually a
+    /// registry histogram (`serve_batch_group_size`) so `/v1/metrics`
+    /// exposes the coalescing distribution.
+    group_sizes: Arc<Histogram>,
 }
 
 impl Coalescer {
     /// A coalescer over the server's model card. `batch_max` bounds the
     /// jobs per merged execution (clamped to >= 1); the [`Gate`] is the
-    /// shared compute gate the self-test pauses.
-    pub fn new(params: Params, batch_max: usize, gate: Arc<Gate>, stats: Arc<ServeStats>) -> Self {
+    /// shared compute gate the self-test pauses; `group_sizes` records
+    /// the job count of every executed group.
+    pub fn new(
+        params: Params,
+        batch_max: usize,
+        gate: Arc<Gate>,
+        stats: Arc<ServeStats>,
+        group_sizes: Arc<Histogram>,
+    ) -> Self {
         Coalescer {
             params,
             batch_max: batch_max.max(1),
@@ -128,6 +140,7 @@ impl Coalescer {
             state: Mutex::new(State { leaders: BTreeSet::new(), pending: BTreeMap::new() }),
             batched: Monotonic::new(),
             groups: Monotonic::new(),
+            group_sizes,
         }
     }
 
@@ -205,6 +218,7 @@ impl Coalescer {
             }
             let own_this_round = own_pending.take();
             let n_jobs = cells.len() + usize::from(own_this_round.is_some());
+            self.group_sizes.record(n_jobs as u64);
             if n_jobs >= 2 {
                 self.groups.incr();
                 self.batched.add(n_jobs as u64);
@@ -360,8 +374,14 @@ mod tests {
     #[test]
     fn a_lone_submit_computes_without_grouping_counters() {
         let stats = Arc::new(ServeStats::new());
-        let co =
-            Coalescer::new(Params::default(), 8, Arc::new(Gate::new()), Arc::clone(&stats));
+        let sizes = Arc::new(Histogram::new());
+        let co = Coalescer::new(
+            Params::default(),
+            8,
+            Arc::new(Gate::new()),
+            Arc::clone(&stats),
+            Arc::clone(&sizes),
+        );
         let compat = infer_compat(Variant::Smart, KernelKind::Block);
         let body = co.submit(&compat, infer_job(0)).unwrap();
         assert_eq!(body, solo_infer_body(0));
@@ -369,13 +389,23 @@ mod tests {
         assert_eq!(co.batched(), 0);
         assert_eq!(co.queued(), 0);
         assert_eq!(stats.campaigns.get(), 1);
+        // the solo round still lands in the group-size histogram
+        assert_eq!(sizes.count(), 1);
+        assert_eq!(sizes.bucket(0), 1);
     }
 
     #[test]
     fn concurrent_compatible_infers_coalesce_and_byte_match_solo_runs() {
         let stats = Arc::new(ServeStats::new());
         let gate = Arc::new(Gate::new());
-        let co = Coalescer::new(Params::default(), 8, Arc::clone(&gate), Arc::clone(&stats));
+        let sizes = Arc::new(Histogram::new());
+        let co = Coalescer::new(
+            Params::default(),
+            8,
+            Arc::clone(&gate),
+            Arc::clone(&stats),
+            Arc::clone(&sizes),
+        );
         let compat = infer_compat(Variant::Smart, KernelKind::Block);
         gate.pause();
         let bodies: Vec<(u64, String)> = std::thread::scope(|scope| {
@@ -397,6 +427,9 @@ mod tests {
         }
         assert_eq!(co.groups(), 1, "three compatible jobs must merge into one group");
         assert_eq!(co.batched(), 3);
+        // one group of 3 jobs -> one observation in bucket [2, 4)
+        assert_eq!(sizes.count(), 1);
+        assert_eq!(sizes.bucket(1), 1);
         assert_eq!(stats.campaigns.get(), 3, "each job is one spec computation");
         assert_eq!(co.queued(), 0);
     }
@@ -405,7 +438,13 @@ mod tests {
     fn sweep_points_coalesce_and_byte_match_the_grid_runner() {
         let stats = Arc::new(ServeStats::new());
         let gate = Arc::new(Gate::new());
-        let co = Coalescer::new(Params::default(), 4, Arc::clone(&gate), Arc::clone(&stats));
+        let co = Coalescer::new(
+            Params::default(),
+            4,
+            Arc::clone(&gate),
+            Arc::clone(&stats),
+            Arc::new(Histogram::new()),
+        );
         let spec_a = SweepSpec::parse("name = \"co\"\nn_mc = 8\nseed = 3\n").unwrap();
         let spec_b = SweepSpec::parse("name = \"co\"\nn_mc = 8\nseed = 4\n").unwrap();
         let (pa, pb) = (spec_a.grid.expand()[0], spec_b.grid.expand()[0]);

@@ -59,6 +59,7 @@ pub struct DiskTier {
     hits: Monotonic,
     misses: Monotonic,
     writes: Monotonic,
+    bytes_written: Monotonic,
     rejects: Monotonic,
     warm_entries: u64,
 }
@@ -83,6 +84,7 @@ impl DiskTier {
             hits: Monotonic::new(),
             misses: Monotonic::new(),
             writes: Monotonic::new(),
+            bytes_written: Monotonic::new(),
             rejects: Monotonic::new(),
             warm_entries: warm,
         })
@@ -151,6 +153,7 @@ impl DiskTier {
         fs::write(&tmp, &text)?;
         fs::rename(&tmp, &path)?;
         self.writes.incr();
+        self.bytes_written.add(text.len() as u64);
         Ok(())
     }
 
@@ -168,6 +171,12 @@ impl DiskTier {
     /// Entries persisted.
     pub fn writes(&self) -> u64 {
         self.writes.get()
+    }
+
+    /// Total on-disk bytes persisted across all writes (entry framing
+    /// included) — the tier's write-amplification view.
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written.get()
     }
 
     /// Malformed/truncated/mismatched entries deleted on read.
@@ -250,6 +259,8 @@ mod tests {
         tier.put(key, body).unwrap();
         assert_eq!(tier.get(key).unwrap().as_str(), body);
         assert_eq!((tier.hits(), tier.misses(), tier.writes(), tier.rejects()), (1, 1, 1, 0));
+        // framing adds magic + headers on top of key + body bytes
+        assert!(tier.bytes_written() > (key.len() + body.len()) as u64);
 
         // A reopened tier (the "restart") serves the same bytes and
         // reports the warm inventory.

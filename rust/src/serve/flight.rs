@@ -182,7 +182,7 @@ impl SingleFlight {
             resp.headers.push(("X-Smart-Cache".to_string(), "dedup".to_string()));
             resp.headers.push((
                 "X-Smart-Time-Us".to_string(),
-                format!("{}", c.t0.elapsed().as_micros()),
+                c.t0.elapsed_us().to_string(),
             ));
             // A follower that hung up early is its own problem; the
             // fan-out must keep serving the rest.

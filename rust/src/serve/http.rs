@@ -52,15 +52,16 @@ pub struct Response {
 /// A connection handed off to an in-flight computation (single-flight
 /// dedup, DESIGN.md §14): the follower's worker returns to the pool and
 /// the leader's completion fan-out writes the response. Carries the
-/// request arrival instant so the fan-out can stamp an honest
-/// `X-Smart-Time-Us` per connection (the instant is captured by the
-/// caller; this module never reads the clock).
+/// request's arrival stopwatch so the fan-out can stamp an honest
+/// `X-Smart-Time-Us` per connection (the watch is started by the
+/// caller; this module never reads the clock itself).
 #[derive(Debug)]
 pub struct ParkedConn {
     /// The follower's socket, still awaiting its response.
     pub stream: TcpStream,
-    /// When the request arrived (drives the per-connection latency header).
-    pub t0: std::time::Instant,
+    /// Started at request arrival (drives the per-connection latency
+    /// header).
+    pub t0: crate::obs::Stopwatch,
 }
 
 impl Response {
@@ -140,14 +141,23 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
 }
 
 /// Frame and send one response; always closes the connection afterwards
-/// (`Connection: close`).
+/// (`Connection: close`). The default `application/json` content type
+/// yields to an explicit `Content-Type` row in `resp.headers` (the
+/// Prometheus exposition is `text/plain`).
 pub fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let custom_type = resp
+        .headers
+        .iter()
+        .any(|(k, _)| k.eq_ignore_ascii_case("content-type"));
     let mut head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Length: {}\r\nConnection: close\r\n",
         resp.status,
         status_text(resp.status),
         resp.body.len()
     );
+    if !custom_type {
+        head.push_str("Content-Type: application/json\r\n");
+    }
     for (k, v) in &resp.headers {
         head.push_str(k);
         head.push_str(": ");

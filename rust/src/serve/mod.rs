@@ -31,6 +31,7 @@
 //! | `POST /v1/infer`     | an `nn.toml` model document as JSON | canonical `infer.json` bytes |
 //! | `GET /v1/health`     | —                                   | liveness probe |
 //! | `GET /v1/stats`      | —                                   | request/cache/flight/disk/batch counters |
+//! | `GET /v1/metrics`    | —                                   | Prometheus text exposition of the same (DESIGN.md §15) |
 //!
 //! Architecture: an acceptor thread feeds accepted connections into a
 //! bounded channel drained by a fixed pool of request workers (one
@@ -70,11 +71,12 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::mac::KernelKind;
+use crate::obs::{Stopwatch, Tracer};
 use crate::params::Params;
 use crate::util::json::{to_string_pretty, Value};
 
@@ -93,6 +95,10 @@ pub struct ServeOptions {
     /// Maximum compatible jobs per merged batch execution
     /// (`--batch-max`).
     pub batch_max: usize,
+    /// Request tracer (`--trace FILE` / `SMART_TRACE=`): one `request`
+    /// span per connection. Inert by default; served bodies are
+    /// byte-identical either way (tracing never feeds a response).
+    pub tracer: Tracer,
 }
 
 impl Default for ServeOptions {
@@ -103,6 +109,7 @@ impl Default for ServeOptions {
             cache_cap: 64 << 20,
             cache_dir: None,
             batch_max: 16,
+            tracer: Tracer::disabled(),
         }
     }
 }
@@ -140,19 +147,19 @@ impl Server {
         let listener = TcpListener::bind(&opts.addr)
             .with_context(|| format!("binding {}", opts.addr))?;
         let addr = listener.local_addr().context("resolving bound address")?;
-        let pipe = Arc::new(
-            Pipeline::new(
-                params,
-                opts.cache_cap,
-                opts.workers.min(8),
-                opts.cache_dir.as_deref(),
-                opts.batch_max,
-            )
-            .with_context(|| match &opts.cache_dir {
-                Some(d) => format!("opening --cache-dir {}", d.display()),
-                None => "building the serving pipeline".to_string(),
-            })?,
-        );
+        let mut pipe = Pipeline::new(
+            params,
+            opts.cache_cap,
+            opts.workers.min(8),
+            opts.cache_dir.as_deref(),
+            opts.batch_max,
+        )
+        .with_context(|| match &opts.cache_dir {
+            Some(d) => format!("opening --cache-dir {}", d.display()),
+            None => "building the serving pipeline".to_string(),
+        })?;
+        pipe.set_tracer(opts.tracer.clone());
+        let pipe = Arc::new(pipe);
         let stopping = Arc::new(AtomicBool::new(false));
 
         // Bounded hand-off: when every worker is busy and the queue is
@@ -299,7 +306,7 @@ fn worker_loop(pipe: &Pipeline, conn_rx: &Mutex<Receiver<TcpStream>>, n_workers:
 /// joins an in-flight computation its connection is parked — the flight
 /// leader's fan-out answers it and this worker returns immediately.
 fn serve_connection(pipe: &Pipeline, stream: &mut TcpStream, n_workers: usize) {
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     pipe.stats().requests.incr();
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
@@ -308,15 +315,25 @@ fn serve_connection(pipe: &Pipeline, stream: &mut TcpStream, n_workers: usize) {
         Err(e) => {
             pipe.stats().errors.incr();
             let mut resp = Response::error(400, &format!("{e:#}"));
+            let mut span = pipe.tracer().span_started("request", None, t0);
+            span.attr_u64("status", 400);
             respond(pipe, stream, &mut resp, t0);
+            pipe.tracer().finish(span);
             return;
         }
     };
+    // One span per connection, back-dated to arrival. The span observes
+    // the request; nothing in the response path reads it back.
+    let mut span = pipe.tracer().span_started("request", None, t0);
+    span.attr_str("method", &req.method);
+    span.attr_str("path", &req.path);
     // stats needs server-level state, so it is answered here rather
     // than in the router
     if req.method == "GET" && req.path == "/v1/stats" {
         let mut resp = Response::ok(stats_body(pipe, n_workers));
+        span.attr_u64("status", 200);
         respond(pipe, stream, &mut resp, t0);
+        pipe.tracer().finish(span);
         return;
     }
     // Duplicate the socket handle so the pipeline can park it on an
@@ -331,7 +348,9 @@ fn serve_connection(pipe: &Pipeline, stream: &mut TcpStream, n_workers: usize) {
         Fetched::Parked => {
             // The connection now belongs to the flight leader's fan-out;
             // only the routing time was spent on this worker.
-            pipe.stats().busy_us.add(t0.elapsed().as_micros() as u64);
+            pipe.stats().busy_us.add(t0.elapsed_us());
+            span.attr_str("cache", "parked");
+            pipe.tracer().finish(span);
         }
         Fetched::Done(mut routed, _conn) => {
             if routed.response.status >= 400 {
@@ -343,17 +362,25 @@ fn serve_connection(pipe: &Pipeline, stream: &mut TcpStream, n_workers: usize) {
                     .response
                     .headers
                     .push(("X-Smart-Cache".to_string(), tier.token().to_string()));
+                span.attr_str("cache", tier.token());
             }
+            span.attr_u64("status", u64::from(routed.response.status));
             respond(pipe, stream, &mut routed.response, t0);
+            pipe.tracer().finish(span);
         }
     }
 }
 
-/// Frame and write one response: account busy time, stamp the timing
-/// header.
-fn respond(pipe: &Pipeline, stream: &mut TcpStream, resp: &mut Response, t0: Instant) {
-    let elapsed_us = t0.elapsed().as_micros() as u64;
+/// Frame and write one response: account busy time, record the request
+/// latency in the registry, stamp the timing header. (Parked followers
+/// are answered by the flight fan-out instead and do not pass through
+/// here — their latency is visible on the `X-Smart-Time-Us` header but
+/// not in the server-side histogram.)
+fn respond(pipe: &Pipeline, stream: &mut TcpStream, resp: &mut Response, t0: Stopwatch) {
+    let elapsed_us = t0.elapsed_us();
     pipe.stats().busy_us.add(elapsed_us);
+    pipe.registry().histogram("serve_request_us").record(elapsed_us);
+    pipe.registry().counter("serve_responses_total").incr();
     resp.headers.push(("X-Smart-Time-Us".to_string(), elapsed_us.to_string()));
     let _ = write_response(stream, resp);
 }
@@ -386,14 +413,23 @@ fn stats_body(pipe: &Pipeline, workers: usize) -> String {
     cm.insert("evictions".to_string(), num(cache.evictions()));
     put("cache", Value::Obj(cm));
     let mut dm = std::collections::BTreeMap::new();
-    let (enabled, h, m, w, r, warm) = match pipe.disk() {
-        Some(d) => (true, d.hits(), d.misses(), d.writes(), d.rejects(), d.warm_entries()),
-        None => (false, 0, 0, 0, 0, 0),
+    let (enabled, h, m, w, bw, r, warm) = match pipe.disk() {
+        Some(d) => (
+            true,
+            d.hits(),
+            d.misses(),
+            d.writes(),
+            d.bytes_written(),
+            d.rejects(),
+            d.warm_entries(),
+        ),
+        None => (false, 0, 0, 0, 0, 0, 0),
     };
     dm.insert("enabled".to_string(), Value::Bool(enabled));
     dm.insert("hits".to_string(), num(h));
     dm.insert("misses".to_string(), num(m));
     dm.insert("writes".to_string(), num(w));
+    dm.insert("bytes_written".to_string(), num(bw));
     dm.insert("rejects".to_string(), num(r));
     dm.insert("warm_entries".to_string(), num(warm));
     put("disk", Value::Obj(dm));
@@ -496,6 +532,8 @@ pub struct SelfTestReport {
 /// surrogate tier end to end, including its cache-key fork (DESIGN.md
 /// §13). The worker pool is widened to the batch-phase group size if
 /// needed (batch followers block a worker each while they wait).
+/// `tracer` instruments the first server's requests (`--trace`); the
+/// asserted bodies are byte-identical with tracing on or off.
 /// Returns the counters plus the `BENCH_serve.json` document; any
 /// contract violation is an error.
 pub fn self_test(
@@ -503,6 +541,7 @@ pub fn self_test(
     workers: usize,
     smoke: bool,
     kernel: KernelKind,
+    tracer: &Tracer,
 ) -> Result<SelfTestReport> {
     use crate::coordinator::{run_campaign, Backend, CampaignSpec, Workload};
     use crate::dse::{run_grid_point, sweep_json, GridAxes, SweepOptions, SweepSpec};
@@ -545,6 +584,7 @@ pub fn self_test(
         cache_cap: 16 << 20,
         cache_dir: Some(cache_dir.clone()),
         batch_max: batch_jobs.max(16),
+        tracer: tracer.clone(),
     };
     let mut server = Server::start(*params, &opts)?;
     let addr = server.addr().to_string();
@@ -552,6 +592,15 @@ pub fn self_test(
 
     let (status, _, body) = http_request(&addr, "GET", "/v1/health", "")?;
     anyhow::ensure!(status == 200 && body.contains("smart-serve"), "health probe failed");
+    let (status, headers, text) = http_request(&addr, "GET", "/v1/metrics", "")?;
+    anyhow::ensure!(
+        status == 200
+            && text.contains("serve_batch_group_size")
+            && headers
+                .iter()
+                .any(|(k, v)| k == "Content-Type" && v.starts_with("text/plain")),
+        "metrics probe failed"
+    );
 
     // (1) expected bytes straight through the CLI artifact encoders.
     let n_mc: u32 = if smoke { 8 } else { 64 };
@@ -639,7 +688,7 @@ pub fn self_test(
     // request, integer microseconds).
     let clients = if smoke { 3 } else { 8 };
     let repeats = if smoke { 3 } else { 8 };
-    let t_load = Instant::now();
+    let t_load = Stopwatch::start();
     let outcomes: Vec<Result<Vec<u64>, String>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..clients)
             .map(|_| {
@@ -649,11 +698,11 @@ pub fn self_test(
                     let mut lat = Vec::with_capacity(repeats * endpoints.len());
                     for _ in 0..repeats {
                         for (path, body, expect) in endpoints {
-                            let t = Instant::now();
+                            let t = Stopwatch::start();
                             let (status, headers, got) =
                                 http_request(&addr, "POST", path, body)
                                     .map_err(|e| format!("{path}: {e:#}"))?;
-                            lat.push(t.elapsed().as_micros() as u64);
+                            lat.push(t.elapsed_us());
                             if status != 200 {
                                 return Err(format!("{path}: status {status}: {got}"));
                             }
@@ -680,7 +729,7 @@ pub fn self_test(
             })
             .collect()
     });
-    let load_us = t_load.elapsed().as_micros() as u64;
+    let load_us = t_load.elapsed_us();
     let mut latencies: Vec<u64> = Vec::new();
     let mut failures: Vec<String> = Vec::new();
     for o in outcomes {
@@ -737,9 +786,9 @@ pub fn self_test(
                 })
             })
             .collect();
-        let deadline = Instant::now() + Duration::from_secs(120);
+        let herd_watch = Stopwatch::start();
         let mut herded = false;
-        while Instant::now() < deadline {
+        while herd_watch.elapsed() < Duration::from_secs(120) {
             if pipe.flight().waiting() >= herd_clients as u64 - 1 {
                 herded = true;
                 break;
@@ -829,9 +878,9 @@ pub fn self_test(
                 })
             })
             .collect();
-        let deadline = Instant::now() + Duration::from_secs(120);
+        let batch_watch = Stopwatch::start();
         let mut queued_up = false;
-        while Instant::now() < deadline {
+        while batch_watch.elapsed() < Duration::from_secs(120) {
             if pipe.batch().queued() >= batch_jobs as u64 - 1 {
                 queued_up = true;
                 break;
@@ -872,6 +921,10 @@ pub fn self_test(
 
     // Final first-server counters (the bench record), then kill it.
     let stats_json = server.stats_json();
+    let metrics_snapshot = {
+        pipe.sync_metrics();
+        pipe.registry().snapshot()
+    };
     let total_deduped = pipe.flight().deduped();
     let total_leads = pipe.flight().leads();
     let total_campaigns = pipe.stats().campaigns.get();
@@ -967,6 +1020,9 @@ pub fn self_test(
         root.insert("flight".to_string(), Value::Obj(fm));
         root.insert("batch".to_string(), Value::Obj(bm));
         root.insert("disk".to_string(), Value::Obj(dm));
+        // full registry snapshot: the server-side latency histogram and
+        // the mirrored structural gauges (additive to the fields above)
+        root.insert("metrics".to_string(), metrics_snapshot);
         let mut text = to_string_pretty(&Value::Obj(root));
         text.push('\n');
         text
@@ -1045,6 +1101,7 @@ mod tests {
         assert!(v.get("cache").unwrap().get("bytes").is_some());
         let disk = v.get("disk").unwrap();
         assert!(!disk.get("enabled").unwrap().as_bool().unwrap());
+        assert!(disk.get("bytes_written").is_some());
         assert!(v.get("flight").unwrap().get("deduped").is_some());
         assert!(v.get("batch").unwrap().get("queued").is_some());
         s.stop();
@@ -1052,7 +1109,9 @@ mod tests {
 
     #[test]
     fn self_test_smoke_passes() {
-        let r = self_test(&Params::default(), 2, true, KernelKind::Block).unwrap();
+        let r =
+            self_test(&Params::default(), 2, true, KernelKind::Block, &Tracer::disabled())
+                .unwrap();
         assert_eq!(r.misses, 3);
         assert_eq!(r.hits, (r.clients * r.repeats * 3) as u64);
         assert_eq!(r.deduped, r.herd_clients as u64 - 1, "herd must dedup all followers");
@@ -1063,12 +1122,21 @@ mod tests {
         assert!(r.warm_entries >= 4 + r.batch_jobs as u64);
         assert!(r.stats_json.contains("smart-serve"));
         assert!(r.bench_json.contains("throughput_rps"));
-        crate::util::json::parse(&r.bench_json).unwrap();
+        let bench = crate::util::json::parse(&r.bench_json).unwrap();
+        // the registry snapshot rides along: server-side latency
+        // histogram plus mirrored structural gauges
+        assert!(bench
+            .path(&["metrics", "histograms", "serve_request_us", "count"])
+            .and_then(|v| v.as_u64())
+            .is_some_and(|n| n > 0));
+        assert!(bench.path(&["metrics", "gauges", "serve_flight_deduped"]).is_some());
     }
 
     #[test]
     fn self_test_smoke_passes_on_the_fast_tier() {
-        let r = self_test(&Params::default(), 2, true, KernelKind::Fast).unwrap();
+        let r =
+            self_test(&Params::default(), 2, true, KernelKind::Fast, &Tracer::disabled())
+                .unwrap();
         assert_eq!(r.misses, 3);
         assert_eq!(r.hits, (r.clients * r.repeats * 3) as u64);
         assert_eq!(r.deduped, r.herd_clients as u64 - 1);

@@ -41,6 +41,7 @@ use crate::dse::{point_key, GridAxes, SweepSpec};
 use crate::mac::{KernelKind, Variant};
 use crate::montecarlo::Corner;
 use crate::nn::{InferOptions, ModelSpec};
+use crate::obs::{MetricsRegistry, Tracer};
 use crate::params::Params;
 use crate::report;
 use crate::util::json::{self, Value};
@@ -121,6 +122,8 @@ pub struct Pipeline {
     batch: Coalescer,
     gate: Arc<Gate>,
     stats: Arc<ServeStats>,
+    registry: Arc<MetricsRegistry>,
+    tracer: Tracer,
 }
 
 impl Pipeline {
@@ -138,6 +141,7 @@ impl Pipeline {
     ) -> std::io::Result<Self> {
         let gate = Arc::new(Gate::new());
         let stats = Arc::new(ServeStats::new());
+        let registry = Arc::new(MetricsRegistry::new());
         let disk = match cache_dir {
             Some(dir) => Some(DiskTier::open(dir)?),
             None => None,
@@ -147,10 +151,67 @@ impl Pipeline {
             cache: ResultCache::new(cache_cap, cache_shards),
             disk,
             flight: SingleFlight::new(),
-            batch: Coalescer::new(params, batch_max, Arc::clone(&gate), Arc::clone(&stats)),
+            batch: Coalescer::new(
+                params,
+                batch_max,
+                Arc::clone(&gate),
+                Arc::clone(&stats),
+                registry.histogram("serve_batch_group_size"),
+            ),
             gate,
             stats,
+            registry,
+            tracer: Tracer::disabled(),
         })
+    }
+
+    /// Install the request tracer (per-request spans). Called before the
+    /// pipeline is shared; the default is the inert [`Tracer::disabled`].
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// The request tracer (inert unless `--trace`/`SMART_TRACE` set one).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// The metrics registry behind `GET /v1/metrics` (request latency
+    /// and batch group-size histograms natively; structural gauges
+    /// mirrored at scrape time by [`Pipeline::sync_metrics`]).
+    pub fn registry(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
+    }
+
+    /// Mirror the pipeline's structural counters (cache occupancy and
+    /// traffic, disk tier, flight map, coalescer queue) into registry
+    /// gauges so one registry export carries the whole serving picture.
+    /// Values move monotonically or both ways depending on the source;
+    /// they are exposed uniformly as gauges because they are *read* here,
+    /// not owned here.
+    pub fn sync_metrics(&self) {
+        let g = |name: &str, v: u64| self.registry.gauge(name).set(v);
+        g("serve_cache_entries", self.cache.len() as u64);
+        g("serve_cache_bytes", self.cache.bytes() as u64);
+        g("serve_cache_hits", self.cache.hits());
+        g("serve_cache_misses", self.cache.misses());
+        g("serve_cache_evictions", self.cache.evictions());
+        g("serve_flight_leads", self.flight.leads());
+        g("serve_flight_deduped", self.flight.deduped());
+        g("serve_flight_waiting", self.flight.waiting());
+        g("serve_batch_batched", self.batch.batched());
+        g("serve_batch_groups", self.batch.groups());
+        g("serve_batch_queued", self.batch.queued());
+        g("serve_campaigns", self.stats.campaigns.get());
+        g("serve_busy_us", self.stats.busy_us.get());
+        if let Some(d) = &self.disk {
+            g("serve_disk_hits", d.hits());
+            g("serve_disk_misses", d.misses());
+            g("serve_disk_writes", d.writes());
+            g("serve_disk_bytes_written", d.bytes_written());
+            g("serve_disk_rejects", d.rejects());
+            g("serve_disk_warm_entries", d.warm_entries());
+        }
     }
 
     /// The server's model card.
@@ -235,10 +296,15 @@ pub fn handle_conn(pipe: &Pipeline, req: &Request, conn: ParkedConn) -> Fetched 
 fn route(pipe: &Pipeline, req: &Request, conn: Option<ParkedConn>) -> Fetched {
     let prepared = match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/v1/health") => return Fetched::Done(Routed::plain(health()), conn),
+        ("GET", "/v1/metrics") => return Fetched::Done(Routed::plain(metrics(pipe)), conn),
         ("POST", "/v1/mc") => mc(pipe, &req.body),
         ("POST", "/v1/sweep/point") => sweep_point(pipe, &req.body),
         ("POST", "/v1/infer") => infer(pipe, &req.body),
-        (_, "/v1/health" | "/v1/mc" | "/v1/sweep/point" | "/v1/infer" | "/v1/stats") => {
+        (
+            _,
+            "/v1/health" | "/v1/metrics" | "/v1/mc" | "/v1/sweep/point" | "/v1/infer"
+            | "/v1/stats",
+        ) => {
             return Fetched::Done(
                 Routed::plain(Response::error(405, "method not allowed")),
                 conn,
@@ -252,6 +318,18 @@ fn route(pipe: &Pipeline, req: &Request, conn: Option<ParkedConn>) -> Fetched {
         Ok(p) => fetch(pipe, p, conn),
         Err(e) => Fetched::Done(Routed::plain(Response::error(e.status, &e.msg)), conn),
     }
+}
+
+/// `GET /v1/metrics`: Prometheus text exposition of the pipeline's
+/// registry (the machine-readable sibling of the JSON `GET /v1/stats`).
+/// Structural gauges are refreshed at scrape time; the latency and
+/// group-size histograms accumulate natively in the registry.
+fn metrics(pipe: &Pipeline) -> Response {
+    pipe.sync_metrics();
+    let mut resp = Response::ok(pipe.registry().prometheus());
+    resp.headers
+        .push(("Content-Type".to_string(), "text/plain; version=0.0.4".to_string()));
+    resp
 }
 
 /// `GET /v1/health`: liveness probe.
@@ -558,6 +636,28 @@ mod tests {
         assert_eq!(handle(&p, &req("GET", "/nope", "")).response.status, 404);
         assert_eq!(handle(&p, &req("GET", "/v1/mc", "")).response.status, 405);
         assert_eq!(handle(&p, &req("POST", "/v1/health", "")).response.status, 405);
+        assert_eq!(handle(&p, &req("POST", "/v1/metrics", "")).response.status, 405);
+    }
+
+    #[test]
+    fn metrics_endpoint_exposes_the_registry_as_prometheus_text() {
+        let p = pipe();
+        let body = r#"{"variant": "smart", "n_mc": 8,
+                       "workload": {"kind": "fixed", "a": 15, "b": 15}}"#;
+        assert_eq!(handle(&p, &req("POST", "/v1/mc", body)).response.status, 200);
+        let r = handle(&p, &req("GET", "/v1/metrics", ""));
+        assert_eq!(r.response.status, 200);
+        assert!(r.cache.is_none());
+        assert!(r
+            .response
+            .headers
+            .iter()
+            .any(|(k, v)| k == "Content-Type" && v.starts_with("text/plain")));
+        let text = &*r.response.body;
+        assert!(text.contains("# TYPE serve_cache_misses gauge"));
+        assert!(text.contains("serve_campaigns 1"));
+        assert!(text.contains("# TYPE serve_batch_group_size histogram"));
+        assert!(text.contains("serve_batch_group_size_count 0"));
     }
 
     #[test]

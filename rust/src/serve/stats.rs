@@ -1,57 +1,23 @@
 //! Saturating service counters and uptime for `/v1/stats`.
 //!
-//! Every monotonic counter the service exposes goes through [`Monotonic`],
-//! which saturates at `u64::MAX` instead of wrapping.  A fleet-scale
-//! deployment can legitimately run for months; a wrapped counter would
-//! read as a *reset* to a dashboard and trip rate alarms, while a
-//! saturated one merely stops moving — the safer failure.  None of these
-//! values ever enter result bytes (DESIGN.md §9): they are observability
-//! only, which is also why the wall-clock reads below carry reasoned
-//! `lint:allow(D6)` pragmas instead of being banned outright.
+//! The counter type itself now lives in [`crate::obs::registry`] — the
+//! serve layer was its first customer and the obs layer generalized it
+//! for the whole stack — so [`Monotonic`] is a re-export kept for the
+//! existing call sites (`flight`, `disk`, `batch`, `router`).  It
+//! saturates at `u64::MAX` instead of wrapping: a fleet-scale deployment
+//! can legitimately run for months, and a wrapped counter would read as
+//! a *reset* to a dashboard and trip rate alarms, while a saturated one
+//! merely stops moving — the safer failure.  None of these values ever
+//! enter result bytes (DESIGN.md §9): they are observability only, which
+//! is also why the uptime clock below is an [`obs::Stopwatch`] rather
+//! than a raw `Instant` (lint rule D7 quarantines `std::time` inside
+//! `obs::`).
+//!
+//! [`obs::Stopwatch`]: crate::obs::Stopwatch
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
+pub use crate::obs::Counter as Monotonic;
 
-/// A monotonic, saturating `u64` counter safe for concurrent use.
-///
-/// `add`/`incr` never wrap: once the counter reaches `u64::MAX` it stays
-/// there.  Loads are `Relaxed` — stats are a snapshot, not a fence.
-#[derive(Debug)]
-pub struct Monotonic(AtomicU64);
-
-impl Monotonic {
-    /// A fresh counter at zero.
-    pub const fn new() -> Self {
-        Monotonic(AtomicU64::new(0))
-    }
-
-    /// Add `n`, saturating at `u64::MAX` instead of wrapping.
-    pub fn add(&self, n: u64) {
-        // fetch_update with a total function never fails, but the trait
-        // signature still returns Result; ignore the witness value.
-        let _ = self
-            .0
-            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
-                Some(v.saturating_add(n))
-            });
-    }
-
-    /// Add one, saturating.
-    pub fn incr(&self) {
-        self.add(1);
-    }
-
-    /// Current value (relaxed snapshot).
-    pub fn get(&self) -> u64 {
-        self.0.load(Ordering::Relaxed)
-    }
-}
-
-impl Default for Monotonic {
-    fn default() -> Self {
-        Monotonic::new()
-    }
-}
+use crate::obs::Stopwatch;
 
 /// Request-level counters plus the service start instant.
 ///
@@ -59,7 +25,7 @@ impl Default for Monotonic {
 /// interior-mutable so the struct itself can live behind a plain `Arc`.
 #[derive(Debug)]
 pub struct ServeStats {
-    started: Instant,
+    started: Stopwatch,
     /// Total connections answered (any status).
     pub requests: Monotonic,
     /// Responses with status >= 400, plus handler panics.
@@ -75,8 +41,7 @@ impl ServeStats {
     /// Fresh counters anchored at the current instant.
     pub fn new() -> Self {
         ServeStats {
-            // lint:allow(D6): start instant feeds /v1/stats uptime only, never artifact bytes
-            started: Instant::now(),
+            started: Stopwatch::start(),
             requests: Monotonic::new(),
             errors: Monotonic::new(),
             busy_us: Monotonic::new(),
@@ -92,7 +57,7 @@ impl ServeStats {
     /// Microseconds since the service started (feeds the legacy
     /// `uptime_us` stats field).
     pub fn uptime_us(&self) -> u64 {
-        self.started.elapsed().as_micros() as u64
+        self.started.elapsed_us()
     }
 }
 

@@ -284,26 +284,68 @@ pub fn to_string_pretty(v: &Value) -> String {
     s
 }
 
+/// Serialize as one compact line, no whitespace (JSONL trace records).
+/// Number/string/escape rendering is identical to [`to_string_pretty`],
+/// so the two forms parse back to the same [`Value`].
+pub fn to_string_compact(v: &Value) -> String {
+    let mut s = String::new();
+    write_compact(v, &mut s);
+    s
+}
+
+fn write_num(n: f64, out: &mut String) {
+    // -0.0 == 0.0 numerically but renders with a sign; normalize so
+    // artifacts and cache keys never diverge on sign-of-zero (the
+    // same rule as report::canon_zero)
+    let n = if n == 0.0 { 0.0 } else { n };
+    if !n.is_finite() {
+        // JSON has no NaN/Infinity literal; emitting one would
+        // produce a document parse() itself rejects
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
+        // lint:allow(D3): fract() == 0 and |n| < 1e15 make the i64 conversion exact
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_compact(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(n) => write_num(*n, out),
+        Value::Str(s) => write_string(s, out),
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_compact(item, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(m) => {
+            out.push('{');
+            for (i, (k, val)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_compact(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
 fn write_value(v: &Value, indent: usize, out: &mut String) {
     match v {
         Value::Null => out.push_str("null"),
         Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-        Value::Num(n) => {
-            // -0.0 == 0.0 numerically but renders with a sign; normalize so
-            // artifacts and cache keys never diverge on sign-of-zero (the
-            // same rule as report::canon_zero)
-            let n = if *n == 0.0 { 0.0 } else { *n };
-            if !n.is_finite() {
-                // JSON has no NaN/Infinity literal; emitting one would
-                // produce a document parse() itself rejects
-                out.push_str("null");
-            } else if n.fract() == 0.0 && n.abs() < 1e15 {
-                // lint:allow(D3): fract() == 0 and |n| < 1e15 make the i64 conversion exact
-                out.push_str(&format!("{}", n as i64));
-            } else {
-                out.push_str(&format!("{n}"));
-            }
-        }
+        Value::Num(n) => write_num(*n, out),
         Value::Str(s) => write_string(s, out),
         Value::Arr(a) => {
             if a.is_empty() {
@@ -446,5 +488,18 @@ mod tests {
         let v = Value::Str("a\"b\\c\nd".into());
         let text = to_string_pretty(&v);
         assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn compact_is_one_line_and_roundtrips_like_pretty() {
+        let v = parse(r#"{"b": [1, 2.5, true], "a": {"x": "y\n"}, "e": [], "n": null}"#).unwrap();
+        let compact = to_string_compact(&v);
+        assert!(!compact.contains('\n') && !compact.contains(' '), "{compact}");
+        assert_eq!(parse(&compact).unwrap(), v);
+        assert_eq!(parse(&compact).unwrap(), parse(&to_string_pretty(&v)).unwrap());
+        // same number normalization as the pretty writer
+        assert_eq!(to_string_compact(&Value::Num(-0.0)), "0");
+        assert_eq!(to_string_compact(&Value::Num(f64::NAN)), "null");
+        assert_eq!(to_string_compact(&Value::Arr(vec![Value::Num(2.0)])), "[2]");
     }
 }

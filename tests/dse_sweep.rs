@@ -45,6 +45,7 @@ fn shard_thread_block_choices_never_change_artifacts() {
             out_dir: base_dir,
             block: 0,
             kernel: smart_insram::mac::KernelKind::Block,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -63,6 +64,7 @@ fn shard_thread_block_choices_never_change_artifacts() {
                 resume: false,
                 out_dir: dir,
                 kernel: smart_insram::mac::KernelKind::Block,
+                ..Default::default()
             },
         )
         .unwrap();

@@ -7,58 +7,67 @@ use std::path::Path;
 
 use smart_insram::lint::{self, lint_source, LintConfig, Rule};
 
-/// One triggering fixture per rule: `(rule, source, line of the hit)`.
-/// Each source produces EXACTLY one finding, on the stated line.
-fn fixtures() -> Vec<(Rule, &'static str, u32)> {
+/// One triggering fixture per rule: `(rule, lint path, source, line of
+/// the hit)`. Each source produces EXACTLY one finding, on the stated
+/// line. The D6 fixture is scanned under an `obs/` path so the D7
+/// quarantine (which bans the `Instant` ident everywhere else) does not
+/// add a second finding; D7 has its own import-only fixture that D6
+/// (which needs a `::now()` / `SystemTime::` *read*) stays silent on.
+fn fixtures() -> Vec<(Rule, &'static str, &'static str, u32)> {
     vec![
         (
             Rule::MapIteration,
+            "fixture.rs",
             "fn f() -> u32 {\n    let m: std::collections::HashMap<u32, u32> = Default::default();\n    let mut total = 0u32;\n    for v in m.values() {\n        total += v;\n    }\n    total\n}\n",
             4,
         ),
         (
             Rule::FloatAccum,
+            "fixture.rs",
             "fn f(xs: &[f64]) -> f64 {\n    let mut acc = 0.0;\n    for x in xs {\n        acc += x;\n    }\n    acc\n}\n",
             4,
         ),
-        (Rule::NarrowingCast, "fn parse_count(n: u64) -> u32 {\n    n as u32\n}\n", 2),
-        (Rule::PanicPath, "fn f(o: Option<u8>) -> u8 {\n    o.unwrap()\n}\n", 2),
+        (Rule::NarrowingCast, "fixture.rs", "fn parse_count(n: u64) -> u32 {\n    n as u32\n}\n", 2),
+        (Rule::PanicPath, "fixture.rs", "fn f(o: Option<u8>) -> u8 {\n    o.unwrap()\n}\n", 2),
         (
             Rule::FloatFormat,
+            "fixture.rs",
             "fn show(x: f64) -> String {\n    format!(\"{x:.3}\")\n}\n",
             2,
         ),
         (
             Rule::WallClock,
+            "rust/src/obs/fixture.rs",
             "fn f() -> std::time::Instant {\n    std::time::Instant::now()\n}\n",
             2,
         ),
+        (Rule::TimeQuarantine, "fixture.rs", "use std::time::SystemTime;\nfn f() {}\n", 1),
     ]
 }
 
 #[test]
 fn every_rule_fires_on_its_fixture() {
     let cfg = LintConfig::default();
-    for (rule, src, line) in fixtures() {
-        let fs = lint_source("fixture.rs", src, &cfg);
+    for (rule, path, src, line) in fixtures() {
+        let fs = lint_source(path, src, &cfg);
         assert_eq!(fs.len(), 1, "{}: expected one finding, got {fs:?}", rule.id());
         assert_eq!(fs[0].rule, rule, "{}: wrong rule: {fs:?}", rule.id());
         assert_eq!(fs[0].line, line, "{}: wrong line: {fs:?}", rule.id());
         assert!(fs[0].suppressed.is_none(), "{}: should be open", rule.id());
-        assert_eq!(fs[0].location(), format!("fixture.rs:{line}"));
+        assert_eq!(fs[0].location(), format!("{path}:{line}"));
     }
 }
 
 #[test]
 fn a_reasoned_pragma_suppresses_each_rule_without_d0_noise() {
     let cfg = LintConfig::default();
-    for (rule, src, line) in fixtures() {
+    for (rule, path, src, line) in fixtures() {
         // splice `// lint:allow(Dn): reason` directly above the hit line
         let mut lines: Vec<&str> = src.lines().collect();
         let pragma = format!("// lint:allow({}): fixture justification", rule.id());
         lines.insert(line as usize - 1, &pragma);
         let patched = lines.join("\n");
-        let fs = lint_source("fixture.rs", &patched, &cfg);
+        let fs = lint_source(path, &patched, &cfg);
         assert_eq!(fs.len(), 1, "{}: {fs:?}", rule.id());
         assert_eq!(
             fs[0].suppressed.as_deref(),

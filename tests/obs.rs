@@ -1,0 +1,357 @@
+//! Observability-layer integration tests (DESIGN.md §15). The
+//! load-bearing contract: tracing is **provably inert** — every
+//! canonical artifact family (mc.json, sweep CSV/JSON, infer.json,
+//! served HTTP bodies) is byte-identical with tracing on or off, for
+//! any shards/threads/block shape and kernel tier. Plus the JSONL trace
+//! schema itself, the log2 histogram boundaries, and the PROFILE.json
+//! golden from a committed fixture trace.
+
+use std::path::PathBuf;
+
+use smart_insram::coordinator::{run_campaign_traced, Backend, CampaignSpec};
+use smart_insram::mac::{KernelKind, Variant};
+use smart_insram::obs::registry::{bucket_bound, bucket_index};
+use smart_insram::obs::{profile_trace, Histogram, Tracer};
+use smart_insram::params::Params;
+use smart_insram::report::mc_json;
+use smart_insram::util::json::{parse, to_string_pretty, Value};
+
+/// Self-cleaning temp dir per test.
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(tag: &str) -> Scratch {
+        let dir =
+            std::env::temp_dir().join(format!("smart-obs-it-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        Scratch(dir)
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        self.0.join(name)
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn read(p: &PathBuf) -> String {
+    std::fs::read_to_string(p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+/// Validate one trace file against the schema contract: line 1 is the
+/// `meta` record (version 1, the given cmd); every `span` has a 16-hex
+/// id, a name, integer `start_us`/`dur_us`, and a parent that is null
+/// or another span's id; every `counters` record has `at_us` and a
+/// `metrics` object. Returns the span records for extra assertions.
+fn check_trace_schema(text: &str, cmd: &str) -> Vec<Value> {
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(!lines.is_empty(), "trace is empty");
+    let meta = parse(lines[0]).unwrap();
+    assert_eq!(meta.get("type").unwrap().as_str(), Some("meta"), "{}", lines[0]);
+    assert_eq!(meta.get("version").unwrap().as_u64(), Some(1));
+    assert_eq!(meta.get("cmd").unwrap().as_str(), Some(cmd));
+
+    let is_hex16 =
+        |s: &str| s.len() == 16 && s.bytes().all(|b| b.is_ascii_hexdigit());
+    let mut ids = std::collections::BTreeSet::new();
+    let mut spans = Vec::new();
+    for line in &lines[1..] {
+        let rec = parse(line).unwrap_or_else(|e| panic!("unparseable trace line: {e}\n{line}"));
+        match rec.get("type").and_then(Value::as_str) {
+            Some("span") => {
+                let id = rec.get("id").unwrap().as_str().unwrap().to_string();
+                assert!(is_hex16(&id), "bad span id: {line}");
+                assert!(ids.insert(id), "duplicate span id: {line}");
+                assert!(rec.get("name").unwrap().as_str().is_some(), "{line}");
+                assert!(rec.get("start_us").unwrap().as_u64().is_some(), "{line}");
+                assert!(rec.get("dur_us").unwrap().as_u64().is_some(), "{line}");
+                match rec.get("parent").unwrap() {
+                    Value::Null => {}
+                    Value::Str(p) => assert!(is_hex16(p), "bad parent id: {line}"),
+                    other => panic!("parent must be null or hex: {other:?}"),
+                }
+                spans.push(rec);
+            }
+            Some("counters") => {
+                assert!(rec.get("at_us").unwrap().as_u64().is_some(), "{line}");
+                assert!(matches!(rec.get("metrics"), Some(Value::Obj(_))), "{line}");
+            }
+            Some("meta") => panic!("meta must appear exactly once, first: {line}"),
+            other => panic!("unknown record type {other:?}: {line}"),
+        }
+    }
+    // every non-null parent refers to a span in the same trace
+    for s in &spans {
+        if let Some(Value::Str(p)) = s.get("parent") {
+            assert!(ids.contains(p.as_str()), "dangling parent {p}");
+        }
+    }
+    spans
+}
+
+fn fig8_spec(n_mc: u32, shards: usize, threads: usize, block: usize, k: KernelKind) -> CampaignSpec {
+    let mut spec = CampaignSpec::paper_fig8(Variant::Smart);
+    spec.n_mc = n_mc;
+    spec.shards = shards;
+    spec.workers = threads;
+    spec.block = block;
+    spec.kernel = k;
+    spec
+}
+
+#[test]
+fn tracing_is_inert_for_mc_artifacts_across_shapes_and_kernels() {
+    let scratch = Scratch::new("mc");
+    let params = Params::default();
+    for (i, (shards, threads, block, kernel)) in [
+        (1usize, 1usize, 0usize, KernelKind::Block),
+        (3, 2, 7, KernelKind::Block),
+        (2, 2, 5, KernelKind::Scalar),
+        (2, 1, 0, KernelKind::Fast),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let spec = fig8_spec(16, shards, threads, block, kernel);
+        let quiet =
+            run_campaign_traced(&params, &spec, Backend::Native, None, &Tracer::disabled())
+                .unwrap();
+        let trace_path = scratch.path(&format!("mc-{i}.jsonl"));
+        let tracer = Tracer::to_file(&trace_path, "mc").unwrap();
+        let traced = run_campaign_traced(&params, &spec, Backend::Native, None, &tracer).unwrap();
+        assert_eq!(
+            mc_json(&spec, &quiet),
+            mc_json(&spec, &traced),
+            "tracing changed mc.json bytes at shape {shards}/{threads}/{block} {kernel:?}"
+        );
+        // ... and the trace it wrote is schema-valid with campaign + shard spans
+        let spans = check_trace_schema(&read(&trace_path), "mc");
+        let names: Vec<&str> =
+            spans.iter().filter_map(|s| s.get("name").and_then(Value::as_str)).collect();
+        assert!(names.contains(&"campaign"), "{names:?}");
+        assert!(names.contains(&"shard"), "{names:?}");
+        assert!(names.contains(&"worker"), "{names:?}");
+    }
+}
+
+#[test]
+fn tracing_is_inert_for_sweep_artifacts() {
+    use smart_insram::dse::{run_sweep, SweepOptions, SweepSpec};
+    let spec_toml = r#"
+name = "obs-test"
+seed = 7
+n_mc = 8
+[grid]
+variant = ["smart", "aid"]
+v_bulk = [0.0, 0.6]
+bits = [2]
+corner = ["tt"]
+"#;
+    let scratch = Scratch::new("sweep");
+    let spec = SweepSpec::parse(spec_toml).unwrap();
+    let quiet = run_sweep(
+        &spec,
+        &SweepOptions { out_dir: scratch.path("quiet"), ..Default::default() },
+    )
+    .unwrap();
+    let tracer = Tracer::to_file(&scratch.path("sweep.jsonl"), "sweep").unwrap();
+    let traced = run_sweep(
+        &spec,
+        &SweepOptions {
+            shards: 3,
+            threads: 2,
+            out_dir: scratch.path("traced"),
+            tracer,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(
+        read(&quiet.csv_path),
+        read(&traced.csv_path),
+        "tracing (or its shard shape) changed the sweep CSV bytes"
+    );
+    assert_eq!(read(&quiet.json_path), read(&traced.json_path));
+    let spans = check_trace_schema(&read(&scratch.path("sweep.jsonl")), "sweep");
+    let n_points = spans
+        .iter()
+        .filter(|s| s.get("name").and_then(Value::as_str) == Some("grid_point"))
+        .count();
+    assert_eq!(n_points, 4, "one grid_point span per grid point");
+}
+
+#[test]
+fn tracing_is_inert_for_infer_artifacts() {
+    use smart_insram::nn::{run_infer, InferOptions, ModelSpec};
+    let body = r#"{"name": "obs-it", "seed": 11, "trials": 4, "bits": 4,
+                   "dataset": {"classes": 3, "features": 6, "jitter": 0.1},
+                   "layers": [{"inputs": 6, "outputs": 4, "relu": true},
+                              {"inputs": 4, "outputs": 3}]}"#;
+    let spec = ModelSpec::from_value(&parse(body).unwrap()).unwrap();
+    let scratch = Scratch::new("infer");
+    run_infer(
+        &Params::default(),
+        &spec,
+        &InferOptions {
+            write_artifacts: true,
+            out_dir: scratch.path("quiet"),
+            ..InferOptions::default()
+        },
+    )
+    .unwrap();
+    let tracer = Tracer::to_file(&scratch.path("infer.jsonl"), "infer").unwrap();
+    run_infer(
+        &Params::default(),
+        &spec,
+        &InferOptions {
+            write_artifacts: true,
+            out_dir: scratch.path("traced"),
+            shards: 3,
+            threads: 2,
+            tracer,
+            ..InferOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(
+        read(&scratch.path("quiet").join("infer.json")),
+        read(&scratch.path("traced").join("infer.json")),
+        "tracing (or its shard shape) changed the infer.json bytes"
+    );
+    let spans = check_trace_schema(&read(&scratch.path("infer.jsonl")), "infer");
+    assert!(spans
+        .iter()
+        .any(|s| s.get("name").and_then(Value::as_str) == Some("infer")));
+    assert!(spans
+        .iter()
+        .any(|s| s.get("name").and_then(Value::as_str) == Some("trial_block")));
+}
+
+#[test]
+fn tracing_is_inert_for_served_bodies() {
+    use smart_insram::serve::{http_request, ServeOptions, Server};
+    let scratch = Scratch::new("serve");
+    let body = r#"{"variant": "smart", "n_mc": 8,
+                   "workload": {"kind": "fixed", "a": 15, "b": 15}}"#;
+    let serve_once = |tracer: Tracer| {
+        let mut server = Server::start(
+            Params::default(),
+            &ServeOptions {
+                addr: "127.0.0.1:0".to_string(),
+                workers: 2,
+                tracer,
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        let (status, _, got) =
+            http_request(&server.addr().to_string(), "POST", "/v1/mc", body).unwrap();
+        assert_eq!(status, 200, "{got}");
+        server.stop();
+        got
+    };
+    let quiet = serve_once(Tracer::disabled());
+    let trace_path = scratch.path("serve.jsonl");
+    let traced = serve_once(Tracer::to_file(&trace_path, "serve").unwrap());
+    assert_eq!(quiet, traced, "tracing changed a served response body");
+    let spans = check_trace_schema(&read(&trace_path), "serve");
+    let request = spans
+        .iter()
+        .find(|s| s.get("name").and_then(Value::as_str) == Some("request"))
+        .expect("serve trace has request spans");
+    let attrs = request.get("attrs").unwrap();
+    assert_eq!(attrs.get("method").unwrap().as_str(), Some("POST"));
+    assert_eq!(attrs.get("path").unwrap().as_str(), Some("/v1/mc"));
+    assert_eq!(attrs.get("status").unwrap().as_u64(), Some(200));
+}
+
+#[test]
+fn histogram_buckets_are_log2_with_inclusive_bounds() {
+    // bucket i covers [2^i, 2^(i+1) - 1], bucket 0 also takes 0
+    assert_eq!(bucket_index(0), 0);
+    assert_eq!(bucket_index(1), 0);
+    assert_eq!(bucket_index(2), 1);
+    assert_eq!(bucket_index(3), 1);
+    assert_eq!(bucket_index(4), 2);
+    assert_eq!(bucket_bound(0), 1);
+    assert_eq!(bucket_bound(1), 3);
+    assert_eq!(bucket_bound(2), 7);
+    assert_eq!(bucket_bound(63), u64::MAX);
+    // boundary values land on their own side of the edge
+    for exp in 1..63u32 {
+        let edge = 1u64 << exp;
+        assert_eq!(bucket_index(edge), exp as usize, "2^{exp} opens its bucket");
+        assert_eq!(bucket_index(edge - 1), exp as usize - 1, "2^{exp}-1 closes the previous");
+        assert_eq!(bucket_bound(exp as usize - 1), edge - 1);
+    }
+    let h = Histogram::new();
+    for v in [0u64, 1, 2, 3, 4, 255, 256] {
+        h.record(v);
+    }
+    assert_eq!(h.count(), 7);
+    assert_eq!(h.sum(), 521);
+    assert_eq!(h.bucket(0), 2); // 0, 1
+    assert_eq!(h.bucket(1), 2); // 2, 3
+    assert_eq!(h.bucket(2), 1); // 4
+    assert_eq!(h.bucket(7), 1); // 255
+    assert_eq!(h.bucket(8), 1); // 256
+    // quantiles report the inclusive upper bound of the landing bucket
+    assert_eq!(h.quantile(50.0), 3);
+    assert_eq!(h.quantile(100.0), 511);
+}
+
+#[test]
+fn profile_of_committed_fixture_matches_the_golden() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let trace = std::fs::read_to_string(root.join("tests/fixtures/trace_profile.jsonl"))
+        .expect("committed fixture trace");
+    let golden = std::fs::read_to_string(root.join("tests/fixtures/PROFILE_golden.json"))
+        .expect("committed golden profile");
+    let profile = profile_trace(&trace).expect("fixture profiles cleanly");
+    let mut text = to_string_pretty(&profile);
+    text.push('\n');
+    assert_eq!(text, golden, "PROFILE.json drifted from the committed golden");
+    // folding is a pure function of the trace text
+    let again = profile_trace(&trace).unwrap();
+    assert_eq!(to_string_pretty(&again), to_string_pretty(&profile));
+}
+
+#[test]
+fn profile_cli_writes_profile_json_for_a_traced_mc_run() {
+    let scratch = Scratch::new("cli");
+    let trace_path = scratch.path("trace.jsonl");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_smart"))
+        .args([
+            "mc", "--native", "--n-mc", "8", "--shards", "2",
+            "--trace", trace_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    check_trace_schema(&read(&trace_path), "mc");
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_smart"))
+        .args(["profile", trace_path.to_str().unwrap(), "--out", scratch.0.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let profile = parse(&read(&scratch.path("PROFILE.json"))).unwrap();
+    assert!(profile.get("records").unwrap().as_u64().unwrap() > 0);
+    assert!(profile.path(&["phases", "campaign", "count"]).is_some());
+    assert_eq!(profile.path(&["shards", "n"]).unwrap().as_u64(), Some(2));
+
+    // SMART_TRACE env var names the same sink as --trace
+    let env_trace = scratch.path("env.jsonl");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_smart"))
+        .args(["mc", "--native", "--n-mc", "8"])
+        .env("SMART_TRACE", env_trace.to_str().unwrap())
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    check_trace_schema(&read(&env_trace), "mc");
+}

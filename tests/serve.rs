@@ -443,3 +443,36 @@ fn graceful_shutdown_finishes_in_flight_requests() {
     assert_eq!(status, 200);
     again.stop();
 }
+
+#[test]
+fn metrics_endpoint_serves_prometheus_text_and_tracks_requests() {
+    let mut server = start_server(2);
+    let addr = server.addr().to_string();
+    let body = r#"{"variant": "smart", "n_mc": 8,
+                   "workload": {"kind": "fixed", "a": 15, "b": 15}}"#;
+    let (status, _, _) = http_request(&addr, "POST", "/v1/mc", body).unwrap();
+    assert_eq!(status, 200);
+    let (status, headers, text) = http_request(&addr, "GET", "/v1/metrics", "").unwrap();
+    assert_eq!(status, 200, "{text}");
+    assert!(
+        headers
+            .iter()
+            .any(|(k, v)| k == "Content-Type" && v.starts_with("text/plain")),
+        "metrics must be Prometheus text, not JSON: {headers:?}"
+    );
+    assert!(
+        !headers.iter().any(|(k, _)| k == "X-Smart-Cache"),
+        "a metrics scrape is not a cacheable campaign: {headers:?}"
+    );
+    // native metrics: the request histogram saw both requests above
+    assert!(text.contains("# TYPE serve_request_us histogram"), "{text}");
+    assert!(text.contains("serve_request_us_count"), "{text}");
+    assert!(text.contains("serve_responses_total"), "{text}");
+    // mirrored pipeline gauges: one campaign ran, one cache miss
+    assert!(text.contains("serve_campaigns 1"), "{text}");
+    assert!(text.contains("# TYPE serve_cache_misses gauge"), "{text}");
+    // the scrape itself is registered by the time a second scrape reads it
+    let (_, _, again) = http_request(&addr, "GET", "/v1/metrics", "").unwrap();
+    assert!(again.contains("serve_responses_total"), "{again}");
+    server.stop();
+}
