@@ -72,6 +72,7 @@ pub fn execute_sharded_traced<R, F, S>(
                 span.attr_u64("worker", worker as u64);
                 let mut claimed = 0u64;
                 loop {
+                    // lint:allow(L2): ticket dispenser — the pre-increment value is the claimed shard index, bounded by n_shards
                     let shard = next_shard.fetch_add(1, Ordering::Relaxed);
                     if shard >= n_shards || tx.send((shard, run_shard(shard))).is_err() {
                         break;

@@ -92,7 +92,7 @@ impl EnergyModel {
         let t_sense = self.k_sense / dv_full_scale.max(1e-3);
         let t_iface = match cfg.variant {
             Variant::Imac => self.t_iface_linear,
-            _ => self.t_iface_sqrt,
+            Variant::Smart | Variant::Aid | Variant::SmartOnImac => self.t_iface_sqrt,
         };
         self.t_precharge + cfg.t_sample + t_sense + t_iface
     }

@@ -1,0 +1,890 @@
+//! Structure recovery over the lexed token stream (DESIGN.md §16).
+//!
+//! The token-level passes of [`super::rules`] deliberately know nothing
+//! about nesting; the structural rule families (`L1`–`L5`) need more:
+//! which function a lock is acquired in, which *block* a guard binding
+//! lives in, which arms a `match` has, and what a call expression's
+//! callee path is. This module recovers exactly that much shape — a
+//! hand-rolled, dependency-free recursive-descent pass that turns the
+//! [`Lexed`] stream into items (`fn`/`impl`/`enum`/`mod`/`use`),
+//! function bodies as block trees, match expressions with their arms,
+//! and per-statement token spans for the linear scans the rules still
+//! do.
+//!
+//! The parser is an *approximation* of the Rust grammar, tuned the same
+//! way as the lexer: it must never panic, never diverge, and never
+//! misattribute scope in the patterns this repository actually uses
+//! (guards bound in nested block expressions, `match` scrutinees that
+//! acquire locks, struct patterns in arms). Constructs it does not
+//! model — e.g. expressions in const generics — degrade to plain
+//! statement tokens, which no structural rule matches.
+
+use super::lexer::{Lexed, Tok, Token};
+
+/// One parsed source file: every function (flattened, with its module
+/// and `impl` context recorded on the declaration), every enum, and
+/// every `use` leaf.
+#[derive(Debug, Clone, Default)]
+pub struct Ast {
+    /// All function declarations, in source order. Functions nested in
+    /// `impl`/`trait`/`mod` blocks carry that context in
+    /// [`FnDecl::owner`] / [`FnDecl::mods`].
+    pub fns: Vec<FnDecl>,
+    /// All enum declarations, in source order.
+    pub enums: Vec<EnumDecl>,
+    /// All `use` declaration leaves (grouped trees are expanded).
+    pub uses: Vec<UseDecl>,
+}
+
+/// A function declaration with its recovered body.
+#[derive(Debug, Clone)]
+pub struct FnDecl {
+    /// The function's own name.
+    pub name: String,
+    /// Enclosing `impl`/`trait` type, when the function is associated.
+    pub owner: Option<String>,
+    /// Inline `mod` path within the file (outermost first).
+    pub mods: Vec<String>,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// Parameter names recovered from the signature (`self` excluded;
+    /// destructuring patterns yield nothing).
+    pub params: Vec<String>,
+    /// Token-index span `[start, end)` of the signature — from the `fn`
+    /// keyword to the body's opening brace (or terminating `;`).
+    pub sig: (usize, usize),
+    /// The body block; empty for bodyless declarations (trait methods).
+    pub body: Block,
+    /// True when the function (or an enclosing item) is test-only
+    /// (`#[test]` / `#[cfg(test)]`).
+    pub test: bool,
+}
+
+/// A `{ ... }` block: an ordered list of statements.
+#[derive(Debug, Clone, Default)]
+pub struct Block {
+    /// Statements in source order.
+    pub stmts: Vec<Stmt>,
+}
+
+/// One statement (or block-tail expression): the tokens at its own
+/// nesting level plus any nested blocks / match expressions, in source
+/// order.
+#[derive(Debug, Clone)]
+pub struct Stmt {
+    /// 1-based line the statement starts on.
+    pub line: u32,
+    /// `Some(name)` for `let name = ...` / `let mut name = ...`
+    /// bindings; `None` for destructuring patterns and non-`let`
+    /// statements.
+    pub let_name: Option<String>,
+    /// Indices (into the file's token stream) of the tokens that sit at
+    /// this statement's own nesting level — nested brace contents are
+    /// excluded and appear in [`Stmt::subs`] instead.
+    pub head: Vec<usize>,
+    /// Nested blocks and match expressions, in source order.
+    pub subs: Vec<Sub>,
+}
+
+/// A nested unit inside a statement.
+#[derive(Debug, Clone)]
+pub enum Sub {
+    /// A nested `{ ... }` block (if/else bodies, loop bodies, closures,
+    /// block expressions; struct literals degrade to this harmlessly).
+    Block(Block),
+    /// A `match` expression with its arms.
+    Match(MatchExpr),
+}
+
+/// A recovered `match` expression.
+#[derive(Debug, Clone)]
+pub struct MatchExpr {
+    /// 1-based line of the `match` keyword.
+    pub line: u32,
+    /// Token indices of the scrutinee expression (between `match` and
+    /// the opening brace), at the statement's nesting level.
+    pub scrutinee: Vec<usize>,
+    /// The arms, in source order.
+    pub arms: Vec<Arm>,
+}
+
+/// One `pat (if guard)? => body` match arm.
+#[derive(Debug, Clone)]
+pub struct Arm {
+    /// 1-based line the pattern starts on.
+    pub line: u32,
+    /// Token indices of the pattern (guard excluded).
+    pub pat: Vec<usize>,
+    /// True when the arm carries an `if` guard.
+    pub guarded: bool,
+    /// The arm body as a block (expression bodies become a one-statement
+    /// block).
+    pub body: Block,
+}
+
+/// An enum declaration.
+#[derive(Debug, Clone)]
+pub struct EnumDecl {
+    /// The enum's name.
+    pub name: String,
+    /// Inline `mod` path within the file.
+    pub mods: Vec<String>,
+    /// 1-based line of the `enum` keyword.
+    pub line: u32,
+    /// Variant names, in declaration order.
+    pub variants: Vec<String>,
+    /// True when declared in test-only code.
+    pub test: bool,
+}
+
+/// One `use` declaration leaf: `use a::b::{c as d}` yields
+/// `segs = ["a", "b", "c"], alias = "d"`.
+#[derive(Debug, Clone)]
+pub struct UseDecl {
+    /// Full path segments of the imported item.
+    pub segs: Vec<String>,
+    /// The name the item is visible under locally (the last segment, or
+    /// the `as` rename).
+    pub alias: String,
+    /// 1-based line of the `use` keyword.
+    pub line: u32,
+}
+
+/// Parse one lexed file. Never fails: unmodeled constructs degrade to
+/// plain statement tokens.
+pub fn parse(lexed: &Lexed) -> Ast {
+    let mut p = Parser { t: &lexed.tokens, out: Ast::default() };
+    let end = p.t.len();
+    let ctx = Ctx { mods: Vec::new(), owner: None, test: false };
+    p.items(0, end, &ctx);
+    p.out
+}
+
+/// Item-walk context: where in the module/impl tree we are.
+struct Ctx {
+    mods: Vec<String>,
+    owner: Option<String>,
+    test: bool,
+}
+
+struct Parser<'a> {
+    t: &'a [Token],
+    out: Ast,
+}
+
+impl<'a> Parser<'a> {
+    fn ident(&self, i: usize) -> Option<&'a str> {
+        match self.t.get(i).map(|t| &t.tok) {
+            Some(Tok::Ident(s)) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    fn punct(&self, i: usize, op: &str) -> bool {
+        matches!(self.t.get(i).map(|t| &t.tok), Some(Tok::Punct(p)) if p == op)
+    }
+
+    fn line(&self, i: usize) -> u32 {
+        self.t.get(i).map(|t| t.line).unwrap_or(0)
+    }
+
+    /// Index of the delimiter matching `t[open]`; `end` if unbalanced.
+    fn close_of(&self, open: usize, end: usize, open_d: &str, close_d: &str) -> usize {
+        let mut depth = 0usize;
+        let mut i = open;
+        while i < end {
+            if self.punct(i, open_d) {
+                depth += 1;
+            } else if self.punct(i, close_d) {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return i;
+                }
+            }
+            i += 1;
+        }
+        end
+    }
+
+    /// Skip a generics list starting at `<`; returns the index just
+    /// past the matching `>`. Understands the shifted `>>`/`<<` tokens.
+    fn skip_generics(&self, mut i: usize, end: usize) -> usize {
+        if !self.punct(i, "<") {
+            return i;
+        }
+        let mut depth = 0i32;
+        while i < end {
+            match self.t.get(i).map(|t| &t.tok) {
+                Some(Tok::Punct(p)) if p == "<" => depth += 1,
+                Some(Tok::Punct(p)) if p == "<<" => depth += 2,
+                Some(Tok::Punct(p)) if p == ">" => depth -= 1,
+                Some(Tok::Punct(p)) if p == ">>" => depth -= 2,
+                _ => {}
+            }
+            i += 1;
+            if depth <= 0 {
+                break;
+            }
+        }
+        i
+    }
+
+    /// Walk items in `[i, end)`.
+    fn items(&mut self, mut i: usize, end: usize, ctx: &Ctx) {
+        while i < end {
+            i = self.item(i, end, ctx);
+        }
+    }
+
+    /// Parse one item (or skip one token) starting at `i`; returns the
+    /// index to continue from.
+    fn item(&mut self, mut i: usize, end: usize, ctx: &Ctx) -> usize {
+        let mut test = ctx.test;
+        // Attributes: `#[...]` may mark the next item test-only;
+        // `#![...]` inner attributes are skipped outright.
+        while self.punct(i, "#") {
+            let open = if self.punct(i + 1, "!") { i + 2 } else { i + 1 };
+            if !self.punct(open, "[") {
+                return i + 1;
+            }
+            let close = self.close_of(open, end, "[", "]");
+            if open == i + 1 {
+                test = test || self.attr_is_test(open + 1, close);
+            }
+            i = close + 1;
+        }
+        // Visibility and qualifier keywords before the item keyword.
+        loop {
+            match self.ident(i) {
+                Some("pub") => {
+                    i += 1;
+                    if self.punct(i, "(") {
+                        i = self.close_of(i, end, "(", ")") + 1;
+                    }
+                }
+                Some("unsafe" | "async" | "default") => i += 1,
+                Some("extern") => {
+                    i += 1;
+                    if matches!(self.t.get(i).map(|t| &t.tok), Some(Tok::Str(_))) {
+                        i += 1;
+                    }
+                }
+                _ => break,
+            }
+        }
+        match self.ident(i) {
+            Some("mod") => self.item_mod(i, end, ctx, test),
+            Some("fn") => self.item_fn(i, end, ctx, test),
+            Some("enum") => self.item_enum(i, end, ctx, test),
+            Some("use") => self.item_use(i, end),
+            Some("impl") => self.item_impl(i, end, ctx, test),
+            Some("trait") => self.item_trait(i, end, ctx, test),
+            Some("struct" | "union") => self.skip_struct(i, end),
+            Some("const" | "static" | "type") => self.skip_to_semi(i, end),
+            Some("macro_rules") => self.skip_macro(i, end),
+            _ => i + 1,
+        }
+    }
+
+    /// Does the attribute body `[start, end)` spell `test` or a
+    /// `cfg(...)` whose arguments mention `test` without leading `not`?
+    fn attr_is_test(&self, start: usize, close: usize) -> bool {
+        if close <= start {
+            return false;
+        }
+        if close - start == 1 {
+            return self.ident(start) == Some("test");
+        }
+        if self.ident(start) == Some("cfg") && self.punct(start + 1, "(") {
+            let args: Vec<&str> = (start + 2..close).filter_map(|k| self.ident(k)).collect();
+            return args.first() != Some(&"not") && args.contains(&"test");
+        }
+        false
+    }
+
+    fn item_mod(&mut self, i: usize, end: usize, ctx: &Ctx, test: bool) -> usize {
+        let Some(name) = self.ident(i + 1) else { return i + 1 };
+        if self.punct(i + 2, "{") {
+            let close = self.close_of(i + 2, end, "{", "}");
+            let mut mods = ctx.mods.clone();
+            mods.push(name.to_string());
+            let inner = Ctx { mods, owner: None, test };
+            self.items(i + 3, close, &inner);
+            close + 1
+        } else {
+            // `mod name;` — an out-of-line module, its file is scanned
+            // separately.
+            i + 2
+        }
+    }
+
+    fn item_fn(&mut self, i: usize, end: usize, ctx: &Ctx, test: bool) -> usize {
+        let Some(name) = self.ident(i + 1) else { return i + 1 };
+        let mut j = self.skip_generics(i + 2, end);
+        if !self.punct(j, "(") {
+            return i + 2;
+        }
+        let params_close = self.close_of(j, end, "(", ")");
+        let params = self.param_names(j + 1, params_close);
+        // Scan the rest of the signature (return type, where clause) to
+        // the body `{` or a terminating `;`.
+        j = params_close + 1;
+        let mut body_open = None;
+        while j < end {
+            if self.punct(j, "{") {
+                body_open = Some(j);
+                break;
+            }
+            if self.punct(j, ";") {
+                break;
+            }
+            j += 1;
+        }
+        let (sig_end, body, next) = match body_open {
+            Some(open) => {
+                let close = self.close_of(open, end, "{", "}");
+                (open, self.block(open, close), close + 1)
+            }
+            None => (j, Block::default(), j + 1),
+        };
+        self.out.fns.push(FnDecl {
+            name: name.to_string(),
+            owner: ctx.owner.clone(),
+            mods: ctx.mods.clone(),
+            line: self.line(i),
+            params,
+            sig: (i, sig_end),
+            body,
+            test,
+        });
+        next
+    }
+
+    /// Parameter names in `[lo, hi)` (inside the signature parens):
+    /// idents at paren depth 0 directly followed by `:`, preceded by
+    /// `(`-start, `,`, or `mut`.
+    fn param_names(&self, lo: usize, hi: usize) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut depth = 0i32;
+        for k in lo..hi {
+            match self.t.get(k).map(|t| &t.tok) {
+                Some(Tok::Punct(p)) if p == "(" || p == "[" || p == "<" => depth += 1,
+                Some(Tok::Punct(p)) if p == ")" || p == "]" || p == ">" => depth -= 1,
+                Some(Tok::Ident(s)) if depth == 0 && s != "self" => {
+                    let prev_ok = k == lo
+                        || self.punct(k - 1, ",")
+                        || self.ident(k - 1) == Some("mut");
+                    if prev_ok && self.punct(k + 1, ":") {
+                        out.push(s.clone());
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    fn item_enum(&mut self, i: usize, end: usize, ctx: &Ctx, test: bool) -> usize {
+        let Some(name) = self.ident(i + 1) else { return i + 1 };
+        let mut j = self.skip_generics(i + 2, end);
+        while j < end && !self.punct(j, "{") && !self.punct(j, ";") {
+            j += 1;
+        }
+        if !self.punct(j, "{") {
+            return j + 1;
+        }
+        let close = self.close_of(j, end, "{", "}");
+        let mut variants = Vec::new();
+        let mut k = j + 1;
+        let mut entry_start = true;
+        let mut depth = 0i32;
+        while k < close {
+            if depth == 0 {
+                // skip variant attributes (`#[default]`)
+                if entry_start && self.punct(k, "#") && self.punct(k + 1, "[") {
+                    k = self.close_of(k + 1, close, "[", "]") + 1;
+                    continue;
+                }
+                if entry_start {
+                    if let Some(v) = self.ident(k) {
+                        variants.push(v.to_string());
+                        entry_start = false;
+                    }
+                }
+                if self.punct(k, ",") {
+                    entry_start = true;
+                }
+            }
+            match self.t.get(k).map(|t| &t.tok) {
+                Some(Tok::Punct(p)) if p == "(" || p == "[" || p == "{" => depth += 1,
+                Some(Tok::Punct(p)) if p == ")" || p == "]" || p == "}" => depth -= 1,
+                _ => {}
+            }
+            k += 1;
+        }
+        self.out.enums.push(EnumDecl {
+            name: name.to_string(),
+            mods: ctx.mods.clone(),
+            line: self.line(i),
+            variants,
+            test,
+        });
+        close + 1
+    }
+
+    fn item_use(&mut self, i: usize, end: usize) -> usize {
+        let line = self.line(i);
+        let mut semi = i + 1;
+        while semi < end && !self.punct(semi, ";") {
+            semi += 1;
+        }
+        let mut leaves = Vec::new();
+        self.use_tree(i + 1, semi, &mut Vec::new(), &mut leaves);
+        for (segs, alias) in leaves {
+            self.out.uses.push(UseDecl { segs, alias, line });
+        }
+        semi + 1
+    }
+
+    /// Expand a use tree in `[lo, hi)` under `prefix`, appending
+    /// `(segments, alias)` leaves.
+    fn use_tree(
+        &self,
+        lo: usize,
+        hi: usize,
+        prefix: &mut Vec<String>,
+        out: &mut Vec<(Vec<String>, String)>,
+    ) {
+        let base = prefix.len();
+        let mut i = lo;
+        let mut flush = |prefix: &Vec<String>, alias: Option<String>| {
+            if let Some(last) = prefix.last() {
+                let alias = alias.unwrap_or_else(|| last.clone());
+                if alias != "_" {
+                    out.push((prefix.clone(), alias));
+                }
+            }
+        };
+        while i < hi {
+            match self.t.get(i).map(|t| &t.tok) {
+                Some(Tok::Ident(s)) if s == "as" => {
+                    let alias = self.ident(i + 1).map(str::to_string);
+                    flush(prefix, alias);
+                    prefix.truncate(base);
+                    i += 2;
+                }
+                Some(Tok::Ident(s)) => {
+                    prefix.push(s.clone());
+                    i += 1;
+                }
+                Some(Tok::Punct(p)) if p == "{" => {
+                    let close = self.close_of(i, hi, "{", "}");
+                    // each comma-separated subtree at depth 0
+                    let mut part = i + 1;
+                    let mut k = i + 1;
+                    let mut depth = 0i32;
+                    while k <= close {
+                        let at_comma = depth == 0 && self.punct(k, ",");
+                        if at_comma || k == close {
+                            if part < k {
+                                let mut sub = prefix.clone();
+                                self.use_tree(part, k, &mut sub, out);
+                            }
+                            part = k + 1;
+                        }
+                        match self.t.get(k).map(|t| &t.tok) {
+                            Some(Tok::Punct(p)) if p == "{" => depth += 1,
+                            Some(Tok::Punct(p)) if p == "}" => depth -= 1,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    prefix.truncate(base);
+                    return;
+                }
+                Some(Tok::Punct(p)) if p == "*" => {
+                    // glob import: not resolvable, drop
+                    prefix.truncate(base);
+                    return;
+                }
+                Some(Tok::Punct(p)) if p == "," => {
+                    flush(prefix, None);
+                    prefix.truncate(base);
+                    i += 1;
+                }
+                _ => i += 1, // `::` and anything else
+            }
+        }
+        if prefix.len() > base {
+            flush(prefix, None);
+        }
+        prefix.truncate(base);
+    }
+
+    fn item_impl(&mut self, i: usize, end: usize, ctx: &Ctx, test: bool) -> usize {
+        let mut j = self.skip_generics(i + 1, end);
+        // head tokens up to the body `{`
+        let mut head_start = j;
+        while j < end && !self.punct(j, "{") && !self.punct(j, ";") {
+            // skip generics attached to path segments (`Foo<T>`)
+            if self.punct(j, "<") {
+                j = self.skip_generics(j, end);
+            } else {
+                j += 1;
+            }
+        }
+        if !self.punct(j, "{") {
+            return j + 1;
+        }
+        // `impl Trait for Type` — the implementing type follows the
+        // last `for`; otherwise the head is the type path itself.
+        for k in head_start..j {
+            if self.ident(k) == Some("for") {
+                head_start = k + 1;
+            }
+        }
+        let mut ty = None;
+        for k in head_start..j {
+            if let Some(s) = self.ident(k) {
+                if s != "where" && s != "dyn" && s != "mut" {
+                    ty = Some(s.to_string());
+                    // the first path segment may be a module: prefer the
+                    // last segment of a leading `a::b::C` path
+                    let mut m = k;
+                    while self.punct(m + 1, "::") && self.ident(m + 2).is_some() {
+                        m += 2;
+                    }
+                    if let Some(last) = self.ident(m) {
+                        ty = Some(last.to_string());
+                    }
+                    break;
+                }
+            }
+        }
+        let close = self.close_of(j, end, "{", "}");
+        let inner = Ctx { mods: ctx.mods.clone(), owner: ty, test };
+        self.items(j + 1, close, &inner);
+        close + 1
+    }
+
+    fn item_trait(&mut self, i: usize, end: usize, ctx: &Ctx, test: bool) -> usize {
+        let Some(name) = self.ident(i + 1) else { return i + 1 };
+        let mut j = i + 2;
+        while j < end && !self.punct(j, "{") && !self.punct(j, ";") {
+            j += 1;
+        }
+        if !self.punct(j, "{") {
+            return j + 1;
+        }
+        let close = self.close_of(j, end, "{", "}");
+        let inner = Ctx { mods: ctx.mods.clone(), owner: Some(name.to_string()), test };
+        self.items(j + 1, close, &inner);
+        close + 1
+    }
+
+    fn skip_struct(&mut self, i: usize, end: usize) -> usize {
+        let mut j = i + 1;
+        while j < end {
+            if self.punct(j, "{") {
+                return self.close_of(j, end, "{", "}") + 1;
+            }
+            if self.punct(j, ";") {
+                return j + 1;
+            }
+            j += 1;
+        }
+        end
+    }
+
+    fn skip_to_semi(&mut self, i: usize, end: usize) -> usize {
+        let mut j = i + 1;
+        let mut depth = 0i32;
+        while j < end {
+            match self.t.get(j).map(|t| &t.tok) {
+                Some(Tok::Punct(p)) if p == "(" || p == "[" || p == "{" => depth += 1,
+                Some(Tok::Punct(p)) if p == ")" || p == "]" || p == "}" => depth -= 1,
+                Some(Tok::Punct(p)) if p == ";" && depth <= 0 => return j + 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        end
+    }
+
+    fn skip_macro(&mut self, i: usize, end: usize) -> usize {
+        let mut j = i + 1;
+        while j < end && !self.punct(j, "{") {
+            j += 1;
+        }
+        if self.punct(j, "{") {
+            self.close_of(j, end, "{", "}") + 1
+        } else {
+            j + 1
+        }
+    }
+
+    /// Parse the block `t[open] == '{'` .. `t[close] == '}'`.
+    fn block(&mut self, open: usize, close: usize) -> Block {
+        Block { stmts: self.stmts(open + 1, close) }
+    }
+
+    /// Split `[lo, hi)` into statements, recursing into nested braces.
+    fn stmts(&mut self, lo: usize, hi: usize) -> Vec<Stmt> {
+        let mut out = Vec::new();
+        let mut i = lo;
+        while i < hi {
+            let line = self.line(i);
+            let let_name = self.let_binding(i);
+            let mut head: Vec<usize> = Vec::new();
+            let mut subs: Vec<Sub> = Vec::new();
+            // position (in `head`) of the latest un-consumed `match`
+            let mut match_kw: Option<usize> = None;
+            let mut pdepth = 0i32;
+            while i < hi {
+                if self.punct(i, "{") {
+                    let close = self.close_of(i, hi, "{", "}");
+                    if let Some(kw) = match_kw.take() {
+                        let scrutinee: Vec<usize> = head[kw + 1..].to_vec();
+                        head.truncate(kw + 1);
+                        let mline = self.line(head[kw]);
+                        let arms = self.arms(i, close);
+                        subs.push(Sub::Match(MatchExpr { line: mline, scrutinee, arms }));
+                    } else {
+                        let b = self.block(i, close);
+                        subs.push(Sub::Block(b));
+                    }
+                    i = close + 1;
+                    if pdepth > 0 {
+                        continue; // closure/block inside parens: same stmt
+                    }
+                    // `} else {`, `}.method()`, `}?` continue the
+                    // statement; anything else ends it.
+                    let continues = self.ident(i) == Some("else")
+                        || self.punct(i, ".")
+                        || self.punct(i, "?");
+                    if continues {
+                        continue;
+                    }
+                    break;
+                }
+                if self.punct(i, ";") && pdepth <= 0 {
+                    i += 1;
+                    break;
+                }
+                if self.ident(i) == Some("match") {
+                    match_kw = Some(head.len());
+                }
+                match self.t.get(i).map(|t| &t.tok) {
+                    Some(Tok::Punct(p)) if p == "(" || p == "[" => pdepth += 1,
+                    Some(Tok::Punct(p)) if p == ")" || p == "]" => pdepth -= 1,
+                    _ => {}
+                }
+                head.push(i);
+                i += 1;
+            }
+            if !head.is_empty() || !subs.is_empty() {
+                out.push(Stmt { line, let_name, head, subs });
+            }
+        }
+        out
+    }
+
+    /// `Some(name)` when the statement at `i` is `let [mut] name ...`
+    /// with a plain identifier pattern.
+    fn let_binding(&self, i: usize) -> Option<String> {
+        if self.ident(i) != Some("let") {
+            return None;
+        }
+        let mut j = i + 1;
+        if self.ident(j) == Some("mut") {
+            j += 1;
+        }
+        let name = self.ident(j)?;
+        // a plain binding is followed by `:` or `=`; `Some(x)` / tuple
+        // patterns are not bindings of `name`
+        if self.punct(j + 1, ":") || self.punct(j + 1, "=") {
+            Some(name.to_string())
+        } else {
+            None
+        }
+    }
+
+    /// Parse the arms of a match whose braces are `t[open]`/`t[close]`.
+    fn arms(&mut self, open: usize, close: usize) -> Vec<Arm> {
+        let mut out = Vec::new();
+        let mut i = open + 1;
+        while i < close {
+            let line = self.line(i);
+            // pattern: tokens to `=>` at depth 0; an `if` at depth 0
+            // starts a guard
+            let mut pat: Vec<usize> = Vec::new();
+            let mut guarded = false;
+            let mut depth = 0i32;
+            while i < close && !(depth <= 0 && self.punct(i, "=>")) {
+                match self.t.get(i).map(|t| &t.tok) {
+                    Some(Tok::Punct(p)) if p == "(" || p == "[" || p == "{" => depth += 1,
+                    Some(Tok::Punct(p)) if p == ")" || p == "]" || p == "}" => depth -= 1,
+                    _ => {}
+                }
+                if depth <= 0 && self.ident(i) == Some("if") {
+                    guarded = true;
+                }
+                if !guarded {
+                    pat.push(i);
+                }
+                i += 1;
+            }
+            if i >= close {
+                break;
+            }
+            i += 1; // past `=>`
+            let body = if self.punct(i, "{") {
+                let bclose = self.close_of(i, close, "{", "}");
+                let b = self.block(i, bclose);
+                i = bclose + 1;
+                if self.punct(i, ",") {
+                    i += 1;
+                }
+                b
+            } else {
+                // expression body: to `,` at depth 0 or the match close
+                let lo = i;
+                let mut depth = 0i32;
+                while i < close && !(depth <= 0 && self.punct(i, ",")) {
+                    match self.t.get(i).map(|t| &t.tok) {
+                        Some(Tok::Punct(p)) if p == "(" || p == "[" || p == "{" => depth += 1,
+                        Some(Tok::Punct(p)) if p == ")" || p == "]" || p == "}" => depth -= 1,
+                        _ => {}
+                    }
+                    i += 1;
+                }
+                let b = Block { stmts: self.stmts(lo, i) };
+                if self.punct(i, ",") {
+                    i += 1;
+                }
+                b
+            };
+            if pat.is_empty() && body.stmts.is_empty() {
+                break;
+            }
+            out.push(Arm { line, pat, guarded, body });
+        }
+        out
+    }
+}
+
+/// Is the arm pattern a bare wildcard (`_`, optionally guarded)?
+pub fn arm_is_wildcard(toks: &[Token], arm: &Arm) -> bool {
+    let idents: Vec<&str> = arm
+        .pat
+        .iter()
+        .filter_map(|&k| match toks.get(k).map(|t| &t.tok) {
+            Some(Tok::Ident(s)) => Some(s.as_str()),
+            _ => None,
+        })
+        .collect();
+    idents == ["_"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn parse_src(src: &str) -> Ast {
+        parse(&lex(src))
+    }
+
+    #[test]
+    fn recovers_fns_impls_and_mods() {
+        let src = "mod outer {\n    impl Widget {\n        fn poke(&self, n: u32) -> u32 { n }\n    }\n    fn free() {}\n}\n";
+        let ast = parse_src(src);
+        assert_eq!(ast.fns.len(), 2);
+        assert_eq!(ast.fns[0].name, "poke");
+        assert_eq!(ast.fns[0].owner.as_deref(), Some("Widget"));
+        assert_eq!(ast.fns[0].mods, vec!["outer"]);
+        assert_eq!(ast.fns[0].params, vec!["n"]);
+        assert_eq!(ast.fns[1].name, "free");
+        assert_eq!(ast.fns[1].owner, None);
+    }
+
+    #[test]
+    fn trait_impls_attribute_methods_to_the_type() {
+        let src = "impl std::fmt::Display for Badge {\n    fn fmt(&self) {}\n}\n";
+        let ast = parse_src(src);
+        assert_eq!(ast.fns.len(), 1);
+        assert_eq!(ast.fns[0].owner.as_deref(), Some("Badge"));
+    }
+
+    #[test]
+    fn blocks_scope_statements() {
+        let src = "fn f() {\n    let a = { let g = acquire(); use_it(g) };\n    later(a);\n}\n";
+        let ast = parse_src(src);
+        let body = &ast.fns[0].body;
+        assert_eq!(body.stmts.len(), 2);
+        assert_eq!(body.stmts[0].let_name.as_deref(), Some("a"));
+        assert_eq!(body.stmts[0].subs.len(), 1);
+        let Sub::Block(inner) = &body.stmts[0].subs[0] else {
+            panic!("expected nested block");
+        };
+        assert_eq!(inner.stmts.len(), 2);
+        assert_eq!(inner.stmts[0].let_name.as_deref(), Some("g"));
+    }
+
+    #[test]
+    fn match_arms_are_recovered() {
+        let src = "fn f(k: Kind) -> u32 {\n    match k {\n        Kind::A => 1,\n        Kind::B { x } => x,\n        _ => 0,\n    }\n}\n";
+        let ast = parse_src(src);
+        let body = &ast.fns[0].body;
+        assert_eq!(body.stmts.len(), 1);
+        let Sub::Match(m) = &body.stmts[0].subs[0] else {
+            panic!("expected match");
+        };
+        assert_eq!(m.arms.len(), 3);
+        let lexed = lex(src);
+        assert!(!arm_is_wildcard(&lexed.tokens, &m.arms[0]));
+        assert!(!arm_is_wildcard(&lexed.tokens, &m.arms[1]));
+        assert!(arm_is_wildcard(&lexed.tokens, &m.arms[2]));
+        assert_eq!(m.arms[2].line, 5);
+    }
+
+    #[test]
+    fn use_trees_expand_with_aliases() {
+        let src = "use crate::util::json::{self, Value as V, parse};\nuse super::lexer::lex;\n";
+        let ast = parse_src(src);
+        let mut pairs: Vec<(String, String)> =
+            ast.uses.iter().map(|u| (u.alias.clone(), u.segs.join("::"))).collect();
+        pairs.sort();
+        assert!(pairs.contains(&("V".to_string(), "crate::util::json::Value".to_string())));
+        assert!(pairs.contains(&("parse".to_string(), "crate::util::json::parse".to_string())));
+        assert!(pairs.contains(&("lex".to_string(), "super::lexer::lex".to_string())));
+    }
+
+    #[test]
+    fn enums_list_variants() {
+        let src = "pub enum Kind {\n    #[default]\n    A,\n    B(u32),\n    C { x: u8 },\n}\n";
+        let ast = parse_src(src);
+        assert_eq!(ast.enums.len(), 1);
+        assert_eq!(ast.enums[0].variants, vec!["A", "B", "C"]);
+    }
+
+    #[test]
+    fn test_items_are_flagged() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\n#[test]\nfn t() {}\nfn live() {}\n";
+        let ast = parse_src(src);
+        let by_name = |n: &str| ast.fns.iter().find(|f| f.name == n).map(|f| f.test);
+        assert_eq!(by_name("helper"), Some(true));
+        assert_eq!(by_name("t"), Some(true));
+        assert_eq!(by_name("live"), Some(false));
+    }
+
+    #[test]
+    fn match_scrutinee_stays_in_head() {
+        let src = "fn f() {\n    let job = match q.lock() {\n        Ok(rx) => rx.recv(),\n        Err(_) => return,\n    };\n}\n";
+        let ast = parse_src(src);
+        let stmt = &ast.fns[0].body.stmts[0];
+        let Sub::Match(m) = &stmt.subs[0] else { panic!("expected match") };
+        assert_eq!(m.arms.len(), 2);
+        assert!(!m.scrutinee.is_empty());
+    }
+}

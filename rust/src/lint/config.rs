@@ -25,6 +25,10 @@ pub struct AllowEntry {
     pub path: String,
     /// Written justification — mandatory, like pragma reasons.
     pub reason: String,
+    /// 1-based line of the entry's `[[allow]]` header in the config
+    /// file — where an unused-waiver D0 finding points. `0` for entries
+    /// built programmatically.
+    pub line: u32,
 }
 
 /// Parsed lint configuration.
@@ -56,7 +60,14 @@ impl LintConfig {
             .with_context(|| format!("reading {}", path.display()))?;
         let doc = toml_lite::parse(&text)
             .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-        Self::from_value(&doc).with_context(|| format!("in {}", path.display()))
+        let mut cfg =
+            Self::from_value(&doc).with_context(|| format!("in {}", path.display()))?;
+        // `toml_lite` values carry no source positions; recover each
+        // entry's line from the raw text (headers appear in entry order).
+        for (entry, line) in cfg.allows.iter_mut().zip(allow_header_lines(&text)) {
+            entry.line = line;
+        }
+        Ok(cfg)
     }
 
     /// Build from a parsed TOML document:
@@ -106,7 +117,7 @@ impl LintConfig {
                     !reason.trim().is_empty(),
                     "[[allow]] #{idx}: reason must not be empty"
                 );
-                cfg.allows.push(AllowEntry { rule, path, reason });
+                cfg.allows.push(AllowEntry { rule, path, reason, line: 0 });
             }
         }
         Ok(cfg)
@@ -116,10 +127,28 @@ impl LintConfig {
     /// matching is exact or by `/`-separated suffix, so entries work
     /// regardless of the scan root.
     pub fn allow_for(&self, rule: Rule, path: &str) -> Option<&AllowEntry> {
-        self.allows.iter().find(|a| {
+        self.allow_index(rule, path).map(|(_, a)| a)
+    }
+
+    /// Like [`LintConfig::allow_for`], but also yields the entry's index
+    /// in [`LintConfig::allows`] — the analyzer tracks which waivers
+    /// actually suppressed something (D0 flags the rest as rotted).
+    pub fn allow_index(&self, rule: Rule, path: &str) -> Option<(usize, &AllowEntry)> {
+        self.allows.iter().enumerate().find(|(_, a)| {
             a.rule == rule && (path == a.path || path.ends_with(&format!("/{}", a.path)))
         })
     }
+}
+
+/// 1-based line numbers of `[[allow]]` headers in raw TOML text, in
+/// file order — zipped against the parsed entries to give each waiver a
+/// source position.
+fn allow_header_lines(text: &str) -> Vec<u32> {
+    text.lines()
+        .enumerate()
+        .filter(|(_, l)| l.trim() == "[[allow]]")
+        .map(|(i, _)| u32::try_from(i + 1).unwrap_or(u32::MAX))
+        .collect()
 }
 
 #[cfg(test)]
@@ -158,5 +187,22 @@ mod tests {
         assert!(parse("[[allow]]\nrule = \"D4\"\npath = \"x\"\n").is_err());
         assert!(parse("[[allow]]\nrule = \"D4\"\npath = \"x\"\nreason = \" \"\n").is_err());
         assert!(parse("[[allow]]\nrule = \"D0\"\npath = \"x\"\nreason = \"r\"\n").is_err());
+    }
+
+    #[test]
+    fn accepts_l_family_rules() {
+        let cfg =
+            parse("[[allow]]\nrule = \"L3\"\npath = \"x.rs\"\nreason = \"bounded index\"\n")
+                .unwrap();
+        assert_eq!(cfg.allows[0].rule, Rule::TaintedArith);
+    }
+
+    #[test]
+    fn allow_header_lines_locate_entries() {
+        let text = "[lint]\nroots = [\"rust/src\"]\n\n[[allow]]\nrule = \"D6\"\n\
+                    path = \"a.rs\"\nreason = \"r\"\n\n[[allow]]\nrule = \"D5\"\n\
+                    path = \"b.rs\"\nreason = \"r\"\n";
+        assert_eq!(allow_header_lines(text), vec![4, 9]);
+        assert!(allow_header_lines("roots = []\n").is_empty());
     }
 }

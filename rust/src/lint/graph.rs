@@ -1,0 +1,890 @@
+//! Crate-local symbol index, call graph, and lock-order analysis
+//! (DESIGN.md §16).
+//!
+//! [`build`] walks every parsed file ([`FileUnit`]), derives each
+//! function's canonical qualified name (`module::path::Type::method`,
+//! module path from the file's location under `rust/src/`), resolves
+//! call expressions against the crate's own declarations (same-module
+//! first, then `use` aliases — renames included — then unique
+//! method/free-fn names), and records per-function `Mutex`/`RwLock`
+//! acquisition sequences with their guard scopes. The result serves two
+//! consumers: the canonical `CALLGRAPH.json` artifact
+//! ([`Graph::to_json`]) and the `L1` lock-order pass ([`lock_order`]),
+//! which propagates lock sets inter-procedurally over the call graph and
+//! reports every cycle in the acquired-while-holding relation as a
+//! potential deadlock.
+//!
+//! Resolution is deliberately conservative: a call that cannot be
+//! attributed to exactly one crate-local function is dropped rather than
+//! guessed (common std method names are stop-listed), so false edges —
+//! which could manufacture phantom deadlock cycles — are rare by
+//! construction.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::ast::{Ast, Block, FnDecl, Stmt, Sub};
+use super::lexer::{Lexed, Tok, Token};
+use super::rules::RawFinding;
+use super::Rule;
+use crate::util::json::{to_string_pretty, Value};
+
+/// Schema version of the `CALLGRAPH.json` artifact.
+pub const CALLGRAPH_SCHEMA_VERSION: u32 = 1;
+
+/// One parsed source file, ready for cross-file analysis.
+#[derive(Debug, Clone)]
+pub struct FileUnit {
+    /// Repo-relative, `/`-separated display path.
+    pub path: String,
+    /// The lexed token stream (pragmas included).
+    pub lexed: Lexed,
+    /// The recovered structure.
+    pub ast: Ast,
+}
+
+impl FileUnit {
+    /// Lex and parse one source file.
+    pub fn new(path: &str, text: &str) -> FileUnit {
+        let lexed = super::lexer::lex(text);
+        let ast = super::ast::parse(&lexed);
+        FileUnit { path: path.to_string(), lexed, ast }
+    }
+}
+
+/// One function in the call graph.
+#[derive(Debug, Clone)]
+pub struct FnNode {
+    /// Canonical qualified name (`serve::batch::Coalescer::submit`).
+    pub qual: String,
+    /// File the function is declared in.
+    pub file: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// True for test-only functions (excluded from lock analysis).
+    pub test: bool,
+    /// Resolved crate-local call sites, in source order.
+    pub calls: Vec<CallSite>,
+    /// Direct lock acquisitions, in source order.
+    pub acquires: Vec<LockEvent>,
+    /// Intra-function lock-order edges (`acquired` taken while `held`).
+    pub edges: Vec<LockEdge>,
+}
+
+/// A resolved call expression.
+#[derive(Debug, Clone)]
+pub struct CallSite {
+    /// Qualified name of the callee.
+    pub callee: String,
+    /// 1-based line of the call.
+    pub line: u32,
+    /// Lock identities held at the call site (sorted, deduped).
+    pub held: Vec<String>,
+}
+
+/// A direct lock acquisition.
+#[derive(Debug, Clone)]
+pub struct LockEvent {
+    /// Lock identity — `Type.field` for `self.field.lock()`, a
+    /// function-scoped name otherwise.
+    pub lock: String,
+    /// 1-based line of the acquisition.
+    pub line: u32,
+}
+
+/// An acquired-while-holding pair observed inside one function.
+#[derive(Debug, Clone)]
+pub struct LockEdge {
+    /// The lock already held.
+    pub held: String,
+    /// The lock being acquired.
+    pub acquired: String,
+    /// 1-based line of the acquisition.
+    pub line: u32,
+}
+
+/// The crate call graph: every function, with resolved calls and lock
+/// events, sorted by qualified name.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    /// Function nodes, sorted by [`FnNode::qual`] (duplicates dropped,
+    /// first declaration wins).
+    pub fns: Vec<FnNode>,
+}
+
+/// Module path of a file under the crate root: `rust/src/serve/batch.rs`
+/// → `["serve", "batch"]`; `mod.rs`/`lib.rs` fold into the parent;
+/// `main.rs` keeps `main` so binary-only symbols stay distinct.
+pub fn module_path(path: &str) -> Vec<String> {
+    let p = path.strip_prefix("rust/src/").unwrap_or(path);
+    let p = p.strip_suffix(".rs").unwrap_or(p);
+    let mut segs: Vec<String> =
+        p.split('/').filter(|s| !s.is_empty()).map(str::to_string).collect();
+    if matches!(segs.last().map(String::as_str), Some("mod") | Some("lib")) {
+        segs.pop();
+    }
+    segs
+}
+
+/// Method names too generic to resolve by uniqueness: they collide with
+/// std/core inherent methods, so a lone crate-local definition must not
+/// capture every `.name()` call in the crate.
+const METHOD_STOPLIST: [&str; 64] = [
+    "abs", "all", "any", "as_bytes", "as_mut", "as_ref", "as_slice", "as_str", "borrow",
+    "borrow_mut", "clear", "clone", "cmp", "collect", "contains", "count", "default", "drain",
+    "entry", "eq", "extend", "filter", "find", "finish", "flush", "fmt", "fold", "get",
+    "get_mut", "hash", "insert", "into_iter", "is_empty", "iter", "join", "keys", "len",
+    "lines", "load", "map", "max", "min", "new", "next", "parse", "pop", "position", "push",
+    "read", "recv", "remove", "retain", "send", "sort", "split", "store", "sum", "swap",
+    "take", "to_owned", "to_string", "trim", "values", "wait", "write",
+];
+
+/// Control-flow keywords that can precede `(` without being calls.
+const CALL_KEYWORDS: [&str; 10] =
+    ["if", "else", "while", "for", "loop", "match", "return", "break", "continue", "in"];
+
+// ---------------------------------------------------------------------------
+// symbol index
+
+struct Index {
+    /// Every declared function's qualified name.
+    quals: BTreeSet<String>,
+    /// Free functions by bare name.
+    free: BTreeMap<String, BTreeSet<String>>,
+    /// Methods by `(bare type name, method name)`.
+    methods: BTreeMap<(String, String), BTreeSet<String>>,
+    /// Methods by bare name (for unique-method fallback).
+    by_method: BTreeMap<String, BTreeSet<String>>,
+}
+
+/// The qualified name of a declared function.
+fn fn_qual(mod_path: &[String], f: &FnDecl) -> String {
+    let mut segs: Vec<&str> = mod_path.iter().map(String::as_str).collect();
+    segs.extend(f.mods.iter().map(String::as_str));
+    if let Some(owner) = &f.owner {
+        segs.push(owner);
+    }
+    segs.push(&f.name);
+    segs.join("::")
+}
+
+fn build_index(units: &[FileUnit]) -> Index {
+    let mut idx = Index {
+        quals: BTreeSet::new(),
+        free: BTreeMap::new(),
+        methods: BTreeMap::new(),
+        by_method: BTreeMap::new(),
+    };
+    for u in units {
+        let mod_path = module_path(&u.path);
+        for f in &u.ast.fns {
+            let qual = fn_qual(&mod_path, f);
+            idx.quals.insert(qual.clone());
+            match &f.owner {
+                None => {
+                    idx.free.entry(f.name.clone()).or_default().insert(qual);
+                }
+                Some(ty) => {
+                    idx.methods
+                        .entry((ty.clone(), f.name.clone()))
+                        .or_default()
+                        .insert(qual.clone());
+                    idx.by_method.entry(f.name.clone()).or_default().insert(qual);
+                }
+            }
+        }
+    }
+    idx
+}
+
+// ---------------------------------------------------------------------------
+// per-file resolution environment
+
+struct FileEnv<'a> {
+    mod_path: Vec<String>,
+    /// `use` alias → crate-normalized full path segments.
+    uses: BTreeMap<String, Vec<String>>,
+    idx: &'a Index,
+}
+
+impl<'a> FileEnv<'a> {
+    fn new(u: &FileUnit, idx: &'a Index) -> FileEnv<'a> {
+        let mod_path = module_path(&u.path);
+        let mut uses = BTreeMap::new();
+        for decl in &u.ast.uses {
+            let segs = normalize(&decl.segs, &mod_path);
+            if !segs.is_empty() {
+                uses.insert(decl.alias.clone(), segs);
+            }
+        }
+        FileEnv { mod_path, uses, idx }
+    }
+
+    /// Resolve a call path (`["helper"]`, `["spec", "from_value"]`,
+    /// `["Self", "finish"]`) to a declared function's qualified name.
+    fn resolve_path(&self, segs: &[String], owner_prefix: Option<&str>) -> Option<String> {
+        if segs.is_empty() {
+            return None;
+        }
+        if segs[0] == "Self" {
+            let prefix = owner_prefix?;
+            if segs.len() == 2 {
+                let cand = format!("{prefix}::{}", segs[1]);
+                if self.idx.quals.contains(&cand) {
+                    return Some(cand);
+                }
+            }
+            return None;
+        }
+        // expand a leading `use` alias, then crate-normalize
+        let mut full: Vec<String> = match self.uses.get(&segs[0]) {
+            Some(exp) => exp.iter().chain(segs.iter().skip(1)).cloned().collect(),
+            None => segs.to_vec(),
+        };
+        full = normalize(&full, &self.mod_path);
+        if full.is_empty() {
+            return None;
+        }
+        if full.len() == 1 {
+            let name = &full[0];
+            // same module first
+            let mut cand: Vec<String> = self.mod_path.clone();
+            cand.push(name.clone());
+            let cand = cand.join("::");
+            if self.idx.quals.contains(&cand) {
+                return Some(cand);
+            }
+            // unique free fn anywhere in the crate
+            return unique(self.idx.free.get(name));
+        }
+        let cand = full.join("::");
+        if self.idx.quals.contains(&cand) {
+            return Some(cand);
+        }
+        // `Type::method(...)` — resolve by the (type, method) pair
+        let ty = &full[full.len() - 2];
+        let name = &full[full.len() - 1];
+        unique(self.idx.methods.get(&(ty.clone(), name.clone())))
+    }
+
+    /// Resolve a method call `recv.name(...)`: via the impl owner for
+    /// `self.name()`, else by crate-wide uniqueness (stop-listed names
+    /// excluded).
+    fn resolve_method(
+        &self,
+        name: &str,
+        recv_is_self: bool,
+        owner_prefix: Option<&str>,
+    ) -> Option<String> {
+        if recv_is_self {
+            let prefix = owner_prefix?;
+            let cand = format!("{prefix}::{name}");
+            if self.idx.quals.contains(&cand) {
+                return Some(cand);
+            }
+            return None;
+        }
+        if METHOD_STOPLIST.contains(&name) {
+            return None;
+        }
+        unique(self.idx.by_method.get(name))
+    }
+}
+
+fn unique(set: Option<&BTreeSet<String>>) -> Option<String> {
+    match set {
+        Some(s) if s.len() == 1 => s.iter().next().cloned(),
+        _ => None,
+    }
+}
+
+/// Crate-normalize a path: strip `crate`/the crate name, expand
+/// `self`/`super` against the file's module path. External paths are
+/// returned as-is (they simply never match the index).
+fn normalize(segs: &[String], mod_path: &[String]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    let mut i = 0;
+    match segs.first().map(String::as_str) {
+        Some("crate") | Some("smart_insram") => i = 1,
+        Some("self") => {
+            out.extend(mod_path.iter().cloned());
+            i = 1;
+        }
+        Some("super") => {
+            let mut parent = mod_path.to_vec();
+            while i < segs.len() && segs[i] == "super" {
+                parent.pop();
+                i += 1;
+            }
+            out.extend(parent);
+        }
+        _ => {}
+    }
+    out.extend(segs.iter().skip(i).cloned());
+    out
+}
+
+// ---------------------------------------------------------------------------
+// function-body walk: lock events + call sites
+
+struct HeldLock {
+    id: String,
+    binding: Option<String>,
+}
+
+struct Walker<'a> {
+    toks: &'a [Token],
+    env: &'a FileEnv<'a>,
+    /// Qualified prefix of the enclosing impl (`serve::cache::Lru`).
+    owner_prefix: Option<String>,
+    fn_qual: String,
+    held: Vec<HeldLock>,
+    calls: Vec<CallSite>,
+    acquires: Vec<LockEvent>,
+    edges: Vec<LockEdge>,
+}
+
+impl<'a> Walker<'a> {
+    fn ident(&self, i: usize) -> Option<&'a str> {
+        match self.toks.get(i).map(|t| &t.tok) {
+            Some(Tok::Ident(s)) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    fn punct(&self, i: usize, op: &str) -> bool {
+        matches!(self.toks.get(i).map(|t| &t.tok), Some(Tok::Punct(p)) if p == op)
+    }
+
+    fn line(&self, i: usize) -> u32 {
+        self.toks.get(i).map(|t| t.line).unwrap_or(0)
+    }
+
+    fn walk_block(&mut self, b: &Block) {
+        let base = self.held.len();
+        for stmt in &b.stmts {
+            self.walk_stmt(stmt);
+        }
+        self.held.truncate(base);
+    }
+
+    fn walk_stmt(&mut self, s: &Stmt) {
+        let stmt_base = self.held.len();
+        self.scan_span(&s.head, s.let_name.as_deref());
+        for sub in &s.subs {
+            match sub {
+                Sub::Block(b) => self.walk_block(b),
+                Sub::Match(m) => {
+                    // a scrutinee temporary guard lives for the whole match
+                    let mbase = self.held.len();
+                    self.scan_span(&m.scrutinee, None);
+                    for arm in &m.arms {
+                        self.walk_block(&arm.body);
+                    }
+                    self.held.truncate(mbase);
+                }
+            }
+        }
+        // statement end: unbound guard temporaries die; `let`-bound
+        // guards live to the end of the enclosing block
+        let kept: Vec<HeldLock> =
+            self.held.drain(stmt_base..).filter(|h| h.binding.is_some()).collect();
+        self.held.extend(kept);
+    }
+
+    /// Scan one span of statement-level tokens for lock acquisitions,
+    /// releases, and call expressions.
+    fn scan_span(&mut self, idx: &[usize], let_name: Option<&str>) {
+        for &k in idx {
+            // `drop(guard)` releases a bound guard
+            if self.ident(k) == Some("drop") && self.punct(k + 1, "(") && self.punct(k + 3, ")")
+            {
+                if let Some(name) = self.ident(k + 2) {
+                    self.held.retain(|h| h.binding.as_deref() != Some(name));
+                }
+                continue;
+            }
+            // `recv.lock()` / zero-arg `recv.read()` / `recv.write()`
+            if self.punct(k, ".")
+                && self
+                    .ident(k + 1)
+                    .is_some_and(|m| m == "lock" || m == "read" || m == "write")
+                && self.punct(k + 2, "(")
+                && self.punct(k + 3, ")")
+            {
+                let id = self.receiver_id(k);
+                let line = self.line(k + 1);
+                for h in &self.held {
+                    self.edges.push(LockEdge {
+                        held: h.id.clone(),
+                        acquired: id.clone(),
+                        line,
+                    });
+                }
+                self.acquires.push(LockEvent { lock: id.clone(), line });
+                self.held.push(HeldLock { id, binding: let_name.map(str::to_string) });
+                continue;
+            }
+            // method call `recv.name(...)`
+            if self.punct(k, ".") && self.punct(k + 2, "(") {
+                if let Some(m) = self.ident(k + 1) {
+                    let is_lock_shape = (m == "lock" || m == "read" || m == "write")
+                        && self.punct(k + 3, ")");
+                    if !is_lock_shape {
+                        let recv_is_self =
+                            self.ident(k.wrapping_sub(1)) == Some("self")
+                                && !self.punct(k.wrapping_sub(2), ".");
+                        let owner = self.owner_prefix.as_deref();
+                        if let Some(callee) = self.env.resolve_method(m, recv_is_self, owner) {
+                            self.record_call(callee, self.line(k + 1));
+                        }
+                    }
+                }
+                continue;
+            }
+            // free-fn / path call `name(...)` / `a::b::name(...)`
+            if let Some(first) = self.ident(k) {
+                let prev_blocks = self.punct(k.wrapping_sub(1), ".")
+                    || self.punct(k.wrapping_sub(1), "::")
+                    || self.ident(k.wrapping_sub(1)) == Some("fn");
+                if k > 0 && prev_blocks {
+                    continue;
+                }
+                if CALL_KEYWORDS.contains(&first) {
+                    continue;
+                }
+                let mut segs = vec![first.to_string()];
+                let mut j = k + 1;
+                while self.punct(j, "::") {
+                    match self.ident(j + 1) {
+                        Some(next) => {
+                            segs.push(next.to_string());
+                            j += 2;
+                        }
+                        None => break,
+                    }
+                }
+                if self.punct(j, "(") && j > k {
+                    let owner = self.owner_prefix.as_deref();
+                    if let Some(callee) = self.env.resolve_path(&segs, owner) {
+                        self.record_call(callee, self.line(k));
+                    }
+                }
+            }
+        }
+    }
+
+    fn record_call(&mut self, callee: String, line: u32) {
+        let mut held: Vec<String> = self.held.iter().map(|h| h.id.clone()).collect();
+        held.sort();
+        held.dedup();
+        self.calls.push(CallSite { callee, line, held });
+    }
+
+    /// Lock identity of the receiver chain ending at the `.` before the
+    /// lock method: `self.field` chains key on the impl type
+    /// (`Type.field` — stable across functions), anything else keys on
+    /// the enclosing function (guards passed by reference cannot be
+    /// identified across functions without type information).
+    fn receiver_id(&self, dot: usize) -> String {
+        let mut chain: Vec<&str> = Vec::new();
+        let mut j = dot;
+        loop {
+            let Some(id) = self.ident(j.wrapping_sub(1)) else { break };
+            if j == 0 {
+                break;
+            }
+            chain.insert(0, id);
+            j -= 1;
+            if j > 0 && self.punct(j - 1, ".") {
+                j -= 1;
+            } else {
+                break;
+            }
+        }
+        match chain.split_first() {
+            Some((&"self", rest)) if !rest.is_empty() => match &self.owner_prefix {
+                Some(prefix) => format!("{prefix}.{}", rest.join(".")),
+                None => format!("{}#self.{}", self.fn_qual, rest.join(".")),
+            },
+            Some((first, rest)) if rest.is_empty() && *first != "self" => {
+                format!("{}#{first}", self.fn_qual)
+            }
+            Some((first, rest)) => format!("{}#{first}.{}", self.fn_qual, rest.join(".")),
+            None => format!("{}#expr@{}", self.fn_qual, self.line(dot)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// graph construction
+
+/// Build the call graph (with lock events) over a set of parsed files.
+pub fn build(units: &[FileUnit]) -> Graph {
+    let idx = build_index(units);
+    let mut by_qual: BTreeMap<String, FnNode> = BTreeMap::new();
+    for u in units {
+        let env = FileEnv::new(u, &idx);
+        for f in &u.ast.fns {
+            let qual = fn_qual(&env.mod_path, f);
+            let owner_prefix = f.owner.as_ref().map(|_| {
+                qual.rsplit_once("::").map(|(p, _)| p.to_string()).unwrap_or_default()
+            });
+            let mut w = Walker {
+                toks: &u.lexed.tokens,
+                env: &env,
+                owner_prefix,
+                fn_qual: qual.clone(),
+                held: Vec::new(),
+                calls: Vec::new(),
+                acquires: Vec::new(),
+                edges: Vec::new(),
+            };
+            w.walk_block(&f.body);
+            let node = FnNode {
+                qual: qual.clone(),
+                file: u.path.clone(),
+                line: f.line,
+                test: f.test,
+                calls: w.calls,
+                acquires: w.acquires,
+                edges: w.edges,
+            };
+            by_qual.entry(qual).or_insert(node);
+        }
+    }
+    Graph { fns: by_qual.into_values().collect() }
+}
+
+impl Graph {
+    /// Canonical `CALLGRAPH.json` bytes: schema version plus every
+    /// function with its resolved calls and direct lock acquisitions,
+    /// sorted by qualified name — byte-identical across machines.
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert(
+            "schema_version".to_string(),
+            Value::Num(f64::from(CALLGRAPH_SCHEMA_VERSION)),
+        );
+        let fns: Vec<Value> = self
+            .fns
+            .iter()
+            .map(|f| {
+                let mut m = BTreeMap::new();
+                m.insert("qual".to_string(), Value::Str(f.qual.clone()));
+                m.insert("file".to_string(), Value::Str(f.file.clone()));
+                m.insert("line".to_string(), Value::Num(f64::from(f.line)));
+                m.insert("test".to_string(), Value::Bool(f.test));
+                let mut calls: Vec<String> =
+                    f.calls.iter().map(|c| c.callee.clone()).collect();
+                calls.sort();
+                calls.dedup();
+                m.insert(
+                    "calls".to_string(),
+                    Value::Arr(calls.into_iter().map(Value::Str).collect()),
+                );
+                let mut locks: Vec<String> =
+                    f.acquires.iter().map(|a| a.lock.clone()).collect();
+                locks.sort();
+                locks.dedup();
+                m.insert(
+                    "locks".to_string(),
+                    Value::Arr(locks.into_iter().map(Value::Str).collect()),
+                );
+                Value::Obj(m)
+            })
+            .collect();
+        root.insert("functions".to_string(), Value::Arr(fns));
+        let mut text = to_string_pretty(&Value::Obj(root));
+        text.push('\n');
+        text
+    }
+
+    /// Look up a node by qualified name.
+    pub fn get(&self, qual: &str) -> Option<&FnNode> {
+        self.fns.iter().find(|f| f.qual == qual)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// L1: lock-order cycles
+
+/// Run the inter-procedural lock-order pass: transitive lock sets are
+/// propagated over the call graph, every acquired-while-holding pair
+/// becomes an edge in the lock-order relation, and each cycle (a
+/// strongly-connected component, self-loops included) yields one `L1`
+/// finding at its lexicographically smallest edge site. Test-only
+/// functions are excluded.
+pub fn lock_order(g: &Graph) -> Vec<(String, RawFinding)> {
+    // transitive lock set per function (fixpoint over the call graph)
+    let mut lockset: BTreeMap<&str, BTreeSet<String>> = BTreeMap::new();
+    for f in g.fns.iter().filter(|f| !f.test) {
+        lockset
+            .insert(&f.qual, f.acquires.iter().map(|a| a.lock.clone()).collect());
+    }
+    let mut changed = true;
+    let mut rounds = 0usize;
+    while changed && rounds <= g.fns.len() {
+        changed = false;
+        rounds += 1;
+        for f in g.fns.iter().filter(|f| !f.test) {
+            let mut add: BTreeSet<String> = BTreeSet::new();
+            for c in &f.calls {
+                if let Some(callee_locks) = lockset.get(c.callee.as_str()) {
+                    add.extend(callee_locks.iter().cloned());
+                }
+            }
+            if let Some(own) = lockset.get_mut(f.qual.as_str()) {
+                let before = own.len();
+                own.extend(add);
+                changed = changed || own.len() != before;
+            }
+        }
+    }
+
+    // lock-order edges: intra-function pairs plus held-at-call × callee
+    // transitive lock set
+    let mut adj: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let mut site: BTreeMap<(String, String), (String, u32)> = BTreeMap::new();
+    let mut add_edge = |a: &str, b: &str, file: &str, line: u32| {
+        adj.entry(a.to_string()).or_default().insert(b.to_string());
+        let key = (a.to_string(), b.to_string());
+        let loc = (file.to_string(), line);
+        match site.get(&key) {
+            Some(prev) if *prev <= loc => {}
+            _ => {
+                site.insert(key, loc);
+            }
+        }
+    };
+    for f in g.fns.iter().filter(|f| !f.test) {
+        for e in &f.edges {
+            add_edge(&e.held, &e.acquired, &f.file, e.line);
+        }
+        for c in &f.calls {
+            let Some(callee_locks) = lockset.get(c.callee.as_str()) else { continue };
+            for h in &c.held {
+                for l in callee_locks {
+                    // a self-pair through a call is a genuine double-lock
+                    add_edge(h, l, &f.file, c.line);
+                }
+            }
+        }
+    }
+
+    // cycles: a node on any cycle reaches itself; nodes that reach each
+    // other share a component
+    let reach = |from: &str| -> BTreeSet<String> {
+        let mut seen: BTreeSet<String> = BTreeSet::new();
+        let mut stack: Vec<String> =
+            adj.get(from).map(|s| s.iter().cloned().collect()).unwrap_or_default();
+        while let Some(n) = stack.pop() {
+            if seen.insert(n.clone()) {
+                if let Some(next) = adj.get(&n) {
+                    stack.extend(next.iter().cloned());
+                }
+            }
+        }
+        seen
+    };
+    let cyclic: Vec<String> =
+        adj.keys().filter(|n| reach(n).contains(*n)).cloned().collect();
+    let mut groups: Vec<Vec<String>> = Vec::new();
+    let mut grouped: BTreeSet<String> = BTreeSet::new();
+    for n in &cyclic {
+        if grouped.contains(n) {
+            continue;
+        }
+        let rn = reach(n);
+        let mut comp: Vec<String> = vec![n.clone()];
+        for m in &cyclic {
+            if m != n && rn.contains(m) && reach(m).contains(n) {
+                comp.push(m.clone());
+            }
+        }
+        comp.sort();
+        for m in &comp {
+            grouped.insert(m.clone());
+        }
+        groups.push(comp);
+    }
+
+    let mut out = Vec::new();
+    for comp in groups {
+        // the reporting site: smallest (file, line) over the component's
+        // internal edges
+        let mut best: Option<(&String, &u32, String)> = None;
+        for a in &comp {
+            for b in &comp {
+                if let Some((file, line)) = site.get(&(a.clone(), b.clone())) {
+                    let desc = format!("`{a}` then `{b}`");
+                    match &best {
+                        Some((bf, bl, _)) if (*bf, *bl) <= (file, line) => {}
+                        _ => best = Some((file, line, desc)),
+                    }
+                }
+            }
+        }
+        let Some((file, line, desc)) = best else { continue };
+        let note = if comp.len() == 1 {
+            format!(
+                "lock `{}` can be acquired while already held ({desc}) — a \
+                 non-reentrant Mutex self-deadlocks here",
+                comp[0]
+            )
+        } else {
+            format!(
+                "lock-order cycle among {{{}}} — acquisition order is inconsistent \
+                 across call paths (first inverted site: {desc}); pick one order \
+                 and hold to it",
+                comp.join(", ")
+            )
+        };
+        out.push((
+            file.clone(),
+            RawFinding { rule: Rule::LockOrder, line: *line, note },
+        ));
+    }
+    out.sort_by(|a, b| (&a.0, a.1.line).cmp(&(&b.0, b.1.line)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(path: &str, src: &str) -> FileUnit {
+        FileUnit::new(path, src)
+    }
+
+    #[test]
+    fn module_paths_fold_mod_and_lib() {
+        assert_eq!(module_path("rust/src/serve/batch.rs"), vec!["serve", "batch"]);
+        assert_eq!(module_path("rust/src/serve/mod.rs"), vec!["serve"]);
+        assert!(module_path("rust/src/lib.rs").is_empty());
+        assert_eq!(module_path("rust/src/main.rs"), vec!["main"]);
+    }
+
+    #[test]
+    fn resolves_same_module_and_use_renamed_calls() {
+        let a = unit(
+            "rust/src/alpha.rs",
+            "pub fn tick() {}\npub fn run() {\n    tick();\n}\n",
+        );
+        let b = unit(
+            "rust/src/beta.rs",
+            "use crate::alpha::tick as pulse;\npub fn go() {\n    pulse();\n}\n",
+        );
+        let g = build(&[a, b]);
+        let run = g.get("alpha::run").expect("alpha::run indexed");
+        assert_eq!(run.calls.len(), 1);
+        assert_eq!(run.calls[0].callee, "alpha::tick");
+        let go = g.get("beta::go").expect("beta::go indexed");
+        assert_eq!(go.calls.len(), 1, "use-renamed call resolves: {:?}", go.calls);
+        assert_eq!(go.calls[0].callee, "alpha::tick");
+    }
+
+    #[test]
+    fn distinguishes_methods_from_free_fns() {
+        let src = "pub struct W;\nimpl W {\n    pub fn poke(&self) {}\n    \
+                   pub fn both(&self) {\n        self.poke();\n        poke();\n    }\n}\n\
+                   pub fn poke() {}\n";
+        let g = build(&[unit("rust/src/w.rs", src)]);
+        let both = g.get("w::W::both").expect("method indexed");
+        let callees: Vec<&str> = both.calls.iter().map(|c| c.callee.as_str()).collect();
+        assert_eq!(callees, vec!["w::W::poke", "w::poke"]);
+    }
+
+    #[test]
+    fn type_method_paths_resolve() {
+        let a = unit(
+            "rust/src/alpha.rs",
+            "pub struct Spec;\nimpl Spec {\n    pub fn build_it() -> Spec { Spec }\n}\n",
+        );
+        let b = unit(
+            "rust/src/beta.rs",
+            "use crate::alpha::Spec;\npub fn go() -> Spec {\n    Spec::build_it()\n}\n",
+        );
+        let g = build(&[a, b]);
+        let go = g.get("beta::go").expect("beta::go indexed");
+        assert_eq!(go.calls.len(), 1);
+        assert_eq!(go.calls[0].callee, "alpha::Spec::build_it");
+    }
+
+    #[test]
+    fn self_field_locks_key_on_the_type() {
+        let src = "pub struct S { a: Mutex<u32>, b: Mutex<u32> }\nimpl S {\n    \
+                   pub fn swap(&self) {\n        let g = self.a.lock();\n        \
+                   let h = self.b.lock();\n        drop(h);\n        drop(g);\n    }\n}\n";
+        let g = build(&[unit("rust/src/s.rs", src)]);
+        let f = g.get("s::S::swap").expect("indexed");
+        let locks: Vec<&str> = f.acquires.iter().map(|a| a.lock.as_str()).collect();
+        assert_eq!(locks, vec!["s::S.a", "s::S.b"]);
+        assert_eq!(f.edges.len(), 1);
+        assert_eq!(f.edges[0].held, "s::S.a");
+        assert_eq!(f.edges[0].acquired, "s::S.b");
+    }
+
+    #[test]
+    fn consistent_order_is_cycle_free_and_inversion_is_detected() {
+        let ok = "pub struct S { a: Mutex<u32>, b: Mutex<u32> }\nimpl S {\n    \
+                  pub fn one(&self) {\n        let g = self.a.lock();\n        \
+                  let h = self.b.lock();\n        drop(h);\n        drop(g);\n    }\n    \
+                  pub fn two(&self) {\n        let g = self.a.lock();\n        \
+                  let h = self.b.lock();\n        drop(h);\n        drop(g);\n    }\n}\n";
+        let g = build(&[unit("rust/src/s.rs", ok)]);
+        assert!(lock_order(&g).is_empty(), "consistent order must stay clean");
+
+        let bad = "pub struct S { a: Mutex<u32>, b: Mutex<u32> }\nimpl S {\n    \
+                   pub fn one(&self) {\n        let g = self.a.lock();\n        \
+                   let h = self.b.lock();\n        drop(h);\n        drop(g);\n    }\n    \
+                   pub fn two(&self) {\n        let h = self.b.lock();\n        \
+                   let g = self.a.lock();\n        drop(g);\n        drop(h);\n    }\n}\n";
+        let g = build(&[unit("rust/src/s.rs", bad)]);
+        let findings = lock_order(&g);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].1.note.contains("lock-order cycle"), "{}", findings[0].1.note);
+    }
+
+    #[test]
+    fn interprocedural_cycle_through_a_call_is_detected() {
+        let src = "pub struct S { a: Mutex<u32>, b: Mutex<u32> }\nimpl S {\n    \
+                   pub fn outer(&self) {\n        let g = self.a.lock();\n        \
+                   self.inner();\n        drop(g);\n    }\n    \
+                   pub fn inner(&self) {\n        let h = self.b.lock();\n        \
+                   let g = self.a.lock();\n        drop(g);\n        drop(h);\n    }\n}\n";
+        let g = build(&[unit("rust/src/s.rs", src)]);
+        let findings = lock_order(&g);
+        assert!(!findings.is_empty(), "a->call->b->a inversion must be found");
+    }
+
+    #[test]
+    fn dropped_guards_do_not_create_edges() {
+        let src = "pub struct S { a: Mutex<u32>, b: Mutex<u32> }\nimpl S {\n    \
+                   pub fn seq(&self) {\n        let g = self.a.lock();\n        \
+                   drop(g);\n        let h = self.b.lock();\n        drop(h);\n    }\n}\n";
+        let g = build(&[unit("rust/src/s.rs", src)]);
+        let f = g.get("s::S::seq").expect("indexed");
+        assert!(f.edges.is_empty(), "{:?}", f.edges);
+    }
+
+    #[test]
+    fn block_scoped_guards_release_at_block_end() {
+        let src = "pub struct S { a: Mutex<u32>, b: Mutex<u32> }\nimpl S {\n    \
+                   pub fn scoped(&self) {\n        let x = {\n            \
+                   let g = self.a.lock();\n            1\n        };\n        \
+                   let h = self.b.lock();\n        drop(h);\n        drop(x);\n    }\n}\n";
+        let g = build(&[unit("rust/src/s.rs", src)]);
+        let f = g.get("s::S::scoped").expect("indexed");
+        assert!(f.edges.is_empty(), "block guard must not outlive its block: {:?}", f.edges);
+    }
+
+    #[test]
+    fn callgraph_json_is_canonical() {
+        let g = build(&[unit("rust/src/alpha.rs", "pub fn tick() {}\n")]);
+        let json = g.to_json();
+        assert!(crate::util::json::parse(&json).is_ok());
+        assert!(json.contains("\"schema_version\": 1"));
+        assert!(json.contains("\"alpha::tick\""));
+        assert_eq!(json, g.to_json());
+    }
+}

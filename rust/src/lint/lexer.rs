@@ -367,11 +367,11 @@ impl Lexer {
             }
             // raw identifier r#fn — consume as a plain identifier
             ("r", Some('#')) if self.chars.get(j + 1).copied().is_some_and(is_ident_start) => {
-                let mut k = j + 2;
+                let mut k = j + 1;
                 while k < self.chars.len() && is_ident_continue(self.chars[k]) {
                     k += 1;
                 }
-                let raw: String = self.chars[j + 2..k].iter().collect();
+                let raw: String = self.chars[j + 1..k].iter().collect();
                 self.i = k;
                 self.push(Tok::Ident(raw), line);
             }

@@ -11,9 +11,15 @@
 //! them statically on every commit.
 //!
 //! The analyzer is dependency-free: a hand-rolled lexer ([`lexer`])
-//! strips comments and strings so rules never fire on prose, and the
-//! rule passes ([`rules`]) walk the token stream. Rules are keyed
-//! (`D1`..`D7`; `D0` is the pragma meta-rule) and individually
+//! strips comments and strings so rules never fire on prose, the
+//! token-level rule passes ([`rules`]) walk the token stream, and a
+//! recursive-descent structure pass ([`ast`]) plus a crate-local symbol
+//! index / call graph ([`graph`], emitted as canonical
+//! `CALLGRAPH.json`) power the structural rule family (DESIGN.md §16):
+//! `L1` lock-order cycles, `L2` atomic-counter hygiene, `L3`
+//! parser-tainted arithmetic, `L4` wildcard arms on repo-owned enums,
+//! `L5` code/docs/config drift. Rules are keyed (`D1`..`D7`,
+//! `L1`..`L5`; `D0` is the pragma meta-rule) and individually
 //! suppressible, either inline —
 //!
 //! ```text
@@ -23,21 +29,29 @@
 //!
 //! — or per file via `configs/lint.toml` ([`config`]). Every
 //! suppression must carry a written reason; a reasonless or unused
-//! pragma is itself a finding (`D0`), so the suppression inventory can
-//! never rot silently.
+//! pragma is itself a finding (`D0`), as is a config waiver that no
+//! longer matches any finding, so the suppression inventory can never
+//! rot silently.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context as _, Result};
 
 use crate::util::json::{to_string_pretty, Value};
+use crate::util::toml_lite;
 
+pub mod ast;
 pub mod config;
+pub mod graph;
 pub mod lexer;
 pub mod rules;
 
 pub use config::{AllowEntry, LintConfig};
+
+/// Schema version stamped into `LINT_report.json`. Bump whenever the
+/// report's shape changes so downstream consumers can dispatch.
+pub const REPORT_SCHEMA_VERSION: u32 = 2;
 
 /// The rule catalogue. Each variant is one checkable determinism or
 /// robustness invariant; `D0` polices the suppression mechanism itself.
@@ -69,10 +83,29 @@ pub enum Rule {
     /// behind `obs::Stopwatch`/`obs::Tracer` so inertness is auditable
     /// in one directory.
     TimeQuarantine,
+    /// L1 — inconsistent lock acquisition order: cycles in the
+    /// lock-order relation, propagated inter-procedurally over the call
+    /// graph, are potential deadlocks.
+    LockOrder,
+    /// L2 — atomic-counter hygiene: non-saturating `fetch_add`/
+    /// `fetch_sub` (counters must saturate, like `obs::Counter`), and
+    /// `SeqCst` mixed with weaker orderings on the same atomic field.
+    AtomicHygiene,
+    /// L3 — unchecked `+`/`*` on values flowing from parser-scope
+    /// bindings (extends D3 from casts to arithmetic).
+    TaintedArith,
+    /// L4 — wildcard `_` match arms on repo-owned enums (`KernelKind`,
+    /// `Variant`, `Workload`, `Backend`) that would silently mask a new
+    /// variant.
+    WildcardArm,
+    /// L5 — drift: every `--flag` read in `main.rs` must be documented
+    /// in README/USAGE, and every config key the TOML parsers read must
+    /// appear in at least one `configs/*.toml`.
+    Drift,
 }
 
 /// All rules, in id order.
-pub const RULES: [Rule; 8] = [
+pub const RULES: [Rule; 13] = [
     Rule::Pragma,
     Rule::MapIteration,
     Rule::FloatAccum,
@@ -81,11 +114,16 @@ pub const RULES: [Rule; 8] = [
     Rule::FloatFormat,
     Rule::WallClock,
     Rule::TimeQuarantine,
+    Rule::LockOrder,
+    Rule::AtomicHygiene,
+    Rule::TaintedArith,
+    Rule::WildcardArm,
+    Rule::Drift,
 ];
 
 impl Rule {
-    /// Stable rule id (`"D0"`..`"D6"`), used in pragmas, the allowlist,
-    /// and `LINT_report.json`.
+    /// Stable rule id (`"D0"`..`"D7"`, `"L1"`..`"L5"`), used in
+    /// pragmas, the allowlist, and `LINT_report.json`.
     pub fn id(self) -> &'static str {
         match self {
             Rule::Pragma => "D0",
@@ -96,6 +134,11 @@ impl Rule {
             Rule::FloatFormat => "D5",
             Rule::WallClock => "D6",
             Rule::TimeQuarantine => "D7",
+            Rule::LockOrder => "L1",
+            Rule::AtomicHygiene => "L2",
+            Rule::TaintedArith => "L3",
+            Rule::WildcardArm => "L4",
+            Rule::Drift => "L5",
         }
     }
 
@@ -110,6 +153,11 @@ impl Rule {
             Rule::FloatFormat => "float formatting only via report::canon/csv_cell",
             Rule::WallClock => "no wall-clock reads in result-affecting paths",
             Rule::TimeQuarantine => "time/trace primitives only under rust/src/obs/",
+            Rule::LockOrder => "lock acquisition order must be consistent across all call paths",
+            Rule::AtomicHygiene => "atomic counters saturate; one memory-ordering discipline per field",
+            Rule::TaintedArith => "no unchecked +/* on parser-tainted values",
+            Rule::WildcardArm => "no wildcard `_` arms over repo-owned enums",
+            Rule::Drift => "flags match README/USAGE; config keys match configs/*.toml",
         }
     }
 
@@ -176,6 +224,10 @@ impl LintReport {
     /// preaches).
     pub fn to_json(&self) -> String {
         let mut root = BTreeMap::new();
+        root.insert(
+            "schema_version".to_string(),
+            Value::Num(f64::from(REPORT_SCHEMA_VERSION)),
+        );
         root.insert("files".to_string(), Value::Num(self.files as f64));
         let findings: Vec<Value> = self
             .findings
@@ -234,23 +286,52 @@ impl LintReport {
 /// assert!(findings[0].suppressed.is_none());
 /// ```
 pub fn lint_source(path: &str, text: &str, cfg: &LintConfig) -> Vec<Finding> {
-    let lexed = lexer::lex(text);
-    let raw = rules::scan(path, &lexed);
-    let mut findings: Vec<Finding> = raw
-        .into_iter()
-        .map(|r| Finding {
-            rule: r.rule,
-            path: path.to_string(),
-            line: r.line,
-            note: r.note,
-            suppressed: None,
-        })
-        .collect();
+    let unit = graph::FileUnit::new(path, text);
+    let mut findings = unit_findings(&unit);
+    // L1 over the single-file call graph: intra-file cycles are still
+    // detectable without the rest of the crate.
+    let g = graph::build(std::slice::from_ref(&unit));
+    for (p, r) in graph::lock_order(&g) {
+        if p == path {
+            findings.push(raw_to_finding(path, r));
+        }
+    }
+    let mut waiver_used = vec![false; cfg.allows.len()];
+    suppress_file(path, &unit.lexed, &mut findings, cfg, &mut waiver_used);
+    findings
+}
 
+/// Token- and structure-level findings for one parsed file (rules that
+/// need no cross-file context).
+fn unit_findings(unit: &graph::FileUnit) -> Vec<Finding> {
+    rules::scan(&unit.path, &unit.lexed)
+        .into_iter()
+        .chain(rules::scan_ast(&unit.lexed, &unit.ast))
+        .map(|r| raw_to_finding(&unit.path, r))
+        .collect()
+}
+
+fn raw_to_finding(path: &str, r: rules::RawFinding) -> Finding {
+    Finding { rule: r.rule, path: path.to_string(), line: r.line, note: r.note, suppressed: None }
+}
+
+/// Apply both suppression tiers to one file's findings, then append the
+/// D0 pragma-hygiene findings and sort by `(line, rule)`.
+///
+/// `waiver_used[i]` is set when config allowlist entry `i` suppressed at
+/// least one finding — [`analyze`] turns still-unused waivers into D0
+/// findings of their own.
+fn suppress_file(
+    path: &str,
+    lexed: &lexer::Lexed,
+    findings: &mut Vec<Finding>,
+    cfg: &LintConfig,
+    waiver_used: &mut [bool],
+) {
     // Inline pragmas first (closest to the code), then the config
     // allowlist for whatever is still open.
     let mut used = vec![false; lexed.pragmas.len()];
-    for f in &mut findings {
+    for f in findings.iter_mut() {
         for (pi, p) in lexed.pragmas.iter().enumerate() {
             let covers = p.line == f.line || p.line + 1 == f.line;
             if covers && p.rules.iter().any(|r| r == f.rule.id()) {
@@ -260,10 +341,13 @@ pub fn lint_source(path: &str, text: &str, cfg: &LintConfig) -> Vec<Finding> {
             }
         }
     }
-    for f in &mut findings {
+    for f in findings.iter_mut() {
         if f.suppressed.is_none() {
-            if let Some(a) = cfg.allow_for(f.rule, path) {
+            if let Some((idx, a)) = cfg.allow_index(f.rule, path) {
                 f.suppressed = Some(a.reason.clone());
+                if let Some(slot) = waiver_used.get_mut(idx) {
+                    *slot = true;
+                }
             }
         }
     }
@@ -306,14 +390,31 @@ pub fn lint_source(path: &str, text: &str, cfg: &LintConfig) -> Vec<Finding> {
     }
 
     findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
-    findings
+}
+
+/// A complete analysis: the lint report plus the crate call graph it
+/// was derived from (for `CALLGRAPH.json`).
+#[derive(Debug, Clone, Default)]
+pub struct Analysis {
+    /// The finished lint report.
+    pub report: LintReport,
+    /// The crate-local call graph over every scanned file.
+    pub graph: graph::Graph,
 }
 
 /// Run the analyzer over `paths` (files or directories, resolved
 /// relative to `root`; directories are walked recursively for `.rs`
 /// files in sorted order). Empty `paths` falls back to the config's
-/// `roots`.
+/// `roots`. This is [`analyze`] keeping only the report.
 pub fn run(root: &Path, paths: &[PathBuf], cfg: &LintConfig) -> Result<LintReport> {
+    analyze(root, paths, cfg).map(|a| a.report)
+}
+
+/// Full structure-aware run: every per-file pass, the whole-crate call
+/// graph with the inter-procedural `L1` lock-order pass, the `L5` drift
+/// checks against `root`'s README and `configs/*.toml`, both suppression
+/// tiers, and the D0 unused-waiver audit.
+pub fn analyze(root: &Path, paths: &[PathBuf], cfg: &LintConfig) -> Result<Analysis> {
     let requested: Vec<PathBuf> = if paths.is_empty() {
         cfg.roots.iter().map(PathBuf::from).collect()
     } else {
@@ -334,17 +435,138 @@ pub fn run(root: &Path, paths: &[PathBuf], cfg: &LintConfig) -> Result<LintRepor
     files.sort();
     files.dedup();
 
-    let mut report = LintReport { findings: Vec::new(), files: files.len() };
+    let mut units: Vec<graph::FileUnit> = Vec::new();
     for file in &files {
         let text = std::fs::read_to_string(file)
             .with_context(|| format!("reading {}", file.display()))?;
-        let rel = display_path(root, file);
-        report.findings.extend(lint_source(&rel, &text, cfg));
+        units.push(graph::FileUnit::new(&display_path(root, file), &text));
     }
-    report
-        .findings
-        .sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
-    Ok(report)
+
+    let mut per_file: BTreeMap<String, Vec<Finding>> =
+        units.iter().map(|u| (u.path.clone(), Vec::new())).collect();
+    for u in &units {
+        if let Some(v) = per_file.get_mut(&u.path) {
+            v.extend(unit_findings(u));
+        }
+    }
+
+    // L1: the whole-crate call graph sees every inter-procedural path.
+    let g = graph::build(&units);
+    for (path, r) in graph::lock_order(&g) {
+        if let Some(v) = per_file.get_mut(&path) {
+            let f = raw_to_finding(&path, r);
+            v.push(f);
+        }
+    }
+
+    // L5 (flag drift): the CLI entry point's flags vs README + its own
+    // usage text (which lives in the same file).
+    for u in &units {
+        if !(u.path == "main.rs" || u.path.ends_with("/main.rs")) {
+            continue;
+        }
+        let mut docs = std::fs::read_to_string(root.join("README.md")).unwrap_or_default();
+        if let Some(full) = files.iter().find(|f| display_path(root, f) == u.path) {
+            docs.push_str(&std::fs::read_to_string(full).unwrap_or_default());
+        }
+        if let Some(v) = per_file.get_mut(&u.path) {
+            v.extend(rules::drift_flags(&u.lexed, &docs).into_iter().map(|r| {
+                raw_to_finding(&u.path, r)
+            }));
+        }
+    }
+
+    // L5 (config-key drift): keys the TOML-reading sites consume vs the
+    // keys any shipped configs/*.toml actually carries.
+    if units.iter().any(|u| rules::is_config_key_site(&u.path)) {
+        let available = harvest_config_keys(root);
+        for u in &units {
+            if !rules::is_config_key_site(&u.path) {
+                continue;
+            }
+            if let Some(v) = per_file.get_mut(&u.path) {
+                v.extend(
+                    rules::drift_config_keys(&u.lexed, &available)
+                        .into_iter()
+                        .map(|r| raw_to_finding(&u.path, r)),
+                );
+            }
+        }
+    }
+
+    let mut waiver_used = vec![false; cfg.allows.len()];
+    let mut findings: Vec<Finding> = Vec::new();
+    for u in &units {
+        let mut fs = per_file.remove(&u.path).unwrap_or_default();
+        suppress_file(&u.path, &u.lexed, &mut fs, cfg, &mut waiver_used);
+        findings.extend(fs);
+    }
+
+    // D0 extension: a waiver whose rule/path matched no finding has
+    // rotted — but only when its path matched a scanned file at all
+    // (partial-tree runs must not indict waivers for files they never
+    // looked at). Never suppressible, like every D0.
+    for (idx, a) in cfg.allows.iter().enumerate() {
+        if waiver_used[idx] {
+            continue;
+        }
+        let seen = units
+            .iter()
+            .any(|u| u.path == a.path || u.path.ends_with(&format!("/{}", a.path)));
+        if !seen {
+            continue;
+        }
+        findings.push(Finding {
+            rule: Rule::Pragma,
+            path: "configs/lint.toml".to_string(),
+            line: a.line,
+            note: format!("unused waiver: no {} finding in {}", a.rule.id(), a.path),
+            suppressed: None,
+        });
+    }
+
+    // The single canonicalization point: every consumer sees findings
+    // sorted by (path, line, rule), so report bytes cannot depend on
+    // directory-walk order.
+    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok(Analysis { report: LintReport { findings, files: files.len() }, graph: g })
+}
+
+/// Every key (at any nesting depth) appearing in any `root/configs/*.toml`
+/// that parses — the inventory the L5 config-key check trusts.
+fn harvest_config_keys(root: &Path) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    let dir = root.join("configs");
+    let Ok(entries) = std::fs::read_dir(&dir) else { return keys };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    paths.sort();
+    for p in paths {
+        if p.extension().is_none_or(|x| x != "toml") {
+            continue;
+        }
+        let Ok(text) = std::fs::read_to_string(&p) else { continue };
+        if let Ok(v) = toml_lite::parse(&text) {
+            collect_keys(&v, &mut keys);
+        }
+    }
+    keys
+}
+
+fn collect_keys(v: &Value, keys: &mut BTreeSet<String>) {
+    match v {
+        Value::Obj(m) => {
+            for (k, inner) in m {
+                keys.insert(k.clone());
+                collect_keys(inner, keys);
+            }
+        }
+        Value::Arr(items) => {
+            for inner in items {
+                collect_keys(inner, keys);
+            }
+        }
+        _ => {}
+    }
 }
 
 /// Repo-relative, `/`-separated display path for a scanned file, so
@@ -386,8 +608,13 @@ mod tests {
             assert!(!rule.summary().is_empty());
         }
         assert_eq!(Rule::from_id("D9"), None);
+        assert_eq!(Rule::from_id("L6"), None);
         assert_eq!(Rule::WallClock.to_string(), "D6");
         assert_eq!(Rule::TimeQuarantine.to_string(), "D7");
+        assert_eq!(Rule::LockOrder.to_string(), "L1");
+        assert_eq!(Rule::Drift.to_string(), "L5");
+        // D rules sort before L rules, so mixed findings group cleanly.
+        assert!(Rule::TimeQuarantine < Rule::LockOrder);
     }
 
     #[test]
@@ -426,10 +653,102 @@ mod tests {
         let report = LintReport { findings, files: 1 };
         let json = report.to_json();
         assert!(crate::util::json::parse(&json).is_ok());
+        assert!(json.contains("\"schema_version\": 2"), "{json}");
         assert!(json.contains("\"D4\""));
         assert!(json.contains("\"unsuppressed\": 1"), "{json}");
         assert!(json.ends_with('\n'));
         // byte-identical on re-serialization
         assert_eq!(json, report.to_json());
+    }
+
+    #[test]
+    fn analyze_flags_unused_waivers_for_scanned_files_only() {
+        let dir = std::env::temp_dir().join("smart_lint_waiver_test");
+        let src_dir = dir.join("src");
+        std::fs::create_dir_all(&src_dir).unwrap();
+        std::fs::write(src_dir.join("clean.rs"), "fn f(x: u32) -> u32 { x }\n").unwrap();
+        let mut cfg = LintConfig { roots: vec!["src".to_string()], allows: Vec::new() };
+        // One waiver pointing at the scanned (clean) file: unused → D0.
+        cfg.allows.push(AllowEntry {
+            rule: Rule::PanicPath,
+            path: "clean.rs".to_string(),
+            reason: "test waiver".to_string(),
+            line: 7,
+        });
+        // One waiver pointing outside the scanned set: not our business.
+        cfg.allows.push(AllowEntry {
+            rule: Rule::PanicPath,
+            path: "elsewhere.rs".to_string(),
+            reason: "test waiver".to_string(),
+            line: 11,
+        });
+        let analysis = analyze(&dir, &[], &cfg).unwrap();
+        let d0: Vec<&Finding> = analysis
+            .report
+            .findings
+            .iter()
+            .filter(|f| f.rule == Rule::Pragma)
+            .collect();
+        assert_eq!(d0.len(), 1, "{:?}", analysis.report.findings);
+        assert_eq!(d0[0].path, "configs/lint.toml");
+        assert_eq!(d0[0].line, 7);
+        assert!(d0[0].note.contains("unused waiver"), "{}", d0[0].note);
+        assert!(d0[0].suppressed.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn analyze_detects_flag_and_config_key_drift() {
+        let dir = std::env::temp_dir().join("smart_lint_drift_test");
+        let src_dir = dir.join("src");
+        std::fs::create_dir_all(&src_dir).unwrap();
+        std::fs::create_dir_all(dir.join("configs")).unwrap();
+        // A main.rs reading two flags; only one is documented.
+        std::fs::write(
+            src_dir.join("main.rs"),
+            "fn main() {\n    let a = args.flag(\"known\");\n    let b = args.flag(\"ghost\");\n}\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("README.md"), "run with --known\n").unwrap();
+        // A config-reading site (matches the `config.rs` site suffix)
+        // consuming a key no shipped toml carries.
+        std::fs::write(
+            src_dir.join("config.rs"),
+            "fn from_value(v: &Value) {\n    let s = v.get(\"seed\");\n    \
+             let m = v.get(\"phantom\");\n}\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("configs").join("a.toml"), "seed = 1\n").unwrap();
+        let cfg = LintConfig { roots: vec!["src".to_string()], allows: Vec::new() };
+        let analysis = analyze(&dir, &[], &cfg).unwrap();
+        let drift: Vec<(String, u32)> = analysis
+            .report
+            .findings
+            .iter()
+            .filter(|f| f.rule == Rule::Drift)
+            .map(|f| (f.path.clone(), f.line))
+            .collect();
+        assert_eq!(
+            drift,
+            vec![("src/config.rs".to_string(), 3), ("src/main.rs".to_string(), 3)],
+            "{:?}",
+            analysis.report.findings
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn analyze_emits_the_call_graph() {
+        let dir = std::env::temp_dir().join("smart_lint_graph_test");
+        let src_dir = dir.join("src");
+        std::fs::create_dir_all(&src_dir).unwrap();
+        std::fs::write(src_dir.join("a.rs"), "fn leaf() {}\nfn top() { leaf(); }\n").unwrap();
+        let cfg = LintConfig { roots: vec!["src".to_string()], allows: Vec::new() };
+        let analysis = analyze(&dir, &[], &cfg).unwrap();
+        let json = analysis.graph.to_json();
+        assert!(crate::util::json::parse(&json).is_ok());
+        assert!(json.contains("\"schema_version\": 1"), "{json}");
+        assert!(json.contains("a::top"), "{json}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

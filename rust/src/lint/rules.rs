@@ -1,17 +1,25 @@
-//! Rule passes over the lexed token stream (rules `D1`..`D7`).
+//! Rule passes over the lexed token stream (`D1`..`D7`) and the
+//! recovered structure (`L2`..`L5`).
 //!
-//! Each pass is a linear walk with small, bounded look-around — no AST,
-//! no type information. That keeps the analyzer dependency-free and
+//! The `D` passes are linear walks with small, bounded look-around — no
+//! AST, no type information. That keeps the analyzer dependency-free and
 //! fast, at the cost of approximation; the approximations are chosen so
 //! false *negatives* are possible but false *positives* are rare, and
 //! every remaining false positive can carry a reasoned pragma.
+//!
+//! The `L` passes ([`scan_ast`], plus the repo-level drift helpers
+//! [`drift_flags`]/[`drift_config_keys`] and the call-graph `L1` pass in
+//! [`super::graph`]) layer structure on top: function scope and taint
+//! for `L3`, match arms for `L4`, and cross-artifact consistency for
+//! `L5` (DESIGN.md §16).
 //!
 //! All passes skip `#[cfg(test)]` / `#[test]` item bodies: the
 //! invariants protect shipped artifacts, and tests legitimately
 //! `unwrap`, time things, and accumulate ad-hoc sums.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
+use super::ast::{arm_is_wildcard, Ast, Block, FnDecl, Sub};
 use super::lexer::{is_float_literal, Lexed, Tok, Token};
 use super::Rule;
 
@@ -676,6 +684,348 @@ fn d7_time_quarantine(toks: &[Token], test: &[bool], out: &mut Vec<RawFinding>) 
     }
 }
 
+// ---------------------------------------------------------------------------
+// structural passes: L2 / L3 / L4
+
+/// Run the structural rule passes (`L2` atomic hygiene, `L3` tainted
+/// arithmetic, `L4` wildcard arms) over one parsed file. `L1` needs the
+/// whole-crate call graph and lives in [`super::graph::lock_order`];
+/// `L5` needs repo context and lives in [`drift_flags`] /
+/// [`drift_config_keys`].
+pub fn scan_ast(lexed: &Lexed, ast: &Ast) -> Vec<RawFinding> {
+    let toks = &lexed.tokens;
+    let test = test_mask(toks);
+    let mut out = Vec::new();
+    l2_atomic_hygiene(toks, &test, &mut out);
+    l3_tainted_arith(toks, ast, &mut out);
+    l4_wildcard_arm(toks, ast, &mut out);
+    out
+}
+
+/// Atomic methods that take an `Ordering` argument — used to attribute
+/// orderings to the receiving field for the mixing check.
+const ATOMIC_METHODS: [&str; 11] = [
+    "load", "store", "swap", "fetch_add", "fetch_sub", "fetch_and", "fetch_or", "fetch_xor",
+    "fetch_update", "compare_exchange", "compare_exchange_weak",
+];
+/// The non-saturating read-modify-write methods L2 flags outright.
+const ATOMIC_RMW: [&str; 2] = ["fetch_add", "fetch_sub"];
+/// Memory-ordering variants, strongest first.
+const ORDERINGS: [&str; 5] = ["SeqCst", "AcqRel", "Acquire", "Release", "Relaxed"];
+
+fn l2_atomic_hygiene(toks: &[Token], test: &[bool], out: &mut Vec<RawFinding>) {
+    // receiver ident -> set of (ordering, first line seen)
+    let mut orderings: BTreeMap<String, BTreeSet<(String, u32)>> = BTreeMap::new();
+    for i in 0..toks.len() {
+        if test[i] || !punct_at(toks, i, ".") {
+            continue;
+        }
+        let Some(method) = ident_at(toks, i + 1) else { continue };
+        if !ATOMIC_METHODS.contains(&method) || !punct_at(toks, i + 2, "(") {
+            continue;
+        }
+        let close = match_delim(toks, i + 2, "(", ")");
+        let mut saw_ordering = false;
+        for k in i + 3..close {
+            if ident_at(toks, k) == Some("Ordering") && punct_at(toks, k + 1, "::") {
+                if let Some(o) = ident_at(toks, k + 2) {
+                    if ORDERINGS.contains(&o) {
+                        saw_ordering = true;
+                        let recv =
+                            ident_at(toks, i.wrapping_sub(1)).unwrap_or("<expr>").to_string();
+                        orderings
+                            .entry(recv)
+                            .or_default()
+                            .insert((o.to_string(), toks[k + 2].line));
+                    }
+                }
+            }
+        }
+        // Only an Ordering argument marks the receiver as an atomic —
+        // `.load()` exists on plenty of non-atomic types.
+        if saw_ordering && ATOMIC_RMW.contains(&method) {
+            let recv = ident_at(toks, i.wrapping_sub(1)).unwrap_or("<expr>");
+            out.push(RawFinding {
+                rule: Rule::AtomicHygiene,
+                line: toks[i + 1].line,
+                note: format!(
+                    "non-saturating `.{method}()` on atomic `{recv}` — counters must \
+                     saturate (fetch_update + saturating_add, see obs::Counter); waive \
+                     only where the previous value itself is the point"
+                ),
+            });
+        }
+    }
+    for (recv, set) in orderings {
+        let has_seqcst = set.iter().any(|(o, _)| o == "SeqCst");
+        let weakest: Option<u32> =
+            set.iter().filter(|(o, _)| o != "SeqCst").map(|(_, l)| *l).min();
+        if let (true, Some(line)) = (has_seqcst, weakest) {
+            out.push(RawFinding {
+                rule: Rule::AtomicHygiene,
+                line,
+                note: format!(
+                    "atomic `{recv}` mixes SeqCst with weaker orderings — pick one \
+                     ordering discipline per field"
+                ),
+            });
+        }
+    }
+}
+
+fn l3_tainted_arith(toks: &[Token], ast: &Ast, out: &mut Vec<RawFinding>) {
+    for f in &ast.fns {
+        if f.test || !is_parser_decl(toks, f) {
+            continue;
+        }
+        let mut taint: BTreeSet<String> = f.params.iter().cloned().collect();
+        if taint.is_empty() {
+            continue;
+        }
+        l3_block(toks, &f.body, &mut taint, out);
+    }
+}
+
+/// The D3/L3 parser scope, decided on the recovered declaration: named
+/// `from_value`/`from_*`/`parse*`, or a signature mentioning `Value` /
+/// `toml_lite`.
+fn is_parser_decl(toks: &[Token], f: &FnDecl) -> bool {
+    f.name == "from_value"
+        || f.name.starts_with("from_")
+        || f.name.starts_with("parse")
+        || (f.sig.0..f.sig.1.min(toks.len()))
+            .any(|k| ident_at(toks, k).is_some_and(|s| s == "Value" || s == "toml_lite"))
+}
+
+fn l3_block(toks: &[Token], b: &Block, taint: &mut BTreeSet<String>, out: &mut Vec<RawFinding>) {
+    for s in &b.stmts {
+        let tainted_stmt = s
+            .head
+            .iter()
+            .filter_map(|&k| ident_at(toks, k))
+            .any(|id| taint.contains(id));
+        if tainted_stmt {
+            if let Some(name) = &s.let_name {
+                taint.insert(name.clone());
+            }
+        }
+        // Float arithmetic is D2's domain; L3 polices integer overflow.
+        let floaty = s.head.iter().any(|&k| match &toks[k].tok {
+            Tok::Num(n) => is_float_literal(n),
+            Tok::Ident(id) => FLOAT_TYPES.contains(&id.as_str()),
+            _ => false,
+        });
+        if !floaty {
+            for &k in &s.head {
+                let Some(op) = any_punct_at(toks, k) else { continue };
+                if op != "+" && op != "*" {
+                    continue;
+                }
+                // binary position: the previous token must end a value
+                let binary = match toks.get(k.wrapping_sub(1)).map(|t| &t.tok) {
+                    Some(Tok::Ident(_) | Tok::Num(_)) => true,
+                    Some(Tok::Punct(p)) => p == ")" || p == "]",
+                    _ => false,
+                };
+                if !binary {
+                    continue;
+                }
+                let hot = [ident_at(toks, k.wrapping_sub(1)), ident_at(toks, k + 1)]
+                    .into_iter()
+                    .flatten()
+                    .find(|id| taint.contains(*id));
+                if let Some(id) = hot {
+                    out.push(RawFinding {
+                        rule: Rule::TaintedArith,
+                        line: toks[k].line,
+                        note: format!(
+                            "unchecked `{op}` on parser-tainted `{id}` — use \
+                             checked/saturating arithmetic before trusting parsed \
+                             magnitudes"
+                        ),
+                    });
+                }
+            }
+        }
+        for sub in &s.subs {
+            match sub {
+                Sub::Block(inner) => l3_block(toks, inner, taint, out),
+                Sub::Match(m) => {
+                    for arm in &m.arms {
+                        l3_block(toks, &arm.body, taint, out);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Enums this repository owns whose variant set is expected to grow;
+/// a wildcard arm on one of these silently swallows the next variant.
+const REPO_ENUMS: [&str; 4] = ["KernelKind", "Variant", "Workload", "Backend"];
+
+fn l4_wildcard_arm(toks: &[Token], ast: &Ast, out: &mut Vec<RawFinding>) {
+    for f in &ast.fns {
+        if f.test {
+            continue;
+        }
+        let owner_enum = f
+            .owner
+            .as_deref()
+            .filter(|o| REPO_ENUMS.contains(o));
+        l4_block(toks, &f.body, owner_enum, out);
+    }
+}
+
+fn l4_block(toks: &[Token], b: &Block, owner_enum: Option<&str>, out: &mut Vec<RawFinding>) {
+    for s in &b.stmts {
+        for sub in &s.subs {
+            match sub {
+                Sub::Block(inner) => l4_block(toks, inner, owner_enum, out),
+                Sub::Match(m) => {
+                    let mut named: Option<&str> = None;
+                    for arm in &m.arms {
+                        for &k in &arm.pat {
+                            let Some(id) = ident_at(toks, k) else { continue };
+                            if !punct_at(toks, k + 1, "::") {
+                                continue;
+                            }
+                            if REPO_ENUMS.contains(&id) {
+                                named = Some(id);
+                            } else if id == "Self" {
+                                if let Some(owner) = owner_enum {
+                                    named = Some(owner);
+                                }
+                            }
+                        }
+                    }
+                    if let Some(enum_name) = named {
+                        if let Some(w) =
+                            m.arms.iter().find(|a| !a.guarded && arm_is_wildcard(toks, a))
+                        {
+                            out.push(RawFinding {
+                                rule: Rule::WildcardArm,
+                                line: w.line,
+                                note: format!(
+                                    "wildcard `_` arm on repo-owned enum `{enum_name}` — \
+                                     a new variant would be silently accepted; list the \
+                                     variants explicitly"
+                                ),
+                            });
+                        }
+                    }
+                    for arm in &m.arms {
+                        l4_block(toks, &arm.body, owner_enum, out);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// L5: drift between code and its artifacts (flags vs docs, config keys
+// vs configs/*.toml)
+
+/// CLI accessor functions whose first string literal names a `--flag`.
+const FLAG_ACCESSORS: [&str; 4] = ["flag", "opt", "opt_parse", "knob"];
+
+/// Files whose TOML-reading `.get("key")` calls L5 checks against the
+/// shipped `configs/*.toml` key inventory.
+const CONFIG_KEY_SITES: [&str; 6] = [
+    "config.rs",
+    "coordinator/spec.rs",
+    "nn/model.rs",
+    "nn/layer.rs",
+    "dse/spec.rs",
+    "lint/config.rs",
+];
+
+/// Is `path` one of the TOML-reading sites whose config keys L5 audits?
+pub fn is_config_key_site(path: &str) -> bool {
+    path_matches(path, &CONFIG_KEY_SITES)
+}
+
+/// L5 (flag drift): every `--flag` name read through the CLI accessors
+/// (`args.flag("x")`, `args.opt("x")`, `args.opt_parse("x", ..)`,
+/// `knob(&args, "x")`) must appear as `--x` somewhere in `docs` (the
+/// README plus the file's own usage text).
+pub fn drift_flags(lexed: &Lexed, docs: &str) -> Vec<RawFinding> {
+    let toks = &lexed.tokens;
+    let test = test_mask(toks);
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if test[i] {
+            continue;
+        }
+        let Some(m) = ident_at(toks, i) else { continue };
+        if !FLAG_ACCESSORS.contains(&m) || !punct_at(toks, i + 1, "(") {
+            continue;
+        }
+        let close = match_delim(toks, i + 1, "(", ")");
+        let lit = (i + 2..close).find_map(|k| match &toks[k].tok {
+            Tok::Str(s) => Some((s.clone(), toks[k].line)),
+            _ => None,
+        });
+        let Some((name, line)) = lit else { continue };
+        let flaggy = !name.is_empty()
+            && name.chars().all(|c| c.is_ascii_lowercase() || c == '-');
+        if !flaggy || !seen.insert(name.clone()) {
+            continue;
+        }
+        if !docs.contains(&format!("--{name}")) {
+            out.push(RawFinding {
+                rule: Rule::Drift,
+                line,
+                note: format!(
+                    "flag `--{name}` is read here but documented nowhere \
+                     (README/USAGE drift)"
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// L5 (config-key drift): every literal key read via `.get("key")` in a
+/// TOML-reading site must appear in at least one shipped `configs/*.toml`
+/// (`available` is the harvested key inventory).
+pub fn drift_config_keys(lexed: &Lexed, available: &BTreeSet<String>) -> Vec<RawFinding> {
+    let toks = &lexed.tokens;
+    let test = test_mask(toks);
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if test[i] {
+            continue;
+        }
+        if !(punct_at(toks, i, ".")
+            && ident_at(toks, i + 1) == Some("get")
+            && punct_at(toks, i + 2, "("))
+        {
+            continue;
+        }
+        let Some(Tok::Str(key)) = toks.get(i + 3).map(|t| &t.tok) else { continue };
+        let keyish =
+            !key.is_empty() && key.chars().all(|c| c.is_ascii_lowercase() || c == '_');
+        if !keyish || !seen.insert(key.clone()) {
+            continue;
+        }
+        if !available.contains(key.as_str()) {
+            out.push(RawFinding {
+                rule: Rule::Drift,
+                line: toks[i + 3].line,
+                note: format!(
+                    "config key `{key}` is read here but appears in no configs/*.toml \
+                     (spec/config drift)"
+                ),
+            });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::lexer::lex;
@@ -683,6 +1033,12 @@ mod tests {
 
     fn hits(src: &str) -> Vec<(Rule, u32)> {
         scan("x.rs", &lex(src)).into_iter().map(|f| (f.rule, f.line)).collect()
+    }
+
+    fn ast_hits(src: &str) -> Vec<(Rule, u32)> {
+        let lexed = lex(src);
+        let ast = super::super::ast::parse(&lexed);
+        scan_ast(&lexed, &ast).into_iter().map(|f| (f.rule, f.line)).collect()
     }
 
     #[test]
@@ -795,5 +1151,108 @@ mod tests {
         assert_eq!(scan("rust/src/metrics/other.rs", &lex(src)).len(), 1);
         let fmtsrc = "fn c(x: f64) -> String { format!(\"{x:.17}\") }\n";
         assert!(scan("rust/src/report/mod.rs", &lex(fmtsrc)).is_empty());
+    }
+
+    #[test]
+    fn l2_fires_on_fetch_add_not_fetch_update() {
+        let src = "fn bump(c: &AtomicU64) {\n    \
+                   c.fetch_add(1, Ordering::Relaxed);\n}\n";
+        assert_eq!(ast_hits(src), vec![(Rule::AtomicHygiene, 2)]);
+        let saturating = "fn bump(c: &AtomicU64) {\n    let _ = c.fetch_update(\
+                          Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_add(1)));\n}\n";
+        assert!(ast_hits(saturating).is_empty());
+        // `.load()` on a non-atomic (no Ordering argument) is not flagged.
+        assert!(ast_hits("fn f(m: &Model) -> u32 { m.load(7) }\n").is_empty());
+    }
+
+    #[test]
+    fn l2_fires_on_seqcst_mixed_with_weaker() {
+        let src = "fn f(c: &AtomicU64) -> u64 {\n    \
+                   c.store(1, Ordering::SeqCst);\n    \
+                   c.load(Ordering::Relaxed)\n}\n";
+        assert_eq!(ast_hits(src), vec![(Rule::AtomicHygiene, 3)]);
+        let uniform = "fn f(c: &AtomicU64) -> u64 {\n    \
+                       c.store(1, Ordering::Relaxed);\n    \
+                       c.load(Ordering::Relaxed)\n}\n";
+        assert!(ast_hits(uniform).is_empty());
+    }
+
+    #[test]
+    fn l3_fires_on_tainted_arith_in_parser_scope_only() {
+        let src = "fn parse_len(n: u32) -> u32 {\n    n + 1\n}\n";
+        assert_eq!(ast_hits(src), vec![(Rule::TaintedArith, 2)]);
+        // taint propagates through let bindings
+        let chained = "fn from_value(v: u32) -> u32 {\n    let w = v;\n    w * 2\n}\n";
+        assert_eq!(ast_hits(chained), vec![(Rule::TaintedArith, 3)]);
+        // same arithmetic outside parser scope is not L3's business
+        assert!(ast_hits("fn widen(n: u32) -> u32 { n + 1 }\n").is_empty());
+        // float math is D2's domain, not L3's
+        assert!(ast_hits("fn parse_gain(x: f64) -> f64 { x * 2.0 }\n").is_empty());
+        // checked arithmetic is the fix, and is clean
+        assert!(ast_hits(
+            "fn parse_len(n: u32) -> Option<u32> { n.checked_add(1) }\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn l4_fires_on_wildcard_over_repo_enum_only() {
+        let src = "fn f(v: Variant) -> u32 {\n    match v {\n        \
+                   Variant::Smart => 1,\n        _ => 0,\n    }\n}\n";
+        assert_eq!(ast_hits(src), vec![(Rule::WildcardArm, 4)]);
+        // exhaustive matches are clean
+        let full = "fn f(b: Backend) -> u32 {\n    match b {\n        \
+                    Backend::Xla => 0,\n        Backend::Native => 1,\n    }\n}\n";
+        assert!(ast_hits(full).is_empty());
+        // foreign enums may use wildcards freely
+        let foreign = "fn f(o: Ordering) -> u32 {\n    match o {\n        \
+                       Ordering::Less => 0,\n        _ => 1,\n    }\n}\n";
+        assert!(ast_hits(foreign).is_empty());
+        // guarded arms are not wildcards
+        let guarded = "fn f(v: Variant, n: u32) -> u32 {\n    match v {\n        \
+                       Variant::Smart => 1,\n        _ if n > 0 => 2,\n        \
+                       Variant::Imac => 3,\n        Variant::Aid => 4,\n        \
+                       Variant::SmartOnImac => 5,\n    }\n}\n";
+        assert!(ast_hits(guarded).is_empty());
+    }
+
+    #[test]
+    fn l4_resolves_self_to_the_impl_enum() {
+        let src = "impl Variant {\n    fn code(&self) -> u32 {\n        \
+                   match self {\n            Self::Smart => 0,\n            _ => 1,\n        \
+                   }\n    }\n}\n";
+        assert_eq!(ast_hits(src), vec![(Rule::WildcardArm, 5)]);
+        let foreign = "impl Widget {\n    fn code(&self) -> u32 {\n        \
+                       match self {\n            Self::A => 0,\n            _ => 1,\n        \
+                       }\n    }\n}\n";
+        assert!(ast_hits(foreign).is_empty());
+    }
+
+    #[test]
+    fn l5_flag_drift_checks_docs_for_each_accessor() {
+        let src = "fn main() {\n    let v = args.flag(\"verbose\");\n    \
+                   let o = args.opt(\"out\");\n    let n = knob(&args, \"n-mc\");\n}\n";
+        let lexed = lex(src);
+        let documented = "Usage: --verbose --out FILE --n-mc N";
+        assert!(drift_flags(&lexed, documented).is_empty());
+        let partial = "Usage: --verbose --out FILE";
+        let got: Vec<(Rule, u32)> =
+            drift_flags(&lexed, partial).into_iter().map(|f| (f.rule, f.line)).collect();
+        assert_eq!(got, vec![(Rule::Drift, 4)]);
+    }
+
+    #[test]
+    fn l5_config_key_drift_checks_the_harvested_inventory() {
+        let src = "fn from_value(v: &Value) {\n    let a = v.get(\"seed\");\n    \
+                   let b = v.get(\"missing_key\");\n}\n";
+        let lexed = lex(src);
+        let available: BTreeSet<String> = ["seed".to_string()].into_iter().collect();
+        let got: Vec<(Rule, u32)> = drift_config_keys(&lexed, &available)
+            .into_iter()
+            .map(|f| (f.rule, f.line))
+            .collect();
+        assert_eq!(got, vec![(Rule::Drift, 3)]);
+        assert!(is_config_key_site("rust/src/coordinator/spec.rs"));
+        assert!(!is_config_key_site("rust/src/coordinator/pool.rs"));
     }
 }

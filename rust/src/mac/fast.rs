@@ -295,7 +295,11 @@ impl FastKernel {
         }
         let t = Arc::new(FastTable::build(p, cfg.t_sample, vov_hi));
         tables.insert(key, Arc::clone(&t));
-        self.table_builds.fetch_add(1, Ordering::Relaxed);
+        let _ = self
+            .table_builds
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_add(1))
+            });
         t
     }
 
@@ -323,7 +327,11 @@ impl FastKernel {
         let n_steps = p.circuit.n_steps;
         let dt_c = (cfg.t_sample / f64::from(n_steps)) / p.circuit.c_blb;
         let exact = || {
-            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+            let _ = self
+                .fallbacks
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    Some(v.saturating_add(1))
+                });
             crate::circuit::discharge_lane(p, vov, beta, gate, cfg.t_sample, n_steps)
         };
 
@@ -444,7 +452,12 @@ impl SimKernel for FastKernel {
                 block.gate[j],
             );
         }
-        self.lanes.fetch_add(m as u64, Ordering::Relaxed);
+        let m_lanes = m as u64;
+        let _ = self
+            .lanes
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_add(m_lanes))
+            });
 
         // Combine + fault tail, mirroring `mac_word` exactly.
         let vdd = card.vdd;

@@ -46,8 +46,8 @@ COMMANDS:
   info                         platform + artifact manifest + PJRT smoke test
   mac <a> <b> [--variant V]    one 4x4-bit MAC through the full stack
   mc [--variant V] [--n-mc N] [--a A --b B | --full-sweep]
-     [--seed S] [--shards K] [--threads T] [--block N] [--corner tt|ff|ss]
-     [--kernel scalar|block|fast] [--json] [--out DIR]
+     [--seed S] [--shards K] [--threads T] [--batch N] [--block N]
+     [--corner tt|ff|ss] [--kernel scalar|block|fast] [--json] [--out DIR]
                                Monte-Carlo campaign (paper Fig. 8/9);
                                aggregates are bit-identical for any
                                --shards/--threads/--block choice within a
@@ -122,17 +122,23 @@ COMMANDS:
                                SERVE_stats.json + BENCH_serve.json to
                                --out)
   lint [paths...] [--json] [--out DIR]
-                               determinism/robustness static analysis
-                               (rules D1-D7, DESIGN.md §12): lexes the
+                               structure-aware determinism/robustness
+                               static analysis (rules D1-D7 and L1-L5,
+                               DESIGN.md §12, §16): lexes and parses the
                                Rust sources under rust/src (or the given
-                               paths), applies the rule passes with
-                               inline `// lint:allow(Dn): reason`
+                               paths), builds the crate call graph, and
+                               applies the token rules (D1-D7) plus the
+                               structural rules — L1 lock-order cycles,
+                               L2 atomic-counter hygiene, L3 parser-
+                               tainted arithmetic, L4 wildcard arms on
+                               repo-owned enums, L5 flag/config drift —
+                               with inline `// lint:allow(Dn|Ln): reason`
                                pragmas and the configs/lint.toml
                                allowlist, prints the findings panel, and
                                exits nonzero on any unsuppressed
                                finding; --json writes the canonical
-                               LINT_report.json to --out (the CI gate
-                               artifact)
+                               LINT_report.json and CALLGRAPH.json to
+                               --out (the CI gate artifacts)
   profile <trace.jsonl> [--out DIR]
                                fold a JSONL trace (written via --trace
                                or SMART_TRACE) into PROFILE.json:
@@ -143,7 +149,9 @@ COMMANDS:
                                snapshot (DESIGN.md §15)
 
 OPTIONS:
+  --help            print this usage text and exit
   --artifacts DIR   artifact directory (default: $SMART_ARTIFACTS or ./artifacts)
+  --batch N         MAC evaluations per engine batch (mc; default: auto)
   --trace FILE      append a JSONL span/counter trace of the run (mc,
                     sweep, infer, bench, serve, run); the SMART_TRACE
                     env var names the same sink when the flag is absent.
@@ -745,17 +753,19 @@ fn cmd_profile(path: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `smart lint`: run the determinism/robustness analyzer (DESIGN.md
-/// §12) over `rust/src` (or explicit paths), print the findings panel,
-/// optionally write the canonical `LINT_report.json`, and exit nonzero
-/// on any unsuppressed finding — the CI gate contract.
+/// `smart lint`: run the structure-aware determinism/robustness
+/// analyzer (DESIGN.md §12, §16) over `rust/src` (or explicit paths),
+/// print the findings panel, optionally write the canonical
+/// `LINT_report.json` + `CALLGRAPH.json`, and exit nonzero on any
+/// unsuppressed finding — the CI gate contract.
 fn cmd_lint(args: &Args) -> Result<()> {
     use smart_insram::lint;
     let cfg = lint::LintConfig::load(std::path::Path::new("configs/lint.toml"))?;
     let paths: Vec<PathBuf> =
         args.positionals().iter().skip(1).map(PathBuf::from).collect();
-    let r = lint::run(std::path::Path::new("."), &paths, &cfg)?;
-    print!("{}", report::lint_panel(&r));
+    let analysis = lint::analyze(std::path::Path::new("."), &paths, &cfg)?;
+    let r = &analysis.report;
+    print!("{}", report::lint_panel(r));
     if args.flag("json") {
         let out: PathBuf = args.opt("out").map(PathBuf::from).unwrap_or_else(|| ".".into());
         std::fs::create_dir_all(&out)
@@ -764,6 +774,10 @@ fn cmd_lint(args: &Args) -> Result<()> {
         std::fs::write(&path, r.to_json())
             .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
         println!("wrote {}", path.display());
+        let cg = out.join("CALLGRAPH.json");
+        std::fs::write(&cg, analysis.graph.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", cg.display()))?;
+        println!("wrote {}", cg.display());
     }
     let open = r.unsuppressed_count();
     anyhow::ensure!(open == 0, "{open} unsuppressed lint finding(s)");

@@ -112,7 +112,7 @@ impl QuantMatrix {
     /// for the whole matrix, calibrated to its largest magnitude.
     pub fn from_tensor(t: &Tensor, bits: u32) -> Self {
         let qp = QParams::symmetric(t.max_abs(), bits);
-        let mut q = Vec::with_capacity(t.rows() * t.cols());
+        let mut q = Vec::with_capacity(t.rows().saturating_mul(t.cols()));
         for r in 0..t.rows() {
             for c in 0..t.cols() {
                 q.push(qp.quantize(t.get(r, c)));

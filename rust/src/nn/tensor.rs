@@ -27,6 +27,7 @@ impl Tensor {
         let mut t = Self::zeros(rows, cols);
         for r in 0..rows {
             for c in 0..cols {
+                // lint:allow(L3): row-major index bounded by the zeros() allocation
                 t.data[r * cols + c] = f(r, c);
             }
         }

@@ -134,6 +134,7 @@ impl Tracer {
         let Some(inner) = &self.inner else {
             return Span::noop();
         };
+        // lint:allow(L2): span-id ticket — the previous value seeds SpanId::derive, saturation would collapse span ids
         let seq = inner.seq.fetch_add(1, Ordering::Relaxed);
         let start_us = inner.epoch.elapsed_us().saturating_sub(watch.elapsed_us());
         Span {

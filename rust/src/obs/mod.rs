@@ -49,16 +49,15 @@ pub use span::{Span, SpanId};
 /// never a canonical artifact.
 #[derive(Debug, Clone, Copy)]
 pub struct Stopwatch {
-    // lint:allow(D6): the Stopwatch IS the quarantine — every timing
-    // read outside obs:: goes through this type
+    // the Stopwatch IS the quarantine — every timing read outside
+    // obs:: goes through this type
     t0: std::time::Instant,
 }
 
 impl Stopwatch {
     /// Start timing now.
     pub fn start() -> Self {
-        // lint:allow(D6): sole sanctioned clock read; consumers only see
-        // durations, which stay in the observability side channel
+        // lint:allow(D6): sole sanctioned clock read — consumers only see durations
         Stopwatch { t0: std::time::Instant::now() }
     }
 

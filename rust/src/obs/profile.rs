@@ -49,8 +49,8 @@ fn percentile_us(sorted: &[u64], p: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
     }
-    // lint:allow(D3): p is in [0, 100] and sample sizes are far below
-    // 2^53, so the rank arithmetic is exact
+    // p is in [0, 100] and sample sizes are far below 2^53, so the
+    // rank arithmetic is exact
     let rank = ((p / 100.0 * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
     sorted[rank - 1]
 }

@@ -157,8 +157,8 @@ impl Histogram {
         if count == 0 {
             return 0;
         }
-        // lint:allow(D3): p is clamped to [0, 100] and count <= 2^53 in
-        // any realistic run, so the f64 rank round-trips exactly
+        // p is clamped to [0, 100] and count <= 2^53 in any realistic
+        // run, so the f64 rank round-trips exactly
         let rank = ((p.clamp(0.0, 100.0) / 100.0 * count as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
         for i in 0..N_BUCKETS {

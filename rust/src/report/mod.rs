@@ -325,7 +325,11 @@ pub fn lint_panel(r: &crate::lint::LintReport) -> String {
         suppressed
     );
     if open.is_empty() {
-        let _ = writeln!(s, "clean: determinism invariants D1-D6 hold (DESIGN.md §12)");
+        let _ = writeln!(
+            s,
+            "clean: determinism invariants D1-D7 and structural invariants L1-L5 \
+             hold (DESIGN.md §12, §16)"
+        );
     } else {
         let _ = writeln!(s, "| rule | location | note |");
         let _ = writeln!(s, "|---|---|---|");

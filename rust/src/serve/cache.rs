@@ -86,11 +86,19 @@ impl ResultCache {
         match s.map.get_mut(key) {
             Some(e) => {
                 e.last_used = clock;
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                let _ = self
+                    .hits
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                        Some(v.saturating_add(1))
+                    });
                 Some(Arc::clone(&e.body))
             }
             None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                let _ = self
+                    .misses
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                        Some(v.saturating_add(1))
+                    });
                 None
             }
         }
@@ -126,7 +134,11 @@ impl ResultCache {
             if let Some(e) = s.map.remove(&lru) {
                 s.bytes -= e.body.len();
             }
-            self.evictions.fetch_add(1, Ordering::Relaxed);
+            let _ = self
+                .evictions
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    Some(v.saturating_add(1))
+                });
         }
         s.bytes += cost;
         s.map.insert(key.to_string(), Entry { body, last_used: clock });

@@ -146,6 +146,7 @@ impl DiskTier {
         text.push_str(&format!("body {} {:016x}\n", body.len(), fnv1a(body)));
         text.push_str(body);
         text.push('\n');
+        // lint:allow(L2): uniqueness ticket for temp-file names — the previous value is the name, wrap only reuses a suffix
         let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
         let path = self.path_for(key);
         let mut tmp = path.clone();

@@ -303,7 +303,7 @@ fn write_num(n: f64, out: &mut String) {
         // produce a document parse() itself rejects
         out.push_str("null");
     } else if n.fract() == 0.0 && n.abs() < 1e15 {
-        // lint:allow(D3): fract() == 0 and |n| < 1e15 make the i64 conversion exact
+        // fract() == 0 and |n| < 1e15 make the i64 conversion exact
         out.push_str(&format!("{}", n as i64));
     } else {
         out.push_str(&format!("{n}"));

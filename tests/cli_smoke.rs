@@ -155,8 +155,8 @@ fn info_smokes_pjrt() {
 #[test]
 fn checked_in_configs_parse() {
     // keep the shipped configs/ directory loadable at all times; dse*
-    // files are sweep specs, nn* files are inference models, the rest
-    // are experiment files
+    // files are sweep specs, nn* files are inference models, lint* is
+    // the analyzer's own config, the rest are experiment files
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
     let mut n = 0;
     for entry in std::fs::read_dir(root).unwrap() {
@@ -165,6 +165,9 @@ fn checked_in_configs_parse() {
             let stem = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
             if stem.starts_with("dse") {
                 smart_insram::dse::SweepSpec::load(&path)
+                    .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            } else if stem.starts_with("lint") {
+                smart_insram::lint::LintConfig::load(&path)
                     .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
             } else if stem.starts_with("fast_tol") {
                 // golden tolerance fixture for tests/fast_kernel.rs

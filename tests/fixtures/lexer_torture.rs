@@ -1,0 +1,16 @@
+// lexer torture fixture for tests/lint.rs: raw identifiers, nested
+// block comments, raw/byte strings, lifetime-vs-char, maximal munch.
+/* depth one /* depth two /* depth three */
+   back to two */ back to one */
+fn r#type(r#fn: u32) -> u32 {
+    let raw = r#"raw "quoted" body"#;
+    let braw = br#"byte raw "#;
+    let ch = 'x';
+    let esc = '\n';
+    let life: &'static str = "s";
+    let f = 1.5e-3;
+    let g = 0.5f64;
+    let hex = 0xEFu32;
+    let r = 0..16;
+    r#fn
+}

@@ -1,10 +1,13 @@
-//! Integration tests for `smart lint` (DESIGN.md §12): every rule on an
-//! inline fixture (positive hit, pragma suppression, comment/string
-//! immunity), the repo's own sources staying lint-clean, and the CLI
-//! exit/report contract on a seeded violation.
+//! Integration tests for `smart lint` (DESIGN.md §12, §16): every rule
+//! on an inline fixture (positive hit, pragma suppression,
+//! comment/string immunity), the lock-order analysis on seeded deadlock
+//! cycles, a pinned lexer-torture census, byte-identical report
+//! serialization, the repo's own sources staying lint-clean, and the
+//! CLI exit/report contract on a seeded violation.
 
 use std::path::Path;
 
+use smart_insram::lint::lexer::{is_float_literal, lex, Tok};
 use smart_insram::lint::{self, lint_source, LintConfig, Rule};
 
 /// One triggering fixture per rule: `(rule, lint path, source, line of
@@ -13,6 +16,9 @@ use smart_insram::lint::{self, lint_source, LintConfig, Rule};
 /// quarantine (which bans the `Instant` ident everywhere else) does not
 /// add a second finding; D7 has its own import-only fixture that D6
 /// (which needs a `::now()` / `SystemTime::` *read*) stays silent on.
+/// L5 (drift) is absent here: it needs repo context (README text, the
+/// configs/ key inventory) and gets its own `lint::analyze` fixture
+/// below.
 fn fixtures() -> Vec<(Rule, &'static str, &'static str, u32)> {
     vec![
         (
@@ -42,6 +48,25 @@ fn fixtures() -> Vec<(Rule, &'static str, &'static str, u32)> {
             2,
         ),
         (Rule::TimeQuarantine, "fixture.rs", "use std::time::SystemTime;\nfn f() {}\n", 1),
+        (
+            Rule::LockOrder,
+            "fixture.rs",
+            "struct S {\n    a: std::sync::Mutex<u32>,\n}\nimpl S {\n    fn f(&self) -> u32 {\n        let g = self.a.lock();\n        let h = self.a.lock();\n        0\n    }\n}\n",
+            7,
+        ),
+        (
+            Rule::AtomicHygiene,
+            "fixture.rs",
+            "fn f(c: &std::sync::atomic::AtomicU64) {\n    c.fetch_add(1, std::sync::atomic::Ordering::Relaxed);\n}\n",
+            2,
+        ),
+        (Rule::TaintedArith, "fixture.rs", "fn parse_total(n: u32) -> u32 {\n    n + 1\n}\n", 2),
+        (
+            Rule::WildcardArm,
+            "fixture.rs",
+            "fn f(v: Variant) -> u32 {\n    match v {\n        Variant::Smart => 0,\n        _ => 1,\n    }\n}\n",
+            4,
+        ),
     ]
 }
 
@@ -109,6 +134,7 @@ fn allowlist_suppresses_by_path_suffix_and_carries_its_reason() {
             rule: Rule::PanicPath,
             path: "sub/fixture.rs".to_string(),
             reason: "fixture file-level waiver".to_string(),
+            line: 0,
         }],
     };
     let src = "fn f(o: Option<u8>) -> u8 {\n    o.unwrap()\n}\n";
@@ -120,6 +146,37 @@ fn allowlist_suppresses_by_path_suffix_and_carries_its_reason() {
     assert!(fs[0].suppressed.is_none());
 }
 
+/// Two functions acquiring the same pair of locks in opposite orders
+/// form a cycle in the acquired-while-holding relation; the component is
+/// reported once, at its smallest `(file, line)` edge.
+#[test]
+fn opposite_lock_orders_are_one_cycle_finding() {
+    let cfg = LintConfig::default();
+    let src = "struct S {\n    a: std::sync::Mutex<u32>,\n    b: std::sync::Mutex<u32>,\n}\n\
+               impl S {\n    fn ab(&self) -> u32 {\n        let g = self.a.lock();\n        \
+               let h = self.b.lock();\n        0\n    }\n    fn ba(&self) -> u32 {\n        \
+               let g = self.b.lock();\n        let h = self.a.lock();\n        0\n    }\n}\n";
+    let fs = lint_source("fixture.rs", src, &cfg);
+    assert_eq!(fs.len(), 1, "one finding per cycle component: {fs:?}");
+    assert_eq!(fs[0].rule, Rule::LockOrder);
+    assert_eq!(fs[0].line, 8, "reported at the smallest edge: {fs:?}");
+    assert!(fs[0].note.contains("lock-order cycle"), "{}", fs[0].note);
+    assert!(fs[0].note.contains("S.a") && fs[0].note.contains("S.b"), "{}", fs[0].note);
+}
+
+/// The same two locks taken in the SAME order everywhere is the sanctioned
+/// pattern — no cycle, no findings.
+#[test]
+fn consistent_lock_order_is_clean() {
+    let cfg = LintConfig::default();
+    let src = "struct S {\n    a: std::sync::Mutex<u32>,\n    b: std::sync::Mutex<u32>,\n}\n\
+               impl S {\n    fn ab(&self) -> u32 {\n        let g = self.a.lock();\n        \
+               let h = self.b.lock();\n        0\n    }\n    fn ab_again(&self) -> u32 {\n        \
+               let g = self.a.lock();\n        let h = self.b.lock();\n        0\n    }\n}\n";
+    let fs = lint_source("fixture.rs", src, &cfg);
+    assert!(fs.is_empty(), "consistent order must not fire: {fs:?}");
+}
+
 #[test]
 fn unused_pragmas_are_d0_and_never_suppressible() {
     let cfg = LintConfig::default();
@@ -127,6 +184,79 @@ fn unused_pragmas_are_d0_and_never_suppressible() {
     assert_eq!(fs.len(), 1, "{fs:?}");
     assert_eq!(fs[0].rule, Rule::Pragma);
     assert!(fs[0].suppressed.is_none());
+}
+
+/// Pinned token census of `tests/fixtures/lexer_torture.rs`: raw
+/// identifiers, nested block comments, raw/byte strings,
+/// lifetime-vs-char disambiguation, and float maximal munch. Any lexer
+/// change that reclassifies one of these constructs moves a count here.
+#[test]
+fn lexer_survives_the_torture_fixture() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/lexer_torture.rs");
+    let text = std::fs::read_to_string(path).expect("torture fixture readable");
+    let lexed = lex(&text);
+    assert!(lexed.pragmas.is_empty() && lexed.malformed.is_empty());
+    let mut idents = 0usize;
+    let mut puncts = 0usize;
+    let mut chars = 0usize;
+    let mut lifetimes = 0usize;
+    let mut nums: Vec<&str> = Vec::new();
+    let mut strs: Vec<&str> = Vec::new();
+    for t in &lexed.tokens {
+        match &t.tok {
+            Tok::Ident(_) => idents += 1,
+            Tok::Punct(_) => puncts += 1,
+            Tok::Char => chars += 1,
+            Tok::Lifetime => lifetimes += 1,
+            Tok::Num(n) => nums.push(n),
+            Tok::Str(s) => strs.push(s),
+        }
+    }
+    assert_eq!(lexed.tokens.len(), 63);
+    assert_eq!((idents, puncts, chars, lifetimes), (25, 27, 2, 1));
+    assert_eq!(nums, vec!["1.5e-3", "0.5f64", "0xEFu32", "0", "16"]);
+    assert_eq!(nums.iter().filter(|n| is_float_literal(n)).count(), 2);
+    assert_eq!(strs, vec!["raw \"quoted\" body", "byte raw ", "s"]);
+    // raw idents resolve to the bare name, after the two-line nested
+    // block comment kept the line counter honest
+    let ty = lexed
+        .tokens
+        .iter()
+        .find(|t| t.tok == Tok::Ident("type".to_string()))
+        .expect("r#type lexes as `type`");
+    assert_eq!(ty.line, 5);
+}
+
+/// L5 (drift) needs repo context — README text and the `configs/*.toml`
+/// key inventory — so its one-finding fixture runs through
+/// [`lint::analyze`] over a temp root rather than [`lint_source`].
+#[test]
+fn drift_rule_fires_once_on_an_undocumented_flag() {
+    let dir = std::env::temp_dir().join(format!("smart_lint_l5_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("src")).expect("temp root");
+    std::fs::write(dir.join("src/main.rs"), "fn main() {\n    let _ = flag(\"ghost\");\n}\n")
+        .expect("fixture main.rs");
+    std::fs::write(dir.join("README.md"), "no flags documented here\n").expect("fixture README");
+    let cfg = LintConfig { roots: vec!["src".to_string()], allows: Vec::new() };
+    let analysis = lint::analyze(&dir, &[], &cfg).expect("analyze runs");
+    let open: Vec<_> = analysis.report.unsuppressed().collect();
+    assert_eq!(open.len(), 1, "{open:?}");
+    assert_eq!(open[0].rule, Rule::Drift);
+    assert_eq!(open[0].location(), "src/main.rs:2");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Canonicalization regression: two back-to-back runs over the whole
+/// repo serialize byte-identically, under the versioned report schema.
+#[test]
+fn lint_runs_are_byte_identical() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = LintConfig::load(&root.join("configs/lint.toml")).expect("lint.toml parses");
+    let first = lint::run(root, &[], &cfg).expect("first run").to_json();
+    let second = lint::run(root, &[], &cfg).expect("second run").to_json();
+    assert_eq!(first, second, "report bytes must not depend on the run");
+    assert!(first.contains("\"schema_version\": 2"), "{first}");
 }
 
 /// The acceptance criterion of DESIGN.md §12: the repository's own
@@ -173,6 +303,9 @@ fn cli_fails_with_rule_id_and_location_on_seeded_fixture() {
     let json = std::fs::read_to_string(dir.join("LINT_report.json")).expect("report written");
     assert!(json.contains("\"D4\""), "{json}");
     assert!(json.contains("\"unsuppressed\": 1"), "{json}");
+    // the call graph ships alongside the report, failing lint or not
+    let cg = std::fs::read_to_string(dir.join("CALLGRAPH.json")).expect("call graph written");
+    assert!(cg.contains("\"schema_version\": 1"), "{cg}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
